@@ -1,0 +1,17 @@
+//! §3.4.5 vision probe: MNIST-style digit classification with DENSE vs
+//! DYAD-IT hidden layers (procedural digits; DESIGN.md §6).
+//!
+//!     cargo run --release --example mnist [-- --steps 200]
+
+use anyhow::Result;
+use dyad_repro::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    dyad_repro::eval::mnist_probe::run(
+        &args.str_or("artifacts", "artifacts"),
+        args.usize_or("steps", 200)?,
+        args.str_opt("variant"),
+        args.u64_or("seed", 5)?,
+    )
+}

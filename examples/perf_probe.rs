@@ -1,0 +1,71 @@
+//! L3 perf probe (EXPERIMENTS.md §Perf): quantifies the coordinator's
+//! two hot-path design choices:
+//!
+//! 1. **K-microbatch amortization** — one train_k8 call vs eight
+//!    train_k1 calls (the host round-trip of training state happens
+//!    once vs eight times).
+//! 2. **Literal staging overhead** — `Loaded::run` (host tensors
+//!    converted every call) vs `run_literals` (pre-staged), on the
+//!    score artifact.
+//!
+//!     cargo run --release --example perf_probe
+
+use anyhow::Result;
+use dyad_repro::bench_support::{bench_artifact, synth_input, BenchOpts};
+use dyad_repro::runtime::{tensor_to_literal, Engine};
+use dyad_repro::util::rng::Rng;
+use dyad_repro::util::stats::Summary;
+use dyad_repro::util::timer::Timer;
+
+fn main() -> Result<()> {
+    let engine = Engine::from_dir("artifacts")?;
+    let opts = BenchOpts { warmup: 1, reps: 5, seed: 42 };
+
+    // --- 1. K amortization ---------------------------------------------
+    let k1 = bench_artifact(&engine, "opt-mini/dense/train_k1", opts)?;
+    let k8 = bench_artifact(&engine, "opt-mini/dense/train_k8", opts)?;
+    println!("train_k1: {:8.1} ms/call  -> 8 steps = {:8.1} ms", k1.mean, 8.0 * k1.mean);
+    println!("train_k8: {:8.1} ms/call  -> 8 steps = {:8.1} ms", k8.mean, k8.mean);
+    println!(
+        "K-amortization saving: {:.1}% ({:.1} ms of state round-trip per 8 steps)",
+        100.0 * (1.0 - k8.mean / (8.0 * k1.mean)),
+        8.0 * k1.mean - k8.mean
+    );
+
+    // --- 2. literal staging --------------------------------------------
+    let art = engine.load("opt-mini/dense/score")?;
+    let mut rng = Rng::new(1);
+    let tensors: Vec<_> = art
+        .spec
+        .inputs
+        .iter()
+        .map(|io| synth_input(io, &mut rng))
+        .collect();
+    let lits: Vec<xla::Literal> = tensors
+        .iter()
+        .zip(&art.spec.inputs)
+        .map(|(t, s)| tensor_to_literal(t, s))
+        .collect::<Result<_>>()?;
+    let _ = art.run(&tensors)?; // warmup
+    let mut conv = Vec::new();
+    let mut pre = Vec::new();
+    for _ in 0..8 {
+        let t = Timer::start();
+        let _ = art.run(&tensors)?;
+        conv.push(t.elapsed_ms());
+        let t = Timer::start();
+        let _ = art.run_literals(&lits)?;
+        pre.push(t.elapsed_ms());
+    }
+    let (c, p) = (Summary::of(&conv), Summary::of(&pre));
+    println!(
+        "\nscore via run (convert each call):  {:8.1} ms\n\
+         score via run_literals (pre-staged): {:8.1} ms\n\
+         staging overhead avoided: {:.1} ms/call ({:.1}%)",
+        c.mean,
+        p.mean,
+        c.mean - p.mean,
+        100.0 * (c.mean - p.mean) / c.mean
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Batched-inference serving demo: concurrent clients score nanoBabyLM
+//! sentences and request greedy continuations against a (optionally
+//! pretrained) opt-mini model; the server dynamically batches scoring
+//! requests and reports latency / throughput / occupancy.
+//!
+//!     cargo run --release --example serve_batch [-- --requests 96 \
+//!         --clients 6 --ckpt runs/train_tiny/dyad_it]
+
+use anyhow::Result;
+use dyad_repro::data::{Grammar, Tokenizer};
+use dyad_repro::serve::{Request, ServeConfig, ServerHandle};
+use dyad_repro::util::cli::Args;
+use dyad_repro::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n_requests = args.usize_or("requests", 96)?;
+    let n_clients = args.usize_or("clients", 6)?;
+    let cfg = ServeConfig {
+        artifacts_dir: args.str_or("artifacts", "artifacts").into(),
+        arch: args.str_or("arch", "opt-mini"),
+        variant: args.str_or("variant", "dyad_it"),
+        checkpoint_dir: args.str_opt("ckpt").map(Into::into),
+        max_batch: args.usize_or("max-batch", 8)?,
+        window_ms: args.u64_or("window-ms", 4)?,
+        seed: 7,
+    };
+    println!(
+        "serving {}/{} (max_batch={}, window={}ms), {} requests from {} clients",
+        cfg.arch, cfg.variant, cfg.max_batch, cfg.window_ms, n_requests, n_clients
+    );
+    let server = ServerHandle::start(cfg);
+
+    let grammar = Grammar::new();
+    let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
+    let mut rng = Rng::new(11);
+    let sentences: Vec<Vec<i32>> = (0..n_requests)
+        .map(|_| tokenizer.encode_sentence(&grammar.sentence(&mut rng)))
+        .collect();
+
+    std::thread::scope(|scope| {
+        for chunk in sentences.chunks(n_requests.div_ceil(n_clients).max(1)) {
+            let tx = server.sender();
+            scope.spawn(move || {
+                for toks in chunk {
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                        .expect("server alive");
+                    rrx.recv().expect("response").expect("score ok");
+                }
+            });
+        }
+    });
+
+    // a couple of generation requests through the same server
+    let prompt = tokenizer.encode(&["the".into(), "dog".into()]);
+    let gen = server.generate(prompt, 8)?;
+    println!(
+        "greedy continuation of \"the dog\": {:?}",
+        tokenizer.decode(&gen)
+    );
+
+    let stats = server.stats()?;
+    println!("\n{}", stats.render());
+    server.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! End-to-end driver (the DESIGN.md §E2E run): pretrain the opt-mini
+//! transformer on nanoBabyLM under both DENSE and DYAD-IT ff layers,
+//! log the loss curves, then run the zero-shot minimal-pair suite —
+//! the smallest honest replica of the paper's core experiment.
+//!
+//!     cargo run --release --example train_tiny [-- --steps 240]
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use anyhow::Result;
+use dyad_repro::config::TrainConfig;
+use dyad_repro::coordinator::{checkpoint::CheckpointManager, MetricsLogger, Trainer};
+use dyad_repro::data::{Grammar, Tokenizer};
+use dyad_repro::eval;
+use dyad_repro::runtime::Engine;
+use dyad_repro::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let steps = args.usize_or("steps", 240)?;
+    let engine = Engine::from_dir(args.str_or("artifacts", "artifacts"))?;
+    let grammar = Grammar::new();
+    let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
+
+    let mut summaries = Vec::new();
+    for variant in ["dense", "dyad_it"] {
+        println!("\n================ {variant} ================");
+        let cfg = TrainConfig {
+            arch: "opt-mini".into(),
+            variant: variant.into(),
+            steps,
+            lr: 1e-3,
+            warmup_steps: steps / 10,
+            corpus_tokens: 200_000,
+            out_dir: format!("runs/train_tiny/{variant}").into(),
+            ..TrainConfig::default()
+        };
+        let mut log = MetricsLogger::to_dir(&cfg.out_dir)?;
+        log.quiet = false;
+        let report = Trainer::new(cfg.clone()).run(&engine, &mut log)?;
+
+        // zero-shot minimal pairs on the fresh checkpoint
+        let train_spec = engine.manifest.artifact(&cfg.train_artifact(8))?.clone();
+        let state = CheckpointManager::new(&cfg.out_dir).load_state(&train_spec)?;
+        let score_art = engine.load(&cfg.artifact("score"))?;
+        let blimp = eval::blimp::evaluate(&score_art, &state, &tokenizer, 40, 9)?;
+        println!(
+            "{variant}: loss {:.3} -> {:.3} (valid {:.3}), BLIMP mean {:.3}, \
+             {} params, {:.0} ms/call",
+            report.first_loss,
+            report.final_loss,
+            report.valid_loss,
+            blimp.mean,
+            report.params,
+            report.ms_per_call.mean
+        );
+        summaries.push((variant, report, blimp));
+    }
+
+    println!("\n================ comparison ================");
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>10} {:>12} {:>12}",
+        "variant", "first_loss", "final_loss", "valid_loss", "BLIMP", "params",
+        "ms/call"
+    );
+    for (v, r, b) in &summaries {
+        println!(
+            "{:<10} {:>12.3} {:>12.3} {:>12.3} {:>10.3} {:>12} {:>12.0}",
+            v, r.first_loss, r.final_loss, r.valid_loss, b.mean, r.params,
+            r.ms_per_call.mean
+        );
+    }
+    if summaries.len() == 2 {
+        let (_, rd, bd) = &summaries[0];
+        let (_, ry, by) = &summaries[1];
+        println!(
+            "\npaper-shape check: DYAD quality >= 90% of DENSE? \
+             valid-loss ratio {:.3} (lower=better), BLIMP ratio {:.3}, \
+             param ratio {:.3}, time ratio {:.3}",
+            ry.valid_loss / rd.valid_loss,
+            by.mean / bd.mean,
+            ry.params as f64 / rd.params as f64,
+            ry.ms_per_call.mean / rd.ms_per_call.mean
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Figure 6 interactively: DYAD vs DENSE ff speedup as model width
+//! grows (6-layer-capped OPT-like architecture in the paper; here the
+//! ff geometry sweeps d -> 4d directly).
+//!
+//!     cargo run --release --example width_sweep
+
+use anyhow::Result;
+use dyad_repro::bench_support::{ff_timing, BenchOpts};
+use dyad_repro::runtime::Engine;
+
+fn main() -> Result<()> {
+    let engine = Engine::from_dir("artifacts")?;
+    let opts = BenchOpts { warmup: 2, reps: 5, seed: 3 };
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "width", "dense(ms)", "dyad4(ms)", "dyad8(ms)", "x4", "x8"
+    );
+    for width in [256usize, 512, 1024, 2048] {
+        let geo = format!("width{width}");
+        let dense = ff_timing(&engine, &geo, "dense", opts)?;
+        let d4 = ff_timing(&engine, &geo, "dyad_it", opts)?;
+        let d8 = ff_timing(&engine, &geo, "dyad_it_8", opts)?;
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>12.3} {:>10.2} {:>10.2}",
+            width,
+            dense.total_ms,
+            d4.total_ms,
+            d8.total_ms,
+            dense.total_ms / d4.total_ms,
+            dense.total_ms / d8.total_ms
+        );
+    }
+    println!("\npaper shape: speedup grows with width (Figure 6).");
+    Ok(())
+}

@@ -1,0 +1,3 @@
+# Build-time-only package: JAX model (L2) + Pallas kernels (L1) + AOT
+# lowering (python -m compile.aot). Never imported at runtime; the rust
+# coordinator consumes artifacts/*.hlo.txt + artifacts/manifest.json.

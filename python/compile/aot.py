@@ -1,0 +1,396 @@
+"""AOT lowering: every jitted function the rust coordinator needs,
+emitted as HLO *text* plus a manifest describing each artifact's exact
+input/output contract.
+
+HLO text (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the ``xla`` crate's
+backend) rejects; the text parser reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--only RE]
+
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, mnist, model
+from .configs import ARCHS, FF_GEOMETRIES, VARIANTS, WIDTH_SWEEP, WIDTH_SWEEP_TOKENS
+from .kernels.dyad import dyad_matmul_pallas, vmem_estimate_bytes
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(dtype):
+    return {F32: "f32", I32: "i32"}[dtype]
+
+
+class Emitter:
+    def __init__(self, out_dir, only=None):
+        self.out_dir = out_dir
+        self.only = re.compile(only) if only else None
+        self.entries = []
+        self.t0 = time.time()
+
+    def emit(self, name, fn, inputs, outputs, kind, meta=None):
+        """Lower ``fn`` at the given input specs and record the contract.
+
+        inputs:  [(name, shape, dtype, role, init-or-None)]
+        outputs: [(name, shape, dtype)]
+        """
+        fname = name.replace("/", "_") + ".hlo.txt"
+        entry = {
+            "name": name,
+            "file": fname,
+            "kind": kind,
+            "inputs": [
+                {
+                    "name": n,
+                    "shape": list(s),
+                    "dtype": _dt(d),
+                    "role": role,
+                    **({"init": init} if init else {}),
+                }
+                for (n, s, d, role, init) in inputs
+            ],
+            "outputs": [
+                {"name": n, "shape": list(s), "dtype": _dt(d)}
+                for (n, s, d) in outputs
+            ],
+            "meta": meta or {},
+        }
+        self.entries.append(entry)
+        if self.only and not self.only.search(name):
+            return
+        path = os.path.join(self.out_dir, fname)
+        specs = [sds(s, d) for (_, s, d, _, _) in inputs]
+        t = time.time()
+        # keep_unused=True: the manifest promises positional arity even
+        # for params a given fn doesn't touch (e.g. the MLP head in
+        # hidden_fwd); without it jit prunes them and PJRT rejects the
+        # feed ("supplied 9 buffers but expected 7").
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(
+            f"[{time.time()-self.t0:7.1f}s] {name}: {len(text)/1e6:.2f} MB "
+            f"({time.time()-t:.1f}s)",
+            flush=True,
+        )
+
+
+def model_param_inputs(arch, variant, role="param", prefix=""):
+    out = []
+    for n, s, init in model.param_specs(arch, variant):
+        out.append((prefix + n, s, F32, role, init if role == "param" else None))
+    return out
+
+
+def opt_state_inputs(arch, variant):
+    """Adam m/v mirrors of the params (zero-init)."""
+    ins = []
+    for role, pref in (("opt_m", "m."), ("opt_v", "v.")):
+        for n, s, _ in model.param_specs(arch, variant):
+            ins.append((pref + n, s, F32, role, {"kind": "zeros"}))
+    return ins
+
+
+def emit_model_artifacts(em, arch_name, variant_names):
+    arch = ARCHS[arch_name]
+    B, S, K = configs.TRAIN_BATCH, arch.seq, configs.TRAIN_MICROBATCHES
+    EB = configs.EVAL_BATCH
+    for vname in variant_names:
+        var = VARIANTS[vname]
+        specs = model.param_specs(arch, var)
+        pnames = [n for n, _, _ in specs]
+        pshapes = [s for _, s, _ in specs]
+        base = f"{arch_name}/{vname}"
+        params_in = model_param_inputs(arch, var)
+        opt_in = opt_state_inputs(arch, var)
+
+        for k in (K, 1):
+            toks = ("tokens", (k, B, S), I32, "data", None)
+            ins = (
+                params_in
+                + opt_in
+                + [
+                    ("step", (), F32, "scalar", None),
+                    ("lr", (), F32, "scalar", None),
+                    toks,
+                ]
+            )
+            outs = (
+                [(n, s, F32) for n, s in zip(pnames, pshapes)]
+                + [("m." + n, s, F32) for n, s in zip(pnames, pshapes)]
+                + [("v." + n, s, F32) for n, s in zip(pnames, pshapes)]
+                + [("step", (), F32), ("losses", (k,), F32)]
+            )
+            em.emit(
+                f"{base}/train_k{k}",
+                model.make_train_step(arch, var, k, B),
+                ins,
+                outs,
+                "train_step",
+                {"k_micro": k, "batch": B, "seq": S, "arch": arch_name,
+                 "variant": vname},
+            )
+
+        score_ins = params_in + [
+            ("tokens", (EB, S), I32, "data", None),
+            ("mask", (EB, S), F32, "data", None),
+        ]
+        em.emit(
+            f"{base}/score",
+            model.make_score(arch, var),
+            score_ins,
+            [("sum_logp", (EB,), F32), ("n_tok", (EB,), F32)],
+            "score",
+            {"batch": EB, "seq": S, "arch": arch_name, "variant": vname},
+        )
+        em.emit(
+            f"{base}/features",
+            model.make_features(arch, var),
+            score_ins,
+            [("features", (EB, arch.d_model), F32)],
+            "features",
+            {"batch": EB, "seq": S, "arch": arch_name, "variant": vname},
+        )
+        em.emit(
+            f"{base}/next_logits",
+            model.make_next_logits(arch, var),
+            params_in
+            + [
+                ("tokens", (EB, S), I32, "data", None),
+                ("lengths", (EB,), I32, "data", None),
+            ],
+            [("logits", (EB, arch.vocab), F32)],
+            "next_logits",
+            {"batch": EB, "seq": S, "arch": arch_name, "variant": vname},
+        )
+        em.emit(
+            f"{base}/eval_loss",
+            model.make_eval_loss(arch, var, EB),
+            params_in + [("tokens", (EB, S), I32, "data", None)],
+            [("loss", (), F32)],
+            "eval_loss",
+            {"batch": EB, "seq": S, "arch": arch_name, "variant": vname},
+        )
+
+
+def emit_ff_artifacts(em, label, d, ff, tokens, variant_names):
+    for vname in variant_names:
+        var = VARIANTS[vname]
+        specs = model.ff_param_specs(d, ff, var)
+        params_in = [(n, s, F32, "param", init) for n, s, init in specs]
+        x = ("x", (tokens, d), F32, "data", None)
+        ct = ("ct", (tokens, d), F32, "data", None)
+        meta = {
+            "d_model": d,
+            "d_ff": ff,
+            "tokens": tokens,
+            "variant": vname,
+            "vmem_bytes_per_step": (
+                None
+                if var.kind == "dense"
+                else vmem_estimate_bytes(
+                    var.n_dyad, d, ff, tokens, cat=var.dyad_variant == "it_cat"
+                )
+            ),
+        }
+        em.emit(
+            f"ff/{label}/{vname}/fwd",
+            model.make_ff_fwd(d, ff, var),
+            params_in + [x],
+            [("y", (tokens, d), F32)],
+            "ff_fwd",
+            meta,
+        )
+        em.emit(
+            f"ff/{label}/{vname}/fwdbwd",
+            model.make_ff_fwdbwd(d, ff, var),
+            params_in + [x, ct],
+            [("loss", (), F32)] + [(f"g.{n}", s, F32) for n, s, _ in specs],
+            "ff_fwdbwd",
+            meta,
+        )
+
+
+def emit_mnist_artifacts(em):
+    B, K = configs.MNIST_BATCH, 4
+    for vname in ("dense", "dyad_it"):
+        var = VARIANTS[vname]
+        specs = mnist.mnist_param_specs(var)
+        pnames = [n for n, _, _ in specs]
+        pshapes = [s for _, s, _ in specs]
+        params_in = [(n, s, F32, "param", init) for n, s, init in specs]
+        opt_in = [
+            (pref + n, s, F32, role, {"kind": "zeros"})
+            for role, pref in (("opt_m", "m."), ("opt_v", "v."))
+            for n, s, _ in specs
+        ]
+        ins = (
+            params_in
+            + opt_in
+            + [
+                ("step", (), F32, "scalar", None),
+                ("lr", (), F32, "scalar", None),
+                ("images", (K, B, configs.MNIST_IN), F32, "data", None),
+                ("labels", (K, B), I32, "data", None),
+            ]
+        )
+        outs = (
+            [(n, s, F32) for n, s in zip(pnames, pshapes)]
+            + [("m." + n, s, F32) for n, s in zip(pnames, pshapes)]
+            + [("v." + n, s, F32) for n, s in zip(pnames, pshapes)]
+            + [("step", (), F32), ("losses", (K,), F32)]
+        )
+        em.emit(
+            f"mnist/{vname}/train_k{K}",
+            mnist.make_mnist_train_step(var, K, B),
+            ins,
+            outs,
+            "mnist_train",
+            {"k_micro": K, "batch": B, "variant": vname},
+        )
+        em.emit(
+            f"mnist/{vname}/accuracy",
+            mnist.make_mnist_accuracy(var, B),
+            params_in
+            + [
+                ("images", (B, configs.MNIST_IN), F32, "data", None),
+                ("labels", (B,), I32, "data", None),
+            ],
+            [("n_correct", (), I32)],
+            "mnist_accuracy",
+            {"batch": B, "variant": vname},
+        )
+        em.emit(
+            f"mnist/{vname}/hidden_fwd",
+            mnist.make_mnist_hidden_fwd(var, B),
+            params_in + [("x", (B, configs.MNIST_IN), F32, "data", None)],
+            [("h", (B, configs.MNIST_HIDDEN), F32)],
+            "mnist_hidden_fwd",
+            {"batch": B, "variant": vname},
+        )
+
+
+def emit_pallas_validation(em):
+    """A small interpret-mode Pallas DYAD-IT kernel, AOT'd end-to-end.
+
+    Proves the L1 kernel survives the full HLO-text -> PJRT -> rust
+    round trip (numerics asserted in rust integration tests). Kept tiny:
+    interpret-mode lowers to while-loops, unfit for timing (DESIGN.md §7).
+    """
+    n_dyad, n_in, n_out, nb = 4, 16, 16, 8
+
+    def fn(wl, wu, x):
+        return (dyad_matmul_pallas(x, wl, wu, None, variant="it"),)
+
+    em.emit(
+        "pallas/dyad_it_small",
+        fn,
+        [
+            ("wl", (n_dyad, n_out, n_in), F32, "param",
+             {"kind": "uniform", "bound": (n_dyad * n_in) ** -0.5}),
+            ("wu", (n_dyad, n_out, n_in), F32, "param",
+             {"kind": "uniform", "bound": (n_dyad * n_in) ** -0.5}),
+            ("x", (n_dyad * n_in, nb), F32, "data", None),
+        ],
+        [("y", (n_dyad * n_out, nb), F32)],
+        "pallas_validation",
+        {"n_dyad": n_dyad, "n_in": n_in, "n_out": n_out, "nb": nb},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out, args.only)
+
+    # Whole-model artifacts (quality tables + whole-model timing).
+    emit_model_artifacts(
+        em,
+        "opt-mini",
+        ["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8", "dyad_hetero"],
+    )
+    emit_model_artifacts(em, "pythia-mini", ["dense", "dyad_it", "dyad_it_8"])
+    emit_model_artifacts(em, "opt-mid", ["dense", "dyad_it"])
+
+    # ff-micro artifacts at the paper's true widths (T1/T5/T10, F7, CAT).
+    ff_variants = ["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8",
+                   "dyad_it_cat"]
+    for label, (d, ff, toks) in FF_GEOMETRIES.items():
+        emit_ff_artifacts(em, label, d, ff, toks, ff_variants)
+
+    # Figure 6 width sweep.
+    for w in WIDTH_SWEEP:
+        emit_ff_artifacts(
+            em, f"width{w}", w, 4 * w, WIDTH_SWEEP_TOKENS,
+            ["dense", "dyad_it", "dyad_it_8"],
+        )
+
+    emit_mnist_artifacts(em)
+    emit_pallas_validation(em)
+
+    manifest = {
+        "version": 1,
+        "adam": {
+            "b1": configs.ADAM_B1,
+            "b2": configs.ADAM_B2,
+            "eps": configs.ADAM_EPS,
+            "grad_clip": configs.GRAD_CLIP,
+        },
+        "archs": {
+            name: {
+                "vocab": a.vocab,
+                "d_model": a.d_model,
+                "d_ff": a.d_ff,
+                "n_layers": a.n_layers,
+                "n_heads": a.n_heads,
+                "seq": a.seq,
+                "parallel_residual": a.parallel_residual,
+            }
+            for name, a in ARCHS.items()
+        },
+        "variants": {
+            name: {"kind": v.kind, "dyad_variant": v.dyad_variant,
+                   "n_dyad": v.n_dyad,
+                   "layer_schedule": list(v.layer_schedule)}
+            for name, v in VARIANTS.items()
+        },
+        "artifacts": em.entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(em.entries)} manifest entries "
+          f"({time.time()-em.t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

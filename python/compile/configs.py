@@ -1,0 +1,113 @@
+"""Architecture / artifact configuration presets.
+
+The paper's models (OPT-125m/350m, Pythia-160m) are GPU-scale; this
+reproduction runs on one CPU core, so (DESIGN.md §6):
+
+* **ff-micro geometries** use the *paper's true widths* (768→3072 etc.) —
+  the ff-module timing tables (T1/T5/T10, F6/F7, CAT ablation) are
+  measured at the real layer sizes the paper reports;
+* **whole-model presets** (`*-mini`, `*-mid`) keep the architecture shape
+  (pre-LN decoder, tied embeddings, GELU ff, learned positions; Pythia =
+  parallel residual) at CPU-trainable scale for the quality tables
+  (T2/T3/T6-8/T12) and whole-model timing (T4/T9).
+
+Every DENSE-vs-DYAD comparison uses the same preset, the same data and
+the same training loop — the paper's comparison structure.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    vocab: int
+    d_model: int
+    d_ff: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    parallel_residual: bool = False  # Pythia-style
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class VariantConfig:
+    """ff-layer variant: how the two ff linear layers are realised.
+
+    ``layer_schedule`` (paper §4 future work: "a heterogeneous mix of
+    DYAD variants to approximate different ff layers"): when set, layer
+    ``l`` uses ``layer_schedule[l % len(layer_schedule)]`` as its
+    dyad_variant instead of the homogeneous ``dyad_variant``.
+    """
+
+    name: str  # dense | dyad_it | dyad_ot | dyad_dt | dyad_it_cat | dyad_it_8
+    kind: str  # "dense" | "dyad"
+    dyad_variant: str = "it"  # it|ot|dt|it_cat
+    n_dyad: int = 4
+    layer_schedule: tuple = ()
+
+    def variant_for_layer(self, layer: int) -> str:
+        if self.layer_schedule:
+            return self.layer_schedule[layer % len(self.layer_schedule)]
+        return self.dyad_variant
+
+
+VARIANTS = {
+    "dense": VariantConfig("dense", "dense"),
+    "dyad_it": VariantConfig("dyad_it", "dyad", "it", 4),
+    "dyad_ot": VariantConfig("dyad_ot", "dyad", "ot", 4),
+    "dyad_dt": VariantConfig("dyad_dt", "dyad", "dt", 4),
+    "dyad_it_cat": VariantConfig("dyad_it_cat", "dyad", "it_cat", 4),
+    "dyad_it_8": VariantConfig("dyad_it_8", "dyad", "it", 8),
+    # §4 future work: heterogeneous mix — cycle IT/OT/DT across layers.
+    "dyad_hetero": VariantConfig(
+        "dyad_hetero", "dyad", "it", 4, layer_schedule=("it", "ot", "dt")
+    ),
+}
+
+ARCHS = {
+    # CPU-trainable presets for quality + whole-model timing.
+    "opt-mini": ArchConfig("opt-mini", vocab=512, d_model=256, d_ff=1024,
+                           n_layers=4, n_heads=8, seq=128),
+    "pythia-mini": ArchConfig("pythia-mini", vocab=512, d_model=256, d_ff=1024,
+                              n_layers=4, n_heads=8, seq=128,
+                              parallel_residual=True),
+    "opt-mid": ArchConfig("opt-mid", vocab=512, d_model=384, d_ff=1536,
+                          n_layers=6, n_heads=8, seq=128),
+}
+
+# ff-micro geometries: (d_model, d_ff, tokens-per-minibatch). Widths are
+# the paper's true model widths; token counts scaled for 1-core wallclock.
+FF_GEOMETRIES = {
+    "opt125m-ff": (768, 3072, 512),
+    "opt350m-ff": (1024, 4096, 256),
+    "pythia160m-ff": (768, 3072, 512),
+}
+
+# Figure 6 width sweep: 6-layer OPT-like at growing width; we sweep the
+# ff geometry (d, 4d) directly. Paper sweeps to 4096; 2048 is the largest
+# width with tolerable 1-core bench time (documented in EXPERIMENTS.md).
+WIDTH_SWEEP = [256, 512, 1024, 2048]
+WIDTH_SWEEP_TOKENS = 128
+
+# Training batch geometry for whole-model artifacts.
+TRAIN_BATCH = 8          # sequences per microbatch
+TRAIN_MICROBATCHES = 8   # K: optimizer steps per PJRT call (train_step_k8)
+EVAL_BATCH = 8           # sequences per score/features call
+
+# MNIST probe (§3.4.5): 784 -> 256 -> 256 -> 10 MLP; hidden layers are the
+# dense/dyad swap site (final 256->10 stays dense: 10 % n_dyad != 0,
+# paper appendix §5.1 would zero-pad; keeping it dense isolates the swap).
+MNIST_HIDDEN = 256
+MNIST_BATCH = 64
+MNIST_CLASSES = 10
+MNIST_IN = 784
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0

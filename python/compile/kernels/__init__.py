@@ -1,0 +1,45 @@
+# L1: Pallas kernels + pure-jnp oracles for the DYAD layer family.
+#
+# Conventions
+# -----------
+# Paper convention (ref + pallas kernels): activations are column-major,
+#   X : (f_in, n_batch),  Y : (f_out, n_batch),  Y = W X + b.
+# Model convention (L2 transformer): activations are row-major,
+#   X : (n_tokens, f_in), Y = X W^T + b^T  -- provided by `*_linear_row`.
+#
+# Variants (paper §2.2-2.4): DYAD-IT (input transpose), DYAD-OT (output
+# transpose), DYAD-DT (double transpose), and the -CAT fusion (§3.4.3).
+
+from .ref import (
+    blockdiag_full,
+    blocktrans_full,
+    dyad_full,
+    dyad_ref,
+    dense_ref,
+    perm_vector,
+)
+from .dyad import (
+    VARIANTS,
+    dyad_matmul,
+    dyad_matmul_pallas,
+    dyad_linear_row,
+    dyad_param_shapes,
+)
+from .dense import dense_matmul, dense_matmul_pallas, dense_linear_row
+
+__all__ = [
+    "blockdiag_full",
+    "blocktrans_full",
+    "dyad_full",
+    "dyad_ref",
+    "dense_ref",
+    "perm_vector",
+    "VARIANTS",
+    "dyad_matmul",
+    "dyad_matmul_pallas",
+    "dyad_linear_row",
+    "dyad_param_shapes",
+    "dense_matmul",
+    "dense_matmul_pallas",
+    "dense_linear_row",
+]

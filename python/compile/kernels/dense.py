@@ -1,0 +1,65 @@
+"""DENSE baseline layer: plain matmul, plus a tiled Pallas version.
+
+The baseline the paper compares against (nn.Linear). The Pallas version
+tiles over output rows so the DENSE and DYAD kernels differ only in the
+block schedule — the comparison isolates the paper's contribution.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def dense_param_shapes(f_in: int, f_out: int):
+    """nn.Linear-style shapes and init bound k = 1/sqrt(f_in)."""
+    return {"w": (f_out, f_in), "init_bound": 1.0 / math.sqrt(f_in)}
+
+
+def dense_matmul(x, w, b=None):
+    """Column-major dense: Y = W X + b; x: (f_in, nb), w: (f_out, f_in)."""
+    y = w @ x
+    if b is not None:
+        y = y + b
+    return y
+
+
+def dense_linear_row(x, w, b=None):
+    """Row-major dense: y = x @ W^T + b; x: (..., f_in)."""
+    y = x @ w.T
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _dense_kernel(w_ref, x_ref, o_ref):
+    o_ref[...] = w_ref[...] @ x_ref[...]
+
+
+def dense_matmul_pallas(x, w, b=None, row_tile: int = None, interpret=True):
+    """Tiled Pallas dense matmul: grid over output-row tiles.
+
+    Equal-footing baseline for the DYAD kernels: same pallas_call
+    machinery, same activation residency, dense schedule.
+    """
+    f_out, f_in = w.shape
+    nb = x.shape[-1]
+    if row_tile is None:
+        row_tile = f_out
+    if f_out % row_tile:
+        raise ValueError(f"f_out={f_out} not divisible by row_tile={row_tile}")
+    y = pl.pallas_call(
+        _dense_kernel,
+        grid=(f_out // row_tile,),
+        in_specs=[
+            pl.BlockSpec((row_tile, f_in), lambda i: (i, 0)),
+            pl.BlockSpec((f_in, nb), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((f_out, nb), w.dtype),
+        interpret=interpret,
+    )(w, x)
+    if b is not None:
+        y = y + b
+    return y

@@ -1,0 +1,252 @@
+"""Efficient DYAD implementations: jnp-einsum (L2 path) and Pallas (L1).
+
+Two interchangeable execution paths, both validated against ``ref.py``:
+
+* ``dyad_matmul`` / ``dyad_linear_row`` — jnp batched-matmul/einsum forms,
+  the exact 3-D-tensor schedule of paper Eqs 3-10. These lower to single
+  ``dot_general`` ops with a batch dimension and are what the AOT'd model
+  artifacts use (XLA fuses them; interpret-mode Pallas would lower to
+  while-loops and distort every timing table — DESIGN.md §7).
+* ``dyad_matmul_pallas`` — the same schedule expressed as a Pallas kernel
+  with the block structure in the BlockSpecs: grid over ``n_dyad``, the
+  BLOCKTRANS permutation an ``index_map`` over a free reshape-view (the
+  TPU analogue of the paper's stride-swap, Eq 9), and the -CAT fusion a
+  single ``2*n_dyad`` grid.
+
+Variants: ``it`` | ``ot`` | ``dt`` | ``it_cat`` (paper §2.2, §2.4, §3.4.3).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+VARIANTS = ("it", "ot", "dt", "it_cat")
+
+
+def dyad_param_shapes(n_dyad: int, f_in: int, f_out: int):
+    """Parameter shapes + init bound for a DYAD layer of (f_out, f_in).
+
+    Both components store (n_dyad, n_out, n_in) blocks; init is
+    U(-k, k) with k = 1/sqrt(n_in * n_dyad) = 1/sqrt(f_in), matching the
+    paper's reference implementation (§2.3) and nn.Linear.
+    """
+    if f_in % n_dyad or f_out % n_dyad:
+        raise ValueError(
+            f"f_in={f_in}, f_out={f_out} must be divisible by n_dyad={n_dyad}"
+            " (paper §5.1: pad up otherwise)"
+        )
+    n_in, n_out = f_in // n_dyad, f_out // n_dyad
+    k = 1.0 / math.sqrt(f_in)
+    return {
+        "wl": (n_dyad, n_out, n_in),
+        "wu": (n_dyad, n_out, n_in),
+        "init_bound": k,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Column-major (paper-convention) jnp implementation
+# ---------------------------------------------------------------------------
+
+
+def _split_views(x, n_dyad, n_in):
+    """The two 3-D views of X (paper Eqs 3 and 9). Both are free."""
+    nb = x.shape[-1]
+    x1 = x.reshape(n_dyad, n_in, nb)
+    # Eq 9: X2' = X.reshape(n_in, n_dyad, nb).transpose(0, 1) — a pure
+    # stride swap; XLA keeps it as a layout change fused into the bmm.
+    x2 = x.reshape(n_in, n_dyad, nb).transpose(1, 0, 2)
+    return x1, x2
+
+
+def dyad_matmul(x, wl, wu, b=None, variant: str = "it"):
+    """Y = (W1 + W2) X + b via the efficient 3-D schedule.
+
+    x: (f_in, n_batch); wl, wu: (n_dyad, n_out, n_in); b: (f_out, 1)|None.
+    Cost is O(n_dyad * n_out * n_in * n_batch) — an O(n_dyad) reduction
+    over the dense layer (paper §2.2.1).
+    """
+    n_dyad, n_out, n_in = wl.shape
+    nb = x.shape[-1]
+    x1, x2 = _split_views(x, n_dyad, n_in)
+
+    if variant == "it":
+        y = jnp.matmul(wl, x1) + jnp.matmul(wu, x2)  # (nd, n_out, nb)
+        y = y.reshape(n_dyad * n_out, nb)
+    elif variant == "ot":
+        y1 = jnp.matmul(wl, x1)
+        z = jnp.matmul(wu, x1)
+        # output rows permuted: y2[k*nd + i] = z[i, k] (paper Eq 13)
+        y2 = z.transpose(1, 0, 2).reshape(n_dyad * n_out, nb)
+        y = y1.reshape(n_dyad * n_out, nb) + y2
+    elif variant == "dt":
+        y1 = jnp.matmul(wl, x1)
+        z = jnp.matmul(wu, x2)  # input transposed ...
+        y2 = z.transpose(1, 0, 2).reshape(n_dyad * n_out, nb)  # ... and output
+        y = y1.reshape(n_dyad * n_out, nb) + y2
+    elif variant == "it_cat":
+        # -CAT (§3.4.3): one bmm of 2*n_dyad blocks instead of two bmms.
+        w_cat = jnp.concatenate([wl, wu], axis=0)
+        x_cat = jnp.concatenate([x1, x2], axis=0)
+        out = jnp.matmul(w_cat, x_cat)  # (2*nd, n_out, nb)
+        y = (out[:n_dyad] + out[n_dyad:]).reshape(n_dyad * n_out, nb)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    if b is not None:
+        y = y + b
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Row-major implementation (used by the L2 transformer: x is (tokens, f_in))
+# ---------------------------------------------------------------------------
+
+
+def dyad_linear_row(x, wl, wu, b=None, variant: str = "it"):
+    """Row-major DYAD linear: y = x @ W^T + b with x: (..., f_in).
+
+    Implemented by transposing into the column-major core
+    (:func:`dyad_matmul`) and back. Measured on XLA-CPU this is the
+    fastest lowering by a wide margin (EXPERIMENTS.md §Perf): the
+    column-major form's block views are *free* (pure reshapes /
+    stride swaps, the paper's Eq 9), whereas einsum-with-batch-dim
+    forms force materialised activation transposes in both the forward
+    and especially the transposed (gradient) computation.
+    """
+    n_dyad, n_out, n_in = wl.shape
+    lead = tuple(x.shape[:-1])
+    t = 1
+    for dim in lead:
+        t *= int(dim)
+    xc = x.reshape((t, n_dyad * n_in)).T  # (f_in, t)
+    bc = None if b is None else b.reshape(n_dyad * n_out, 1)
+    y = dyad_matmul(xc, wl, wu, bc, variant=variant).T
+    return y.reshape(lead + (n_dyad * n_out,))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (column-major). interpret=True: CPU PJRT cannot execute
+# Mosaic custom-calls; structure is TPU-shaped (DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+
+def _it_kernel(wl_ref, wu_ref, x1_ref, x2_ref, o_ref):
+    # One grid step = one dyad block i: both components' contribution to
+    # output rows [i*n_out, (i+1)*n_out). x2_ref is the strided view
+    # block [:, i, :] of X.reshape(n_in, n_dyad, nb) — the permutation
+    # lives entirely in the BlockSpec index_map.
+    o_ref[0] = wl_ref[0] @ x1_ref[0] + wu_ref[0] @ x2_ref[:, 0, :]
+
+
+def _bd_kernel(w_ref, x_ref, o_ref):
+    # Plain block-diagonal bmm step (used for OT/DT partial products).
+    o_ref[0] = w_ref[0] @ x_ref[0]
+
+
+def _bd_kernel_strided_x(w_ref, x_ref, o_ref):
+    o_ref[0] = w_ref[0] @ x_ref[:, 0, :]
+
+
+def _cat_kernel(w_ref, x_ref, o_ref):
+    # -CAT: one grid of 2*n_dyad steps over concatenated weights/inputs.
+    o_ref[0] = w_ref[0] @ x_ref[0]
+
+
+def _pallas_bd(w3, x3, *, strided: bool, interpret: bool = True):
+    """pallas_call wrapper: grid (n_dyad,), one (n_out,n_in)x(n_in,nb) tile
+    per step. VMEM/grid-step = (n_out*n_in + n_in*nb + n_out*nb) * 4 B."""
+    n_dyad, n_out, n_in = w3.shape
+    nb = x3.shape[-1]
+    if strided:
+        x_spec = pl.BlockSpec((n_in, 1, nb), lambda i: (0, i, 0))
+        kern = _bd_kernel_strided_x
+    else:
+        x_spec = pl.BlockSpec((1, n_in, nb), lambda i: (i, 0, 0))
+        kern = _bd_kernel
+    return pl.pallas_call(
+        kern,
+        grid=(n_dyad,),
+        in_specs=[
+            pl.BlockSpec((1, n_out, n_in), lambda i: (i, 0, 0)),
+            x_spec,
+        ],
+        out_specs=pl.BlockSpec((1, n_out, nb), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_dyad, n_out, nb), w3.dtype),
+        interpret=interpret,
+    )(w3, x3)
+
+
+def dyad_matmul_pallas(x, wl, wu, b=None, variant: str = "it", interpret=True):
+    """Pallas version of :func:`dyad_matmul` (same signature/semantics)."""
+    n_dyad, n_out, n_in = wl.shape
+    nb = x.shape[-1]
+    x1 = x.reshape(n_dyad, n_in, nb)
+    xs = x.reshape(n_in, n_dyad, nb)  # strided view for BLOCKTRANS
+
+    if variant == "it":
+        y3 = pl.pallas_call(
+            _it_kernel,
+            grid=(n_dyad,),
+            in_specs=[
+                pl.BlockSpec((1, n_out, n_in), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, n_out, n_in), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, n_in, nb), lambda i: (i, 0, 0)),
+                pl.BlockSpec((n_in, 1, nb), lambda i: (0, i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, n_out, nb), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_dyad, n_out, nb), wl.dtype),
+            interpret=interpret,
+        )(wl, wu, x1, xs)
+        y = y3.reshape(n_dyad * n_out, nb)
+    elif variant == "ot":
+        y1 = _pallas_bd(wl, x1, strided=False, interpret=interpret)
+        z = _pallas_bd(wu, x1, strided=False, interpret=interpret)
+        y = y1.reshape(n_dyad * n_out, nb) + z.transpose(1, 0, 2).reshape(
+            n_dyad * n_out, nb
+        )
+    elif variant == "dt":
+        y1 = _pallas_bd(wl, x1, strided=False, interpret=interpret)
+        z = _pallas_bd(wu, xs, strided=True, interpret=interpret)
+        y = y1.reshape(n_dyad * n_out, nb) + z.transpose(1, 0, 2).reshape(
+            n_dyad * n_out, nb
+        )
+    elif variant == "it_cat":
+        w_cat = jnp.concatenate([wl, wu], axis=0)
+        x2 = xs.transpose(1, 0, 2)
+        x_cat = jnp.concatenate([x1, x2], axis=0)
+        out = pl.pallas_call(
+            _cat_kernel,
+            grid=(2 * n_dyad,),
+            in_specs=[
+                pl.BlockSpec((1, n_out, n_in), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, n_in, nb), lambda i: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, n_out, nb), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((2 * n_dyad, n_out, nb), wl.dtype),
+            interpret=interpret,
+        )(w_cat, x_cat)
+        y = (out[:n_dyad] + out[n_dyad:]).reshape(n_dyad * n_out, nb)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    if b is not None:
+        y = y + b
+    return y
+
+
+def vmem_estimate_bytes(n_dyad, f_in, f_out, nb, dtype_bytes=4, cat=False):
+    """Static VMEM-per-grid-step estimate for DESIGN.md §7 / EXPERIMENTS.md.
+
+    One grid step holds a weight tile, an activation tile and an output
+    tile. -CAT doubles neither (same per-step tiles, longer grid).
+    """
+    n_in, n_out = f_in // n_dyad, f_out // n_dyad
+    tiles = n_out * n_in + n_in * nb + n_out * nb
+    if not cat:
+        # IT fused kernel holds both weight tiles + both activation tiles
+        tiles += n_out * n_in + n_in * nb
+    return tiles * dtype_bytes

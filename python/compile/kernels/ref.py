@@ -1,0 +1,101 @@
+"""Pure-jnp correctness oracle for the DYAD layer family.
+
+The oracle *materialises* the full dense weight matrix ``W`` implied by the
+3-D parameter tensors (including the BLOCKTRANS permutation) and applies a
+plain dense matmul. Every efficient implementation (jnp-einsum and Pallas)
+is checked against this module — if they agree with the materialised W,
+the block/permutation bookkeeping is right by construction.
+
+Shapes follow the paper's column-major convention (§2.1):
+  X : (f_in, n_batch),  W : (f_out, f_in),  Y = W X + b.
+
+Parameter tensors (paper Eq 2):
+  wl : (n_dyad, n_out, n_in)   BLOCKDIAG blocks ("lower"/first component)
+  wu : (n_dyad, n_out, n_in)   BLOCKTRANS blocks ("upper"/second component)
+with f_in = n_dyad * n_in and f_out = n_dyad * n_out.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+VARIANTS = ("it", "ot", "dt")
+
+
+def perm_vector(n_block: int, n_dyad: int) -> np.ndarray:
+    """Permutation pi over a dimension of size ``n_block * n_dyad``.
+
+    pi[m] is the *original* index feeding slot ``m`` of the permuted
+    (block-diagonal-ordered) vector. Slot m = i * n_block + k (block i,
+    offset k) reads original index k * n_dyad + i — this is exactly the
+    paper's "free strided view" (Eq 9): reshape(n_block, n_dyad) then
+    transpose to (n_dyad, n_block).
+    """
+    m = np.arange(n_block * n_dyad)
+    i, k = m // n_block, m % n_block
+    return k * n_dyad + i
+
+
+def blockdiag_full(w3: jnp.ndarray) -> jnp.ndarray:
+    """Materialise a block-diagonal (f_out, f_in) matrix from blocks.
+
+    w3 has shape (n_dyad, n_out, n_in); block i occupies rows
+    [i*n_out, (i+1)*n_out) and columns [i*n_in, (i+1)*n_in) (paper Eq 2).
+    """
+    n_dyad, n_out, n_in = w3.shape
+    full = jnp.zeros((n_dyad * n_out, n_dyad * n_in), dtype=w3.dtype)
+    for i in range(n_dyad):
+        full = full.at[i * n_out : (i + 1) * n_out, i * n_in : (i + 1) * n_in].set(
+            w3[i]
+        )
+    return full
+
+
+def blocktrans_full(w3: jnp.ndarray, variant: str) -> jnp.ndarray:
+    """Materialise the BLOCKTRANS component for a given variant.
+
+    The component is a block-diagonal matrix whose columns (IT), rows
+    (OT), or both (DT) have been permuted by the strided-view
+    permutation. Equivalences (paper §2.2.2, §2.4):
+
+      IT: W2 = BD @ Pi_cols      -- columns permuted (input transpose)
+      OT: W2 = Pi_rows^T @ BD    -- rows permuted (output transpose)
+      DT: W2 = Pi_rows^T @ BD @ Pi_cols
+    """
+    n_dyad, n_out, n_in = w3.shape
+    bd = blockdiag_full(w3)
+    if variant == "it":
+        pi = perm_vector(n_in, n_dyad)
+        # y2 = BD @ x[pi]  =>  W2[:, pi[m]] = BD[:, m]
+        return jnp.zeros_like(bd).at[:, pi].set(bd)
+    if variant == "ot":
+        pi = perm_vector(n_out, n_dyad)
+        # y2[pi[m]] = (BD @ x)[m]  =>  W2[pi[m], :] = BD[m, :]
+        return jnp.zeros_like(bd).at[pi, :].set(bd)
+    if variant == "dt":
+        pi_c = perm_vector(n_in, n_dyad)
+        pi_r = perm_vector(n_out, n_dyad)
+        w2 = jnp.zeros_like(bd).at[:, pi_c].set(bd)
+        return jnp.zeros_like(w2).at[pi_r, :].set(w2)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def dyad_full(wl: jnp.ndarray, wu: jnp.ndarray, variant: str) -> jnp.ndarray:
+    """Materialise the full DYAD weight matrix W = W1 + W2 (paper Eq 1)."""
+    return blockdiag_full(wl) + blocktrans_full(wu, variant)
+
+
+def dyad_ref(x, wl, wu, b=None, variant: str = "it"):
+    """Oracle forward: Y = (W1 + W2) X + b via the materialised matrix."""
+    w = dyad_full(wl, wu, variant)
+    y = w @ x
+    if b is not None:
+        y = y + b
+    return y
+
+
+def dense_ref(x, w, b=None):
+    """Oracle forward for the DENSE baseline: Y = W X + b."""
+    y = w @ x
+    if b is not None:
+        y = y + b
+    return y

@@ -1,0 +1,136 @@
+"""L2: MNIST-probe MLP (paper §3.4.5) — dense vs DYAD hidden layers.
+
+784 -> 256 -> 256 -> 10 with ReLU; the two hidden linears are the
+DENSE/DYAD swap site (784 and 256 are divisible by n_dyad=4; the 10-way
+head stays dense — see configs.py). Adam-in-graph train step with a K
+microbatch scan, mirroring the LM train step.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import VariantConfig
+from .kernels.dyad import dyad_linear_row, dyad_param_shapes
+from .kernels.dense import dense_linear_row
+
+
+def _linear_specs(prefix, f_in, f_out, variant: VariantConfig):
+    if variant.kind == "dense":
+        k = 1.0 / math.sqrt(f_in)
+        return [
+            (f"{prefix}.w", (f_out, f_in), {"kind": "uniform", "bound": k}),
+            (f"{prefix}.b", (f_out,), {"kind": "uniform", "bound": k}),
+        ]
+    s = dyad_param_shapes(variant.n_dyad, f_in, f_out)
+    k = s["init_bound"]
+    return [
+        (f"{prefix}.wl", s["wl"], {"kind": "uniform", "bound": k}),
+        (f"{prefix}.wu", s["wu"], {"kind": "uniform", "bound": k}),
+        (f"{prefix}.b", (f_out,), {"kind": "uniform", "bound": k}),
+    ]
+
+
+def mnist_param_specs(variant: VariantConfig):
+    h = configs.MNIST_HIDDEN
+    kh = 1.0 / math.sqrt(h)
+    return (
+        _linear_specs("fc1", configs.MNIST_IN, h, variant)
+        + _linear_specs("fc2", h, h, variant)
+        + [
+            ("head.w", (configs.MNIST_CLASSES, h), {"kind": "uniform", "bound": kh}),
+            ("head.b", (configs.MNIST_CLASSES,), {"kind": "uniform", "bound": kh}),
+        ]
+    )
+
+
+def _as_dict(flat, specs):
+    return {name: arr for (name, _, _), arr in zip(specs, flat)}
+
+
+def _linear(p, prefix, x, variant: VariantConfig):
+    if variant.kind == "dense" or prefix == "head":
+        return dense_linear_row(x, p[f"{prefix}.w"], p[f"{prefix}.b"])
+    return dyad_linear_row(
+        x, p[f"{prefix}.wl"], p[f"{prefix}.wu"], p[f"{prefix}.b"],
+        variant=variant.dyad_variant,
+    )
+
+
+def mlp_logits(flat, x, variant: VariantConfig):
+    specs = mnist_param_specs(variant)
+    p = _as_dict(flat, specs)
+    h = jax.nn.relu(_linear(p, "fc1", x, variant))
+    h = jax.nn.relu(_linear(p, "fc2", h, variant))
+    return dense_linear_row(h, p["head.w"], p["head.b"])
+
+
+def mnist_loss(flat, x, labels, variant):
+    logits = mlp_logits(flat, x, variant)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def make_mnist_train_step(variant, k_micro, batch):
+    """fn(params.., m.., v.., step, lr, images (K,B,784), labels (K,B))."""
+    specs = mnist_param_specs(variant)
+    n = len(specs)
+
+    def train_step(*args):
+        params = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step, lr = args[3 * n], args[3 * n + 1]
+        images, labels = args[3 * n + 2], args[3 * n + 3]
+
+        def one(carry, xy):
+            params, m, v, step = carry
+            x, y = xy
+            loss, grads = jax.value_and_grad(mnist_loss)(params, x, y, variant)
+            step = step + 1.0
+            b1, b2, eps = configs.ADAM_B1, configs.ADAM_B2, configs.ADAM_EPS
+            m = [b1 * mi + (1 - b1) * g for mi, g in zip(m, grads)]
+            v = [b2 * vi + (1 - b2) * g * g for vi, g in zip(v, grads)]
+            ms, vs = 1.0 / (1.0 - b1**step), 1.0 / (1.0 - b2**step)
+            params = [
+                p - lr * (mi * ms) / (jnp.sqrt(vi * vs) + eps)
+                for p, mi, vi in zip(params, m, v)
+            ]
+            return (params, m, v, step), loss
+
+        (params, m, v, step), losses = jax.lax.scan(
+            one, (params, m, v, step), (images, labels)
+        )
+        return tuple(params) + tuple(m) + tuple(v) + (step, losses)
+
+    return train_step
+
+
+def make_mnist_accuracy(variant, batch):
+    """fn(params.., images (B,784), labels (B,)) -> (n_correct,)."""
+    n = len(mnist_param_specs(variant))
+
+    def accuracy(*args):
+        params, x, y = list(args[:n]), args[n], args[n + 1]
+        pred = jnp.argmax(mlp_logits(params, x, variant), axis=-1)
+        return (jnp.sum((pred == y).astype(jnp.int32)),)
+
+    return accuracy
+
+
+def make_mnist_hidden_fwd(variant, batch):
+    """fn(params.., x (B,784)) -> hidden activations: the MLP's 'ff-only'
+    path (both swap-site linears + ReLUs, no head) for §3.4.5 timing."""
+    specs = mnist_param_specs(variant)
+    n = len(specs)
+
+    def hidden_fwd(*args):
+        params, x = list(args[:n]), args[n]
+        p = _as_dict(params, specs)
+        h = jax.nn.relu(_linear(p, "fc1", x, variant))
+        h = jax.nn.relu(_linear(p, "fc2", h, variant))
+        return (h,)
+
+    return hidden_fwd

@@ -1,0 +1,397 @@
+"""L2: decoder-only transformer LM with pluggable ff variant (DENSE/DYAD).
+
+Everything the rust coordinator executes for language-model work is
+defined here and AOT-lowered by ``aot.py``:
+
+* ``train_step``  — K optimizer steps (inner ``lax.scan`` over
+  microbatches) of Adam on next-token cross-entropy. K amortises the
+  host round-trip of training state (DESIGN.md §2, §8).
+* ``score``       — per-sequence summed token log-probability (BLIMP-like
+  minimal pairs, few-shot MCQ scoring).
+* ``features``    — masked mean-pooled final hidden states (GLUE-like
+  probe finetuning; the probe head is trained in rust).
+* ``next_logits`` — logits at each sequence's last real position
+  (serving / greedy generation).
+* ``ff_fwd`` / ``ff_fwdbwd`` — just the ff module at paper-true widths
+  (timing tables T1/T5/T10, F6/F7, -CAT ablation).
+
+Parameters travel as a *flat list* in the deterministic order given by
+:func:`param_specs`; the same order is recorded in the artifact manifest
+so rust can initialise, checkpoint and feed them without pytrees.
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import ArchConfig, VariantConfig
+from .kernels.dyad import dyad_linear_row, dyad_matmul, dyad_param_shapes
+from .kernels.dense import dense_linear_row
+
+# ---------------------------------------------------------------------------
+# Parameter specification (single source of truth for python AND rust)
+# ---------------------------------------------------------------------------
+
+
+def _ff_linear_specs(prefix, f_in, f_out, variant: VariantConfig):
+    """Specs for one ff linear layer under the chosen variant."""
+    if variant.kind == "dense":
+        k = 1.0 / math.sqrt(f_in)
+        return [
+            (f"{prefix}.w", (f_out, f_in), {"kind": "uniform", "bound": k}),
+            (f"{prefix}.b", (f_out,), {"kind": "uniform", "bound": k}),
+        ]
+    shapes = dyad_param_shapes(variant.n_dyad, f_in, f_out)
+    k = shapes["init_bound"]
+    return [
+        (f"{prefix}.wl", shapes["wl"], {"kind": "uniform", "bound": k}),
+        (f"{prefix}.wu", shapes["wu"], {"kind": "uniform", "bound": k}),
+        (f"{prefix}.b", (f_out,), {"kind": "uniform", "bound": k}),
+    ]
+
+
+def param_specs(arch: ArchConfig, variant: VariantConfig):
+    """Ordered [(name, shape, init)] for the whole model.
+
+    Embeddings are tied (OPT-style): ``tok_emb`` doubles as the LM head.
+    """
+    d, ff = arch.d_model, arch.d_ff
+    ka = 1.0 / math.sqrt(d)
+    specs = [
+        ("tok_emb", (arch.vocab, d), {"kind": "normal", "std": 0.02}),
+        ("pos_emb", (arch.seq, d), {"kind": "normal", "std": 0.02}),
+    ]
+    for l in range(arch.n_layers):
+        p = f"layer{l}"
+        specs += [
+            (f"{p}.ln1.scale", (d,), {"kind": "ones"}),
+            (f"{p}.ln1.bias", (d,), {"kind": "zeros"}),
+        ]
+        for m in ("wq", "wk", "wv", "wo"):
+            specs += [
+                (f"{p}.attn.{m}", (d, d), {"kind": "uniform", "bound": ka}),
+                (f"{p}.attn.{m}_b", (d,), {"kind": "zeros"}),
+            ]
+        specs += [
+            (f"{p}.ln2.scale", (d,), {"kind": "ones"}),
+            (f"{p}.ln2.bias", (d,), {"kind": "zeros"}),
+        ]
+        specs += _ff_linear_specs(f"{p}.ff.fc1", d, ff, variant)
+        specs += _ff_linear_specs(f"{p}.ff.fc2", ff, d, variant)
+    specs += [
+        ("final_ln.scale", (d,), {"kind": "ones"}),
+        ("final_ln.bias", (d,), {"kind": "zeros"}),
+    ]
+    return specs
+
+
+def init_params(arch, variant, key):
+    """Python-side init (tests + parity checks with rust init)."""
+    out = []
+    for name, shape, init in param_specs(arch, variant):
+        key, sub = jax.random.split(key)
+        if init["kind"] == "uniform":
+            out.append(
+                jax.random.uniform(
+                    sub, shape, jnp.float32, -init["bound"], init["bound"]
+                )
+            )
+        elif init["kind"] == "normal":
+            out.append(init["std"] * jax.random.normal(sub, shape, jnp.float32))
+        elif init["kind"] == "zeros":
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif init["kind"] == "ones":
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            raise ValueError(init)
+    return out
+
+
+def _as_dict(flat, specs):
+    return {name: arr for (name, _, _), arr in zip(specs, flat)}
+
+
+# ---------------------------------------------------------------------------
+# Model forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _ff_linear(p, prefix, x, variant: VariantConfig):
+    if variant.kind == "dense":
+        return dense_linear_row(x, p[f"{prefix}.w"], p[f"{prefix}.b"])
+    return dyad_linear_row(
+        x,
+        p[f"{prefix}.wl"],
+        p[f"{prefix}.wu"],
+        p[f"{prefix}.b"],
+        variant=variant.dyad_variant,
+    )
+
+
+def _ff_linear_cm(p, prefix, xc, variant: VariantConfig, dyad_variant: str):
+    """Column-major linear: xc is (f_in, t); returns (f_out, t).
+
+    The DYAD branch runs the paper's Eq 3-10 schedule directly — all
+    block views of xc are free reshapes/stride-swaps. Measured fastest
+    lowering on XLA-CPU by a wide margin (EXPERIMENTS.md §Perf L2).
+    """
+    if variant.kind == "dense":
+        return p[f"{prefix}.w"] @ xc + p[f"{prefix}.b"][:, None]
+    return dyad_matmul(
+        xc,
+        p[f"{prefix}.wl"],
+        p[f"{prefix}.wu"],
+        p[f"{prefix}.b"][:, None],
+        variant=dyad_variant,
+    )
+
+
+def ff_module(p, prefix, x, variant: VariantConfig, layer: int = 0):
+    """The paper's swap site: fc1 -> GELU -> fc2.
+
+    Internally column-major: one activation transpose in, one out —
+    both linears then see free strided block views (§Perf L2).
+    ``layer`` selects the per-layer dyad variant for heterogeneous
+    schedules (paper §4 future work).
+    """
+    dv = variant.variant_for_layer(layer) if variant.kind == "dyad" else "it"
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xc = x.reshape(-1, d).T
+    h = jax.nn.gelu(_ff_linear_cm(p, f"{prefix}.fc1", xc, variant, dv))
+    y = _ff_linear_cm(p, f"{prefix}.fc2", h, variant, dv)
+    return y.T.reshape(lead + (y.shape[0],))
+
+
+def _attention(p, prefix, x, arch: ArchConfig):
+    """Standard causal MHA, fp32 (the paper trains fp32, §5.2)."""
+    b, s, d = x.shape
+    nh, hd = arch.n_heads, arch.head_dim
+
+    def proj(w, bias):
+        return (x @ w.T + bias).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+
+    q = proj(p[f"{prefix}.wq"], p[f"{prefix}.wq_b"])
+    k = proj(p[f"{prefix}.wk"], p[f"{prefix}.wk_b"])
+    v = proj(p[f"{prefix}.wv"], p[f"{prefix}.wv_b"])
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    att = jnp.where(causal, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ p[f"{prefix}.wo"].T + p[f"{prefix}.wo_b"]
+
+
+def hidden_states(flat_params, tokens, arch: ArchConfig, variant: VariantConfig):
+    """(B, S) int32 tokens -> (B, S, d) final hidden states."""
+    specs = param_specs(arch, variant)
+    p = _as_dict(flat_params, specs)
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    for l in range(arch.n_layers):
+        pref = f"layer{l}"
+        if arch.parallel_residual:
+            # Pythia-style: attn and ff both read the same pre-LN input.
+            h1 = _layer_norm(x, p[f"{pref}.ln1.scale"], p[f"{pref}.ln1.bias"])
+            h2 = _layer_norm(x, p[f"{pref}.ln2.scale"], p[f"{pref}.ln2.bias"])
+            x = x + _attention(p, f"{pref}.attn", h1, arch) + ff_module(
+                p, f"{pref}.ff", h2, variant, layer=l
+            )
+        else:
+            h = _layer_norm(x, p[f"{pref}.ln1.scale"], p[f"{pref}.ln1.bias"])
+            x = x + _attention(p, f"{pref}.attn", h, arch)
+            h = _layer_norm(x, p[f"{pref}.ln2.scale"], p[f"{pref}.ln2.bias"])
+            x = x + ff_module(p, f"{pref}.ff", h, variant, layer=l)
+    return _layer_norm(x, p["final_ln.scale"], p["final_ln.bias"])
+
+
+def logits_fn(flat_params, tokens, arch, variant):
+    h = hidden_states(flat_params, tokens, arch, variant)
+    specs = param_specs(arch, variant)
+    p = _as_dict(flat_params, specs)
+    return h @ p["tok_emb"].T  # tied head
+
+
+def loss_fn(flat_params, tokens, arch, variant):
+    """Mean next-token cross-entropy over (B, S) packed sequences."""
+    logits = logits_fn(flat_params, tokens, arch, variant)  # (B, S, V)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Training step (Adam-in-graph, K microbatches per call)
+# ---------------------------------------------------------------------------
+
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+
+
+def make_train_step(arch, variant, k_micro, batch):
+    """Returns fn(params.., m.., v.., step, lr, tokens) -> (..., losses).
+
+    tokens: (K, B, S) int32. Advances K Adam steps; ``losses`` is (K,).
+    step is float32 (bias correction); lr is applied uniformly across
+    the K inner steps (rust recomputes the schedule between calls).
+    """
+    n = len(param_specs(arch, variant))
+
+    def train_step(*args):
+        params = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step, lr, tokens = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+
+        def one_step(carry, batch_tokens):
+            params, m, v, step = carry
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, batch_tokens, arch, variant
+            )
+            gnorm = _global_norm(grads)
+            scale = jnp.minimum(1.0, configs.GRAD_CLIP / (gnorm + 1e-12))
+            grads = [g * scale for g in grads]
+            step = step + 1.0
+            b1, b2, eps = configs.ADAM_B1, configs.ADAM_B2, configs.ADAM_EPS
+            m = [b1 * mi + (1 - b1) * g for mi, g in zip(m, grads)]
+            v = [b2 * vi + (1 - b2) * g * g for vi, g in zip(v, grads)]
+            mhat_scale = 1.0 / (1.0 - b1**step)
+            vhat_scale = 1.0 / (1.0 - b2**step)
+            params = [
+                p - lr * (mi * mhat_scale) / (jnp.sqrt(vi * vhat_scale) + eps)
+                for p, mi, vi in zip(params, m, v)
+            ]
+            return (params, m, v, step), loss
+
+        (params, m, v, step), losses = jax.lax.scan(
+            one_step, (params, m, v, step), tokens
+        )
+        return tuple(params) + tuple(m) + tuple(v) + (step, losses)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Evaluation / serving functions
+# ---------------------------------------------------------------------------
+
+
+def make_score(arch, variant):
+    """fn(params.., tokens (B,S) i32, mask (B,S) f32) -> (sum_logp, n_tok).
+
+    sum_logp[b] = sum over positions t>=1 with mask[t]==1 of
+    log P(tokens[t] | tokens[<t]). The standard minimal-pair/MCQ scorer.
+    """
+
+    def score(*args):
+        n = len(param_specs(arch, variant))
+        params, tokens, mask = list(args[:n]), args[n], args[n + 1]
+        logits = logits_fn(params, tokens, arch, variant)
+        logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+        tgt = tokens[:, 1:]
+        tok_lp = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        m = mask[:, 1:]
+        return (jnp.sum(tok_lp * m, axis=-1), jnp.sum(m, axis=-1))
+
+    return score
+
+
+def make_features(arch, variant):
+    """fn(params.., tokens, mask) -> (B, d) masked mean-pooled hiddens."""
+
+    def features(*args):
+        n = len(param_specs(arch, variant))
+        params, tokens, mask = list(args[:n]), args[n], args[n + 1]
+        h = hidden_states(params, tokens, arch, variant)
+        m = mask[..., None]
+        return jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+
+    return features
+
+
+def make_next_logits(arch, variant):
+    """fn(params.., tokens (B,S), lengths (B,) i32) -> (B, vocab) logits
+    at each sequence's last real position (for sampling in rust)."""
+
+    def next_logits(*args):
+        n = len(param_specs(arch, variant))
+        params, tokens, lengths = list(args[:n]), args[n], args[n + 1]
+        logits = logits_fn(params, tokens, arch, variant)
+        idx = jnp.maximum(lengths - 1, 0)
+        return jnp.take_along_axis(
+            logits, idx[:, None, None].astype(jnp.int32), axis=1
+        )[:, 0, :]
+
+    return next_logits
+
+
+def make_eval_loss(arch, variant, batch):
+    """fn(params.., tokens (B,S)) -> scalar mean CE (validation loss)."""
+
+    def eval_loss(*args):
+        n = len(param_specs(arch, variant))
+        params, tokens = list(args[:n]), args[n]
+        return (loss_fn(params, tokens, arch, variant),)
+
+    return eval_loss
+
+
+# ---------------------------------------------------------------------------
+# ff-micro functions (timing tables at paper-true widths)
+# ---------------------------------------------------------------------------
+
+
+def ff_param_specs(d, ff, variant: VariantConfig):
+    return _ff_linear_specs("fc1", d, ff, variant) + _ff_linear_specs(
+        "fc2", ff, d, variant
+    )
+
+
+def make_ff_fwd(d, ff, variant):
+    """fn(ff_params.., x (T, d)) -> (T, d): the ff module forward."""
+    specs = ff_param_specs(d, ff, variant)
+
+    def ff_fwd(*args):
+        p = _as_dict(list(args[:-1]), specs)
+        x = args[-1]
+        h = _ff_linear(p, "fc1", x, variant)
+        h = jax.nn.gelu(h)
+        return (_ff_linear(p, "fc2", h, variant),)
+
+    return ff_fwd
+
+
+def make_ff_fwdbwd(d, ff, variant):
+    """fn(ff_params.., x, cotangent (T, d)) -> (loss-ish scalar, grads..).
+
+    Forward + backward through the ff module (the paper times both
+    passes separately; we emit fwd and fwd+bwd artifacts and subtract).
+    """
+    specs = ff_param_specs(d, ff, variant)
+    n = len(specs)
+
+    def ff_loss(params, x, ct):
+        p = _as_dict(params, specs)
+        h = _ff_linear(p, "fc1", x, variant)
+        h = jax.nn.gelu(h)
+        y = _ff_linear(p, "fc2", h, variant)
+        return jnp.sum(y * ct)
+
+    def ff_fwdbwd(*args):
+        params, x, ct = list(args[:n]), args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(ff_loss)(params, x, ct)
+        return (loss,) + tuple(grads)
+
+    return ff_fwdbwd

@@ -1,0 +1,130 @@
+"""AOT emitter: manifest schema, lowering validity, contract
+consistency between param_specs and emitted inputs/outputs."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, model
+from compile.configs import ARCHS, VARIANTS
+
+
+def test_to_hlo_text_produces_parseable_module():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(aot.sds((2, 2)))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # must be plain HLO text, not a serialized proto blob
+    assert text.isprintable() or "\n" in text
+
+
+def test_emitter_writes_files_and_entries():
+    with tempfile.TemporaryDirectory() as d:
+        em = aot.Emitter(d)
+
+        def fn(x):
+            return (x + 1.0,)
+
+        em.emit(
+            "unit/test",
+            fn,
+            [("x", (2, 3), aot.F32, "data", None)],
+            [("y", (2, 3), aot.F32)],
+            "test_kind",
+            {"foo": 7},
+        )
+        assert os.path.exists(os.path.join(d, "unit_test.hlo.txt"))
+        assert len(em.entries) == 1
+        e = em.entries[0]
+        assert e["kind"] == "test_kind"
+        assert e["inputs"][0]["dtype"] == "f32"
+        assert e["meta"]["foo"] == 7
+
+
+def test_emitter_only_filter_skips_lowering_but_keeps_entry():
+    with tempfile.TemporaryDirectory() as d:
+        em = aot.Emitter(d, only="nomatch-xyz")
+
+        def fn(x):
+            return (x,)
+
+        em.emit(
+            "skipped/one",
+            fn,
+            [("x", (1,), aot.F32, "data", None)],
+            [("y", (1,), aot.F32)],
+            "k",
+        )
+        assert not os.listdir(d)
+        assert len(em.entries) == 1  # manifest entry still recorded
+
+
+@pytest.mark.parametrize("arch_name", ["opt-mini"])
+@pytest.mark.parametrize("vname", ["dense", "dyad_it"])
+def test_train_step_contract_matches_param_specs(arch_name, vname):
+    """The manifest input list must be params ++ m ++ v ++ step ++ lr ++
+    tokens and outputs params ++ m ++ v ++ step ++ losses, in spec order
+    — the rust TrainState relies on exactly this."""
+    arch, var = ARCHS[arch_name], VARIANTS[vname]
+    specs = model.param_specs(arch, var)
+    n = len(specs)
+    params_in = aot.model_param_inputs(arch, var)
+    opt_in = aot.opt_state_inputs(arch, var)
+    assert len(params_in) == n
+    assert len(opt_in) == 2 * n
+    assert [p[0] for p in params_in] == [s for s, _, _ in specs]
+    assert opt_in[0][0] == "m." + specs[0][0]
+    assert opt_in[n][0] == "v." + specs[0][0]
+    # every param has an init, every opt state is zero-init
+    assert all(p[4] is not None for p in params_in)
+    assert all(o[4] == {"kind": "zeros"} for o in opt_in)
+
+
+def test_manifest_json_is_loadable_and_complete():
+    """If artifacts/ has been built, its manifest must satisfy the
+    contract the rust parser expects."""
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    m = json.load(open(path))
+    assert m["version"] == 1
+    assert set(m["adam"]) == {"b1", "b2", "eps", "grad_clip"}
+    for name in ("opt-mini", "pythia-mini", "opt-mid"):
+        assert name in m["archs"]
+    names = [a["name"] for a in m["artifacts"]]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for a in m["artifacts"]:
+        for io in a["inputs"]:
+            assert io["role"] in {"param", "opt_m", "opt_v", "scalar", "data"}
+            assert all(isinstance(d, int) and d >= 0 for d in io["shape"])
+            if io["role"] == "param":
+                assert "init" in io, f"{a['name']}: param {io['name']} missing init"
+        # train artifacts: outputs mirror state inputs + step + losses
+        if a["kind"] in ("train_step", "mnist_train"):
+            n_state = sum(
+                1 for io in a["inputs"] if io["role"] in ("param", "opt_m", "opt_v")
+            )
+            assert len(a["outputs"]) == n_state + 2, a["name"]
+
+
+def test_vocab_fits_all_archs():
+    """Model vocab must hold the rust tokenizer's vocabulary (~150)."""
+    for arch in ARCHS.values():
+        assert arch.vocab >= 256
+
+
+def test_ff_geometries_divisible_by_n_dyad():
+    for d, ff, _ in configs.FF_GEOMETRIES.values():
+        for v in VARIANTS.values():
+            if v.kind == "dyad":
+                assert d % v.n_dyad == 0
+                assert ff % v.n_dyad == 0
+    for w in configs.WIDTH_SWEEP:
+        assert w % 8 == 0

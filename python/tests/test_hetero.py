@@ -1,0 +1,75 @@
+"""§4 future work: heterogeneous per-layer DYAD variant schedules."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.configs import ArchConfig, VariantConfig, VARIANTS
+
+TINY = ArchConfig("tiny", vocab=64, d_model=32, d_ff=64, n_layers=3,
+                  n_heads=4, seq=16)
+
+
+def test_variant_for_layer_cycles():
+    v = VARIANTS["dyad_hetero"]
+    assert [v.variant_for_layer(l) for l in range(5)] == \
+        ["it", "ot", "dt", "it", "ot"]
+    homog = VARIANTS["dyad_it"]
+    assert homog.variant_for_layer(7) == "it"
+
+
+def test_hetero_param_shapes_same_as_homogeneous():
+    """Hetero uses the same 3-D storage as any dyad variant, so specs
+    (and therefore manifests/checkpoints) are shape-compatible."""
+    a = model.param_specs(TINY, VARIANTS["dyad_hetero"])
+    b = model.param_specs(TINY, VARIANTS["dyad_it"])
+    assert [(n, s) for n, s, _ in a] == [(n, s) for n, s, _ in b]
+
+
+def test_hetero_forward_differs_from_homogeneous():
+    """Same weights, different per-layer permutations => different
+    function (unless n_layers < 2, which TINY isn't)."""
+    params = model.init_params(TINY, VARIANTS["dyad_hetero"], jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, 64, size=(2, TINY.seq)), jnp.int32)
+    out_h = model.logits_fn(params, toks, TINY, VARIANTS["dyad_hetero"])
+    out_i = model.logits_fn(params, toks, TINY, VARIANTS["dyad_it"])
+    assert out_h.shape == out_i.shape
+    assert bool(jnp.all(jnp.isfinite(out_h)))
+    assert not np.allclose(np.asarray(out_h), np.asarray(out_i))
+
+
+def test_hetero_layer0_matches_it():
+    """Layer 0 of the schedule is IT, so a 1-layer hetero model equals
+    the homogeneous IT model exactly."""
+    one = ArchConfig("one", vocab=64, d_model=32, d_ff=64, n_layers=1,
+                     n_heads=4, seq=16)
+    params = model.init_params(one, VARIANTS["dyad_hetero"], jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(1, 64, size=(2, 16)), jnp.int32)
+    out_h = model.logits_fn(params, toks, one, VARIANTS["dyad_hetero"])
+    out_i = model.logits_fn(params, toks, one, VARIANTS["dyad_it"])
+    np.testing.assert_allclose(np.asarray(out_h), np.asarray(out_i), rtol=1e-5)
+
+
+def test_hetero_trains():
+    var = VARIANTS["dyad_hetero"]
+    params = model.init_params(TINY, var, jax.random.PRNGKey(2))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step_fn = jax.jit(model.make_train_step(TINY, var, 2, 2))
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(1, 64, size=(2, 2, TINY.seq)), jnp.int32)
+    first = last = None
+    step = jnp.float32(0)
+    for _ in range(4):
+        out = step_fn(*params, *m, *v, step, jnp.float32(1e-3), toks)
+        n = len(params)
+        params, m, v = list(out[:n]), list(out[n:2*n]), list(out[2*n:3*n])
+        step, losses = out[3 * n], out[3 * n + 1]
+        if first is None:
+            first = float(losses[0])
+        last = float(losses[-1])
+    assert last < first, (first, last)

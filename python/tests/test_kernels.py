@@ -1,0 +1,288 @@
+"""L1 correctness: efficient DYAD implementations vs the materialised-W
+oracle. Hypothesis sweeps shapes/dtypes; fixed cases pin the paper's
+worked example (n_dyad = n_in = n_out = 4, Fig 1)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    blockdiag_full,
+    blocktrans_full,
+    dyad_full,
+    dyad_ref,
+    dense_ref,
+    perm_vector,
+    dyad_matmul,
+    dyad_matmul_pallas,
+    dyad_linear_row,
+    dyad_param_shapes,
+    dense_matmul_pallas,
+    dense_linear_row,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+VARIANTS = ("it", "ot", "dt", "it_cat")
+REF_VARIANT = {"it": "it", "ot": "ot", "dt": "dt", "it_cat": "it"}
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def _params(rng, n_dyad, n_in, n_out, nb, dtype=np.float32):
+    wl = _rand(rng, (n_dyad, n_out, n_in), dtype)
+    wu = _rand(rng, (n_dyad, n_out, n_in), dtype)
+    x = _rand(rng, (n_dyad * n_in, nb), dtype)
+    b = _rand(rng, (n_dyad * n_out, 1), dtype)
+    return wl, wu, x, b
+
+
+# ---------------------------------------------------------------------------
+# Permutation / materialisation invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_block,n_dyad", [(4, 4), (3, 5), (8, 2), (1, 7)])
+def test_perm_vector_is_permutation(n_block, n_dyad):
+    pi = perm_vector(n_block, n_dyad)
+    assert sorted(pi.tolist()) == list(range(n_block * n_dyad))
+
+
+@pytest.mark.parametrize("n_block,n_dyad", [(4, 4), (3, 5), (8, 2)])
+def test_perm_matches_strided_view(n_block, n_dyad):
+    """pi is exactly the paper's Eq-9 stride-swap view."""
+    v = np.arange(n_block * n_dyad, dtype=np.float32)
+    pi = perm_vector(n_block, n_dyad)
+    via_perm = v[pi]
+    via_view = v.reshape(n_block, n_dyad).T.flatten()
+    np.testing.assert_array_equal(via_perm, via_view)
+
+
+@pytest.mark.parametrize("n_block,n_dyad", [(4, 4), (3, 5)])
+def test_perm_orthonormal(n_block, n_dyad):
+    """P P^T = I (paper §2.2.2): applying pi then its argsort is identity."""
+    pi = perm_vector(n_block, n_dyad)
+    inv = np.argsort(pi)
+    v = np.arange(n_block * n_dyad)
+    np.testing.assert_array_equal(v[pi][inv], v)
+
+
+def test_blockdiag_structure():
+    rng = np.random.default_rng(0)
+    w3 = _rand(rng, (3, 2, 4))
+    full = np.asarray(blockdiag_full(w3))
+    for i in range(3):
+        blk = full[i * 2 : (i + 1) * 2, i * 4 : (i + 1) * 4]
+        np.testing.assert_array_equal(blk, np.asarray(w3[i]))
+    # everything off the block diagonal is exactly zero
+    mask = np.ones_like(full, dtype=bool)
+    for i in range(3):
+        mask[i * 2 : (i + 1) * 2, i * 4 : (i + 1) * 4] = False
+    assert (full[mask] == 0).all()
+
+
+@pytest.mark.parametrize("variant", ("it", "ot", "dt"))
+def test_blocktrans_is_permuted_blockdiag(variant):
+    """BLOCKTRANS must be BLOCKDIAG with rows/cols permuted — same
+    multiset of entries, same number of nonzeros."""
+    rng = np.random.default_rng(1)
+    w3 = _rand(rng, (4, 4, 4))
+    bd = np.asarray(blockdiag_full(w3))
+    bt = np.asarray(blocktrans_full(w3, variant))
+    assert bt.shape == bd.shape
+    np.testing.assert_allclose(np.sort(bt.flatten()), np.sort(bd.flatten()))
+    assert (bt != 0).sum() == (bd != 0).sum()
+
+
+def test_dyad_full_density():
+    """DYAD density ~ 2/n_dyad of dense (minus shared-support overlap)."""
+    rng = np.random.default_rng(2)
+    n_dyad = 4
+    w3l, w3u = _rand(rng, (n_dyad, 4, 4)), _rand(rng, (n_dyad, 4, 4))
+    full = np.asarray(dyad_full(w3l, w3u, "it"))
+    nnz = (full != 0).sum()
+    assert nnz <= 2 * n_dyad * 4 * 4
+    assert nnz > n_dyad * 4 * 4  # strictly denser than one component
+
+
+# ---------------------------------------------------------------------------
+# Efficient jnp forms vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_dyad_matmul_paper_example(variant):
+    """The paper's worked example: n_dyad = n_in = n_out = 4."""
+    rng = np.random.default_rng(3)
+    wl, wu, x, b = _params(rng, 4, 4, 4, 7)
+    got = dyad_matmul(x, wl, wu, b, variant=variant)
+    want = dyad_ref(x, wl, wu, b, variant=REF_VARIANT[variant])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_dyad=st.sampled_from([1, 2, 4, 8]),
+    n_in=st.integers(1, 9),
+    n_out=st.integers(1, 9),
+    nb=st.integers(1, 6),
+    variant=st.sampled_from(VARIANTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dyad_matmul_vs_ref_hypothesis(n_dyad, n_in, n_out, nb, variant, seed):
+    rng = np.random.default_rng(seed)
+    wl, wu, x, b = _params(rng, n_dyad, n_in, n_out, nb)
+    got = dyad_matmul(x, wl, wu, b, variant=variant)
+    want = dyad_ref(x, wl, wu, b, variant=REF_VARIANT[variant])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_dyad=st.sampled_from([2, 4]),
+    n_in=st.integers(1, 6),
+    n_out=st.integers(1, 6),
+    nb=st.integers(1, 5),
+    variant=st.sampled_from(VARIANTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dyad_linear_row_vs_ref_hypothesis(n_dyad, n_in, n_out, nb, variant, seed):
+    """Row-major (model-convention) path: y = x W^T + b."""
+    rng = np.random.default_rng(seed)
+    wl, wu, x, b = _params(rng, n_dyad, n_in, n_out, nb)
+    xr = x.T  # (nb, f_in)
+    got = dyad_linear_row(xr, wl, wu, b[:, 0], variant=variant)
+    want = dyad_ref(x, wl, wu, b, variant=REF_VARIANT[variant]).T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_dyad_linear_row_leading_dims():
+    """Row path must accept (batch, seq, f_in) activations."""
+    rng = np.random.default_rng(5)
+    wl, wu, x, b = _params(rng, 4, 3, 5, 6)
+    xr = jnp.asarray(rng.standard_normal((2, 3, 12)), dtype=jnp.float32)
+    y = dyad_linear_row(xr, wl, wu, b[:, 0], variant="it")
+    assert y.shape == (2, 3, 20)
+    flat = dyad_linear_row(xr.reshape(6, 12), wl, wu, b[:, 0], variant="it")
+    np.testing.assert_allclose(np.asarray(y).reshape(6, 20), np.asarray(flat), rtol=1e-5)
+
+
+def test_dense_linear_row():
+    rng = np.random.default_rng(6)
+    w = _rand(rng, (5, 3))
+    x = _rand(rng, (3, 4))
+    b = _rand(rng, (5, 1))
+    got = dense_linear_row(x.T, w, b[:, 0])
+    want = dense_ref(x, w, b).T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracle (interpret=True)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_pallas_paper_example(variant):
+    rng = np.random.default_rng(7)
+    wl, wu, x, b = _params(rng, 4, 4, 4, 5)
+    got = dyad_matmul_pallas(x, wl, wu, b, variant=variant)
+    want = dyad_ref(x, wl, wu, b, variant=REF_VARIANT[variant])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_dyad=st.sampled_from([1, 2, 4]),
+    n_in=st.integers(1, 8),
+    n_out=st.integers(1, 8),
+    nb=st.integers(1, 5),
+    variant=st.sampled_from(VARIANTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_vs_ref_hypothesis(n_dyad, n_in, n_out, nb, variant, seed):
+    rng = np.random.default_rng(seed)
+    wl, wu, x, b = _params(rng, n_dyad, n_in, n_out, nb)
+    got = dyad_matmul_pallas(x, wl, wu, b, variant=variant)
+    want = dyad_ref(x, wl, wu, b, variant=REF_VARIANT[variant])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 5e-2)])
+def test_pallas_dtypes(dtype, tol):
+    rng = np.random.default_rng(8)
+    wl, wu, x, b = _params(rng, 4, 4, 4, 4, dtype=np.float32)
+    wl, wu, x, b = (a.astype(dtype) for a in (wl, wu, x, b))
+    got = dyad_matmul_pallas(x, wl, wu, b, variant="it").astype(jnp.float32)
+    want = dyad_ref(
+        x.astype(jnp.float32),
+        wl.astype(jnp.float32),
+        wu.astype(jnp.float32),
+        b.astype(jnp.float32),
+        variant="it",
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_pallas_dense_baseline():
+    rng = np.random.default_rng(9)
+    w = _rand(rng, (8, 6))
+    x = _rand(rng, (6, 5))
+    b = _rand(rng, (8, 1))
+    got = dense_matmul_pallas(x, w, b, row_tile=4)
+    want = dense_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_pallas_matches_jnp_exactly_it():
+    """Pallas and einsum paths should agree to float32 round-off."""
+    rng = np.random.default_rng(10)
+    wl, wu, x, b = _params(rng, 4, 8, 8, 16)
+    a = np.asarray(dyad_matmul(x, wl, wu, b, variant="it"))
+    c = np.asarray(dyad_matmul_pallas(x, wl, wu, b, variant="it"))
+    np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Gradients + jit of the efficient forms
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_dyad_grads_match_ref(variant):
+    """d/dW of the efficient form == d/dW of the materialised oracle."""
+    rng = np.random.default_rng(11)
+    wl, wu, x, b = _params(rng, 2, 3, 4, 5)
+
+    def loss_eff(wl, wu):
+        return jnp.sum(dyad_matmul(x, wl, wu, b, variant=variant) ** 2)
+
+    def loss_ref(wl, wu):
+        return jnp.sum(dyad_ref(x, wl, wu, b, variant=REF_VARIANT[variant]) ** 2)
+
+    ge = jax.grad(loss_eff, argnums=(0, 1))(wl, wu)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(wl, wu)
+    for a, b_ in zip(ge, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-4)
+
+
+def test_param_shapes_and_divisibility():
+    s = dyad_param_shapes(4, 768, 3072)
+    assert s["wl"] == (4, 768, 192)
+    assert s["wu"] == (4, 768, 192)
+    assert abs(s["init_bound"] - 768**-0.5) < 1e-12
+    with pytest.raises(ValueError):
+        dyad_param_shapes(5, 768, 3072)
+
+
+def test_param_reduction_factor():
+    """DYAD stores 2/n_dyad of the dense weight count (paper §2.2.1)."""
+    for n_dyad in (2, 4, 8):
+        s = dyad_param_shapes(n_dyad, 512, 2048)
+        dyad_params = 2 * np.prod(s["wl"])
+        dense_params = 512 * 2048
+        assert dyad_params * n_dyad == 2 * dense_params

@@ -1,0 +1,241 @@
+"""L2 correctness: model shapes, training dynamics, scoring semantics,
+dense-vs-dyad structural parity."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import configs, model, mnist
+from compile.configs import ArchConfig, VARIANTS
+
+TINY = ArchConfig("tiny", vocab=64, d_model=32, d_ff=64, n_layers=2,
+                  n_heads=4, seq=16)
+TINY_PAR = ArchConfig("tiny-par", vocab=64, d_model=32, d_ff=64, n_layers=2,
+                      n_heads=4, seq=16, parallel_residual=True)
+
+
+def _toks(rng, b, s, vocab=64):
+    return jnp.asarray(rng.integers(1, vocab, size=(b, s)), dtype=jnp.int32)
+
+
+@pytest.mark.parametrize("vname", ["dense", "dyad_it", "dyad_ot", "dyad_dt",
+                                   "dyad_it_8"])
+@pytest.mark.parametrize("arch", [TINY, TINY_PAR])
+def test_forward_shapes(arch, vname):
+    var = VARIANTS[vname]
+    params = model.init_params(arch, var, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = _toks(rng, 3, arch.seq)
+    logits = model.logits_fn(params, toks, arch, var)
+    assert logits.shape == (3, arch.seq, arch.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_param_count_reduction():
+    """DYAD model must have fewer parameters than DENSE; ff params drop
+    by 2/n_dyad (paper Table 11 / 'Non-Embedding Parameters')."""
+    dense_n = sum(
+        int(np.prod(s)) for _, s, _ in model.param_specs(TINY, VARIANTS["dense"])
+    )
+    dyad_n = sum(
+        int(np.prod(s)) for _, s, _ in model.param_specs(TINY, VARIANTS["dyad_it"])
+    )
+    dyad8_n = sum(
+        int(np.prod(s)) for _, s, _ in model.param_specs(TINY, VARIANTS["dyad_it_8"])
+    )
+    assert dyad_n < dense_n
+    assert dyad8_n < dyad_n
+    # exact accounting: each ff matmul w (f_out*f_in) -> 2*f_out*f_in/n_dyad
+    ff_w_dense = 2 * TINY.n_layers * TINY.d_model * TINY.d_ff
+    expected_drop = ff_w_dense - 2 * ff_w_dense // 4
+    assert dense_n - dyad_n == expected_drop
+
+
+def test_causality():
+    """Changing a future token must not affect past logits."""
+    var = VARIANTS["dyad_it"]
+    params = model.init_params(TINY, var, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    toks = _toks(rng, 1, TINY.seq)
+    l1 = model.logits_fn(params, toks, TINY, var)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % 63 + 1)
+    l2 = model.logits_fn(params, toks2, TINY, var)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), rtol=1e-5, atol=1e-6
+    )
+    assert not np.allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]))
+
+
+@pytest.mark.parametrize("vname", ["dense", "dyad_it"])
+def test_train_step_decreases_loss(vname):
+    """A few steps on a repeated batch must overfit (loss strictly drops)."""
+    var = VARIANTS[vname]
+    params = model.init_params(TINY, var, jax.random.PRNGKey(2))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step_fn = jax.jit(model.make_train_step(TINY, var, 4, 2))
+    rng = np.random.default_rng(2)
+    toks = _toks(rng, 2, TINY.seq)
+    tokens = jnp.broadcast_to(toks, (4, 2, TINY.seq))
+    step = jnp.float32(0.0)
+    first = last = None
+    for it in range(3):
+        out = step_fn(*params, *m, *v, step, jnp.float32(1e-3), tokens)
+        n = len(params)
+        params, m, v = list(out[:n]), list(out[n:2*n]), list(out[2*n:3*n])
+        step, losses = out[3 * n], out[3 * n + 1]
+        if first is None:
+            first = float(losses[0])
+        last = float(losses[-1])
+    assert last < first - 0.05, (first, last)
+    assert float(step) == 12.0
+
+
+def test_score_semantics():
+    """score must equal a hand-rolled log-softmax walk, and masking must
+    exclude positions."""
+    var = VARIANTS["dense"]
+    params = model.init_params(TINY, var, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    toks = _toks(rng, 2, TINY.seq)
+    mask = jnp.ones((2, TINY.seq), jnp.float32)
+    score = model.make_score(TINY, var)
+    s, n = score(*params, toks, mask)
+    assert s.shape == (2,) and n.shape == (2,)
+    assert float(n[0]) == TINY.seq - 1
+    logits = model.logits_fn(params, toks, TINY, var)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    want = sum(
+        float(logp[0, t, int(toks[0, t + 1])]) for t in range(TINY.seq - 1)
+    )
+    assert abs(float(s[0]) - want) < 1e-3
+    # masking out the second half must change the sum and the count
+    mask2 = mask.at[:, TINY.seq // 2 :].set(0.0)
+    s2, n2 = score(*params, toks, mask2)
+    assert float(n2[0]) == TINY.seq // 2 - 1
+    assert float(s2[0]) > float(s[0])  # fewer (negative) terms
+
+
+def test_features_masked_pooling():
+    var = VARIANTS["dyad_it"]
+    params = model.init_params(TINY, var, jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    toks = _toks(rng, 2, TINY.seq)
+    feat = model.make_features(TINY, var)
+    mask = jnp.ones((2, TINY.seq), jnp.float32)
+    f_full = feat(*params, toks, mask)
+    assert f_full.shape == (2, TINY.d_model)
+    # pooling over only the first token == that token's hidden state
+    mask1 = jnp.zeros_like(mask).at[:, 0].set(1.0)
+    f1 = feat(*params, toks, mask1)
+    h = model.hidden_states(params, toks, TINY, var)
+    np.testing.assert_allclose(
+        np.asarray(f1), np.asarray(h[:, 0, :]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_next_logits_matches_position():
+    var = VARIANTS["dense"]
+    params = model.init_params(TINY, var, jax.random.PRNGKey(5))
+    rng = np.random.default_rng(5)
+    toks = _toks(rng, 2, TINY.seq)
+    nl = model.make_next_logits(TINY, var)
+    lengths = jnp.asarray([4, TINY.seq], jnp.int32)
+    out = nl(*params, toks, lengths)
+    logits = model.logits_fn(params, toks, TINY, var)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(logits[0, 3]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]),
+                               np.asarray(logits[1, TINY.seq - 1]), rtol=1e-5)
+
+
+def test_ff_micro_matches_model_ff():
+    """The ff-micro artifact fns must compute the same ff module used
+    inside the transformer."""
+    var = VARIANTS["dyad_it"]
+    d, ff, t = 32, 64, 8
+    specs = model.ff_param_specs(d, ff, var)
+    rng = np.random.default_rng(6)
+    params = [jnp.asarray(rng.standard_normal(s) * 0.05, jnp.float32)
+              for _, s, _ in specs]
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    (y,) = model.make_ff_fwd(d, ff, var)(*params, x)
+    # ff_module uses f"{prefix}.fc1" names; replicate with prefix ""
+    p2 = {"." + n: a for (n, _, _), a in zip(specs, params)}
+    want = model.ff_module(p2, "", x, var)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_ff_fwdbwd_grad_check():
+    """ff_fwdbwd grads vs numerical finite differences on one weight."""
+    var = VARIANTS["dyad_it"]
+    d, ff, t = 16, 32, 4
+    specs = model.ff_param_specs(d, ff, var)
+    rng = np.random.default_rng(7)
+    params = [jnp.asarray(rng.standard_normal(s) * 0.1, jnp.float32)
+              for _, s, _ in specs]
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    ct = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    fb = model.make_ff_fwdbwd(d, ff, var)
+    out = fb(*params, x, ct)
+    loss, grads = out[0], out[1:]
+    eps = 1e-3
+    p0 = params[0]
+    bumped = params.copy()
+    bumped[0] = p0.at[0, 0, 0].add(eps)
+    loss_b = fb(*bumped, x, ct)[0]
+    fd = (float(loss_b) - float(loss)) / eps
+    assert abs(fd - float(grads[0][0, 0, 0])) < 5e-2 * max(1.0, abs(fd))
+
+
+@pytest.mark.parametrize("vname", ["dense", "dyad_it"])
+def test_mnist_train_and_accuracy(vname):
+    var = VARIANTS[vname]
+    specs = mnist.mnist_param_specs(var)
+    key = jax.random.PRNGKey(8)
+    params = []
+    for _, s, init in specs:
+        key, sub = jax.random.split(key)
+        if init["kind"] == "uniform":
+            params.append(jax.random.uniform(sub, s, jnp.float32,
+                                             -init["bound"], init["bound"]))
+        else:
+            params.append(jnp.zeros(s, jnp.float32))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(8)
+    B, K = 16, 2
+    # two linearly separable blobs -> must be learnable fast
+    x = np.zeros((K, B, 784), np.float32)
+    y = np.zeros((K, B), np.int32)
+    for k in range(K):
+        for i in range(B):
+            cls = i % 2
+            y[k, i] = cls
+            x[k, i] = rng.normal(loc=2.0 * cls - 1.0, scale=0.3, size=784)
+    step_fn = jax.jit(mnist.make_mnist_train_step(var, K, B))
+    step = jnp.float32(0)
+    losses0 = None
+    for it in range(10):
+        out = step_fn(*params, *m, *v, step, jnp.float32(1e-3),
+                      jnp.asarray(x), jnp.asarray(y))
+        n = len(params)
+        params, m, v = list(out[:n]), list(out[n:2*n]), list(out[2*n:3*n])
+        step, losses = out[3 * n], out[3 * n + 1]
+        if losses0 is None:
+            losses0 = float(losses[0])
+    assert float(losses[-1]) < losses0
+    acc_fn = mnist.make_mnist_accuracy(var, B)
+    (correct,) = acc_fn(*params, jnp.asarray(x[0]), jnp.asarray(y[0]))
+    assert int(correct) >= B * 3 // 4
+
+
+def test_param_specs_deterministic_order():
+    """The manifest contract: spec order must be stable across calls."""
+    a = [n for n, _, _ in model.param_specs(TINY, VARIANTS["dyad_it"])]
+    b = [n for n, _, _ in model.param_specs(TINY, VARIANTS["dyad_it"])]
+    assert a == b
+    assert a[0] == "tok_emb" and a[-1] == "final_ln.bias"
+    assert len(a) == len(set(a)), "duplicate param names"

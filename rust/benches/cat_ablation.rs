@@ -1,0 +1,28 @@
+//! Paper §3.4.3 (*-CAT experiments): DYAD-IT vs DYAD-IT-CAT ff time.
+//! The -CAT fusion concatenates BLOCKDIAG and BLOCKTRANS into a single
+//! batched matmul, removing the sequential two-component overhead.
+//!
+//! Paper reference: OPT-125m ff fwd 3.90 -> 3.27 ms (~16% faster);
+//! OPT-350m 7.92 -> 5.46 ms (~45%). Expect IT-CAT <= IT here, with the
+//! gap growing at the wider geometry.
+
+use dyad_repro::bench_support::{ff_table, print_ff_table, BenchOpts};
+use dyad_repro::runtime::Engine;
+
+fn main() {
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let opts = BenchOpts { warmup: 2, reps: 8, seed: 4 };
+    for geo in ["opt125m-ff", "opt350m-ff"] {
+        let rows = ff_table(&engine, geo, &["dense", "dyad_it", "dyad_it_cat"], opts)
+            .expect("bench");
+        print_ff_table(&format!("§3.4.3 -CAT ablation, {geo}"), &rows);
+        let it = rows.iter().find(|r| r.variant == "dyad_it").unwrap();
+        let cat = rows.iter().find(|r| r.variant == "dyad_it_cat").unwrap();
+        println!(
+            "CAT vs plain IT at {geo}: fwd {:.3} -> {:.3} ms ({:+.1}%)",
+            it.fwd_ms,
+            cat.fwd_ms,
+            100.0 * (cat.fwd_ms - it.fwd_ms) / it.fwd_ms
+        );
+    }
+}

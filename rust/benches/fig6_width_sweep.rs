@@ -1,0 +1,47 @@
+//! Paper Figure 6: DYAD vs DENSE speedup at growing model width
+//! (6-layer-capped OPT-like in the paper; ff geometry d -> 4d here).
+//! Paper sweeps to 4096; we cap at 2048 for 1-core bench time and
+//! document the truncation in EXPERIMENTS.md.
+
+use dyad_repro::bench_support::{ff_timing, BenchOpts};
+use dyad_repro::runtime::Engine;
+use dyad_repro::util::json::{num, obj, s};
+
+fn main() {
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let opts = BenchOpts { warmup: 2, reps: 5, seed: 5 };
+    println!("== Figure 6: speedup vs width (ff module, 128 tokens) ==");
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>9} {:>9}",
+        "width", "dense(ms)", "dyad4(ms)", "dyad8(ms)", "x4", "x8"
+    );
+    let mut last4 = 0.0;
+    for width in [256usize, 512, 1024, 2048] {
+        let geo = format!("width{width}");
+        let dense = ff_timing(&engine, &geo, "dense", opts).expect("bench");
+        let d4 = ff_timing(&engine, &geo, "dyad_it", opts).expect("bench");
+        let d8 = ff_timing(&engine, &geo, "dyad_it_8", opts).expect("bench");
+        let (x4, x8) = (dense.total_ms / d4.total_ms, dense.total_ms / d8.total_ms);
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>12.3} {:>9.2} {:>9.2}",
+            width, dense.total_ms, d4.total_ms, d8.total_ms, x4, x8
+        );
+        println!(
+            "{}",
+            obj(vec![
+                ("figure", s("fig6")),
+                ("width", num(width as f64)),
+                ("dense_ms", num(dense.total_ms)),
+                ("dyad4_ms", num(d4.total_ms)),
+                ("dyad8_ms", num(d8.total_ms)),
+                ("speedup4", num(x4)),
+                ("speedup8", num(x8)),
+            ])
+            .to_string()
+        );
+        last4 = x4;
+    }
+    println!(
+        "\npaper shape: speedup should grow with width (final x4 = {last4:.2})"
+    );
+}

@@ -1,0 +1,41 @@
+//! Paper Figure 7: ff-module fwd/bwd/total bars for OPT-125m and
+//! OPT-350m geometries (ASCII rendition of the paper's bar chart;
+//! same data as Tables 1/10 but grouped per pass).
+
+use dyad_repro::bench_support::{ff_table, BenchOpts, FfTiming};
+use dyad_repro::runtime::Engine;
+
+fn bar(ms: f64, scale: f64) -> String {
+    let n = ((ms / scale) * 40.0).round() as usize;
+    "#".repeat(n.clamp(1, 60))
+}
+
+fn render(title: &str, rows: &[FfTiming]) {
+    println!("\n== Figure 7 panel: {title} ==");
+    let max = rows
+        .iter()
+        .map(|r| r.total_ms)
+        .fold(f64::MIN, f64::max);
+    for r in rows {
+        println!("{:<12} fwd  {:>9.2} ms |{}", r.variant, r.fwd_ms, bar(r.fwd_ms, max));
+        println!("{:<12} bwd  {:>9.2} ms |{}", "", r.bwd_ms, bar(r.bwd_ms, max));
+        println!("{:<12} tot  {:>9.2} ms |{}", "", r.total_ms, bar(r.total_ms, max));
+    }
+}
+
+fn main() {
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let opts = BenchOpts { warmup: 2, reps: 6, seed: 8 };
+    let variants = ["dense", "dyad_it", "dyad_it_8"];
+    let r125 = ff_table(&engine, "opt125m-ff", &variants, opts).expect("bench");
+    render("OPT-125m ff (768->3072, 512 tokens)", &r125);
+    let r350 = ff_table(&engine, "opt350m-ff", &variants, opts).expect("bench");
+    render("OPT-350m ff (1024->4096, 256 tokens)", &r350);
+    // paper shape: dyad bars shorter than dense, gap wider at 350m
+    let s125 = r125[0].total_ms / r125[1].total_ms;
+    let s350 = r350[0].total_ms / r350[1].total_ms;
+    println!(
+        "\nIT speedup: {s125:.2}x @125m-geometry vs {s350:.2}x @350m-geometry \
+         (paper: larger geometry => larger speedup)"
+    );
+}

@@ -1,0 +1,49 @@
+//! Paper Figure 8: memory/parameter footprint bars for the OPT-125m-
+//! and OPT-350m-class presets (opt-mini / opt-mid): non-embedding
+//! params, checkpoint size and training-state bytes per variant.
+
+use dyad_repro::coordinator::checkpoint::CheckpointManager;
+use dyad_repro::runtime::{Engine, TrainState};
+
+fn bar(v: f64, max: f64) -> String {
+    "#".repeat(((v / max) * 40.0).round().max(1.0) as usize)
+}
+
+fn main() {
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    for (arch, variants) in [
+        ("opt-mini", vec!["dense", "dyad_it", "dyad_it_8"]),
+        ("opt-mid", vec!["dense", "dyad_it"]),
+    ] {
+        println!("\n== Figure 8 panel: {arch} ==");
+        let mut rows = Vec::new();
+        for v in &variants {
+            let spec = engine
+                .manifest
+                .artifact(&format!("{arch}/{v}/train_k1"))
+                .expect("artifact")
+                .clone();
+            let state = TrainState::init(&spec, 0).expect("init");
+            let dir = std::env::temp_dir().join(format!("dyad-fig8-{arch}-{v}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            let ckpt = CheckpointManager::new(&dir)
+                .save_params(&spec, &state)
+                .expect("save");
+            // non-embedding params (paper's metric): total minus tok+pos
+            let emb: usize = spec
+                .param_specs()
+                .iter()
+                .filter(|p| p.name.contains("emb"))
+                .map(|p| p.numel())
+                .sum();
+            let non_emb = spec.param_count() - emb;
+            rows.push((v.to_string(), non_emb as f64, ckpt as f64));
+        }
+        let pmax = rows.iter().map(|r| r.1).fold(f64::MIN, f64::max);
+        let cmax = rows.iter().map(|r| r.2).fold(f64::MIN, f64::max);
+        for (v, p, c) in &rows {
+            println!("{v:<12} non-emb params {:>9.2}M |{}", p / 1e6, bar(*p, pmax));
+            println!("{:<12} ckpt size      {:>9.2}MB |{}", "", c / 1e6, bar(*c, cmax));
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Paper Table 10: ff time per minibatch, OPT-350m geometry (1024 →
+//! 4096) — the "speedup grows with scale" row.
+//!
+//! Paper reference (ms): DENSE 2.55/4.97/7.52; DYAD-IT-4 5.49 (1.37x);
+//! DYAD-IT-8 4.14 (1.82x).
+
+use dyad_repro::bench_support::{ff_table, print_ff_table, BenchOpts};
+use dyad_repro::runtime::Engine;
+
+fn main() {
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let opts = BenchOpts { warmup: 2, reps: 8, seed: 3 };
+    let rows = ff_table(
+        &engine,
+        "opt350m-ff",
+        &["dense", "dyad_it", "dyad_it_8"],
+        opts,
+    )
+    .expect("bench");
+    print_ff_table(
+        "Table 10: ff time per minibatch, OPT-350m geometry (256 tokens)",
+        &rows,
+    );
+}

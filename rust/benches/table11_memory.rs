@@ -1,0 +1,64 @@
+//! Paper Table 11: memory & parameter footprint across variants —
+//! checkpoint size on disk (measured: DYT params file), parameter
+//! count (manifest), and training-state footprint (params + Adam m/v
+//! bytes; the analytic stand-in for "In-Train GPU Use", DESIGN.md §6).
+//!
+//! Paper reference (OPT-125m): DENSE 478 MB / 86.63 M params;
+//! DYAD-*-4 370 MB / 58.32 M; DYAD-IT-8 316 MB / 44.16 M; GPU-mem
+//! drop 1.7% (n=4) / 3.0% (n=8).
+
+use dyad_repro::coordinator::checkpoint::CheckpointManager;
+use dyad_repro::runtime::{Engine, TrainState};
+use dyad_repro::util::json::{num, obj, s};
+
+fn main() {
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let arch = "opt-mini";
+    let variants = ["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8"];
+    println!("\n== Table 11: memory & parameter footprint, {arch} ==");
+    println!(
+        "{:<12} {:>16} {:>12} {:>18} {:>16}",
+        "Model", "Ckpt size (KB)", "# Params", "Train state (KB)", "% drop vs dense"
+    );
+    let mut dense_state = f64::NAN;
+    for v in variants {
+        let name = format!("{arch}/{v}/train_k1");
+        let spec = engine.manifest.artifact(&name).expect("artifact").clone();
+        let state = TrainState::init(&spec, 0).expect("init");
+        let dir = std::env::temp_dir().join(format!("dyad-table11-{v}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mgr = CheckpointManager::new(&dir);
+        let ckpt_bytes = mgr.save_params(&spec, &state).expect("save params");
+        let params = spec.param_count();
+        // params + m + v, fp32 — the training-resident state
+        let state_bytes = 3 * params * 4;
+        if v == "dense" {
+            dense_state = state_bytes as f64;
+        }
+        let drop = 100.0 * (1.0 - state_bytes as f64 / dense_state);
+        println!(
+            "{:<12} {:>16.1} {:>12} {:>18.1} {:>16.2}",
+            v,
+            ckpt_bytes as f64 / 1024.0,
+            params,
+            state_bytes as f64 / 1024.0,
+            drop
+        );
+        println!(
+            "{}",
+            obj(vec![
+                ("table", s("table11")),
+                ("variant", s(v)),
+                ("ckpt_bytes", num(ckpt_bytes as f64)),
+                ("params", num(params as f64)),
+                ("train_state_bytes", num(state_bytes as f64)),
+                ("drop_vs_dense_pct", num(drop)),
+            ])
+            .to_string()
+        );
+    }
+    println!(
+        "\npaper shape: ckpt and params shrink by the ff-weight fraction \
+         (2/n_dyad of dense ff weights); n=8 < n=4 < dense."
+    );
+}

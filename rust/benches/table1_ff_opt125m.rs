@@ -1,0 +1,27 @@
+//! Paper Table 1: mean time per minibatch of the OPT-125m ff modules —
+//! forward, backward, total, and speedup vs DENSE — for DYAD-IT/OT/DT
+//! and DYAD-IT-8, at the paper's true geometry (768 → 3072).
+//!
+//! Paper reference (V100, ms): DENSE 1.46/2.84/4.30; DYAD-IT total
+//! 3.90 (1.10x); DYAD-OT 3.84 (1.12x); DYAD-DT 4.00 (1.07x);
+//! DYAD-IT-8 2.61 (1.65x). Expect the same ordering/shape on CPU with
+//! larger absolute numbers (EXPERIMENTS.md).
+
+use dyad_repro::bench_support::{ff_table, print_ff_table, BenchOpts};
+use dyad_repro::runtime::Engine;
+
+fn main() {
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let opts = BenchOpts { warmup: 2, reps: 8, seed: 1 };
+    let rows = ff_table(
+        &engine,
+        "opt125m-ff",
+        &["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8"],
+        opts,
+    )
+    .expect("bench");
+    print_ff_table(
+        "Table 1: ff time per minibatch, OPT-125m geometry (512 tokens)",
+        &rows,
+    );
+}

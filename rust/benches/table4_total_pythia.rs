@@ -1,0 +1,59 @@
+//! Paper Table 4: mean time per minibatch by ALL modules of Pythia
+//! training (fwd / bwd / total / speedup).
+//!
+//! Decomposition on this stack: "forward" = the eval_loss artifact
+//! (pure forward at the same batch geometry), "total" = one train_k1
+//! call (fwd + bwd + Adam), "backward" = total - forward. The Adam
+//! update is charged to the backward column, as the paper's per-module
+//! timers also swallow optimizer time in the training step.
+//!
+//! Paper reference (Pythia-160m, ms): DENSE 101.9/220.2/332.6;
+//! DYAD-IT 310.6 (1.07x).
+
+use dyad_repro::bench_support::{bench_artifact, BenchOpts};
+use dyad_repro::runtime::Engine;
+use dyad_repro::util::json::{num, obj, s};
+
+fn main() {
+    run("pythia-mini", &["dense", "dyad_it", "dyad_it_8"],
+        "Table 4: whole-model time per minibatch, pythia-mini");
+}
+
+pub fn run(arch: &str, variants: &[&str], title: &str) {
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let opts = BenchOpts { warmup: 1, reps: 5, seed: 6 };
+    println!("\n== {title} ==");
+    println!(
+        "{:<12} {:>12} {:>13} {:>10} {:>20}",
+        "Model", "Forward(ms)", "Backward(ms)", "Total(ms)", "Total speedup ratio"
+    );
+    let mut dense_total = f64::NAN;
+    for v in variants {
+        let fwd = bench_artifact(&engine, &format!("{arch}/{v}/eval_loss"), opts)
+            .expect("fwd bench");
+        let total = bench_artifact(&engine, &format!("{arch}/{v}/train_k1"), opts)
+            .expect("train bench");
+        if *v == "dense" {
+            dense_total = total.mean;
+        }
+        let bwd = (total.mean - fwd.mean).max(0.0);
+        let speedup = dense_total / total.mean;
+        println!(
+            "{:<12} {:>12.1} {:>13.1} {:>10.1} {:>20.3}",
+            v, fwd.mean, bwd, total.mean, speedup
+        );
+        println!(
+            "{}",
+            obj(vec![
+                ("table", s(title)),
+                ("arch", s(arch)),
+                ("variant", s(v)),
+                ("fwd_ms", num(fwd.mean)),
+                ("bwd_ms", num(bwd)),
+                ("total_ms", num(total.mean)),
+                ("speedup", num(speedup)),
+            ])
+            .to_string()
+        );
+    }
+}

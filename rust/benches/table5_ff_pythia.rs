@@ -1,0 +1,23 @@
+//! Paper Table 5: ff time per minibatch, Pythia-160m geometry.
+//!
+//! Paper reference (ms): DENSE 1.41/2.83/4.24; DYAD-IT 3.95 (1.07x);
+//! DYAD-IT-8 2.64 (1.61x).
+
+use dyad_repro::bench_support::{ff_table, print_ff_table, BenchOpts};
+use dyad_repro::runtime::Engine;
+
+fn main() {
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let opts = BenchOpts { warmup: 2, reps: 8, seed: 2 };
+    let rows = ff_table(
+        &engine,
+        "pythia160m-ff",
+        &["dense", "dyad_it", "dyad_it_8"],
+        opts,
+    )
+    .expect("bench");
+    print_ff_table(
+        "Table 5: ff time per minibatch, Pythia-160m geometry (512 tokens)",
+        &rows,
+    );
+}

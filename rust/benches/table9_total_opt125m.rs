@@ -1,0 +1,51 @@
+//! Paper Table 9: whole-model time per minibatch, OPT-125m-class arch
+//! (opt-mini preset), all DYAD variants vs DENSE.
+//!
+//! Paper reference (ms): DENSE 315.6; DYAD-IT-4 292.7 (1.078x);
+//! DYAD-OT-4 291.2 (1.084x); DYAD-DT-4 294.4 (1.072x);
+//! DYAD-IT-8 273.3 (1.155x). See table4_total_pythia.rs for the
+//! fwd/bwd decomposition convention.
+
+use dyad_repro::bench_support::{bench_artifact, BenchOpts};
+use dyad_repro::runtime::Engine;
+use dyad_repro::util::json::{num, obj, s};
+
+fn main() {
+    let arch = "opt-mini";
+    let variants = ["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8"];
+    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let opts = BenchOpts { warmup: 1, reps: 5, seed: 7 };
+    println!("\n== Table 9: whole-model time per minibatch, {arch} ==");
+    println!(
+        "{:<12} {:>12} {:>13} {:>10} {:>20}",
+        "Model", "Forward(ms)", "Backward(ms)", "Total(ms)", "Total speedup ratio"
+    );
+    let mut dense_total = f64::NAN;
+    for v in variants {
+        let fwd = bench_artifact(&engine, &format!("{arch}/{v}/eval_loss"), opts)
+            .expect("fwd bench");
+        let total = bench_artifact(&engine, &format!("{arch}/{v}/train_k1"), opts)
+            .expect("train bench");
+        if v == "dense" {
+            dense_total = total.mean;
+        }
+        let bwd = (total.mean - fwd.mean).max(0.0);
+        let speedup = dense_total / total.mean;
+        println!(
+            "{:<12} {:>12.1} {:>13.1} {:>10.1} {:>20.3}",
+            v, fwd.mean, bwd, total.mean, speedup
+        );
+        println!(
+            "{}",
+            obj(vec![
+                ("table", s("table9")),
+                ("variant", s(v)),
+                ("fwd_ms", num(fwd.mean)),
+                ("bwd_ms", num(bwd)),
+                ("total_ms", num(total.mean)),
+                ("speedup", num(speedup)),
+            ])
+            .to_string()
+        );
+    }
+}

@@ -1,0 +1,78 @@
+//! Generic artifact timing: synthesize valid inputs from the manifest,
+//! warm up (includes XLA compile), then measure repeated executions.
+
+use anyhow::Result;
+
+use crate::runtime::{tensor_to_literal, Engine, Role};
+use crate::tensor::{DType, InitSpec, Tensor};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub reps: usize,
+    pub seed: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup: 3, reps: 10, seed: 1234 }
+    }
+}
+
+/// Synthesize one valid input tensor for an IoSpec.
+pub fn synth_input(
+    spec: &crate::runtime::IoSpec,
+    rng: &mut Rng,
+) -> Tensor {
+    match (spec.role, spec.dtype) {
+        (Role::Param | Role::OptM | Role::OptV, _) => {
+            let init = spec.init.clone().unwrap_or(InitSpec::Uniform { bound: 0.05 });
+            Tensor::init(&spec.shape, &init, rng)
+        }
+        (Role::Scalar, DType::F32) => Tensor::scalar_f32(if spec.name == "lr" {
+            1e-3
+        } else {
+            0.0
+        }),
+        (Role::Scalar, DType::I32) => Tensor::scalar_i32(0),
+        (Role::Data, DType::F32) => {
+            let n: usize = spec.shape.iter().product();
+            let v = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            Tensor::from_f32(&spec.shape, v).unwrap()
+        }
+        (Role::Data, DType::I32) => {
+            // token-ish ids: small positive ints, safe for any vocab >= 64
+            let n: usize = spec.shape.iter().product();
+            let v = (0..n).map(|_| rng.range(3, 60) as i32).collect();
+            Tensor::from_i32(&spec.shape, v).unwrap()
+        }
+    }
+}
+
+/// Time one artifact end-to-end (literals pre-staged; measured region
+/// is the PJRT execute + output tuple fetch).
+pub fn bench_artifact(engine: &Engine, name: &str, opts: BenchOpts) -> Result<Summary> {
+    let art = engine.load(name)?;
+    let mut rng = Rng::new(opts.seed);
+    let lits: Vec<xla::Literal> = art
+        .spec
+        .inputs
+        .iter()
+        .map(|io| tensor_to_literal(&synth_input(io, &mut rng), io))
+        .collect::<Result<_>>()?;
+    // warmup (first call includes any lazy work)
+    for _ in 0..opts.warmup.max(1) {
+        let _ = art.run_literals(&lits)?;
+    }
+    let mut samples = Vec::with_capacity(opts.reps);
+    for _ in 0..opts.reps {
+        let t = Timer::start();
+        let out = art.run_literals(&lits)?;
+        std::hint::black_box(&out);
+        samples.push(t.elapsed_ms());
+    }
+    Ok(Summary::of(&samples))
+}

@@ -1,0 +1,83 @@
+//! Paper-table workloads: ff-module timing rows (Tables 1/5/10,
+//! Figures 6/7, the -CAT ablation) in the paper's exact row format.
+
+use anyhow::Result;
+
+use super::harness::{bench_artifact, BenchOpts};
+use crate::runtime::Engine;
+use crate::util::json::{num, obj, s};
+
+/// One row of a paper timing table.
+#[derive(Debug, Clone)]
+pub struct FfTiming {
+    pub variant: String,
+    pub fwd_ms: f64,
+    pub bwd_ms: f64,
+    pub total_ms: f64,
+}
+
+/// Time the ff module of `geometry` under `variant`: forward from the
+/// `fwd` artifact, total from `fwdbwd`, backward = total - forward
+/// (the paper reports all three).
+pub fn ff_timing(
+    engine: &Engine,
+    geometry: &str,
+    variant: &str,
+    opts: BenchOpts,
+) -> Result<FfTiming> {
+    let fwd = bench_artifact(engine, &format!("ff/{geometry}/{variant}/fwd"), opts)?;
+    let fb = bench_artifact(engine, &format!("ff/{geometry}/{variant}/fwdbwd"), opts)?;
+    let total = fb.mean;
+    Ok(FfTiming {
+        variant: variant.to_string(),
+        fwd_ms: fwd.mean,
+        bwd_ms: (total - fwd.mean).max(0.0),
+        total_ms: total,
+    })
+}
+
+/// Full table: every variant against the DENSE baseline.
+pub fn ff_table(
+    engine: &Engine,
+    geometry: &str,
+    variants: &[&str],
+    opts: BenchOpts,
+) -> Result<Vec<FfTiming>> {
+    variants
+        .iter()
+        .map(|v| ff_timing(engine, geometry, v, opts))
+        .collect()
+}
+
+/// Print in the paper's Table-1 format + one JSON line per row.
+pub fn print_ff_table(title: &str, rows: &[FfTiming]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<14} {:>12} {:>13} {:>10} {:>20}",
+        "Model", "Forward(ms)", "Backward(ms)", "Total(ms)", "Total speedup ratio"
+    );
+    let dense_total = rows
+        .iter()
+        .find(|r| r.variant == "dense")
+        .map(|r| r.total_ms)
+        .unwrap_or(f64::NAN);
+    for r in rows {
+        let speedup = dense_total / r.total_ms;
+        println!(
+            "{:<14} {:>12.3} {:>13.3} {:>10.3} {:>20.3}",
+            r.variant, r.fwd_ms, r.bwd_ms, r.total_ms, speedup
+        );
+        println!(
+            "{}",
+            obj(vec![
+                ("table", s(title)),
+                ("variant", s(&r.variant)),
+                ("fwd_ms", num(r.fwd_ms)),
+                ("bwd_ms", num(r.bwd_ms)),
+                ("total_ms", num(r.total_ms)),
+                ("speedup", num(speedup)),
+            ])
+            .to_string()
+        );
+    }
+}

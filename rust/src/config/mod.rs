@@ -1,0 +1,133 @@
+//! Run configuration: everything a pretraining/eval run needs, parsed
+//! from CLI flags (and round-trippable through JSON for run manifests).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+use crate::util::json::{num, obj, s, Json};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub arch: String,
+    pub variant: String,
+    /// Total optimizer steps (inner microbatch steps count individually).
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup_steps: usize,
+    /// Final LR as a fraction of peak (cosine floor).
+    pub min_lr_frac: f64,
+    pub seed: u64,
+    /// Synthetic corpus size in tokens (babyLM-10M ≈ scaled down).
+    pub corpus_tokens: usize,
+    pub valid_frac: f64,
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub out_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            arch: "opt-mini".into(),
+            variant: "dyad_it".into(),
+            steps: 300,
+            lr: 1e-3,
+            warmup_steps: 30,
+            min_lr_frac: 0.1,
+            seed: 42,
+            corpus_tokens: 200_000,
+            valid_frac: 0.02,
+            eval_every: 100,
+            log_every: 10,
+            out_dir: "runs/default".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_args(args: &Args) -> Result<TrainConfig> {
+        let d = TrainConfig::default();
+        Ok(TrainConfig {
+            arch: args.str_or("arch", &d.arch),
+            variant: args.str_or("variant", &d.variant),
+            steps: args.usize_or("steps", d.steps)?,
+            lr: args.f64_or("lr", d.lr)?,
+            warmup_steps: args.usize_or("warmup", d.warmup_steps)?,
+            min_lr_frac: args.f64_or("min-lr-frac", d.min_lr_frac)?,
+            seed: args.u64_or("seed", d.seed)?,
+            corpus_tokens: args.usize_or("corpus-tokens", d.corpus_tokens)?,
+            valid_frac: args.f64_or("valid-frac", d.valid_frac)?,
+            eval_every: args.usize_or("eval-every", d.eval_every)?,
+            log_every: args.usize_or("log-every", d.log_every)?,
+            out_dir: PathBuf::from(args.str_or("out", &d.out_dir.to_string_lossy())),
+            artifacts_dir: PathBuf::from(
+                args.str_or("artifacts", &d.artifacts_dir.to_string_lossy()),
+            ),
+        })
+    }
+
+    /// The manifest name of this run's train artifact.
+    pub fn train_artifact(&self, k: usize) -> String {
+        format!("{}/{}/train_k{}", self.arch, self.variant, k)
+    }
+
+    pub fn artifact(&self, kind: &str) -> String {
+        format!("{}/{}/{}", self.arch, self.variant, kind)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("arch", s(&self.arch)),
+            ("variant", s(&self.variant)),
+            ("steps", num(self.steps as f64)),
+            ("lr", num(self.lr)),
+            ("warmup_steps", num(self.warmup_steps as f64)),
+            ("min_lr_frac", num(self.min_lr_frac)),
+            ("seed", num(self.seed as f64)),
+            ("corpus_tokens", num(self.corpus_tokens as f64)),
+            ("valid_frac", num(self.valid_frac)),
+            ("eval_every", num(self.eval_every as f64)),
+            ("log_every", num(self.log_every as f64)),
+            ("out_dir", s(&self.out_dir.to_string_lossy())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_args_overrides_defaults() {
+        let args = Args::parse(
+            ["--arch", "pythia-mini", "--steps", "50", "--lr", "0.002"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::from_args(&args).unwrap();
+        assert_eq!(c.arch, "pythia-mini");
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.lr, 0.002);
+        assert_eq!(c.variant, "dyad_it"); // default kept
+    }
+
+    #[test]
+    fn artifact_names() {
+        let c = TrainConfig::default();
+        assert_eq!(c.train_artifact(8), "opt-mini/dyad_it/train_k8");
+        assert_eq!(c.artifact("score"), "opt-mini/dyad_it/score");
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let c = TrainConfig::default();
+        let j = c.to_json();
+        assert_eq!(j.get("arch").unwrap().as_str().unwrap(), "opt-mini");
+        assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), 300);
+    }
+}

@@ -1,0 +1,59 @@
+//! Checkpoint manager: full train-state and params-only exports.
+//!
+//! The params-only file is what Table 11's "Model Checkpoint Size"
+//! measures — DYAD's 3-D component tensors make it smaller than DENSE's
+//! at the same architecture.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ArtifactSpec, TrainState};
+use crate::tensor::{load_checkpoint, save_checkpoint};
+
+pub struct CheckpointManager {
+    dir: PathBuf,
+}
+
+impl CheckpointManager {
+    pub fn new(dir: &Path) -> CheckpointManager {
+        CheckpointManager { dir: dir.to_path_buf() }
+    }
+
+    pub fn latest_path(&self) -> PathBuf {
+        self.dir.join("state.dyt")
+    }
+
+    pub fn params_path(&self) -> PathBuf {
+        self.dir.join("model.dyt")
+    }
+
+    /// Save the full resumable state (params + Adam moments + step).
+    pub fn save_state(&self, spec: &ArtifactSpec, state: &TrainState) -> Result<u64> {
+        let entries = state.to_tensors(spec)?;
+        let refs: Vec<(String, &crate::tensor::Tensor)> =
+            entries.iter().map(|(n, t)| (n.clone(), t)).collect();
+        save_checkpoint(&self.latest_path(), &refs)?;
+        Ok(std::fs::metadata(self.latest_path())?.len())
+    }
+
+    /// Save params only; returns on-disk size in bytes (Table 11).
+    pub fn save_params(&self, spec: &ArtifactSpec, state: &TrainState) -> Result<u64> {
+        let entries = state.params_to_tensors(spec)?;
+        let refs: Vec<(String, &crate::tensor::Tensor)> =
+            entries.iter().map(|(n, t)| (n.clone(), t)).collect();
+        save_checkpoint(&self.params_path(), &refs)?;
+        Ok(std::fs::metadata(self.params_path())?.len())
+    }
+
+    /// Restore a full state saved by [`CheckpointManager::save_state`].
+    pub fn load_state(&self, spec: &ArtifactSpec) -> Result<TrainState> {
+        let entries = load_checkpoint(&self.latest_path())
+            .with_context(|| format!("load {}", self.latest_path().display()))?;
+        TrainState::from_tensors(spec, &entries)
+    }
+
+    pub fn has_state(&self) -> bool {
+        self.latest_path().exists()
+    }
+}

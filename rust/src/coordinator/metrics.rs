@@ -1,0 +1,72 @@
+//! Run metrics: stdout progress lines + JSONL event log.
+//!
+//! Every event is one JSON object per line in `<out_dir>/metrics.jsonl`
+//! — the loss curves in EXPERIMENTS.md are read straight from these.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub struct MetricsLogger {
+    file: Option<BufWriter<File>>,
+    pub quiet: bool,
+}
+
+impl MetricsLogger {
+    /// Log to `<dir>/metrics.jsonl` (created/truncated) and stdout.
+    pub fn to_dir(dir: &Path) -> Result<MetricsLogger> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(dir.join("metrics.jsonl"))?;
+        Ok(MetricsLogger { file: Some(BufWriter::new(file)), quiet: false })
+    }
+
+    /// Stdout-only logger (tests, ad-hoc runs).
+    pub fn stdout() -> MetricsLogger {
+        MetricsLogger { file: None, quiet: false }
+    }
+
+    pub fn event(&mut self, kind: &str, fields: Vec<(&str, Json)>) {
+        let mut kv = vec![("event".to_string(), Json::Str(kind.to_string()))];
+        kv.extend(fields.into_iter().map(|(k, v)| (k.to_string(), v)));
+        let line = Json::Obj(kv).to_string();
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{line}");
+            let _ = f.flush();
+        }
+        if !self.quiet {
+            println!("{line}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    #[test]
+    fn writes_jsonl() {
+        let dir = std::env::temp_dir().join("dyad-metrics-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut m = MetricsLogger::to_dir(&dir).unwrap();
+        m.quiet = true;
+        m.event("step", vec![("loss", num(3.5)), ("step", num(1.0))]);
+        m.event("eval", vec![("valid_loss", num(3.2))]);
+        drop(m);
+        let text = std::fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").unwrap().as_str().unwrap(), "step");
+        assert_eq!(first.get("loss").unwrap().as_f64().unwrap(), 3.5);
+    }
+}

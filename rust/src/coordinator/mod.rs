@@ -1,0 +1,15 @@
+//! Training coordinator: schedule, metrics, checkpoints, the loop.
+//!
+//! The L3 counterpart of the paper's pretraining setup: one binary
+//! drives corpus generation → tokenization → packed batching → PJRT
+//! train-step calls (K optimizer steps each) → periodic validation →
+//! checkpointing, entirely in rust.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::MetricsLogger;
+pub use schedule::LrSchedule;
+pub use trainer::{TrainReport, Trainer};

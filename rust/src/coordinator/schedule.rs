@@ -1,0 +1,60 @@
+//! Learning-rate schedule: linear warmup → cosine decay to a floor.
+//!
+//! Computed coordinator-side and fed to the train-step artifact as a
+//! scalar each call (the artifact applies it uniformly across its K
+//! inner microbatch steps).
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub peak: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_frac: f64,
+}
+
+impl LrSchedule {
+    pub fn new(peak: f64, warmup_steps: usize, total_steps: usize, min_frac: f64) -> Self {
+        LrSchedule { peak, warmup_steps, total_steps, min_frac }
+    }
+
+    pub fn at(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.peak * (step as f64 + 1.0) / self.warmup_steps as f64;
+        }
+        let decay_span = (self.total_steps.max(self.warmup_steps + 1)
+            - self.warmup_steps) as f64;
+        let t = ((step - self.warmup_steps) as f64 / decay_span).clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        let floor = self.peak * self.min_frac;
+        floor + (self.peak - floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_rises_linearly() {
+        let s = LrSchedule::new(1e-3, 10, 100, 0.1);
+        assert!((s.at(0) - 1e-4).abs() < 1e-12);
+        assert!((s.at(9) - 1e-3).abs() < 1e-12);
+        assert!(s.at(4) < s.at(5));
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule::new(1e-3, 10, 100, 0.1);
+        assert!((s.at(10) - 1e-3).abs() < 1e-6);
+        assert!(s.at(50) < s.at(20));
+        assert!((s.at(100) - 1e-4).abs() < 1e-9);
+        assert!((s.at(10_000) - 1e-4).abs() < 1e-9); // clamped past end
+    }
+
+    #[test]
+    fn no_warmup_edge_case() {
+        let s = LrSchedule::new(5e-4, 0, 10, 0.0);
+        assert!((s.at(0) - 5e-4).abs() < 1e-12);
+        assert!(s.at(10) < 1e-8);
+    }
+}

@@ -1,0 +1,212 @@
+//! The pretraining loop: nanoBabyLM corpus → packed batches → PJRT
+//! train-step calls → periodic validation → checkpoints.
+//!
+//! One `train_call` advances K optimizer steps (the artifact's inner
+//! `lax.scan`); the coordinator recomputes the LR schedule between
+//! calls, tracks loss/throughput and records everything as JSONL.
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::CheckpointManager;
+use super::metrics::MetricsLogger;
+use super::schedule::LrSchedule;
+use crate::config::TrainConfig;
+use crate::data::{Grammar, TokenDataset, Tokenizer};
+use crate::runtime::{Engine, TrainState};
+use crate::util::json::{num, s};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    /// Mean loss over the first / last 10% of microbatch losses.
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub valid_loss: f64,
+    pub losses: Vec<f32>,
+    pub ms_per_call: Summary,
+    pub tokens_seen: usize,
+    pub params: usize,
+    pub checkpoint_bytes: u64,
+}
+
+pub struct Trainer {
+    cfg: TrainConfig,
+    k_micro: usize,
+    batch: usize,
+    seq: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Trainer {
+        Trainer { cfg, k_micro: 0, batch: 0, seq: 0 }
+    }
+
+    /// Run the full pretraining loop. `engine` must be backed by the
+    /// artifact dir in `cfg.artifacts_dir`.
+    pub fn run(&mut self, engine: &Engine, log: &mut MetricsLogger) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        // Pick the K=8 artifact; fall back to K=1 if absent.
+        let art = engine
+            .load(&cfg.train_artifact(8))
+            .or_else(|_| engine.load(&cfg.train_artifact(1)))
+            .context("load train artifact")?;
+        let k = art.spec.meta_usize("k_micro")?;
+        let b = art.spec.meta_usize("batch")?;
+        let seq = art.spec.meta_usize("seq")?;
+        self.k_micro = k;
+        self.batch = b;
+        self.seq = seq;
+
+        // Data pipeline: grammar corpus -> tokenizer -> packed dataset.
+        let grammar = Grammar::new();
+        let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
+        let arch = engine.manifest.arch(&cfg.arch)?;
+        tokenizer.check_fits(arch.vocab)?;
+        let words = grammar.corpus(cfg.corpus_tokens, cfg.seed ^ 0xC0FFEE);
+        let mut stream = Vec::with_capacity(words.len() + words.len() / 8);
+        for w in &words {
+            stream.push(tokenizer.id(w));
+            if w == "." || w == "?" {
+                stream.push(crate::data::tokenizer::EOS);
+            }
+        }
+        let data = TokenDataset::from_stream(&stream, seq, cfg.valid_frac, cfg.seed)?;
+        log.event(
+            "setup",
+            vec![
+                ("arch", s(&cfg.arch)),
+                ("variant", s(&cfg.variant)),
+                ("vocab", num(tokenizer.vocab_size() as f64)),
+                ("train_sequences", num(data.n_train() as f64)),
+                ("valid_sequences", num(data.n_valid() as f64)),
+                ("k_micro", num(k as f64)),
+                ("batch", num(b as f64)),
+                ("seq", num(seq as f64)),
+                ("params", num(art.spec.param_count() as f64)),
+            ],
+        );
+
+        // Init or resume.
+        let ckpt = CheckpointManager::new(&cfg.out_dir);
+        let mut state = if ckpt.has_state() {
+            log.event("resume", vec![("from", s(&ckpt.latest_path().to_string_lossy()))]);
+            ckpt.load_state(&art.spec)?
+        } else {
+            TrainState::init(&art.spec, cfg.seed)?
+        };
+
+        let eval_art = engine.load(&cfg.artifact("eval_loss")).ok();
+        let schedule =
+            LrSchedule::new(cfg.lr, cfg.warmup_steps, cfg.steps, cfg.min_lr_frac);
+        let mut rng = Rng::new(cfg.seed ^ 0xBA7C4);
+        let n_calls = cfg.steps.div_ceil(k);
+        let mut all_losses: Vec<f32> = Vec::with_capacity(n_calls * k);
+        let mut call_ms: Vec<f64> = Vec::with_capacity(n_calls);
+        let mut valid_loss = f64::NAN;
+        let run_timer = Timer::start();
+
+        for call in 0..n_calls {
+            let step = state.step as usize;
+            let lr = schedule.at(step) as f32;
+            let tokens = data.train_batch(k, b, &mut rng);
+            let t = Timer::start();
+            let losses = state.train_call(&art, lr, &[tokens])?;
+            call_ms.push(t.elapsed_ms());
+            all_losses.extend_from_slice(&losses);
+
+            if (call + 1) % cfg.log_every.max(1) == 0 || call + 1 == n_calls {
+                let recent: f64 = losses.iter().map(|&x| x as f64).sum::<f64>()
+                    / losses.len() as f64;
+                log.event(
+                    "step",
+                    vec![
+                        ("step", num(state.step as f64)),
+                        ("loss", num(recent)),
+                        ("lr", num(lr as f64)),
+                        ("ms_per_call", num(*call_ms.last().unwrap())),
+                        (
+                            "tokens_per_s",
+                            num((k * b * seq) as f64
+                                / (call_ms.last().unwrap() / 1e3)),
+                        ),
+                    ],
+                );
+            }
+            if let Some(ev) = &eval_art {
+                let every = cfg.eval_every.max(1);
+                if (call + 1) % every.div_ceil(k).max(1) == 0 || call + 1 == n_calls {
+                    valid_loss = self.valid_loss(ev, &state, &data)?;
+                    log.event(
+                        "eval",
+                        vec![
+                            ("step", num(state.step as f64)),
+                            ("valid_loss", num(valid_loss)),
+                        ],
+                    );
+                }
+            }
+        }
+
+        let state_bytes = ckpt.save_state(&art.spec, &state)?;
+        let params_bytes = ckpt.save_params(&art.spec, &state)?;
+        let n = all_losses.len();
+        let head = &all_losses[..(n / 10).max(1)];
+        let tail = &all_losses[n - (n / 10).max(1)..];
+        let report = TrainReport {
+            steps: state.step as usize,
+            first_loss: head.iter().map(|&x| x as f64).sum::<f64>() / head.len() as f64,
+            final_loss: tail.iter().map(|&x| x as f64).sum::<f64>() / tail.len() as f64,
+            valid_loss,
+            losses: all_losses,
+            ms_per_call: Summary::of(&call_ms),
+            tokens_seen: n_calls * k * b * seq,
+            params: art.spec.param_count(),
+            checkpoint_bytes: params_bytes,
+        };
+        log.event(
+            "done",
+            vec![
+                ("steps", num(report.steps as f64)),
+                ("first_loss", num(report.first_loss)),
+                ("final_loss", num(report.final_loss)),
+                ("valid_loss", num(report.valid_loss)),
+                ("wall_s", num(run_timer.elapsed_s())),
+                ("ms_per_call_mean", num(report.ms_per_call.mean)),
+                ("tokens_seen", num(report.tokens_seen as f64)),
+                ("state_ckpt_bytes", num(state_bytes as f64)),
+                ("params_ckpt_bytes", num(params_bytes as f64)),
+            ],
+        );
+        Ok(report)
+    }
+
+    fn valid_loss(
+        &self,
+        eval_art: &crate::runtime::Loaded,
+        state: &TrainState,
+        data: &TokenDataset,
+    ) -> Result<f64> {
+        let b = eval_art.spec.meta_usize("batch")?;
+        let n_batches = (data.n_valid() / b).clamp(1, 4);
+        let mut total = 0.0;
+        for i in 0..n_batches {
+            let tokens = data.valid_batch(b, i * b);
+            let toks_spec = eval_art
+                .spec
+                .inputs
+                .iter()
+                .find(|io| io.name == "tokens")
+                .context("eval_loss artifact missing tokens input")?;
+            let tok_lit = crate::runtime::tensor_to_literal(&tokens, toks_spec)?;
+            let mut inputs: Vec<&xla::Literal> =
+                state.param_literals().iter().collect();
+            inputs.push(&tok_lit);
+            let out = eval_art.run_literals(&inputs)?;
+            total += out[0].to_vec::<f32>()?[0] as f64;
+        }
+        Ok(total / n_batches as f64)
+    }
+}

@@ -1,0 +1,174 @@
+//! Packed-token dataset + train/valid batching.
+//!
+//! Sentences are concatenated with `<eos>` separators into one token
+//! stream (babyLM-style packed LM pretraining), then sliced into
+//! fixed-length sequences. Batches come out shaped for the train-step
+//! artifact: `(K, B, S)` int32 — K microbatches per PJRT call.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TokenDataset {
+    /// Sequence-major storage: each row is one packed sequence of len S.
+    train: Vec<Vec<i32>>,
+    valid: Vec<Vec<i32>>,
+    pub seq: usize,
+}
+
+impl TokenDataset {
+    /// Pack a token stream into sequences of length `seq`, holding out
+    /// `valid_frac` of sequences for validation.
+    pub fn from_stream(tokens: &[i32], seq: usize, valid_frac: f64, seed: u64) -> Result<TokenDataset> {
+        if tokens.len() < 2 * seq {
+            bail!("stream of {} tokens too short for seq={seq}", tokens.len());
+        }
+        let mut seqs: Vec<Vec<i32>> = tokens
+            .chunks_exact(seq)
+            .map(|c| c.to_vec())
+            .collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut seqs);
+        let n_valid = ((seqs.len() as f64 * valid_frac) as usize).max(1);
+        if n_valid >= seqs.len() {
+            bail!("not enough sequences ({}) for valid_frac={valid_frac}", seqs.len());
+        }
+        let valid = seqs.split_off(seqs.len() - n_valid);
+        Ok(TokenDataset { train: seqs, valid, seq })
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train.len()
+    }
+
+    pub fn n_valid(&self) -> usize {
+        self.valid.len()
+    }
+
+    pub fn train_tokens(&self) -> usize {
+        self.train.len() * self.seq
+    }
+
+    /// Sample a `(K, B, S)` i32 tensor of training microbatches.
+    pub fn train_batch(&self, k: usize, b: usize, rng: &mut Rng) -> Tensor {
+        let mut data = Vec::with_capacity(k * b * self.seq);
+        for _ in 0..k * b {
+            let row = &self.train[rng.below(self.train.len())];
+            data.extend_from_slice(row);
+        }
+        Tensor::from_i32(&[k, b, self.seq], data).expect("batch shape")
+    }
+
+    /// Deterministic validation batch `(B, S)` starting at `offset`
+    /// sequences (wraps around).
+    pub fn valid_batch(&self, b: usize, offset: usize) -> Tensor {
+        let mut data = Vec::with_capacity(b * self.seq);
+        for i in 0..b {
+            let row = &self.valid[(offset + i) % self.valid.len()];
+            data.extend_from_slice(row);
+        }
+        Tensor::from_i32(&[b, self.seq], data).expect("batch shape")
+    }
+}
+
+/// Right-pad a batch of variable-length sequences to `(b, s)` plus the
+/// matching f32 mask — the shape the score/features artifacts take.
+/// Sequences longer than `s` are truncated from the left (keep the
+/// most recent context).
+pub fn pad_batch(seqs: &[Vec<i32>], b: usize, s: usize) -> Result<(Tensor, Tensor)> {
+    if seqs.len() > b {
+        bail!("{} sequences for batch of {b}", seqs.len());
+    }
+    let mut toks = vec![0i32; b * s];
+    let mut mask = vec![0.0f32; b * s];
+    for (i, seq) in seqs.iter().enumerate() {
+        let start = seq.len().saturating_sub(s);
+        let slice = &seq[start..];
+        for (j, &t) in slice.iter().enumerate() {
+            toks[i * s + j] = t;
+            mask[i * s + j] = 1.0;
+        }
+    }
+    Ok((
+        Tensor::from_i32(&[b, s], toks)?,
+        Tensor::from_f32(&[b, s], mask)?,
+    ))
+}
+
+/// Lengths vector `(b,)` for next_logits-style artifacts.
+pub fn lengths_of(seqs: &[Vec<i32>], b: usize, s: usize) -> Tensor {
+    let mut lens = vec![1i32; b];
+    for (i, seq) in seqs.iter().enumerate() {
+        lens[i] = seq.len().min(s).max(1) as i32;
+    }
+    Tensor::from_i32(&[b], lens).expect("length shape")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(n: usize) -> Vec<i32> {
+        (0..n as i32).collect()
+    }
+
+    #[test]
+    fn packs_and_splits() {
+        let ds = TokenDataset::from_stream(&stream(1000), 16, 0.1, 0).unwrap();
+        assert_eq!(ds.n_train() + ds.n_valid(), 62);
+        assert!(ds.n_valid() >= 6);
+        assert_eq!(ds.seq, 16);
+    }
+
+    #[test]
+    fn too_short_errors() {
+        assert!(TokenDataset::from_stream(&stream(10), 16, 0.1, 0).is_err());
+    }
+
+    #[test]
+    fn train_batch_shape_and_membership() {
+        let ds = TokenDataset::from_stream(&stream(2000), 8, 0.1, 1).unwrap();
+        let mut rng = Rng::new(2);
+        let b = ds.train_batch(4, 3, &mut rng);
+        assert_eq!(b.shape, vec![4, 3, 8]);
+        // every row must be a contiguous run of 8 consecutive ints
+        let v = b.as_i32().unwrap();
+        for row in v.chunks_exact(8) {
+            for w in row.windows(2) {
+                assert_eq!(w[1], w[0] + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn valid_batch_deterministic_and_wrapping() {
+        let ds = TokenDataset::from_stream(&stream(500), 8, 0.2, 3).unwrap();
+        let a = ds.valid_batch(4, 0);
+        let b = ds.valid_batch(4, 0);
+        assert_eq!(a, b);
+        let _wrapped = ds.valid_batch(ds.n_valid() + 2, 0); // must not panic
+    }
+
+    #[test]
+    fn pad_batch_masks_correctly() {
+        let seqs = vec![vec![5, 6, 7], vec![9]];
+        let (t, m) = pad_batch(&seqs, 3, 4).unwrap();
+        assert_eq!(t.shape, vec![3, 4]);
+        assert_eq!(t.as_i32().unwrap(), &[5, 6, 7, 0, 9, 0, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(
+            m.as_f32().unwrap(),
+            &[1., 1., 1., 0., 1., 0., 0., 0., 0., 0., 0., 0.]
+        );
+    }
+
+    #[test]
+    fn pad_batch_truncates_left() {
+        let seqs = vec![vec![1, 2, 3, 4, 5, 6]];
+        let (t, _) = pad_batch(&seqs, 1, 4).unwrap();
+        assert_eq!(t.as_i32().unwrap(), &[3, 4, 5, 6]);
+        let l = lengths_of(&seqs, 1, 4);
+        assert_eq!(l.as_i32().unwrap(), &[4]);
+    }
+}

@@ -1,0 +1,851 @@
+//! nanoBabyLM: a feature-agreement grammar for corpus + eval generation.
+//!
+//! One lexicon with morphological features (number, gender, animacy,
+//! verb valency, irregular plurals) drives four generators:
+//!
+//! * **corpus** — grammatical sentences over weighted templates
+//!   (pretraining data; babyLM stand-in);
+//! * **minimal pairs** — grammatical/ungrammatical twins per
+//!   phenomenon (BLIMP stand-in; metric: P(good) > P(bad));
+//! * **MCQ items** — cloze stems with one correct choice (OPENLLM
+//!   stand-in; few-shot prompts assembled by `eval::mcq`);
+//! * **probe examples** — labelled sentences for feature-probing
+//!   classification heads (GLUE stand-in; heads trained in rust).
+//!
+//! Everything is deterministic in the caller-supplied RNG.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Number {
+    Sg,
+    Pl,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gender {
+    Masc,
+    Fem,
+    Neut,
+}
+
+#[derive(Debug, Clone)]
+struct Noun {
+    sg: &'static str,
+    pl: &'static str,
+    gender: Gender,
+    animate: bool,
+    person: bool,
+    irregular: bool,
+}
+
+#[derive(Debug, Clone)]
+struct Verb {
+    base: &'static str, // plural-agreement form ("run")
+    #[allow(dead_code)]
+    transitive: bool,
+}
+
+const NOUNS: &[Noun] = &[
+    Noun { sg: "dog", pl: "dogs", gender: Gender::Neut, animate: true, person: false, irregular: false },
+    Noun { sg: "cat", pl: "cats", gender: Gender::Neut, animate: true, person: false, irregular: false },
+    Noun { sg: "bird", pl: "birds", gender: Gender::Neut, animate: true, person: false, irregular: false },
+    Noun { sg: "horse", pl: "horses", gender: Gender::Neut, animate: true, person: false, irregular: false },
+    Noun { sg: "mouse", pl: "mice", gender: Gender::Neut, animate: true, person: false, irregular: true },
+    Noun { sg: "boy", pl: "boys", gender: Gender::Masc, animate: true, person: true, irregular: false },
+    Noun { sg: "girl", pl: "girls", gender: Gender::Fem, animate: true, person: true, irregular: false },
+    Noun { sg: "man", pl: "men", gender: Gender::Masc, animate: true, person: true, irregular: true },
+    Noun { sg: "woman", pl: "women", gender: Gender::Fem, animate: true, person: true, irregular: true },
+    Noun { sg: "child", pl: "children", gender: Gender::Neut, animate: true, person: true, irregular: true },
+    Noun { sg: "king", pl: "kings", gender: Gender::Masc, animate: true, person: true, irregular: false },
+    Noun { sg: "queen", pl: "queens", gender: Gender::Fem, animate: true, person: true, irregular: false },
+    Noun { sg: "teacher", pl: "teachers", gender: Gender::Neut, animate: true, person: true, irregular: false },
+    Noun { sg: "student", pl: "students", gender: Gender::Neut, animate: true, person: true, irregular: false },
+    Noun { sg: "doctor", pl: "doctors", gender: Gender::Neut, animate: true, person: true, irregular: false },
+    Noun { sg: "farmer", pl: "farmers", gender: Gender::Neut, animate: true, person: true, irregular: false },
+    Noun { sg: "apple", pl: "apples", gender: Gender::Neut, animate: false, person: false, irregular: false },
+    Noun { sg: "book", pl: "books", gender: Gender::Neut, animate: false, person: false, irregular: false },
+    Noun { sg: "ball", pl: "balls", gender: Gender::Neut, animate: false, person: false, irregular: false },
+    Noun { sg: "house", pl: "houses", gender: Gender::Neut, animate: false, person: false, irregular: false },
+    Noun { sg: "tree", pl: "trees", gender: Gender::Neut, animate: false, person: false, irregular: false },
+    Noun { sg: "stone", pl: "stones", gender: Gender::Neut, animate: false, person: false, irregular: false },
+    Noun { sg: "river", pl: "rivers", gender: Gender::Neut, animate: false, person: false, irregular: false },
+    Noun { sg: "car", pl: "cars", gender: Gender::Neut, animate: false, person: false, irregular: false },
+];
+
+const VERBS_INTRANS: &[Verb] = &[
+    Verb { base: "sleep", transitive: false },
+    Verb { base: "run", transitive: false },
+    Verb { base: "jump", transitive: false },
+    Verb { base: "swim", transitive: false },
+    Verb { base: "laugh", transitive: false },
+    Verb { base: "smile", transitive: false },
+    Verb { base: "bark", transitive: false },
+    Verb { base: "sing", transitive: false },
+    Verb { base: "dance", transitive: false },
+    Verb { base: "fall", transitive: false },
+];
+
+const VERBS_TRANS: &[Verb] = &[
+    Verb { base: "see", transitive: true },
+    Verb { base: "chase", transitive: true },
+    Verb { base: "like", transitive: true },
+    Verb { base: "love", transitive: true },
+    Verb { base: "push", transitive: true },
+    Verb { base: "find", transitive: true },
+    Verb { base: "hold", transitive: true },
+    Verb { base: "carry", transitive: true },
+    Verb { base: "watch", transitive: true },
+    Verb { base: "hurt", transitive: true },
+];
+
+const ADJS: &[&str] = &[
+    "big", "small", "happy", "sad", "old", "young", "red", "blue", "fast", "slow",
+];
+
+const ADVS: &[&str] = &["quickly", "slowly", "often", "always"];
+
+/// 3rd-person-singular morphology ("watch"->"watches", "carry"->"carries").
+fn third_sg(base: &str) -> String {
+    if base.ends_with('s')
+        || base.ends_with("sh")
+        || base.ends_with("ch")
+        || base.ends_with('x')
+    {
+        format!("{base}es")
+    } else if base.ends_with('y')
+        && !base.ends_with("ay")
+        && !base.ends_with("ey")
+        && !base.ends_with("oy")
+    {
+        format!("{}ies", &base[..base.len() - 1])
+    } else {
+        format!("{base}s")
+    }
+}
+
+/// The incorrect regular plural of an irregular noun ("mans", "childs").
+fn fake_regular_plural(sg: &str) -> String {
+    format!("{sg}s")
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phenomenon {
+    SubjVerbAgreement,
+    DetNounAgreement,
+    AnaphorAgreement,
+    NpiLicensing,
+    WordOrder,
+    ArgStructure,
+    IrregularForms,
+    NumeralAgreement,
+}
+
+impl Phenomenon {
+    pub const ALL: [Phenomenon; 8] = [
+        Phenomenon::SubjVerbAgreement,
+        Phenomenon::DetNounAgreement,
+        Phenomenon::AnaphorAgreement,
+        Phenomenon::NpiLicensing,
+        Phenomenon::WordOrder,
+        Phenomenon::ArgStructure,
+        Phenomenon::IrregularForms,
+        Phenomenon::NumeralAgreement,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phenomenon::SubjVerbAgreement => "subj_verb_agreement",
+            Phenomenon::DetNounAgreement => "det_noun_agreement",
+            Phenomenon::AnaphorAgreement => "anaphor_agreement",
+            Phenomenon::NpiLicensing => "npi_licensing",
+            Phenomenon::WordOrder => "word_order",
+            Phenomenon::ArgStructure => "arg_structure",
+            Phenomenon::IrregularForms => "irregular_forms",
+            Phenomenon::NumeralAgreement => "numeral_agreement",
+        }
+    }
+}
+
+/// Few-shot MCQ task families (OPENLLM stand-in, 4 tasks like the
+/// leaderboard's 4 benchmarks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum McqTask {
+    VerbAgreement,
+    Anaphor,
+    Npi,
+    AuxAgreement,
+}
+
+impl McqTask {
+    pub const ALL: [McqTask; 4] = [
+        McqTask::VerbAgreement,
+        McqTask::Anaphor,
+        McqTask::Npi,
+        McqTask::AuxAgreement,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            McqTask::VerbAgreement => "verb_agreement_mcq",
+            McqTask::Anaphor => "anaphor_mcq",
+            McqTask::Npi => "npi_mcq",
+            McqTask::AuxAgreement => "aux_agreement_mcq",
+        }
+    }
+}
+
+/// Probe classification tasks (GLUE stand-in).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeTask {
+    /// CoLA-like: is the sentence grammatical?
+    Acceptability,
+    /// Is the subject an animate entity?
+    SubjectAnimacy,
+    /// Does the sentence contain negation?
+    Polarity,
+    /// Is the subject plural?
+    SubjectNumber,
+}
+
+impl ProbeTask {
+    pub const ALL: [ProbeTask; 4] = [
+        ProbeTask::Acceptability,
+        ProbeTask::SubjectAnimacy,
+        ProbeTask::Polarity,
+        ProbeTask::SubjectNumber,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProbeTask::Acceptability => "acceptability",
+            ProbeTask::SubjectAnimacy => "subject_animacy",
+            ProbeTask::Polarity => "polarity",
+            ProbeTask::SubjectNumber => "subject_number",
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        2
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MinimalPair {
+    pub good: Vec<String>,
+    pub bad: Vec<String>,
+    pub phenomenon: Phenomenon,
+}
+
+#[derive(Debug, Clone)]
+pub struct McqItem {
+    /// Shared stem, e.g. ["the", "cat"].
+    pub stem: Vec<String>,
+    /// Continuations; exactly one is correct.
+    pub choices: Vec<Vec<String>>,
+    pub correct: usize,
+}
+
+pub struct Grammar;
+
+impl Default for Grammar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Grammar {
+    pub fn new() -> Grammar {
+        Grammar
+    }
+
+    /// Every surface form the grammar can emit (tokenizer vocabulary).
+    pub fn vocabulary(&self) -> Vec<String> {
+        let mut v: Vec<String> = Vec::new();
+        for n in NOUNS {
+            v.push(n.sg.to_string());
+            v.push(n.pl.to_string());
+            if n.irregular {
+                v.push(fake_regular_plural(n.sg)); // bad forms still need ids
+            }
+        }
+        for verb in VERBS_INTRANS.iter().chain(VERBS_TRANS) {
+            v.push(verb.base.to_string());
+            v.push(third_sg(verb.base));
+        }
+        for a in ADJS {
+            v.push(a.to_string());
+        }
+        for a in ADVS {
+            v.push(a.to_string());
+        }
+        for w in [
+            "the", "a", "this", "these", "that", "those", "every", "some", "no",
+            "one", "two", "three", "is", "are", "was", "were", "has", "have",
+            "does", "do", "not", "ever", "never", "himself", "herself", "itself",
+            "themselves", "who", "and", "in", "on", "near", "under", "with",
+            ".", "?",
+        ] {
+            v.push(w.to_string());
+        }
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    fn noun<'a>(&self, rng: &mut Rng, filter: impl Fn(&Noun) -> bool) -> &'a Noun {
+        let candidates: Vec<&Noun> = NOUNS.iter().filter(|n| filter(n)).collect();
+        candidates[rng.below(candidates.len())]
+    }
+
+    fn noun_form(&self, n: &Noun, num: Number) -> String {
+        match num {
+            Number::Sg => n.sg.to_string(),
+            Number::Pl => n.pl.to_string(),
+        }
+    }
+
+    fn verb_form(&self, v: &Verb, num: Number) -> String {
+        match num {
+            Number::Sg => third_sg(v.base),
+            Number::Pl => v.base.to_string(),
+        }
+    }
+
+    fn det(&self, rng: &mut Rng, num: Number) -> &'static str {
+        match num {
+            Number::Sg => *rng.choice(&["the", "a", "this", "that", "every"]),
+            Number::Pl => *rng.choice(&["the", "these", "those", "some"]),
+        }
+    }
+
+    fn number(&self, rng: &mut Rng) -> Number {
+        if rng.bool(0.5) {
+            Number::Sg
+        } else {
+            Number::Pl
+        }
+    }
+
+    /// One grammatical sentence (sequence of word tokens incl. final
+    /// punctuation). Weighted over 8 templates.
+    pub fn sentence(&self, rng: &mut Rng) -> Vec<String> {
+        let template = rng.weighted(&[3.0, 3.0, 2.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        let num = self.number(rng);
+        let mut s: Vec<String> = Vec::new();
+        match template {
+            0 => {
+                // Det (Adj) N V_intrans (Adv) .
+                s.push(self.det(rng, num).into());
+                if rng.bool(0.35) {
+                    s.push((*rng.choice(ADJS)).into());
+                }
+                let n = self.noun(rng, |n| n.animate);
+                s.push(self.noun_form(n, num));
+                let v = rng.choice(VERBS_INTRANS);
+                s.push(self.verb_form(v, num));
+                if rng.bool(0.3) {
+                    s.push((*rng.choice(ADVS)).into());
+                }
+                s.push(".".into());
+            }
+            1 => {
+                // Det N V_trans Det (Adj) N .
+                s.push(self.det(rng, num).into());
+                let subj = self.noun(rng, |n| n.animate);
+                s.push(self.noun_form(subj, num));
+                let v = rng.choice(VERBS_TRANS);
+                s.push(self.verb_form(v, num));
+                let onum = self.number(rng);
+                s.push(self.det(rng, onum).into());
+                if rng.bool(0.35) {
+                    s.push((*rng.choice(ADJS)).into());
+                }
+                let obj = self.noun(rng, |_| true);
+                s.push(self.noun_form(obj, onum));
+                s.push(".".into());
+            }
+            2 => {
+                // Det N is/are Adj .
+                s.push(self.det(rng, num).into());
+                let n = self.noun(rng, |_| true);
+                s.push(self.noun_form(n, num));
+                s.push(if num == Number::Sg { "is" } else { "are" }.into());
+                s.push((*rng.choice(ADJS)).into());
+                s.push(".".into());
+            }
+            3 => {
+                // Det N V_trans <reflexive> .  (person/animate subjects)
+                s.push("the".into());
+                let n = self.noun(rng, |n| n.animate);
+                s.push(self.noun_form(n, num));
+                s.push(self.verb_form(&Verb { base: "hurt", transitive: true }, num));
+                s.push(reflexive(n, num).into());
+                s.push(".".into());
+            }
+            4 => {
+                // Det N has/have not ever V .  (licensed NPI)
+                s.push("the".into());
+                let n = self.noun(rng, |n| n.animate);
+                s.push(self.noun_form(n, num));
+                s.push(if num == Number::Sg { "has" } else { "have" }.into());
+                s.push("not".into());
+                if rng.bool(0.5) {
+                    s.push("ever".into());
+                }
+                let v = rng.choice(VERBS_INTRANS);
+                s.push(v.base.into()); // bare form after aux
+                s.push(".".into());
+            }
+            5 => {
+                // Numeral N V .   (one/two/three agreement)
+                let (word, num2) = match rng.below(3) {
+                    0 => ("one", Number::Sg),
+                    1 => ("two", Number::Pl),
+                    _ => ("three", Number::Pl),
+                };
+                s.push(word.into());
+                let n = self.noun(rng, |n| n.animate);
+                s.push(self.noun_form(n, num2));
+                let v = rng.choice(VERBS_INTRANS);
+                s.push(self.verb_form(v, num2));
+                s.push(".".into());
+            }
+            6 => {
+                // is/are Det N Adj ?   (subject-aux inversion)
+                s.push(if num == Number::Sg { "is" } else { "are" }.into());
+                s.push("the".into());
+                let n = self.noun(rng, |_| true);
+                s.push(self.noun_form(n, num));
+                s.push((*rng.choice(ADJS)).into());
+                s.push("?".into());
+            }
+            _ => {
+                // Det N who V_intrans V_trans Det N .  (relative clause;
+                // long-distance agreement pressure)
+                s.push("the".into());
+                let subj = self.noun(rng, |n| n.person);
+                s.push(self.noun_form(subj, num));
+                s.push("who".into());
+                let v1 = rng.choice(VERBS_INTRANS);
+                s.push(self.verb_form(v1, num));
+                let v2 = rng.choice(VERBS_TRANS);
+                s.push(self.verb_form(v2, num));
+                let onum = self.number(rng);
+                s.push(self.det(rng, onum).into());
+                let obj = self.noun(rng, |_| true);
+                s.push(self.noun_form(obj, onum));
+                s.push(".".into());
+            }
+        }
+        s
+    }
+
+    /// Stream of sentences (words) until at least `n_tokens` tokens.
+    pub fn corpus(&self, n_tokens: usize, seed: u64) -> Vec<String> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(n_tokens + 16);
+        while out.len() < n_tokens {
+            out.extend(self.sentence(&mut rng));
+        }
+        out
+    }
+
+    /// One grammatical/ungrammatical twin for a phenomenon.
+    pub fn minimal_pair(&self, ph: Phenomenon, rng: &mut Rng) -> MinimalPair {
+        let num = self.number(rng);
+        let (good, bad): (Vec<String>, Vec<String>) = match ph {
+            Phenomenon::SubjVerbAgreement => {
+                let n = self.noun(rng, |n| n.animate && !n.irregular);
+                let v = rng.choice(VERBS_INTRANS);
+                let det = if num == Number::Sg { "the" } else { "the" };
+                let subj = self.noun_form(n, num);
+                let good_v = self.verb_form(v, num);
+                let bad_v = self.verb_form(
+                    v,
+                    if num == Number::Sg { Number::Pl } else { Number::Sg },
+                );
+                (
+                    vec![det.into(), subj.clone(), good_v, ".".into()],
+                    vec![det.into(), subj, bad_v, ".".into()],
+                )
+            }
+            Phenomenon::DetNounAgreement => {
+                let n = self.noun(rng, |n| !n.irregular);
+                let (good_det, bad_det) = match num {
+                    Number::Sg => ("this", "these"),
+                    Number::Pl => ("these", "this"),
+                };
+                let form = self.noun_form(n, num);
+                let v = rng.choice(VERBS_INTRANS);
+                let vf = self.verb_form(v, num);
+                (
+                    vec![good_det.into(), form.clone(), vf.clone(), ".".into()],
+                    vec![bad_det.into(), form, vf, ".".into()],
+                )
+            }
+            Phenomenon::AnaphorAgreement => {
+                let n = self.noun(rng, |n| n.animate && n.gender != Gender::Neut);
+                let good_refl = reflexive(n, Number::Sg);
+                let bad_refl = match n.gender {
+                    Gender::Masc => "herself",
+                    _ => "himself",
+                };
+                (
+                    vec!["the".into(), n.sg.into(), "hurts".into(),
+                         good_refl.into(), ".".into()],
+                    vec!["the".into(), n.sg.into(), "hurts".into(),
+                         bad_refl.into(), ".".into()],
+                )
+            }
+            Phenomenon::NpiLicensing => {
+                let n = self.noun(rng, |n| n.animate);
+                let subj = self.noun_form(n, num);
+                let aux = if num == Number::Sg { "has" } else { "have" };
+                let v = rng.choice(VERBS_INTRANS);
+                (
+                    // "the dog has not ever barked" (licensed)
+                    vec!["the".into(), subj.clone(), aux.into(), "not".into(),
+                         "ever".into(), v.base.into(), ".".into()],
+                    // "the dog has ever barked" (unlicensed NPI)
+                    vec!["the".into(), subj, aux.into(), "ever".into(),
+                         v.base.into(), ".".into()],
+                )
+            }
+            Phenomenon::WordOrder => {
+                let n = self.noun(rng, |n| n.animate);
+                let subj = self.noun_form(n, num);
+                let v = rng.choice(VERBS_INTRANS);
+                let vf = self.verb_form(v, num);
+                (
+                    vec!["the".into(), subj.clone(), vf.clone(), ".".into()],
+                    // determiner displaced after noun
+                    vec![subj, "the".into(), vf, ".".into()],
+                )
+            }
+            Phenomenon::ArgStructure => {
+                let subj = self.noun(rng, |n| n.animate);
+                let sf = self.noun_form(subj, num);
+                let obj = self.noun(rng, |_| true);
+                let onum = self.number(rng);
+                let of = self.noun_form(obj, onum);
+                let vt = rng.choice(VERBS_TRANS);
+                let vi = rng.choice(VERBS_INTRANS);
+                let odet = self.det(rng, onum);
+                (
+                    // transitive verb with object: fine
+                    vec!["the".into(), sf.clone(), self.verb_form(vt, num),
+                         odet.into(), of.clone(), ".".into()],
+                    // intransitive verb with object: violation
+                    vec!["the".into(), sf, self.verb_form(vi, num),
+                         odet.into(), of, ".".into()],
+                )
+            }
+            Phenomenon::IrregularForms => {
+                let n = self.noun(rng, |n| n.irregular);
+                let v = rng.choice(VERBS_INTRANS);
+                let vf = self.verb_form(v, Number::Pl);
+                (
+                    vec!["the".into(), n.pl.into(), vf.clone(), ".".into()],
+                    vec!["the".into(), fake_regular_plural(n.sg), vf, ".".into()],
+                )
+            }
+            Phenomenon::NumeralAgreement => {
+                let n = self.noun(rng, |n| n.animate && !n.irregular);
+                let v = rng.choice(VERBS_INTRANS);
+                let (numeral, nnum) = if rng.bool(0.5) {
+                    ("two", Number::Pl)
+                } else {
+                    ("three", Number::Pl)
+                };
+                (
+                    vec![numeral.into(), self.noun_form(n, nnum),
+                         self.verb_form(v, nnum), ".".into()],
+                    // numeral > 1 with singular noun
+                    vec![numeral.into(), self.noun_form(n, Number::Sg),
+                         self.verb_form(v, nnum), ".".into()],
+                )
+            }
+        };
+        MinimalPair { good, bad, phenomenon: ph }
+    }
+
+    /// One MCQ cloze item.
+    pub fn mcq(&self, task: McqTask, rng: &mut Rng) -> McqItem {
+        match task {
+            McqTask::VerbAgreement => {
+                let num = self.number(rng);
+                let n = self.noun(rng, |n| n.animate && !n.irregular);
+                let v = rng.choice(VERBS_INTRANS);
+                let good = self.verb_form(v, num);
+                let bad = self.verb_form(
+                    v,
+                    if num == Number::Sg { Number::Pl } else { Number::Sg },
+                );
+                let correct = rng.below(2);
+                let mut choices = vec![vec![bad, ".".into()], vec![good, ".".into()]];
+                if correct == 0 {
+                    choices.swap(0, 1);
+                }
+                McqItem {
+                    stem: vec!["the".into(), self.noun_form(n, num)],
+                    choices,
+                    correct,
+                }
+            }
+            McqTask::Anaphor => {
+                let n = self.noun(rng, |n| n.person && n.gender != Gender::Neut);
+                let good = reflexive(n, Number::Sg).to_string();
+                let bad1 = if n.gender == Gender::Masc { "herself" } else { "himself" };
+                let bad2 = "themselves";
+                let correct = rng.below(3);
+                let mut choices = vec![
+                    vec![good, ".".into()],
+                    vec![bad1.into(), ".".into()],
+                    vec![bad2.into(), ".".into()],
+                ];
+                choices.swap(0, correct);
+                McqItem {
+                    stem: vec!["the".into(), n.sg.into(), "hurts".into()],
+                    choices,
+                    correct,
+                }
+            }
+            McqTask::Npi => {
+                let n = self.noun(rng, |n| n.animate);
+                let num = self.number(rng);
+                let aux = if num == Number::Sg { "has" } else { "have" };
+                let v = rng.choice(VERBS_INTRANS);
+                let correct = rng.below(2);
+                // "the dog has not ___ barked": "ever" good, "never" bad
+                let mut choices = vec![
+                    vec!["ever".into(), v.base.into(), ".".into()],
+                    vec!["never".into(), v.base.into(), ".".into()],
+                ];
+                choices.swap(0, correct);
+                McqItem {
+                    stem: vec!["the".into(), self.noun_form(n, num), aux.into(),
+                               "not".into()],
+                    choices,
+                    correct,
+                }
+            }
+            McqTask::AuxAgreement => {
+                let num = self.number(rng);
+                let n = self.noun(rng, |n| !n.irregular);
+                let good = if num == Number::Sg { "is" } else { "are" };
+                let bad = if num == Number::Sg { "are" } else { "is" };
+                let adj = *rng.choice(ADJS);
+                let correct = rng.below(2);
+                let mut choices = vec![
+                    vec![good.into(), adj.into(), ".".into()],
+                    vec![bad.into(), adj.into(), ".".into()],
+                ];
+                choices.swap(0, correct);
+                McqItem {
+                    stem: vec!["the".into(), self.noun_form(n, num)],
+                    choices,
+                    correct,
+                }
+            }
+        }
+    }
+
+    /// One labelled probe example: (sentence tokens, class label).
+    pub fn probe_example(&self, task: ProbeTask, rng: &mut Rng) -> (Vec<String>, usize) {
+        match task {
+            ProbeTask::Acceptability => {
+                // reuse minimal pairs: label 1 = grammatical
+                let ph = *rng.choice(&Phenomenon::ALL);
+                let pair = self.minimal_pair(ph, rng);
+                if rng.bool(0.5) {
+                    (pair.good, 1)
+                } else {
+                    (pair.bad, 0)
+                }
+            }
+            ProbeTask::SubjectAnimacy => {
+                let num = self.number(rng);
+                let want_animate = rng.bool(0.5);
+                let n = self.noun(rng, |n| n.animate == want_animate);
+                let s = vec![
+                    "the".into(),
+                    self.noun_form(n, num),
+                    if num == Number::Sg { "is" } else { "are" }.into(),
+                    (*rng.choice(ADJS)).into(),
+                    ".".into(),
+                ];
+                (s, want_animate as usize)
+            }
+            ProbeTask::Polarity => {
+                let num = self.number(rng);
+                let n = self.noun(rng, |n| n.animate);
+                let v = rng.choice(VERBS_INTRANS);
+                let negated = rng.bool(0.5);
+                let aux = if num == Number::Sg { "does" } else { "do" };
+                let s = if negated {
+                    vec!["the".into(), self.noun_form(n, num), aux.into(),
+                         "not".into(), v.base.into(), ".".into()]
+                } else {
+                    vec!["the".into(), self.noun_form(n, num),
+                         self.verb_form(v, num), ".".into()]
+                };
+                (s, negated as usize)
+            }
+            ProbeTask::SubjectNumber => {
+                let num = self.number(rng);
+                let n = self.noun(rng, |n| !n.irregular);
+                let v = rng.choice(VERBS_INTRANS);
+                let s = vec![
+                    "the".into(),
+                    self.noun_form(n, num),
+                    self.verb_form(v, num),
+                    (*rng.choice(ADVS)).into(),
+                    ".".into(),
+                ];
+                (s, (num == Number::Pl) as usize)
+            }
+        }
+    }
+}
+
+fn reflexive(n: &Noun, num: Number) -> &'static str {
+    if num == Number::Pl {
+        return "themselves";
+    }
+    match (n.person, n.gender) {
+        (_, Gender::Masc) => "himself",
+        (_, Gender::Fem) => "herself",
+        (true, Gender::Neut) => "themselves",
+        (false, Gender::Neut) => "itself",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocabulary_is_compact_and_stable() {
+        let g = Grammar::new();
+        let v = g.vocabulary();
+        assert!(v.len() > 80 && v.len() < 300, "{}", v.len());
+        assert_eq!(v, g.vocabulary());
+        assert!(v.contains(&"themselves".to_string()));
+        assert!(v.contains(&"mans".to_string())); // bad irregular form
+        assert!(v.iter().all(|w| !w.is_empty()));
+    }
+
+    #[test]
+    fn sentences_end_with_punctuation_and_stay_in_vocab() {
+        let g = Grammar::new();
+        let vocab: std::collections::BTreeSet<_> = g.vocabulary().into_iter().collect();
+        let mut rng = Rng::new(0);
+        for _ in 0..500 {
+            let s = g.sentence(&mut rng);
+            assert!(s.len() >= 3);
+            let last = s.last().unwrap();
+            assert!(last == "." || last == "?");
+            for w in &s {
+                assert!(vocab.contains(w), "OOV word {w:?} in {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_reaches_length_deterministically() {
+        let g = Grammar::new();
+        let c1 = g.corpus(1000, 7);
+        let c2 = g.corpus(1000, 7);
+        assert_eq!(c1, c2);
+        assert!(c1.len() >= 1000);
+        let c3 = g.corpus(1000, 8);
+        assert_ne!(c1, c3);
+    }
+
+    #[test]
+    fn minimal_pairs_differ_and_stay_in_vocab() {
+        let g = Grammar::new();
+        let vocab: std::collections::BTreeSet<_> = g.vocabulary().into_iter().collect();
+        let mut rng = Rng::new(1);
+        for ph in Phenomenon::ALL {
+            for _ in 0..50 {
+                let p = g.minimal_pair(ph, &mut rng);
+                assert_ne!(p.good, p.bad, "{ph:?}");
+                for w in p.good.iter().chain(&p.bad) {
+                    assert!(vocab.contains(w), "{ph:?} OOV {w:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn third_sg_morphology() {
+        assert_eq!(third_sg("run"), "runs");
+        assert_eq!(third_sg("watch"), "watches");
+        assert_eq!(third_sg("push"), "pushes");
+        assert_eq!(third_sg("carry"), "carries");
+        assert_eq!(third_sg("see"), "sees");
+    }
+
+    #[test]
+    fn subj_verb_pair_flips_only_verb() {
+        let g = Grammar::new();
+        let mut rng = Rng::new(2);
+        let p = g.minimal_pair(Phenomenon::SubjVerbAgreement, &mut rng);
+        assert_eq!(p.good.len(), p.bad.len());
+        let diffs: Vec<_> = p
+            .good
+            .iter()
+            .zip(&p.bad)
+            .filter(|(a, b)| a != b)
+            .collect();
+        assert_eq!(diffs.len(), 1, "{:?} vs {:?}", p.good, p.bad);
+    }
+
+    #[test]
+    fn mcq_correct_index_valid_and_choices_distinct() {
+        let g = Grammar::new();
+        let mut rng = Rng::new(3);
+        for task in McqTask::ALL {
+            let mut correct_positions = std::collections::BTreeSet::new();
+            for _ in 0..60 {
+                let item = g.mcq(task, &mut rng);
+                assert!(item.correct < item.choices.len());
+                correct_positions.insert(item.correct);
+                let set: std::collections::BTreeSet<_> =
+                    item.choices.iter().collect();
+                assert_eq!(set.len(), item.choices.len(), "{task:?} dup choices");
+            }
+            // answer position must not be constant (no position bias)
+            assert!(correct_positions.len() > 1, "{task:?}");
+        }
+    }
+
+    #[test]
+    fn probe_labels_balanced() {
+        let g = Grammar::new();
+        let mut rng = Rng::new(4);
+        for task in ProbeTask::ALL {
+            let mut ones = 0;
+            for _ in 0..200 {
+                let (s, label) = g.probe_example(task, &mut rng);
+                assert!(!s.is_empty());
+                assert!(label < task.n_classes());
+                ones += label;
+            }
+            assert!((40..160).contains(&ones), "{task:?} unbalanced: {ones}/200");
+        }
+    }
+
+    #[test]
+    fn npi_pair_is_the_licensing_contrast() {
+        let g = Grammar::new();
+        let mut rng = Rng::new(5);
+        let p = g.minimal_pair(Phenomenon::NpiLicensing, &mut rng);
+        assert!(p.good.contains(&"not".to_string()));
+        assert!(p.good.contains(&"ever".to_string()));
+        assert!(!p.bad.contains(&"not".to_string()));
+        assert!(p.bad.contains(&"ever".to_string()));
+    }
+}

@@ -1,0 +1,173 @@
+//! Procedural MNIST-like digit generator (paper §3.4.5 substitute).
+//!
+//! The real MNIST download is unavailable offline; we render 28×28
+//! grayscale digits from 7×5 glyph skeletons with random translation,
+//! stroke-thickness dilation and pixel noise. The task keeps MNIST's
+//! shape — 10-class, centered-ish digits, linearly-dominated MLP
+//! compute — which is all §3.4.5 exercises (DESIGN.md §6).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Classic 7-row × 5-col digit glyphs (1 = stroke).
+const GLYPHS: [[u8; 7]; 10] = [
+    // each u8 is a 5-bit row, MSB = leftmost column
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+pub const IMG: usize = 28;
+pub const PIXELS: usize = IMG * IMG;
+
+pub struct MnistGen {
+    rng: Rng,
+}
+
+impl MnistGen {
+    pub fn new(seed: u64) -> MnistGen {
+        MnistGen { rng: Rng::new(seed) }
+    }
+
+    /// Render one digit into a 28×28 f32 image in [0, 1].
+    pub fn render(&mut self, digit: usize) -> Vec<f32> {
+        assert!(digit < 10);
+        let glyph = &GLYPHS[digit];
+        let mut img = vec![0.0f32; PIXELS];
+        // glyph cell size ~3px, glyph occupies 21x15; random offset
+        let cell = 3usize;
+        let (gh, gw) = (7 * cell, 5 * cell);
+        let dy = self.rng.range(0, IMG - gh);
+        let dx = self.rng.range(0, IMG - gw);
+        for (r, row) in glyph.iter().enumerate() {
+            for c in 0..5 {
+                if (row >> (4 - c)) & 1 == 1 {
+                    for py in 0..cell {
+                        for px in 0..cell {
+                            let y = dy + r * cell + py;
+                            let x = dx + c * cell + px;
+                            img[y * IMG + x] = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+        // stroke dilation with prob 0.3: thicken right/down by one pixel
+        if self.rng.bool(0.3) {
+            let src = img.clone();
+            for y in 0..IMG {
+                for x in 0..IMG - 1 {
+                    if src[y * IMG + x] > 0.5 {
+                        img[y * IMG + x + 1] = img[y * IMG + x + 1].max(0.8);
+                    }
+                }
+            }
+        }
+        // additive pixel noise + intensity jitter
+        let gain = self.rng.uniform(0.8, 1.0);
+        for p in img.iter_mut() {
+            *p = (*p * gain + self.rng.uniform(0.0, 0.12)).clamp(0.0, 1.0);
+        }
+        img
+    }
+
+    /// A labelled batch: images (n, 784) f32 and labels (n,) i32, with
+    /// classes cycled (balanced) then shuffled.
+    pub fn batch(&mut self, n: usize) -> (Tensor, Tensor) {
+        let mut order: Vec<usize> = (0..n).map(|i| i % 10).collect();
+        self.rng.shuffle(&mut order);
+        let mut images = Vec::with_capacity(n * PIXELS);
+        let mut labels = Vec::with_capacity(n);
+        for &d in &order {
+            images.extend(self.render(d));
+            labels.push(d as i32);
+        }
+        (
+            Tensor::from_f32(&[n, PIXELS], images).unwrap(),
+            Tensor::from_i32(&[n], labels).unwrap(),
+        )
+    }
+
+    /// Train-step-shaped batch: images (k, b, 784), labels (k, b).
+    pub fn train_batch(&mut self, k: usize, b: usize) -> (Tensor, Tensor) {
+        let (imgs, labels) = self.batch(k * b);
+        let imgs = Tensor::from_f32(&[k, b, PIXELS], imgs.as_f32().unwrap().to_vec())
+            .unwrap();
+        let labels =
+            Tensor::from_i32(&[k, b], labels.as_i32().unwrap().to_vec()).unwrap();
+        (imgs, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_valid_images() {
+        let mut g = MnistGen::new(0);
+        for d in 0..10 {
+            let img = g.render(d);
+            assert_eq!(img.len(), PIXELS);
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 20.0, "digit {d} nearly blank: {ink}");
+            assert!(ink < 500.0, "digit {d} nearly solid: {ink}");
+        }
+    }
+
+    #[test]
+    fn digits_are_distinguishable() {
+        // different digits must differ more than two renders of the same
+        let mut g = MnistGen::new(1);
+        // disable translation variance by averaging many renders
+        let avg = |g: &mut MnistGen, d: usize| {
+            let mut acc = vec![0.0f64; PIXELS];
+            for _ in 0..30 {
+                for (a, p) in acc.iter_mut().zip(g.render(d)) {
+                    *a += p as f64;
+                }
+            }
+            acc
+        };
+        let a0 = avg(&mut g, 0);
+        let a1 = avg(&mut g, 1);
+        let d01: f64 = a0.iter().zip(&a1).map(|(x, y)| (x - y).abs()).sum();
+        assert!(d01 > 100.0, "digits 0/1 indistinguishable: {d01}");
+    }
+
+    #[test]
+    fn batch_balanced_and_shaped() {
+        let mut g = MnistGen::new(2);
+        let (x, y) = g.batch(40);
+        assert_eq!(x.shape, vec![40, PIXELS]);
+        assert_eq!(y.shape, vec![40]);
+        let mut counts = [0; 10];
+        for &l in y.as_i32().unwrap() {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 4), "{counts:?}");
+    }
+
+    #[test]
+    fn train_batch_shape() {
+        let mut g = MnistGen::new(3);
+        let (x, y) = g.train_batch(4, 8);
+        assert_eq!(x.shape, vec![4, 8, PIXELS]);
+        assert_eq!(y.shape, vec![4, 8]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x1, _) = MnistGen::new(7).batch(10);
+        let (x2, _) = MnistGen::new(7).batch(10);
+        assert_eq!(x1, x2);
+    }
+}

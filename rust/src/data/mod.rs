@@ -1,0 +1,18 @@
+//! Data substrates: synthetic corpus, tokenizer, batching, MNIST.
+//!
+//! `grammar` is the babyLM substitute ("nanoBabyLM", DESIGN.md §6): a
+//! feature-agreement grammar that generates the pretraining corpus AND
+//! the evaluation suites (minimal pairs, few-shot MCQ, probe tasks)
+//! from the same lexicon, so the model is evaluated on exactly the
+//! linguistic structure it was trained to acquire — the babyLM→BLIMP
+//! relationship in miniature.
+
+pub mod dataset;
+pub mod grammar;
+pub mod mnist;
+pub mod tokenizer;
+
+pub use dataset::TokenDataset;
+pub use grammar::{Grammar, McqTask, Phenomenon, ProbeTask};
+pub use mnist::MnistGen;
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,135 @@
+//! Word-level tokenizer over the nanoBabyLM lexicon.
+//!
+//! Vocabulary = specials + the grammar's full surface-form list, built
+//! deterministically (not from corpus frequency) so every eval item is
+//! in-vocabulary by construction. IDs are stable across runs — a
+//! tokenizer mismatch between pretraining and eval is impossible by
+//! design rather than by discipline.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub const PAD: i32 = 0;
+pub const EOS: i32 = 1;
+pub const UNK: i32 = 2;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    id_of: BTreeMap<String, i32>,
+    word_of: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build from a word list (typically `Grammar::vocabulary()`).
+    pub fn from_words(words: &[String]) -> Tokenizer {
+        let mut word_of: Vec<String> =
+            vec!["<pad>".into(), "<eos>".into(), "<unk>".into()];
+        let mut id_of = BTreeMap::new();
+        id_of.insert("<pad>".to_string(), PAD);
+        id_of.insert("<eos>".to_string(), EOS);
+        id_of.insert("<unk>".to_string(), UNK);
+        for w in words {
+            if !id_of.contains_key(w) {
+                id_of.insert(w.clone(), word_of.len() as i32);
+                word_of.push(w.clone());
+            }
+        }
+        Tokenizer { id_of, word_of }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.word_of.len()
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        *self.id_of.get(word).unwrap_or(&UNK)
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.word_of
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    pub fn encode(&self, words: &[String]) -> Vec<i32> {
+        words.iter().map(|w| self.id(w)).collect()
+    }
+
+    /// Encode a sentence and append `<eos>`.
+    pub fn encode_sentence(&self, words: &[String]) -> Vec<i32> {
+        let mut ids = self.encode(words);
+        ids.push(EOS);
+        ids
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> Vec<String> {
+        ids.iter().map(|&i| self.word(i).to_string()).collect()
+    }
+
+    /// Validate that the model vocab (from the manifest arch) can hold
+    /// every id this tokenizer produces.
+    pub fn check_fits(&self, model_vocab: usize) -> Result<()> {
+        if self.vocab_size() > model_vocab {
+            bail!(
+                "tokenizer vocab {} exceeds model vocab {model_vocab}",
+                self.vocab_size()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::grammar::Grammar;
+
+    #[test]
+    fn specials_reserved() {
+        let t = Tokenizer::from_words(&["dog".into(), "cat".into()]);
+        assert_eq!(t.id("<pad>"), PAD);
+        assert_eq!(t.id("<eos>"), EOS);
+        assert_eq!(t.id("dog"), 3);
+        assert_eq!(t.id("zebra"), UNK);
+        assert_eq!(t.word(3), "dog");
+        assert_eq!(t.vocab_size(), 5);
+    }
+
+    #[test]
+    fn roundtrip_encode_decode() {
+        let g = Grammar::new();
+        let t = Tokenizer::from_words(&g.vocabulary());
+        let mut rng = crate::util::rng::Rng::new(0);
+        for _ in 0..100 {
+            let s = g.sentence(&mut rng);
+            let ids = t.encode(&s);
+            assert!(!ids.contains(&UNK), "OOV in {s:?}");
+            assert_eq!(t.decode(&ids), s);
+        }
+    }
+
+    #[test]
+    fn grammar_fits_model_vocab() {
+        let g = Grammar::new();
+        let t = Tokenizer::from_words(&g.vocabulary());
+        assert!(t.check_fits(512).is_ok(), "vocab {}", t.vocab_size());
+        assert!(t.check_fits(10).is_err());
+    }
+
+    #[test]
+    fn deterministic_ids() {
+        let g = Grammar::new();
+        let a = Tokenizer::from_words(&g.vocabulary());
+        let b = Tokenizer::from_words(&g.vocabulary());
+        assert_eq!(a.id("dog"), b.id("dog"));
+        assert_eq!(a.vocab_size(), b.vocab_size());
+    }
+
+    #[test]
+    fn encode_sentence_appends_eos() {
+        let t = Tokenizer::from_words(&["hi".into()]);
+        assert_eq!(t.encode_sentence(&["hi".into()]), vec![3, EOS]);
+    }
+}

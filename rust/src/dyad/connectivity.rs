@@ -1,0 +1,94 @@
+//! Eq 17/18: connectivity analysis of stacked DYAD layers.
+//!
+//! The paper's representational-power sketch (Appendix §5.4): for two
+//! square DYAD layers applied in sequence, count the 2-hop connections
+//! between input dim `i` and output dim `j`. Within-block pairs get
+//! O(n_in) paths; cross-block pairs only O(n_in/n_dyad) (through
+//! BLOCKTRANS). We compute the counts *exactly* on the materialised
+//! support and check the paper's asymptotics in tests / `repro inspect`.
+
+use super::layout::{dyad_full, DyadDims, Variant};
+
+/// Exact 2-hop path counts through two stacked square DYAD layers.
+/// Returns (within_block_avg, cross_block_avg): average number of
+/// middle dimensions connecting (i, j) pairs in the same / different
+/// BLOCKDIAG block.
+pub fn connection_counts(dims: DyadDims, variant: Variant) -> (f64, f64) {
+    assert_eq!(dims.n_in, dims.n_out, "analysis assumes square layers");
+    let n = dims.f_in();
+    // support matrices: 1.0 where a weight exists
+    let ones = vec![1.0f32; dims.component_params()];
+    let w = dyad_full(&ones, &ones, dims, variant);
+    // paths(i -> j) = sum_k support2[j, k] * support1[k, i]; with both
+    // layers sharing structure, count = (S @ S)[j, i] on 0/1 support.
+    let s: Vec<f32> = w.iter().map(|&x| if x != 0.0 { 1.0 } else { 0.0 }).collect();
+    let mut within = (0.0, 0u64);
+    let mut cross = (0.0, 0u64);
+    for j in 0..n {
+        for i in 0..n {
+            let mut paths = 0.0f64;
+            for k in 0..n {
+                paths += (s[j * n + k] * s[k * n + i]) as f64;
+            }
+            if i / dims.n_in == j / dims.n_in {
+                within.0 += paths;
+                within.1 += 1;
+            } else {
+                cross.0 += paths;
+                cross.1 += 1;
+            }
+        }
+    }
+    (
+        within.0 / within.1.max(1) as f64,
+        cross.0 / cross.1.max(1) as f64,
+    )
+}
+
+/// Eq 18: ratio of dense connections to DYAD connections, (within, cross).
+/// Dense 2-layer stacks give n = n_in*n_dyad paths for every pair.
+pub fn connectivity_ratio(dims: DyadDims, variant: Variant) -> (f64, f64) {
+    let dense = dims.f_in() as f64;
+    let (within, cross) = connection_counts(dims, variant);
+    (dense / within, dense / cross.max(1e-9))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn within_block_scales_like_n_in() {
+        // Eq 17 first case: O(n_in) paths within a block.
+        let dims = DyadDims { n_dyad: 4, n_in: 8, n_out: 8 };
+        let (within, cross) = connection_counts(dims, Variant::It);
+        assert!(within >= dims.n_in as f64, "within={within}");
+        assert!(within < 4.0 * dims.n_in as f64);
+        assert!(cross > 0.0, "BLOCKTRANS must create cross-block paths");
+        assert!(within > cross, "within-block must dominate");
+    }
+
+    #[test]
+    fn ratios_match_paper_asymptotics() {
+        // Eq 18: dense/dyad ratio O(n_dyad) within, O(n_dyad^2) across.
+        for nd in [2usize, 4, 8] {
+            let dims = DyadDims { n_dyad: nd, n_in: 16, n_out: 16 };
+            let (rw, rc) = connectivity_ratio(dims, Variant::It);
+            // within: between nd/4 and 4*nd; cross: between nd^2/8 and 8*nd^2
+            assert!(rw > nd as f64 / 4.0 && rw < 4.0 * nd as f64, "nd={nd} rw={rw}");
+            assert!(
+                rc > (nd * nd) as f64 / 8.0 && rc < 8.0 * (nd * nd) as f64,
+                "nd={nd} rc={rc}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparser_dyad_loses_cross_connectivity_faster() {
+        let d4 = DyadDims { n_dyad: 4, n_in: 8, n_out: 8 };
+        let d8 = DyadDims { n_dyad: 8, n_in: 8, n_out: 8 };
+        let (_, c4) = connection_counts(d4, Variant::It);
+        let (_, c8) = connection_counts(d8, Variant::It);
+        assert!(c8 < c4, "raising n_dyad must cut cross-block paths");
+    }
+}

@@ -1,0 +1,236 @@
+//! DYAD weight layout: 3-D block tensors, permutations, materialisation.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly — the rust and
+//! python oracles are cross-checked through the AOT'd pallas artifact
+//! in the integration tests.
+
+use anyhow::{bail, Result};
+
+/// Which component-2 permutation the layer uses (paper §2.2/§2.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Input Transpose: columns of BLOCKTRANS permuted.
+    It,
+    /// Output Transpose: rows permuted.
+    Ot,
+    /// Double Transpose: both.
+    Dt,
+}
+
+impl Variant {
+    pub fn from_str(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "it" | "it_cat" => Variant::It, // -CAT shares IT's structure
+            "ot" => Variant::Ot,
+            "dt" => Variant::Dt,
+            _ => bail!("unknown dyad variant {s:?}"),
+        })
+    }
+}
+
+/// Dimensions of a DYAD layer: f_in = n_dyad*n_in, f_out = n_dyad*n_out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DyadDims {
+    pub n_dyad: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+impl DyadDims {
+    pub fn new(n_dyad: usize, f_in: usize, f_out: usize) -> Result<DyadDims> {
+        if n_dyad == 0 || f_in % n_dyad != 0 || f_out % n_dyad != 0 {
+            bail!("f_in={f_in}, f_out={f_out} not divisible by n_dyad={n_dyad}");
+        }
+        Ok(DyadDims { n_dyad, n_in: f_in / n_dyad, n_out: f_out / n_dyad })
+    }
+
+    pub fn f_in(&self) -> usize {
+        self.n_dyad * self.n_in
+    }
+
+    pub fn f_out(&self) -> usize {
+        self.n_dyad * self.n_out
+    }
+
+    /// Weight elements stored by one component's 3-D tensor.
+    pub fn component_params(&self) -> usize {
+        self.n_dyad * self.n_out * self.n_in
+    }
+
+    /// Total DYAD weight params (2 components) vs dense f_out*f_in:
+    /// a 2/n_dyad fraction (paper §2.2.1).
+    pub fn total_params(&self) -> usize {
+        2 * self.component_params()
+    }
+
+    /// FLOPs (mul-adds) for one forward matmul with n_batch columns.
+    pub fn flops(&self, n_batch: usize) -> usize {
+        2 * self.total_params() * n_batch
+    }
+
+    pub fn dense_flops(&self, n_batch: usize) -> usize {
+        2 * self.f_in() * self.f_out() * n_batch
+    }
+}
+
+/// Permutation pi over a dimension of size n_block*n_dyad: slot
+/// m = i*n_block + k reads original index k*n_dyad + i (the paper's
+/// Eq-9 stride-swap view). Identical to ref.py's `perm_vector`.
+pub fn perm_vector(n_block: usize, n_dyad: usize) -> Vec<usize> {
+    (0..n_block * n_dyad)
+        .map(|m| {
+            let (i, k) = (m / n_block, m % n_block);
+            k * n_dyad + i
+        })
+        .collect()
+}
+
+/// Invert a permutation vector.
+pub fn invert_perm(pi: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; pi.len()];
+    for (m, &j) in pi.iter().enumerate() {
+        inv[j] = m;
+    }
+    inv
+}
+
+/// Materialise the block-diagonal component: blocks w3[(i, o, k)] laid
+/// on the diagonal of an (f_out, f_in) row-major matrix.
+pub fn blockdiag_full(w3: &[f32], dims: DyadDims) -> Vec<f32> {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    assert_eq!(w3.len(), dims.component_params());
+    let (f_in, f_out) = (dims.f_in(), dims.f_out());
+    let mut full = vec![0.0f32; f_out * f_in];
+    for i in 0..n_dyad {
+        for o in 0..n_out {
+            for k in 0..n_in {
+                let r = i * n_out + o;
+                let c = i * n_in + k;
+                full[r * f_in + c] = w3[(i * n_out + o) * n_in + k];
+            }
+        }
+    }
+    full
+}
+
+/// Materialise the BLOCKTRANS component for the given variant
+/// (BLOCKDIAG with rows/cols permuted; see ref.py for the algebra).
+pub fn blocktrans_full(w3: &[f32], dims: DyadDims, variant: Variant) -> Vec<f32> {
+    let bd = blockdiag_full(w3, dims);
+    let (f_in, f_out) = (dims.f_in(), dims.f_out());
+    match variant {
+        Variant::It => {
+            // W2[:, pi[m]] = BD[:, m]
+            let pi = perm_vector(dims.n_in, dims.n_dyad);
+            let mut out = vec![0.0f32; f_out * f_in];
+            for r in 0..f_out {
+                for m in 0..f_in {
+                    out[r * f_in + pi[m]] = bd[r * f_in + m];
+                }
+            }
+            out
+        }
+        Variant::Ot => {
+            // W2[pi[m], :] = BD[m, :]
+            let pi = perm_vector(dims.n_out, dims.n_dyad);
+            let mut out = vec![0.0f32; f_out * f_in];
+            for m in 0..f_out {
+                out[pi[m] * f_in..(pi[m] + 1) * f_in]
+                    .copy_from_slice(&bd[m * f_in..(m + 1) * f_in]);
+            }
+            out
+        }
+        Variant::Dt => {
+            let pi_c = perm_vector(dims.n_in, dims.n_dyad);
+            let pi_r = perm_vector(dims.n_out, dims.n_dyad);
+            let mut out = vec![0.0f32; f_out * f_in];
+            for m in 0..f_out {
+                for c in 0..f_in {
+                    out[pi_r[m] * f_in + pi_c[c]] = bd[m * f_in + c];
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Materialise the full DYAD matrix W = W1 + W2 (paper Eq 1).
+pub fn dyad_full(wl: &[f32], wu: &[f32], dims: DyadDims, variant: Variant) -> Vec<f32> {
+    let w1 = blockdiag_full(wl, dims);
+    let w2 = blocktrans_full(wu, dims, variant);
+    w1.iter().zip(&w2).map(|(a, b)| a + b).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_validation() {
+        assert!(DyadDims::new(4, 16, 8).is_ok());
+        assert!(DyadDims::new(3, 16, 8).is_err());
+        assert!(DyadDims::new(0, 16, 8).is_err());
+        let d = DyadDims::new(4, 768, 3072).unwrap();
+        assert_eq!(d.n_in, 192);
+        assert_eq!(d.n_out, 768);
+        // total_params * n_dyad == 2 * dense params (paper §2.2.1)
+        assert_eq!(d.total_params() * 4, 2 * 768 * 3072);
+    }
+
+    #[test]
+    fn perm_is_permutation_and_involution_with_inverse() {
+        for (nb, nd) in [(4, 4), (3, 5), (8, 2), (1, 6)] {
+            let pi = perm_vector(nb, nd);
+            let mut sorted = pi.clone();
+            sorted.sort();
+            assert_eq!(sorted, (0..nb * nd).collect::<Vec<_>>());
+            let inv = invert_perm(&pi);
+            for m in 0..pi.len() {
+                assert_eq!(inv[pi[m]], m);
+            }
+            // the inverse is the mirrored stride-swap
+            assert_eq!(inv, perm_vector(nd, nb));
+        }
+    }
+
+    #[test]
+    fn blockdiag_places_blocks() {
+        let dims = DyadDims { n_dyad: 2, n_in: 2, n_out: 1 };
+        // blocks: [[1,2]], [[3,4]]
+        let w3 = vec![1.0, 2.0, 3.0, 4.0];
+        let full = blockdiag_full(&w3, dims);
+        // (f_out=2, f_in=4) row-major
+        assert_eq!(full, vec![1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn blocktrans_permutes_not_destroys() {
+        let dims = DyadDims { n_dyad: 4, n_in: 4, n_out: 4 };
+        let w3: Vec<f32> = (0..dims.component_params()).map(|x| x as f32 + 1.0).collect();
+        let bd = blockdiag_full(&w3, dims);
+        for v in [Variant::It, Variant::Ot, Variant::Dt] {
+            let bt = blocktrans_full(&w3, dims, v);
+            let mut a = bd.clone();
+            let mut b = bt.clone();
+            a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            assert_eq!(a, b, "{v:?}");
+            assert_ne!(bd, bt, "{v:?} must move entries");
+        }
+    }
+
+    #[test]
+    fn dt_composes_it_and_ot() {
+        let dims = DyadDims { n_dyad: 2, n_in: 3, n_out: 2 };
+        let w3: Vec<f32> = (0..dims.component_params()).map(|x| x as f32).collect();
+        let it = blocktrans_full(&w3, dims, Variant::It);
+        let pi_r = perm_vector(dims.n_out, dims.n_dyad);
+        let f_in = dims.f_in();
+        let mut want = vec![0.0; it.len()];
+        for m in 0..dims.f_out() {
+            want[pi_r[m] * f_in..(pi_r[m] + 1) * f_in]
+                .copy_from_slice(&it[m * f_in..(m + 1) * f_in]);
+        }
+        assert_eq!(want, blocktrans_full(&w3, dims, Variant::Dt));
+    }
+}

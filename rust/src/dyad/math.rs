@@ -1,0 +1,159 @@
+//! CPU reference matmuls: dense and the efficient DYAD schedule.
+//!
+//! These are *oracles*, not the hot path (PJRT executables are). The
+//! efficient form is the paper's Eqs 3-10 executed directly on host
+//! slices, so property tests can assert
+//! `dyad_matmul == dense_matmul(dyad_full(...))` for every variant.
+
+use super::layout::{perm_vector, DyadDims, Variant};
+
+/// Row-major (m, k) x (k, n) -> (m, n).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Dense layer: Y = W X (+ b per column), column-major activations
+/// X: (f_in, nb) stored row-major as f_in rows.
+pub fn dense_matmul(
+    w: &[f32],
+    x: &[f32],
+    f_out: usize,
+    f_in: usize,
+    nb: usize,
+    b: Option<&[f32]>,
+) -> Vec<f32> {
+    let mut y = matmul(w, x, f_out, f_in, nb);
+    if let Some(bias) = b {
+        for r in 0..f_out {
+            for c in 0..nb {
+                y[r * nb + c] += bias[r];
+            }
+        }
+    }
+    y
+}
+
+/// Efficient DYAD forward (paper Eqs 3-10): per-block matmuls plus the
+/// stride-swap permutation — O(n_dyad) fewer FLOPs than dense.
+pub fn dyad_matmul(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    let f_out = dims.f_out();
+    assert_eq!(x.len(), dims.f_in() * nb);
+    let mut y = vec![0.0f32; f_out * nb];
+
+    // BLOCKDIAG: y[i*n_out + o] += wl[i] @ x[i*n_in + k]
+    for i in 0..n_dyad {
+        let w_i = &wl[i * n_out * n_in..(i + 1) * n_out * n_in];
+        let x_i = &x[i * n_in * nb..(i + 1) * n_in * nb];
+        let y_i = matmul(w_i, x_i, n_out, n_in, nb);
+        y[i * n_out * nb..(i + 1) * n_out * nb]
+            .iter_mut()
+            .zip(&y_i)
+            .for_each(|(a, b)| *a += b);
+    }
+
+    // BLOCKTRANS: gather the strided input view (IT/DT), per-block
+    // matmul, scatter to strided output rows (OT/DT).
+    let in_perm = matches!(variant, Variant::It | Variant::Dt);
+    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+    let pi_in = perm_vector(n_in, n_dyad); // x2 row m reads x row pi_in[m]
+    let pi_out = perm_vector(n_out, n_dyad);
+    for i in 0..n_dyad {
+        let w_i = &wu[i * n_out * n_in..(i + 1) * n_out * n_in];
+        // assemble x2 block i: rows (i*n_in .. ) of the permuted view
+        let mut x2 = vec![0.0f32; n_in * nb];
+        for k in 0..n_in {
+            let src_row = if in_perm { pi_in[i * n_in + k] } else { i * n_in + k };
+            x2[k * nb..(k + 1) * nb]
+                .copy_from_slice(&x[src_row * nb..(src_row + 1) * nb]);
+        }
+        let z = matmul(w_i, &x2, n_out, n_in, nb);
+        for o in 0..n_out {
+            let dst_row = if out_perm { pi_out[i * n_out + o] } else { i * n_out + o };
+            y[dst_row * nb..(dst_row + 1) * nb]
+                .iter_mut()
+                .zip(&z[o * nb..(o + 1) * nb])
+                .for_each(|(a, b)| *a += b);
+        }
+    }
+
+    if let Some(b) = bias {
+        for r in 0..f_out {
+            for c in 0..nb {
+                y[r * nb + c] += b[r];
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dyad::layout::dyad_full;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let i2 = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![3.0, 4.0, 5.0, 6.0];
+        assert_eq!(matmul(&i2, &b, 2, 2, 2), b);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0, 1.0, 1.0, 1.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn dyad_matches_materialised_all_variants() {
+        let mut rng = Rng::new(7);
+        for (nd, n_in, n_out, nb) in [(4, 4, 4, 3), (2, 3, 5, 4), (8, 2, 2, 1)] {
+            let dims = DyadDims { n_dyad: nd, n_in, n_out };
+            let wl = rand_vec(&mut rng, dims.component_params());
+            let wu = rand_vec(&mut rng, dims.component_params());
+            let x = rand_vec(&mut rng, dims.f_in() * nb);
+            let bias = rand_vec(&mut rng, dims.f_out());
+            for v in [Variant::It, Variant::Ot, Variant::Dt] {
+                let full = dyad_full(&wl, &wu, dims, v);
+                let want =
+                    dense_matmul(&full, &x, dims.f_out(), dims.f_in(), nb, Some(&bias));
+                let got = dyad_matmul(&wl, &wu, &x, dims, v, nb, Some(&bias));
+                for (a, b) in want.iter().zip(&got) {
+                    assert!((a - b).abs() < 1e-4, "{v:?}: {a} vs {b}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Pure-rust DYAD mathematics.
+//!
+//! The coordinator-side ground truth for the paper's layer family:
+//! permutation bookkeeping, materialisation of the near-sparse weight
+//! matrix, the efficient block-diagonal schedule, parameter accounting
+//! and the Eq 17/18 connectivity analysis. Used by property tests, the
+//! memory tables (T11/F8) and `repro inspect`.
+
+pub mod connectivity;
+pub mod layout;
+pub mod math;
+
+pub use connectivity::{connection_counts, connectivity_ratio};
+pub use layout::{blockdiag_full, blocktrans_full, dyad_full, perm_vector, DyadDims, Variant};
+pub use math::{dense_matmul, dyad_matmul, matmul};

@@ -1,0 +1,87 @@
+//! Zero-shot minimal-pair evaluation (the paper's BLIMP benchmark).
+//!
+//! For each phenomenon, generate N grammatical/ungrammatical twins and
+//! count how often the LM assigns the grammatical member a higher
+//! summed log-probability — BLIMP's exact protocol.
+
+use anyhow::Result;
+
+use super::run_with_params;
+use crate::data::dataset::pad_batch;
+use crate::data::grammar::{Grammar, Phenomenon};
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::{Loaded, TrainState};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct BlimpResult {
+    /// (phenomenon name, accuracy, n pairs)
+    pub per_phenomenon: Vec<(String, f64, usize)>,
+    pub mean: f64,
+}
+
+/// Score a batch of token sequences; returns per-sequence summed logp.
+fn score_batch(
+    art: &Loaded,
+    state: &TrainState,
+    seqs: &[Vec<i32>],
+    b: usize,
+    s: usize,
+) -> Result<Vec<f64>> {
+    let (tokens, mask) = pad_batch(seqs, b, s)?;
+    let out = run_with_params(art, state, &[tokens, mask])?;
+    let sums = out[0].to_vec::<f32>()?;
+    Ok(sums[..seqs.len()].iter().map(|&x| x as f64).collect())
+}
+
+pub fn evaluate(
+    score_art: &Loaded,
+    state: &TrainState,
+    tokenizer: &Tokenizer,
+    pairs_per_phenomenon: usize,
+    seed: u64,
+) -> Result<BlimpResult> {
+    let grammar = Grammar::new();
+    let b = score_art.spec.meta_usize("batch")?;
+    let s = score_art.spec.meta_usize("seq")?;
+    let mut per = Vec::new();
+    let mut rng = Rng::new(seed);
+    for ph in Phenomenon::ALL {
+        let mut correct = 0usize;
+        let mut ties = 0usize;
+        let mut pending: Vec<Vec<i32>> = Vec::new();
+        let mut n_done = 0usize;
+        let flush =
+            |pending: &mut Vec<Vec<i32>>, correct: &mut usize, ties: &mut usize|
+             -> Result<()> {
+                // pending holds alternating good/bad sequences
+                for chunk in pending.chunks(b) {
+                    let scores = score_batch(score_art, state, chunk, b, s)?;
+                    for pair in scores.chunks_exact(2) {
+                        if pair[0] > pair[1] {
+                            *correct += 1;
+                        } else if pair[0] == pair[1] {
+                            *ties += 1;
+                        }
+                    }
+                }
+                pending.clear();
+                Ok(())
+            };
+        for _ in 0..pairs_per_phenomenon {
+            let p = grammar.minimal_pair(ph, &mut rng);
+            pending.push(tokenizer.encode_sentence(&p.good));
+            pending.push(tokenizer.encode_sentence(&p.bad));
+            n_done += 1;
+            if pending.len() + 2 > b - (b % 2) {
+                flush(&mut pending, &mut correct, &mut ties)?;
+            }
+        }
+        flush(&mut pending, &mut correct, &mut ties)?;
+        // ties count half (random-guess convention)
+        let acc = (correct as f64 + 0.5 * ties as f64) / n_done as f64;
+        per.push((ph.name().to_string(), acc, n_done));
+    }
+    let mean = per.iter().map(|(_, a, _)| a).sum::<f64>() / per.len() as f64;
+    Ok(BlimpResult { per_phenomenon: per, mean })
+}

@@ -1,0 +1,119 @@
+//! Few-shot multiple-choice evaluation (the paper's OPENLLM suite).
+//!
+//! LMEvalHarness protocol: build a k-shot prompt of solved examples,
+//! append the query stem, then score each choice continuation by its
+//! length-normalised log-probability under the model (mask restricted
+//! to the choice tokens). Accuracy = argmax matches the gold choice.
+
+use anyhow::Result;
+
+use super::run_with_params;
+use crate::data::grammar::{Grammar, McqTask};
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::{Loaded, TrainState};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct McqResult {
+    /// (task name, accuracy, n items)
+    pub per_task: Vec<(String, f64, usize)>,
+    pub mean: f64,
+}
+
+/// Score (tokens, mask) rows; returns (sum_logp, n_tok) per row.
+fn score_rows(
+    art: &Loaded,
+    state: &TrainState,
+    rows: &[(Vec<i32>, Vec<f32>)],
+    b: usize,
+    s: usize,
+) -> Result<Vec<(f64, f64)>> {
+    let mut out = Vec::with_capacity(rows.len());
+    for chunk in rows.chunks(b) {
+        let mut toks = vec![0i32; b * s];
+        let mut mask = vec![0.0f32; b * s];
+        for (i, (t, m)) in chunk.iter().enumerate() {
+            let n = t.len().min(s);
+            let start = t.len() - n; // keep most recent context
+            toks[i * s..i * s + n].copy_from_slice(&t[start..]);
+            mask[i * s..i * s + n].copy_from_slice(&m[start..]);
+        }
+        let lits = run_with_params(
+            art,
+            state,
+            &[
+                Tensor::from_i32(&[b, s], toks)?,
+                Tensor::from_f32(&[b, s], mask)?,
+            ],
+        )?;
+        let sums = lits[0].to_vec::<f32>()?;
+        let counts = lits[1].to_vec::<f32>()?;
+        for i in 0..chunk.len() {
+            out.push((sums[i] as f64, counts[i] as f64));
+        }
+    }
+    Ok(out)
+}
+
+pub fn evaluate(
+    score_art: &Loaded,
+    state: &TrainState,
+    tokenizer: &Tokenizer,
+    items_per_task: usize,
+    shots: usize,
+    seed: u64,
+) -> Result<McqResult> {
+    let grammar = Grammar::new();
+    let b = score_art.spec.meta_usize("batch")?;
+    let s = score_art.spec.meta_usize("seq")?;
+    let mut per = Vec::new();
+    let mut rng = Rng::new(seed);
+    for task in McqTask::ALL {
+        let mut correct = 0usize;
+        for _ in 0..items_per_task {
+            // k-shot prompt: solved examples joined with <eos>.
+            let mut prefix: Vec<i32> = Vec::new();
+            for _ in 0..shots {
+                let shot = grammar.mcq(task, &mut rng);
+                let mut words = shot.stem.clone();
+                words.extend(shot.choices[shot.correct].clone());
+                prefix.extend(tokenizer.encode_sentence(&words));
+            }
+            let item = grammar.mcq(task, &mut rng);
+            let mut rows: Vec<(Vec<i32>, Vec<f32>)> = Vec::new();
+            for choice in &item.choices {
+                let mut toks = prefix.clone();
+                toks.extend(tokenizer.encode(&item.stem));
+                let stem_len = toks.len();
+                toks.extend(tokenizer.encode(choice));
+                let mut mask = vec![0.0f32; toks.len()];
+                for m in mask.iter_mut().skip(stem_len) {
+                    *m = 1.0;
+                }
+                rows.push((toks, mask));
+            }
+            let scored = score_rows(score_art, state, &rows, b, s)?;
+            let pick = scored
+                .iter()
+                .enumerate()
+                .max_by(|(_, (sa, na)), (_, (sb, nb))| {
+                    (sa / na.max(1.0))
+                        .partial_cmp(&(sb / nb.max(1.0)))
+                        .unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap();
+            if pick == item.correct {
+                correct += 1;
+            }
+        }
+        per.push((
+            task.name().to_string(),
+            correct as f64 / items_per_task as f64,
+            items_per_task,
+        ));
+    }
+    let mean = per.iter().map(|(_, a, _)| a).sum::<f64>() / per.len() as f64;
+    Ok(McqResult { per_task: per, mean })
+}

@@ -1,0 +1,115 @@
+//! §3.4.5: the MNIST vision probe — DENSE vs DYAD-IT hidden layers.
+//!
+//! Trains the 784→256→256→10 MLP artifact on procedural digits, then
+//! reports test accuracy and the "ff-only" time per minibatch (the two
+//! swap-site linears), mirroring the paper's CPU experiment.
+
+use anyhow::{Context, Result};
+
+use crate::bench_support::{bench_artifact, BenchOpts};
+use crate::data::mnist::MnistGen;
+use crate::runtime::{Engine, TrainState};
+use crate::util::timer::Timer;
+
+#[derive(Debug, Clone)]
+pub struct MnistOutcome {
+    pub variant: String,
+    pub test_accuracy: f64,
+    pub hidden_fwd_ms: f64,
+    pub final_loss: f64,
+    pub train_wall_s: f64,
+    pub params: usize,
+}
+
+/// Train + evaluate one variant. `steps` counts optimizer steps.
+pub fn run_variant(
+    engine: &Engine,
+    variant: &str,
+    steps: usize,
+    seed: u64,
+) -> Result<MnistOutcome> {
+    let train_art = engine
+        .load(&format!("mnist/{variant}/train_k4"))
+        .with_context(|| format!("mnist train artifact for {variant}"))?;
+    let acc_art = engine.load(&format!("mnist/{variant}/accuracy"))?;
+    let k = train_art.spec.meta_usize("k_micro")?;
+    let b = train_art.spec.meta_usize("batch")?;
+    let mut state = TrainState::init(&train_art.spec, seed)?;
+    let mut gen = MnistGen::new(seed ^ 0xD161);
+    let timer = Timer::start();
+    let mut final_loss = f64::NAN;
+    let n_calls = steps.div_ceil(k);
+    for _ in 0..n_calls {
+        let (images, labels) = gen.train_batch(k, b);
+        let losses = state.train_call(&train_art, 1e-3, &[images, labels])?;
+        final_loss = *losses.last().unwrap() as f64;
+    }
+    let train_wall_s = timer.elapsed_s();
+
+    // held-out accuracy over fresh renders (generator is the population)
+    let mut test_gen = MnistGen::new(seed ^ 0x7E57);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let eval_batches = 20;
+    for _ in 0..eval_batches {
+        let (images, labels) = test_gen.batch(b);
+        let out = crate::eval::run_with_params(&acc_art, &state, &[images, labels])?;
+        correct += out[0].to_vec::<i32>()?[0] as usize;
+        total += b;
+    }
+
+    let fwd = bench_artifact(
+        engine,
+        &format!("mnist/{variant}/hidden_fwd"),
+        BenchOpts { warmup: 3, reps: 20, seed },
+    )?;
+
+    Ok(MnistOutcome {
+        variant: variant.to_string(),
+        test_accuracy: correct as f64 / total as f64,
+        hidden_fwd_ms: fwd.mean,
+        final_loss,
+        train_wall_s,
+        params: train_art.spec.param_count(),
+    })
+}
+
+/// The full §3.4.5 comparison; prints the paper-shaped summary.
+pub fn run(
+    artifacts_dir: &str,
+    steps: usize,
+    only_variant: Option<&str>,
+    seed: u64,
+) -> Result<()> {
+    let engine = Engine::from_dir(artifacts_dir)?;
+    let variants: Vec<&str> = match only_variant {
+        Some(v) => vec![v],
+        None => vec!["dense", "dyad_it"],
+    };
+    let mut outcomes = Vec::new();
+    for v in variants {
+        println!("training mnist/{v} for {steps} steps ...");
+        let o = run_variant(&engine, v, steps, seed)?;
+        println!(
+            "  {}: test_acc={:.2}% hidden_fwd={:.3} ms/minibatch params={} \
+             final_loss={:.4} ({:.1}s train)",
+            o.variant,
+            100.0 * o.test_accuracy,
+            o.hidden_fwd_ms,
+            o.params,
+            o.final_loss,
+            o.train_wall_s
+        );
+        outcomes.push(o);
+    }
+    if outcomes.len() == 2 {
+        let (d, y) = (&outcomes[0], &outcomes[1]);
+        println!(
+            "\n§3.4.5 shape check: dyad within {:.1} pts of dense accuracy \
+             (paper: 98.51 vs 98.43); ff speedup {:.2}x (paper: 1.29x)",
+            100.0 * (d.test_accuracy - y.test_accuracy).abs(),
+            d.hidden_fwd_ms / y.hidden_fwd_ms
+        );
+    }
+    Ok(())
+}

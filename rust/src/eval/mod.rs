@@ -1,0 +1,56 @@
+//! Evaluation harnesses: the paper's three benchmark families, rebuilt
+//! on the nanoBabyLM grammar (DESIGN.md §6 substitutions).
+//!
+//! * `blimp`  — zero-shot minimal pairs (BLIMP): P(good) > P(bad).
+//! * `mcq`    — few-shot multiple choice (OPENLLM): length-normalised
+//!   choice log-prob under a k-shot prompt.
+//! * `probe`  — finetuning-style transfer (GLUE): frozen LM features +
+//!   a logistic-regression head trained in rust.
+//! * `report` — aggregates the three into a Table-2-shaped report.
+
+pub mod blimp;
+pub mod mcq;
+pub mod mnist_probe;
+pub mod probe;
+pub mod report;
+
+pub use blimp::BlimpResult;
+pub use mcq::McqResult;
+pub use probe::ProbeResult;
+pub use report::QualityReport;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{tensor_to_literal, Loaded, TrainState};
+use crate::tensor::Tensor;
+
+/// Run a params+data artifact (score/features/next_logits/...) against
+/// the current state. `data` are positional tensors for the Data inputs.
+pub fn run_with_params(
+    art: &Loaded,
+    state: &TrainState,
+    data: &[Tensor],
+) -> Result<Vec<xla::Literal>> {
+    let data_specs: Vec<_> = art
+        .spec
+        .inputs
+        .iter()
+        .filter(|i| i.role == crate::runtime::Role::Data)
+        .collect();
+    anyhow::ensure!(
+        data.len() == data_specs.len(),
+        "{}: {} data tensors, manifest wants {}",
+        art.spec.name,
+        data.len(),
+        data_specs.len()
+    );
+    let data_lits: Vec<xla::Literal> = data
+        .iter()
+        .zip(&data_specs)
+        .map(|(t, s)| tensor_to_literal(t, s))
+        .collect::<Result<_>>()
+        .context("stage data")?;
+    let mut inputs: Vec<&xla::Literal> = state.param_literals().iter().collect();
+    inputs.extend(data_lits.iter());
+    art.run_literals(&inputs)
+}

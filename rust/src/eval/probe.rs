@@ -1,0 +1,178 @@
+//! Probe-task evaluation (the paper's GLUE+ finetuning benchmark).
+//!
+//! Transfer protocol: freeze the pretrained LM, extract mean-pooled
+//! hidden features via the `features` artifact, then train a logistic
+//! -regression head per task **in rust** (plain SGD + momentum) and
+//! report held-out accuracy. This keeps the paper's question — does
+//! the representation transfer? — while avoiding per-task re-lowering
+//! (DESIGN.md §6).
+
+use anyhow::Result;
+
+use super::run_with_params;
+use crate::data::dataset::pad_batch;
+use crate::data::grammar::{Grammar, ProbeTask};
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::{Loaded, TrainState};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ProbeResult {
+    /// (task name, test accuracy, n train, n test)
+    pub per_task: Vec<(String, f64, usize, usize)>,
+    pub mean: f64,
+}
+
+/// Extract features for a set of token sequences.
+fn features_for(
+    art: &Loaded,
+    state: &TrainState,
+    seqs: &[Vec<i32>],
+    b: usize,
+    s: usize,
+    d: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::with_capacity(seqs.len());
+    for chunk in seqs.chunks(b) {
+        let (tokens, mask) = pad_batch(chunk, b, s)?;
+        let lits = run_with_params(art, state, &[tokens, mask])?;
+        let flat = lits[0].to_vec::<f32>()?;
+        for i in 0..chunk.len() {
+            out.push(flat[i * d..(i + 1) * d].to_vec());
+        }
+    }
+    Ok(out)
+}
+
+/// Binary logistic-regression head trained with SGD + momentum.
+pub struct LogisticHead {
+    pub w: Vec<f32>,
+    pub b: f32,
+}
+
+impl LogisticHead {
+    pub fn train(
+        xs: &[Vec<f32>],
+        ys: &[usize],
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+    ) -> LogisticHead {
+        let d = xs[0].len();
+        let mut w = vec![0.0f32; d];
+        let mut b = 0.0f32;
+        let mut mw = vec![0.0f32; d];
+        let mut mb = 0.0f32;
+        let momentum = 0.9f32;
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut rng = Rng::new(seed);
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let x = &xs[i];
+                let z: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum::<f32>() + b;
+                let p = 1.0 / (1.0 + (-z).exp());
+                let err = p - ys[i] as f32; // dL/dz for BCE
+                for j in 0..d {
+                    mw[j] = momentum * mw[j] + err * x[j];
+                    w[j] -= lr * mw[j];
+                }
+                mb = momentum * mb + err;
+                b -= lr * mb;
+            }
+        }
+        LogisticHead { w, b }
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let z: f32 = x.iter().zip(&self.w).map(|(a, b)| a * b).sum::<f32>() + self.b;
+        (z > 0.0) as usize
+    }
+}
+
+pub fn evaluate(
+    features_art: &Loaded,
+    state: &TrainState,
+    tokenizer: &Tokenizer,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> Result<ProbeResult> {
+    let grammar = Grammar::new();
+    let b = features_art.spec.meta_usize("batch")?;
+    let s = features_art.spec.meta_usize("seq")?;
+    let d = features_art.spec.outputs[0].shape[1];
+    let mut per = Vec::new();
+    let mut rng = Rng::new(seed);
+    for task in ProbeTask::ALL {
+        let mut seqs = Vec::with_capacity(n_train + n_test);
+        let mut labels = Vec::with_capacity(n_train + n_test);
+        for _ in 0..n_train + n_test {
+            let (words, label) = grammar.probe_example(task, &mut rng);
+            seqs.push(tokenizer.encode_sentence(&words));
+            labels.push(label);
+        }
+        let feats = features_for(features_art, state, &seqs, b, s, d)?;
+        let (train_x, test_x) = feats.split_at(n_train);
+        let (train_y, test_y) = labels.split_at(n_train);
+        let head = LogisticHead::train(train_x, train_y, 30, 0.01, seed ^ 0x9E37);
+        let correct = test_x
+            .iter()
+            .zip(test_y)
+            .filter(|(x, &y)| head.predict(x) == y)
+            .count();
+        per.push((
+            task.name().to_string(),
+            correct as f64 / n_test as f64,
+            n_train,
+            n_test,
+        ));
+    }
+    let mean = per.iter().map(|(_, a, _, _)| a).sum::<f64>() / per.len() as f64;
+    Ok(ProbeResult { per_task: per, mean })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logistic_head_learns_separable_data() {
+        let mut rng = Rng::new(0);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..200 {
+            let label = i % 2;
+            let center = if label == 1 { 1.0 } else { -1.0 };
+            xs.push(vec![
+                center + 0.3 * rng.normal() as f32,
+                -center + 0.3 * rng.normal() as f32,
+            ]);
+            ys.push(label);
+        }
+        let head = LogisticHead::train(&xs[..160], &ys[..160], 20, 0.1, 1);
+        let acc = xs[160..]
+            .iter()
+            .zip(&ys[160..])
+            .filter(|(x, &y)| head.predict(x) == y)
+            .count() as f64
+            / 40.0;
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn logistic_head_chance_on_random_labels() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f32>> =
+            (0..100).map(|_| vec![rng.f32(), rng.f32()]).collect();
+        let ys: Vec<usize> = (0..100).map(|_| rng.below(2)).collect();
+        let head = LogisticHead::train(&xs[..80], &ys[..80], 10, 0.05, 3);
+        let acc = xs[80..]
+            .iter()
+            .zip(&ys[80..])
+            .filter(|(x, &y)| head.predict(x) == y)
+            .count() as f64
+            / 20.0;
+        assert!(acc < 0.95); // must not hallucinate structure
+    }
+}

@@ -1,0 +1,90 @@
+//! Quality report: the Table-2-shaped aggregate over the three suites.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{BlimpResult, McqResult, ProbeResult};
+use crate::util::json::{arr, num, obj, s, Json};
+
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    pub arch: String,
+    pub variant: String,
+    pub blimp: BlimpResult,
+    pub mcq: McqResult,
+    pub probe: ProbeResult,
+    pub valid_loss: f64,
+    pub final_train_loss: f64,
+    pub params: usize,
+    pub checkpoint_bytes: u64,
+}
+
+impl QualityReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("arch", s(&self.arch)),
+            ("variant", s(&self.variant)),
+            ("valid_loss", num(self.valid_loss)),
+            ("final_train_loss", num(self.final_train_loss)),
+            ("params", num(self.params as f64)),
+            ("checkpoint_bytes", num(self.checkpoint_bytes as f64)),
+            ("blimp_mean", num(self.blimp.mean)),
+            (
+                "blimp",
+                arr(self.blimp.per_phenomenon.iter().map(|(n, a, c)| {
+                    obj(vec![("name", s(n)), ("acc", num(*a)), ("n", num(*c as f64))])
+                })),
+            ),
+            ("mcq_mean", num(self.mcq.mean)),
+            (
+                "mcq",
+                arr(self.mcq.per_task.iter().map(|(n, a, c)| {
+                    obj(vec![("name", s(n)), ("acc", num(*a)), ("n", num(*c as f64))])
+                })),
+            ),
+            ("probe_mean", num(self.probe.mean)),
+            (
+                "probe",
+                arr(self.probe.per_task.iter().map(|(n, a, tr, te)| {
+                    obj(vec![
+                        ("name", s(n)),
+                        ("acc", num(*a)),
+                        ("n_train", num(*tr as f64)),
+                        ("n_test", num(*te as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Human-readable table (paper Table 2 row shape).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "== {} / {} ==\n  params             {:>12}\n  ckpt bytes         {:>12}\n  valid loss         {:>12.4}\n",
+            self.arch, self.variant, self.params, self.checkpoint_bytes, self.valid_loss
+        ));
+        out.push_str(&format!("  BLIMP mean         {:>12.4}\n", self.blimp.mean));
+        for (name, acc, _) in &self.blimp.per_phenomenon {
+            out.push_str(&format!("    {name:<24} {acc:.4}\n"));
+        }
+        out.push_str(&format!("  OPENLLM(mcq) mean  {:>12.4}\n", self.mcq.mean));
+        for (name, acc, _) in &self.mcq.per_task {
+            out.push_str(&format!("    {name:<24} {acc:.4}\n"));
+        }
+        out.push_str(&format!("  GLUE(probe) mean   {:>12.4}\n", self.probe.mean));
+        for (name, acc, _, _) in &self.probe.per_task {
+            out.push_str(&format!("    {name:<24} {acc:.4}\n"));
+        }
+        out
+    }
+}

@@ -1,0 +1,35 @@
+//! # dyad-repro — DYAD block-sparse linear layers, end to end
+//!
+//! Reproduction of *"DYAD: A Descriptive Yet Abjuring Density efficient
+//! approximation to linear neural network layers"* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time Python)** — Pallas DYAD kernels and a JAX
+//!   transformer, AOT-lowered to HLO text (`make artifacts`).
+//! * **L3 (this crate)** — the runtime coordinator: PJRT execution,
+//!   data pipeline, training loop, evaluation harnesses, a batched
+//!   inference server, and the benchmark suite that regenerates every
+//!   table and figure of the paper.
+//!
+//! Python never runs on the request path; after `make artifacts` the
+//! `repro` binary is self-contained.
+//!
+//! Quick tour (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use dyad_repro::runtime::Engine;
+//! let engine = Engine::from_dir("artifacts").unwrap();
+//! let art = engine.load("ff/opt125m-ff/dyad_it/fwd").unwrap();
+//! ```
+
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dyad;
+pub mod eval;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod testing;
+pub mod util;

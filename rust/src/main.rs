@@ -1,0 +1,411 @@
+//! `repro` — the DYAD reproduction coordinator CLI.
+//!
+//! Subcommands:
+//!   train            pretrain one (arch, variant) on nanoBabyLM
+//!   quality          pretrain + full benchmark suite (Tables 2/3/6-8/12)
+//!   eval             run the benchmark suite on an existing checkpoint
+//!   serve            batched-inference demo server (scoring/generation)
+//!   mnist            the §3.4.5 MNIST probe (dense vs dyad)
+//!   data-gen         dump a nanoBabyLM corpus / minimal pairs to stdout
+//!   inspect          connectivity analysis (Eq 17/18) + artifact info
+//!   list-artifacts   show the manifest inventory
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use dyad_repro::config::TrainConfig;
+use dyad_repro::coordinator::{MetricsLogger, Trainer};
+use dyad_repro::data::{Grammar, Tokenizer};
+use dyad_repro::dyad::{connectivity_ratio, DyadDims, Variant};
+use dyad_repro::eval;
+use dyad_repro::runtime::Engine;
+use dyad_repro::util::cli::Args;
+use dyad_repro::util::json::{num, s};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "quality" => cmd_quality(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "mnist" => cmd_mnist(&args),
+        "data-gen" => cmd_data_gen(&args),
+        "inspect" => cmd_inspect(&args),
+        "list-artifacts" => cmd_list(&args),
+        "quality-summary" => cmd_quality_summary(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — DYAD reproduction coordinator\n\n\
+         USAGE: repro <command> [--flag value]...\n\n\
+         COMMANDS:\n\
+           train          --arch A --variant V --steps N --lr F --out DIR\n\
+           quality        --arch A [--variants v1,v2] --steps N --out DIR\n\
+           eval           --arch A --variant V --ckpt DIR [--pairs N]\n\
+           serve          --arch A --variant V [--ckpt DIR] [--requests N]\n\
+           mnist          [--steps N] [--variant dense|dyad_it]\n\
+           data-gen       [--tokens N | --pairs N] [--seed S]\n\
+           inspect        [--n-dyad N] [--n-in N] | --artifact NAME\n\
+           list-artifacts [--kind K]\n\
+           quality-summary --dir runs/quality-opt   (render Table-2 style)\n\n\
+         Common flags: --artifacts DIR (default: artifacts)"
+    );
+}
+
+fn engine_of(args: &Args) -> Result<Engine> {
+    Engine::from_dir(args.str_or("artifacts", "artifacts"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    let engine = Engine::from_dir(&cfg.artifacts_dir)?;
+    let mut log = MetricsLogger::to_dir(&cfg.out_dir)?;
+    std::fs::write(cfg.out_dir.join("config.json"), cfg.to_json().to_string())?;
+    let report = Trainer::new(cfg).run(&engine, &mut log)?;
+    println!(
+        "train done: steps={} first_loss={:.4} final_loss={:.4} valid={:.4} \
+         ({:.0} ms/call)",
+        report.steps,
+        report.first_loss,
+        report.final_loss,
+        report.valid_loss,
+        report.ms_per_call.mean
+    );
+    Ok(())
+}
+
+/// Pretrain + evaluate one or more variants; writes per-variant quality
+/// reports (the Table 2/3 pipeline).
+fn cmd_quality(args: &Args) -> Result<()> {
+    let arch = args.str_or("arch", "opt-mini");
+    let variants: Vec<String> = args
+        .str_or("variants", "dense,dyad_it")
+        .split(',')
+        .map(|v| v.trim().to_string())
+        .collect();
+    let out_root = PathBuf::from(args.str_or("out", "runs/quality"));
+    for variant in &variants {
+        let mut sub = Args::parse(Vec::new())?;
+        sub.flags = args.flags.clone();
+        sub.flags.insert("arch".into(), arch.clone());
+        sub.flags.insert("variant".into(), variant.clone());
+        sub.flags.insert(
+            "out".into(),
+            out_root.join(variant).to_string_lossy().into_owned(),
+        );
+        let cfg = TrainConfig::from_args(&sub)?;
+        let engine = Engine::from_dir(&cfg.artifacts_dir)?;
+        let mut log = MetricsLogger::to_dir(&cfg.out_dir)?;
+        std::fs::write(cfg.out_dir.join("config.json"), cfg.to_json().to_string())?;
+        println!("== pretraining {arch}/{variant} ==");
+        let out_dir = cfg.out_dir.clone();
+        let report = Trainer::new(cfg.clone()).run(&engine, &mut log)?;
+        let quality = run_suite(&engine, &cfg, &report, args)?;
+        quality.save(&out_dir.join("quality.json"))?;
+        println!("{}", quality.render_table());
+    }
+    Ok(())
+}
+
+fn run_suite(
+    engine: &Engine,
+    cfg: &TrainConfig,
+    report: &dyad_repro::coordinator::TrainReport,
+    args: &Args,
+) -> Result<eval::QualityReport> {
+    let grammar = Grammar::new();
+    let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
+    let ckpt =
+        dyad_repro::coordinator::checkpoint::CheckpointManager::new(&cfg.out_dir);
+    let train_spec = engine
+        .manifest
+        .artifact(&cfg.train_artifact(8))
+        .or_else(|_| engine.manifest.artifact(&cfg.train_artifact(1)))?
+        .clone();
+    let state = ckpt.load_state(&train_spec)?;
+    let score_art = engine.load(&cfg.artifact("score"))?;
+    let feats_art = engine.load(&cfg.artifact("features"))?;
+    let pairs = args.usize_or("pairs", 50)?;
+    let mcq_items = args.usize_or("mcq-items", 25)?;
+    let shots = args.usize_or("shots", 3)?;
+    let probe_train = args.usize_or("probe-train", 128)?;
+    let probe_test = args.usize_or("probe-test", 64)?;
+    let blimp =
+        eval::blimp::evaluate(&score_art, &state, &tokenizer, pairs, cfg.seed)?;
+    let mcq = eval::mcq::evaluate(
+        &score_art, &state, &tokenizer, mcq_items, shots, cfg.seed,
+    )?;
+    let probe = eval::probe::evaluate(
+        &feats_art, &state, &tokenizer, probe_train, probe_test, cfg.seed,
+    )?;
+    Ok(eval::QualityReport {
+        arch: cfg.arch.clone(),
+        variant: cfg.variant.clone(),
+        blimp,
+        mcq,
+        probe,
+        valid_loss: report.valid_loss,
+        final_train_loss: report.final_loss,
+        params: report.params,
+        checkpoint_bytes: report.checkpoint_bytes,
+    })
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    let engine = Engine::from_dir(&cfg.artifacts_dir)?;
+    let ckpt_dir = PathBuf::from(
+        args.str_opt("ckpt")
+            .context("--ckpt DIR required (a prior train run's --out)")?,
+    );
+    let grammar = Grammar::new();
+    let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
+    let train_spec = engine
+        .manifest
+        .artifact(&cfg.train_artifact(8))
+        .or_else(|_| engine.manifest.artifact(&cfg.train_artifact(1)))?
+        .clone();
+    let mgr = dyad_repro::coordinator::checkpoint::CheckpointManager::new(&ckpt_dir);
+    if !mgr.has_state() {
+        bail!("no checkpoint in {}", ckpt_dir.display());
+    }
+    let state = mgr.load_state(&train_spec)?;
+    let score_art = engine.load(&cfg.artifact("score"))?;
+    let pairs = args.usize_or("pairs", 50)?;
+    let blimp =
+        eval::blimp::evaluate(&score_art, &state, &tokenizer, pairs, cfg.seed)?;
+    println!("BLIMP mean = {:.4}", blimp.mean);
+    for (name, acc, n) in &blimp.per_phenomenon {
+        println!("  {name:<24} {acc:.4}  (n={n})");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use dyad_repro::serve::{Request, ServeConfig, ServerHandle};
+    let cfg = ServeConfig {
+        artifacts_dir: args.str_or("artifacts", "artifacts").into(),
+        arch: args.str_or("arch", "opt-mini"),
+        variant: args.str_or("variant", "dyad_it"),
+        checkpoint_dir: args.str_opt("ckpt").map(PathBuf::from),
+        max_batch: args.usize_or("max-batch", 8)?,
+        window_ms: args.u64_or("window-ms", 5)?,
+        seed: args.u64_or("seed", 7)?,
+    };
+    let n = args.usize_or("requests", 64)?;
+    println!("starting server ({}/{}) ...", cfg.arch, cfg.variant);
+    let server = ServerHandle::start(cfg);
+    let grammar = Grammar::new();
+    let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
+    let mut rng = dyad_repro::util::rng::Rng::new(1);
+    let mut sentences = Vec::new();
+    for _ in 0..n {
+        sentences.push(tokenizer.encode_sentence(&grammar.sentence(&mut rng)));
+    }
+    std::thread::scope(|scope| {
+        for chunk in sentences.chunks(n.div_ceil(4).max(1)) {
+            let srv = server.sender();
+            scope.spawn(move || {
+                for toks in chunk {
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    let _ = srv.send(Request::Score { tokens: toks.clone(), resp: rtx });
+                    let _ = rrx.recv();
+                }
+            });
+        }
+    });
+    let stats = server.stats()?;
+    println!("{}", stats.render());
+    server.shutdown()?;
+    Ok(())
+}
+
+fn cmd_mnist(args: &Args) -> Result<()> {
+    eval::mnist_probe::run(
+        &args.str_or("artifacts", "artifacts"),
+        args.usize_or("steps", 200)?,
+        args.str_opt("variant"),
+        args.u64_or("seed", 5)?,
+    )
+}
+
+fn cmd_data_gen(args: &Args) -> Result<()> {
+    let grammar = Grammar::new();
+    let seed = args.u64_or("seed", 0)?;
+    if let Some(p) = args.str_opt("pairs") {
+        let n: usize = p.parse()?;
+        let mut rng = dyad_repro::util::rng::Rng::new(seed);
+        for ph in dyad_repro::data::Phenomenon::ALL {
+            for _ in 0..n {
+                let pair = grammar.minimal_pair(ph, &mut rng);
+                println!(
+                    "{}\t{}\t{}",
+                    ph.name(),
+                    pair.good.join(" "),
+                    pair.bad.join(" ")
+                );
+            }
+        }
+        return Ok(());
+    }
+    let tokens = args.usize_or("tokens", 1000)?;
+    let words = grammar.corpus(tokens, seed);
+    let mut line = Vec::new();
+    for w in words {
+        let end = w == "." || w == "?";
+        line.push(w);
+        if end {
+            println!("{}", line.join(" "));
+            line.clear();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if let Some(name) = args.str_opt("artifact") {
+        let engine = engine_of(args)?;
+        let spec = engine.manifest.artifact(name)?;
+        println!("artifact {name}");
+        println!("  kind    {}", spec.kind);
+        println!("  file    {}", spec.file);
+        println!(
+            "  params  {} tensors / {} values",
+            spec.param_specs().len(),
+            spec.param_count()
+        );
+        println!("  inputs  {}", spec.inputs.len());
+        for io in &spec.inputs {
+            println!(
+                "    {:<28} {:?} {:?} {:?}",
+                io.name, io.shape, io.dtype, io.role
+            );
+        }
+        println!("  outputs {}", spec.outputs.len());
+        for io in spec.outputs.iter().take(8) {
+            println!("    {:<28} {:?} {:?}", io.name, io.shape, io.dtype);
+        }
+        if spec.outputs.len() > 8 {
+            println!("    ... ({} more)", spec.outputs.len() - 8);
+        }
+        return Ok(());
+    }
+    let n_dyad = args.usize_or("n-dyad", 4)?;
+    let n_in = args.usize_or("n-in", 16)?;
+    let dims = DyadDims { n_dyad, n_in, n_out: n_in };
+    println!("connectivity analysis (paper Eq 17/18), n_dyad={n_dyad} n_in={n_in}:");
+    for (label, v) in [("IT", Variant::It), ("OT", Variant::Ot), ("DT", Variant::Dt)] {
+        let (rw, rc) = connectivity_ratio(dims, v);
+        println!(
+            "  DYAD-{label}: dense/dyad connection ratio within-block={rw:.2} \
+             (paper: O(n_dyad)={n_dyad}), cross-block={rc:.2} \
+             (paper: O(n_dyad^2)={})",
+            n_dyad * n_dyad
+        );
+    }
+    Ok(())
+}
+
+/// Render the paper's Table-2-shaped cross-variant comparison from a
+/// `repro quality` output directory (one subdir per variant).
+fn cmd_quality_summary(args: &Args) -> Result<()> {
+    use dyad_repro::util::json::Json;
+    let dir = PathBuf::from(args.str_or("dir", "runs/quality-opt"));
+    let mut rows: Vec<(String, Json)> = Vec::new();
+    for entry in std::fs::read_dir(&dir)
+        .with_context(|| format!("read {}", dir.display()))?
+    {
+        let path = entry?.path().join("quality.json");
+        if path.exists() {
+            let j = Json::parse(&std::fs::read_to_string(&path)?)?;
+            rows.push((j.req("variant")?.as_str()?.to_string(), j));
+        }
+    }
+    if rows.is_empty() {
+        bail!("no quality.json files under {}", dir.display());
+    }
+    // dense first, then the dyad variants in a stable order
+    rows.sort_by_key(|(v, _)| (v != "dense", v.clone()));
+    println!(
+        "{:<12} {:>8} {:>8} {:>8} {:>10} {:>10} {:>12}",
+        "variant", "BLIMP", "MCQ", "probe", "valid", "params", "ckpt(KB)"
+    );
+    let dense_scores = rows.iter().find(|(v, _)| v == "dense").map(|(_, j)| {
+        (
+            j.get("blimp_mean").and_then(|x| x.as_f64().ok()).unwrap_or(f64::NAN),
+            j.get("mcq_mean").and_then(|x| x.as_f64().ok()).unwrap_or(f64::NAN),
+            j.get("probe_mean").and_then(|x| x.as_f64().ok()).unwrap_or(f64::NAN),
+        )
+    });
+    for (v, j) in &rows {
+        let blimp = j.req("blimp_mean")?.as_f64()?;
+        let mcq = j.req("mcq_mean")?.as_f64()?;
+        let probe = j.req("probe_mean")?.as_f64()?;
+        println!(
+            "{:<12} {:>8.4} {:>8.4} {:>8.4} {:>10.4} {:>10} {:>12.1}",
+            v,
+            blimp,
+            mcq,
+            probe,
+            j.req("valid_loss")?.as_f64()?,
+            j.req("params")?.as_usize()?,
+            j.req("checkpoint_bytes")?.as_f64()? / 1024.0
+        );
+    }
+    if let Some((db, dm, dp)) = dense_scores {
+        println!("\npaper T2 bar: every DYAD variant >= 0.95x DENSE?");
+        for (v, j) in &rows {
+            if v == "dense" {
+                continue;
+            }
+            let r = [
+                j.req("blimp_mean")?.as_f64()? / db,
+                j.req("mcq_mean")?.as_f64()? / dm,
+                j.req("probe_mean")?.as_f64()? / dp,
+            ];
+            let min = r.iter().cloned().fold(f64::MAX, f64::min);
+            println!(
+                "  {v:<12} min ratio {min:.3}  {}",
+                if min >= 0.95 { "PASS" } else { "below bar" }
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let engine = engine_of(args)?;
+    let filter = args.str_opt("kind");
+    for a in &engine.manifest.artifacts {
+        if filter.map(|k| a.kind == k).unwrap_or(true) {
+            println!(
+                "{}",
+                dyad_repro::util::json::obj(vec![
+                    ("name", s(&a.name)),
+                    ("kind", s(&a.kind)),
+                    ("params", num(a.param_count() as f64)),
+                    ("inputs", num(a.inputs.len() as f64)),
+                ])
+                .to_string()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,351 @@
+//! Manifest parsing: the typed view of `artifacts/manifest.json`.
+//!
+//! The manifest is the single source of truth for the L2→L3 contract:
+//! positional input order, parameter init specs, output layout, and the
+//! architecture/variant dictionaries. Everything is validated here so
+//! downstream code can index confidently.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{DType, InitSpec};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Model parameter (has an init spec; checkpointed).
+    Param,
+    /// Adam first moment (zero-init; checkpointed).
+    OptM,
+    /// Adam second moment (zero-init; checkpointed).
+    OptV,
+    /// Scalar control input (step, lr).
+    Scalar,
+    /// Per-call data (tokens, masks, images...).
+    Data,
+}
+
+impl Role {
+    fn from_str(s: &str) -> Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "opt_m" => Role::OptM,
+            "opt_v" => Role::OptV,
+            "scalar" => Role::Scalar,
+            "data" => Role::Data,
+            _ => bail!("unknown role {s:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub role: Role,
+    pub init: Option<InitSpec>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    pub fn inputs_with_role(&self, role: Role) -> Vec<&IoSpec> {
+        self.inputs.iter().filter(|i| i.role == role).collect()
+    }
+
+    /// Names+shapes of the model parameters, in feed order.
+    pub fn param_specs(&self) -> Vec<&IoSpec> {
+        self.inputs_with_role(Role::Param)
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .with_context(|| format!("{}: no input named {name:?}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .with_context(|| format!("{}: no output named {name:?}", self.name))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta.req(key)?.as_usize()
+    }
+
+    /// Total parameter count (the paper's "# Params" metric).
+    pub fn param_count(&self) -> usize {
+        self.param_specs().iter().map(|p| p.numel()).sum()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamCfg {
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+    pub grad_clip: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArchCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq: usize,
+    pub parallel_residual: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantCfg {
+    pub kind: String,
+    pub dyad_variant: String,
+    pub n_dyad: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub adam: AdamCfg,
+    pub archs: BTreeMap<String, ArchCfg>,
+    pub variants: BTreeMap<String, VariantCfg>,
+    pub artifacts: Vec<ArtifactSpec>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json")?;
+        let version = j.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported");
+        }
+        let adam = {
+            let a = j.req("adam")?;
+            AdamCfg {
+                b1: a.req("b1")?.as_f64()?,
+                b2: a.req("b2")?.as_f64()?,
+                eps: a.req("eps")?.as_f64()?,
+                grad_clip: a.req("grad_clip")?.as_f64()?,
+            }
+        };
+        let mut archs = BTreeMap::new();
+        for (name, a) in j.req("archs")?.as_obj()? {
+            archs.insert(
+                name.clone(),
+                ArchCfg {
+                    vocab: a.req("vocab")?.as_usize()?,
+                    d_model: a.req("d_model")?.as_usize()?,
+                    d_ff: a.req("d_ff")?.as_usize()?,
+                    n_layers: a.req("n_layers")?.as_usize()?,
+                    n_heads: a.req("n_heads")?.as_usize()?,
+                    seq: a.req("seq")?.as_usize()?,
+                    parallel_residual: a.req("parallel_residual")?.as_bool()?,
+                },
+            );
+        }
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.req("variants")?.as_obj()? {
+            variants.insert(
+                name.clone(),
+                VariantCfg {
+                    kind: v.req("kind")?.as_str()?.to_string(),
+                    dyad_variant: v.req("dyad_variant")?.as_str()?.to_string(),
+                    n_dyad: v.req("n_dyad")?.as_usize()?,
+                },
+            );
+        }
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_arr()? {
+            artifacts.push(parse_artifact(a)?);
+        }
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Ok(Manifest { adam, archs, variants, artifacts, by_name })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.artifacts[i])
+            .with_context(|| {
+                let mut close: Vec<_> = self
+                    .by_name
+                    .keys()
+                    .filter(|k| k.contains(name.split('/').next().unwrap_or("")))
+                    .take(5)
+                    .cloned()
+                    .collect();
+                close.sort();
+                format!("no artifact {name:?}; similar: {close:?}")
+            })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchCfg> {
+        self.archs
+            .get(name)
+            .with_context(|| format!("no arch {name:?}"))
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantCfg> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("no variant {name:?}"))
+    }
+
+    /// All artifact names, for `repro list-artifacts`.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+fn parse_init(j: &Json) -> Result<InitSpec> {
+    Ok(match j.req("kind")?.as_str()? {
+        "zeros" => InitSpec::Zeros,
+        "ones" => InitSpec::Ones,
+        "uniform" => InitSpec::Uniform {
+            bound: j.req("bound")?.as_f64()? as f32,
+        },
+        "normal" => InitSpec::Normal {
+            std: j.req("std")?.as_f64()? as f32,
+        },
+        k => bail!("unknown init kind {k:?}"),
+    })
+}
+
+fn parse_io(j: &Json, with_role: bool) -> Result<IoSpec> {
+    let shape = j
+        .req("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IoSpec {
+        name: j.req("name")?.as_str()?.to_string(),
+        shape,
+        dtype: DType::from_str(j.req("dtype")?.as_str()?)?,
+        role: if with_role {
+            Role::from_str(j.req("role")?.as_str()?)?
+        } else {
+            Role::Data
+        },
+        init: match j.get("init") {
+            Some(init) => Some(parse_init(init)?),
+            None => None,
+        },
+    })
+}
+
+fn parse_artifact(j: &Json) -> Result<ArtifactSpec> {
+    let name = j.req("name")?.as_str()?.to_string();
+    let inputs = j
+        .req("inputs")?
+        .as_arr()?
+        .iter()
+        .map(|i| parse_io(i, true))
+        .collect::<Result<Vec<_>>>()
+        .with_context(|| format!("artifact {name}: inputs"))?;
+    let outputs = j
+        .req("outputs")?
+        .as_arr()?
+        .iter()
+        .map(|o| parse_io(o, false))
+        .collect::<Result<Vec<_>>>()
+        .with_context(|| format!("artifact {name}: outputs"))?;
+    Ok(ArtifactSpec {
+        name,
+        file: j.req("file")?.as_str()?.to_string(),
+        kind: j.req("kind")?.as_str()?.to_string(),
+        inputs,
+        outputs,
+        meta: j.get("meta").cloned().unwrap_or(Json::Obj(vec![])),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "adam": {"b1": 0.9, "b2": 0.999, "eps": 1e-8, "grad_clip": 1.0},
+      "archs": {"tiny": {"vocab": 64, "d_model": 32, "d_ff": 64,
+                 "n_layers": 2, "n_heads": 4, "seq": 16,
+                 "parallel_residual": false}},
+      "variants": {"dyad_it": {"kind": "dyad", "dyad_variant": "it", "n_dyad": 4}},
+      "artifacts": [
+        {"name": "tiny/dyad_it/score", "file": "f.hlo.txt", "kind": "score",
+         "inputs": [
+            {"name": "w", "shape": [4, 2, 2], "dtype": "f32", "role": "param",
+             "init": {"kind": "uniform", "bound": 0.125}},
+            {"name": "tokens", "shape": [8, 16], "dtype": "i32", "role": "data"}
+         ],
+         "outputs": [{"name": "sum_logp", "shape": [8], "dtype": "f32"}],
+         "meta": {"batch": 8}}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.adam.b1, 0.9);
+        assert_eq!(m.arch("tiny").unwrap().d_model, 32);
+        assert_eq!(m.variant("dyad_it").unwrap().n_dyad, 4);
+        let a = m.artifact("tiny/dyad_it/score").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].role, Role::Param);
+        assert_eq!(
+            a.inputs[0].init,
+            Some(InitSpec::Uniform { bound: 0.125 })
+        );
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.param_count(), 16);
+        assert_eq!(a.meta_usize("batch").unwrap(), 8);
+        assert_eq!(a.output_index("sum_logp").unwrap(), 0);
+        assert!(a.output_index("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_suggests() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = format!("{:#}", m.artifact("tiny/dense/score").unwrap_err());
+        assert!(err.contains("tiny/dyad_it/score"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

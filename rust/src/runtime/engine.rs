@@ -1,0 +1,199 @@
+//! PJRT engine: compile-once executable cache + typed execution.
+//!
+//! Hot-path note (EXPERIMENTS.md §Perf): training state is kept as
+//! `xla::Literal`s between calls — `Loaded::run_literals` avoids any
+//! host `Vec<f32>` staging for the ~3·N parameter tensors per step;
+//! only control scalars and data batches are converted per call.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, IoSpec, Manifest};
+use crate::tensor::{DType, Tensor};
+use crate::util::timer::Timer;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Loaded>>>,
+    verbose: bool,
+}
+
+pub struct Loaded {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Open an artifact directory (`artifacts/` produced by `make artifacts`).
+    pub fn from_dir<P: AsRef<Path>>(dir: P) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+            verbose: std::env::var("REPRO_VERBOSE").is_ok(),
+        })
+    }
+
+    /// Load (compile) an artifact by manifest name; cached per engine.
+    pub fn load(&self, name: &str) -> Result<Rc<Loaded>> {
+        if let Some(hit) = self.cache.borrow().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {name}"))?;
+        if self.verbose {
+            eprintln!("[engine] compiled {name} in {:.0} ms", t.elapsed_ms());
+        }
+        let loaded = Rc::new(Loaded { spec, exe });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Host tensor -> XLA literal (validates against the IoSpec).
+pub fn tensor_to_literal(t: &Tensor, spec: &IoSpec) -> Result<xla::Literal> {
+    if t.shape != spec.shape {
+        bail!(
+            "input {:?}: shape {:?} != manifest {:?}",
+            spec.name,
+            t.shape,
+            spec.shape
+        );
+    }
+    if t.dtype() != spec.dtype {
+        bail!(
+            "input {:?}: dtype {:?} != manifest {:?}",
+            spec.name,
+            t.dtype(),
+            spec.dtype
+        );
+    }
+    let ty = match spec.dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.to_bytes())
+        .with_context(|| format!("literal for {:?}", spec.name))
+}
+
+/// XLA literal -> host tensor (shape taken from the output IoSpec).
+pub fn literal_to_tensor(lit: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
+    let n = lit.element_count();
+    if n != spec.numel() {
+        bail!(
+            "output {:?}: {} elements, manifest says {:?}",
+            spec.name,
+            n,
+            spec.shape
+        );
+    }
+    match spec.dtype {
+        DType::F32 => Tensor::from_f32(&spec.shape, lit.to_vec::<f32>()?),
+        DType::I32 => Tensor::from_i32(&spec.shape, lit.to_vec::<i32>()?),
+    }
+}
+
+impl Loaded {
+    /// Execute with host tensors; returns outputs as host tensors.
+    ///
+    /// Convenience path for eval/bench call sites; the trainer uses
+    /// [`Loaded::run_literals`] to keep state staged as literals.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits = self.stage(inputs)?;
+        let out = self.run_literals(&lits)?;
+        out.iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, s)| literal_to_tensor(l, s))
+            .collect()
+    }
+
+    /// Convert + validate a full positional input set.
+    pub fn stage(&self, inputs: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: {} inputs given, manifest wants {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .map(|(t, s)| tensor_to_literal(t, s))
+            .collect()
+    }
+
+    /// Execute with pre-staged literals; returns the decomposed output
+    /// tuple as literals (no host conversion).
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: {} inputs given, manifest wants {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute(inputs)
+            .with_context(|| format!("execute {}", self.spec.name))?;
+        let buf = result
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .context("empty execution result")?;
+        let lit = buf.to_literal_sync()?;
+        // return_tuple=True at lowering: the root is always a tuple.
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Fetch one named output from a literal set as a host tensor.
+    pub fn output_tensor(
+        &self,
+        outputs: &[xla::Literal],
+        name: &str,
+    ) -> Result<Tensor> {
+        let idx = self.spec.output_index(name)?;
+        literal_to_tensor(&outputs[idx], &self.spec.outputs[idx])
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! `Engine` owns the PJRT CPU client and an executable cache;
+//! `artifact` parses `artifacts/manifest.json` (the L2→L3 contract);
+//! `state` carries training state between `train_step` calls.
+//!
+//! Pattern per `/opt/xla-example/load_hlo`: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Multi-output executables return a single tuple buffer which we
+//! decompose on the host (PJRT does not untuple; DESIGN.md §2).
+
+mod artifact;
+mod engine;
+mod state;
+
+pub use artifact::{AdamCfg, ArchCfg, ArtifactSpec, IoSpec, Manifest, Role, VariantCfg};
+pub use engine::{literal_to_tensor, tensor_to_literal, Engine, Loaded};
+pub use state::TrainState;

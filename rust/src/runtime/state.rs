@@ -1,0 +1,192 @@
+//! Training state carried between `train_step` executions.
+//!
+//! Holds params / Adam-m / Adam-v as staged `xla::Literal`s plus the
+//! float step counter. One PJRT call advances K optimizer steps (the
+//! artifact's inner microbatch scan); between calls the state literals
+//! are threaded straight back in — no host `Vec<f32>` round trip
+//! (DESIGN.md §8).
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, Role};
+use super::engine::{literal_to_tensor, tensor_to_literal, Loaded};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct TrainState {
+    /// params ++ m ++ v, in manifest feed order.
+    lits: Vec<xla::Literal>,
+    pub step: f32,
+    n_params: usize,
+}
+
+impl TrainState {
+    /// Initialise from the artifact's init specs (params) and zeros
+    /// (optimizer moments). Deterministic in `seed`.
+    pub fn init(spec: &ArtifactSpec, seed: u64) -> Result<TrainState> {
+        let mut rng = Rng::new(seed);
+        let mut lits = Vec::new();
+        let mut n_params = 0;
+        for io in &spec.inputs {
+            match io.role {
+                Role::Param => {
+                    let init = io
+                        .init
+                        .as_ref()
+                        .with_context(|| format!("param {} has no init", io.name))?;
+                    let t = Tensor::init(&io.shape, init, &mut rng);
+                    lits.push(tensor_to_literal(&t, io)?);
+                    n_params += 1;
+                }
+                Role::OptM | Role::OptV => {
+                    let t = Tensor::zeros(&io.shape, io.dtype);
+                    lits.push(tensor_to_literal(&t, io)?);
+                }
+                _ => {}
+            }
+        }
+        Ok(TrainState { lits, step: 0.0, n_params })
+    }
+
+    /// Restore from named checkpoint tensors (see [`TrainState::to_tensors`]).
+    pub fn from_tensors(
+        spec: &ArtifactSpec,
+        entries: &[(String, Tensor)],
+    ) -> Result<TrainState> {
+        let map: std::collections::BTreeMap<&str, &Tensor> =
+            entries.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        let mut lits = Vec::new();
+        let mut n_params = 0;
+        for io in &spec.inputs {
+            match io.role {
+                Role::Param | Role::OptM | Role::OptV => {
+                    let t = map.get(io.name.as_str()).with_context(|| {
+                        format!("checkpoint missing tensor {:?}", io.name)
+                    })?;
+                    lits.push(tensor_to_literal(t, io)?);
+                    if io.role == Role::Param {
+                        n_params += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let step = map
+            .get("__step")
+            .map(|t| t.scalar_value_f32())
+            .transpose()?
+            .unwrap_or(0.0);
+        Ok(TrainState { lits, step, n_params })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// One coordinator-side training call: feeds
+    /// `params ++ m ++ v ++ step ++ lr ++ data...`, absorbs the updated
+    /// state from the output tuple, returns the per-microbatch losses.
+    pub fn train_call(
+        &mut self,
+        art: &Loaded,
+        lr: f32,
+        data: &[Tensor],
+    ) -> Result<Vec<f32>> {
+        let spec = &art.spec;
+        let n_state = self.lits.len();
+        let data_specs: Vec<_> = spec
+            .inputs
+            .iter()
+            .filter(|i| i.role == Role::Data)
+            .collect();
+        if data.len() != data_specs.len() {
+            bail!(
+                "{}: {} data tensors given, manifest wants {}",
+                spec.name,
+                data.len(),
+                data_specs.len()
+            );
+        }
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(spec.inputs.len());
+        let step_lit = xla::Literal::scalar(self.step);
+        let lr_lit = xla::Literal::scalar(lr);
+        let data_lits: Vec<xla::Literal> = data
+            .iter()
+            .zip(&data_specs)
+            .map(|(t, s)| tensor_to_literal(t, s))
+            .collect::<Result<_>>()?;
+        let mut state_i = 0;
+        let mut data_i = 0;
+        for io in &spec.inputs {
+            match io.role {
+                Role::Param | Role::OptM | Role::OptV => {
+                    inputs.push(&self.lits[state_i]);
+                    state_i += 1;
+                }
+                Role::Scalar => {
+                    inputs.push(if io.name == "step" { &step_lit } else { &lr_lit });
+                }
+                Role::Data => {
+                    inputs.push(&data_lits[data_i]);
+                    data_i += 1;
+                }
+            }
+        }
+        if state_i != n_state {
+            bail!(
+                "{}: artifact has {state_i} state inputs, state holds {n_state} \
+                 (mismatched arch/variant?)",
+                spec.name
+            );
+        }
+        let mut outputs = art.run_literals(&inputs)?;
+        // outputs: params ++ m ++ v ++ step ++ losses
+        if outputs.len() != n_state + 2 {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                spec.name,
+                n_state + 2,
+                outputs.len()
+            );
+        }
+        let losses_lit = outputs.pop().unwrap();
+        let step_out = outputs.pop().unwrap();
+        self.step = step_out.to_vec::<f32>()?[0];
+        self.lits = outputs;
+        let losses = losses_lit.to_vec::<f32>()?;
+        Ok(losses)
+    }
+
+    /// Borrow the parameter literals (feed order) for eval executables
+    /// that take only params + data.
+    pub fn param_literals(&self) -> &[xla::Literal] {
+        &self.lits[..self.n_params]
+    }
+
+    /// Export the full state as named host tensors for checkpointing.
+    pub fn to_tensors(&self, spec: &ArtifactSpec) -> Result<Vec<(String, Tensor)>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        for io in &spec.inputs {
+            if matches!(io.role, Role::Param | Role::OptM | Role::OptV) {
+                out.push((io.name.clone(), literal_to_tensor(&self.lits[i], io)?));
+                i += 1;
+            }
+        }
+        out.push(("__step".to_string(), Tensor::scalar_f32(self.step)));
+        Ok(out)
+    }
+
+    /// Export only the model parameters (paper's checkpoint-size metric
+    /// counts weights, not optimizer moments).
+    pub fn params_to_tensors(
+        &self,
+        spec: &ArtifactSpec,
+    ) -> Result<Vec<(String, Tensor)>> {
+        let mut out = Vec::new();
+        for (i, io) in spec.param_specs().into_iter().enumerate() {
+            out.push((io.name.clone(), literal_to_tensor(&self.lits[i], io)?));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,107 @@
+//! Dynamic batching policy: collect requests until the batch is full
+//! or the window expires, never holding a lone request longer than the
+//! window. Pure logic — tested without threads or PJRT.
+
+use std::time::{Duration, Instant};
+
+/// Decision state for one batch accumulation cycle.
+#[derive(Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub window: Duration,
+    opened_at: Option<Instant>,
+    pending: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window_ms: u64) -> Batcher {
+        Batcher {
+            max_batch,
+            window: Duration::from_millis(window_ms),
+            opened_at: None,
+            pending: 0,
+        }
+    }
+
+    /// Record an arrival; returns true if the batch should be flushed
+    /// immediately (full).
+    pub fn on_arrival(&mut self, now: Instant) -> bool {
+        if self.pending == 0 {
+            self.opened_at = Some(now);
+        }
+        self.pending += 1;
+        self.pending >= self.max_batch
+    }
+
+    /// Should we flush now even though the batch isn't full?
+    pub fn window_expired(&self, now: Instant) -> bool {
+        match self.opened_at {
+            Some(t) => self.pending > 0 && now.duration_since(t) >= self.window,
+            None => false,
+        }
+    }
+
+    /// How long the worker may block waiting for more requests.
+    pub fn wait_budget(&self, now: Instant) -> Duration {
+        match self.opened_at {
+            None => self.window, // idle: just poll at window granularity
+            Some(t) => self
+                .window
+                .checked_sub(now.duration_since(t))
+                .unwrap_or(Duration::ZERO),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Mark the batch flushed.
+    pub fn flush(&mut self) -> usize {
+        let n = self.pending;
+        self.pending = 0;
+        self.opened_at = None;
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_max() {
+        let mut b = Batcher::new(3, 10);
+        let t = Instant::now();
+        assert!(!b.on_arrival(t));
+        assert!(!b.on_arrival(t));
+        assert!(b.on_arrival(t)); // full -> flush
+        assert_eq!(b.flush(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn window_expiry() {
+        let mut b = Batcher::new(8, 5);
+        let t0 = Instant::now();
+        b.on_arrival(t0);
+        assert!(!b.window_expired(t0));
+        let later = t0 + Duration::from_millis(6);
+        assert!(b.window_expired(later));
+        b.flush();
+        assert!(!b.window_expired(later + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn wait_budget_shrinks() {
+        let mut b = Batcher::new(8, 10);
+        let t0 = Instant::now();
+        assert_eq!(b.wait_budget(t0), Duration::from_millis(10));
+        b.on_arrival(t0);
+        let mid = t0 + Duration::from_millis(4);
+        let budget = b.wait_budget(mid);
+        assert!(budget <= Duration::from_millis(6));
+        let past = t0 + Duration::from_millis(20);
+        assert_eq!(b.wait_budget(past), Duration::ZERO);
+    }
+}

@@ -1,0 +1,16 @@
+//! Batched inference server: dynamic batcher over PJRT executables.
+//!
+//! The L3 "router" component: clients submit scoring or greedy-
+//! generation requests from any thread; a dedicated engine thread
+//! (xla handles are not Send) accumulates them into padded batches
+//! (up to `max_batch`, bounded by `window_ms`), executes one PJRT call
+//! per batch, and reports latency/throughput/occupancy statistics —
+//! the serving-shaped face of the DYAD speedup story.
+
+mod batcher;
+mod server;
+mod stats;
+
+pub use batcher::Batcher;
+pub use server::{Request, ServeConfig, ServerHandle};
+pub use stats::ServeStats;

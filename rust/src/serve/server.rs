@@ -1,0 +1,287 @@
+//! The serving loop: engine-owning worker thread + request channels.
+//!
+//! xla handles are not `Send`, so the worker thread *creates* its own
+//! `Engine` and owns all literals; clients interact through mpsc
+//! channels. Scoring requests are dynamically batched (see `Batcher`);
+//! generation requests run a greedy decode loop over the
+//! `next_logits` artifact with all active generations stepped together
+//! (a miniature continuous batcher).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::Batcher;
+use super::stats::ServeStats;
+use crate::coordinator::checkpoint::CheckpointManager;
+use crate::data::dataset::pad_batch;
+use crate::eval::run_with_params;
+use crate::runtime::{Engine, TrainState};
+use crate::tensor::Tensor;
+use crate::util::timer::Timer;
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: PathBuf,
+    pub arch: String,
+    pub variant: String,
+    /// Load params from this run dir's checkpoint if present.
+    pub checkpoint_dir: Option<PathBuf>,
+    pub max_batch: usize,
+    pub window_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            arch: "opt-mini".into(),
+            variant: "dyad_it".into(),
+            checkpoint_dir: None,
+            max_batch: 8,
+            window_ms: 5,
+            seed: 7,
+        }
+    }
+}
+
+pub enum Request {
+    /// Sum log-probability of a token sequence.
+    Score {
+        tokens: Vec<i32>,
+        resp: Sender<Result<f64, String>>,
+    },
+    /// Greedy continuation of a prompt.
+    Generate {
+        prompt: Vec<i32>,
+        max_new: usize,
+        resp: Sender<Result<Vec<i32>, String>>,
+    },
+    Stats {
+        resp: Sender<ServeStats>,
+    },
+    Shutdown,
+}
+
+pub struct ServerHandle {
+    tx: Sender<Request>,
+    join: Option<JoinHandle<Result<()>>>,
+}
+
+impl ServerHandle {
+    pub fn start(cfg: ServeConfig) -> ServerHandle {
+        let (tx, rx) = mpsc::channel();
+        let join = std::thread::spawn(move || worker(cfg, rx));
+        ServerHandle { tx, join: Some(join) }
+    }
+
+    pub fn sender(&self) -> Sender<Request> {
+        self.tx.clone()
+    }
+
+    pub fn score(&self, tokens: Vec<i32>) -> Result<f64> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::Score { tokens, resp: rtx })
+            .map_err(|_| anyhow!("server down"))?;
+        rrx.recv().context("server dropped request")?.map_err(|e| anyhow!(e))
+    }
+
+    pub fn generate(&self, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::Generate { prompt, max_new, resp: rtx })
+            .map_err(|_| anyhow!("server down"))?;
+        rrx.recv().context("server dropped request")?.map_err(|e| anyhow!(e))
+    }
+
+    pub fn stats(&self) -> Result<ServeStats> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request::Stats { resp: rtx })
+            .map_err(|_| anyhow!("server down"))?;
+        rrx.recv().context("server dropped stats request")
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Request::Shutdown);
+        match self.join.take() {
+            Some(j) => j.join().map_err(|_| anyhow!("server thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct PendingScore {
+    tokens: Vec<i32>,
+    resp: Sender<Result<f64, String>>,
+    arrived: Instant,
+}
+
+fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
+    let engine = Engine::from_dir(&cfg.artifacts_dir)?;
+    let score_art = engine.load(&format!("{}/{}/score", cfg.arch, cfg.variant))?;
+    let logits_art =
+        engine.load(&format!("{}/{}/next_logits", cfg.arch, cfg.variant))?;
+    let train_spec = engine
+        .manifest
+        .artifact(&format!("{}/{}/train_k1", cfg.arch, cfg.variant))?
+        .clone();
+    let state = match &cfg.checkpoint_dir {
+        Some(dir) => {
+            let mgr = CheckpointManager::new(dir);
+            if mgr.has_state() {
+                mgr.load_state(&train_spec)?
+            } else {
+                TrainState::init(&train_spec, cfg.seed)?
+            }
+        }
+        None => TrainState::init(&train_spec, cfg.seed)?,
+    };
+
+    let b = score_art.spec.meta_usize("batch")?;
+    let s = score_art.spec.meta_usize("seq")?;
+    let mut batcher = Batcher::new(cfg.max_batch.min(b), cfg.window_ms);
+    let mut queue: Vec<PendingScore> = Vec::new();
+    let mut stats = ServeStats::default();
+    let started = Timer::start();
+
+    let flush = |queue: &mut Vec<PendingScore>, stats: &mut ServeStats| {
+        if queue.is_empty() {
+            return;
+        }
+        let seqs: Vec<Vec<i32>> = queue.iter().map(|p| p.tokens.clone()).collect();
+        let t = Timer::start();
+        let result = (|| -> Result<Vec<f64>> {
+            let (tokens, mask) = pad_batch(&seqs, b, s)?;
+            let out = run_with_params(&score_art, &state, &[tokens, mask])?;
+            let sums = out[0].to_vec::<f32>()?;
+            Ok(sums[..seqs.len()].iter().map(|&x| x as f64).collect())
+        })();
+        stats.exec_ms.push(t.elapsed_ms());
+        stats.batch_sizes.push(queue.len());
+        let now = Instant::now();
+        match result {
+            Ok(scores) => {
+                for (p, sc) in queue.drain(..).zip(scores) {
+                    stats
+                        .latencies_ms
+                        .push(now.duration_since(p.arrived).as_secs_f64() * 1e3);
+                    let _ = p.resp.send(Ok(sc));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in queue.drain(..) {
+                    let _ = p.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    };
+
+    loop {
+        let now = Instant::now();
+        if batcher.window_expired(now) {
+            batcher.flush();
+            flush(&mut queue, &mut stats);
+        }
+        let budget = batcher.wait_budget(Instant::now());
+        match rx.recv_timeout(budget) {
+            Ok(Request::Score { tokens, resp }) => {
+                queue.push(PendingScore { tokens, resp, arrived: Instant::now() });
+                if batcher.on_arrival(Instant::now()) {
+                    batcher.flush();
+                    flush(&mut queue, &mut stats);
+                }
+            }
+            Ok(Request::Generate { prompt, max_new, resp }) => {
+                // flush pending scores first to preserve ordering fairness
+                batcher.flush();
+                flush(&mut queue, &mut stats);
+                let t = Instant::now();
+                let out = generate(&logits_art, &state, prompt, max_new, s);
+                stats
+                    .latencies_ms
+                    .push(Instant::now().duration_since(t).as_secs_f64() * 1e3);
+                let _ = resp.send(out.map_err(|e| format!("{e:#}")));
+            }
+            Ok(Request::Stats { resp }) => {
+                let mut snap = stats.clone();
+                snap.wall_s = started.elapsed_s();
+                let _ = resp.send(snap);
+            }
+            Ok(Request::Shutdown) => {
+                batcher.flush();
+                flush(&mut queue, &mut stats);
+                return Ok(());
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => {
+                batcher.flush();
+                flush(&mut queue, &mut stats);
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Greedy decode via the next_logits artifact (full-context recompute
+/// per token; fine at these scales, documented in DESIGN.md).
+fn generate(
+    art: &crate::runtime::Loaded,
+    state: &TrainState,
+    prompt: Vec<i32>,
+    max_new: usize,
+    s: usize,
+) -> Result<Vec<i32>> {
+    let b = art.spec.meta_usize("batch")?;
+    let mut tokens = prompt;
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let window: Vec<i32> = if tokens.len() > s {
+            tokens[tokens.len() - s..].to_vec()
+        } else {
+            tokens.clone()
+        };
+        let mut toks = vec![0i32; b * s];
+        toks[..window.len()].copy_from_slice(&window);
+        let mut lens = vec![1i32; b];
+        lens[0] = window.len() as i32;
+        let lits = run_with_params(
+            art,
+            state,
+            &[
+                Tensor::from_i32(&[b, s], toks)?,
+                Tensor::from_i32(&[b], lens)?,
+            ],
+        )?;
+        let logits = lits[0].to_vec::<f32>()?;
+        let vocab = art.spec.outputs[0].shape[1];
+        let row = &logits[..vocab];
+        let next = row
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        tokens.push(next);
+        out.push(next);
+        if next == crate::data::tokenizer::EOS {
+            break;
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,88 @@
+//! Serving statistics: latency, throughput, batch occupancy.
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub latencies_ms: Vec<f64>,
+    pub batch_sizes: Vec<usize>,
+    pub exec_ms: Vec<f64>,
+    pub wall_s: f64,
+}
+
+impl ServeStats {
+    pub fn requests(&self) -> usize {
+        self.latencies_ms.len()
+    }
+
+    pub fn latency(&self) -> Option<Summary> {
+        if self.latencies_ms.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latencies_ms))
+        }
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.requests() as f64 / self.wall_s
+    }
+
+    pub fn render(&self) -> String {
+        let lat = self.latency();
+        format!(
+            "requests={} batches={} mean_occupancy={:.2} throughput={:.1} req/s\n\
+             latency ms: p50={:.1} p90={:.1} p99={:.1} mean={:.1}\n\
+             exec ms per batch: mean={:.1}",
+            self.requests(),
+            self.batch_sizes.len(),
+            self.mean_batch_occupancy(),
+            self.throughput_rps(),
+            lat.map(|l| l.p50).unwrap_or(0.0),
+            self.latency().map(|l| l.p90).unwrap_or(0.0),
+            self.latency().map(|l| l.p99).unwrap_or(0.0),
+            self.latency().map(|l| l.mean).unwrap_or(0.0),
+            if self.exec_ms.is_empty() {
+                0.0
+            } else {
+                Summary::of(&self.exec_ms).mean
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_and_throughput() {
+        let s = ServeStats {
+            latencies_ms: vec![1.0, 2.0, 3.0, 4.0],
+            batch_sizes: vec![2, 2],
+            exec_ms: vec![0.5, 0.6],
+            wall_s: 2.0,
+        };
+        assert_eq!(s.requests(), 4);
+        assert_eq!(s.mean_batch_occupancy(), 2.0);
+        assert_eq!(s.throughput_rps(), 2.0);
+        assert!(s.render().contains("requests=4"));
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = ServeStats::default();
+        assert!(s.latency().is_none());
+        assert_eq!(s.throughput_rps(), 0.0);
+        let _ = s.render();
+    }
+}

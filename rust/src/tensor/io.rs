@@ -1,0 +1,173 @@
+//! DYT checkpoint format: named tensors in one binary file.
+//!
+//! Layout (little-endian):
+//! ```text
+//!   magic   b"DYT1"
+//!   u32     entry count
+//!   entry*  { u32 name_len, name bytes (utf-8),
+//!             u8 dtype (0=f32, 1=i32),
+//!             u32 ndim, u64 dims[ndim],
+//!             u64 byte_len, data bytes }
+//! ```
+//! Used for model checkpoints (Table 11's "Checkpoint Size" is measured
+//! on these files) and for staging eval features.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{DType, Tensor};
+
+const MAGIC: &[u8; 4] = b"DYT1";
+
+pub fn save_checkpoint(path: &Path, entries: &[(String, &Tensor)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path).context("create checkpoint")?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, t) in entries {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&[match t.dtype() {
+            DType::F32 => 0u8,
+            DType::I32 => 1u8,
+        }])?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for d in &t.shape {
+            w.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        let bytes = t.to_bytes();
+        w.write_all(&(bytes.len() as u64).to_le_bytes())?;
+        w.write_all(&bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut r = BufReader::new(File::open(path).context("open checkpoint")?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a DYT1 checkpoint", path.display());
+    }
+    let count = read_u32(&mut r)? as usize;
+    // A count a corrupt header can't weaponize: each entry needs >= 17
+    // bytes, so bound by file size before preallocating.
+    let file_len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0) as usize;
+    if count > file_len / 17 {
+        bail!("corrupt checkpoint: entry count {count} exceeds file size");
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("checkpoint name utf-8")?;
+        let mut dt = [0u8; 1];
+        r.read_exact(&mut dt)?;
+        let dtype = match dt[0] {
+            0 => DType::F32,
+            1 => DType::I32,
+            x => bail!("corrupt checkpoint: dtype tag {x}"),
+        };
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 16 {
+            bail!("corrupt checkpoint: ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        let byte_len = read_u64(&mut r)? as usize;
+        let expect: usize = shape.iter().product::<usize>() * 4;
+        if byte_len != expect {
+            bail!("corrupt checkpoint: {name}: {byte_len} bytes for shape {shape:?}");
+        }
+        let mut data = vec![0u8; byte_len];
+        r.read_exact(&mut data)?;
+        out.push((name, Tensor::from_bytes(&shape, dtype, &data)?));
+    }
+    Ok(out)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dyad-repro-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let a = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::from_i32(&[4], vec![-1, 0, 1, 2]).unwrap();
+        let c = Tensor::scalar_f32(42.0);
+        let path = tmpfile("roundtrip.dyt");
+        save_checkpoint(
+            &path,
+            &[("w".into(), &a), ("toks".into(), &b), ("step".into(), &c)],
+        )
+        .unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded[0].0, "w");
+        assert_eq!(loaded[0].1, a);
+        assert_eq!(loaded[1].1, b);
+        assert_eq!(loaded[2].1.scalar_value_f32().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpfile("garbage.dyt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let a = Tensor::from_f32(&[64], vec![0.5; 64]).unwrap();
+        let path = tmpfile("trunc.dyt");
+        save_checkpoint(&path, &[("a".into(), &a)]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+    }
+
+    #[test]
+    fn checkpoint_size_scales_with_params() {
+        // Table 11's measurement primitive: file size ~ total param bytes.
+        let big = Tensor::zeros(&[1000], DType::F32);
+        let small = Tensor::zeros(&[10], DType::F32);
+        let p1 = tmpfile("big.dyt");
+        let p2 = tmpfile("small.dyt");
+        save_checkpoint(&p1, &[("w".into(), &big)]).unwrap();
+        save_checkpoint(&p2, &[("w".into(), &small)]).unwrap();
+        let s1 = std::fs::metadata(&p1).unwrap().len();
+        let s2 = std::fs::metadata(&p2).unwrap().len();
+        assert!(s1 > s2 + 3800);
+    }
+}

@@ -1,0 +1,8 @@
+//! Host-side tensors and the DYT checkpoint format.
+
+mod io;
+#[allow(clippy::module_inception)]
+mod tensor;
+
+pub use io::{load_checkpoint, save_checkpoint};
+pub use tensor::{DType, InitSpec, Tensor};

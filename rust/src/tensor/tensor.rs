@@ -1,0 +1,268 @@
+//! Host tensor: shape + flat row-major data (f32 or i32).
+//!
+//! Deliberately minimal — the heavy math happens inside PJRT
+//! executables; host tensors exist to initialise, stage, checkpoint and
+//! inspect values. `dyad::math` adds the CPU reference ops used by
+//! property tests.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Parameter initialisation, mirroring the manifest's `init` specs
+/// (which in turn mirror the paper's §2.3 reference implementation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum InitSpec {
+    Zeros,
+    Ones,
+    /// U(-bound, bound) — nn.Linear / DYAD style, k = 1/sqrt(f_in).
+    Uniform { bound: f32 },
+    /// N(0, std) — embedding style.
+    Normal { std: f32 },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize], dtype: DType) -> Tensor {
+        let n = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Data::F32(vec![0.0; n]),
+            DType::I32 => Data::I32(vec![0; n]),
+        };
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_f32(shape: &[usize], values: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if values.len() != n {
+            bail!("shape {shape:?} needs {n} values, got {}", values.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: Data::F32(values) })
+    }
+
+    pub fn from_i32(shape: &[usize], values: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if values.len() != n {
+            bail!("shape {shape:?} needs {n} values, got {}", values.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: Data::I32(values) })
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor { shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    /// Initialise a parameter tensor per spec (deterministic given rng).
+    pub fn init(shape: &[usize], spec: &InitSpec, rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let values = match spec {
+            InitSpec::Zeros => vec![0.0; n],
+            InitSpec::Ones => vec![1.0; n],
+            InitSpec::Uniform { bound } => {
+                (0..n).map(|_| rng.uniform(-bound, *bound)).collect()
+            }
+            InitSpec::Normal { std } => {
+                (0..n).map(|_| rng.normal_f32(0.0, *std)).collect()
+            }
+        };
+        Tensor { shape: shape.to_vec(), data: Data::F32(values) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Raw little-endian bytes (PJRT literal staging / checkpoints).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match &self.data {
+            Data::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Data::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+
+    pub fn from_bytes(shape: &[usize], dtype: DType, bytes: &[u8]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("expected {} bytes for {shape:?} {dtype:?}, got {}", n * 4, bytes.len());
+        }
+        match dtype {
+            DType::F32 => {
+                let v = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::from_f32(shape, v)
+            }
+            DType::I32 => {
+                let v = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::from_i32(shape, v)
+            }
+        }
+    }
+
+    /// Scalar read (step counters, losses).
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, shape {:?}", self.shape);
+        }
+        Ok(v[0])
+    }
+
+    /// Max |a - b| — convergence / parity checks in tests.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        if a.len() != b.len() {
+            bail!("length mismatch {} vs {}", a.len(), b.len());
+        }
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        self.shape == other.shape
+            && self.max_abs_diff(other).map(|d| d <= tol).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shapes() {
+        let t = Tensor::zeros(&[2, 3], DType::F32);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert_eq!(t.as_f32().unwrap(), &[0.0; 6]);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_f32(&[2, 2], vec![1.0; 3]).is_err());
+        let t = Tensor::from_i32(&[2], vec![7, 8]).unwrap();
+        assert_eq!(t.dtype(), DType::I32);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.5, -2.25, 0.0, 3.0]).unwrap();
+        let b = t.to_bytes();
+        let t2 = Tensor::from_bytes(&[2, 2], DType::F32, &b).unwrap();
+        assert_eq!(t, t2);
+        let ti = Tensor::from_i32(&[3], vec![-1, 0, i32::MAX]).unwrap();
+        let t2i = Tensor::from_bytes(&[3], DType::I32, &ti.to_bytes()).unwrap();
+        assert_eq!(ti, t2i);
+    }
+
+    #[test]
+    fn init_uniform_respects_bound() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::init(&[1000], &InitSpec::Uniform { bound: 0.1 }, &mut rng);
+        let v = t.as_f32().unwrap();
+        assert!(v.iter().all(|x| x.abs() <= 0.1));
+        let mean: f32 = v.iter().sum::<f32>() / 1000.0;
+        assert!(mean.abs() < 0.02);
+        // not all equal
+        assert!(v.iter().any(|&x| (x - v[0]).abs() > 1e-6));
+    }
+
+    #[test]
+    fn init_normal_std() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::init(&[5000], &InitSpec::Normal { std: 0.02 }, &mut rng);
+        let v = t.as_f32().unwrap();
+        let var: f32 = v.iter().map(|x| x * x).sum::<f32>() / 5000.0;
+        assert!((var.sqrt() - 0.02).abs() < 0.002);
+    }
+
+    #[test]
+    fn scalar_and_diff() {
+        assert_eq!(Tensor::scalar_f32(2.5).scalar_value_f32().unwrap(), 2.5);
+        let a = Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_f32(&[2], vec![1.0, 2.5]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+        assert!(a.allclose(&b, 0.6));
+        assert!(!a.allclose(&b, 0.4));
+    }
+}

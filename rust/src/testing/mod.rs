@@ -1,0 +1,3 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+
+pub mod prop;

@@ -1,0 +1,72 @@
+//! `check`: run a seeded-random property many times, report the first
+//! failing case with its seed so it can be replayed deterministically.
+//!
+//! ```
+//! use dyad_repro::testing::prop::check;
+//! use dyad_repro::util::rng::Rng;
+//! check("addition commutes", 100, |rng: &mut Rng| {
+//!     let (a, b) = (rng.f32(), rng.f32());
+//!     if a + b != b + a { return Err(format!("{a} {b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random trials of `property`. Each trial gets an
+/// independent RNG derived from the trial index, so failures print a
+/// directly replayable seed. Panics on the first failure.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1AD_5EEDu64);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (replay with \
+                 PROP_SEED={base} / case seed {seed}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (debugging helper).
+pub fn replay<F>(seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("replay seed {seed} failed:\n  {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("below bound", 50, |rng| {
+            let n = rng.range(1, 100);
+            let x = rng.below(n);
+            if x < n {
+                Ok(())
+            } else {
+                Err(format!("{x} >= {n}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn reports_failure_with_seed() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+}

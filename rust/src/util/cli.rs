@@ -1,0 +1,130 @@
+//! Tiny CLI argument parser (`--flag value`, `--bool-flag`, positionals).
+//!
+//! `repro <subcommand> [--key value]...` — enough structure for the
+//! coordinator binary without the (unavailable) clap dependency.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    /// flags given without a value (`--verbose`)
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(argv("train --arch opt-mini --steps 300 --verbose")).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.str_opt("arch"), Some("opt-mini"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 300);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn parse_equals_form() {
+        let a = Args::parse(argv("bench --lr=0.001 --out=runs/x")).unwrap();
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.001);
+        assert_eq!(a.str_or("out", ""), "runs/x");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv("serve")).unwrap();
+        assert_eq!(a.usize_or("batch", 8).unwrap(), 8);
+        assert_eq!(a.f64_or("lr", 3e-4).unwrap(), 3e-4);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = Args::parse(argv("x --steps abc")).unwrap();
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(argv("x --dry-run")).unwrap();
+        assert!(a.switch("dry-run"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Offline-build substrates: JSON codec, CLI parsing, PRNG, timing.
+//!
+//! The image's vendored crate set has no serde/clap/criterion/rand, so
+//! these are first-class modules of the reproduction (DESIGN.md §6).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;

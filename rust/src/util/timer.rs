@@ -1,0 +1,58 @@
+//! Wall-clock timing helpers used by the trainer, server and benches.
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, milliseconds).
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_ms())
+}
+
+/// Repeat-measurement harness: `warmup` unmeasured runs, then `reps`
+/// measured runs; returns per-run milliseconds.
+pub fn measure_ms<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        let _ = f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t = Timer::start();
+            let _ = f();
+            t.elapsed_ms()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let ms = measure_ms(1, 3, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert_eq!(ms.len(), 3);
+        assert!(ms.iter().all(|&m| m >= 1.5), "{ms:?}");
+    }
+}

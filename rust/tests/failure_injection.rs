@@ -1,0 +1,116 @@
+//! Failure-injection tests: corrupt manifests, mismatched shapes,
+//! missing files — the coordinator must fail loudly and descriptively,
+//! never feed garbage to PJRT.
+
+use dyad_repro::runtime::Manifest;
+use dyad_repro::tensor::{load_checkpoint, save_checkpoint, DType, Tensor};
+
+const MINI_MANIFEST: &str = r#"{
+  "version": 1,
+  "adam": {"b1": 0.9, "b2": 0.999, "eps": 1e-8, "grad_clip": 1.0},
+  "archs": {}, "variants": {},
+  "artifacts": [
+    {"name": "a/b", "file": "f.hlo.txt", "kind": "k",
+     "inputs": [{"name": "w", "shape": [2, 2], "dtype": "f32",
+                 "role": "param", "init": {"kind": "zeros"}}],
+     "outputs": [{"name": "y", "shape": [2], "dtype": "f32"}],
+     "meta": {}}
+  ]
+}"#;
+
+#[test]
+fn manifest_rejects_truncation() {
+    for cut in [10, 50, 150, 300] {
+        let broken = &MINI_MANIFEST[..cut.min(MINI_MANIFEST.len() - 1)];
+        assert!(Manifest::parse(broken).is_err(), "cut at {cut} accepted");
+    }
+}
+
+#[test]
+fn manifest_rejects_bad_role_and_dtype() {
+    let bad_role = MINI_MANIFEST.replace("\"param\"", "\"weights\"");
+    let err = format!("{:#}", Manifest::parse(&bad_role).unwrap_err());
+    assert!(err.contains("role") || err.contains("weights"), "{err}");
+    let bad_dtype = MINI_MANIFEST.replace("\"f32\"", "\"f16\"");
+    assert!(Manifest::parse(&bad_dtype).is_err());
+}
+
+#[test]
+fn manifest_rejects_negative_shape() {
+    let bad = MINI_MANIFEST.replace("[2, 2]", "[2, -2]");
+    assert!(Manifest::parse(&bad).is_err());
+}
+
+#[test]
+fn manifest_error_names_the_artifact() {
+    let bad = MINI_MANIFEST.replace("\"kind\": \"zeros\"", "\"kind\": \"mystery\"");
+    let err = format!("{:#}", Manifest::parse(&bad).unwrap_err());
+    assert!(err.contains("a/b"), "error should name the artifact: {err}");
+}
+
+#[test]
+fn missing_artifact_dir_is_actionable() {
+    let err = match dyad_repro::runtime::Engine::from_dir("/nonexistent/path-xyz") {
+        Ok(_) => panic!("engine opened a nonexistent dir"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn tensor_shape_mismatches_rejected() {
+    assert!(Tensor::from_f32(&[3, 3], vec![0.0; 8]).is_err());
+    assert!(Tensor::from_bytes(&[2], DType::F32, &[0u8; 9]).is_err());
+}
+
+#[test]
+fn checkpoint_detects_flipped_bytes() {
+    let dir = std::env::temp_dir().join("dyad-failure-inj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("flip.dyt");
+    let t = Tensor::from_f32(&[16], vec![1.0; 16]).unwrap();
+    save_checkpoint(&path, &[("w".into(), &t)]).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // corrupt the dtype tag region (offset after magic+count+namelen+name)
+    let tag_off = 4 + 4 + 4 + 1;
+    bytes[tag_off] = 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(load_checkpoint(&path).is_err());
+}
+
+#[test]
+fn checkpoint_rejects_insane_counts() {
+    let dir = std::env::temp_dir().join("dyad-failure-inj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("huge.dyt");
+    // magic + absurd entry count, then EOF
+    let mut bytes = b"DYT1".to_vec();
+    bytes.extend((u32::MAX).to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(load_checkpoint(&path).is_err());
+}
+
+#[test]
+fn json_parser_handles_adversarial_inputs() {
+    use dyad_repro::util::json::Json;
+    for bad in [
+        "",
+        "{",
+        "[",
+        "\"",
+        "nul",
+        "+1",
+        "[1 2]",
+        "{\"a\" 1}",
+        "{\"a\": }",
+        "1e",
+        "\"\\q\"",
+        "\"\\u12\"",
+        "[[[[",
+    ] {
+        assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+    }
+    // deep nesting must not smash the stack at sane depths
+    let deep = "[".repeat(200) + &"]".repeat(200);
+    let _ = Json::parse(&deep); // ok either way, must not panic
+}

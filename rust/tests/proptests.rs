@@ -1,0 +1,265 @@
+//! Property tests (mini-prop framework; proptest is unavailable
+//! offline). Pure-host properties only — no PJRT — so they stay fast.
+
+use dyad_repro::data::dataset::{lengths_of, pad_batch};
+use dyad_repro::data::{Grammar, Phenomenon, TokenDataset, Tokenizer};
+use dyad_repro::dyad::{
+    blockdiag_full, blocktrans_full, dense_matmul, dyad_full, dyad_matmul,
+    perm_vector, DyadDims, Variant,
+};
+use dyad_repro::testing::prop::check;
+use dyad_repro::util::json::Json;
+use dyad_repro::util::rng::Rng;
+
+fn rand_dims(rng: &mut Rng) -> DyadDims {
+    DyadDims {
+        n_dyad: *rng.choice(&[1usize, 2, 4, 8]),
+        n_in: rng.range(1, 7),
+        n_out: rng.range(1, 7),
+    }
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+/// The paper's core algebraic identity: the efficient blocked schedule
+/// equals multiplication by the materialised near-sparse matrix, for
+/// every variant, every shape.
+#[test]
+fn prop_dyad_matmul_equals_materialised() {
+    check("dyad == materialised W @ x", 60, |rng| {
+        let dims = rand_dims(rng);
+        let nb = rng.range(1, 5);
+        let variant = *rng.choice(&[Variant::It, Variant::Ot, Variant::Dt]);
+        let wl = rand_vec(rng, dims.component_params());
+        let wu = rand_vec(rng, dims.component_params());
+        let x = rand_vec(rng, dims.f_in() * nb);
+        let got = dyad_matmul(&wl, &wu, &x, dims, variant, nb, None);
+        let full = dyad_full(&wl, &wu, dims, variant);
+        let want = dense_matmul(&full, &x, dims.f_out(), dims.f_in(), nb, None);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            if (a - b).abs() > 1e-3 {
+                return Err(format!("{dims:?} {variant:?} elt {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Linearity: dyad(x + y) == dyad(x) + dyad(y) (it *is* a linear map).
+#[test]
+fn prop_dyad_is_linear() {
+    check("dyad linearity", 40, |rng| {
+        let dims = rand_dims(rng);
+        let nb = 1usize;
+        let variant = *rng.choice(&[Variant::It, Variant::Ot, Variant::Dt]);
+        let wl = rand_vec(rng, dims.component_params());
+        let wu = rand_vec(rng, dims.component_params());
+        let x = rand_vec(rng, dims.f_in());
+        let y = rand_vec(rng, dims.f_in());
+        let xy: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let fx = dyad_matmul(&wl, &wu, &x, dims, variant, nb, None);
+        let fy = dyad_matmul(&wl, &wu, &y, dims, variant, nb, None);
+        let fxy = dyad_matmul(&wl, &wu, &xy, dims, variant, nb, None);
+        for i in 0..fxy.len() {
+            if (fxy[i] - fx[i] - fy[i]).abs() > 1e-3 {
+                return Err(format!("nonlinear at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Support size: DYAD's nonzero count is exactly <= 2 * dense/n_dyad,
+/// and the two components never lose entries to the permutation.
+#[test]
+fn prop_support_accounting() {
+    check("support accounting", 40, |rng| {
+        let dims = rand_dims(rng);
+        let variant = *rng.choice(&[Variant::It, Variant::Ot, Variant::Dt]);
+        let w3 = rand_vec(rng, dims.component_params());
+        let bd = blockdiag_full(&w3, dims);
+        let bt = blocktrans_full(&w3, dims, variant);
+        let nnz = |v: &[f32]| v.iter().filter(|&&x| x != 0.0).count();
+        if nnz(&bd) != nnz(&bt) {
+            return Err(format!("{} vs {}", nnz(&bd), nnz(&bt)));
+        }
+        if nnz(&bd) > dims.component_params() {
+            return Err("support exceeds stored params".into());
+        }
+        Ok(())
+    });
+}
+
+/// perm_vector is always a bijection and its inverse is the mirrored
+/// stride-swap (n_block <-> n_dyad).
+#[test]
+fn prop_perm_bijection_and_inverse() {
+    check("perm bijection", 60, |rng| {
+        let nb = rng.range(1, 12);
+        let nd = rng.range(1, 12);
+        let pi = perm_vector(nb, nd);
+        let mut seen = vec![false; pi.len()];
+        for &p in &pi {
+            if seen[p] {
+                return Err(format!("duplicate image {p}"));
+            }
+            seen[p] = true;
+        }
+        let inv = perm_vector(nd, nb);
+        for m in 0..pi.len() {
+            if inv[pi[m]] != m {
+                return Err(format!("inverse fails at {m}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tokenizer round trip over arbitrary grammar output.
+#[test]
+fn prop_tokenizer_roundtrip() {
+    let g = Grammar::new();
+    let t = Tokenizer::from_words(&g.vocabulary());
+    check("tokenizer roundtrip", 100, |rng| {
+        let s = g.sentence(rng);
+        let ids = t.encode(&s);
+        if ids.contains(&dyad_repro::data::tokenizer::UNK) {
+            return Err(format!("OOV in {s:?}"));
+        }
+        if t.decode(&ids) != s {
+            return Err(format!("roundtrip failed for {s:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Minimal pairs always differ, and the good member parses under the
+/// same lexicon; both members always end in punctuation.
+#[test]
+fn prop_minimal_pairs_wellformed() {
+    let g = Grammar::new();
+    check("minimal pairs wellformed", 120, |rng| {
+        let ph = *rng.choice(&Phenomenon::ALL);
+        let p = g.minimal_pair(ph, rng);
+        if p.good == p.bad {
+            return Err(format!("{ph:?}: identical pair"));
+        }
+        for side in [&p.good, &p.bad] {
+            let last = side.last().unwrap();
+            if last != "." && last != "?" {
+                return Err(format!("{ph:?}: no final punct in {side:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// pad_batch: mask counts tokens exactly; truncation keeps the suffix.
+#[test]
+fn prop_pad_batch_mask_counts() {
+    check("pad_batch mask", 80, |rng| {
+        let b = rng.range(1, 6);
+        let s = rng.range(2, 20);
+        let n = rng.range(1, b + 1);
+        let seqs: Vec<Vec<i32>> = (0..n)
+            .map(|_| {
+                let len = rng.range(1, 2 * s);
+                (0..len).map(|_| rng.range(0, 100) as i32).collect()
+            })
+            .collect();
+        let (toks, mask) = pad_batch(&seqs, b, s).map_err(|e| e.to_string())?;
+        let m = mask.as_f32().map_err(|e| e.to_string())?;
+        let tk = toks.as_i32().map_err(|e| e.to_string())?;
+        for (i, seq) in seqs.iter().enumerate() {
+            let expect = seq.len().min(s);
+            let count: f32 = m[i * s..(i + 1) * s].iter().sum();
+            if count as usize != expect {
+                return Err(format!("row {i}: mask {count} != {expect}"));
+            }
+            // suffix preserved
+            let tail = &seq[seq.len() - expect..];
+            if &tk[i * s..i * s + expect] != tail {
+                return Err(format!("row {i}: suffix not preserved"));
+            }
+        }
+        let lens = lengths_of(&seqs, b, s);
+        let lv = lens.as_i32().map_err(|e| e.to_string())?;
+        for (i, seq) in seqs.iter().enumerate() {
+            if lv[i] as usize != seq.len().min(s).max(1) {
+                return Err(format!("lengths row {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Dataset batches only ever contain training tokens and honour shape.
+#[test]
+fn prop_dataset_batches() {
+    check("dataset batches", 30, |rng| {
+        let n = rng.range(200, 800);
+        let seq = rng.range(4, 17);
+        let stream: Vec<i32> = (0..n as i32).collect();
+        let ds = TokenDataset::from_stream(&stream, seq, 0.1, rng.next_u64())
+            .map_err(|e| e.to_string())?;
+        let k = rng.range(1, 4);
+        let b = rng.range(1, 4);
+        let batch = ds.train_batch(k, b, rng);
+        if batch.shape != vec![k, b, seq] {
+            return Err(format!("shape {:?}", batch.shape));
+        }
+        let v = batch.as_i32().map_err(|e| e.to_string())?;
+        if v.iter().any(|&t| t < 0 || t >= n as i32) {
+            return Err("token out of stream range".into());
+        }
+        Ok(())
+    });
+}
+
+/// JSON codec: serialize(parse(x)) == serialize(parse(serialize(parse(x))))
+/// over random JSON trees.
+#[test]
+fn prop_json_roundtrip() {
+    fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+        if depth == 0 {
+            return match rng.below(4) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bool(0.5)),
+                2 => Json::Num((rng.range(0, 10_000) as f64) / 8.0),
+                _ => Json::Str(format!("s{}\n\"{}", rng.below(100), rng.below(10))),
+            };
+        }
+        match rng.below(2) {
+            0 => Json::Arr((0..rng.below(4)).map(|_| rand_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", 100, |rng| {
+        let v = rand_json(rng, 3);
+        let s1 = v.to_string();
+        let v2 = Json::parse(&s1).map_err(|e| e.to_string())?;
+        if v2 != v {
+            return Err(format!("parse(serialize) != id for {s1}"));
+        }
+        Ok(())
+    });
+}
+
+/// FLOP accounting: dyad_flops * n_dyad == 2 * dense_flops (Eq in §2.2).
+#[test]
+fn prop_flop_accounting() {
+    check("flop accounting", 50, |rng| {
+        let dims = rand_dims(rng);
+        let nb = rng.range(1, 64);
+        if dims.flops(nb) * dims.n_dyad != 2 * dims.dense_flops(nb) {
+            return Err(format!("{dims:?}"));
+        }
+        Ok(())
+    });
+}

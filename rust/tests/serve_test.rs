@@ -1,0 +1,103 @@
+//! Serving-path integration: full client→batcher→engine→response loop
+//! against real artifacts, plus concurrency and shutdown semantics.
+
+use dyad_repro::data::{Grammar, Tokenizer};
+use dyad_repro::serve::{Request, ServeConfig, ServerHandle};
+use dyad_repro::util::rng::Rng;
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts"),
+        arch: "opt-mini".into(),
+        variant: "dyad_it".into(),
+        checkpoint_dir: None,
+        max_batch: 4,
+        window_ms: 3,
+        seed: 7,
+    }
+}
+
+#[test]
+fn server_scores_batches_and_reports_stats() {
+    let server = ServerHandle::start(cfg());
+    let grammar = Grammar::new();
+    let tok = Tokenizer::from_words(&grammar.vocabulary());
+    let mut rng = Rng::new(0);
+    let sentences: Vec<Vec<i32>> = (0..12)
+        .map(|_| tok.encode_sentence(&grammar.sentence(&mut rng)))
+        .collect();
+
+    // concurrent clients
+    std::thread::scope(|scope| {
+        for chunk in sentences.chunks(4) {
+            let tx = server.sender();
+            scope.spawn(move || {
+                for toks in chunk {
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                        .unwrap();
+                    let score = rrx.recv().unwrap().unwrap();
+                    assert!(score.is_finite());
+                    assert!(score < 0.0, "sum logprob must be negative: {score}");
+                }
+            });
+        }
+    });
+
+    let stats = server.stats().unwrap();
+    assert_eq!(stats.requests(), 12);
+    assert!(!stats.batch_sizes.is_empty());
+    assert!(stats.mean_batch_occupancy() >= 1.0);
+    // with 3 concurrent clients and a 3ms window, some batching happens
+    assert!(
+        stats.batch_sizes.iter().any(|&b| b > 1),
+        "no batching occurred: {:?}",
+        stats.batch_sizes
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn server_scoring_is_deterministic_across_batch_shapes() {
+    let server = ServerHandle::start(cfg());
+    let grammar = Grammar::new();
+    let tok = Tokenizer::from_words(&grammar.vocabulary());
+    let mut rng = Rng::new(1);
+    let sent = tok.encode_sentence(&grammar.sentence(&mut rng));
+    // score the same sequence alone and amid other requests; the
+    // padded-batch execution must not change its score
+    let solo = server.score(sent.clone()).unwrap();
+    std::thread::scope(|scope| {
+        let tx = server.sender();
+        scope.spawn(move || {
+            for _ in 0..3 {
+                let (rtx, rrx) = std::sync::mpsc::channel();
+                let mut r2 = Rng::new(9);
+                let other = tok.encode_sentence(&grammar.sentence(&mut r2));
+                tx.send(Request::Score { tokens: other, resp: rtx }).unwrap();
+                let _ = rrx.recv();
+            }
+        });
+        let batched = server.score(sent.clone()).unwrap();
+        assert!(
+            (solo - batched).abs() < 1e-4,
+            "batch-shape dependence: {solo} vs {batched}"
+        );
+    });
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn server_generate_returns_tokens() {
+    let server = ServerHandle::start(cfg());
+    let out = server.generate(vec![5, 6, 7], 4).unwrap();
+    assert!(!out.is_empty() && out.len() <= 4);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn server_survives_empty_shutdown() {
+    let server = ServerHandle::start(cfg());
+    server.shutdown().unwrap();
+}
