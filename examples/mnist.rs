@@ -1,15 +1,21 @@
 //! §3.4.5 vision probe: MNIST-style digit classification with DENSE vs
-//! DYAD-IT hidden layers (procedural digits; DESIGN.md §6).
+//! DYAD-IT hidden layers (procedural digits; DESIGN.md §6). Trains on
+//! the native backend by default — no artifacts needed.
 //!
-//!     cargo run --release --example mnist [-- --steps 200]
+//!     cargo run --release --example mnist [-- --steps 200 --backend native]
 
 use anyhow::Result;
+use dyad_repro::runtime::{open_backend, BackendKind};
 use dyad_repro::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    let backend = open_backend(
+        BackendKind::from_str(&args.str_or("backend", "native"))?,
+        std::path::Path::new(&args.str_or("artifacts", "artifacts")),
+    )?;
     dyad_repro::eval::mnist_probe::run(
-        &args.str_or("artifacts", "artifacts"),
+        backend.as_ref(),
         args.usize_or("steps", 200)?,
         args.str_opt("variant"),
         args.u64_or("seed", 5)?,

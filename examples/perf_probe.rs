@@ -1,71 +1,80 @@
-//! L3 perf probe (EXPERIMENTS.md §Perf): quantifies the coordinator's
-//! two hot-path design choices:
+//! L3 perf probe: quantifies the native execution layer's two hot-path
+//! design choices:
 //!
-//! 1. **K-microbatch amortization** — one train_k8 call vs eight
-//!    train_k1 calls (the host round-trip of training state happens
-//!    once vs eight times).
-//! 2. **Literal staging overhead** — `Loaded::run` (host tensors
-//!    converted every call) vs `run_literals` (pre-staged), on the
-//!    score artifact.
+//! 1. **Thread scaling of the fused DYAD kernel** — the same fused
+//!    forward at 1/2/4/max worker threads (row-panel parallelism).
+//! 2. **Fused schedule vs oracle** — the blocked in-place kernel
+//!    against `dyad::math::dyad_matmul` (per-block gather + temporary
+//!    buffers) at the OPT-125m ff geometry.
 //!
 //!     cargo run --release --example perf_probe
 
 use anyhow::Result;
-use dyad_repro::bench_support::{bench_artifact, synth_input, BenchOpts};
-use dyad_repro::runtime::{tensor_to_literal, Engine};
+use dyad_repro::dyad::kernel::{dyad_fused_with_threads, num_threads};
+use dyad_repro::dyad::{dyad_matmul, DyadDims, Variant};
 use dyad_repro::util::rng::Rng;
 use dyad_repro::util::stats::Summary;
 use dyad_repro::util::timer::Timer;
 
-fn main() -> Result<()> {
-    let engine = Engine::from_dir("artifacts")?;
-    let opts = BenchOpts { warmup: 1, reps: 5, seed: 42 };
-
-    // --- 1. K amortization ---------------------------------------------
-    let k1 = bench_artifact(&engine, "opt-mini/dense/train_k1", opts)?;
-    let k8 = bench_artifact(&engine, "opt-mini/dense/train_k8", opts)?;
-    println!("train_k1: {:8.1} ms/call  -> 8 steps = {:8.1} ms", k1.mean, 8.0 * k1.mean);
-    println!("train_k8: {:8.1} ms/call  -> 8 steps = {:8.1} ms", k8.mean, k8.mean);
-    println!(
-        "K-amortization saving: {:.1}% ({:.1} ms of state round-trip per 8 steps)",
-        100.0 * (1.0 - k8.mean / (8.0 * k1.mean)),
-        8.0 * k1.mean - k8.mean
-    );
-
-    // --- 2. literal staging --------------------------------------------
-    let art = engine.load("opt-mini/dense/score")?;
-    let mut rng = Rng::new(1);
-    let tensors: Vec<_> = art
-        .spec
-        .inputs
-        .iter()
-        .map(|io| synth_input(io, &mut rng))
-        .collect();
-    let lits: Vec<xla::Literal> = tensors
-        .iter()
-        .zip(&art.spec.inputs)
-        .map(|(t, s)| tensor_to_literal(t, s))
-        .collect::<Result<_>>()?;
-    let _ = art.run(&tensors)?; // warmup
-    let mut conv = Vec::new();
-    let mut pre = Vec::new();
-    for _ in 0..8 {
+fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> Summary {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
         let t = Timer::start();
-        let _ = art.run(&tensors)?;
-        conv.push(t.elapsed_ms());
-        let t = Timer::start();
-        let _ = art.run_literals(&lits)?;
-        pre.push(t.elapsed_ms());
+        f();
+        samples.push(t.elapsed_ms());
     }
-    let (c, p) = (Summary::of(&conv), Summary::of(&pre));
+    Summary::of(&samples)
+}
+
+fn main() -> Result<()> {
+    // OPT-125m fc1 geometry: 768 -> 3072, 512-token minibatch, n_dyad 4
+    let dims = DyadDims::new(4, 768, 3072)?;
+    let nb = 512;
+    let mut rng = Rng::new(3);
+    let wl: Vec<f32> = (0..dims.component_params()).map(|_| rng.uniform(-0.1, 0.1)).collect();
+    let wu: Vec<f32> = (0..dims.component_params()).map(|_| rng.uniform(-0.1, 0.1)).collect();
+    let x: Vec<f32> = (0..dims.f_in() * nb).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    // --- 1. thread scaling ---------------------------------------------
+    let max = num_threads();
+    println!("fused DYAD forward, 768->3072 x {nb} cols (max {max} threads):");
+    let mut base = f64::NAN;
+    for threads in [1usize, 2, 4, max] {
+        if threads > max {
+            continue;
+        }
+        let s = time_ms(5, || {
+            std::hint::black_box(dyad_fused_with_threads(
+                &wl, &wu, &x, dims, Variant::It, nb, None, threads,
+            ));
+        });
+        if threads == 1 {
+            base = s.p50;
+        }
+        println!(
+            "  {threads:>2} threads: {:8.2} ms  ({:.2}x vs 1 thread)",
+            s.p50,
+            base / s.p50
+        );
+    }
+
+    // --- 2. fused vs oracle --------------------------------------------
+    let oracle = time_ms(5, || {
+        std::hint::black_box(dyad_matmul(&wl, &wu, &x, dims, Variant::It, nb, None));
+    });
+    let fused = time_ms(5, || {
+        std::hint::black_box(dyad_fused_with_threads(
+            &wl, &wu, &x, dims, Variant::It, nb, None, max,
+        ));
+    });
     println!(
-        "\nscore via run (convert each call):  {:8.1} ms\n\
-         score via run_literals (pre-staged): {:8.1} ms\n\
-         staging overhead avoided: {:.1} ms/call ({:.1}%)",
-        c.mean,
-        p.mean,
-        c.mean - p.mean,
-        100.0 * (c.mean - p.mean) / c.mean
+        "\noracle (single-thread, gather + temps): {:8.2} ms\n\
+         fused  (blocked, in-place, {max} threads): {:8.2} ms\n\
+         speedup: {:.2}x",
+        oracle.p50,
+        fused.p50,
+        oracle.p50 / fused.p50
     );
     Ok(())
 }

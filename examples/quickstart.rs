@@ -1,29 +1,32 @@
-//! Quickstart: load AOT artifacts and run the DYAD vs DENSE ff module.
+//! Quickstart: open a backend and run the DYAD vs DENSE ff module.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! Demonstrates the whole public API surface in ~60 lines: open the
-//! engine, inspect the manifest, execute an artifact with typed host
-//! tensors, and compare DYAD's wall clock against the dense baseline
-//! at the paper's OPT-125m ff geometry.
+//! Demonstrates the whole public API surface in ~60 lines: open a
+//! backend (native by default — no artifacts needed; set
+//! `REPRO_BACKEND=xla` after `make artifacts` for PJRT), inspect the
+//! manifest, execute an artifact with typed host tensors, and compare
+//! DYAD's wall clock against the dense baseline at the paper's
+//! OPT-125m ff geometry.
 
 use anyhow::Result;
-use dyad_repro::bench_support::{bench_artifact, BenchOpts};
-use dyad_repro::runtime::Engine;
+use dyad_repro::bench_support::{backend_from_env, bench_artifact, BenchOpts};
+use dyad_repro::runtime::{Backend, Executable};
 use dyad_repro::tensor::Tensor;
 use dyad_repro::util::rng::Rng;
 
 fn main() -> Result<()> {
-    // 1. Open the artifact directory (built once by `make artifacts`).
-    let engine = Engine::from_dir("artifacts")?;
-    println!("platform: {}", engine.platform());
-    println!("artifacts in manifest: {}", engine.manifest.artifacts.len());
+    // 1. Open the execution backend.
+    let backend = backend_from_env()?;
+    println!("platform: {}", backend.platform());
+    println!("artifacts in manifest: {}", backend.manifest().artifacts.len());
 
-    // 2. Execute one artifact by hand: the small Pallas DYAD-IT kernel.
-    let art = engine.load("pallas/dyad_it_small")?;
+    // 2. Execute one artifact by hand: the MNIST hidden path (the two
+    //    DYAD swap-site linears).
+    let art = backend.load("mnist/dyad_it/hidden_fwd")?;
     let mut rng = Rng::new(0);
     let inputs: Vec<Tensor> = art
-        .spec
+        .spec()
         .inputs
         .iter()
         .map(|io| {
@@ -35,9 +38,10 @@ fn main() -> Result<()> {
             .unwrap()
         })
         .collect();
-    let out = art.run(&inputs)?;
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let out = art.run(&refs)?;
     println!(
-        "pallas dyad_it: y shape {:?}, first values {:?}",
+        "mnist/dyad_it/hidden_fwd: h shape {:?}, first values {:?}",
         out[0].shape,
         &out[0].as_f32()?[..4]
     );
@@ -45,9 +49,9 @@ fn main() -> Result<()> {
     // 3. The headline comparison (paper Table 1): ff module at the
     //    true OPT-125m width, DENSE vs DYAD-IT vs DYAD-IT-8.
     let opts = BenchOpts { warmup: 2, reps: 5, seed: 1 };
-    let dense = bench_artifact(&engine, "ff/opt125m-ff/dense/fwd", opts)?;
-    let dyad = bench_artifact(&engine, "ff/opt125m-ff/dyad_it/fwd", opts)?;
-    let dyad8 = bench_artifact(&engine, "ff/opt125m-ff/dyad_it_8/fwd", opts)?;
+    let dense = bench_artifact(backend.as_ref(), "ff/opt125m-ff/dense/fwd", opts)?;
+    let dyad = bench_artifact(backend.as_ref(), "ff/opt125m-ff/dyad_it/fwd", opts)?;
+    let dyad8 = bench_artifact(backend.as_ref(), "ff/opt125m-ff/dyad_it_8/fwd", opts)?;
     println!("\nff forward @ OPT-125m geometry (768 -> 3072), 512 tokens:");
     println!("  dense      {:8.2} ms   1.00x", dense.mean);
     println!(

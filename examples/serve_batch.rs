@@ -8,6 +8,7 @@
 
 use anyhow::Result;
 use dyad_repro::data::{Grammar, Tokenizer};
+use dyad_repro::runtime::BackendKind;
 use dyad_repro::serve::{Request, ServeConfig, ServerHandle};
 use dyad_repro::util::cli::Args;
 use dyad_repro::util::rng::Rng;
@@ -17,6 +18,7 @@ fn main() -> Result<()> {
     let n_requests = args.usize_or("requests", 96)?;
     let n_clients = args.usize_or("clients", 6)?;
     let cfg = ServeConfig {
+        backend: BackendKind::from_str(&args.str_or("backend", "native"))?,
         artifacts_dir: args.str_or("artifacts", "artifacts").into(),
         arch: args.str_or("arch", "opt-mini"),
         variant: args.str_or("variant", "dyad_it"),

@@ -12,13 +12,18 @@ use dyad_repro::config::TrainConfig;
 use dyad_repro::coordinator::{checkpoint::CheckpointManager, MetricsLogger, Trainer};
 use dyad_repro::data::{Grammar, Tokenizer};
 use dyad_repro::eval;
-use dyad_repro::runtime::Engine;
+use dyad_repro::runtime::{open_backend, Backend, BackendKind};
 use dyad_repro::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let steps = args.usize_or("steps", 240)?;
-    let engine = Engine::from_dir(args.str_or("artifacts", "artifacts"))?;
+    // LM pretraining needs the xla backend today (native transformer
+    // training is a ROADMAP item); --backend native will error there.
+    let backend = open_backend(
+        BackendKind::from_str(&args.str_or("backend", "xla"))?,
+        std::path::Path::new(&args.str_or("artifacts", "artifacts")),
+    )?;
     let grammar = Grammar::new();
     let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
 
@@ -37,13 +42,13 @@ fn main() -> Result<()> {
         };
         let mut log = MetricsLogger::to_dir(&cfg.out_dir)?;
         log.quiet = false;
-        let report = Trainer::new(cfg.clone()).run(&engine, &mut log)?;
+        let report = Trainer::new(cfg.clone()).run(backend.as_ref(), &mut log)?;
 
         // zero-shot minimal pairs on the fresh checkpoint
-        let train_spec = engine.manifest.artifact(&cfg.train_artifact(8))?.clone();
+        let train_spec = backend.manifest().artifact(&cfg.train_artifact(8))?.clone();
         let state = CheckpointManager::new(&cfg.out_dir).load_state(&train_spec)?;
-        let score_art = engine.load(&cfg.artifact("score"))?;
-        let blimp = eval::blimp::evaluate(&score_art, &state, &tokenizer, 40, 9)?;
+        let score_art = backend.load(&cfg.artifact("score"))?;
+        let blimp = eval::blimp::evaluate(score_art.as_ref(), &state, &tokenizer, 40, 9)?;
         println!(
             "{variant}: loss {:.3} -> {:.3} (valid {:.3}), BLIMP mean {:.3}, \
              {} params, {:.0} ms/call",

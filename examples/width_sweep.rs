@@ -1,15 +1,15 @@
 //! Figure 6 interactively: DYAD vs DENSE ff speedup as model width
 //! grows (6-layer-capped OPT-like architecture in the paper; here the
-//! ff geometry sweeps d -> 4d directly).
+//! ff geometry sweeps d -> 4d directly). Runs on the native backend by
+//! default; set REPRO_BACKEND=xla after `make artifacts` for PJRT.
 //!
 //!     cargo run --release --example width_sweep
 
 use anyhow::Result;
-use dyad_repro::bench_support::{ff_timing, BenchOpts};
-use dyad_repro::runtime::Engine;
+use dyad_repro::bench_support::{backend_from_env, ff_timing, BenchOpts};
 
 fn main() -> Result<()> {
-    let engine = Engine::from_dir("artifacts")?;
+    let backend = backend_from_env()?;
     let opts = BenchOpts { warmup: 2, reps: 5, seed: 3 };
     println!(
         "{:<8} {:>12} {:>12} {:>12} {:>10} {:>10}",
@@ -17,9 +17,9 @@ fn main() -> Result<()> {
     );
     for width in [256usize, 512, 1024, 2048] {
         let geo = format!("width{width}");
-        let dense = ff_timing(&engine, &geo, "dense", opts)?;
-        let d4 = ff_timing(&engine, &geo, "dyad_it", opts)?;
-        let d8 = ff_timing(&engine, &geo, "dyad_it_8", opts)?;
+        let dense = ff_timing(backend.as_ref(), &geo, "dense", opts)?;
+        let d4 = ff_timing(backend.as_ref(), &geo, "dyad_it", opts)?;
+        let d8 = ff_timing(backend.as_ref(), &geo, "dyad_it_8", opts)?;
         println!(
             "{:<8} {:>12.3} {:>12.3} {:>12.3} {:>10.2} {:>10.2}",
             width,

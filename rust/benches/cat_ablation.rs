@@ -6,14 +6,13 @@
 //! OPT-350m 7.92 -> 5.46 ms (~45%). Expect IT-CAT <= IT here, with the
 //! gap growing at the wider geometry.
 
-use dyad_repro::bench_support::{ff_table, print_ff_table, BenchOpts};
-use dyad_repro::runtime::Engine;
+use dyad_repro::bench_support::{backend_from_env, ff_table, print_ff_table, BenchOpts};
 
 fn main() {
-    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let backend = backend_from_env().expect("open backend");
     let opts = BenchOpts { warmup: 2, reps: 8, seed: 4 };
     for geo in ["opt125m-ff", "opt350m-ff"] {
-        let rows = ff_table(&engine, geo, &["dense", "dyad_it", "dyad_it_cat"], opts)
+        let rows = ff_table(backend.as_ref(), geo, &["dense", "dyad_it", "dyad_it_cat"], opts)
             .expect("bench");
         print_ff_table(&format!("§3.4.3 -CAT ablation, {geo}"), &rows);
         let it = rows.iter().find(|r| r.variant == "dyad_it").unwrap();

@@ -3,12 +3,11 @@
 //! Paper sweeps to 4096; we cap at 2048 for 1-core bench time and
 //! document the truncation in EXPERIMENTS.md.
 
-use dyad_repro::bench_support::{ff_timing, BenchOpts};
-use dyad_repro::runtime::Engine;
+use dyad_repro::bench_support::{backend_from_env, ff_timing, BenchOpts};
 use dyad_repro::util::json::{num, obj, s};
 
 fn main() {
-    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let backend = backend_from_env().expect("open backend");
     let opts = BenchOpts { warmup: 2, reps: 5, seed: 5 };
     println!("== Figure 6: speedup vs width (ff module, 128 tokens) ==");
     println!(
@@ -18,9 +17,9 @@ fn main() {
     let mut last4 = 0.0;
     for width in [256usize, 512, 1024, 2048] {
         let geo = format!("width{width}");
-        let dense = ff_timing(&engine, &geo, "dense", opts).expect("bench");
-        let d4 = ff_timing(&engine, &geo, "dyad_it", opts).expect("bench");
-        let d8 = ff_timing(&engine, &geo, "dyad_it_8", opts).expect("bench");
+        let dense = ff_timing(backend.as_ref(), &geo, "dense", opts).expect("bench");
+        let d4 = ff_timing(backend.as_ref(), &geo, "dyad_it", opts).expect("bench");
+        let d8 = ff_timing(backend.as_ref(), &geo, "dyad_it_8", opts).expect("bench");
         let (x4, x8) = (dense.total_ms / d4.total_ms, dense.total_ms / d8.total_ms);
         println!(
             "{:<8} {:>12.3} {:>12.3} {:>12.3} {:>9.2} {:>9.2}",

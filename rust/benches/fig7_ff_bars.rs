@@ -2,8 +2,7 @@
 //! OPT-350m geometries (ASCII rendition of the paper's bar chart;
 //! same data as Tables 1/10 but grouped per pass).
 
-use dyad_repro::bench_support::{ff_table, BenchOpts, FfTiming};
-use dyad_repro::runtime::Engine;
+use dyad_repro::bench_support::{backend_from_env, ff_table, BenchOpts, FfTiming};
 
 fn bar(ms: f64, scale: f64) -> String {
     let n = ((ms / scale) * 40.0).round() as usize;
@@ -24,12 +23,12 @@ fn render(title: &str, rows: &[FfTiming]) {
 }
 
 fn main() {
-    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let backend = backend_from_env().expect("open backend");
     let opts = BenchOpts { warmup: 2, reps: 6, seed: 8 };
     let variants = ["dense", "dyad_it", "dyad_it_8"];
-    let r125 = ff_table(&engine, "opt125m-ff", &variants, opts).expect("bench");
+    let r125 = ff_table(backend.as_ref(), "opt125m-ff", &variants, opts).expect("bench");
     render("OPT-125m ff (768->3072, 512 tokens)", &r125);
-    let r350 = ff_table(&engine, "opt350m-ff", &variants, opts).expect("bench");
+    let r350 = ff_table(backend.as_ref(), "opt350m-ff", &variants, opts).expect("bench");
     render("OPT-350m ff (1024->4096, 256 tokens)", &r350);
     // paper shape: dyad bars shorter than dense, gap wider at 350m
     let s125 = r125[0].total_ms / r125[1].total_ms;

@@ -2,15 +2,16 @@
 //! and OPT-350m-class presets (opt-mini / opt-mid): non-embedding
 //! params, checkpoint size and training-state bytes per variant.
 
+use dyad_repro::bench_support::backend_from_env;
 use dyad_repro::coordinator::checkpoint::CheckpointManager;
-use dyad_repro::runtime::{Engine, TrainState};
+use dyad_repro::runtime::{Backend, TrainState};
 
 fn bar(v: f64, max: f64) -> String {
     "#".repeat(((v / max) * 40.0).round().max(1.0) as usize)
 }
 
 fn main() {
-    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let backend = backend_from_env().expect("open backend");
     for (arch, variants) in [
         ("opt-mini", vec!["dense", "dyad_it", "dyad_it_8"]),
         ("opt-mid", vec!["dense", "dyad_it"]),
@@ -18,8 +19,8 @@ fn main() {
         println!("\n== Figure 8 panel: {arch} ==");
         let mut rows = Vec::new();
         for v in &variants {
-            let spec = engine
-                .manifest
+            let spec = backend
+                .manifest()
                 .artifact(&format!("{arch}/{v}/train_k1"))
                 .expect("artifact")
                 .clone();

@@ -1,0 +1,86 @@
+//! Native-kernel width sweep: the fused parallel DYAD forward
+//! (`dyad::kernel::dyad_fused`) against the single-threaded oracle
+//! (`dyad::math::dyad_matmul`) and the blocked dense matmul, on the
+//! Figure 6 ff geometries (d -> 4d, 128-token minibatch).
+//!
+//! This is the kernel-level acceptance check for the native backend:
+//! the fused kernel should beat the oracle by a wide margin (threads x
+//! blocking x no gather/temporary allocations) at every width.
+
+use dyad_repro::dyad::kernel::{dyad_fused, matmul_fast, num_threads};
+use dyad_repro::dyad::{dyad_matmul, DyadDims, Variant};
+use dyad_repro::util::json::{num, obj, s};
+use dyad_repro::util::rng::Rng;
+use dyad_repro::util::stats::Summary;
+use dyad_repro::util::timer::Timer;
+
+fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> Summary {
+    // warmup
+    f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_ms());
+    }
+    Summary::of(&samples)
+}
+
+fn main() {
+    let nb = 128; // WIDTH_SWEEP_TOKENS
+    let reps = 7;
+    println!(
+        "== native kernel sweep: fused DYAD vs oracle vs dense ({} threads, {} cols) ==",
+        num_threads(),
+        nb
+    );
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>14} {:>12}",
+        "width", "dense(ms)", "oracle(ms)", "fused(ms)", "fused/oracle", "dense/fused"
+    );
+    let mut rng = Rng::new(99);
+    for width in [256usize, 512, 1024, 2048] {
+        // fc1 geometry of the ff module: (4w, w) with n_dyad = 4
+        let dims = DyadDims::new(4, width, 4 * width).expect("dims");
+        let nw = dims.component_params();
+        let wl: Vec<f32> = (0..nw).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let wu: Vec<f32> = (0..nw).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let nd = dims.f_out() * dims.f_in();
+        let wd: Vec<f32> = (0..nd).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let nx = dims.f_in() * nb;
+        let x: Vec<f32> = (0..nx).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+        let dense = time_ms(reps, || {
+            std::hint::black_box(matmul_fast(&wd, &x, dims.f_out(), dims.f_in(), nb));
+        });
+        let oracle = time_ms(reps, || {
+            std::hint::black_box(dyad_matmul(&wl, &wu, &x, dims, Variant::It, nb, None));
+        });
+        let fused = time_ms(reps, || {
+            std::hint::black_box(dyad_fused(&wl, &wu, &x, dims, Variant::It, nb, None));
+        });
+        let vs_oracle = oracle.p50 / fused.p50;
+        let vs_dense = dense.p50 / fused.p50;
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>12.3} {:>13.2}x {:>11.2}x",
+            width, dense.p50, oracle.p50, fused.p50, vs_oracle, vs_dense
+        );
+        println!(
+            "{}",
+            obj(vec![
+                ("bench", s("native_kernel_sweep")),
+                ("width", num(width as f64)),
+                ("dense_ms", num(dense.p50)),
+                ("oracle_ms", num(oracle.p50)),
+                ("fused_ms", num(fused.p50)),
+                ("fused_vs_oracle", num(vs_oracle)),
+                ("dense_vs_fused", num(vs_dense)),
+            ])
+            .to_string()
+        );
+    }
+    println!(
+        "\nexpect fused/oracle >= 4x on multi-core hosts and dense/fused ~ \
+         n_dyad/2 at large widths"
+    );
+}

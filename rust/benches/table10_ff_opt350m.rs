@@ -4,14 +4,13 @@
 //! Paper reference (ms): DENSE 2.55/4.97/7.52; DYAD-IT-4 5.49 (1.37x);
 //! DYAD-IT-8 4.14 (1.82x).
 
-use dyad_repro::bench_support::{ff_table, print_ff_table, BenchOpts};
-use dyad_repro::runtime::Engine;
+use dyad_repro::bench_support::{backend_from_env, ff_table, print_ff_table, BenchOpts};
 
 fn main() {
-    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let backend = backend_from_env().expect("open backend");
     let opts = BenchOpts { warmup: 2, reps: 8, seed: 3 };
     let rows = ff_table(
-        &engine,
+        backend.as_ref(),
         "opt350m-ff",
         &["dense", "dyad_it", "dyad_it_8"],
         opts,

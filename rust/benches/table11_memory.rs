@@ -7,12 +7,13 @@
 //! DYAD-*-4 370 MB / 58.32 M; DYAD-IT-8 316 MB / 44.16 M; GPU-mem
 //! drop 1.7% (n=4) / 3.0% (n=8).
 
+use dyad_repro::bench_support::backend_from_env;
 use dyad_repro::coordinator::checkpoint::CheckpointManager;
-use dyad_repro::runtime::{Engine, TrainState};
+use dyad_repro::runtime::{Backend, TrainState};
 use dyad_repro::util::json::{num, obj, s};
 
 fn main() {
-    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let backend = backend_from_env().expect("open backend");
     let arch = "opt-mini";
     let variants = ["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8"];
     println!("\n== Table 11: memory & parameter footprint, {arch} ==");
@@ -23,7 +24,7 @@ fn main() {
     let mut dense_state = f64::NAN;
     for v in variants {
         let name = format!("{arch}/{v}/train_k1");
-        let spec = engine.manifest.artifact(&name).expect("artifact").clone();
+        let spec = backend.manifest().artifact(&name).expect("artifact").clone();
         let state = TrainState::init(&spec, 0).expect("init");
         let dir = std::env::temp_dir().join(format!("dyad-table11-{v}"));
         let _ = std::fs::remove_dir_all(&dir);

@@ -7,14 +7,13 @@
 //! DYAD-IT-8 2.61 (1.65x). Expect the same ordering/shape on CPU with
 //! larger absolute numbers (EXPERIMENTS.md).
 
-use dyad_repro::bench_support::{ff_table, print_ff_table, BenchOpts};
-use dyad_repro::runtime::Engine;
+use dyad_repro::bench_support::{backend_from_env, ff_table, print_ff_table, BenchOpts};
 
 fn main() {
-    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let backend = backend_from_env().expect("open backend");
     let opts = BenchOpts { warmup: 2, reps: 8, seed: 1 };
     let rows = ff_table(
-        &engine,
+        backend.as_ref(),
         "opt125m-ff",
         &["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8"],
         opts,

@@ -3,14 +3,13 @@
 //! Paper reference (ms): DENSE 1.41/2.83/4.24; DYAD-IT 3.95 (1.07x);
 //! DYAD-IT-8 2.64 (1.61x).
 
-use dyad_repro::bench_support::{ff_table, print_ff_table, BenchOpts};
-use dyad_repro::runtime::Engine;
+use dyad_repro::bench_support::{backend_from_env, ff_table, print_ff_table, BenchOpts};
 
 fn main() {
-    let engine = Engine::from_dir("artifacts").expect("make artifacts first");
+    let backend = backend_from_env().expect("open backend");
     let opts = BenchOpts { warmup: 2, reps: 8, seed: 2 };
     let rows = ff_table(
-        &engine,
+        backend.as_ref(),
         "pythia160m-ff",
         &["dense", "dyad_it", "dyad_it_8"],
         opts,

@@ -1,9 +1,10 @@
 //! Generic artifact timing: synthesize valid inputs from the manifest,
-//! warm up (includes XLA compile), then measure repeated executions.
+//! warm up (includes any lazy compile), then measure repeated
+//! executions through the backend-neutral [`Executable`] interface.
 
 use anyhow::Result;
 
-use crate::runtime::{tensor_to_literal, Engine, Role};
+use crate::runtime::{open_backend, Backend, BackendKind, Executable, Role};
 use crate::tensor::{DType, InitSpec, Tensor};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -20,6 +21,18 @@ impl Default for BenchOpts {
     fn default() -> Self {
         BenchOpts { warmup: 3, reps: 10, seed: 1234 }
     }
+}
+
+/// Open the backend the benches should run on: `REPRO_BACKEND`
+/// (native|xla, default native) over `REPRO_ARTIFACTS` (default
+/// `artifacts`, only read by the xla backend).
+pub fn backend_from_env() -> Result<Box<dyn Backend>> {
+    let kind = match std::env::var("REPRO_BACKEND") {
+        Ok(v) => BackendKind::from_str(&v)?,
+        Err(_) => BackendKind::Native,
+    };
+    let dir = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    open_backend(kind, std::path::Path::new(&dir))
 }
 
 /// Synthesize one valid input tensor for an IoSpec.
@@ -52,25 +65,30 @@ pub fn synth_input(
     }
 }
 
-/// Time one artifact end-to-end (literals pre-staged; measured region
-/// is the PJRT execute + output tuple fetch).
-pub fn bench_artifact(engine: &Engine, name: &str, opts: BenchOpts) -> Result<Summary> {
-    let art = engine.load(name)?;
+/// Time one artifact end-to-end (inputs pre-synthesized; the measured
+/// region is one full `Executable::run` — staging + execute + fetch).
+pub fn bench_artifact(
+    backend: &dyn Backend,
+    name: &str,
+    opts: BenchOpts,
+) -> Result<Summary> {
+    let art = backend.load(name)?;
     let mut rng = Rng::new(opts.seed);
-    let lits: Vec<xla::Literal> = art
-        .spec
+    let inputs: Vec<Tensor> = art
+        .spec()
         .inputs
         .iter()
-        .map(|io| tensor_to_literal(&synth_input(io, &mut rng), io))
-        .collect::<Result<_>>()?;
+        .map(|io| synth_input(io, &mut rng))
+        .collect();
+    let refs: Vec<&Tensor> = inputs.iter().collect();
     // warmup (first call includes any lazy work)
     for _ in 0..opts.warmup.max(1) {
-        let _ = art.run_literals(&lits)?;
+        let _ = art.run(&refs)?;
     }
     let mut samples = Vec::with_capacity(opts.reps);
     for _ in 0..opts.reps {
         let t = Timer::start();
-        let out = art.run_literals(&lits)?;
+        let out = art.run(&refs)?;
         std::hint::black_box(&out);
         samples.push(t.elapsed_ms());
     }

@@ -1,12 +1,13 @@
 //! Benchmark harness (criterion is unavailable offline; DESIGN.md §6).
 //!
 //! Each `rust/benches/*.rs` binary regenerates one paper table/figure:
-//! it loads the relevant AOT artifacts, times them with warmup +
-//! repeated measurement, and prints rows in the paper's format plus a
-//! machine-readable JSON line per row.
+//! it opens a backend (`REPRO_BACKEND`, default native — so every
+//! table runs without PJRT artifacts), times the relevant programs
+//! with warmup + repeated measurement, and prints rows in the paper's
+//! format plus a machine-readable JSON line per row.
 
 pub mod harness;
 pub mod workloads;
 
-pub use harness::{bench_artifact, synth_input, BenchOpts};
+pub use harness::{backend_from_env, bench_artifact, synth_input, BenchOpts};
 pub use workloads::{ff_table, ff_timing, print_ff_table, FfTiming};

@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use super::harness::{bench_artifact, BenchOpts};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::util::json::{num, obj, s};
 
 /// One row of a paper timing table.
@@ -20,13 +20,13 @@ pub struct FfTiming {
 /// `fwd` artifact, total from `fwdbwd`, backward = total - forward
 /// (the paper reports all three).
 pub fn ff_timing(
-    engine: &Engine,
+    backend: &dyn Backend,
     geometry: &str,
     variant: &str,
     opts: BenchOpts,
 ) -> Result<FfTiming> {
-    let fwd = bench_artifact(engine, &format!("ff/{geometry}/{variant}/fwd"), opts)?;
-    let fb = bench_artifact(engine, &format!("ff/{geometry}/{variant}/fwdbwd"), opts)?;
+    let fwd = bench_artifact(backend, &format!("ff/{geometry}/{variant}/fwd"), opts)?;
+    let fb = bench_artifact(backend, &format!("ff/{geometry}/{variant}/fwdbwd"), opts)?;
     let total = fb.mean;
     Ok(FfTiming {
         variant: variant.to_string(),
@@ -38,14 +38,14 @@ pub fn ff_timing(
 
 /// Full table: every variant against the DENSE baseline.
 pub fn ff_table(
-    engine: &Engine,
+    backend: &dyn Backend,
     geometry: &str,
     variants: &[&str],
     opts: BenchOpts,
 ) -> Result<Vec<FfTiming>> {
     variants
         .iter()
-        .map(|v| ff_timing(engine, geometry, v, opts))
+        .map(|v| ff_timing(backend, geometry, v, opts))
         .collect()
 }
 

@@ -1,5 +1,6 @@
-//! The pretraining loop: nanoBabyLM corpus → packed batches → PJRT
-//! train-step calls → periodic validation → checkpoints.
+//! The pretraining loop: nanoBabyLM corpus → packed batches →
+//! train-step calls on the configured backend → periodic validation →
+//! checkpoints.
 //!
 //! One `train_call` advances K optimizer steps (the artifact's inner
 //! `lax.scan`); the coordinator recomputes the LR schedule between
@@ -12,7 +13,7 @@ use super::metrics::MetricsLogger;
 use super::schedule::LrSchedule;
 use crate::config::TrainConfig;
 use crate::data::{Grammar, TokenDataset, Tokenizer};
-use crate::runtime::{Engine, TrainState};
+use crate::runtime::{Backend, Executable, TrainState};
 use crate::util::json::{num, s};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -44,18 +45,18 @@ impl Trainer {
         Trainer { cfg, k_micro: 0, batch: 0, seq: 0 }
     }
 
-    /// Run the full pretraining loop. `engine` must be backed by the
-    /// artifact dir in `cfg.artifacts_dir`.
-    pub fn run(&mut self, engine: &Engine, log: &mut MetricsLogger) -> Result<TrainReport> {
+    /// Run the full pretraining loop on `backend` (for the xla backend
+    /// that means the artifact dir in `cfg.artifacts_dir`).
+    pub fn run(&mut self, backend: &dyn Backend, log: &mut MetricsLogger) -> Result<TrainReport> {
         let cfg = &self.cfg;
         // Pick the K=8 artifact; fall back to K=1 if absent.
-        let art = engine
+        let art = backend
             .load(&cfg.train_artifact(8))
-            .or_else(|_| engine.load(&cfg.train_artifact(1)))
+            .or_else(|_| backend.load(&cfg.train_artifact(1)))
             .context("load train artifact")?;
-        let k = art.spec.meta_usize("k_micro")?;
-        let b = art.spec.meta_usize("batch")?;
-        let seq = art.spec.meta_usize("seq")?;
+        let k = art.spec().meta_usize("k_micro")?;
+        let b = art.spec().meta_usize("batch")?;
+        let seq = art.spec().meta_usize("seq")?;
         self.k_micro = k;
         self.batch = b;
         self.seq = seq;
@@ -63,7 +64,7 @@ impl Trainer {
         // Data pipeline: grammar corpus -> tokenizer -> packed dataset.
         let grammar = Grammar::new();
         let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
-        let arch = engine.manifest.arch(&cfg.arch)?;
+        let arch = backend.manifest().arch(&cfg.arch)?;
         tokenizer.check_fits(arch.vocab)?;
         let words = grammar.corpus(cfg.corpus_tokens, cfg.seed ^ 0xC0FFEE);
         let mut stream = Vec::with_capacity(words.len() + words.len() / 8);
@@ -85,7 +86,7 @@ impl Trainer {
                 ("k_micro", num(k as f64)),
                 ("batch", num(b as f64)),
                 ("seq", num(seq as f64)),
-                ("params", num(art.spec.param_count() as f64)),
+                ("params", num(art.spec().param_count() as f64)),
             ],
         );
 
@@ -93,12 +94,12 @@ impl Trainer {
         let ckpt = CheckpointManager::new(&cfg.out_dir);
         let mut state = if ckpt.has_state() {
             log.event("resume", vec![("from", s(&ckpt.latest_path().to_string_lossy()))]);
-            ckpt.load_state(&art.spec)?
+            ckpt.load_state(art.spec())?
         } else {
-            TrainState::init(&art.spec, cfg.seed)?
+            TrainState::init(art.spec(), cfg.seed)?
         };
 
-        let eval_art = engine.load(&cfg.artifact("eval_loss")).ok();
+        let eval_art = backend.load(&cfg.artifact("eval_loss")).ok();
         let schedule =
             LrSchedule::new(cfg.lr, cfg.warmup_steps, cfg.steps, cfg.min_lr_frac);
         let mut rng = Rng::new(cfg.seed ^ 0xBA7C4);
@@ -113,7 +114,7 @@ impl Trainer {
             let lr = schedule.at(step) as f32;
             let tokens = data.train_batch(k, b, &mut rng);
             let t = Timer::start();
-            let losses = state.train_call(&art, lr, &[tokens])?;
+            let losses = state.train_call(art.as_ref(), lr, &[tokens])?;
             call_ms.push(t.elapsed_ms());
             all_losses.extend_from_slice(&losses);
 
@@ -138,7 +139,7 @@ impl Trainer {
             if let Some(ev) = &eval_art {
                 let every = cfg.eval_every.max(1);
                 if (call + 1) % every.div_ceil(k).max(1) == 0 || call + 1 == n_calls {
-                    valid_loss = self.valid_loss(ev, &state, &data)?;
+                    valid_loss = self.valid_loss(ev.as_ref(), &state, &data)?;
                     log.event(
                         "eval",
                         vec![
@@ -150,8 +151,8 @@ impl Trainer {
             }
         }
 
-        let state_bytes = ckpt.save_state(&art.spec, &state)?;
-        let params_bytes = ckpt.save_params(&art.spec, &state)?;
+        let state_bytes = ckpt.save_state(art.spec(), &state)?;
+        let params_bytes = ckpt.save_params(art.spec(), &state)?;
         let n = all_losses.len();
         let head = &all_losses[..(n / 10).max(1)];
         let tail = &all_losses[n - (n / 10).max(1)..];
@@ -163,7 +164,7 @@ impl Trainer {
             losses: all_losses,
             ms_per_call: Summary::of(&call_ms),
             tokens_seen: n_calls * k * b * seq,
-            params: art.spec.param_count(),
+            params: art.spec().param_count(),
             checkpoint_bytes: params_bytes,
         };
         log.event(
@@ -185,27 +186,17 @@ impl Trainer {
 
     fn valid_loss(
         &self,
-        eval_art: &crate::runtime::Loaded,
+        eval_art: &dyn Executable,
         state: &TrainState,
         data: &TokenDataset,
     ) -> Result<f64> {
-        let b = eval_art.spec.meta_usize("batch")?;
+        let b = eval_art.spec().meta_usize("batch")?;
         let n_batches = (data.n_valid() / b).clamp(1, 4);
         let mut total = 0.0;
         for i in 0..n_batches {
             let tokens = data.valid_batch(b, i * b);
-            let toks_spec = eval_art
-                .spec
-                .inputs
-                .iter()
-                .find(|io| io.name == "tokens")
-                .context("eval_loss artifact missing tokens input")?;
-            let tok_lit = crate::runtime::tensor_to_literal(&tokens, toks_spec)?;
-            let mut inputs: Vec<&xla::Literal> =
-                state.param_literals().iter().collect();
-            inputs.push(&tok_lit);
-            let out = eval_art.run_literals(&inputs)?;
-            total += out[0].to_vec::<f32>()?[0] as f64;
+            let out = crate::eval::run_with_params(eval_art, state, &[tokens])?;
+            total += out[0].as_f32()?[0] as f64;
         }
         Ok(total / n_batches as f64)
     }

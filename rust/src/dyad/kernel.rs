@@ -1,0 +1,418 @@
+//! Fast native DYAD + dense kernels: cache-blocked, multi-threaded.
+//!
+//! This is the hot path of the native CPU backend. Unlike the oracles
+//! in [`super::math`] (kept simple for property tests), these kernels:
+//!
+//! * split work across row panels with `std::thread::scope`, one panel
+//!   per thread, so no synchronisation is needed inside a call;
+//! * block the dense matmul over the inner dimension so the B panel
+//!   stays cache-resident while a row panel streams through it;
+//! * run the fused DYAD forward (paper Eqs 3-10) *row-wise*: each
+//!   output row accumulates its BLOCKDIAG and BLOCKTRANS contributions
+//!   directly — permuted rows are written in place, with no per-block
+//!   `x2` gather allocation and no temporary `y_i` buffer.
+//!
+//! Every output row is produced by exactly one thread in a fixed
+//! sequential accumulation order, so results are bitwise identical for
+//! any thread count (asserted by the determinism property test).
+
+use super::layout::{DyadDims, Variant};
+
+/// Worker count: `DYAD_NUM_THREADS` env override, else the machine's
+/// available parallelism, else 1.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("DYAD_NUM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// `out[j] += a * x[j]` over one row.
+#[inline]
+pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+/// Dot product with 4-way accumulators (helps ILP on long rows).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Run `f(row_index, row_slice)` for every `row_len`-sized row of
+/// `out`, split across `threads` row panels. Rows are disjoint, so the
+/// closure runs without any locking; each row sees a fixed sequential
+/// execution, keeping results independent of the thread count.
+pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, threads: usize, f: &F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if row_len == 0 || out.is_empty() {
+        return;
+    }
+    let n_rows = out.len() / row_len;
+    let threads = threads.clamp(1, n_rows.max(1));
+    if threads <= 1 {
+        for (r, row) in out.chunks_mut(row_len).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    let rows_per = n_rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(rows_per * row_len).enumerate() {
+            let start = t * rows_per;
+            s.spawn(move || {
+                for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+                    f(start + i, row);
+                }
+            });
+        }
+    });
+}
+
+/// Row-major `(m, k) x (k, n) -> (m, n)`, parallel over row panels and
+/// blocked over `k` so each B panel is reused across a whole row panel.
+pub fn matmul_fast(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_fast_with_threads(a, b, m, k, n, num_threads())
+}
+
+pub fn matmul_fast_with_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let threads = threads.clamp(1, m);
+    // B panel of KB rows: KB * n * 4 bytes; 64 rows of a 4096-wide B is
+    // 1 MB — L2-resident on anything we target.
+    const KB: usize = 64;
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let i0 = t * rows_per;
+            s.spawn(move || {
+                let rows = chunk.len() / n;
+                let mut p0 = 0;
+                while p0 < k {
+                    let p1 = (p0 + KB).min(k);
+                    for i in 0..rows {
+                        let arow = &a[(i0 + i) * k..(i0 + i + 1) * k];
+                        let orow = &mut chunk[i * n..(i + 1) * n];
+                        for (p, &av) in arow.iter().enumerate().take(p1).skip(p0) {
+                            if av != 0.0 {
+                                axpy(orow, av, &b[p * n..(p + 1) * n]);
+                            }
+                        }
+                    }
+                    p0 = p1;
+                }
+            });
+        }
+    });
+    out
+}
+
+/// `a (m, k) @ b^T` where `b` is `(n, k)` row-major — the natural form
+/// for `y = x @ W^T` linears. Both operands stream contiguously.
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_bt_with_threads(a, b, m, k, n, num_threads())
+}
+
+pub fn matmul_bt_with_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    parallel_rows(&mut out, n, threads, &|i, orow| {
+        let arow = &a[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    });
+    out
+}
+
+/// Transpose a row-major `(m, n)` matrix into `(n, m)`.
+pub fn transpose(a: &[f32], m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * n);
+    let mut out = vec![0.0f32; m * n];
+    // simple tiled transpose; tiles keep both sides cache-friendly
+    const T: usize = 32;
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + T).min(m);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + T).min(n);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    out[j * m + i] = a[i * n + j];
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+    out
+}
+
+/// Dense linear on row-major activations: `x (t, f_in) @ w^T + b`
+/// with `w (f_out, f_in)` — returns `(t, f_out)`.
+pub fn dense_linear(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    t: usize,
+    f_in: usize,
+    f_out: usize,
+) -> Vec<f32> {
+    let mut y = matmul_bt(x, w, t, f_in, f_out);
+    if let Some(b) = bias {
+        for row in y.chunks_mut(f_out) {
+            for (o, &bv) in row.iter_mut().zip(b) {
+                *o += bv;
+            }
+        }
+    }
+    y
+}
+
+/// Fused DYAD forward (paper Eqs 3-10) on column-major activations:
+/// `x (f_in, nb)` -> `y (f_out, nb)`, `y = (W1 + W2) x (+ bias)`.
+///
+/// Row-wise schedule: output row `r` receives its BLOCKDIAG
+/// contribution from block `r / n_out` and its BLOCKTRANS contribution
+/// from the block the output permutation maps it to — so permuted rows
+/// are written in place and no `x2` gather or `y_i` temporary exists.
+/// Matches `dyad::math::dyad_matmul` (the oracle) bit-for-bit in
+/// structure, to float-accumulation-order tolerance in value.
+pub fn dyad_fused(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    dyad_fused_with_threads(wl, wu, x, dims, variant, nb, bias, num_threads())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_fused_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    bias: Option<&[f32]>,
+    threads: usize,
+) -> Vec<f32> {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    assert_eq!(wl.len(), dims.component_params());
+    assert_eq!(wu.len(), dims.component_params());
+    assert_eq!(x.len(), dims.f_in() * nb);
+    if let Some(b) = bias {
+        assert_eq!(b.len(), dims.f_out());
+    }
+    let in_perm = matches!(variant, Variant::It | Variant::Dt);
+    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+    let mut y = vec![0.0f32; dims.f_out() * nb];
+    parallel_rows(&mut y, nb, threads, &|r, orow| {
+        if let Some(b) = bias {
+            orow.fill(b[r]);
+        }
+        // BLOCKDIAG: row r lives in block i1 = r / n_out.
+        let (i1, o1) = (r / n_out, r % n_out);
+        let wrow = &wl[(i1 * n_out + o1) * n_in..(i1 * n_out + o1 + 1) * n_in];
+        let base = i1 * n_in;
+        if nb == 1 {
+            orow[0] += dot(wrow, &x[base..base + n_in]);
+        } else {
+            for (k, &wv) in wrow.iter().enumerate() {
+                if wv != 0.0 {
+                    axpy(orow, wv, &x[(base + k) * nb..(base + k + 1) * nb]);
+                }
+            }
+        }
+        // BLOCKTRANS: with the output permutation, row r = o2*n_dyad + i2
+        // (the Eq-9 stride swap); without it, same indexing as BLOCKDIAG.
+        let (i2, o2) = if out_perm {
+            (r % n_dyad, r / n_dyad)
+        } else {
+            (r / n_out, r % n_out)
+        };
+        let wrow = &wu[(i2 * n_out + o2) * n_in..(i2 * n_out + o2 + 1) * n_in];
+        for (k, &wv) in wrow.iter().enumerate() {
+            if wv == 0.0 {
+                continue;
+            }
+            let src = if in_perm { k * n_dyad + i2 } else { i2 * n_in + k };
+            if nb == 1 {
+                orow[0] += wv * x[src];
+            } else {
+                axpy(orow, wv, &x[src * nb..(src + 1) * nb]);
+            }
+        }
+    });
+    y
+}
+
+/// DYAD linear on row-major activations (`x (t, f_in)` -> `(t, f_out)`),
+/// transposing in and out around the column-major fused kernel — the
+/// same one-transpose-in / one-transpose-out scheme the L2 model uses.
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    let xc = transpose(x, t, dims.f_in());
+    let yc = dyad_fused(wl, wu, &xc, dims, variant, t, bias);
+    transpose(&yc, dims.f_out(), t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dyad::layout::dyad_full;
+    use crate::dyad::math::{dense_matmul, dyad_matmul, matmul};
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn matmul_fast_matches_oracle() {
+        let mut rng = Rng::new(3);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 128, 32)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let want = matmul(&a, &b, m, k, n);
+            for threads in [1, 4] {
+                let got = matmul_fast_with_threads(&a, &b, m, k, n, threads);
+                for (x, y) in got.iter().zip(&want) {
+                    assert!((x - y).abs() < 1e-4, "{m}x{k}x{n} t{threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_transposed_oracle() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (9, 31, 13);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, n * k);
+        let bt = transpose(&b, n, k); // (k, n)
+        let want = matmul(&a, &bt, m, k, n);
+        let got = matmul_bt(&a, &b, m, k, n);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(5);
+        let (m, n) = (37, 53);
+        let a = rand_vec(&mut rng, m * n);
+        assert_eq!(transpose(&transpose(&a, m, n), n, m), a);
+    }
+
+    #[test]
+    fn fused_matches_oracle_all_variants() {
+        let mut rng = Rng::new(7);
+        for (nd, n_in, n_out, nb) in [(4, 4, 4, 3), (2, 3, 5, 4), (8, 2, 2, 1), (1, 6, 2, 5)] {
+            let dims = DyadDims { n_dyad: nd, n_in, n_out };
+            let wl = rand_vec(&mut rng, dims.component_params());
+            let wu = rand_vec(&mut rng, dims.component_params());
+            let x = rand_vec(&mut rng, dims.f_in() * nb);
+            let bias = rand_vec(&mut rng, dims.f_out());
+            for v in [Variant::It, Variant::Ot, Variant::Dt] {
+                let want = dyad_matmul(&wl, &wu, &x, dims, v, nb, Some(&bias));
+                let got = dyad_fused(&wl, &wu, &x, dims, v, nb, Some(&bias));
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4, "{v:?} {dims:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_thread_count_is_bitwise_deterministic() {
+        let mut rng = Rng::new(11);
+        let dims = DyadDims { n_dyad: 4, n_in: 12, n_out: 20 };
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let nb = 17;
+        let x = rand_vec(&mut rng, dims.f_in() * nb);
+        let one = dyad_fused_with_threads(&wl, &wu, &x, dims, Variant::Dt, nb, None, 1);
+        for threads in [2, 3, 8] {
+            let many =
+                dyad_fused_with_threads(&wl, &wu, &x, dims, Variant::Dt, nb, None, threads);
+            assert_eq!(one, many, "threads={threads} changed bits");
+        }
+    }
+
+    #[test]
+    fn dyad_linear_row_major_matches_dense() {
+        let mut rng = Rng::new(13);
+        let dims = DyadDims { n_dyad: 2, n_in: 3, n_out: 4 };
+        let t = 5;
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let x = rand_vec(&mut rng, t * dims.f_in());
+        let bias = rand_vec(&mut rng, dims.f_out());
+        let got = dyad_linear(&wl, &wu, &x, dims, Variant::It, t, Some(&bias));
+        // reference: materialise W, y = x @ W^T + b, row-major
+        let full = dyad_full(&wl, &wu, dims, Variant::It);
+        let xc = transpose(&x, t, dims.f_in());
+        let want_c = dense_matmul(&full, &xc, dims.f_out(), dims.f_in(), t, Some(&bias));
+        let want = transpose(&want_c, dims.f_out(), t);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -9,9 +9,17 @@ use super::layout::{perm_vector, DyadDims, Variant};
 
 /// Row-major (m, k) x (k, n) -> (m, n).
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_acc(a, b, m, k, n, &mut out);
+    out
+}
+
+/// Row-major (m, k) x (k, n) accumulated into `out (m, n)` — lets the
+/// DYAD schedule add block products straight into the output.
+pub fn matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
+    assert_eq!(out.len(), m * n);
     for i in 0..m {
         for p in 0..k {
             let av = a[i * k + p];
@@ -25,7 +33,6 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// Dense layer: Y = W X (+ b per column), column-major activations
@@ -65,33 +72,33 @@ pub fn dyad_matmul(
     assert_eq!(x.len(), dims.f_in() * nb);
     let mut y = vec![0.0f32; f_out * nb];
 
-    // BLOCKDIAG: y[i*n_out + o] += wl[i] @ x[i*n_in + k]
+    // BLOCKDIAG: y[i*n_out + o] += wl[i] @ x[i*n_in + k], accumulated
+    // directly into the output block (no per-block y_i temporary).
     for i in 0..n_dyad {
         let w_i = &wl[i * n_out * n_in..(i + 1) * n_out * n_in];
         let x_i = &x[i * n_in * nb..(i + 1) * n_in * nb];
-        let y_i = matmul(w_i, x_i, n_out, n_in, nb);
-        y[i * n_out * nb..(i + 1) * n_out * nb]
-            .iter_mut()
-            .zip(&y_i)
-            .for_each(|(a, b)| *a += b);
+        matmul_acc(w_i, x_i, n_out, n_in, nb, &mut y[i * n_out * nb..(i + 1) * n_out * nb]);
     }
 
     // BLOCKTRANS: gather the strided input view (IT/DT), per-block
-    // matmul, scatter to strided output rows (OT/DT).
+    // matmul, scatter to strided output rows (OT/DT). One x2/z scratch
+    // pair is reused across all blocks.
     let in_perm = matches!(variant, Variant::It | Variant::Dt);
     let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
     let pi_in = perm_vector(n_in, n_dyad); // x2 row m reads x row pi_in[m]
     let pi_out = perm_vector(n_out, n_dyad);
+    let mut x2 = vec![0.0f32; n_in * nb];
+    let mut z = vec![0.0f32; n_out * nb];
     for i in 0..n_dyad {
         let w_i = &wu[i * n_out * n_in..(i + 1) * n_out * n_in];
         // assemble x2 block i: rows (i*n_in .. ) of the permuted view
-        let mut x2 = vec![0.0f32; n_in * nb];
         for k in 0..n_in {
             let src_row = if in_perm { pi_in[i * n_in + k] } else { i * n_in + k };
             x2[k * nb..(k + 1) * nb]
                 .copy_from_slice(&x[src_row * nb..(src_row + 1) * nb]);
         }
-        let z = matmul(w_i, &x2, n_out, n_in, nb);
+        z.fill(0.0);
+        matmul_acc(w_i, &x2, n_out, n_in, nb, &mut z);
         for o in 0..n_out {
             let dst_row = if out_perm { pi_out[i * n_out + o] } else { i * n_out + o };
             y[dst_row * nb..(dst_row + 1) * nb]

@@ -7,9 +7,11 @@
 //! memory tables (T11/F8) and `repro inspect`.
 
 pub mod connectivity;
+pub mod kernel;
 pub mod layout;
 pub mod math;
 
 pub use connectivity::{connection_counts, connectivity_ratio};
+pub use kernel::{dense_linear, dyad_fused, dyad_linear, matmul_bt, matmul_fast, transpose};
 pub use layout::{blockdiag_full, blocktrans_full, dyad_full, perm_vector, DyadDims, Variant};
 pub use math::{dense_matmul, dyad_matmul, matmul};

@@ -10,7 +10,7 @@ use super::run_with_params;
 use crate::data::dataset::pad_batch;
 use crate::data::grammar::{Grammar, Phenomenon};
 use crate::data::tokenizer::Tokenizer;
-use crate::runtime::{Loaded, TrainState};
+use crate::runtime::{Executable, TrainState};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -22,7 +22,7 @@ pub struct BlimpResult {
 
 /// Score a batch of token sequences; returns per-sequence summed logp.
 fn score_batch(
-    art: &Loaded,
+    art: &dyn Executable,
     state: &TrainState,
     seqs: &[Vec<i32>],
     b: usize,
@@ -30,20 +30,20 @@ fn score_batch(
 ) -> Result<Vec<f64>> {
     let (tokens, mask) = pad_batch(seqs, b, s)?;
     let out = run_with_params(art, state, &[tokens, mask])?;
-    let sums = out[0].to_vec::<f32>()?;
+    let sums = out[0].as_f32()?;
     Ok(sums[..seqs.len()].iter().map(|&x| x as f64).collect())
 }
 
 pub fn evaluate(
-    score_art: &Loaded,
+    score_art: &dyn Executable,
     state: &TrainState,
     tokenizer: &Tokenizer,
     pairs_per_phenomenon: usize,
     seed: u64,
 ) -> Result<BlimpResult> {
     let grammar = Grammar::new();
-    let b = score_art.spec.meta_usize("batch")?;
-    let s = score_art.spec.meta_usize("seq")?;
+    let b = score_art.spec().meta_usize("batch")?;
+    let s = score_art.spec().meta_usize("seq")?;
     let mut per = Vec::new();
     let mut rng = Rng::new(seed);
     for ph in Phenomenon::ALL {

@@ -10,7 +10,7 @@ use anyhow::Result;
 use super::run_with_params;
 use crate::data::grammar::{Grammar, McqTask};
 use crate::data::tokenizer::Tokenizer;
-use crate::runtime::{Loaded, TrainState};
+use crate::runtime::{Executable, TrainState};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -23,7 +23,7 @@ pub struct McqResult {
 
 /// Score (tokens, mask) rows; returns (sum_logp, n_tok) per row.
 fn score_rows(
-    art: &Loaded,
+    art: &dyn Executable,
     state: &TrainState,
     rows: &[(Vec<i32>, Vec<f32>)],
     b: usize,
@@ -39,7 +39,7 @@ fn score_rows(
             toks[i * s..i * s + n].copy_from_slice(&t[start..]);
             mask[i * s..i * s + n].copy_from_slice(&m[start..]);
         }
-        let lits = run_with_params(
+        let out = run_with_params(
             art,
             state,
             &[
@@ -47,8 +47,8 @@ fn score_rows(
                 Tensor::from_f32(&[b, s], mask)?,
             ],
         )?;
-        let sums = lits[0].to_vec::<f32>()?;
-        let counts = lits[1].to_vec::<f32>()?;
+        let sums = out[0].as_f32()?;
+        let counts = out[1].as_f32()?;
         for i in 0..chunk.len() {
             out.push((sums[i] as f64, counts[i] as f64));
         }
@@ -57,7 +57,7 @@ fn score_rows(
 }
 
 pub fn evaluate(
-    score_art: &Loaded,
+    score_art: &dyn Executable,
     state: &TrainState,
     tokenizer: &Tokenizer,
     items_per_task: usize,
@@ -65,8 +65,8 @@ pub fn evaluate(
     seed: u64,
 ) -> Result<McqResult> {
     let grammar = Grammar::new();
-    let b = score_art.spec.meta_usize("batch")?;
-    let s = score_art.spec.meta_usize("seq")?;
+    let b = score_art.spec().meta_usize("batch")?;
+    let s = score_art.spec().meta_usize("seq")?;
     let mut per = Vec::new();
     let mut rng = Rng::new(seed);
     for task in McqTask::ALL {

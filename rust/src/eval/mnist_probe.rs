@@ -2,13 +2,14 @@
 //!
 //! Trains the 784→256→256→10 MLP artifact on procedural digits, then
 //! reports test accuracy and the "ff-only" time per minibatch (the two
-//! swap-site linears), mirroring the paper's CPU experiment.
+//! swap-site linears), mirroring the paper's CPU experiment. Runs on
+//! any backend — the native backend trains it entirely in Rust.
 
 use anyhow::{Context, Result};
 
 use crate::bench_support::{bench_artifact, BenchOpts};
 use crate::data::mnist::MnistGen;
-use crate::runtime::{Engine, TrainState};
+use crate::runtime::{Backend, Executable, TrainState};
 use crate::util::timer::Timer;
 
 #[derive(Debug, Clone)]
@@ -23,25 +24,25 @@ pub struct MnistOutcome {
 
 /// Train + evaluate one variant. `steps` counts optimizer steps.
 pub fn run_variant(
-    engine: &Engine,
+    backend: &dyn Backend,
     variant: &str,
     steps: usize,
     seed: u64,
 ) -> Result<MnistOutcome> {
-    let train_art = engine
+    let train_art = backend
         .load(&format!("mnist/{variant}/train_k4"))
         .with_context(|| format!("mnist train artifact for {variant}"))?;
-    let acc_art = engine.load(&format!("mnist/{variant}/accuracy"))?;
-    let k = train_art.spec.meta_usize("k_micro")?;
-    let b = train_art.spec.meta_usize("batch")?;
-    let mut state = TrainState::init(&train_art.spec, seed)?;
+    let acc_art = backend.load(&format!("mnist/{variant}/accuracy"))?;
+    let k = train_art.spec().meta_usize("k_micro")?;
+    let b = train_art.spec().meta_usize("batch")?;
+    let mut state = TrainState::init(train_art.spec(), seed)?;
     let mut gen = MnistGen::new(seed ^ 0xD161);
     let timer = Timer::start();
     let mut final_loss = f64::NAN;
     let n_calls = steps.div_ceil(k);
     for _ in 0..n_calls {
         let (images, labels) = gen.train_batch(k, b);
-        let losses = state.train_call(&train_art, 1e-3, &[images, labels])?;
+        let losses = state.train_call(train_art.as_ref(), 1e-3, &[images, labels])?;
         final_loss = *losses.last().unwrap() as f64;
     }
     let train_wall_s = timer.elapsed_s();
@@ -53,13 +54,14 @@ pub fn run_variant(
     let eval_batches = 20;
     for _ in 0..eval_batches {
         let (images, labels) = test_gen.batch(b);
-        let out = crate::eval::run_with_params(&acc_art, &state, &[images, labels])?;
-        correct += out[0].to_vec::<i32>()?[0] as usize;
+        let out =
+            crate::eval::run_with_params(acc_art.as_ref(), &state, &[images, labels])?;
+        correct += out[0].as_i32()?[0] as usize;
         total += b;
     }
 
     let fwd = bench_artifact(
-        engine,
+        backend,
         &format!("mnist/{variant}/hidden_fwd"),
         BenchOpts { warmup: 3, reps: 20, seed },
     )?;
@@ -70,18 +72,17 @@ pub fn run_variant(
         hidden_fwd_ms: fwd.mean,
         final_loss,
         train_wall_s,
-        params: train_art.spec.param_count(),
+        params: train_art.spec().param_count(),
     })
 }
 
 /// The full §3.4.5 comparison; prints the paper-shaped summary.
 pub fn run(
-    artifacts_dir: &str,
+    backend: &dyn Backend,
     steps: usize,
     only_variant: Option<&str>,
     seed: u64,
 ) -> Result<()> {
-    let engine = Engine::from_dir(artifacts_dir)?;
     let variants: Vec<&str> = match only_variant {
         Some(v) => vec![v],
         None => vec!["dense", "dyad_it"],
@@ -89,7 +90,7 @@ pub fn run(
     let mut outcomes = Vec::new();
     for v in variants {
         println!("training mnist/{v} for {steps} steps ...");
-        let o = run_variant(&engine, v, steps, seed)?;
+        let o = run_variant(backend, v, steps, seed)?;
         println!(
             "  {}: test_acc={:.2}% hidden_fwd={:.3} ms/minibatch params={} \
              final_loss={:.4} ({:.1}s train)",

@@ -7,6 +7,9 @@
 //! * `probe`  — finetuning-style transfer (GLUE): frozen LM features +
 //!   a logistic-regression head trained in rust.
 //! * `report` — aggregates the three into a Table-2-shaped report.
+//!
+//! All harnesses run against the [`Executable`] trait, so they work on
+//! the native backend and (with the `xla` feature) on PJRT alike.
 
 pub mod blimp;
 pub mod mcq;
@@ -19,38 +22,28 @@ pub use mcq::McqResult;
 pub use probe::ProbeResult;
 pub use report::QualityReport;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::runtime::{tensor_to_literal, Loaded, TrainState};
+use crate::runtime::{Executable, Role, TrainState};
 use crate::tensor::Tensor;
 
 /// Run a params+data artifact (score/features/next_logits/...) against
 /// the current state. `data` are positional tensors for the Data inputs.
 pub fn run_with_params(
-    art: &Loaded,
+    art: &dyn Executable,
     state: &TrainState,
     data: &[Tensor],
-) -> Result<Vec<xla::Literal>> {
-    let data_specs: Vec<_> = art
-        .spec
-        .inputs
-        .iter()
-        .filter(|i| i.role == crate::runtime::Role::Data)
-        .collect();
+) -> Result<Vec<Tensor>> {
+    let spec = art.spec();
+    let n_data = spec.inputs.iter().filter(|i| i.role == Role::Data).count();
     anyhow::ensure!(
-        data.len() == data_specs.len(),
+        data.len() == n_data,
         "{}: {} data tensors, manifest wants {}",
-        art.spec.name,
+        spec.name,
         data.len(),
-        data_specs.len()
+        n_data
     );
-    let data_lits: Vec<xla::Literal> = data
-        .iter()
-        .zip(&data_specs)
-        .map(|(t, s)| tensor_to_literal(t, s))
-        .collect::<Result<_>>()
-        .context("stage data")?;
-    let mut inputs: Vec<&xla::Literal> = state.param_literals().iter().collect();
-    inputs.extend(data_lits.iter());
-    art.run_literals(&inputs)
+    let mut inputs: Vec<&Tensor> = state.param_tensors().iter().collect();
+    inputs.extend(data.iter());
+    art.run(&inputs)
 }

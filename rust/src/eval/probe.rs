@@ -13,7 +13,7 @@ use super::run_with_params;
 use crate::data::dataset::pad_batch;
 use crate::data::grammar::{Grammar, ProbeTask};
 use crate::data::tokenizer::Tokenizer;
-use crate::runtime::{Loaded, TrainState};
+use crate::runtime::{Executable, TrainState};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -25,7 +25,7 @@ pub struct ProbeResult {
 
 /// Extract features for a set of token sequences.
 fn features_for(
-    art: &Loaded,
+    art: &dyn Executable,
     state: &TrainState,
     seqs: &[Vec<i32>],
     b: usize,
@@ -35,8 +35,8 @@ fn features_for(
     let mut out = Vec::with_capacity(seqs.len());
     for chunk in seqs.chunks(b) {
         let (tokens, mask) = pad_batch(chunk, b, s)?;
-        let lits = run_with_params(art, state, &[tokens, mask])?;
-        let flat = lits[0].to_vec::<f32>()?;
+        let res = run_with_params(art, state, &[tokens, mask])?;
+        let flat = res[0].as_f32()?;
         for i in 0..chunk.len() {
             out.push(flat[i * d..(i + 1) * d].to_vec());
         }
@@ -91,7 +91,7 @@ impl LogisticHead {
 }
 
 pub fn evaluate(
-    features_art: &Loaded,
+    features_art: &dyn Executable,
     state: &TrainState,
     tokenizer: &Tokenizer,
     n_train: usize,
@@ -99,9 +99,9 @@ pub fn evaluate(
     seed: u64,
 ) -> Result<ProbeResult> {
     let grammar = Grammar::new();
-    let b = features_art.spec.meta_usize("batch")?;
-    let s = features_art.spec.meta_usize("seq")?;
-    let d = features_art.spec.outputs[0].shape[1];
+    let b = features_art.spec().meta_usize("batch")?;
+    let s = features_art.spec().meta_usize("seq")?;
+    let d = features_art.spec().outputs[0].shape[1];
     let mut per = Vec::new();
     let mut rng = Rng::new(seed);
     for task in ProbeTask::ALL {

@@ -4,22 +4,22 @@
 //! approximation to linear neural network layers"* as a three-layer
 //! Rust + JAX + Pallas stack:
 //!
-//! * **L1/L2 (build-time Python)** — Pallas DYAD kernels and a JAX
-//!   transformer, AOT-lowered to HLO text (`make artifacts`).
-//! * **L3 (this crate)** — the runtime coordinator: PJRT execution,
-//!   data pipeline, training loop, evaluation harnesses, a batched
-//!   inference server, and the benchmark suite that regenerates every
-//!   table and figure of the paper.
-//!
-//! Python never runs on the request path; after `make artifacts` the
-//! `repro` binary is self-contained.
+//! * **L1/L2 (build-time Python, optional)** — Pallas DYAD kernels and
+//!   a JAX transformer, AOT-lowered to HLO text (`make artifacts`).
+//! * **L3 (this crate)** — the runtime coordinator: a trait-based
+//!   execution layer (`runtime::Backend`) with a **native CPU
+//!   backend** (pure Rust, default — parallel blocked DYAD kernels,
+//!   no artifacts needed) and a **PJRT/XLA backend** behind the `xla`
+//!   cargo feature; plus the data pipeline, training loop, evaluation
+//!   harnesses, a batched inference server, and the benchmark suite
+//!   that regenerates the paper's tables and figures.
 //!
 //! Quick tour (see `examples/quickstart.rs`):
 //!
 //! ```no_run
-//! use dyad_repro::runtime::Engine;
-//! let engine = Engine::from_dir("artifacts").unwrap();
-//! let art = engine.load("ff/opt125m-ff/dyad_it/fwd").unwrap();
+//! use dyad_repro::runtime::{open_backend, BackendKind};
+//! let backend = open_backend(BackendKind::Native, "artifacts".as_ref()).unwrap();
+//! let art = backend.load("ff/opt125m-ff/dyad_it/fwd").unwrap();
 //! ```
 
 pub mod bench_support;

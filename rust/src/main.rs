@@ -9,6 +9,10 @@
 //!   data-gen         dump a nanoBabyLM corpus / minimal pairs to stdout
 //!   inspect          connectivity analysis (Eq 17/18) + artifact info
 //!   list-artifacts   show the manifest inventory
+//!
+//! Every command takes `--backend native|xla` (default native — pure
+//! Rust, no artifacts needed; xla needs the `xla` cargo feature and a
+//! `make artifacts` directory).
 
 use std::path::PathBuf;
 
@@ -19,7 +23,7 @@ use dyad_repro::coordinator::{MetricsLogger, Trainer};
 use dyad_repro::data::{Grammar, Tokenizer};
 use dyad_repro::dyad::{connectivity_ratio, DyadDims, Variant};
 use dyad_repro::eval;
-use dyad_repro::runtime::Engine;
+use dyad_repro::runtime::{open_backend, Backend, BackendKind};
 use dyad_repro::util::cli::Args;
 use dyad_repro::util::json::{num, s};
 
@@ -65,20 +69,29 @@ fn print_help() {
            inspect        [--n-dyad N] [--n-in N] | --artifact NAME\n\
            list-artifacts [--kind K]\n\
            quality-summary --dir runs/quality-opt   (render Table-2 style)\n\n\
-         Common flags: --artifacts DIR (default: artifacts)"
+         Common flags:\n\
+           --backend native|xla   execution backend (default: native)\n\
+           --artifacts DIR        artifact dir for --backend xla (default: artifacts)"
     );
 }
 
-fn engine_of(args: &Args) -> Result<Engine> {
-    Engine::from_dir(args.str_or("artifacts", "artifacts"))
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    BackendKind::from_str(&args.str_or("backend", "native"))
+}
+
+fn backend_of(args: &Args) -> Result<Box<dyn Backend>> {
+    open_backend(
+        backend_kind(args)?,
+        std::path::Path::new(&args.str_or("artifacts", "artifacts")),
+    )
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
-    let engine = Engine::from_dir(&cfg.artifacts_dir)?;
+    let backend = open_backend(backend_kind(args)?, &cfg.artifacts_dir)?;
     let mut log = MetricsLogger::to_dir(&cfg.out_dir)?;
     std::fs::write(cfg.out_dir.join("config.json"), cfg.to_json().to_string())?;
-    let report = Trainer::new(cfg).run(&engine, &mut log)?;
+    let report = Trainer::new(cfg).run(backend.as_ref(), &mut log)?;
     println!(
         "train done: steps={} first_loss={:.4} final_loss={:.4} valid={:.4} \
          ({:.0} ms/call)",
@@ -111,13 +124,13 @@ fn cmd_quality(args: &Args) -> Result<()> {
             out_root.join(variant).to_string_lossy().into_owned(),
         );
         let cfg = TrainConfig::from_args(&sub)?;
-        let engine = Engine::from_dir(&cfg.artifacts_dir)?;
+        let backend = open_backend(backend_kind(args)?, &cfg.artifacts_dir)?;
         let mut log = MetricsLogger::to_dir(&cfg.out_dir)?;
         std::fs::write(cfg.out_dir.join("config.json"), cfg.to_json().to_string())?;
         println!("== pretraining {arch}/{variant} ==");
         let out_dir = cfg.out_dir.clone();
-        let report = Trainer::new(cfg.clone()).run(&engine, &mut log)?;
-        let quality = run_suite(&engine, &cfg, &report, args)?;
+        let report = Trainer::new(cfg.clone()).run(backend.as_ref(), &mut log)?;
+        let quality = run_suite(backend.as_ref(), &cfg, &report, args)?;
         quality.save(&out_dir.join("quality.json"))?;
         println!("{}", quality.render_table());
     }
@@ -125,7 +138,7 @@ fn cmd_quality(args: &Args) -> Result<()> {
 }
 
 fn run_suite(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &TrainConfig,
     report: &dyad_repro::coordinator::TrainReport,
     args: &Args,
@@ -134,26 +147,26 @@ fn run_suite(
     let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
     let ckpt =
         dyad_repro::coordinator::checkpoint::CheckpointManager::new(&cfg.out_dir);
-    let train_spec = engine
-        .manifest
+    let train_spec = backend
+        .manifest()
         .artifact(&cfg.train_artifact(8))
-        .or_else(|_| engine.manifest.artifact(&cfg.train_artifact(1)))?
+        .or_else(|_| backend.manifest().artifact(&cfg.train_artifact(1)))?
         .clone();
     let state = ckpt.load_state(&train_spec)?;
-    let score_art = engine.load(&cfg.artifact("score"))?;
-    let feats_art = engine.load(&cfg.artifact("features"))?;
+    let score_art = backend.load(&cfg.artifact("score"))?;
+    let feats_art = backend.load(&cfg.artifact("features"))?;
     let pairs = args.usize_or("pairs", 50)?;
     let mcq_items = args.usize_or("mcq-items", 25)?;
     let shots = args.usize_or("shots", 3)?;
     let probe_train = args.usize_or("probe-train", 128)?;
     let probe_test = args.usize_or("probe-test", 64)?;
     let blimp =
-        eval::blimp::evaluate(&score_art, &state, &tokenizer, pairs, cfg.seed)?;
+        eval::blimp::evaluate(score_art.as_ref(), &state, &tokenizer, pairs, cfg.seed)?;
     let mcq = eval::mcq::evaluate(
-        &score_art, &state, &tokenizer, mcq_items, shots, cfg.seed,
+        score_art.as_ref(), &state, &tokenizer, mcq_items, shots, cfg.seed,
     )?;
     let probe = eval::probe::evaluate(
-        &feats_art, &state, &tokenizer, probe_train, probe_test, cfg.seed,
+        feats_art.as_ref(), &state, &tokenizer, probe_train, probe_test, cfg.seed,
     )?;
     Ok(eval::QualityReport {
         arch: cfg.arch.clone(),
@@ -169,28 +182,38 @@ fn run_suite(
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    use dyad_repro::runtime::TrainState;
     let cfg = TrainConfig::from_args(args)?;
-    let engine = Engine::from_dir(&cfg.artifacts_dir)?;
-    let ckpt_dir = PathBuf::from(
-        args.str_opt("ckpt")
-            .context("--ckpt DIR required (a prior train run's --out)")?,
-    );
+    let backend = open_backend(backend_kind(args)?, &cfg.artifacts_dir)?;
     let grammar = Grammar::new();
     let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
-    let train_spec = engine
-        .manifest
+    let train_spec = backend
+        .manifest()
         .artifact(&cfg.train_artifact(8))
-        .or_else(|_| engine.manifest.artifact(&cfg.train_artifact(1)))?
+        .or_else(|_| backend.manifest().artifact(&cfg.train_artifact(1)))?
         .clone();
-    let mgr = dyad_repro::coordinator::checkpoint::CheckpointManager::new(&ckpt_dir);
-    if !mgr.has_state() {
-        bail!("no checkpoint in {}", ckpt_dir.display());
-    }
-    let state = mgr.load_state(&train_spec)?;
-    let score_art = engine.load(&cfg.artifact("score"))?;
+    let state = match args.str_opt("ckpt") {
+        Some(dir) => {
+            let ckpt_dir = PathBuf::from(dir);
+            let mgr =
+                dyad_repro::coordinator::checkpoint::CheckpointManager::new(&ckpt_dir);
+            if !mgr.has_state() {
+                bail!("no checkpoint in {}", ckpt_dir.display());
+            }
+            mgr.load_state(&train_spec)?
+        }
+        None => {
+            eprintln!(
+                "note: no --ckpt given; evaluating freshly initialised \
+                 (untrained) parameters"
+            );
+            TrainState::init(&train_spec, cfg.seed)?
+        }
+    };
+    let score_art = backend.load(&cfg.artifact("score"))?;
     let pairs = args.usize_or("pairs", 50)?;
     let blimp =
-        eval::blimp::evaluate(&score_art, &state, &tokenizer, pairs, cfg.seed)?;
+        eval::blimp::evaluate(score_art.as_ref(), &state, &tokenizer, pairs, cfg.seed)?;
     println!("BLIMP mean = {:.4}", blimp.mean);
     for (name, acc, n) in &blimp.per_phenomenon {
         println!("  {name:<24} {acc:.4}  (n={n})");
@@ -201,6 +224,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use dyad_repro::serve::{Request, ServeConfig, ServerHandle};
     let cfg = ServeConfig {
+        backend: backend_kind(args)?,
         artifacts_dir: args.str_or("artifacts", "artifacts").into(),
         arch: args.str_or("arch", "opt-mini"),
         variant: args.str_or("variant", "dyad_it"),
@@ -210,7 +234,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 7)?,
     };
     let n = args.usize_or("requests", 64)?;
-    println!("starting server ({}/{}) ...", cfg.arch, cfg.variant);
+    println!(
+        "starting server ({}/{}) on {} backend ...",
+        cfg.arch,
+        cfg.variant,
+        cfg.backend.name()
+    );
     let server = ServerHandle::start(cfg);
     let grammar = Grammar::new();
     let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
@@ -238,8 +267,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_mnist(args: &Args) -> Result<()> {
+    let backend = backend_of(args)?;
     eval::mnist_probe::run(
-        &args.str_or("artifacts", "artifacts"),
+        backend.as_ref(),
         args.usize_or("steps", 200)?,
         args.str_opt("variant"),
         args.u64_or("seed", 5)?,
@@ -281,8 +311,8 @@ fn cmd_data_gen(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     if let Some(name) = args.str_opt("artifact") {
-        let engine = engine_of(args)?;
-        let spec = engine.manifest.artifact(name)?;
+        let backend = backend_of(args)?;
+        let spec = backend.manifest().artifact(name)?;
         println!("artifact {name}");
         println!("  kind    {}", spec.kind);
         println!("  file    {}", spec.file);
@@ -391,9 +421,9 @@ fn cmd_quality_summary(args: &Args) -> Result<()> {
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
-    let engine = engine_of(args)?;
+    let backend = backend_of(args)?;
     let filter = args.str_opt("kind");
-    for a in &engine.manifest.artifacts {
+    for a in &backend.manifest().artifacts {
         if filter.map(|k| a.kind == k).unwrap_or(true) {
             println!(
                 "{}",

@@ -118,11 +118,21 @@ pub struct ArchCfg {
     pub parallel_residual: bool,
 }
 
+impl ArchCfg {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct VariantCfg {
     pub kind: String,
     pub dyad_variant: String,
     pub n_dyad: usize,
+    /// §4 heterogeneous schedules: layer `l` uses
+    /// `layer_schedule[l % len]` as its dyad variant when non-empty
+    /// (resolution lives in `runtime::native::VariantSpec::for_layer`).
+    pub layer_schedule: Vec<String>,
 }
 
 #[derive(Debug)]
@@ -135,6 +145,22 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Assemble a manifest from in-process parts (the native backend's
+    /// `runtime::catalog` builds one without any files on disk).
+    pub fn from_parts(
+        adam: AdamCfg,
+        archs: BTreeMap<String, ArchCfg>,
+        variants: BTreeMap<String, VariantCfg>,
+        artifacts: Vec<ArtifactSpec>,
+    ) -> Manifest {
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Manifest { adam, archs, variants, artifacts, by_name }
+    }
+
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -180,6 +206,14 @@ impl Manifest {
                     kind: v.req("kind")?.as_str()?.to_string(),
                     dyad_variant: v.req("dyad_variant")?.as_str()?.to_string(),
                     n_dyad: v.req("n_dyad")?.as_usize()?,
+                    layer_schedule: match v.get("layer_schedule") {
+                        Some(ls) => ls
+                            .as_arr()?
+                            .iter()
+                            .map(|x| Ok(x.as_str()?.to_string()))
+                            .collect::<Result<Vec<_>>>()?,
+                        None => Vec::new(),
+                    },
                 },
             );
         }

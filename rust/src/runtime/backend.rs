@@ -1,0 +1,146 @@
+//! Backend abstraction: who executes an artifact, and how.
+//!
+//! Everything the runtime consumers (`serve`, `eval`, `coordinator`,
+//! `bench_support`, the CLI) need from an execution engine is captured
+//! by two traits:
+//!
+//! * [`Backend`] — owns a [`Manifest`] (the artifact contract) and
+//!   loads executables by manifest name, caching per backend.
+//! * [`Executable`] — runs one artifact on positional host tensors and
+//!   returns its outputs as host tensors, in manifest output order.
+//!
+//! Two implementations exist:
+//!
+//! * the **native CPU backend** ([`crate::runtime::NativeBackend`]) —
+//!   pure Rust, always available, backed by `dyad::kernel`'s parallel
+//!   blocked matmuls and the fused DYAD forward; its manifest is
+//!   synthesised in-process (`runtime::catalog`), so no artifact files
+//!   are needed on disk;
+//! * the **PJRT/XLA backend** ([`crate::runtime::Engine`], behind the
+//!   `xla` cargo feature) — compiles AOT'd HLO text from an
+//!   `artifacts/` directory produced by `make artifacts`.
+//!
+//! Backends hold non-`Send` state (the PJRT client); like the previous
+//! concrete `Engine`, a backend lives and dies on one thread — the
+//! serve worker constructs its own.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::artifact::{ArtifactSpec, IoSpec, Manifest};
+use crate::tensor::Tensor;
+
+/// One loaded artifact: validated positional-tensor execution.
+pub trait Executable {
+    fn spec(&self) -> &ArtifactSpec;
+
+    /// Execute with the full positional input set (manifest order).
+    /// Outputs come back in manifest output order.
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Convenience: fetch one named output from a result set.
+    fn output_index(&self, name: &str) -> Result<usize> {
+        self.spec().output_index(name)
+    }
+}
+
+/// An execution engine: manifest + load-by-name.
+pub trait Backend {
+    /// The artifact contract this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Load an artifact by manifest name (cached per backend).
+    fn load(&self, name: &str) -> Result<Rc<dyn Executable>>;
+
+    /// Human-readable platform tag ("native-cpu", "Host", ...).
+    fn platform(&self) -> String;
+}
+
+/// Which backend to execute on. Parsed from `--backend` / config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust CPU execution (default; no artifacts required).
+    #[default]
+    Native,
+    /// PJRT/XLA execution of AOT'd HLO artifacts (`xla` feature).
+    Xla,
+}
+
+impl BackendKind {
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" | "cpu" => Ok(BackendKind::Native),
+            "xla" | "pjrt" => Ok(BackendKind::Xla),
+            _ => bail!("unknown backend {s:?} (expected native|xla)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Open a backend. `artifacts_dir` is only read by the XLA backend;
+/// the native backend synthesises its manifest in-process.
+pub fn open_backend(kind: BackendKind, artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(super::native::NativeBackend::new())),
+        BackendKind::Xla => open_xla(artifacts_dir),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn open_xla(artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(super::engine::Engine::from_dir(artifacts_dir)?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn open_xla(_artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    bail!(
+        "the xla backend is not compiled in; add the `xla` dependency \
+         in rust/Cargo.toml (see its [features] note), rebuild with \
+         `cargo build --features xla`, or use `--backend native`"
+    )
+}
+
+/// Shape/dtype/arity validation shared by every backend.
+pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{}: {} inputs given, manifest wants {}",
+            spec.name,
+            inputs.len(),
+            spec.inputs.len()
+        );
+    }
+    for (t, io) in inputs.iter().zip(&spec.inputs) {
+        validate_tensor(t, io, &spec.name)?;
+    }
+    Ok(())
+}
+
+pub fn validate_tensor(t: &Tensor, io: &IoSpec, artifact: &str) -> Result<()> {
+    if t.shape != io.shape {
+        bail!(
+            "{artifact}: input {:?} shape {:?} != manifest {:?}",
+            io.name,
+            t.shape,
+            io.shape
+        );
+    }
+    if t.dtype() != io.dtype {
+        bail!(
+            "{artifact}: input {:?} dtype {:?} != manifest {:?}",
+            io.name,
+            t.dtype(),
+            io.dtype
+        );
+    }
+    Ok(())
+}

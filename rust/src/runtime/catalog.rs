@@ -1,0 +1,504 @@
+//! In-process artifact catalog: the native backend's manifest.
+//!
+//! Mirrors `python/compile/aot.py` — same artifact names, same
+//! positional input/output contracts, same init specs and meta — but
+//! built in pure Rust, so the native backend serves the full inventory
+//! with no files on disk. The python emitter and this module are the
+//! twin sources of the L2→L3 contract; keep them in sync.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::{DType, InitSpec};
+use crate::util::json::{num, obj, s, Json};
+
+use super::artifact::{AdamCfg, ArchCfg, ArtifactSpec, IoSpec, Manifest, Role, VariantCfg};
+
+pub const TRAIN_BATCH: usize = 8;
+pub const TRAIN_MICROBATCHES: usize = 8;
+pub const EVAL_BATCH: usize = 8;
+
+pub const MNIST_HIDDEN: usize = 256;
+pub const MNIST_BATCH: usize = 64;
+pub const MNIST_CLASSES: usize = 10;
+pub const MNIST_IN: usize = 784;
+pub const MNIST_K: usize = 4;
+
+/// ff-micro geometries: (label, d_model, d_ff, tokens per minibatch).
+pub const FF_GEOMETRIES: [(&str, usize, usize, usize); 3] = [
+    ("opt125m-ff", 768, 3072, 512),
+    ("opt350m-ff", 1024, 4096, 256),
+    ("pythia160m-ff", 768, 3072, 512),
+];
+
+/// Figure 6 width sweep: ff geometry (w, 4w) at these widths.
+pub const WIDTH_SWEEP: [usize; 4] = [256, 512, 1024, 2048];
+pub const WIDTH_SWEEP_TOKENS: usize = 128;
+
+pub const ADAM: AdamCfg = AdamCfg { b1: 0.9, b2: 0.999, eps: 1e-8, grad_clip: 1.0 };
+
+/// One parameter's (name, shape, init) — the unit of the contract.
+pub type ParamSpec = (String, Vec<usize>, InitSpec);
+
+fn uniform(bound: f64) -> InitSpec {
+    InitSpec::Uniform { bound: bound as f32 }
+}
+
+pub fn archs() -> BTreeMap<String, ArchCfg> {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "opt-mini".to_string(),
+        ArchCfg {
+            vocab: 512,
+            d_model: 256,
+            d_ff: 1024,
+            n_layers: 4,
+            n_heads: 8,
+            seq: 128,
+            parallel_residual: false,
+        },
+    );
+    m.insert(
+        "pythia-mini".to_string(),
+        ArchCfg {
+            vocab: 512,
+            d_model: 256,
+            d_ff: 1024,
+            n_layers: 4,
+            n_heads: 8,
+            seq: 128,
+            parallel_residual: true,
+        },
+    );
+    m.insert(
+        "opt-mid".to_string(),
+        ArchCfg {
+            vocab: 512,
+            d_model: 384,
+            d_ff: 1536,
+            n_layers: 6,
+            n_heads: 8,
+            seq: 128,
+            parallel_residual: false,
+        },
+    );
+    m
+}
+
+pub fn variants() -> BTreeMap<String, VariantCfg> {
+    let mut m = BTreeMap::new();
+    let mk = |kind: &str, dv: &str, nd: usize, sched: &[&str]| VariantCfg {
+        kind: kind.to_string(),
+        dyad_variant: dv.to_string(),
+        n_dyad: nd,
+        layer_schedule: sched.iter().map(|x| x.to_string()).collect(),
+    };
+    m.insert("dense".to_string(), mk("dense", "it", 4, &[]));
+    m.insert("dyad_it".to_string(), mk("dyad", "it", 4, &[]));
+    m.insert("dyad_ot".to_string(), mk("dyad", "ot", 4, &[]));
+    m.insert("dyad_dt".to_string(), mk("dyad", "dt", 4, &[]));
+    m.insert("dyad_it_cat".to_string(), mk("dyad", "it_cat", 4, &[]));
+    m.insert("dyad_it_8".to_string(), mk("dyad", "it", 8, &[]));
+    m.insert(
+        "dyad_hetero".to_string(),
+        mk("dyad", "it", 4, &["it", "ot", "dt"]),
+    );
+    m
+}
+
+/// Specs for one ff linear layer under the chosen variant
+/// (`model.py::_ff_linear_specs`).
+pub fn ff_linear_specs(
+    prefix: &str,
+    f_in: usize,
+    f_out: usize,
+    var: &VariantCfg,
+) -> Vec<ParamSpec> {
+    let k = 1.0 / (f_in as f64).sqrt();
+    if var.kind == "dense" {
+        return vec![
+            (format!("{prefix}.w"), vec![f_out, f_in], uniform(k)),
+            (format!("{prefix}.b"), vec![f_out], uniform(k)),
+        ];
+    }
+    let nd = var.n_dyad;
+    let (n_in, n_out) = (f_in / nd, f_out / nd);
+    vec![
+        (format!("{prefix}.wl"), vec![nd, n_out, n_in], uniform(k)),
+        (format!("{prefix}.wu"), vec![nd, n_out, n_in], uniform(k)),
+        (format!("{prefix}.b"), vec![f_out], uniform(k)),
+    ]
+}
+
+/// Ordered parameter list for the whole LM (`model.py::param_specs`).
+pub fn model_param_specs(arch: &ArchCfg, var: &VariantCfg) -> Vec<ParamSpec> {
+    let (d, ff) = (arch.d_model, arch.d_ff);
+    let ka = 1.0 / (d as f64).sqrt();
+    let mut specs: Vec<ParamSpec> = vec![
+        ("tok_emb".into(), vec![arch.vocab, d], InitSpec::Normal { std: 0.02 }),
+        ("pos_emb".into(), vec![arch.seq, d], InitSpec::Normal { std: 0.02 }),
+    ];
+    for l in 0..arch.n_layers {
+        let p = format!("layer{l}");
+        specs.push((format!("{p}.ln1.scale"), vec![d], InitSpec::Ones));
+        specs.push((format!("{p}.ln1.bias"), vec![d], InitSpec::Zeros));
+        for m in ["wq", "wk", "wv", "wo"] {
+            specs.push((format!("{p}.attn.{m}"), vec![d, d], uniform(ka)));
+            specs.push((format!("{p}.attn.{m}_b"), vec![d], InitSpec::Zeros));
+        }
+        specs.push((format!("{p}.ln2.scale"), vec![d], InitSpec::Ones));
+        specs.push((format!("{p}.ln2.bias"), vec![d], InitSpec::Zeros));
+        specs.extend(ff_linear_specs(&format!("{p}.ff.fc1"), d, ff, var));
+        specs.extend(ff_linear_specs(&format!("{p}.ff.fc2"), ff, d, var));
+    }
+    specs.push(("final_ln.scale".into(), vec![d], InitSpec::Ones));
+    specs.push(("final_ln.bias".into(), vec![d], InitSpec::Zeros));
+    specs
+}
+
+/// ff-micro parameter list (`model.py::ff_param_specs`).
+pub fn ff_param_specs(d: usize, ff: usize, var: &VariantCfg) -> Vec<ParamSpec> {
+    let mut specs = ff_linear_specs("fc1", d, ff, var);
+    specs.extend(ff_linear_specs("fc2", ff, d, var));
+    specs
+}
+
+/// MNIST MLP parameter list (`mnist.py::mnist_param_specs`).
+pub fn mnist_param_specs(var: &VariantCfg) -> Vec<ParamSpec> {
+    let h = MNIST_HIDDEN;
+    let kh = 1.0 / (h as f64).sqrt();
+    let mut specs = ff_linear_specs("fc1", MNIST_IN, h, var);
+    specs.extend(ff_linear_specs("fc2", h, h, var));
+    specs.push(("head.w".into(), vec![MNIST_CLASSES, h], uniform(kh)));
+    specs.push(("head.b".into(), vec![MNIST_CLASSES], uniform(kh)));
+    specs
+}
+
+fn io(name: &str, shape: &[usize], dtype: DType, role: Role, init: Option<InitSpec>) -> IoSpec {
+    IoSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype,
+        role,
+        init,
+    }
+}
+
+fn param_inputs(specs: &[ParamSpec]) -> Vec<IoSpec> {
+    specs
+        .iter()
+        .map(|(n, sh, init)| io(n, sh, DType::F32, Role::Param, Some(init.clone())))
+        .collect()
+}
+
+/// Adam m/v mirrors of the params, zero-init (`aot.py::opt_state_inputs`).
+fn opt_inputs(specs: &[ParamSpec]) -> Vec<IoSpec> {
+    let mut out = Vec::with_capacity(2 * specs.len());
+    for (prefix, role) in [("m.", Role::OptM), ("v.", Role::OptV)] {
+        for (n, sh, _) in specs {
+            out.push(io(&format!("{prefix}{n}"), sh, DType::F32, role, Some(InitSpec::Zeros)));
+        }
+    }
+    out
+}
+
+fn f32_out(name: &str, shape: &[usize]) -> IoSpec {
+    io(name, shape, DType::F32, Role::Data, None)
+}
+
+/// State-machine outputs of a train-step artifact:
+/// params ++ m ++ v ++ step ++ losses(k).
+fn train_outputs(specs: &[ParamSpec], k: usize) -> Vec<IoSpec> {
+    let mut outs = Vec::with_capacity(3 * specs.len() + 2);
+    for prefix in ["", "m.", "v."] {
+        for (n, sh, _) in specs {
+            outs.push(f32_out(&format!("{prefix}{n}"), sh));
+        }
+    }
+    outs.push(f32_out("step", &[]));
+    outs.push(f32_out("losses", &[k]));
+    outs
+}
+
+fn meta_kv(pairs: Vec<(&str, Json)>) -> Json {
+    obj(pairs)
+}
+
+fn model_artifacts(
+    out: &mut Vec<ArtifactSpec>,
+    arch_name: &str,
+    arch: &ArchCfg,
+    variant_names: &[&str],
+    variants: &BTreeMap<String, VariantCfg>,
+) {
+    let (bt, st, k_full) = (TRAIN_BATCH, arch.seq, TRAIN_MICROBATCHES);
+    let eb = EVAL_BATCH;
+    for vname in variant_names {
+        let var = &variants[*vname];
+        let specs = model_param_specs(arch, var);
+        let params_in = param_inputs(&specs);
+        let base = format!("{arch_name}/{vname}");
+        let meta_common = |extra: Vec<(&str, Json)>| {
+            let mut kv = vec![
+                ("batch", num(eb as f64)),
+                ("seq", num(st as f64)),
+                ("arch", s(arch_name)),
+                ("variant", s(vname)),
+            ];
+            kv.extend(extra);
+            meta_kv(kv)
+        };
+
+        for k in [k_full, 1] {
+            let mut inputs = params_in.clone();
+            inputs.extend(opt_inputs(&specs));
+            inputs.push(io("step", &[], DType::F32, Role::Scalar, None));
+            inputs.push(io("lr", &[], DType::F32, Role::Scalar, None));
+            inputs.push(io("tokens", &[k, bt, st], DType::I32, Role::Data, None));
+            out.push(ArtifactSpec {
+                name: format!("{base}/train_k{k}"),
+                file: "<native>".into(),
+                kind: "train_step".into(),
+                inputs,
+                outputs: train_outputs(&specs, k),
+                meta: meta_kv(vec![
+                    ("k_micro", num(k as f64)),
+                    ("batch", num(bt as f64)),
+                    ("seq", num(st as f64)),
+                    ("arch", s(arch_name)),
+                    ("variant", s(vname)),
+                ]),
+            });
+        }
+
+        let mut score_in = params_in.clone();
+        score_in.push(io("tokens", &[eb, st], DType::I32, Role::Data, None));
+        score_in.push(io("mask", &[eb, st], DType::F32, Role::Data, None));
+        out.push(ArtifactSpec {
+            name: format!("{base}/score"),
+            file: "<native>".into(),
+            kind: "score".into(),
+            inputs: score_in.clone(),
+            outputs: vec![f32_out("sum_logp", &[eb]), f32_out("n_tok", &[eb])],
+            meta: meta_common(vec![]),
+        });
+        out.push(ArtifactSpec {
+            name: format!("{base}/features"),
+            file: "<native>".into(),
+            kind: "features".into(),
+            inputs: score_in,
+            outputs: vec![f32_out("features", &[eb, arch.d_model])],
+            meta: meta_common(vec![]),
+        });
+        let mut nl_in = params_in.clone();
+        nl_in.push(io("tokens", &[eb, st], DType::I32, Role::Data, None));
+        nl_in.push(io("lengths", &[eb], DType::I32, Role::Data, None));
+        out.push(ArtifactSpec {
+            name: format!("{base}/next_logits"),
+            file: "<native>".into(),
+            kind: "next_logits".into(),
+            inputs: nl_in,
+            outputs: vec![f32_out("logits", &[eb, arch.vocab])],
+            meta: meta_common(vec![]),
+        });
+        let mut el_in = params_in.clone();
+        el_in.push(io("tokens", &[eb, st], DType::I32, Role::Data, None));
+        out.push(ArtifactSpec {
+            name: format!("{base}/eval_loss"),
+            file: "<native>".into(),
+            kind: "eval_loss".into(),
+            inputs: el_in,
+            outputs: vec![f32_out("loss", &[])],
+            meta: meta_common(vec![]),
+        });
+    }
+}
+
+fn ff_artifacts(
+    out: &mut Vec<ArtifactSpec>,
+    label: &str,
+    d: usize,
+    ff: usize,
+    tokens: usize,
+    variant_names: &[&str],
+    variants: &BTreeMap<String, VariantCfg>,
+) {
+    for vname in variant_names {
+        let var = &variants[*vname];
+        let specs = ff_param_specs(d, ff, var);
+        let params_in = param_inputs(&specs);
+        let meta = meta_kv(vec![
+            ("d_model", num(d as f64)),
+            ("d_ff", num(ff as f64)),
+            ("tokens", num(tokens as f64)),
+            ("variant", s(vname)),
+        ]);
+        let mut fwd_in = params_in.clone();
+        fwd_in.push(io("x", &[tokens, d], DType::F32, Role::Data, None));
+        out.push(ArtifactSpec {
+            name: format!("ff/{label}/{vname}/fwd"),
+            file: "<native>".into(),
+            kind: "ff_fwd".into(),
+            inputs: fwd_in.clone(),
+            outputs: vec![f32_out("y", &[tokens, d])],
+            meta: meta.clone(),
+        });
+        let mut fb_in = fwd_in;
+        fb_in.push(io("ct", &[tokens, d], DType::F32, Role::Data, None));
+        let mut fb_out = vec![f32_out("loss", &[])];
+        for (n, sh, _) in &specs {
+            fb_out.push(f32_out(&format!("g.{n}"), sh));
+        }
+        out.push(ArtifactSpec {
+            name: format!("ff/{label}/{vname}/fwdbwd"),
+            file: "<native>".into(),
+            kind: "ff_fwdbwd".into(),
+            inputs: fb_in,
+            outputs: fb_out,
+            meta,
+        });
+    }
+}
+
+fn mnist_artifacts(out: &mut Vec<ArtifactSpec>, variants: &BTreeMap<String, VariantCfg>) {
+    let (b, k) = (MNIST_BATCH, MNIST_K);
+    for vname in ["dense", "dyad_it"] {
+        let var = &variants[vname];
+        let specs = mnist_param_specs(var);
+        let params_in = param_inputs(&specs);
+        let mut train_in = params_in.clone();
+        train_in.extend(opt_inputs(&specs));
+        train_in.push(io("step", &[], DType::F32, Role::Scalar, None));
+        train_in.push(io("lr", &[], DType::F32, Role::Scalar, None));
+        train_in.push(io("images", &[k, b, MNIST_IN], DType::F32, Role::Data, None));
+        train_in.push(io("labels", &[k, b], DType::I32, Role::Data, None));
+        out.push(ArtifactSpec {
+            name: format!("mnist/{vname}/train_k{k}"),
+            file: "<native>".into(),
+            kind: "mnist_train".into(),
+            inputs: train_in,
+            outputs: train_outputs(&specs, k),
+            meta: meta_kv(vec![
+                ("k_micro", num(k as f64)),
+                ("batch", num(b as f64)),
+                ("variant", s(vname)),
+            ]),
+        });
+        let mut acc_in = params_in.clone();
+        acc_in.push(io("images", &[b, MNIST_IN], DType::F32, Role::Data, None));
+        acc_in.push(io("labels", &[b], DType::I32, Role::Data, None));
+        out.push(ArtifactSpec {
+            name: format!("mnist/{vname}/accuracy"),
+            file: "<native>".into(),
+            kind: "mnist_accuracy".into(),
+            inputs: acc_in,
+            outputs: vec![io("n_correct", &[], DType::I32, Role::Data, None)],
+            meta: meta_kv(vec![("batch", num(b as f64)), ("variant", s(vname))]),
+        });
+        let mut hf_in = params_in.clone();
+        hf_in.push(io("x", &[b, MNIST_IN], DType::F32, Role::Data, None));
+        out.push(ArtifactSpec {
+            name: format!("mnist/{vname}/hidden_fwd"),
+            file: "<native>".into(),
+            kind: "mnist_hidden_fwd".into(),
+            inputs: hf_in,
+            outputs: vec![f32_out("h", &[b, MNIST_HIDDEN])],
+            meta: meta_kv(vec![("batch", num(b as f64)), ("variant", s(vname))]),
+        });
+    }
+}
+
+/// The full native-backend manifest (same inventory as `aot.py`, minus
+/// the Pallas validation artifact, which is PJRT-only by nature).
+pub fn native_manifest() -> Manifest {
+    let archs = archs();
+    let variants = variants();
+    let mut artifacts = Vec::new();
+    model_artifacts(
+        &mut artifacts,
+        "opt-mini",
+        &archs["opt-mini"],
+        &["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8", "dyad_hetero"],
+        &variants,
+    );
+    model_artifacts(
+        &mut artifacts,
+        "pythia-mini",
+        &archs["pythia-mini"],
+        &["dense", "dyad_it", "dyad_it_8"],
+        &variants,
+    );
+    model_artifacts(&mut artifacts, "opt-mid", &archs["opt-mid"], &["dense", "dyad_it"], &variants);
+
+    let ff_variants = ["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8", "dyad_it_cat"];
+    for (label, d, ff, toks) in FF_GEOMETRIES {
+        ff_artifacts(&mut artifacts, label, d, ff, toks, &ff_variants, &variants);
+    }
+    for w in WIDTH_SWEEP {
+        ff_artifacts(
+            &mut artifacts,
+            &format!("width{w}"),
+            w,
+            4 * w,
+            WIDTH_SWEEP_TOKENS,
+            &["dense", "dyad_it", "dyad_it_8"],
+            &variants,
+        );
+    }
+    mnist_artifacts(&mut artifacts, &variants);
+    Manifest::from_parts(ADAM, archs, variants, artifacts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_has_expected_inventory() {
+        let m = native_manifest();
+        // 11 (arch, variant) pairs x 6 model artifacts
+        // + (3 geos x 6 + 4 widths x 3) ff variants x 2 artifacts
+        // + 2 mnist variants x 3 artifacts
+        assert_eq!(m.artifacts.len(), 11 * 6 + (3 * 6 + 4 * 3) * 2 + 2 * 3);
+        for name in [
+            "opt-mini/dyad_it/train_k8",
+            "opt-mini/dense/score",
+            "pythia-mini/dyad_it_8/eval_loss",
+            "opt-mid/dyad_it/next_logits",
+            "ff/opt125m-ff/dyad_it_cat/fwdbwd",
+            "ff/width2048/dyad_it_8/fwd",
+            "mnist/dyad_it/train_k4",
+            "mnist/dense/hidden_fwd",
+        ] {
+            assert!(m.artifact(name).is_ok(), "missing {name}");
+        }
+        assert_eq!(m.arch("opt-mini").unwrap().d_model, 256);
+        assert_eq!(m.variant("dyad_it_8").unwrap().n_dyad, 8);
+        assert_eq!(m.variant("dyad_hetero").unwrap().layer_schedule.len(), 3);
+    }
+
+    #[test]
+    fn param_accounting_matches_paper() {
+        // dense - dyad_4 = ff weights reduced to 2/n_dyad of dense
+        let m = native_manifest();
+        let dense = m.artifact("opt-mini/dense/train_k1").unwrap().param_count();
+        let dyad = m.artifact("opt-mini/dyad_it/train_k1").unwrap().param_count();
+        let dyad8 = m.artifact("opt-mini/dyad_it_8/train_k1").unwrap().param_count();
+        let arch = m.arch("opt-mini").unwrap();
+        let ff_w = 2 * arch.n_layers * arch.d_model * arch.d_ff;
+        assert_eq!(dense - dyad, ff_w - 2 * ff_w / 4);
+        assert_eq!(dense - dyad8, ff_w - 2 * ff_w / 8);
+    }
+
+    #[test]
+    fn train_artifact_contract_shape() {
+        let m = native_manifest();
+        let a = m.artifact("mnist/dyad_it/train_k4").unwrap();
+        let n_params = a.param_specs().len();
+        // inputs: params + m + v + step + lr + images + labels
+        assert_eq!(a.inputs.len(), 3 * n_params + 4);
+        // outputs: params + m + v + step + losses
+        assert_eq!(a.outputs.len(), 3 * n_params + 2);
+        assert_eq!(a.meta_usize("k_micro").unwrap(), 4);
+        assert_eq!(a.meta_usize("batch").unwrap(), 64);
+    }
+}

@@ -1,9 +1,15 @@
 //! PJRT engine: compile-once executable cache + typed execution.
 //!
-//! Hot-path note (EXPERIMENTS.md §Perf): training state is kept as
-//! `xla::Literal`s between calls — `Loaded::run_literals` avoids any
-//! host `Vec<f32>` staging for the ~3·N parameter tensors per step;
-//! only control scalars and data batches are converted per call.
+//! The XLA implementation of the [`Backend`]/[`Executable`] traits,
+//! compiled only under the `xla` cargo feature. Loads AOT'd HLO text
+//! from an `artifacts/` directory (produced by `make artifacts`),
+//! compiles each artifact once per engine, and stages host tensors to
+//! `xla::Literal`s at call boundaries.
+//!
+//! Pattern per `/opt/xla-example/load_hlo`: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Multi-output executables return a single tuple buffer which we
+//! decompose on the host (PJRT does not untuple; DESIGN.md §2).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -13,6 +19,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use super::artifact::{ArtifactSpec, IoSpec, Manifest};
+use super::backend::{validate_inputs, Backend, Executable};
 use crate::tensor::{DType, Tensor};
 use crate::util::timer::Timer;
 
@@ -76,24 +83,24 @@ impl Engine {
     }
 }
 
+impl Backend for Engine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, name: &str) -> Result<Rc<dyn Executable>> {
+        let loaded: Rc<dyn Executable> = Engine::load(self, name)?;
+        Ok(loaded)
+    }
+
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+}
+
 /// Host tensor -> XLA literal (validates against the IoSpec).
 pub fn tensor_to_literal(t: &Tensor, spec: &IoSpec) -> Result<xla::Literal> {
-    if t.shape != spec.shape {
-        bail!(
-            "input {:?}: shape {:?} != manifest {:?}",
-            spec.name,
-            t.shape,
-            spec.shape
-        );
-    }
-    if t.dtype() != spec.dtype {
-        bail!(
-            "input {:?}: dtype {:?} != manifest {:?}",
-            spec.name,
-            t.dtype(),
-            spec.dtype
-        );
-    }
+    super::backend::validate_tensor(t, spec, "stage")?;
     let ty = match spec.dtype {
         DType::F32 => xla::ElementType::F32,
         DType::I32 => xla::ElementType::S32,
@@ -119,37 +126,28 @@ pub fn literal_to_tensor(lit: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
     }
 }
 
-impl Loaded {
-    /// Execute with host tensors; returns outputs as host tensors.
-    ///
-    /// Convenience path for eval/bench call sites; the trainer uses
-    /// [`Loaded::run_literals`] to keep state staged as literals.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let lits = self.stage(inputs)?;
+impl Executable for Loaded {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with host tensors; stages to literals at the boundary.
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        validate_inputs(&self.spec, inputs)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .map(|(t, s)| tensor_to_literal(t, s))
+            .collect::<Result<_>>()?;
         let out = self.run_literals(&lits)?;
         out.iter()
             .zip(&self.spec.outputs)
             .map(|(l, s)| literal_to_tensor(l, s))
             .collect()
     }
+}
 
-    /// Convert + validate a full positional input set.
-    pub fn stage(&self, inputs: &[Tensor]) -> Result<Vec<xla::Literal>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: {} inputs given, manifest wants {}",
-                self.spec.name,
-                inputs.len(),
-                self.spec.inputs.len()
-            );
-        }
-        inputs
-            .iter()
-            .zip(&self.spec.inputs)
-            .map(|(t, s)| tensor_to_literal(t, s))
-            .collect()
-    }
-
+impl Loaded {
     /// Execute with pre-staged literals; returns the decomposed output
     /// tuple as literals (no host conversion).
     pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(

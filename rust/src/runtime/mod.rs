@@ -1,18 +1,27 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Runtime: the backend abstraction plus its two implementations.
 //!
-//! `Engine` owns the PJRT CPU client and an executable cache;
-//! `artifact` parses `artifacts/manifest.json` (the L2→L3 contract);
-//! `state` carries training state between `train_step` calls.
-//!
-//! Pattern per `/opt/xla-example/load_hlo`: `HloModuleProto::from_text_file`
-//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
-//! Multi-output executables return a single tuple buffer which we
-//! decompose on the host (PJRT does not untuple; DESIGN.md §2).
+//! * `backend` — the [`Backend`]/[`Executable`] trait pair every
+//!   consumer (`serve`, `eval`, `coordinator`, `bench_support`, CLI)
+//!   programs against, plus [`open_backend`]/[`BackendKind`].
+//! * `native` — the pure-Rust CPU backend (default): transformer
+//!   inference, MNIST training, ff-micro timing — no artifacts needed.
+//! * `engine` (`xla` feature) — the PJRT backend: loads AOT artifacts
+//!   (HLO text) produced by `make artifacts` and executes them.
+//! * `artifact` — the manifest types (the L2→L3 contract);
+//!   `catalog` synthesises the native backend's manifest in-process.
+//! * `state` — training state threaded between `train_step` calls.
 
 mod artifact;
+mod backend;
+pub mod catalog;
+#[cfg(feature = "xla")]
 mod engine;
+mod native;
 mod state;
 
 pub use artifact::{AdamCfg, ArchCfg, ArtifactSpec, IoSpec, Manifest, Role, VariantCfg};
+pub use backend::{open_backend, Backend, BackendKind, Executable};
+#[cfg(feature = "xla")]
 pub use engine::{literal_to_tensor, tensor_to_literal, Engine, Loaded};
+pub use native::{LinearView, NativeBackend, Params, VariantSpec};
 pub use state::TrainState;

@@ -1,0 +1,136 @@
+//! Native ff-micro programs (timing tables T1/T5/T10, F6/F7, -CAT):
+//! fc1 -> GELU -> fc2 at the paper's true widths, forward and
+//! forward+backward, mirroring `model.py::make_ff_fwd/_fwdbwd`.
+
+use anyhow::Result;
+
+use super::linear::LinearView;
+use super::ops::{gelu_grad, gelu_inplace};
+use super::params::Params;
+use super::VariantSpec;
+
+pub struct Ff<'a> {
+    pub d: usize,
+    pub ff: usize,
+    pub var: &'a VariantSpec,
+    pub p: Params<'a>,
+}
+
+impl Ff<'_> {
+    fn fc1(&self) -> Result<LinearView<'_>> {
+        self.var.linear_view(&self.p, "fc1", self.d, self.ff, 0)
+    }
+
+    fn fc2(&self) -> Result<LinearView<'_>> {
+        self.var.linear_view(&self.p, "fc2", self.ff, self.d, 0)
+    }
+
+    /// `x (t, d)` -> `y (t, d)`.
+    pub fn forward(&self, x: &[f32], t: usize) -> Result<Vec<f32>> {
+        let mut h = self.fc1()?.forward(x, t);
+        gelu_inplace(&mut h);
+        Ok(self.fc2()?.forward(&h, t))
+    }
+
+    /// Forward + backward of `loss = sum(y * ct)`: returns the loss and
+    /// parameter gradients in spec order (fc1 params, then fc2 params).
+    pub fn fwdbwd(&self, x: &[f32], ct: &[f32], t: usize) -> Result<(f32, Vec<Vec<f32>>)> {
+        let fc1 = self.fc1()?;
+        let fc2 = self.fc2()?;
+        let a1 = fc1.forward(x, t);
+        let mut h = a1.clone();
+        gelu_inplace(&mut h);
+        let y = fc2.forward(&h, t);
+        let loss: f64 = y.iter().zip(ct).map(|(a, b)| (a * b) as f64).sum();
+        // dL/dy = ct
+        let (g_fc2, dh) = fc2.backward(&h, ct, t, true)?;
+        let mut da1 = dh.unwrap();
+        for (g, &a) in da1.iter_mut().zip(&a1) {
+            *g *= gelu_grad(a);
+        }
+        let (g_fc1, _) = fc1.backward(x, &da1, t, false)?;
+        let mut grads = g_fc1;
+        grads.extend(g_fc2);
+        Ok((loss as f32, grads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{ArtifactSpec, IoSpec, Role};
+    use crate::runtime::catalog::{self, ff_param_specs};
+    use crate::tensor::{DType, Tensor};
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+
+    /// A tiny ff artifact spec (not from the catalog — small enough to
+    /// gradcheck) plus matching random tensors.
+    fn tiny_ff(vname: &str, d: usize, ff: usize) -> (ArtifactSpec, Vec<Tensor>, VariantSpec) {
+        let variants = catalog::variants();
+        let var = &variants[vname];
+        let specs = ff_param_specs(d, ff, var);
+        let mut rng = Rng::new(17);
+        let inputs: Vec<IoSpec> = specs
+            .iter()
+            .map(|(n, sh, init)| IoSpec {
+                name: n.clone(),
+                shape: sh.clone(),
+                dtype: DType::F32,
+                role: Role::Param,
+                init: Some(init.clone()),
+            })
+            .collect();
+        let tensors: Vec<Tensor> = specs
+            .iter()
+            .map(|(_, sh, _)| {
+                let n: usize = sh.iter().product();
+                Tensor::from_f32(sh, (0..n).map(|_| rng.uniform(-0.4, 0.4)).collect()).unwrap()
+            })
+            .collect();
+        let spec = ArtifactSpec {
+            name: format!("test/ff/{vname}"),
+            file: "<native>".into(),
+            kind: "ff_fwd".into(),
+            inputs,
+            outputs: vec![],
+            meta: Json::Obj(vec![]),
+        };
+        (spec, tensors, VariantSpec::resolve(var).unwrap())
+    }
+
+    #[test]
+    fn ff_fwdbwd_gradcheck_dyad() {
+        let (d, ff, t) = (8, 16, 3);
+        for vname in ["dense", "dyad_it", "dyad_dt"] {
+            let (spec, tensors, var) = tiny_ff(vname, d, ff);
+            let mut rng = Rng::new(23);
+            let x: Vec<f32> = (0..t * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let ct: Vec<f32> = (0..t * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let run = |tensors: &[Tensor]| -> (f32, Vec<Vec<f32>>) {
+                let refs: Vec<&Tensor> = tensors.iter().collect();
+                let f = Ff { d, ff, var: &var, p: Params::new(&spec, &refs) };
+                f.fwdbwd(&x, &ct, t).unwrap()
+            };
+            let (loss, grads) = run(&tensors);
+            assert!(loss.is_finite());
+            let h = 1e-2f32;
+            for (pi, idx) in [(0usize, 1usize), (1, 2), (2, 0)] {
+                let fd = {
+                    let mut tp = tensors.clone();
+                    tp[pi].as_f32_mut().unwrap()[idx] += h;
+                    let (lp, _) = run(&tp);
+                    let mut tm = tensors.clone();
+                    tm[pi].as_f32_mut().unwrap()[idx] -= h;
+                    let (lm, _) = run(&tm);
+                    (lp - lm) / (2.0 * h)
+                };
+                let an = grads[pi][idx];
+                assert!(
+                    (an - fd).abs() < 3e-2 * (1.0 + fd.abs()),
+                    "{vname} param {pi} idx {idx}: analytic {an} vs fd {fd}"
+                );
+            }
+        }
+    }
+}

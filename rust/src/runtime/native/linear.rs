@@ -1,0 +1,243 @@
+//! A borrowed view of one linear layer (DENSE or DYAD) with row-major
+//! forward and backward passes.
+//!
+//! Forward runs the fast path: `dyad::kernel::dense_linear` /
+//! `dyad::kernel::dyad_linear` (the fused blocked schedule).
+//!
+//! Backward materialises the full `(f_out, f_in)` matrix once and runs
+//! dense gradient matmuls, then projects `dW` back onto the DYAD block
+//! structure (each `wl`/`wu` entry reads the `dW` cell its layout
+//! places it in — permutations included). This is exactly correct for
+//! both components, including where their supports overlap, because
+//! `W = W1 + W2` is linear in each stored entry. A structured
+//! (materialisation-free) backward is a ROADMAP item.
+
+use anyhow::{bail, Result};
+
+use crate::dyad::kernel::{dense_linear, dyad_linear, matmul_fast, transpose};
+use crate::dyad::layout::{dyad_full, perm_vector};
+use crate::dyad::{DyadDims, Variant};
+
+use super::ops::col_sums;
+
+pub enum LinearView<'a> {
+    Dense {
+        w: &'a [f32],
+        b: &'a [f32],
+        f_in: usize,
+        f_out: usize,
+    },
+    Dyad {
+        wl: &'a [f32],
+        wu: &'a [f32],
+        b: &'a [f32],
+        dims: DyadDims,
+        variant: Variant,
+    },
+}
+
+impl LinearView<'_> {
+    pub fn f_in(&self) -> usize {
+        match self {
+            LinearView::Dense { f_in, .. } => *f_in,
+            LinearView::Dyad { dims, .. } => dims.f_in(),
+        }
+    }
+
+    pub fn f_out(&self) -> usize {
+        match self {
+            LinearView::Dense { f_out, .. } => *f_out,
+            LinearView::Dyad { dims, .. } => dims.f_out(),
+        }
+    }
+
+    /// `x (t, f_in)` -> `(t, f_out)`, bias applied.
+    pub fn forward(&self, x: &[f32], t: usize) -> Vec<f32> {
+        match self {
+            LinearView::Dense { w, b, f_in, f_out } => {
+                dense_linear(x, w, Some(b), t, *f_in, *f_out)
+            }
+            LinearView::Dyad { wl, wu, b, dims, variant } => {
+                dyad_linear(wl, wu, x, *dims, *variant, t, Some(b))
+            }
+        }
+    }
+
+    /// Materialise the full `(f_out, f_in)` weight matrix.
+    pub fn materialize(&self) -> Vec<f32> {
+        match self {
+            LinearView::Dense { w, .. } => w.to_vec(),
+            LinearView::Dyad { wl, wu, dims, variant, .. } => {
+                dyad_full(wl, wu, *dims, *variant)
+            }
+        }
+    }
+
+    /// Backward pass for `y = x @ W^T + b` given upstream `dy (t, f_out)`
+    /// and the layer input `x (t, f_in)`.
+    ///
+    /// Returns the parameter gradients in *spec order* (`[dw, db]` for
+    /// dense, `[dwl, dwu, db]` for DYAD) and, when requested, `dx`.
+    pub fn backward(
+        &self,
+        x: &[f32],
+        dy: &[f32],
+        t: usize,
+        need_dx: bool,
+    ) -> Result<(Vec<Vec<f32>>, Option<Vec<f32>>)> {
+        let (f_in, f_out) = (self.f_in(), self.f_out());
+        if x.len() != t * f_in || dy.len() != t * f_out {
+            bail!(
+                "linear backward: x {} / dy {} for t={t}, f_in={f_in}, f_out={f_out}",
+                x.len(),
+                dy.len()
+            );
+        }
+        // dW = dy^T @ x  (f_out, f_in)
+        let dyt = transpose(dy, t, f_out);
+        let dw_full = matmul_fast(&dyt, x, f_out, t, f_in);
+        let db = col_sums(dy, f_out);
+        let dx = if need_dx {
+            // dx = dy @ W  (t, f_in)
+            let w_full = self.materialize();
+            Some(matmul_fast(dy, &w_full, t, f_out, f_in))
+        } else {
+            None
+        };
+        let grads = match self {
+            LinearView::Dense { .. } => vec![dw_full, db],
+            LinearView::Dyad { dims, variant, .. } => {
+                let (dwl, dwu) = project_dyad_grads(&dw_full, *dims, *variant);
+                vec![dwl, dwu, db]
+            }
+        };
+        Ok((grads, dx))
+    }
+}
+
+/// Read the block-structured component gradients out of the full `dW`.
+fn project_dyad_grads(dw: &[f32], dims: DyadDims, variant: Variant) -> (Vec<f32>, Vec<f32>) {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    let f_in = dims.f_in();
+    let in_perm = matches!(variant, Variant::It | Variant::Dt);
+    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+    let pi_in = perm_vector(n_in, n_dyad);
+    let pi_out = perm_vector(n_out, n_dyad);
+    let mut dwl = vec![0.0f32; dims.component_params()];
+    let mut dwu = vec![0.0f32; dims.component_params()];
+    for i in 0..n_dyad {
+        for o in 0..n_out {
+            for k in 0..n_in {
+                let idx = (i * n_out + o) * n_in + k;
+                dwl[idx] = dw[(i * n_out + o) * f_in + (i * n_in + k)];
+                let r = if out_perm { pi_out[i * n_out + o] } else { i * n_out + o };
+                let c = if in_perm { pi_in[i * n_in + k] } else { i * n_in + k };
+                dwu[idx] = dw[r * f_in + c];
+            }
+        }
+    }
+    (dwl, dwu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-0.5, 0.5)).collect()
+    }
+
+    /// Finite-difference gradcheck of the DYAD backward through a
+    /// sum(y * ct) scalar loss, all variants, rectangular blocks.
+    #[test]
+    fn dyad_backward_gradcheck() {
+        let mut rng = Rng::new(42);
+        let dims = DyadDims { n_dyad: 2, n_in: 3, n_out: 2 };
+        let t = 4;
+        for variant in [Variant::It, Variant::Ot, Variant::Dt] {
+            let wl = rand_vec(&mut rng, dims.component_params());
+            let wu = rand_vec(&mut rng, dims.component_params());
+            let b = rand_vec(&mut rng, dims.f_out());
+            let x = rand_vec(&mut rng, t * dims.f_in());
+            let ct = rand_vec(&mut rng, t * dims.f_out());
+            let loss = |wl: &[f32], wu: &[f32], b: &[f32], x: &[f32]| -> f32 {
+                let v = LinearView::Dyad { wl, wu, b, dims, variant };
+                v.forward(x, t).iter().zip(ct.iter()).map(|(a, c)| a * c).sum()
+            };
+            let view = LinearView::Dyad { wl: &wl, wu: &wu, b: &b, dims, variant };
+            let (grads, dx) = view.backward(&x, &ct, t, true).unwrap();
+            let (dwl, dwu, db) = (&grads[0], &grads[1], &grads[2]);
+            let dx = dx.unwrap();
+            let h = 1e-2f32;
+            let check = |an: f32, fd: f32, what: &str| {
+                assert!(
+                    (an - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{variant:?} {what}: analytic {an} vs fd {fd}"
+                );
+            };
+            for idx in [0usize, 3, dims.component_params() - 1] {
+                let mut wp = wl.clone();
+                wp[idx] += h;
+                let mut wm = wl.clone();
+                wm[idx] -= h;
+                let fd = (loss(&wp, &wu, &b, &x) - loss(&wm, &wu, &b, &x)) / (2.0 * h);
+                check(dwl[idx], fd, "dwl");
+                let mut up = wu.clone();
+                up[idx] += h;
+                let mut um = wu.clone();
+                um[idx] -= h;
+                let fd = (loss(&wl, &up, &b, &x) - loss(&wl, &um, &b, &x)) / (2.0 * h);
+                check(dwu[idx], fd, "dwu");
+            }
+            for idx in [0usize, dims.f_out() - 1] {
+                let mut bp = b.clone();
+                bp[idx] += h;
+                let mut bm = b.clone();
+                bm[idx] -= h;
+                let fd = (loss(&wl, &wu, &bp, &x) - loss(&wl, &wu, &bm, &x)) / (2.0 * h);
+                check(db[idx], fd, "db");
+            }
+            for idx in [0usize, t * dims.f_in() - 1] {
+                let mut xp = x.clone();
+                xp[idx] += h;
+                let mut xm = x.clone();
+                xm[idx] -= h;
+                let fd = (loss(&wl, &wu, &b, &xp) - loss(&wl, &wu, &b, &xm)) / (2.0 * h);
+                check(dx[idx], fd, "dx");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_backward_gradcheck() {
+        let mut rng = Rng::new(9);
+        let (f_in, f_out, t) = (5, 3, 4);
+        let w = rand_vec(&mut rng, f_out * f_in);
+        let b = rand_vec(&mut rng, f_out);
+        let x = rand_vec(&mut rng, t * f_in);
+        let ct = rand_vec(&mut rng, t * f_out);
+        let loss = |w: &[f32], x: &[f32]| -> f32 {
+            let v = LinearView::Dense { w, b: &b, f_in, f_out };
+            v.forward(x, t).iter().zip(ct.iter()).map(|(a, c)| a * c).sum()
+        };
+        let view = LinearView::Dense { w: &w, b: &b, f_in, f_out };
+        let (grads, dx) = view.backward(&x, &ct, t, true).unwrap();
+        let h = 1e-2f32;
+        for idx in [0usize, 7, f_out * f_in - 1] {
+            let mut wp = w.clone();
+            wp[idx] += h;
+            let mut wm = w.clone();
+            wm[idx] -= h;
+            let fd = (loss(&wp, &x) - loss(&wm, &x)) / (2.0 * h);
+            assert!((grads[0][idx] - fd).abs() < 2e-2 * (1.0 + fd.abs()));
+        }
+        let dx = dx.unwrap();
+        let mut xp = x.clone();
+        xp[2] += h;
+        let mut xm = x.clone();
+        xm[2] -= h;
+        let fd = (loss(&w, &xp) - loss(&w, &xm)) / (2.0 * h);
+        assert!((dx[2] - fd).abs() < 2e-2 * (1.0 + fd.abs()));
+    }
+}

@@ -1,0 +1,226 @@
+//! Native MNIST-probe MLP (paper §3.4.5): 784 -> 256 -> 256 -> 10 with
+//! ReLU, the two hidden linears being the DENSE/DYAD swap site.
+//! Mirrors `python/compile/mnist.py`, including the Adam-in-graph
+//! train step (K microbatches per call, no grad clip) — so the native
+//! backend trains the probe end to end.
+
+use anyhow::{bail, Context, Result};
+
+use crate::dyad::DyadDims;
+use crate::runtime::catalog::{MNIST_CLASSES, MNIST_HIDDEN, MNIST_IN};
+
+use super::linear::LinearView;
+use super::ops::{log_softmax_row, relu_inplace, softmax_row};
+use super::params::Params;
+use super::VariantSpec;
+
+pub struct Mlp<'a> {
+    pub var: &'a VariantSpec,
+    pub p: Params<'a>,
+}
+
+impl Mlp<'_> {
+    fn fc(&self, prefix: &str, f_in: usize, f_out: usize) -> Result<LinearView<'_>> {
+        self.var.linear_view(&self.p, prefix, f_in, f_out, 0)
+    }
+
+    fn head(&self) -> Result<LinearView<'_>> {
+        Ok(LinearView::Dense {
+            w: self.p.f32("head.w")?,
+            b: self.p.f32("head.b")?,
+            f_in: MNIST_HIDDEN,
+            f_out: MNIST_CLASSES,
+        })
+    }
+
+    /// The two swap-site linears + ReLUs (the timed "ff-only" path).
+    pub fn hidden(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        let fc1 = self.fc("fc1", MNIST_IN, MNIST_HIDDEN)?;
+        let fc2 = self.fc("fc2", MNIST_HIDDEN, MNIST_HIDDEN)?;
+        let mut h = fc1.forward(x, b);
+        relu_inplace(&mut h);
+        let mut h = fc2.forward(&h, b);
+        relu_inplace(&mut h);
+        Ok(h)
+    }
+
+    pub fn logits(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        let h = self.hidden(x, b)?;
+        Ok(self.head()?.forward(&h, b))
+    }
+
+    /// How many of `labels` the MLP classifies correctly.
+    pub fn n_correct(&self, x: &[f32], labels: &[i32], b: usize) -> Result<i32> {
+        let logits = self.logits(x, b)?;
+        let mut correct = 0;
+        for (bi, &label) in labels.iter().enumerate().take(b) {
+            let row = &logits[bi * MNIST_CLASSES..(bi + 1) * MNIST_CLASSES];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0);
+            if pred == label {
+                correct += 1;
+            }
+        }
+        Ok(correct)
+    }
+}
+
+/// Find one named parameter in the flat (name, values) training state.
+fn pslice<'a>(names: &[String], params: &'a [Vec<f32>], n: &str) -> Result<&'a [f32]> {
+    names
+        .iter()
+        .position(|x| x == n)
+        .map(|i| params[i].as_slice())
+        .with_context(|| format!("mnist param {n:?} missing"))
+}
+
+/// Build a linear view over the flat training-state vectors.
+fn view_from<'a>(
+    var: &VariantSpec,
+    names: &[String],
+    params: &'a [Vec<f32>],
+    prefix: &str,
+    f_in: usize,
+    f_out: usize,
+) -> Result<LinearView<'a>> {
+    if var.dense {
+        Ok(LinearView::Dense {
+            w: pslice(names, params, &format!("{prefix}.w"))?,
+            b: pslice(names, params, &format!("{prefix}.b"))?,
+            f_in,
+            f_out,
+        })
+    } else {
+        Ok(LinearView::Dyad {
+            wl: pslice(names, params, &format!("{prefix}.wl"))?,
+            wu: pslice(names, params, &format!("{prefix}.wu"))?,
+            b: pslice(names, params, &format!("{prefix}.b"))?,
+            dims: DyadDims::new(var.n_dyad, f_in, f_out)?,
+            variant: var.for_layer(0),
+        })
+    }
+}
+
+/// One microbatch: mean softmax cross-entropy loss + parameter
+/// gradients in spec order (fc1.., fc2.., head.w, head.b).
+pub fn mnist_loss_and_grads(
+    var: &VariantSpec,
+    names: &[String],
+    params: &[Vec<f32>],
+    x: &[f32],
+    labels: &[i32],
+    b: usize,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let fc1 = view_from(var, names, params, "fc1", MNIST_IN, MNIST_HIDDEN)?;
+    let fc2 = view_from(var, names, params, "fc2", MNIST_HIDDEN, MNIST_HIDDEN)?;
+    let head = LinearView::Dense {
+        w: pslice(names, params, "head.w")?,
+        b: pslice(names, params, "head.b")?,
+        f_in: MNIST_HIDDEN,
+        f_out: MNIST_CLASSES,
+    };
+
+    // forward with caches
+    let a1 = fc1.forward(x, b);
+    let mut h1 = a1.clone();
+    relu_inplace(&mut h1);
+    let a2 = fc2.forward(&h1, b);
+    let mut h2 = a2.clone();
+    relu_inplace(&mut h2);
+    let logits = head.forward(&h2, b);
+
+    // loss + dlogits = (softmax - onehot) / b
+    let mut loss = 0.0f64;
+    let mut dlogits = vec![0.0f32; b * MNIST_CLASSES];
+    let mut logp = vec![0.0f32; MNIST_CLASSES];
+    for bi in 0..b {
+        let row = &logits[bi * MNIST_CLASSES..(bi + 1) * MNIST_CLASSES];
+        let label = labels[bi] as usize;
+        if label >= MNIST_CLASSES {
+            bail!("label {label} out of range");
+        }
+        log_softmax_row(row, &mut logp);
+        loss -= logp[label] as f64;
+        let drow = &mut dlogits[bi * MNIST_CLASSES..(bi + 1) * MNIST_CLASSES];
+        drow.copy_from_slice(row);
+        softmax_row(drow);
+        drow[label] -= 1.0;
+        for v in drow.iter_mut() {
+            *v /= b as f32;
+        }
+    }
+    loss /= b as f64;
+
+    // backward through head -> relu -> fc2 -> relu -> fc1
+    let (g_head, dh2) = head.backward(&h2, &dlogits, b, true)?;
+    let mut da2 = dh2.unwrap();
+    for (g, &a) in da2.iter_mut().zip(&a2) {
+        if a <= 0.0 {
+            *g = 0.0;
+        }
+    }
+    let (g_fc2, dh1) = fc2.backward(&h1, &da2, b, true)?;
+    let mut da1 = dh1.unwrap();
+    for (g, &a) in da1.iter_mut().zip(&a1) {
+        if a <= 0.0 {
+            *g = 0.0;
+        }
+    }
+    let (g_fc1, _) = fc1.backward(x, &da1, b, false)?;
+
+    let mut grads = g_fc1;
+    grads.extend(g_fc2);
+    grads.extend(g_head);
+    Ok((loss as f32, grads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::catalog::{self, mnist_param_specs};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Gradcheck the full MLP loss (DYAD variant) against finite
+    /// differences on a handful of parameters.
+    #[test]
+    fn mnist_grads_match_finite_difference() {
+        let variants = catalog::variants();
+        let var = VariantSpec::resolve(&variants["dyad_it"]).unwrap();
+        let specs = mnist_param_specs(&variants["dyad_it"]);
+        let names: Vec<String> = specs.iter().map(|(n, _, _)| n.clone()).collect();
+        let mut rng = Rng::new(0);
+        let params: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|(_, sh, init)| Tensor::init(sh, init, &mut rng).as_f32().unwrap().to_vec())
+            .collect();
+        let b = 4;
+        let x: Vec<f32> = (0..b * MNIST_IN).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let labels: Vec<i32> = (0..b as i32).collect();
+        let (loss, grads) =
+            mnist_loss_and_grads(&var, &names, &params, &x, &labels, b).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grads.len(), params.len());
+        let h = 2e-2f32;
+        // probe a few entries of a few tensors (fc1.wl, fc1.b, fc2.wu,
+        // head.w) — indices into the spec-order param list
+        for (pi, idx) in [(0usize, 5usize), (2, 3), (4, 10), (6, 7)] {
+            let mut pp: Vec<Vec<f32>> = params.clone();
+            pp[pi][idx] += h;
+            let (lp, _) = mnist_loss_and_grads(&var, &names, &pp, &x, &labels, b).unwrap();
+            let mut pm: Vec<Vec<f32>> = params.clone();
+            pm[pi][idx] -= h;
+            let (lm, _) = mnist_loss_and_grads(&var, &names, &pm, &x, &labels, b).unwrap();
+            let fd = (lp - lm) / (2.0 * h);
+            let an = grads[pi][idx];
+            assert!(
+                (an - fd).abs() < 5e-2 * (1.0 + fd.abs()),
+                "param {pi} idx {idx}: analytic {an} vs fd {fd}"
+            );
+        }
+    }
+}

@@ -1,0 +1,368 @@
+//! The native CPU backend: pure-Rust execution of the artifact
+//! catalog, no PJRT, no files on disk.
+//!
+//! `NativeBackend` serves the same manifest inventory as `make
+//! artifacts` (see `runtime::catalog`); `load` resolves each artifact
+//! kind to a typed program at load time and `run` executes it on host
+//! tensors via `dyad::kernel`'s parallel blocked matmuls and the fused
+//! DYAD forward.
+//!
+//! Supported natively: `score`, `features`, `next_logits`, `eval_loss`
+//! (transformer inference), the full MNIST probe (`mnist_train` with
+//! in-loop Adam, `mnist_accuracy`, `mnist_hidden_fwd`) and the
+//! ff-micro timing programs (`ff_fwd`, `ff_fwdbwd`). Transformer
+//! `train_step` requires the XLA backend — native transformer backprop
+//! is a ROADMAP item and `load` fails actionably until then.
+
+mod ff;
+mod linear;
+mod mlp;
+mod ops;
+mod params;
+mod transformer;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dyad::Variant;
+use crate::tensor::Tensor;
+
+use super::artifact::{ArchCfg, ArtifactSpec, Manifest, Role, VariantCfg};
+use super::backend::{validate_inputs, Backend, Executable};
+use super::catalog::{self, ADAM, MNIST_IN};
+
+pub use linear::LinearView;
+pub use params::Params;
+
+/// A resolved ff-layer variant: dense or DYAD with parsed permutation
+/// variants (including a per-layer §4 heterogeneous schedule).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub dense: bool,
+    pub n_dyad: usize,
+    pub base: Variant,
+    pub schedule: Vec<Variant>,
+}
+
+impl VariantSpec {
+    pub fn resolve(cfg: &VariantCfg) -> Result<VariantSpec> {
+        let base = Variant::from_str(&cfg.dyad_variant)?;
+        let schedule = cfg
+            .layer_schedule
+            .iter()
+            .map(|s| Variant::from_str(s))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(VariantSpec {
+            dense: cfg.kind == "dense",
+            n_dyad: cfg.n_dyad,
+            base,
+            schedule,
+        })
+    }
+
+    pub fn for_layer(&self, layer: usize) -> Variant {
+        if self.schedule.is_empty() {
+            self.base
+        } else {
+            self.schedule[layer % self.schedule.len()]
+        }
+    }
+
+    /// Build a [`LinearView`] over named parameters (`prefix.w`/`.b`
+    /// for dense, `prefix.wl`/`.wu`/`.b` for DYAD).
+    pub fn linear_view<'a>(
+        &self,
+        p: &Params<'a>,
+        prefix: &str,
+        f_in: usize,
+        f_out: usize,
+        layer: usize,
+    ) -> Result<LinearView<'a>> {
+        if self.dense {
+            Ok(LinearView::Dense {
+                w: p.f32(&format!("{prefix}.w"))?,
+                b: p.f32(&format!("{prefix}.b"))?,
+                f_in,
+                f_out,
+            })
+        } else {
+            Ok(LinearView::Dyad {
+                wl: p.f32(&format!("{prefix}.wl"))?,
+                wu: p.f32(&format!("{prefix}.wu"))?,
+                b: p.f32(&format!("{prefix}.b"))?,
+                dims: crate::dyad::DyadDims::new(self.n_dyad, f_in, f_out)?,
+                variant: self.for_layer(layer),
+            })
+        }
+    }
+}
+
+/// What a loaded native artifact executes.
+enum Prog {
+    Score { arch: ArchCfg, var: VariantSpec },
+    Features { arch: ArchCfg, var: VariantSpec },
+    NextLogits { arch: ArchCfg, var: VariantSpec },
+    EvalLoss { arch: ArchCfg, var: VariantSpec },
+    MnistTrain { var: VariantSpec },
+    MnistAccuracy { var: VariantSpec },
+    MnistHiddenFwd { var: VariantSpec },
+    FfFwd { d: usize, ff: usize, var: VariantSpec },
+    FfFwdBwd { d: usize, ff: usize, var: VariantSpec },
+}
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<NativeExe>>>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend {
+            manifest: catalog::native_manifest(),
+            cache: RefCell::new(HashMap::new()),
+        }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, name: &str) -> Result<Rc<dyn Executable>> {
+        if let Some(hit) = self.cache.borrow().get(name) {
+            let as_dyn: Rc<dyn Executable> = hit.clone();
+            return Ok(as_dyn);
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let prog = resolve(&spec, &self.manifest)
+            .with_context(|| format!("native backend: load {name}"))?;
+        let exe = Rc::new(NativeExe { spec, prog });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn platform(&self) -> String {
+        format!("native-cpu ({} threads)", crate::dyad::kernel::num_threads())
+    }
+}
+
+fn resolve(spec: &ArtifactSpec, manifest: &Manifest) -> Result<Prog> {
+    let var_of = |key: &str| -> Result<VariantSpec> {
+        let vname = spec.meta.req(key)?.as_str()?;
+        VariantSpec::resolve(manifest.variant(vname)?)
+    };
+    let arch_of = || -> Result<ArchCfg> {
+        let aname = spec.meta.req("arch")?.as_str()?;
+        Ok(manifest.arch(aname)?.clone())
+    };
+    Ok(match spec.kind.as_str() {
+        "score" => Prog::Score { arch: arch_of()?, var: var_of("variant")? },
+        "features" => Prog::Features { arch: arch_of()?, var: var_of("variant")? },
+        "next_logits" => Prog::NextLogits { arch: arch_of()?, var: var_of("variant")? },
+        "eval_loss" => Prog::EvalLoss { arch: arch_of()?, var: var_of("variant")? },
+        "mnist_train" => Prog::MnistTrain { var: var_of("variant")? },
+        "mnist_accuracy" => Prog::MnistAccuracy { var: var_of("variant")? },
+        "mnist_hidden_fwd" => Prog::MnistHiddenFwd { var: var_of("variant")? },
+        "ff_fwd" => Prog::FfFwd {
+            d: spec.meta_usize("d_model")?,
+            ff: spec.meta_usize("d_ff")?,
+            var: var_of("variant")?,
+        },
+        "ff_fwdbwd" => Prog::FfFwdBwd {
+            d: spec.meta_usize("d_model")?,
+            ff: spec.meta_usize("d_ff")?,
+            var: var_of("variant")?,
+        },
+        "train_step" => bail!(
+            "transformer train_step is not implemented on the native \
+             backend yet; use the xla backend (`--backend xla`, built \
+             with `--features xla`) for LM pretraining"
+        ),
+        k => bail!("native backend cannot execute artifact kind {k:?}"),
+    })
+}
+
+pub struct NativeExe {
+    spec: ArtifactSpec,
+    prog: Prog,
+}
+
+impl NativeExe {
+    fn data<'a>(&self, inputs: &'a [&'a Tensor]) -> Vec<&'a Tensor> {
+        self.spec
+            .inputs
+            .iter()
+            .zip(inputs)
+            .filter(|(io, _)| io.role == Role::Data)
+            .map(|(_, t)| *t)
+            .collect()
+    }
+
+    fn scalar(&self, inputs: &[&Tensor], name: &str) -> Result<f32> {
+        for (io, t) in self.spec.inputs.iter().zip(inputs) {
+            if io.role == Role::Scalar && io.name == name {
+                return t.scalar_value_f32();
+            }
+        }
+        bail!("{}: no scalar input {name:?}", self.spec.name)
+    }
+}
+
+impl Executable for NativeExe {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        validate_inputs(&self.spec, inputs)?;
+        let p = Params::new(&self.spec, inputs);
+        let data = self.data(inputs);
+        match &self.prog {
+            Prog::Score { arch, var } => {
+                let (b, s) = (data[0].shape[0], data[0].shape[1]);
+                let lm = transformer::Lm { arch, var, p };
+                let (sums, counts) = lm.score(data[0].as_i32()?, data[1].as_f32()?, b, s)?;
+                Ok(vec![Tensor::from_f32(&[b], sums)?, Tensor::from_f32(&[b], counts)?])
+            }
+            Prog::Features { arch, var } => {
+                let (b, s) = (data[0].shape[0], data[0].shape[1]);
+                let lm = transformer::Lm { arch, var, p };
+                let feats = lm.features(data[0].as_i32()?, data[1].as_f32()?, b, s)?;
+                Ok(vec![Tensor::from_f32(&[b, arch.d_model], feats)?])
+            }
+            Prog::NextLogits { arch, var } => {
+                let (b, s) = (data[0].shape[0], data[0].shape[1]);
+                let lm = transformer::Lm { arch, var, p };
+                let logits = lm.next_logits(data[0].as_i32()?, data[1].as_i32()?, b, s)?;
+                Ok(vec![Tensor::from_f32(&[b, arch.vocab], logits)?])
+            }
+            Prog::EvalLoss { arch, var } => {
+                let (b, s) = (data[0].shape[0], data[0].shape[1]);
+                let lm = transformer::Lm { arch, var, p };
+                let loss = lm.eval_loss(data[0].as_i32()?, b, s)?;
+                Ok(vec![Tensor::scalar_f32(loss)])
+            }
+            Prog::MnistTrain { var } => self.run_mnist_train(var, inputs, &data),
+            Prog::MnistAccuracy { var } => {
+                let b = data[0].shape[0];
+                let mlp = mlp::Mlp { var, p };
+                let n = mlp.n_correct(data[0].as_f32()?, data[1].as_i32()?, b)?;
+                Ok(vec![Tensor::scalar_i32(n)])
+            }
+            Prog::MnistHiddenFwd { var } => {
+                let b = data[0].shape[0];
+                let mlp = mlp::Mlp { var, p };
+                let h = mlp.hidden(data[0].as_f32()?, b)?;
+                Ok(vec![Tensor::from_f32(&self.spec.outputs[0].shape, h)?])
+            }
+            Prog::FfFwd { d, ff, var } => {
+                let t = data[0].shape[0];
+                let f = ff::Ff { d: *d, ff: *ff, var, p };
+                let y = f.forward(data[0].as_f32()?, t)?;
+                Ok(vec![Tensor::from_f32(&[t, *d], y)?])
+            }
+            Prog::FfFwdBwd { d, ff, var } => {
+                let t = data[0].shape[0];
+                let f = ff::Ff { d: *d, ff: *ff, var, p };
+                let (loss, grads) = f.fwdbwd(data[0].as_f32()?, data[1].as_f32()?, t)?;
+                let mut out = vec![Tensor::scalar_f32(loss)];
+                for (g, io) in grads.into_iter().zip(self.spec.outputs.iter().skip(1)) {
+                    out.push(Tensor::from_f32(&io.shape, g)?);
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+impl NativeExe {
+    /// The MNIST train-step state machine: K microbatches of
+    /// loss/grads + Adam, mirroring `mnist.py::make_mnist_train_step`
+    /// (bias-corrected Adam, no grad clip, uniform lr across the K
+    /// inner steps).
+    fn run_mnist_train(
+        &self,
+        var: &VariantSpec,
+        inputs: &[&Tensor],
+        data: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let spec = &self.spec;
+        // split positional inputs into state / scalars / data by role
+        let mut names: Vec<String> = Vec::new();
+        let mut params: Vec<Vec<f32>> = Vec::new();
+        let mut m: Vec<Vec<f32>> = Vec::new();
+        let mut v: Vec<Vec<f32>> = Vec::new();
+        for (io, t) in spec.inputs.iter().zip(inputs) {
+            match io.role {
+                Role::Param => {
+                    names.push(io.name.clone());
+                    params.push(t.as_f32()?.to_vec());
+                }
+                Role::OptM => m.push(t.as_f32()?.to_vec()),
+                Role::OptV => v.push(t.as_f32()?.to_vec()),
+                _ => {}
+            }
+        }
+        let mut step = self.scalar(inputs, "step")?;
+        let lr = self.scalar(inputs, "lr")?;
+        let images = data[0];
+        let labels = data[1];
+        let (k, b) = (images.shape[0], images.shape[1]);
+        let img = images.as_f32()?;
+        let lab = labels.as_i32()?;
+        let mut losses = Vec::with_capacity(k);
+        for ki in 0..k {
+            let x = &img[ki * b * MNIST_IN..(ki + 1) * b * MNIST_IN];
+            let y = &lab[ki * b..(ki + 1) * b];
+            let (loss, grads) = mlp::mnist_loss_and_grads(var, &names, &params, x, y, b)?;
+            losses.push(loss);
+            step += 1.0;
+            adam_update(&mut params, &mut m, &mut v, &grads, step, lr);
+        }
+        // outputs: params ++ m ++ v ++ step ++ losses, at spec shapes
+        let mut out = Vec::with_capacity(spec.outputs.len());
+        for (i, vals) in params.into_iter().chain(m).chain(v).enumerate() {
+            out.push(Tensor::from_f32(&spec.outputs[i].shape, vals)?);
+        }
+        out.push(Tensor::scalar_f32(step));
+        out.push(Tensor::from_f32(&[k], losses)?);
+        Ok(out)
+    }
+}
+
+/// One bias-corrected Adam step over every parameter tensor.
+fn adam_update(
+    params: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    step: f32,
+    lr: f32,
+) {
+    let (b1, b2, eps) = (ADAM.b1 as f32, ADAM.b2 as f32, ADAM.eps as f32);
+    let ms = (1.0 / (1.0 - ADAM.b1.powf(step as f64))) as f32;
+    let vs = (1.0 / (1.0 - ADAM.b2.powf(step as f64))) as f32;
+    for ((p, mi), (vi, g)) in params
+        .iter_mut()
+        .zip(m.iter_mut())
+        .zip(v.iter_mut().zip(grads))
+    {
+        for ((pv, mv), (vv, gv)) in
+            p.iter_mut().zip(mi.iter_mut()).zip(vi.iter_mut().zip(g))
+        {
+            *mv = b1 * *mv + (1.0 - b1) * gv;
+            *vv = b2 * *vv + (1.0 - b2) * gv * gv;
+            *pv -= lr * (*mv * ms) / ((*vv * vs).sqrt() + eps);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Elementwise / normalisation primitives shared by the native model
+//! implementations. All row-major, f32, matching the L2 JAX semantics
+//! (tanh-approximate GELU, population-variance LayerNorm, eps 1e-5).
+
+/// jax.nn.gelu (approximate=True): 0.5x(1 + tanh(c(x + a x^3))).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    const A: f32 = 0.044715;
+    0.5 * x * (1.0 + (C * (x + A * x * x * x)).tanh())
+}
+
+/// d/dx of the tanh-approximate GELU.
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    const A: f32 = 0.044715;
+    let u = C * (x + A * x * x * x);
+    let t = u.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * A * x * x)
+}
+
+pub fn gelu_inplace(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+pub fn relu_inplace(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// LayerNorm over the last axis of row-major `(rows, d)`:
+/// `(x - mean) / sqrt(var + eps) * scale + bias`, population variance.
+pub fn layer_norm(x: &mut [f32], d: usize, scale: &[f32], bias: &[f32]) {
+    const EPS: f32 = 1e-5;
+    assert_eq!(scale.len(), d);
+    assert_eq!(bias.len(), d);
+    for row in x.chunks_mut(d) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for (v, (&sc, &b)) in row.iter_mut().zip(scale.iter().zip(bias)) {
+            *v = (*v - mean) * inv * sc + b;
+        }
+    }
+}
+
+/// In-place softmax over one row.
+pub fn softmax_row(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// log-softmax of one row into `out`.
+pub fn log_softmax_row(row: &[f32], out: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for &v in row {
+        sum += (v - max).exp();
+    }
+    let lse = max + sum.ln();
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = v - lse;
+    }
+}
+
+/// Column sums of a row-major `(rows, n)` matrix (bias gradients).
+pub fn col_sums(x: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for row in x.chunks(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_known_values() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        // large |x|: identity / zero asymptotes
+        assert!((gelu(6.0) - 6.0).abs() < 1e-4);
+        assert!(gelu(-6.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-3.0f32, -1.0, -0.3, 0.0, 0.4, 1.2, 2.5] {
+            let h = 1e-3f32;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            let an = gelu_grad(x);
+            assert!((fd - an).abs() < 1e-3, "x={x}: fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn layer_norm_normalises() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        let scale = vec![1.0; 4];
+        let bias = vec![0.0; 4];
+        layer_norm(&mut x, 4, &scale, &bias);
+        let mean: f32 = x.iter().sum::<f32>() / 4.0;
+        let var: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_and_log_softmax_agree() {
+        let row = vec![0.5f32, -1.0, 2.0, 0.0];
+        let mut sm = row.clone();
+        softmax_row(&mut sm);
+        assert!((sm.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        let mut lsm = vec![0.0; 4];
+        log_softmax_row(&row, &mut lsm);
+        for (a, b) in sm.iter().zip(&lsm) {
+            assert!((a.ln() - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Name-indexed view over an artifact's positional parameter inputs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifact::{ArtifactSpec, Role};
+use crate::tensor::Tensor;
+
+pub struct Params<'a> {
+    map: BTreeMap<&'a str, &'a Tensor>,
+}
+
+impl<'a> Params<'a> {
+    /// Pick the `Role::Param` inputs out of a full positional input set.
+    pub fn new(spec: &'a ArtifactSpec, inputs: &'a [&'a Tensor]) -> Params<'a> {
+        let mut map = BTreeMap::new();
+        for (io, t) in spec.inputs.iter().zip(inputs) {
+            if io.role == Role::Param {
+                map.insert(io.name.as_str(), *t);
+            }
+        }
+        Params { map }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&'a Tensor> {
+        self.map
+            .get(name)
+            .copied()
+            .with_context(|| format!("no parameter named {name:?}"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&'a [f32]> {
+        self.get(name)?.as_f32()
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&'a [usize]> {
+        Ok(&self.get(name)?.shape)
+    }
+}

@@ -1,0 +1,290 @@
+//! Native decoder-only transformer forward — the pure-Rust mirror of
+//! `python/compile/model.py` (pre-LN, tied embeddings, learned
+//! positions, tanh-GELU ff, optional Pythia parallel residual).
+//!
+//! Inference only: `score`, `features`, `next_logits` and `eval_loss`
+//! run here; transformer *training* stays on the XLA backend (native
+//! transformer backprop is a ROADMAP item). Attention parallelises
+//! over (batch, head) pairs; linears ride on `dyad::kernel`.
+
+use anyhow::{bail, Result};
+
+use crate::dyad::kernel::{axpy, dense_linear, dot, matmul_bt, num_threads, parallel_rows};
+use crate::runtime::artifact::ArchCfg;
+
+use super::ops::{gelu_inplace, layer_norm, log_softmax_row, softmax_row};
+use super::params::Params;
+use super::VariantSpec;
+
+pub struct Lm<'a> {
+    pub arch: &'a ArchCfg,
+    pub var: &'a VariantSpec,
+    pub p: Params<'a>,
+}
+
+impl Lm<'_> {
+    /// `(b, s)` int32 tokens -> `(b*s, d)` final hidden states.
+    pub fn hidden(&self, tokens: &[i32], b: usize, s: usize) -> Result<Vec<f32>> {
+        let arch = self.arch;
+        let d = arch.d_model;
+        if tokens.len() != b * s {
+            bail!("tokens len {} != {b}x{s}", tokens.len());
+        }
+        if s > arch.seq {
+            bail!("sequence length {s} exceeds arch seq {}", arch.seq);
+        }
+        let tok_emb = self.p.f32("tok_emb")?;
+        let pos_emb = self.p.f32("pos_emb")?;
+        let mut x = vec![0.0f32; b * s * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= arch.vocab {
+                bail!("token id {tok} out of vocab {}", arch.vocab);
+            }
+            let row = &mut x[t * d..(t + 1) * d];
+            let e = &tok_emb[tok * d..(tok + 1) * d];
+            let p = &pos_emb[(t % s) * d..(t % s + 1) * d];
+            for j in 0..d {
+                row[j] = e[j] + p[j];
+            }
+        }
+        for l in 0..arch.n_layers {
+            let pref = format!("layer{l}");
+            if arch.parallel_residual {
+                let mut h1 = x.clone();
+                layer_norm(
+                    &mut h1,
+                    d,
+                    self.p.f32(&format!("{pref}.ln1.scale"))?,
+                    self.p.f32(&format!("{pref}.ln1.bias"))?,
+                );
+                let mut h2 = x.clone();
+                layer_norm(
+                    &mut h2,
+                    d,
+                    self.p.f32(&format!("{pref}.ln2.scale"))?,
+                    self.p.f32(&format!("{pref}.ln2.bias"))?,
+                );
+                let att = self.attention(&h1, &format!("{pref}.attn"), b, s)?;
+                let ff = self.ff(&h2, &pref, l, b * s)?;
+                for i in 0..x.len() {
+                    x[i] += att[i] + ff[i];
+                }
+            } else {
+                let mut h = x.clone();
+                layer_norm(
+                    &mut h,
+                    d,
+                    self.p.f32(&format!("{pref}.ln1.scale"))?,
+                    self.p.f32(&format!("{pref}.ln1.bias"))?,
+                );
+                let att = self.attention(&h, &format!("{pref}.attn"), b, s)?;
+                for i in 0..x.len() {
+                    x[i] += att[i];
+                }
+                let mut h = x.clone();
+                layer_norm(
+                    &mut h,
+                    d,
+                    self.p.f32(&format!("{pref}.ln2.scale"))?,
+                    self.p.f32(&format!("{pref}.ln2.bias"))?,
+                );
+                let ff = self.ff(&h, &pref, l, b * s)?;
+                for i in 0..x.len() {
+                    x[i] += ff[i];
+                }
+            }
+        }
+        layer_norm(
+            &mut x,
+            d,
+            self.p.f32("final_ln.scale")?,
+            self.p.f32("final_ln.bias")?,
+        );
+        Ok(x)
+    }
+
+    /// Causal multi-head attention on `(b*s, d)` rows.
+    fn attention(&self, x: &[f32], prefix: &str, b: usize, s: usize) -> Result<Vec<f32>> {
+        let arch = self.arch;
+        let (d, nh) = (arch.d_model, arch.n_heads);
+        let hd = arch.head_dim();
+        let bs = b * s;
+        let proj = |name: &str| -> Result<Vec<f32>> {
+            let w = self.p.f32(&format!("{prefix}.{name}"))?;
+            let bias = self.p.f32(&format!("{prefix}.{name}_b"))?;
+            Ok(dense_linear(x, w, Some(bias), bs, d, d))
+        };
+        let q = proj("wq")?;
+        let k = proj("wk")?;
+        let v = proj("wv")?;
+        // reorder (bs, d) -> (b*nh, s, hd) so each (batch, head) pair is
+        // one contiguous task
+        let to_heads = |m: &[f32]| -> Vec<f32> {
+            let mut out = vec![0.0f32; bs * d];
+            for bi in 0..b {
+                for t in 0..s {
+                    let src = &m[(bi * s + t) * d..(bi * s + t + 1) * d];
+                    for h in 0..nh {
+                        let dst = ((bi * nh + h) * s + t) * hd;
+                        out[dst..dst + hd].copy_from_slice(&src[h * hd..(h + 1) * hd]);
+                    }
+                }
+            }
+            out
+        };
+        let qh = to_heads(&q);
+        let kh = to_heads(&k);
+        let vh = to_heads(&v);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut ctx = vec![0.0f32; bs * d];
+        // one row per (batch, head): the full s x hd context block
+        parallel_rows(&mut ctx, s * hd, num_threads(), &|bh, row| {
+            let qb = &qh[bh * s * hd..(bh + 1) * s * hd];
+            let kb = &kh[bh * s * hd..(bh + 1) * s * hd];
+            let vb = &vh[bh * s * hd..(bh + 1) * s * hd];
+            let mut att = vec![0.0f32; s];
+            for ti in 0..s {
+                let qrow = &qb[ti * hd..(ti + 1) * hd];
+                for (tj, a) in att.iter_mut().enumerate().take(ti + 1) {
+                    *a = dot(qrow, &kb[tj * hd..(tj + 1) * hd]) * scale;
+                }
+                softmax_row(&mut att[..ti + 1]);
+                let orow = &mut row[ti * hd..(ti + 1) * hd];
+                for tj in 0..=ti {
+                    axpy(orow, att[tj], &vb[tj * hd..(tj + 1) * hd]);
+                }
+            }
+        });
+        // back to (bs, d) then the output projection
+        let mut merged = vec![0.0f32; bs * d];
+        for bi in 0..b {
+            for t in 0..s {
+                let dst = &mut merged[(bi * s + t) * d..(bi * s + t + 1) * d];
+                for h in 0..nh {
+                    let src = ((bi * nh + h) * s + t) * hd;
+                    dst[h * hd..(h + 1) * hd].copy_from_slice(&ctx[src..src + hd]);
+                }
+            }
+        }
+        let wo = self.p.f32(&format!("{prefix}.wo"))?;
+        let wo_b = self.p.f32(&format!("{prefix}.wo_b"))?;
+        Ok(dense_linear(&merged, wo, Some(wo_b), bs, d, d))
+    }
+
+    /// The paper's swap site: fc1 -> GELU -> fc2 on `(t, d)` rows.
+    fn ff(&self, x: &[f32], layer_prefix: &str, layer: usize, t: usize) -> Result<Vec<f32>> {
+        let (d, ff) = (self.arch.d_model, self.arch.d_ff);
+        let fc1 = self
+            .var
+            .linear_view(&self.p, &format!("{layer_prefix}.ff.fc1"), d, ff, layer)?;
+        let fc2 = self
+            .var
+            .linear_view(&self.p, &format!("{layer_prefix}.ff.fc2"), ff, d, layer)?;
+        let mut h = fc1.forward(x, t);
+        gelu_inplace(&mut h);
+        Ok(fc2.forward(&h, t))
+    }
+
+    /// Tied-head logits for every position: `(b*s, vocab)`.
+    fn logits(&self, hidden: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let tok_emb = self.p.f32("tok_emb")?;
+        Ok(matmul_bt(hidden, tok_emb, rows, self.arch.d_model, self.arch.vocab))
+    }
+
+    /// `score` artifact: masked summed token log-prob + token counts.
+    pub fn score(
+        &self,
+        tokens: &[i32],
+        mask: &[f32],
+        b: usize,
+        s: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let h = self.hidden(tokens, b, s)?;
+        let vocab = self.arch.vocab;
+        let logits = self.logits(&h, b * s)?;
+        let mut sums = vec![0.0f32; b];
+        let mut counts = vec![0.0f32; b];
+        let mut logp = vec![0.0f32; vocab];
+        for bi in 0..b {
+            for t in 0..s - 1 {
+                let m = mask[bi * s + t + 1];
+                if m == 0.0 {
+                    continue;
+                }
+                let row = &logits[(bi * s + t) * vocab..(bi * s + t + 1) * vocab];
+                log_softmax_row(row, &mut logp);
+                let tgt = tokens[bi * s + t + 1] as usize;
+                sums[bi] += logp[tgt] * m;
+                counts[bi] += m;
+            }
+        }
+        Ok((sums, counts))
+    }
+
+    /// `eval_loss` artifact: mean next-token cross-entropy.
+    pub fn eval_loss(&self, tokens: &[i32], b: usize, s: usize) -> Result<f32> {
+        let h = self.hidden(tokens, b, s)?;
+        let vocab = self.arch.vocab;
+        let logits = self.logits(&h, b * s)?;
+        let mut total = 0.0f64;
+        let mut logp = vec![0.0f32; vocab];
+        for bi in 0..b {
+            for t in 0..s - 1 {
+                let row = &logits[(bi * s + t) * vocab..(bi * s + t + 1) * vocab];
+                log_softmax_row(row, &mut logp);
+                total -= logp[tokens[bi * s + t + 1] as usize] as f64;
+            }
+        }
+        Ok((total / (b * (s - 1)) as f64) as f32)
+    }
+
+    /// `features` artifact: masked mean-pooled hidden states `(b, d)`.
+    pub fn features(
+        &self,
+        tokens: &[i32],
+        mask: &[f32],
+        b: usize,
+        s: usize,
+    ) -> Result<Vec<f32>> {
+        let d = self.arch.d_model;
+        let h = self.hidden(tokens, b, s)?;
+        let mut out = vec![0.0f32; b * d];
+        for bi in 0..b {
+            let orow = &mut out[bi * d..(bi + 1) * d];
+            let mut msum = 0.0f32;
+            for t in 0..s {
+                let m = mask[bi * s + t];
+                if m != 0.0 {
+                    axpy(orow, m, &h[(bi * s + t) * d..(bi * s + t + 1) * d]);
+                    msum += m;
+                }
+            }
+            let denom = msum.max(1.0);
+            for v in orow.iter_mut() {
+                *v /= denom;
+            }
+        }
+        Ok(out)
+    }
+
+    /// `next_logits` artifact: logits at each sequence's last real
+    /// position, `(b, vocab)`.
+    pub fn next_logits(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        b: usize,
+        s: usize,
+    ) -> Result<Vec<f32>> {
+        let d = self.arch.d_model;
+        let h = self.hidden(tokens, b, s)?;
+        let mut last = vec![0.0f32; b * d];
+        for bi in 0..b {
+            let idx = (lengths[bi].max(1) - 1).min(s as i32 - 1) as usize;
+            last[bi * d..(bi + 1) * d]
+                .copy_from_slice(&h[(bi * s + idx) * d..(bi * s + idx + 1) * d]);
+        }
+        self.logits(&last, b)
+    }
+}

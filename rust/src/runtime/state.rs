@@ -1,21 +1,21 @@
 //! Training state carried between `train_step` executions.
 //!
-//! Holds params / Adam-m / Adam-v as staged `xla::Literal`s plus the
-//! float step counter. One PJRT call advances K optimizer steps (the
-//! artifact's inner microbatch scan); between calls the state literals
-//! are threaded straight back in — no host `Vec<f32>` round trip
-//! (DESIGN.md §8).
+//! Holds params / Adam-m / Adam-v as host [`Tensor`]s plus the float
+//! step counter, and threads them through any [`Executable`] backend.
+//! One call advances K optimizer steps (the artifact's inner
+//! microbatch scan); the coordinator recomputes the LR schedule
+//! between calls.
 
 use anyhow::{bail, Context, Result};
 
 use super::artifact::{ArtifactSpec, Role};
-use super::engine::{literal_to_tensor, tensor_to_literal, Loaded};
+use super::backend::Executable;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 pub struct TrainState {
     /// params ++ m ++ v, in manifest feed order.
-    lits: Vec<xla::Literal>,
+    tensors: Vec<Tensor>,
     pub step: f32,
     n_params: usize,
 }
@@ -25,7 +25,7 @@ impl TrainState {
     /// (optimizer moments). Deterministic in `seed`.
     pub fn init(spec: &ArtifactSpec, seed: u64) -> Result<TrainState> {
         let mut rng = Rng::new(seed);
-        let mut lits = Vec::new();
+        let mut tensors = Vec::new();
         let mut n_params = 0;
         for io in &spec.inputs {
             match io.role {
@@ -34,18 +34,16 @@ impl TrainState {
                         .init
                         .as_ref()
                         .with_context(|| format!("param {} has no init", io.name))?;
-                    let t = Tensor::init(&io.shape, init, &mut rng);
-                    lits.push(tensor_to_literal(&t, io)?);
+                    tensors.push(Tensor::init(&io.shape, init, &mut rng));
                     n_params += 1;
                 }
                 Role::OptM | Role::OptV => {
-                    let t = Tensor::zeros(&io.shape, io.dtype);
-                    lits.push(tensor_to_literal(&t, io)?);
+                    tensors.push(Tensor::zeros(&io.shape, io.dtype));
                 }
                 _ => {}
             }
         }
-        Ok(TrainState { lits, step: 0.0, n_params })
+        Ok(TrainState { tensors, step: 0.0, n_params })
     }
 
     /// Restore from named checkpoint tensors (see [`TrainState::to_tensors`]).
@@ -55,7 +53,7 @@ impl TrainState {
     ) -> Result<TrainState> {
         let map: std::collections::BTreeMap<&str, &Tensor> =
             entries.iter().map(|(n, t)| (n.as_str(), t)).collect();
-        let mut lits = Vec::new();
+        let mut tensors = Vec::new();
         let mut n_params = 0;
         for io in &spec.inputs {
             match io.role {
@@ -63,7 +61,15 @@ impl TrainState {
                     let t = map.get(io.name.as_str()).with_context(|| {
                         format!("checkpoint missing tensor {:?}", io.name)
                     })?;
-                    lits.push(tensor_to_literal(t, io)?);
+                    if t.shape != io.shape {
+                        bail!(
+                            "checkpoint tensor {:?}: shape {:?} != manifest {:?}",
+                            io.name,
+                            t.shape,
+                            io.shape
+                        );
+                    }
+                    tensors.push((*t).clone());
                     if io.role == Role::Param {
                         n_params += 1;
                     }
@@ -76,7 +82,7 @@ impl TrainState {
             .map(|t| t.scalar_value_f32())
             .transpose()?
             .unwrap_or(0.0);
-        Ok(TrainState { lits, step, n_params })
+        Ok(TrainState { tensors, step, n_params })
     }
 
     pub fn n_params(&self) -> usize {
@@ -88,12 +94,12 @@ impl TrainState {
     /// state from the output tuple, returns the per-microbatch losses.
     pub fn train_call(
         &mut self,
-        art: &Loaded,
+        art: &dyn Executable,
         lr: f32,
         data: &[Tensor],
     ) -> Result<Vec<f32>> {
-        let spec = &art.spec;
-        let n_state = self.lits.len();
+        let spec = art.spec();
+        let n_state = self.tensors.len();
         let data_specs: Vec<_> = spec
             .inputs
             .iter()
@@ -107,27 +113,22 @@ impl TrainState {
                 data_specs.len()
             );
         }
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(spec.inputs.len());
-        let step_lit = xla::Literal::scalar(self.step);
-        let lr_lit = xla::Literal::scalar(lr);
-        let data_lits: Vec<xla::Literal> = data
-            .iter()
-            .zip(&data_specs)
-            .map(|(t, s)| tensor_to_literal(t, s))
-            .collect::<Result<_>>()?;
+        let step_t = Tensor::scalar_f32(self.step);
+        let lr_t = Tensor::scalar_f32(lr);
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(spec.inputs.len());
         let mut state_i = 0;
         let mut data_i = 0;
         for io in &spec.inputs {
             match io.role {
                 Role::Param | Role::OptM | Role::OptV => {
-                    inputs.push(&self.lits[state_i]);
+                    inputs.push(&self.tensors[state_i]);
                     state_i += 1;
                 }
                 Role::Scalar => {
-                    inputs.push(if io.name == "step" { &step_lit } else { &lr_lit });
+                    inputs.push(if io.name == "step" { &step_t } else { &lr_t });
                 }
                 Role::Data => {
-                    inputs.push(&data_lits[data_i]);
+                    inputs.push(&data[data_i]);
                     data_i += 1;
                 }
             }
@@ -139,7 +140,7 @@ impl TrainState {
                 spec.name
             );
         }
-        let mut outputs = art.run_literals(&inputs)?;
+        let mut outputs = art.run(&inputs)?;
         // outputs: params ++ m ++ v ++ step ++ losses
         if outputs.len() != n_state + 2 {
             bail!(
@@ -149,18 +150,17 @@ impl TrainState {
                 outputs.len()
             );
         }
-        let losses_lit = outputs.pop().unwrap();
-        let step_out = outputs.pop().unwrap();
-        self.step = step_out.to_vec::<f32>()?[0];
-        self.lits = outputs;
-        let losses = losses_lit.to_vec::<f32>()?;
-        Ok(losses)
+        let losses_t = outputs.pop().unwrap();
+        let step_t = outputs.pop().unwrap();
+        self.step = step_t.scalar_value_f32()?;
+        self.tensors = outputs;
+        Ok(losses_t.as_f32()?.to_vec())
     }
 
-    /// Borrow the parameter literals (feed order) for eval executables
+    /// Borrow the parameter tensors (feed order) for eval executables
     /// that take only params + data.
-    pub fn param_literals(&self) -> &[xla::Literal] {
-        &self.lits[..self.n_params]
+    pub fn param_tensors(&self) -> &[Tensor] {
+        &self.tensors[..self.n_params]
     }
 
     /// Export the full state as named host tensors for checkpointing.
@@ -169,7 +169,10 @@ impl TrainState {
         let mut i = 0;
         for io in &spec.inputs {
             if matches!(io.role, Role::Param | Role::OptM | Role::OptV) {
-                out.push((io.name.clone(), literal_to_tensor(&self.lits[i], io)?));
+                if i >= self.tensors.len() {
+                    bail!("state/spec mismatch exporting {:?}", io.name);
+                }
+                out.push((io.name.clone(), self.tensors[i].clone()));
                 i += 1;
             }
         }
@@ -185,7 +188,7 @@ impl TrainState {
     ) -> Result<Vec<(String, Tensor)>> {
         let mut out = Vec::new();
         for (i, io) in spec.param_specs().into_iter().enumerate() {
-            out.push((io.name.clone(), literal_to_tensor(&self.lits[i], io)?));
+            out.push((io.name.clone(), self.tensors[i].clone()));
         }
         Ok(out)
     }

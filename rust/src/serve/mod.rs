@@ -1,11 +1,12 @@
-//! Batched inference server: dynamic batcher over PJRT executables.
+//! Batched inference server: dynamic batcher over backend executables.
 //!
 //! The L3 "router" component: clients submit scoring or greedy-
-//! generation requests from any thread; a dedicated engine thread
-//! (xla handles are not Send) accumulates them into padded batches
-//! (up to `max_batch`, bounded by `window_ms`), executes one PJRT call
-//! per batch, and reports latency/throughput/occupancy statistics —
-//! the serving-shaped face of the DYAD speedup story.
+//! generation requests from any thread; a dedicated backend thread
+//! (backend handles are not Send) accumulates them into padded batches
+//! (up to `max_batch`, bounded by `window_ms`), executes one backend
+//! call per batch, and reports latency/throughput/occupancy statistics
+//! — the serving-shaped face of the DYAD speedup story. Runs on the
+//! native backend by default (`ServeConfig::backend`).
 
 mod batcher;
 mod server;

@@ -1,11 +1,11 @@
-//! The serving loop: engine-owning worker thread + request channels.
+//! The serving loop: backend-owning worker thread + request channels.
 //!
-//! xla handles are not `Send`, so the worker thread *creates* its own
-//! `Engine` and owns all literals; clients interact through mpsc
-//! channels. Scoring requests are dynamically batched (see `Batcher`);
-//! generation requests run a greedy decode loop over the
-//! `next_logits` artifact with all active generations stepped together
-//! (a miniature continuous batcher).
+//! Backend handles are not `Send` (the PJRT client isn't), so the
+//! worker thread *creates* its own backend from the config; clients
+//! interact through mpsc channels. Scoring requests are dynamically
+//! batched (see `Batcher`); generation requests run a greedy decode
+//! loop over the `next_logits` artifact with all active generations
+//! stepped together (a miniature continuous batcher).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -19,12 +19,15 @@ use super::stats::ServeStats;
 use crate::coordinator::checkpoint::CheckpointManager;
 use crate::data::dataset::pad_batch;
 use crate::eval::run_with_params;
-use crate::runtime::{Engine, TrainState};
+use crate::runtime::{open_backend, Backend, BackendKind, Executable, TrainState};
 use crate::tensor::Tensor;
 use crate::util::timer::Timer;
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Which execution backend the worker opens (native by default).
+    pub backend: BackendKind,
+    /// Artifact dir for the xla backend (unused by native).
     pub artifacts_dir: PathBuf,
     pub arch: String,
     pub variant: String,
@@ -38,6 +41,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
+            backend: BackendKind::Native,
             artifacts_dir: "artifacts".into(),
             arch: "opt-mini".into(),
             variant: "dyad_it".into(),
@@ -132,12 +136,12 @@ struct PendingScore {
 }
 
 fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
-    let engine = Engine::from_dir(&cfg.artifacts_dir)?;
-    let score_art = engine.load(&format!("{}/{}/score", cfg.arch, cfg.variant))?;
+    let backend = open_backend(cfg.backend, &cfg.artifacts_dir)?;
+    let score_art = backend.load(&format!("{}/{}/score", cfg.arch, cfg.variant))?;
     let logits_art =
-        engine.load(&format!("{}/{}/next_logits", cfg.arch, cfg.variant))?;
-    let train_spec = engine
-        .manifest
+        backend.load(&format!("{}/{}/next_logits", cfg.arch, cfg.variant))?;
+    let train_spec = backend
+        .manifest()
         .artifact(&format!("{}/{}/train_k1", cfg.arch, cfg.variant))?
         .clone();
     let state = match &cfg.checkpoint_dir {
@@ -152,8 +156,8 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
         None => TrainState::init(&train_spec, cfg.seed)?,
     };
 
-    let b = score_art.spec.meta_usize("batch")?;
-    let s = score_art.spec.meta_usize("seq")?;
+    let b = score_art.spec().meta_usize("batch")?;
+    let s = score_art.spec().meta_usize("seq")?;
     let mut batcher = Batcher::new(cfg.max_batch.min(b), cfg.window_ms);
     let mut queue: Vec<PendingScore> = Vec::new();
     let mut stats = ServeStats::default();
@@ -167,8 +171,8 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
         let t = Timer::start();
         let result = (|| -> Result<Vec<f64>> {
             let (tokens, mask) = pad_batch(&seqs, b, s)?;
-            let out = run_with_params(&score_art, &state, &[tokens, mask])?;
-            let sums = out[0].to_vec::<f32>()?;
+            let out = run_with_params(score_art.as_ref(), &state, &[tokens, mask])?;
+            let sums = out[0].as_f32()?;
             Ok(sums[..seqs.len()].iter().map(|&x| x as f64).collect())
         })();
         stats.exec_ms.push(t.elapsed_ms());
@@ -212,7 +216,7 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
                 batcher.flush();
                 flush(&mut queue, &mut stats);
                 let t = Instant::now();
-                let out = generate(&logits_art, &state, prompt, max_new, s);
+                let out = generate(logits_art.as_ref(), &state, prompt, max_new, s);
                 stats
                     .latencies_ms
                     .push(Instant::now().duration_since(t).as_secs_f64() * 1e3);
@@ -241,13 +245,13 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
 /// Greedy decode via the next_logits artifact (full-context recompute
 /// per token; fine at these scales, documented in DESIGN.md).
 fn generate(
-    art: &crate::runtime::Loaded,
+    art: &dyn Executable,
     state: &TrainState,
     prompt: Vec<i32>,
     max_new: usize,
     s: usize,
 ) -> Result<Vec<i32>> {
-    let b = art.spec.meta_usize("batch")?;
+    let b = art.spec().meta_usize("batch")?;
     let mut tokens = prompt;
     let mut out = Vec::new();
     for _ in 0..max_new {
@@ -260,7 +264,7 @@ fn generate(
         toks[..window.len()].copy_from_slice(&window);
         let mut lens = vec![1i32; b];
         lens[0] = window.len() as i32;
-        let lits = run_with_params(
+        let res = run_with_params(
             art,
             state,
             &[
@@ -268,8 +272,8 @@ fn generate(
                 Tensor::from_i32(&[b], lens)?,
             ],
         )?;
-        let logits = lits[0].to_vec::<f32>()?;
-        let vocab = art.spec.outputs[0].shape[1];
+        let logits = res[0].as_f32()?;
+        let vocab = art.spec().outputs[0].shape[1];
         let row = &logits[..vocab];
         let next = row
             .iter()

@@ -48,6 +48,7 @@ fn manifest_error_names_the_artifact() {
     assert!(err.contains("a/b"), "error should name the artifact: {err}");
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn missing_artifact_dir_is_actionable() {
     let err = match dyad_repro::runtime::Engine::from_dir("/nonexistent/path-xyz") {
@@ -55,6 +56,53 @@ fn missing_artifact_dir_is_actionable() {
         Err(e) => format!("{e:#}"),
     };
     assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[cfg(not(feature = "xla"))]
+#[test]
+fn xla_backend_without_feature_is_actionable() {
+    use dyad_repro::runtime::{open_backend, BackendKind};
+    let err = match open_backend(BackendKind::Xla, std::path::Path::new("artifacts")) {
+        Ok(_) => panic!("xla backend opened without the feature"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("--features xla"), "{err}");
+}
+
+#[test]
+fn unknown_backend_name_rejected() {
+    use dyad_repro::runtime::BackendKind;
+    assert!(BackendKind::from_str("native").is_ok());
+    assert!(BackendKind::from_str("xla").is_ok());
+    assert!(BackendKind::from_str("tpu-v9").is_err());
+}
+
+#[test]
+fn native_backend_unknown_artifact_suggests_similar() {
+    use dyad_repro::runtime::{Backend, NativeBackend};
+    let backend = NativeBackend::new();
+    let err = format!("{:#}", backend.load("opt-mini/dyad_qt/score").unwrap_err());
+    assert!(err.contains("opt-mini"), "{err}");
+}
+
+#[test]
+fn native_backend_rejects_wrong_shapes() {
+    use dyad_repro::runtime::{Backend, Executable, NativeBackend};
+    let backend = NativeBackend::new();
+    let art = backend.load("mnist/dense/accuracy").unwrap();
+    // feed a wrong-shaped first input: must fail loudly, not garble
+    let bad = Tensor::zeros(&[2, 2], DType::F32);
+    let rest: Vec<Tensor> = art.spec().inputs[1..]
+        .iter()
+        .map(|io| Tensor::zeros(&io.shape, io.dtype))
+        .collect();
+    let mut refs: Vec<&Tensor> = vec![&bad];
+    refs.extend(rest.iter());
+    let err = format!("{:#}", art.run(&refs).unwrap_err());
+    assert!(err.contains("shape"), "{err}");
+    // arity mismatch too
+    let err2 = format!("{:#}", art.run(&refs[..1]).unwrap_err());
+    assert!(err2.contains("inputs"), "{err2}");
 }
 
 #[test]

@@ -3,6 +3,7 @@
 
 use dyad_repro::data::dataset::{lengths_of, pad_batch};
 use dyad_repro::data::{Grammar, Phenomenon, TokenDataset, Tokenizer};
+use dyad_repro::dyad::kernel::{dyad_fused_with_threads, matmul_fast_with_threads};
 use dyad_repro::dyad::{
     blockdiag_full, blocktrans_full, dense_matmul, dyad_full, dyad_matmul,
     perm_vector, DyadDims, Variant,
@@ -111,6 +112,90 @@ fn prop_perm_bijection_and_inverse() {
         for m in 0..pi.len() {
             if inv[pi[m]] != m {
                 return Err(format!("inverse fails at {m}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Backend parity for the native fused kernel: the parallel blocked
+/// in-place schedule equals `dense_matmul(dyad_full(...))` for every
+/// variant, across odd shapes — rectangular blocks, `nb = 1`
+/// (serving-shaped), non-square `n_in != n_out` — and any thread count.
+#[test]
+fn prop_fused_kernel_matches_materialised() {
+    check("fused == materialised W @ x", 50, |rng| {
+        let dims = rand_dims(rng);
+        let nb = *rng.choice(&[1usize, 2, 5, 9]);
+        let variant = *rng.choice(&[Variant::It, Variant::Ot, Variant::Dt]);
+        let threads = *rng.choice(&[1usize, 2, 4, 7]);
+        let wl = rand_vec(rng, dims.component_params());
+        let wu = rand_vec(rng, dims.component_params());
+        let x = rand_vec(rng, dims.f_in() * nb);
+        let bias = rand_vec(rng, dims.f_out());
+        let got = dyad_fused_with_threads(
+            &wl, &wu, &x, dims, variant, nb, Some(&bias), threads,
+        );
+        let full = dyad_full(&wl, &wu, dims, variant);
+        let want =
+            dense_matmul(&full, &x, dims.f_out(), dims.f_in(), nb, Some(&bias));
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            if (a - b).abs() > 1e-3 {
+                return Err(format!(
+                    "{dims:?} {variant:?} nb={nb} t={threads} elt {i}: {a} vs {b}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Widths that n_dyad does not divide are rejected up front (paper
+/// §5.1 would pad; this stack refuses loudly instead).
+#[test]
+fn prop_indivisible_width_rejected() {
+    check("indivisible width rejected", 40, |rng| {
+        let nd = rng.range(2, 9);
+        let f_in = nd * rng.range(1, 6) + rng.range(1, nd);
+        let f_out = nd * rng.range(1, 6);
+        if DyadDims::new(nd, f_in, f_out).is_ok() {
+            return Err(format!("accepted f_in={f_in} with n_dyad={nd}"));
+        }
+        if DyadDims::new(nd, f_out, f_in).is_ok() {
+            return Err(format!("accepted f_out={f_in} with n_dyad={nd}"));
+        }
+        Ok(())
+    });
+}
+
+/// Multi-thread vs single-thread determinism: every output row is
+/// accumulated by exactly one worker in a fixed order, so the fused
+/// kernel and the blocked dense matmul are *bitwise* identical across
+/// thread counts.
+#[test]
+fn prop_thread_count_bitwise_deterministic() {
+    check("threading is bitwise deterministic", 30, |rng| {
+        let dims = rand_dims(rng);
+        let nb = rng.range(1, 8);
+        let variant = *rng.choice(&[Variant::It, Variant::Ot, Variant::Dt]);
+        let wl = rand_vec(rng, dims.component_params());
+        let wu = rand_vec(rng, dims.component_params());
+        let x = rand_vec(rng, dims.f_in() * nb);
+        let one = dyad_fused_with_threads(&wl, &wu, &x, dims, variant, nb, None, 1);
+        for threads in [2usize, 3, 8] {
+            let many =
+                dyad_fused_with_threads(&wl, &wu, &x, dims, variant, nb, None, threads);
+            if one != many {
+                return Err(format!("{dims:?} {variant:?} differs at {threads} threads"));
+            }
+        }
+        let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+        let a = rand_vec(rng, m * k);
+        let b = rand_vec(rng, k * n);
+        let one = matmul_fast_with_threads(&a, &b, m, k, n, 1);
+        for threads in [2usize, 5] {
+            if matmul_fast_with_threads(&a, &b, m, k, n, threads) != one {
+                return Err(format!("dense {m}x{k}x{n} differs at {threads} threads"));
             }
         }
         Ok(())

