@@ -1,0 +1,123 @@
+//! Native backward sweep: the structured per-block DYAD backward
+//! (`dyad::kernel::dyad_backward_dw` + `dyad_linear_backward_dx`)
+//! against (a) the old materialise-and-project path and (b) the dense
+//! backward, on the Figure 6 ff geometries (fc1 of d -> 4d, n_dyad 4,
+//! 128-token minibatch).
+//!
+//! This is the kernel-level acceptance check for structured training:
+//! DYAD bwd must beat dense bwd at the large widths (the paper's
+//! Tables 1/5/10 bwd columns), and crush the materialised path at
+//! every width. Results are persisted as `BENCH_native_bwd.json`
+//! (`BENCH_JSON_DIR` to redirect); `BENCH_QUICK=1` shrinks the sweep
+//! to one small width for CI smoke runs.
+
+use dyad_repro::bench_support::{quick_mode, write_bench_json};
+use dyad_repro::dyad::kernel::{
+    dyad_backward_dw, dyad_linear_backward_dx, matmul_fast, num_threads, transpose,
+};
+use dyad_repro::dyad::{dyad_full, project_dyad_grads, DyadDims, Variant};
+use dyad_repro::util::json::{num, obj, s, Json};
+use dyad_repro::util::rng::Rng;
+use dyad_repro::util::stats::Summary;
+use dyad_repro::util::timer::Timer;
+
+fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> Summary {
+    // warmup
+    f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_ms());
+    }
+    Summary::of(&samples)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let widths: &[usize] = if quick { &[256] } else { &[256, 512, 1024, 2048] };
+    let t = 128; // WIDTH_SWEEP_TOKENS
+    let reps = if quick { 3 } else { 7 };
+    let variant = Variant::It;
+    println!(
+        "== native bwd sweep: structured DYAD backward vs materialised vs dense \
+         ({} threads, {} tokens{}) ==",
+        num_threads(),
+        t,
+        if quick { ", quick mode" } else { "" }
+    );
+    println!(
+        "{:<8} {:>12} {:>16} {:>15} {:>12} {:>12}",
+        "width", "dense(ms)", "materialised(ms)", "structured(ms)", "vs dense", "vs mat."
+    );
+    let mut rng = Rng::new(99);
+    let mut rows: Vec<Json> = Vec::new();
+    for &width in widths {
+        // fc1 geometry of the ff module: (4w, w) with n_dyad = 4
+        let dims = DyadDims::new(4, width, 4 * width).expect("dims");
+        let (f_in, f_out) = (dims.f_in(), dims.f_out());
+        let nw = dims.component_params();
+        let wl: Vec<f32> = (0..nw).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let wu: Vec<f32> = (0..nw).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let wd: Vec<f32> = (0..f_out * f_in).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        let x: Vec<f32> = (0..t * f_in).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let dy: Vec<f32> = (0..t * f_out).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+        // dense backward: dW = dy^T @ x, dx = dy @ W
+        let dense = time_ms(reps, || {
+            let dyt = transpose(&dy, t, f_out);
+            std::hint::black_box(matmul_fast(&dyt, &x, f_out, t, f_in));
+            std::hint::black_box(matmul_fast(&dy, &wd, t, f_out, f_in));
+        });
+        // the pre-structured DYAD path: materialise W, dense grad
+        // matmuls, project dW back onto the block structure
+        let materialised = time_ms(reps, || {
+            let full = dyad_full(&wl, &wu, dims, variant);
+            let dyt = transpose(&dy, t, f_out);
+            let dw = matmul_fast(&dyt, &x, f_out, t, f_in);
+            std::hint::black_box(project_dyad_grads(&dw, dims, variant));
+            std::hint::black_box(matmul_fast(&dy, &full, t, f_out, f_in));
+        });
+        // structured per-block backward (what LinearView::backward runs)
+        let structured = time_ms(reps, || {
+            std::hint::black_box(dyad_backward_dw(&x, &dy, dims, variant, t));
+            std::hint::black_box(dyad_linear_backward_dx(&wl, &wu, &dy, dims, variant, t));
+        });
+        let vs_dense = dense.p50 / structured.p50;
+        let vs_mat = materialised.p50 / structured.p50;
+        println!(
+            "{:<8} {:>12.3} {:>16.3} {:>15.3} {:>11.2}x {:>11.2}x",
+            width, dense.p50, materialised.p50, structured.p50, vs_dense, vs_mat
+        );
+        let row = obj(vec![
+            ("width", num(width as f64)),
+            ("dense_ms", num(dense.p50)),
+            ("materialised_ms", num(materialised.p50)),
+            ("structured_ms", num(structured.p50)),
+            ("structured_vs_dense", num(vs_dense)),
+            ("structured_vs_materialised", num(vs_mat)),
+        ]);
+        println!("{}", row.to_string());
+        rows.push(row);
+    }
+    let doc = obj(vec![
+        ("bench", s("native_bwd_sweep")),
+        ("variant", s("dyad_it")),
+        ("n_dyad", num(4.0)),
+        ("tokens", num(t as f64)),
+        ("threads", num(num_threads() as f64)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("native_bwd", &doc) {
+        Ok(path) => println!("\nbench json: {}", path.display()),
+        Err(e) => {
+            eprintln!("error: could not write BENCH_native_bwd.json: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!(
+        "expect structured/dense >= n_dyad/2 = 2x asymptotically; the bwd does \
+         2/n_dyad of the dense FLOPs"
+    );
+}

@@ -2,10 +2,13 @@
 //! warm up (includes any lazy compile), then measure repeated
 //! executions through the backend-neutral [`Executable`] interface.
 
-use anyhow::Result;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
 
 use crate::runtime::{open_backend, Backend, BackendKind, Executable, Role};
 use crate::tensor::{DType, InitSpec, Tensor};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::timer::Timer;
@@ -21,6 +24,31 @@ impl Default for BenchOpts {
     fn default() -> Self {
         BenchOpts { warmup: 3, reps: 10, seed: 1234 }
     }
+}
+
+/// Write one machine-readable bench result file, `BENCH_<name>.json`,
+/// into `BENCH_JSON_DIR` (default: the current directory — note that
+/// `cargo bench` runs bench binaries with the *package* root as cwd,
+/// so unredirected files land in `rust/`; set `BENCH_JSON_DIR` to pin
+/// an absolute location, as CI does). Every bench that prints a paper
+/// table also emits its rows through here, so the perf trajectory is
+/// trackable across commits without scraping stdout; CI validates the
+/// files parse. Returns the written path.
+pub fn write_bench_json(name: &str, value: &Json) -> Result<PathBuf> {
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = PathBuf::from(dir).join(format!("BENCH_{name}.json"));
+    let mut text = value.to_string();
+    text.push('\n');
+    std::fs::write(&path, text)
+        .with_context(|| format!("writing bench json {}", path.display()))?;
+    Ok(path)
+}
+
+/// Quick mode for smoke runs (`BENCH_QUICK=1`): benches shrink to one
+/// small geometry and fewer reps so CI can assert the run + JSON
+/// contract without caring about absolute timings.
+pub fn quick_mode() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
 }
 
 /// Open the backend the benches should run on: `REPRO_BACKEND`

@@ -3,9 +3,9 @@
 
 use anyhow::Result;
 
-use super::harness::{bench_artifact, BenchOpts};
+use super::harness::{bench_artifact, write_bench_json, BenchOpts};
 use crate::runtime::Backend;
-use crate::util::json::{num, obj, s};
+use crate::util::json::{num, obj, s, Json};
 
 /// One row of a paper timing table.
 #[derive(Debug, Clone)]
@@ -49,7 +49,9 @@ pub fn ff_table(
         .collect()
 }
 
-/// Print in the paper's Table-1 format + one JSON line per row.
+/// Print in the paper's Table-1 format + one JSON line per row, and
+/// persist the whole table as `BENCH_native_ff.json` (the ff-module
+/// perf-trajectory file; the last table bench run wins).
 pub fn print_ff_table(title: &str, rows: &[FfTiming]) {
     println!("\n== {title} ==");
     println!(
@@ -61,23 +63,31 @@ pub fn print_ff_table(title: &str, rows: &[FfTiming]) {
         .find(|r| r.variant == "dense")
         .map(|r| r.total_ms)
         .unwrap_or(f64::NAN);
+    let mut json_rows = Vec::with_capacity(rows.len());
     for r in rows {
         let speedup = dense_total / r.total_ms;
         println!(
             "{:<14} {:>12.3} {:>13.3} {:>10.3} {:>20.3}",
             r.variant, r.fwd_ms, r.bwd_ms, r.total_ms, speedup
         );
-        println!(
-            "{}",
-            obj(vec![
-                ("table", s(title)),
-                ("variant", s(&r.variant)),
-                ("fwd_ms", num(r.fwd_ms)),
-                ("bwd_ms", num(r.bwd_ms)),
-                ("total_ms", num(r.total_ms)),
-                ("speedup", num(speedup)),
-            ])
-            .to_string()
-        );
+        let row = obj(vec![
+            ("table", s(title)),
+            ("variant", s(&r.variant)),
+            ("fwd_ms", num(r.fwd_ms)),
+            ("bwd_ms", num(r.bwd_ms)),
+            ("total_ms", num(r.total_ms)),
+            ("speedup", num(speedup)),
+        ]);
+        println!("{}", row.to_string());
+        json_rows.push(row);
+    }
+    let doc = obj(vec![
+        ("bench", s("ff_table")),
+        ("table", s(title)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    match write_bench_json("native_ff", &doc) {
+        Ok(path) => println!("bench json: {}", path.display()),
+        Err(e) => eprintln!("warning: could not write BENCH_native_ff.json: {e:#}"),
     }
 }

@@ -9,52 +9,114 @@
 //!   stays cache-resident while a row panel streams through it;
 //! * run the fused DYAD forward (paper Eqs 3-10) *row-wise*: each
 //!   output row accumulates its BLOCKDIAG and BLOCKTRANS contributions
-//!   directly — permuted rows are written in place, with no per-block
-//!   `x2` gather allocation and no temporary `y_i` buffer.
+//!   in one pass ([`axpy2`]) — permuted rows are written in place,
+//!   with no per-block `x2` gather allocation and no temporary `y_i`
+//!   buffer;
+//! * run the DYAD *backward* the same way: [`dyad_backward_dx`] is the
+//!   mirror of the forward schedule over `W^T` (input rows own their
+//!   accumulation) and [`dyad_backward_dw`] accumulates each `dwl`/
+//!   `dwu` block row directly from the activation/gradient streams —
+//!   no `(f_out, f_in)` materialisation anywhere in training.
 //!
 //! Every output row is produced by exactly one thread in a fixed
 //! sequential accumulation order, so results are bitwise identical for
-//! any thread count (asserted by the determinism property test).
+//! any thread count (asserted by the determinism property tests).
+
+use std::sync::OnceLock;
 
 use super::layout::{DyadDims, Variant};
 
 /// Worker count: `DYAD_NUM_THREADS` env override, else the machine's
 /// available parallelism, else 1.
+///
+/// Resolved once per process and cached in a [`OnceLock`] — kernels
+/// call this on every dispatch, and re-reading the environment is a
+/// syscall in the hot path. Tests that need a specific count use the
+/// `*_with_threads` escape hatches instead of mutating the env.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("DYAD_NUM_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("DYAD_NUM_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
 }
 
-/// `out[j] += a * x[j]` over one row.
+/// `out[j] += a * x[j]` over one row, 8-wide unrolled so the
+/// autovectoriser emits full-width lanes.
 #[inline]
 pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
-    for (o, &v) in out.iter_mut().zip(x) {
+    debug_assert_eq!(out.len(), x.len(), "axpy: length mismatch");
+    let n = out.len().min(x.len());
+    let mut oc = out[..n].chunks_exact_mut(8);
+    let mut xc = x[..n].chunks_exact(8);
+    for (o8, x8) in (&mut oc).zip(&mut xc) {
+        for i in 0..8 {
+            o8[i] += a * x8[i];
+        }
+    }
+    for (o, &v) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
         *o += a * v;
     }
 }
 
-/// Dot product with 4-way accumulators (helps ILP on long rows).
+/// Fused dual-source update `out[j] += a * x[j] + b * z[j]`: one pass
+/// over the output row for both DYAD components, so the store stream
+/// (and the loop overhead) is paid once instead of twice.
+#[inline]
+pub fn axpy2(out: &mut [f32], a: f32, x: &[f32], b: f32, z: &[f32]) {
+    debug_assert_eq!(out.len(), x.len(), "axpy2: x length mismatch");
+    debug_assert_eq!(out.len(), z.len(), "axpy2: z length mismatch");
+    let n = out.len().min(x.len()).min(z.len());
+    let mut oc = out[..n].chunks_exact_mut(8);
+    let mut xc = x[..n].chunks_exact(8);
+    let mut zc = z[..n].chunks_exact(8);
+    for ((o8, x8), z8) in (&mut oc).zip(&mut xc).zip(&mut zc) {
+        for i in 0..8 {
+            o8[i] += a * x8[i] + b * z8[i];
+        }
+    }
+    for ((o, &xv), &zv) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(xc.remainder())
+        .zip(zc.remainder())
+    {
+        *o += a * xv + b * zv;
+    }
+}
+
+/// Dot product with 8 independent accumulators (full-width ILP on long
+/// rows). The operands must be the same length — a mismatch is a shape
+/// bug upstream and fails loudly in debug builds instead of silently
+/// truncating to the shorter slice.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(
+        a.len(),
+        b.len(),
+        "dot: length mismatch {} vs {}",
+        a.len(),
+        b.len()
+    );
     let n = a.len().min(b.len());
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+    let mut acc = [0.0f32; 8];
+    let mut ac = a[..n].chunks_exact(8);
+    let mut bc = b[..n].chunks_exact(8);
+    for (a8, b8) in (&mut ac).zip(&mut bc) {
+        for i in 0..8 {
+            acc[i] += a8[i] * b8[i];
+        }
     }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
+    let mut s =
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        s += x * y;
     }
     s
 }
@@ -169,8 +231,17 @@ pub fn matmul_bt_with_threads(
 
 /// Transpose a row-major `(m, n)` matrix into `(n, m)`.
 pub fn transpose(a: &[f32], m: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * n);
     let mut out = vec![0.0f32; m * n];
+    transpose_into(a, m, n, &mut out);
+    out
+}
+
+/// Transpose a row-major `(m, n)` matrix into a caller-owned `(n, m)`
+/// buffer (the backward pass transposes weight blocks in place into
+/// one scratch allocation instead of one `Vec` per block).
+pub fn transpose_into(a: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(out.len(), m * n);
     // simple tiled transpose; tiles keep both sides cache-friendly
     const T: usize = 32;
     let mut i0 = 0;
@@ -188,7 +259,6 @@ pub fn transpose(a: &[f32], m: usize, n: usize) -> Vec<f32> {
         }
         i0 = i1;
     }
-    out
 }
 
 /// Dense linear on row-major activations: `x (t, f_in) @ w^T + b`
@@ -258,36 +328,41 @@ pub fn dyad_fused_with_threads(
         if let Some(b) = bias {
             orow.fill(b[r]);
         }
-        // BLOCKDIAG: row r lives in block i1 = r / n_out.
+        // BLOCKDIAG: row r lives in block i1 = r / n_out. BLOCKTRANS:
+        // with the output permutation, row r = o2*n_dyad + i2 (the
+        // Eq-9 stride swap); without it, same indexing as BLOCKDIAG.
+        // Both components contribute exactly n_in terms per output
+        // row, so the two passes fuse into one axpy2 sweep.
         let (i1, o1) = (r / n_out, r % n_out);
-        let wrow = &wl[(i1 * n_out + o1) * n_in..(i1 * n_out + o1 + 1) * n_in];
-        let base = i1 * n_in;
-        if nb == 1 {
-            orow[0] += dot(wrow, &x[base..base + n_in]);
-        } else {
-            for (k, &wv) in wrow.iter().enumerate() {
-                if wv != 0.0 {
-                    axpy(orow, wv, &x[(base + k) * nb..(base + k + 1) * nb]);
-                }
-            }
-        }
-        // BLOCKTRANS: with the output permutation, row r = o2*n_dyad + i2
-        // (the Eq-9 stride swap); without it, same indexing as BLOCKDIAG.
         let (i2, o2) = if out_perm {
             (r % n_dyad, r / n_dyad)
         } else {
-            (r / n_out, r % n_out)
+            (i1, o1)
         };
-        let wrow = &wu[(i2 * n_out + o2) * n_in..(i2 * n_out + o2 + 1) * n_in];
-        for (k, &wv) in wrow.iter().enumerate() {
-            if wv == 0.0 {
-                continue;
-            }
-            let src = if in_perm { k * n_dyad + i2 } else { i2 * n_in + k };
-            if nb == 1 {
-                orow[0] += wv * x[src];
+        let w1 = &wl[(i1 * n_out + o1) * n_in..(i1 * n_out + o1 + 1) * n_in];
+        let w2 = &wu[(i2 * n_out + o2) * n_in..(i2 * n_out + o2 + 1) * n_in];
+        let base = i1 * n_in;
+        if nb == 1 {
+            let mut s = dot(w1, &x[base..base + n_in]);
+            if in_perm {
+                for (k, &wv) in w2.iter().enumerate() {
+                    s += wv * x[k * n_dyad + i2];
+                }
             } else {
-                axpy(orow, wv, &x[src * nb..(src + 1) * nb]);
+                s += dot(w2, &x[i2 * n_in..(i2 + 1) * n_in]);
+            }
+            orow[0] += s;
+        } else {
+            for k in 0..n_in {
+                let src1 = base + k;
+                let src2 = if in_perm { k * n_dyad + i2 } else { i2 * n_in + k };
+                axpy2(
+                    orow,
+                    w1[k],
+                    &x[src1 * nb..(src1 + 1) * nb],
+                    w2[k],
+                    &x[src2 * nb..(src2 + 1) * nb],
+                );
             }
         }
     });
@@ -310,6 +385,190 @@ pub fn dyad_linear(
     let xc = transpose(x, t, dims.f_in());
     let yc = dyad_fused(wl, wu, &xc, dims, variant, t, bias);
     transpose(&yc, dims.f_out(), t)
+}
+
+/// Transpose each `(n_out, n_in)` block of a component tensor into
+/// `(n_in, n_out)`. The backward `dx` pass streams weights along the
+/// output-feature axis, which is stride-`n_in` in the stored layout —
+/// one O(component_params) block transpose (2/n_dyad of dense, reused
+/// across every activation column and input row) turns that into a
+/// contiguous read. The *activations* are never gathered or copied.
+fn transpose_blocks(w: &[f32], dims: DyadDims) -> Vec<f32> {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    assert_eq!(w.len(), dims.component_params());
+    let mut out = vec![0.0f32; w.len()];
+    let blk = n_out * n_in;
+    for i in 0..n_dyad {
+        let src = &w[i * blk..(i + 1) * blk];
+        transpose_into(src, n_out, n_in, &mut out[i * blk..(i + 1) * blk]);
+    }
+    out
+}
+
+/// Structured DYAD backward, input-gradient half (paper training path):
+/// `dx = W^T dy = (W1 + W2)^T dy` on column-major gradients
+/// `dy (f_out, nb)` -> `dx (f_in, nb)`, without materialising `W`.
+///
+/// Mirror of [`dyad_fused`]: each *input* row owns its accumulation.
+/// Input row c takes its BLOCKDIAG^T terms from block `c / n_in` and
+/// its BLOCKTRANS^T terms from the block the *input* permutation maps
+/// it to (`c = k2*n_dyad + i2`, the same Eq-9 stride swap the forward
+/// applies on the output side) — so permuted rows are read/written in
+/// place, with no gather buffers and no `dyad_full` call. Both
+/// components contribute n_out terms per row; the sweeps fuse via
+/// [`axpy2`]. Bitwise deterministic across thread counts.
+pub fn dyad_backward_dx(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+) -> Vec<f32> {
+    dyad_backward_dx_with_threads(wl, wu, dy, dims, variant, nb, num_threads())
+}
+
+pub fn dyad_backward_dx_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    assert_eq!(wl.len(), dims.component_params());
+    assert_eq!(wu.len(), dims.component_params());
+    assert_eq!(dy.len(), dims.f_out() * nb);
+    let in_perm = matches!(variant, Variant::It | Variant::Dt);
+    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+    let wlt = transpose_blocks(wl, dims);
+    let wut = transpose_blocks(wu, dims);
+    let mut dx = vec![0.0f32; dims.f_in() * nb];
+    parallel_rows(&mut dx, nb, threads, &|c, orow| {
+        // BLOCKDIAG^T: input row c lives in block i1 = c / n_in.
+        let (i1, k1) = (c / n_in, c % n_in);
+        let w1 = &wlt[(i1 * n_in + k1) * n_out..(i1 * n_in + k1 + 1) * n_out];
+        // BLOCKTRANS^T: with the input permutation, c = k2*n_dyad + i2.
+        let (i2, k2) = if in_perm {
+            (c % n_dyad, c / n_dyad)
+        } else {
+            (i1, k1)
+        };
+        let w2 = &wut[(i2 * n_in + k2) * n_out..(i2 * n_in + k2 + 1) * n_out];
+        if nb == 1 {
+            let mut s = dot(w1, &dy[i1 * n_out..(i1 + 1) * n_out]);
+            if out_perm {
+                for (o, &wv) in w2.iter().enumerate() {
+                    s += wv * dy[o * n_dyad + i2];
+                }
+            } else {
+                s += dot(w2, &dy[i2 * n_out..(i2 + 1) * n_out]);
+            }
+            orow[0] = s;
+        } else {
+            for o in 0..n_out {
+                let src1 = i1 * n_out + o;
+                let src2 = if out_perm { o * n_dyad + i2 } else { i2 * n_out + o };
+                axpy2(
+                    orow,
+                    w1[o],
+                    &dy[src1 * nb..(src1 + 1) * nb],
+                    w2[o],
+                    &dy[src2 * nb..(src2 + 1) * nb],
+                );
+            }
+        }
+    });
+    dx
+}
+
+/// Row-major wrapper for [`dyad_backward_dx`]: `dy (t, f_out)` ->
+/// `dx (t, f_in)`, one transpose in / one transpose out, matching
+/// [`dyad_linear`]'s scheme for the forward.
+pub fn dyad_linear_backward_dx(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+) -> Vec<f32> {
+    let dyc = transpose(dy, t, dims.f_out());
+    let dxc = dyad_backward_dx(wl, wu, &dyc, dims, variant, t);
+    transpose(&dxc, dims.f_in(), t)
+}
+
+/// Structured DYAD backward, weight-gradient half: accumulate the
+/// block component gradients directly from row-major activations
+/// `x (t, f_in)` and upstream gradients `dy (t, f_out)`:
+///
+/// * `dwl[i] = dy_blk_i^T @ x_blk_i` — block i of `dy` is columns
+///   `[i*n_out, (i+1)*n_out)`, block i of `x` is columns
+///   `[i*n_in, (i+1)*n_in)`;
+/// * `dwu[i, o, k] = sum_t dy[t, pi_out(i,o)] * x[t, pi_in(i,k)]` —
+///   the same entry of the full `dW` the old materialise-and-project
+///   path read, computed without ever forming `dW`.
+///
+/// O(2 * t * total_params) work — the dense `dy^T @ x` costs n_dyad/2
+/// times more. Each `dwl`/`dwu` row is owned by one thread and
+/// accumulated in fixed `t` order: bitwise deterministic.
+pub fn dyad_backward_dw(
+    x: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    dyad_backward_dw_with_threads(x, dy, dims, variant, t, num_threads())
+}
+
+pub fn dyad_backward_dw_with_threads(
+    x: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    let (f_in, f_out) = (dims.f_in(), dims.f_out());
+    assert_eq!(x.len(), t * f_in);
+    assert_eq!(dy.len(), t * f_out);
+    let in_perm = matches!(variant, Variant::It | Variant::Dt);
+    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+    let mut dwl = vec![0.0f32; dims.component_params()];
+    parallel_rows(&mut dwl, n_in, threads, &|r, row| {
+        let (i, o) = (r / n_out, r % n_out);
+        for ti in 0..t {
+            let a = dy[ti * f_out + i * n_out + o];
+            if a != 0.0 {
+                axpy(row, a, &x[ti * f_in + i * n_in..ti * f_in + (i + 1) * n_in]);
+            }
+        }
+    });
+    let mut dwu = vec![0.0f32; dims.component_params()];
+    parallel_rows(&mut dwu, n_in, threads, &|r, row| {
+        let (i, o) = (r / n_out, r % n_out);
+        // pi_out(i, o) = o*n_dyad + i; pi_in(i, k) = k*n_dyad + i.
+        let rp = if out_perm { o * n_dyad + i } else { i * n_out + o };
+        for ti in 0..t {
+            let a = dy[ti * f_out + rp];
+            if a == 0.0 {
+                continue;
+            }
+            let xt = &x[ti * f_in..(ti + 1) * f_in];
+            if in_perm {
+                for (k, rv) in row.iter_mut().enumerate() {
+                    *rv += a * xt[k * n_dyad + i];
+                }
+            } else {
+                axpy(row, a, &xt[i * n_in..(i + 1) * n_in]);
+            }
+        }
+    });
+    (dwl, dwu)
 }
 
 #[cfg(test)]
@@ -393,6 +652,83 @@ mod tests {
             let many =
                 dyad_fused_with_threads(&wl, &wu, &x, dims, Variant::Dt, nb, None, threads);
             assert_eq!(one, many, "threads={threads} changed bits");
+        }
+    }
+
+    #[test]
+    fn dot_and_axpy2_remainders() {
+        // exercise the 8-wide chunks + remainder tails at awkward lengths
+        for n in [0usize, 1, 7, 8, 9, 16, 19] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5 - 1.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| 2.0 - i as f32 * 0.25).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-4, "dot n={n}");
+            let mut out = vec![1.0f32; n];
+            axpy2(&mut out, 0.5, &a, -2.0, &b);
+            for (i, o) in out.iter().enumerate() {
+                let want = 1.0 + 0.5 * a[i] - 2.0 * b[i];
+                assert!((o - want).abs() < 1e-5, "axpy2 n={n} i={i}");
+            }
+        }
+    }
+
+    /// Both structured backward kernels against the materialise-and-
+    /// project oracle: all variants, rectangular blocks, the
+    /// `n_dyad == 1` (single dense block) and `n_dyad == f_out`
+    /// (1-row output blocks) edges, and `t == 1`.
+    #[test]
+    fn structured_backward_matches_reference() {
+        use crate::dyad::math::dyad_backward;
+        let mut rng = Rng::new(29);
+        for (nd, n_in, n_out, t) in [
+            (4, 4, 4, 3),
+            (2, 3, 5, 4), // rectangular blocks
+            (1, 6, 2, 5), // n_dyad == 1
+            (4, 3, 1, 3), // n_dyad == f_out
+            (8, 2, 2, 1), // t == 1 (serving-shaped)
+        ] {
+            let dims = DyadDims { n_dyad: nd, n_in, n_out };
+            let wl = rand_vec(&mut rng, dims.component_params());
+            let wu = rand_vec(&mut rng, dims.component_params());
+            let x = rand_vec(&mut rng, t * dims.f_in());
+            let dy = rand_vec(&mut rng, t * dims.f_out());
+            for v in [Variant::It, Variant::Ot, Variant::Dt] {
+                let (rwl, rwu, rdx) = dyad_backward(&wl, &wu, &x, &dy, dims, v, t);
+                let (dwl, dwu) = dyad_backward_dw(&x, &dy, dims, v, t);
+                let dx = dyad_linear_backward_dx(&wl, &wu, &dy, dims, v, t);
+                for (name, got, want) in
+                    [("dwl", &dwl, &rwl), ("dwu", &dwu, &rwu), ("dx", &dx, &rdx)]
+                {
+                    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                        assert!(
+                            (a - b).abs() < 1e-4,
+                            "{v:?} {dims:?} t={t} {name}[{i}]: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backward_kernels_thread_count_bitwise_deterministic() {
+        let mut rng = Rng::new(31);
+        let dims = DyadDims { n_dyad: 4, n_in: 12, n_out: 20 };
+        let t = 17;
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let x = rand_vec(&mut rng, t * dims.f_in());
+        let dyc = rand_vec(&mut rng, dims.f_out() * t); // column-major (f_out, t)
+        let dyr = transpose(&dyc, dims.f_out(), t); // row-major (t, f_out)
+        for v in [Variant::It, Variant::Ot, Variant::Dt] {
+            let dx1 = dyad_backward_dx_with_threads(&wl, &wu, &dyc, dims, v, t, 1);
+            let dw1 = dyad_backward_dw_with_threads(&x, &dyr, dims, v, t, 1);
+            for threads in [2, 3, 8] {
+                let dxn = dyad_backward_dx_with_threads(&wl, &wu, &dyc, dims, v, t, threads);
+                assert_eq!(dx1, dxn, "{v:?} dx threads={threads} changed bits");
+                let dwn = dyad_backward_dw_with_threads(&x, &dyr, dims, v, t, threads);
+                assert_eq!(dw1, dwn, "{v:?} dw threads={threads} changed bits");
+            }
         }
     }
 

@@ -5,7 +5,7 @@
 //! slices, so property tests can assert
 //! `dyad_matmul == dense_matmul(dyad_full(...))` for every variant.
 
-use super::layout::{perm_vector, DyadDims, Variant};
+use super::layout::{dyad_full, perm_vector, DyadDims, Variant};
 
 /// Row-major (m, k) x (k, n) -> (m, n).
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -118,10 +118,89 @@ pub fn dyad_matmul(
     y
 }
 
+/// Read the block-structured component gradients out of a full
+/// `(f_out, f_in)` `dW`: each `wl`/`wu` entry reads the cell its
+/// layout places it in (permutations included). Exact for both
+/// components, including where their supports overlap, because
+/// `W = W1 + W2` is linear in each stored entry.
+pub fn project_dyad_grads(dw: &[f32], dims: DyadDims, variant: Variant) -> (Vec<f32>, Vec<f32>) {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    let f_in = dims.f_in();
+    assert_eq!(dw.len(), dims.f_out() * f_in);
+    let in_perm = matches!(variant, Variant::It | Variant::Dt);
+    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+    let pi_in = perm_vector(n_in, n_dyad);
+    let pi_out = perm_vector(n_out, n_dyad);
+    let mut dwl = vec![0.0f32; dims.component_params()];
+    let mut dwu = vec![0.0f32; dims.component_params()];
+    for i in 0..n_dyad {
+        for o in 0..n_out {
+            for k in 0..n_in {
+                let idx = (i * n_out + o) * n_in + k;
+                dwl[idx] = dw[(i * n_out + o) * f_in + (i * n_in + k)];
+                let r = if out_perm { pi_out[i * n_out + o] } else { i * n_out + o };
+                let c = if in_perm { pi_in[i * n_in + k] } else { i * n_in + k };
+                dwu[idx] = dw[r * f_in + c];
+            }
+        }
+    }
+    (dwl, dwu)
+}
+
+/// Reference DYAD backward for `y = x @ W^T` on row-major activations
+/// `x (t, f_in)` with upstream `dy (t, f_out)`: materialise `W`, run
+/// the dense gradient matmuls, project `dW` onto the block structure.
+///
+/// This is the *oracle* — exactly the O(dense) path the runtime used
+/// before the structured backward existed — kept so property tests can
+/// assert `dyad_backward_dw/dx == materialise-and-project` for every
+/// variant and shape. Returns `(dwl, dwu, dx)`.
+pub fn dyad_backward(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (f_in, f_out) = (dims.f_in(), dims.f_out());
+    assert_eq!(x.len(), t * f_in);
+    assert_eq!(dy.len(), t * f_out);
+    let full = dyad_full(wl, wu, dims, variant);
+    // dW = dy^T @ x  (f_out, f_in)
+    let mut dw = vec![0.0f32; f_out * f_in];
+    for ti in 0..t {
+        for r in 0..f_out {
+            let a = dy[ti * f_out + r];
+            if a == 0.0 {
+                continue;
+            }
+            for c in 0..f_in {
+                dw[r * f_in + c] += a * x[ti * f_in + c];
+            }
+        }
+    }
+    // dx = dy @ W  (t, f_in)
+    let mut dx = vec![0.0f32; t * f_in];
+    for ti in 0..t {
+        for r in 0..f_out {
+            let a = dy[ti * f_out + r];
+            if a == 0.0 {
+                continue;
+            }
+            for c in 0..f_in {
+                dx[ti * f_in + c] += a * full[r * f_in + c];
+            }
+        }
+    }
+    let (dwl, dwu) = project_dyad_grads(&dw, dims, variant);
+    (dwl, dwu, dx)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dyad::layout::dyad_full;
     use crate::util::rng::Rng;
 
     fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -141,6 +220,26 @@ mod tests {
         let a = vec![1.0, 2.0, 3.0, 4.0];
         let b = vec![1.0, 1.0, 1.0, 1.0];
         assert_eq!(matmul(&a, &b, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    /// Projecting each component's own materialisation recovers the
+    /// stored entries exactly — the permutation bookkeeping in
+    /// `project_dyad_grads` inverts the layout placement.
+    #[test]
+    fn projection_inverts_materialisation() {
+        let mut rng = Rng::new(19);
+        for (nd, n_in, n_out) in [(4, 3, 5), (1, 4, 2), (6, 2, 1)] {
+            let dims = DyadDims { n_dyad: nd, n_in, n_out };
+            let w3 = rand_vec(&mut rng, dims.component_params());
+            for v in [Variant::It, Variant::Ot, Variant::Dt] {
+                let bd = crate::dyad::layout::blockdiag_full(&w3, dims);
+                let (dwl, _) = project_dyad_grads(&bd, dims, v);
+                assert_eq!(dwl, w3, "{v:?} blockdiag");
+                let bt = crate::dyad::layout::blocktrans_full(&w3, dims, v);
+                let (_, dwu) = project_dyad_grads(&bt, dims, v);
+                assert_eq!(dwu, w3, "{v:?} blocktrans");
+            }
+        }
     }
 
     #[test]

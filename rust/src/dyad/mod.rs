@@ -12,6 +12,9 @@ pub mod layout;
 pub mod math;
 
 pub use connectivity::{connection_counts, connectivity_ratio};
-pub use kernel::{dense_linear, dyad_fused, dyad_linear, matmul_bt, matmul_fast, transpose};
+pub use kernel::{
+    dense_linear, dyad_backward_dw, dyad_backward_dx, dyad_fused, dyad_linear,
+    dyad_linear_backward_dx, matmul_bt, matmul_fast, transpose,
+};
 pub use layout::{blockdiag_full, blocktrans_full, dyad_full, perm_vector, DyadDims, Variant};
-pub use math::{dense_matmul, dyad_matmul, matmul};
+pub use math::{dense_matmul, dyad_backward, dyad_matmul, matmul, project_dyad_grads};

@@ -1,11 +1,17 @@
 //! Native ff-micro programs (timing tables T1/T5/T10, F6/F7, -CAT):
 //! fc1 -> GELU -> fc2 at the paper's true widths, forward and
 //! forward+backward, mirroring `model.py::make_ff_fwd/_fwdbwd`.
+//!
+//! Both linears run structured in *both* directions: the forward rides
+//! `dyad::kernel::dyad_fused` and the backward the per-block
+//! `dyad_backward_dw`/`dyad_backward_dx` kernels via
+//! [`LinearView::backward`] — so the timed bwd columns of the paper
+//! tables do O(dense/n_dyad) work, like the paper's.
 
 use anyhow::Result;
 
 use super::linear::LinearView;
-use super::ops::{gelu_grad, gelu_inplace};
+use super::ops::{gelu, gelu_grad, gelu_inplace};
 use super::params::Params;
 use super::VariantSpec;
 
@@ -37,9 +43,10 @@ impl Ff<'_> {
     pub fn fwdbwd(&self, x: &[f32], ct: &[f32], t: usize) -> Result<(f32, Vec<Vec<f32>>)> {
         let fc1 = self.fc1()?;
         let fc2 = self.fc2()?;
+        // keep fc1's pre-activation for the GELU derivative; write the
+        // activation into its own buffer (no clone-then-overwrite pass)
         let a1 = fc1.forward(x, t);
-        let mut h = a1.clone();
-        gelu_inplace(&mut h);
+        let h: Vec<f32> = a1.iter().map(|&v| gelu(v)).collect();
         let y = fc2.forward(&h, t);
         let loss: f64 = y.iter().zip(ct).map(|(a, b)| (a * b) as f64).sum();
         // dL/dy = ct

@@ -4,18 +4,23 @@
 //! Forward runs the fast path: `dyad::kernel::dense_linear` /
 //! `dyad::kernel::dyad_linear` (the fused blocked schedule).
 //!
-//! Backward materialises the full `(f_out, f_in)` matrix once and runs
-//! dense gradient matmuls, then projects `dW` back onto the DYAD block
-//! structure (each `wl`/`wu` entry reads the `dW` cell its layout
-//! places it in — permutations included). This is exactly correct for
-//! both components, including where their supports overlap, because
-//! `W = W1 + W2` is linear in each stored entry. A structured
-//! (materialisation-free) backward is a ROADMAP item.
+//! Backward is structured too: the DYAD arm runs the per-block
+//! kernels `dyad::kernel::dyad_backward_dw` (component gradients
+//! accumulated directly, permutation-aware) and
+//! `dyad::kernel::dyad_linear_backward_dx` (`dx = dy @ (W1 + W2)` as
+//! two fused block-sparse passes) — the full `(f_out, f_in)` matrix is
+//! never materialised, so the timed bwd path keeps DYAD's
+//! O(rows·cols/n_dyad) FLOP advantage. Equivalence with the old
+//! materialise-and-project path (`dyad::math::dyad_backward`) is
+//! property- and gradcheck-tested below.
 
 use anyhow::{bail, Result};
 
-use crate::dyad::kernel::{dense_linear, dyad_linear, matmul_fast, transpose};
-use crate::dyad::layout::{dyad_full, perm_vector};
+use crate::dyad::kernel::{
+    dense_linear, dyad_backward_dw, dyad_linear, dyad_linear_backward_dx, matmul_fast,
+    transpose,
+};
+use crate::dyad::layout::dyad_full;
 use crate::dyad::{DyadDims, Variant};
 
 use super::ops::col_sums;
@@ -93,50 +98,24 @@ impl LinearView<'_> {
                 dy.len()
             );
         }
-        // dW = dy^T @ x  (f_out, f_in)
-        let dyt = transpose(dy, t, f_out);
-        let dw_full = matmul_fast(&dyt, x, f_out, t, f_in);
         let db = col_sums(dy, f_out);
-        let dx = if need_dx {
-            // dx = dy @ W  (t, f_in)
-            let w_full = self.materialize();
-            Some(matmul_fast(dy, &w_full, t, f_out, f_in))
-        } else {
-            None
-        };
-        let grads = match self {
-            LinearView::Dense { .. } => vec![dw_full, db],
-            LinearView::Dyad { dims, variant, .. } => {
-                let (dwl, dwu) = project_dyad_grads(&dw_full, *dims, *variant);
-                vec![dwl, dwu, db]
+        Ok(match self {
+            LinearView::Dense { w, .. } => {
+                // dW = dy^T @ x  (f_out, f_in)
+                let dyt = transpose(dy, t, f_out);
+                let dw = matmul_fast(&dyt, x, f_out, t, f_in);
+                // dx = dy @ W  (t, f_in) — straight off the stored weights
+                let dx = need_dx.then(|| matmul_fast(dy, w, t, f_out, f_in));
+                (vec![dw, db], dx)
             }
-        };
-        Ok((grads, dx))
-    }
-}
-
-/// Read the block-structured component gradients out of the full `dW`.
-fn project_dyad_grads(dw: &[f32], dims: DyadDims, variant: Variant) -> (Vec<f32>, Vec<f32>) {
-    let DyadDims { n_dyad, n_in, n_out } = dims;
-    let f_in = dims.f_in();
-    let in_perm = matches!(variant, Variant::It | Variant::Dt);
-    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
-    let pi_in = perm_vector(n_in, n_dyad);
-    let pi_out = perm_vector(n_out, n_dyad);
-    let mut dwl = vec![0.0f32; dims.component_params()];
-    let mut dwu = vec![0.0f32; dims.component_params()];
-    for i in 0..n_dyad {
-        for o in 0..n_out {
-            for k in 0..n_in {
-                let idx = (i * n_out + o) * n_in + k;
-                dwl[idx] = dw[(i * n_out + o) * f_in + (i * n_in + k)];
-                let r = if out_perm { pi_out[i * n_out + o] } else { i * n_out + o };
-                let c = if in_perm { pi_in[i * n_in + k] } else { i * n_in + k };
-                dwu[idx] = dw[r * f_in + c];
+            LinearView::Dyad { wl, wu, dims, variant, .. } => {
+                let (dwl, dwu) = dyad_backward_dw(x, dy, *dims, *variant, t);
+                let dx = need_dx
+                    .then(|| dyad_linear_backward_dx(wl, wu, dy, *dims, *variant, t));
+                (vec![dwl, dwu, db], dx)
             }
-        }
+        })
     }
-    (dwl, dwu)
 }
 
 #[cfg(test)]
@@ -148,19 +127,66 @@ mod tests {
         (0..n).map(|_| rng.uniform(-0.5, 0.5)).collect()
     }
 
-    /// Finite-difference gradcheck of the DYAD backward through a
-    /// sum(y * ct) scalar loss, all variants, rectangular blocks.
+    /// The structured backward equals the old materialise-and-project
+    /// path (`dyad::math::dyad_backward`) to float tolerance: all
+    /// variants, rectangular blocks, `n_dyad == 1` and
+    /// `n_dyad == f_out` edges.
     #[test]
-    fn dyad_backward_gradcheck() {
-        let mut rng = Rng::new(42);
-        let dims = DyadDims { n_dyad: 2, n_in: 3, n_out: 2 };
-        let t = 4;
-        for variant in [Variant::It, Variant::Ot, Variant::Dt] {
+    fn structured_backward_matches_materialise_and_project() {
+        let mut rng = Rng::new(77);
+        for (nd, n_in, n_out, t) in
+            [(2, 3, 2, 4), (1, 5, 3, 2), (4, 2, 1, 3), (3, 4, 5, 1)]
+        {
+            let dims = DyadDims { n_dyad: nd, n_in, n_out };
             let wl = rand_vec(&mut rng, dims.component_params());
             let wu = rand_vec(&mut rng, dims.component_params());
             let b = rand_vec(&mut rng, dims.f_out());
             let x = rand_vec(&mut rng, t * dims.f_in());
-            let ct = rand_vec(&mut rng, t * dims.f_out());
+            let dy = rand_vec(&mut rng, t * dims.f_out());
+            for variant in [Variant::It, Variant::Ot, Variant::Dt] {
+                let view = LinearView::Dyad { wl: &wl, wu: &wu, b: &b, dims, variant };
+                let (grads, dx) = view.backward(&x, &dy, t, true).unwrap();
+                let (rwl, rwu, rdx) =
+                    crate::dyad::math::dyad_backward(&wl, &wu, &x, &dy, dims, variant, t);
+                for (name, got, want) in [
+                    ("dwl", &grads[0], &rwl),
+                    ("dwu", &grads[1], &rwu),
+                    ("dx", dx.as_ref().unwrap(), &rdx),
+                ] {
+                    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                        assert!(
+                            (a - b).abs() < 1e-4,
+                            "{variant:?} {dims:?} {name}[{i}]: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Finite-difference gradcheck of the structured DYAD backward
+    /// through a sum(y * ct) scalar loss: all variants, rectangular
+    /// blocks, `n_dyad == 1` and `n_dyad == f_out` edges.
+    #[test]
+    fn dyad_backward_gradcheck() {
+        let mut rng = Rng::new(42);
+        for dims in [
+            DyadDims { n_dyad: 2, n_in: 3, n_out: 2 },
+            DyadDims { n_dyad: 1, n_in: 4, n_out: 3 },
+            DyadDims { n_dyad: 4, n_in: 2, n_out: 1 },
+        ] {
+            dyad_backward_gradcheck_at(&mut rng, dims);
+        }
+    }
+
+    fn dyad_backward_gradcheck_at(rng: &mut Rng, dims: DyadDims) {
+        let t = 4;
+        for variant in [Variant::It, Variant::Ot, Variant::Dt] {
+            let wl = rand_vec(rng, dims.component_params());
+            let wu = rand_vec(rng, dims.component_params());
+            let b = rand_vec(rng, dims.f_out());
+            let x = rand_vec(rng, t * dims.f_in());
+            let ct = rand_vec(rng, t * dims.f_out());
             let loss = |wl: &[f32], wu: &[f32], b: &[f32], x: &[f32]| -> f32 {
                 let v = LinearView::Dyad { wl, wu, b, dims, variant };
                 v.forward(x, t).iter().zip(ct.iter()).map(|(a, c)| a * c).sum()

@@ -2,7 +2,9 @@
 //! ReLU, the two hidden linears being the DENSE/DYAD swap site.
 //! Mirrors `python/compile/mnist.py`, including the Adam-in-graph
 //! train step (K microbatches per call, no grad clip) — so the native
-//! backend trains the probe end to end.
+//! backend trains the probe end to end. The swap-site backward runs
+//! the structured per-block DYAD kernels through
+//! [`LinearView::backward`]: no weight materialisation per microbatch.
 
 use anyhow::{bail, Context, Result};
 
@@ -124,12 +126,11 @@ pub fn mnist_loss_and_grads(
         f_out: MNIST_CLASSES,
     };
 
-    // forward with caches
-    let a1 = fc1.forward(x, b);
-    let mut h1 = a1.clone();
+    // forward with caches; ReLU masks read the post-activation values
+    // (h > 0 iff a > 0), so the pre-activations need not be kept
+    let mut h1 = fc1.forward(x, b);
     relu_inplace(&mut h1);
-    let a2 = fc2.forward(&h1, b);
-    let mut h2 = a2.clone();
+    let mut h2 = fc2.forward(&h1, b);
     relu_inplace(&mut h2);
     let logits = head.forward(&h2, b);
 
@@ -158,15 +159,15 @@ pub fn mnist_loss_and_grads(
     // backward through head -> relu -> fc2 -> relu -> fc1
     let (g_head, dh2) = head.backward(&h2, &dlogits, b, true)?;
     let mut da2 = dh2.unwrap();
-    for (g, &a) in da2.iter_mut().zip(&a2) {
-        if a <= 0.0 {
+    for (g, &h) in da2.iter_mut().zip(&h2) {
+        if h <= 0.0 {
             *g = 0.0;
         }
     }
     let (g_fc2, dh1) = fc2.backward(&h1, &da2, b, true)?;
     let mut da1 = dh1.unwrap();
-    for (g, &a) in da1.iter_mut().zip(&a1) {
-        if a <= 0.0 {
+    for (g, &h) in da1.iter_mut().zip(&h1) {
+        if h <= 0.0 {
             *g = 0.0;
         }
     }

@@ -3,9 +3,12 @@
 
 use dyad_repro::data::dataset::{lengths_of, pad_batch};
 use dyad_repro::data::{Grammar, Phenomenon, TokenDataset, Tokenizer};
-use dyad_repro::dyad::kernel::{dyad_fused_with_threads, matmul_fast_with_threads};
+use dyad_repro::dyad::kernel::{
+    dyad_backward_dw_with_threads, dyad_backward_dx_with_threads, dyad_fused_with_threads,
+    matmul_fast_with_threads, transpose,
+};
 use dyad_repro::dyad::{
-    blockdiag_full, blocktrans_full, dense_matmul, dyad_full, dyad_matmul,
+    blockdiag_full, blocktrans_full, dense_matmul, dyad_backward, dyad_full, dyad_matmul,
     perm_vector, DyadDims, Variant,
 };
 use dyad_repro::testing::prop::check;
@@ -150,6 +153,42 @@ fn prop_fused_kernel_matches_materialised() {
     });
 }
 
+/// The structured per-block backward equals the materialise-and-
+/// project oracle (`dyad::math::dyad_backward`) for every variant,
+/// shape and thread count: `dwl`/`dwu` accumulated directly per block,
+/// `dx` from the fused transposed schedule — no `(f_out, f_in)`
+/// matrix anywhere.
+#[test]
+fn prop_structured_backward_matches_materialised() {
+    check("structured bwd == materialise-and-project", 50, |rng| {
+        let dims = rand_dims(rng);
+        let t = rng.range(1, 6);
+        let variant = *rng.choice(&[Variant::It, Variant::Ot, Variant::Dt]);
+        let threads = *rng.choice(&[1usize, 2, 4, 7]);
+        let wl = rand_vec(rng, dims.component_params());
+        let wu = rand_vec(rng, dims.component_params());
+        let x = rand_vec(rng, t * dims.f_in());
+        let dy = rand_vec(rng, t * dims.f_out());
+        let (rwl, rwu, rdx) = dyad_backward(&wl, &wu, &x, &dy, dims, variant, t);
+        let (dwl, dwu) = dyad_backward_dw_with_threads(&x, &dy, dims, variant, t, threads);
+        let dyc = transpose(&dy, t, dims.f_out());
+        let dxc = dyad_backward_dx_with_threads(&wl, &wu, &dyc, dims, variant, t, threads);
+        let dx = transpose(&dxc, dims.f_in(), t);
+        for (name, got, want) in
+            [("dwl", &dwl, &rwl), ("dwu", &dwu, &rwu), ("dx", &dx, &rdx)]
+        {
+            for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                if (a - b).abs() > 1e-3 {
+                    return Err(format!(
+                        "{dims:?} {variant:?} t={t} threads={threads} {name}[{i}]: {a} vs {b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Widths that n_dyad does not divide are rejected up front (paper
 /// §5.1 would pad; this stack refuses loudly instead).
 #[test]
@@ -187,6 +226,24 @@ fn prop_thread_count_bitwise_deterministic() {
                 dyad_fused_with_threads(&wl, &wu, &x, dims, variant, nb, None, threads);
             if one != many {
                 return Err(format!("{dims:?} {variant:?} differs at {threads} threads"));
+            }
+        }
+        // the structured backward kernels hold the same guarantee:
+        // every dwl/dwu/dx row is owned by one thread, fixed order
+        let t = rng.range(1, 6);
+        let xa = rand_vec(rng, t * dims.f_in());
+        let dy = rand_vec(rng, t * dims.f_out());
+        let dyc = rand_vec(rng, dims.f_out() * t);
+        let dw_one = dyad_backward_dw_with_threads(&xa, &dy, dims, variant, t, 1);
+        let dx_one = dyad_backward_dx_with_threads(&wl, &wu, &dyc, dims, variant, t, 1);
+        for threads in [2usize, 3, 8] {
+            if dyad_backward_dw_with_threads(&xa, &dy, dims, variant, t, threads) != dw_one {
+                return Err(format!("{dims:?} {variant:?} dw differs at {threads} threads"));
+            }
+            if dyad_backward_dx_with_threads(&wl, &wu, &dyc, dims, variant, t, threads)
+                != dx_one
+            {
+                return Err(format!("{dims:?} {variant:?} dx differs at {threads} threads"));
             }
         }
         let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
