@@ -11,7 +11,7 @@ use dyad_repro::util::cli::Args;
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let backend = open_backend(
-        BackendKind::from_str(&args.str_or("backend", "native"))?,
+        args.str_or("backend", "native").parse::<BackendKind>()?,
         std::path::Path::new(&args.str_or("artifacts", "artifacts")),
     )?;
     dyad_repro::eval::mnist_probe::run(

@@ -18,7 +18,7 @@ fn main() -> Result<()> {
     let n_requests = args.usize_or("requests", 96)?;
     let n_clients = args.usize_or("clients", 6)?;
     let cfg = ServeConfig {
-        backend: BackendKind::from_str(&args.str_or("backend", "native"))?,
+        backend: args.str_or("backend", "native").parse::<BackendKind>()?,
         artifacts_dir: args.str_or("artifacts", "artifacts").into(),
         arch: args.str_or("arch", "opt-mini"),
         variant: args.str_or("variant", "dyad_it"),

@@ -21,7 +21,7 @@ fn main() -> Result<()> {
     // LM pretraining needs the xla backend today (native transformer
     // training is a ROADMAP item); --backend native will error there.
     let backend = open_backend(
-        BackendKind::from_str(&args.str_or("backend", "xla"))?,
+        args.str_or("backend", "xla").parse::<BackendKind>()?,
         std::path::Path::new(&args.str_or("artifacts", "artifacts")),
     )?;
     let grammar = Grammar::new();
@@ -46,9 +46,17 @@ fn main() -> Result<()> {
 
         // zero-shot minimal pairs on the fresh checkpoint
         let train_spec = backend.manifest().artifact(&cfg.train_artifact(8))?.clone();
-        let state = CheckpointManager::new(&cfg.out_dir).load_state(&train_spec)?;
+        let state =
+            CheckpointManager::new(&cfg.out_dir).load_state(backend.as_ref(), &train_spec)?;
         let score_art = backend.load(&cfg.artifact("score"))?;
-        let blimp = eval::blimp::evaluate(score_art.as_ref(), &state, &tokenizer, 40, 9)?;
+        let blimp = eval::blimp::evaluate(
+            backend.as_ref(),
+            score_art.as_ref(),
+            &state,
+            &tokenizer,
+            40,
+            9,
+        )?;
         println!(
             "{variant}: loss {:.3} -> {:.3} (valid {:.3}), BLIMP mean {:.3}, \
              {} params, {:.0} ms/call",

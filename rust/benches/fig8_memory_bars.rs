@@ -24,11 +24,11 @@ fn main() {
                 .artifact(&format!("{arch}/{v}/train_k1"))
                 .expect("artifact")
                 .clone();
-            let state = TrainState::init(&spec, 0).expect("init");
+            let state = TrainState::init(backend.as_ref(), &spec, 0).expect("init");
             let dir = std::env::temp_dir().join(format!("dyad-fig8-{arch}-{v}"));
             let _ = std::fs::remove_dir_all(&dir);
             let ckpt = CheckpointManager::new(&dir)
-                .save_params(&spec, &state)
+                .save_params(backend.as_ref(), &spec, &state)
                 .expect("save");
             // non-embedding params (paper's metric): total minus tok+pos
             let emb: usize = spec

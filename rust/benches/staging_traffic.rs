@@ -1,0 +1,137 @@
+//! Staging-traffic comparison: legacy host-tensor `run` vs the
+//! resident-bindings path, on the MNIST train-step artifact.
+//!
+//! The legacy path re-presents the full positional input set — params,
+//! Adam m/v, scalars, data — at the host boundary on every call. The
+//! bindings path ([`TrainState`]) stages params/m/v once at init and
+//! uploads only the per-call microbatches plus the two control
+//! scalars. The numbers come from `runtime::staging`'s per-thread
+//! byte counters, so the drop is measured, not asserted by
+//! construction; CI's smoke job checks the structural contract
+//! (`bound_step_bytes == percall_expected_bytes < legacy_step_bytes`).
+//!
+//!     cargo bench --bench staging_traffic        # full
+//!     BENCH_QUICK=1 cargo bench --bench staging_traffic
+
+use anyhow::{Context, Result};
+
+use dyad_repro::bench_support::{
+    backend_from_env, legacy_train_inputs, quick_mode, staging_delta, write_bench_json,
+};
+use dyad_repro::data::MnistGen;
+use dyad_repro::runtime::{Backend, Executable, Role, TrainState};
+use dyad_repro::tensor::Tensor;
+use dyad_repro::util::json::{num, obj, s};
+use dyad_repro::util::rng::Rng;
+
+const ARTIFACT: &str = "mnist/dyad_it/train_k4";
+const LR: f32 = 1e-3;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let quick = quick_mode();
+    let n_calls = if quick { 3 } else { 12 };
+    let backend = backend_from_env()?;
+    let art = backend.load(ARTIFACT)?;
+    let spec = art.spec().clone();
+    let k = spec.meta_usize("k_micro")?;
+    let b = spec.meta_usize("batch")?;
+
+    // Bytes a call must stage no matter what: the fresh microbatches
+    // plus the step/lr scalars.
+    let percall_expected: usize = spec
+        .inputs
+        .iter()
+        .filter(|io| matches!(io.role, Role::Data | Role::Scalar))
+        .map(|io| io.numel().max(1) * io.dtype.size_bytes())
+        .sum();
+    let state_bytes: usize = spec
+        .inputs
+        .iter()
+        .filter(|io| matches!(io.role, Role::Param | Role::OptM | Role::OptV))
+        .map(|io| io.numel() * io.dtype.size_bytes())
+        .sum();
+
+    // ---- legacy path: full host-tensor set presented per call ----
+    let mut rng = Rng::new(0);
+    let mut host: Vec<Tensor> = Vec::new();
+    for io in &spec.inputs {
+        match io.role {
+            Role::Param => {
+                let init = io.init.as_ref().context("param without init")?;
+                host.push(Tensor::init(&io.shape, init, &mut rng));
+            }
+            Role::OptM | Role::OptV => host.push(Tensor::zeros(&io.shape, io.dtype)),
+            _ => {}
+        }
+    }
+    let mut gen = MnistGen::new(7);
+    let mut step = 0.0f32;
+    let mut legacy_step_bytes = 0u64;
+    for call in 0..n_calls {
+        let (images, labels) = gen.train_batch(k, b);
+        let step_t = Tensor::scalar_f32(step);
+        let lr_t = Tensor::scalar_f32(LR);
+        let data = [images, labels];
+        let inputs = legacy_train_inputs(&spec, &host, &step_t, &lr_t, &data)?;
+        let (mut out, delta) = staging_delta(|| art.run(&inputs))?;
+        let _losses = out.pop().context("losses output")?;
+        step = out.pop().context("step output")?.scalar_value_f32()?;
+        host = out;
+        legacy_step_bytes = delta.host_to_backend_bytes();
+        println!(
+            "legacy  call {call}: {legacy_step_bytes:>12} B host->backend"
+        );
+    }
+
+    // ---- bindings path: params/m/v resident, batches uploaded ----
+    let (mut state, init_delta) =
+        staging_delta(|| TrainState::init(backend.as_ref(), &spec, 0))?;
+    let mut gen = MnistGen::new(7);
+    let mut bound_step_bytes = 0u64;
+    for call in 0..n_calls {
+        let (images, labels) = gen.train_batch(k, b);
+        let (_losses, delta) = staging_delta(|| {
+            state.train_call(backend.as_ref(), art.as_ref(), LR, vec![images, labels])
+        })?;
+        bound_step_bytes = delta.host_to_backend_bytes();
+        println!(
+            "bound   call {call}: {bound_step_bytes:>12} B host->backend"
+        );
+    }
+
+    let ratio = legacy_step_bytes as f64 / bound_step_bytes.max(1) as f64;
+    println!(
+        "\n{ARTIFACT} ({} resident state bytes):\n  \
+         legacy per call {legacy_step_bytes} B, bindings per call \
+         {bound_step_bytes} B (expected activations+scalars \
+         {percall_expected} B) — {ratio:.1}x less host->backend traffic; \
+         one-time residency staging {} B",
+        state_bytes,
+        init_delta.host_to_backend_bytes()
+    );
+
+    let path = write_bench_json(
+        "staging",
+        &obj(vec![
+            ("bench", s("staging_traffic")),
+            ("artifact", s(ARTIFACT)),
+            ("quick", dyad_repro::util::json::Json::Bool(quick)),
+            ("calls", num(n_calls as f64)),
+            ("legacy_step_bytes", num(legacy_step_bytes as f64)),
+            ("bound_step_bytes", num(bound_step_bytes as f64)),
+            ("percall_expected_bytes", num(percall_expected as f64)),
+            ("state_bytes", num(state_bytes as f64)),
+            ("init_staging_bytes", num(init_delta.host_to_backend_bytes() as f64)),
+            ("legacy_over_bound", num(ratio)),
+        ]),
+    )?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

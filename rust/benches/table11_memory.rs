@@ -25,11 +25,13 @@ fn main() {
     for v in variants {
         let name = format!("{arch}/{v}/train_k1");
         let spec = backend.manifest().artifact(&name).expect("artifact").clone();
-        let state = TrainState::init(&spec, 0).expect("init");
+        let state = TrainState::init(backend.as_ref(), &spec, 0).expect("init");
         let dir = std::env::temp_dir().join(format!("dyad-table11-{v}"));
         let _ = std::fs::remove_dir_all(&dir);
         let mgr = CheckpointManager::new(&dir);
-        let ckpt_bytes = mgr.save_params(&spec, &state).expect("save params");
+        let ckpt_bytes = mgr
+            .save_params(backend.as_ref(), &spec, &state)
+            .expect("save params");
         let params = spec.param_count();
         // params + m + v, fp32 — the training-resident state
         let state_bytes = 3 * params * 4;

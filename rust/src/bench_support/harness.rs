@@ -6,7 +6,10 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{open_backend, Backend, BackendKind, Executable, Role};
+use crate::runtime::{
+    open_backend, staging, ArtifactSpec, Backend, BackendKind, Bindings, DeviceTensor,
+    Executable, Role,
+};
 use crate::tensor::{DType, InitSpec, Tensor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -56,7 +59,7 @@ pub fn quick_mode() -> bool {
 /// `artifacts`, only read by the xla backend).
 pub fn backend_from_env() -> Result<Box<dyn Backend>> {
     let kind = match std::env::var("REPRO_BACKEND") {
-        Ok(v) => BackendKind::from_str(&v)?,
+        Ok(v) => v.parse::<BackendKind>()?,
         Err(_) => BackendKind::Native,
     };
     let dir = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -121,4 +124,99 @@ pub fn bench_artifact(
         samples.push(t.elapsed_ms());
     }
     Ok(Summary::of(&samples))
+}
+
+/// Time one artifact through the resident-bindings path: every input
+/// is uploaded once, bound resident, and the measured region is a
+/// bare `Bindings::call` — what a hot loop with device-held weights
+/// actually pays per call.
+pub fn bench_artifact_bound(
+    backend: &dyn Backend,
+    name: &str,
+    opts: BenchOpts,
+) -> Result<Summary> {
+    let art = backend.load(name)?;
+    let mut rng = Rng::new(opts.seed);
+    let dev: Vec<DeviceTensor> = art
+        .spec()
+        .inputs
+        .iter()
+        .map(|io| backend.upload(synth_input(io, &mut rng)))
+        .collect::<Result<_>>()?;
+    let mut bind = Bindings::new(art.as_ref());
+    for (i, d) in dev.iter().enumerate() {
+        bind.bind(i, d.clone())?;
+    }
+    for _ in 0..opts.warmup.max(1) {
+        let _ = bind.call(&[])?;
+    }
+    let mut samples = Vec::with_capacity(opts.reps);
+    for _ in 0..opts.reps {
+        let t = Timer::start();
+        let out = bind.call(&[])?;
+        std::hint::black_box(&out);
+        samples.push(t.elapsed_ms());
+    }
+    Ok(Summary::of(&samples))
+}
+
+/// Run `f` and report the host↔backend staging traffic it generated
+/// on this thread (see [`staging`]).
+pub fn staging_delta<T>(
+    f: impl FnOnce() -> Result<T>,
+) -> Result<(T, staging::StagingSnapshot)> {
+    let before = staging::snapshot();
+    let out = f()?;
+    Ok((out, staging::snapshot().since(&before)))
+}
+
+/// Assemble the full positional host-tensor input set of a train-step
+/// artifact from its role groups: `state` is params ++ m ++ v in feed
+/// order, scalars resolve by name (`step`/`lr`), `data` fills the
+/// `Role::Data` slots left-to-right. This is the legacy-path mirror of
+/// `TrainState::train_call`'s device-side assembly; the staging bench
+/// and the parity tests share it so the feed-order contract lives in
+/// one place.
+pub fn legacy_train_inputs<'a>(
+    spec: &ArtifactSpec,
+    state: &'a [Tensor],
+    step: &'a Tensor,
+    lr: &'a Tensor,
+    data: &'a [Tensor],
+) -> Result<Vec<&'a Tensor>> {
+    let mut inputs = Vec::with_capacity(spec.inputs.len());
+    let (mut si, mut di) = (0, 0);
+    for io in &spec.inputs {
+        match io.role {
+            Role::Param | Role::OptM | Role::OptV => {
+                anyhow::ensure!(
+                    si < state.len(),
+                    "{}: more state inputs than the {} tensors given",
+                    spec.name,
+                    state.len()
+                );
+                inputs.push(&state[si]);
+                si += 1;
+            }
+            Role::Scalar => inputs.push(if io.name == "step" { step } else { lr }),
+            Role::Data => {
+                anyhow::ensure!(
+                    di < data.len(),
+                    "{}: more data inputs than the {} tensors given",
+                    spec.name,
+                    data.len()
+                );
+                inputs.push(&data[di]);
+                di += 1;
+            }
+        }
+    }
+    anyhow::ensure!(
+        si == state.len() && di == data.len(),
+        "{}: {} state / {} data tensors left unconsumed",
+        spec.name,
+        state.len() - si,
+        data.len() - di
+    );
+    Ok(inputs)
 }

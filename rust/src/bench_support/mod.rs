@@ -10,6 +10,7 @@ pub mod harness;
 pub mod workloads;
 
 pub use harness::{
-    backend_from_env, bench_artifact, quick_mode, synth_input, write_bench_json, BenchOpts,
+    backend_from_env, bench_artifact, bench_artifact_bound, legacy_train_inputs, quick_mode,
+    staging_delta, synth_input, write_bench_json, BenchOpts,
 };
 pub use workloads::{ff_table, ff_timing, print_ff_table, FfTiming};

@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{ArtifactSpec, TrainState};
+use crate::runtime::{ArtifactSpec, Backend, TrainState};
 use crate::tensor::{load_checkpoint, save_checkpoint};
 
 pub struct CheckpointManager {
@@ -29,8 +29,14 @@ impl CheckpointManager {
     }
 
     /// Save the full resumable state (params + Adam moments + step).
-    pub fn save_state(&self, spec: &ArtifactSpec, state: &TrainState) -> Result<u64> {
-        let entries = state.to_tensors(spec)?;
+    /// Downloads the backend-resident state to host tensors first.
+    pub fn save_state(
+        &self,
+        backend: &dyn Backend,
+        spec: &ArtifactSpec,
+        state: &TrainState,
+    ) -> Result<u64> {
+        let entries = state.to_tensors(backend, spec)?;
         let refs: Vec<(String, &crate::tensor::Tensor)> =
             entries.iter().map(|(n, t)| (n.clone(), t)).collect();
         save_checkpoint(&self.latest_path(), &refs)?;
@@ -38,19 +44,29 @@ impl CheckpointManager {
     }
 
     /// Save params only; returns on-disk size in bytes (Table 11).
-    pub fn save_params(&self, spec: &ArtifactSpec, state: &TrainState) -> Result<u64> {
-        let entries = state.params_to_tensors(spec)?;
+    pub fn save_params(
+        &self,
+        backend: &dyn Backend,
+        spec: &ArtifactSpec,
+        state: &TrainState,
+    ) -> Result<u64> {
+        let entries = state.params_to_tensors(backend, spec)?;
         let refs: Vec<(String, &crate::tensor::Tensor)> =
             entries.iter().map(|(n, t)| (n.clone(), t)).collect();
         save_checkpoint(&self.params_path(), &refs)?;
         Ok(std::fs::metadata(self.params_path())?.len())
     }
 
-    /// Restore a full state saved by [`CheckpointManager::save_state`].
-    pub fn load_state(&self, spec: &ArtifactSpec) -> Result<TrainState> {
+    /// Restore a full state saved by [`CheckpointManager::save_state`]
+    /// and stage it onto `backend` once.
+    pub fn load_state(
+        &self,
+        backend: &dyn Backend,
+        spec: &ArtifactSpec,
+    ) -> Result<TrainState> {
         let entries = load_checkpoint(&self.latest_path())
             .with_context(|| format!("load {}", self.latest_path().display()))?;
-        TrainState::from_tensors(spec, &entries)
+        TrainState::from_tensors(backend, spec, &entries)
     }
 
     pub fn has_state(&self) -> bool {

@@ -90,13 +90,14 @@ impl Trainer {
             ],
         );
 
-        // Init or resume.
+        // Init or resume. The state stages onto the backend once here;
+        // each train_call below uploads only the token batch + scalars.
         let ckpt = CheckpointManager::new(&cfg.out_dir);
         let mut state = if ckpt.has_state() {
             log.event("resume", vec![("from", s(&ckpt.latest_path().to_string_lossy()))]);
-            ckpt.load_state(art.spec())?
+            ckpt.load_state(backend, art.spec())?
         } else {
-            TrainState::init(art.spec(), cfg.seed)?
+            TrainState::init(backend, art.spec(), cfg.seed)?
         };
 
         let eval_art = backend.load(&cfg.artifact("eval_loss")).ok();
@@ -114,7 +115,7 @@ impl Trainer {
             let lr = schedule.at(step) as f32;
             let tokens = data.train_batch(k, b, &mut rng);
             let t = Timer::start();
-            let losses = state.train_call(art.as_ref(), lr, &[tokens])?;
+            let losses = state.train_call(backend, art.as_ref(), lr, vec![tokens])?;
             call_ms.push(t.elapsed_ms());
             all_losses.extend_from_slice(&losses);
 
@@ -139,7 +140,7 @@ impl Trainer {
             if let Some(ev) = &eval_art {
                 let every = cfg.eval_every.max(1);
                 if (call + 1) % every.div_ceil(k).max(1) == 0 || call + 1 == n_calls {
-                    valid_loss = self.valid_loss(ev.as_ref(), &state, &data)?;
+                    valid_loss = self.valid_loss(backend, ev.as_ref(), &state, &data)?;
                     log.event(
                         "eval",
                         vec![
@@ -151,8 +152,8 @@ impl Trainer {
             }
         }
 
-        let state_bytes = ckpt.save_state(art.spec(), &state)?;
-        let params_bytes = ckpt.save_params(art.spec(), &state)?;
+        let state_bytes = ckpt.save_state(backend, art.spec(), &state)?;
+        let params_bytes = ckpt.save_params(backend, art.spec(), &state)?;
         let n = all_losses.len();
         let head = &all_losses[..(n / 10).max(1)];
         let tail = &all_losses[n - (n / 10).max(1)..];
@@ -186,6 +187,7 @@ impl Trainer {
 
     fn valid_loss(
         &self,
+        backend: &dyn Backend,
         eval_art: &dyn Executable,
         state: &TrainState,
         data: &TokenDataset,
@@ -195,7 +197,7 @@ impl Trainer {
         let mut total = 0.0;
         for i in 0..n_batches {
             let tokens = data.valid_batch(b, i * b);
-            let out = crate::eval::run_with_params(eval_art, state, &[tokens])?;
+            let out = crate::eval::run_with_params(backend, eval_art, state, vec![tokens])?;
             total += out[0].as_f32()?[0] as f64;
         }
         Ok(total / n_batches as f64)

@@ -10,7 +10,7 @@ use super::run_with_params;
 use crate::data::dataset::pad_batch;
 use crate::data::grammar::{Grammar, Phenomenon};
 use crate::data::tokenizer::Tokenizer;
-use crate::runtime::{Executable, TrainState};
+use crate::runtime::{Backend, Executable, TrainState};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -22,6 +22,7 @@ pub struct BlimpResult {
 
 /// Score a batch of token sequences; returns per-sequence summed logp.
 fn score_batch(
+    backend: &dyn Backend,
     art: &dyn Executable,
     state: &TrainState,
     seqs: &[Vec<i32>],
@@ -29,12 +30,13 @@ fn score_batch(
     s: usize,
 ) -> Result<Vec<f64>> {
     let (tokens, mask) = pad_batch(seqs, b, s)?;
-    let out = run_with_params(art, state, &[tokens, mask])?;
+    let out = run_with_params(backend, art, state, vec![tokens, mask])?;
     let sums = out[0].as_f32()?;
     Ok(sums[..seqs.len()].iter().map(|&x| x as f64).collect())
 }
 
 pub fn evaluate(
+    backend: &dyn Backend,
     score_art: &dyn Executable,
     state: &TrainState,
     tokenizer: &Tokenizer,
@@ -56,7 +58,7 @@ pub fn evaluate(
              -> Result<()> {
                 // pending holds alternating good/bad sequences
                 for chunk in pending.chunks(b) {
-                    let scores = score_batch(score_art, state, chunk, b, s)?;
+                    let scores = score_batch(backend, score_art, state, chunk, b, s)?;
                     for pair in scores.chunks_exact(2) {
                         if pair[0] > pair[1] {
                             *correct += 1;

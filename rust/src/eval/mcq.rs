@@ -10,7 +10,7 @@ use anyhow::Result;
 use super::run_with_params;
 use crate::data::grammar::{Grammar, McqTask};
 use crate::data::tokenizer::Tokenizer;
-use crate::runtime::{Executable, TrainState};
+use crate::runtime::{Backend, Executable, TrainState};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -23,6 +23,7 @@ pub struct McqResult {
 
 /// Score (tokens, mask) rows; returns (sum_logp, n_tok) per row.
 fn score_rows(
+    backend: &dyn Backend,
     art: &dyn Executable,
     state: &TrainState,
     rows: &[(Vec<i32>, Vec<f32>)],
@@ -39,16 +40,17 @@ fn score_rows(
             toks[i * s..i * s + n].copy_from_slice(&t[start..]);
             mask[i * s..i * s + n].copy_from_slice(&m[start..]);
         }
-        let out = run_with_params(
+        let res = run_with_params(
+            backend,
             art,
             state,
-            &[
+            vec![
                 Tensor::from_i32(&[b, s], toks)?,
                 Tensor::from_f32(&[b, s], mask)?,
             ],
         )?;
-        let sums = out[0].as_f32()?;
-        let counts = out[1].as_f32()?;
+        let sums = res[0].as_f32()?;
+        let counts = res[1].as_f32()?;
         for i in 0..chunk.len() {
             out.push((sums[i] as f64, counts[i] as f64));
         }
@@ -57,6 +59,7 @@ fn score_rows(
 }
 
 pub fn evaluate(
+    backend: &dyn Backend,
     score_art: &dyn Executable,
     state: &TrainState,
     tokenizer: &Tokenizer,
@@ -93,7 +96,7 @@ pub fn evaluate(
                 }
                 rows.push((toks, mask));
             }
-            let scored = score_rows(score_art, state, &rows, b, s)?;
+            let scored = score_rows(backend, score_art, state, &rows, b, s)?;
             let pick = scored
                 .iter()
                 .enumerate()

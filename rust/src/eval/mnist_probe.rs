@@ -35,14 +35,17 @@ pub fn run_variant(
     let acc_art = backend.load(&format!("mnist/{variant}/accuracy"))?;
     let k = train_art.spec().meta_usize("k_micro")?;
     let b = train_art.spec().meta_usize("batch")?;
-    let mut state = TrainState::init(train_art.spec(), seed)?;
+    // params/m/v stage onto the backend once; each call uploads only
+    // the fresh microbatches
+    let mut state = TrainState::init(backend, train_art.spec(), seed)?;
     let mut gen = MnistGen::new(seed ^ 0xD161);
     let timer = Timer::start();
     let mut final_loss = f64::NAN;
     let n_calls = steps.div_ceil(k);
     for _ in 0..n_calls {
         let (images, labels) = gen.train_batch(k, b);
-        let losses = state.train_call(train_art.as_ref(), 1e-3, &[images, labels])?;
+        let losses =
+            state.train_call(backend, train_art.as_ref(), 1e-3, vec![images, labels])?;
         final_loss = *losses.last().unwrap() as f64;
     }
     let train_wall_s = timer.elapsed_s();
@@ -54,8 +57,12 @@ pub fn run_variant(
     let eval_batches = 20;
     for _ in 0..eval_batches {
         let (images, labels) = test_gen.batch(b);
-        let out =
-            crate::eval::run_with_params(acc_art.as_ref(), &state, &[images, labels])?;
+        let out = crate::eval::run_with_params(
+            backend,
+            acc_art.as_ref(),
+            &state,
+            vec![images, labels],
+        )?;
         correct += out[0].as_i32()?[0] as usize;
         total += b;
     }

@@ -24,15 +24,18 @@ pub use report::QualityReport;
 
 use anyhow::Result;
 
-use crate::runtime::{Executable, Role, TrainState};
+use crate::runtime::{Backend, Bindings, DeviceTensor, Executable, Role, TrainState};
 use crate::tensor::Tensor;
 
 /// Run a params+data artifact (score/features/next_logits/...) against
-/// the current state. `data` are positional tensors for the Data inputs.
+/// the current state. The state's parameter handles stay resident on
+/// `backend`; only the positional `data` tensors are uploaded per
+/// call, and the outputs are downloaded back to host tensors.
 pub fn run_with_params(
+    backend: &dyn Backend,
     art: &dyn Executable,
     state: &TrainState,
-    data: &[Tensor],
+    data: Vec<Tensor>,
 ) -> Result<Vec<Tensor>> {
     let spec = art.spec();
     let n_data = spec.inputs.iter().filter(|i| i.role == Role::Data).count();
@@ -43,7 +46,14 @@ pub fn run_with_params(
         data.len(),
         n_data
     );
-    let mut inputs: Vec<&Tensor> = state.param_tensors().iter().collect();
-    inputs.extend(data.iter());
-    art.run(&inputs)
+    let mut bind = Bindings::new(art);
+    bind.bind_role(Role::Param, state.param_handles())?;
+    let dev: Vec<DeviceTensor> = data
+        .into_iter()
+        .map(|t| backend.upload(t))
+        .collect::<Result<_>>()?;
+    let refs: Vec<&DeviceTensor> = dev.iter().collect();
+    let out = bind.call(&refs)?;
+    // fresh outputs are sole-owner handles: copy-free on native
+    out.into_iter().map(|d| backend.take(d)).collect()
 }

@@ -13,7 +13,7 @@ use super::run_with_params;
 use crate::data::dataset::pad_batch;
 use crate::data::grammar::{Grammar, ProbeTask};
 use crate::data::tokenizer::Tokenizer;
-use crate::runtime::{Executable, TrainState};
+use crate::runtime::{Backend, Executable, TrainState};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -25,6 +25,7 @@ pub struct ProbeResult {
 
 /// Extract features for a set of token sequences.
 fn features_for(
+    backend: &dyn Backend,
     art: &dyn Executable,
     state: &TrainState,
     seqs: &[Vec<i32>],
@@ -35,7 +36,7 @@ fn features_for(
     let mut out = Vec::with_capacity(seqs.len());
     for chunk in seqs.chunks(b) {
         let (tokens, mask) = pad_batch(chunk, b, s)?;
-        let res = run_with_params(art, state, &[tokens, mask])?;
+        let res = run_with_params(backend, art, state, vec![tokens, mask])?;
         let flat = res[0].as_f32()?;
         for i in 0..chunk.len() {
             out.push(flat[i * d..(i + 1) * d].to_vec());
@@ -91,6 +92,7 @@ impl LogisticHead {
 }
 
 pub fn evaluate(
+    backend: &dyn Backend,
     features_art: &dyn Executable,
     state: &TrainState,
     tokenizer: &Tokenizer,
@@ -112,7 +114,7 @@ pub fn evaluate(
             seqs.push(tokenizer.encode_sentence(&words));
             labels.push(label);
         }
-        let feats = features_for(features_art, state, &seqs, b, s, d)?;
+        let feats = features_for(backend, features_art, state, &seqs, b, s, d)?;
         let (train_x, test_x) = feats.split_at(n_train);
         let (train_y, test_y) = labels.split_at(n_train);
         let head = LogisticHead::train(train_x, train_y, 30, 0.01, seed ^ 0x9E37);

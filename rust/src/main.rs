@@ -76,7 +76,7 @@ fn print_help() {
 }
 
 fn backend_kind(args: &Args) -> Result<BackendKind> {
-    BackendKind::from_str(&args.str_or("backend", "native"))
+    args.str_or("backend", "native").parse::<BackendKind>()
 }
 
 fn backend_of(args: &Args) -> Result<Box<dyn Backend>> {
@@ -152,7 +152,7 @@ fn run_suite(
         .artifact(&cfg.train_artifact(8))
         .or_else(|_| backend.manifest().artifact(&cfg.train_artifact(1)))?
         .clone();
-    let state = ckpt.load_state(&train_spec)?;
+    let state = ckpt.load_state(backend, &train_spec)?;
     let score_art = backend.load(&cfg.artifact("score"))?;
     let feats_art = backend.load(&cfg.artifact("features"))?;
     let pairs = args.usize_or("pairs", 50)?;
@@ -160,13 +160,14 @@ fn run_suite(
     let shots = args.usize_or("shots", 3)?;
     let probe_train = args.usize_or("probe-train", 128)?;
     let probe_test = args.usize_or("probe-test", 64)?;
-    let blimp =
-        eval::blimp::evaluate(score_art.as_ref(), &state, &tokenizer, pairs, cfg.seed)?;
+    let blimp = eval::blimp::evaluate(
+        backend, score_art.as_ref(), &state, &tokenizer, pairs, cfg.seed,
+    )?;
     let mcq = eval::mcq::evaluate(
-        score_art.as_ref(), &state, &tokenizer, mcq_items, shots, cfg.seed,
+        backend, score_art.as_ref(), &state, &tokenizer, mcq_items, shots, cfg.seed,
     )?;
     let probe = eval::probe::evaluate(
-        feats_art.as_ref(), &state, &tokenizer, probe_train, probe_test, cfg.seed,
+        backend, feats_art.as_ref(), &state, &tokenizer, probe_train, probe_test, cfg.seed,
     )?;
     Ok(eval::QualityReport {
         arch: cfg.arch.clone(),
@@ -200,20 +201,21 @@ fn cmd_eval(args: &Args) -> Result<()> {
             if !mgr.has_state() {
                 bail!("no checkpoint in {}", ckpt_dir.display());
             }
-            mgr.load_state(&train_spec)?
+            mgr.load_state(backend.as_ref(), &train_spec)?
         }
         None => {
             eprintln!(
                 "note: no --ckpt given; evaluating freshly initialised \
                  (untrained) parameters"
             );
-            TrainState::init(&train_spec, cfg.seed)?
+            TrainState::init(backend.as_ref(), &train_spec, cfg.seed)?
         }
     };
     let score_art = backend.load(&cfg.artifact("score"))?;
     let pairs = args.usize_or("pairs", 50)?;
-    let blimp =
-        eval::blimp::evaluate(score_art.as_ref(), &state, &tokenizer, pairs, cfg.seed)?;
+    let blimp = eval::blimp::evaluate(
+        backend.as_ref(), score_art.as_ref(), &state, &tokenizer, pairs, cfg.seed,
+    )?;
     println!("BLIMP mean = {:.4}", blimp.mean);
     for (name, acc, n) in &blimp.per_phenomenon {
         println!("  {name:<24} {acc:.4}  (n={n})");

@@ -4,41 +4,63 @@
 //! `bench_support`, the CLI) need from an execution engine is captured
 //! by two traits:
 //!
-//! * [`Backend`] — owns a [`Manifest`] (the artifact contract) and
-//!   loads executables by manifest name, caching per backend.
-//! * [`Executable`] — runs one artifact on positional host tensors and
-//!   returns its outputs as host tensors, in manifest output order.
+//! * [`Backend`] — owns a [`Manifest`] (the artifact contract), loads
+//!   executables by manifest name (cached per backend), and owns the
+//!   buffer plane: [`Backend::upload`]/[`Backend::download`]/
+//!   [`Backend::alloc`] move data across the host↔backend boundary and
+//!   hand out opaque [`DeviceTensor`] handles.
+//! * [`Executable`] — runs one artifact. The primary call path is
+//!   [`Executable::run_bound`] over device-resident handles (params
+//!   and optimizer state stay backend-side across calls); the
+//!   host-tensor [`Executable::run`] remains as the stage-everything
+//!   convenience wrapper.
+//!
+//! [`Bindings`] is the builder callers use to mark inputs *resident*
+//! (bound once — params, Adam moments) versus *per-call* (activations,
+//! token batches), then `call` with just the per-call handles.
 //!
 //! Two implementations exist:
 //!
 //! * the **native CPU backend** ([`crate::runtime::NativeBackend`]) —
-//!   pure Rust, always available, backed by `dyad::kernel`'s parallel
-//!   blocked matmuls and the fused DYAD forward; its manifest is
-//!   synthesised in-process (`runtime::catalog`), so no artifact files
-//!   are needed on disk;
+//!   pure Rust, always available; `upload` wraps the host tensor in an
+//!   `Rc` (zero-copy), so residency costs nothing and `run_bound`
+//!   executes straight over the wrapped buffers;
 //! * the **PJRT/XLA backend** ([`crate::runtime::Engine`], behind the
-//!   `xla` cargo feature) — compiles AOT'd HLO text from an
-//!   `artifacts/` directory produced by `make artifacts`.
+//!   `xla` cargo feature) — keeps uploaded tensors alive as
+//!   `xla::Literal`s, so resident state skips the per-call
+//!   tensor→literal staging entirely.
 //!
-//! Backends hold non-`Send` state (the PJRT client); like the previous
-//! concrete `Engine`, a backend lives and dies on one thread — the
-//! serve worker constructs its own.
+//! Backends hold non-`Send` state (the PJRT client, `Rc` handles);
+//! like the previous concrete `Engine`, a backend lives and dies on
+//! one thread — the serve worker constructs its own.
 
 use std::path::Path;
 use std::rc::Rc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use super::artifact::{ArtifactSpec, IoSpec, Manifest};
-use crate::tensor::Tensor;
+use super::artifact::{ArtifactSpec, IoSpec, Manifest, Role};
+use super::device::{staging, DeviceTensor};
+use crate::tensor::{DType, Tensor};
 
-/// One loaded artifact: validated positional-tensor execution.
+/// One loaded artifact: validated positional execution.
 pub trait Executable {
     fn spec(&self) -> &ArtifactSpec;
 
-    /// Execute with the full positional input set (manifest order).
-    /// Outputs come back in manifest output order.
+    /// Execute with the full positional host-tensor input set
+    /// (manifest order). Outputs come back as host tensors in manifest
+    /// output order.
+    ///
+    /// This is the stage-everything convenience path: every input
+    /// crosses the host→backend boundary on every call. Hot loops that
+    /// reuse weights should upload them once and go through
+    /// [`Executable::run_bound`] / [`Bindings`] instead.
     fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute with the full positional set of device-resident
+    /// handles; outputs stay backend-resident. Inputs must have been
+    /// produced by the same backend (`upload`/`alloc`/`run_bound`).
+    fn run_bound(&self, inputs: &[&DeviceTensor]) -> Result<Vec<DeviceTensor>>;
 
     /// Convenience: fetch one named output from a result set.
     fn output_index(&self, name: &str) -> Result<usize> {
@@ -46,7 +68,7 @@ pub trait Executable {
     }
 }
 
-/// An execution engine: manifest + load-by-name.
+/// An execution engine: manifest + load-by-name + buffer plane.
 pub trait Backend {
     /// The artifact contract this backend serves.
     fn manifest(&self) -> &Manifest;
@@ -56,6 +78,144 @@ pub trait Backend {
 
     /// Human-readable platform tag ("native-cpu", "Host", ...).
     fn platform(&self) -> String;
+
+    /// Move a host tensor onto the backend. Takes ownership so
+    /// backends that store host memory (native CPU) can wrap the
+    /// buffer without copying its elements.
+    fn upload(&self, t: Tensor) -> Result<DeviceTensor>;
+
+    /// Copy a device-resident buffer back to a host tensor.
+    fn download(&self, t: &DeviceTensor) -> Result<Tensor>;
+
+    /// Consume a handle and return its host tensor. Semantically
+    /// `download`, but backends that store host memory recover the
+    /// buffer without copying when the handle is the last owner (the
+    /// native backend does — fresh `run_bound` outputs always are).
+    fn take(&self, t: DeviceTensor) -> Result<Tensor> {
+        self.download(&t)
+    }
+
+    /// Allocate a zero-filled backend buffer.
+    fn alloc(&self, shape: &[usize], dtype: DType) -> Result<DeviceTensor>;
+}
+
+/// Positional input bindings for one executable: slots marked
+/// *resident* hold a [`DeviceTensor`] across calls; the remaining
+/// slots are filled left-to-right from the per-call handles at
+/// [`Bindings::call`] time.
+///
+/// ```text
+/// let mut b = Bindings::new(art.as_ref());
+/// b.bind_role(Role::Param, state.param_handles())?;   // resident
+/// let out = b.call(&[&tokens_dev, &mask_dev])?;       // per-call
+/// ```
+pub struct Bindings<'e> {
+    exe: &'e dyn Executable,
+    slots: Vec<Option<DeviceTensor>>,
+}
+
+impl<'e> Bindings<'e> {
+    /// All slots start unbound (per-call).
+    pub fn new(exe: &'e dyn Executable) -> Bindings<'e> {
+        let n = exe.spec().inputs.len();
+        Bindings { exe, slots: vec![None; n] }
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        self.exe.spec()
+    }
+
+    /// Mark one positional input resident. Validates shape/dtype
+    /// against the manifest immediately.
+    pub fn bind(&mut self, index: usize, t: DeviceTensor) -> Result<&mut Self> {
+        let spec = self.exe.spec();
+        let io = spec.inputs.get(index).with_context(|| {
+            format!(
+                "{}: input index {index} out of range ({} inputs)",
+                spec.name,
+                spec.inputs.len()
+            )
+        })?;
+        validate_device_tensor(&t, io, &spec.name, index)?;
+        self.slots[index] = Some(t);
+        Ok(self)
+    }
+
+    /// Mark one named input resident.
+    pub fn bind_named(&mut self, name: &str, t: DeviceTensor) -> Result<&mut Self> {
+        let index = self.exe.spec().input_index(name)?;
+        self.bind(index, t)
+    }
+
+    /// Mark every input of `role` resident, in manifest feed order —
+    /// the one-liner for "params (and moments) live on the backend".
+    pub fn bind_role(&mut self, role: Role, handles: &[DeviceTensor]) -> Result<&mut Self> {
+        let spec = self.exe.spec();
+        let idxs: Vec<usize> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, io)| io.role == role)
+            .map(|(i, _)| i)
+            .collect();
+        if idxs.len() != handles.len() {
+            bail!(
+                "{}: {} inputs with role {role:?}, {} handles given",
+                spec.name,
+                idxs.len(),
+                handles.len()
+            );
+        }
+        for (i, h) in idxs.into_iter().zip(handles) {
+            self.bind(i, h.clone())?;
+        }
+        Ok(self)
+    }
+
+    /// Unbind a slot (returns the previously resident handle, if any).
+    pub fn unbind(&mut self, index: usize) -> Option<DeviceTensor> {
+        self.slots.get_mut(index).and_then(Option::take)
+    }
+
+    /// How many slots are currently resident.
+    pub fn resident_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Total bytes held resident by this binding set.
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(DeviceTensor::size_bytes)
+            .sum()
+    }
+
+    /// Execute: resident slots from the bindings, unbound slots filled
+    /// left-to-right from `per_call`. Outputs stay device-resident.
+    pub fn call(&self, per_call: &[&DeviceTensor]) -> Result<Vec<DeviceTensor>> {
+        let spec = self.exe.spec();
+        let n_unbound = self.slots.len() - self.resident_count();
+        if per_call.len() != n_unbound {
+            bail!(
+                "{}: {} per-call inputs given, bindings leave {} slots unbound",
+                spec.name,
+                per_call.len(),
+                n_unbound
+            );
+        }
+        let mut next = per_call.iter();
+        let full: Vec<&DeviceTensor> = self
+            .slots
+            .iter()
+            .map(|slot| match slot {
+                Some(t) => t,
+                // counts match, so `next` cannot run dry
+                None => *next.next().expect("per-call slot"),
+            })
+            .collect();
+        self.exe.run_bound(&full)
+    }
 }
 
 /// Which backend to execute on. Parsed from `--backend` / config.
@@ -68,16 +228,19 @@ pub enum BackendKind {
     Xla,
 }
 
-impl BackendKind {
-    #[allow(clippy::should_implement_trait)]
-    pub fn from_str(s: &str) -> Result<BackendKind> {
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BackendKind> {
         match s {
             "native" | "cpu" => Ok(BackendKind::Native),
             "xla" | "pjrt" => Ok(BackendKind::Xla),
             _ => bail!("unknown backend {s:?} (expected native|xla)"),
         }
     }
+}
 
+impl BackendKind {
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Native => "native",
@@ -103,13 +266,16 @@ fn open_xla(artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
 #[cfg(not(feature = "xla"))]
 fn open_xla(_artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
     bail!(
-        "the xla backend is not compiled in; add the `xla` dependency \
-         in rust/Cargo.toml (see its [features] note), rebuild with \
-         `cargo build --features xla`, or use `--backend native`"
+        "the xla backend is not compiled in; rebuild with \
+         `cargo build --features xla` (links the PJRT engine against \
+         the `xla` crate — see rust/Cargo.toml's [features] note), or \
+         use `--backend native`"
     )
 }
 
-/// Shape/dtype/arity validation shared by every backend.
+/// Arity + per-input shape/dtype validation shared by every backend's
+/// host-tensor path. Errors carry the positional index alongside the
+/// IO name.
 pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
     if inputs.len() != spec.inputs.len() {
         bail!(
@@ -119,28 +285,112 @@ pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
             spec.inputs.len()
         );
     }
-    for (t, io) in inputs.iter().zip(&spec.inputs) {
-        validate_tensor(t, io, &spec.name)?;
+    for (i, (t, io)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        validate_tensor(t, io, &spec.name, i)?;
     }
     Ok(())
 }
 
-pub fn validate_tensor(t: &Tensor, io: &IoSpec, artifact: &str) -> Result<()> {
-    if t.shape != io.shape {
+/// The one shape/dtype comparison behind every validator below.
+/// Returns the mismatch description (IO name + field + values), or
+/// `None` when the metadata matches; callers prefix the artifact and
+/// slot. Allocates only on failure.
+pub(crate) fn io_mismatch(shape: &[usize], dtype: DType, io: &IoSpec) -> Option<String> {
+    if shape != io.shape.as_slice() {
+        return Some(format!(
+            "{:?} shape {:?} != manifest {:?}",
+            io.name, shape, io.shape
+        ));
+    }
+    if dtype != io.dtype {
+        return Some(format!(
+            "{:?} dtype {:?} != manifest {:?}",
+            io.name, dtype, io.dtype
+        ));
+    }
+    None
+}
+
+/// Validate one host tensor against its IoSpec. `index` is the
+/// positional slot, reported alongside the IO name.
+pub fn validate_tensor(t: &Tensor, io: &IoSpec, artifact: &str, index: usize) -> Result<()> {
+    match io_mismatch(&t.shape, t.dtype(), io) {
+        Some(m) => bail!("{artifact}: input #{index} {m}"),
+        None => Ok(()),
+    }
+}
+
+/// Validate one device handle against its IoSpec (metadata only — the
+/// payload is checked by the executing backend).
+pub fn validate_device_tensor(
+    t: &DeviceTensor,
+    io: &IoSpec,
+    artifact: &str,
+    index: usize,
+) -> Result<()> {
+    match io_mismatch(t.shape(), t.dtype(), io) {
+        Some(m) => bail!("{artifact}: input #{index} {m}"),
+        None => Ok(()),
+    }
+}
+
+/// Arity + shape/dtype validation for a bound (device-handle) input
+/// set.
+pub fn validate_bound_inputs(spec: &ArtifactSpec, inputs: &[&DeviceTensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
         bail!(
-            "{artifact}: input {:?} shape {:?} != manifest {:?}",
-            io.name,
-            t.shape,
-            io.shape
+            "{}: {} inputs given, manifest wants {}",
+            spec.name,
+            inputs.len(),
+            spec.inputs.len()
         );
     }
-    if t.dtype() != io.dtype {
-        bail!(
-            "{artifact}: input {:?} dtype {:?} != manifest {:?}",
-            io.name,
-            t.dtype(),
-            io.dtype
-        );
+    for (i, (t, io)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        validate_device_tensor(t, io, &spec.name, i)?;
     }
     Ok(())
+}
+
+/// Debug-build output validation (count + shape + dtype): backends
+/// call this after executing so contract drift fails loudly in tests
+/// instead of flowing downstream. Compiled out of release hot paths.
+pub fn validate_outputs(spec: &ArtifactSpec, outputs: &[Tensor]) -> Result<()> {
+    if outputs.len() != spec.outputs.len() {
+        bail!(
+            "{}: produced {} outputs, manifest says {}",
+            spec.name,
+            outputs.len(),
+            spec.outputs.len()
+        );
+    }
+    for (i, (t, io)) in outputs.iter().zip(&spec.outputs).enumerate() {
+        if let Some(m) = io_mismatch(&t.shape, t.dtype(), io) {
+            bail!("{}: output #{i} {m}", spec.name);
+        }
+    }
+    Ok(())
+}
+
+/// Debug-build output validation for device-resident results.
+pub fn validate_bound_outputs(spec: &ArtifactSpec, outputs: &[DeviceTensor]) -> Result<()> {
+    if outputs.len() != spec.outputs.len() {
+        bail!(
+            "{}: produced {} outputs, manifest says {}",
+            spec.name,
+            outputs.len(),
+            spec.outputs.len()
+        );
+    }
+    for (i, (t, io)) in outputs.iter().zip(&spec.outputs).enumerate() {
+        if let Some(m) = io_mismatch(t.shape(), t.dtype(), io) {
+            bail!("{}: output #{i} {m}", spec.name);
+        }
+    }
+    Ok(())
+}
+
+/// Count the host-boundary bytes of a legacy `run` input set (all
+/// positional tensors are re-presented per call).
+pub(crate) fn note_legacy_staging(inputs: &[&Tensor]) {
+    staging::note_legacy_run(inputs.iter().map(|t| t.size_bytes()).sum());
 }

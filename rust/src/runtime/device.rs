@@ -1,0 +1,281 @@
+//! Device-resident tensor handles and staging-traffic accounting.
+//!
+//! A [`DeviceTensor`] is an opaque, backend-owned buffer plus the
+//! shape/dtype metadata every caller needs for validation. The payload
+//! is whatever the owning backend stores per buffer — the native CPU
+//! backend wraps a host [`Tensor`] (so `upload` is a move, not a
+//! copy), the PJRT backend keeps an `xla::Literal` alive. Handles are
+//! `Rc`-backed: cloning one is O(1) and never touches the elements,
+//! which is what makes residency (params bound once, reused every
+//! call) free.
+//!
+//! Handles are created by [`crate::runtime::Backend::upload`] /
+//! `alloc` and by `run_bound` outputs; they are consumed by
+//! `run_bound` inputs and read back with `download`. A handle is only
+//! meaningful on the backend that created it — feeding it elsewhere
+//! fails with a typed error, never garbage.
+//!
+//! The [`staging`] module counts every byte the *application* presents
+//! at the host→backend boundary (uploads plus legacy host-tensor
+//! `run` calls), so benches and tests can prove that the bindings
+//! path hands params/optimizer state over once instead of per step.
+//! What the backend does past that boundary is its own business (the
+//! native backend does nothing; PJRT converts once per upload but
+//! still buffers literals inside `execute`).
+
+use std::any::Any;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{DType, Tensor};
+
+/// An opaque, backend-owned buffer with host-visible metadata.
+///
+/// Cheap to clone (`Rc` payload). The payload itself is private to the
+/// owning backend; callers interact through shape/dtype and the
+/// `Backend`/`Executable` methods.
+#[derive(Clone)]
+pub struct DeviceTensor {
+    shape: Vec<usize>,
+    dtype: DType,
+    /// Tag of the backend family that owns the payload
+    /// ("native-cpu", "xla") — used for actionable mixup errors.
+    device: &'static str,
+    payload: Rc<dyn Any>,
+}
+
+impl DeviceTensor {
+    /// Wrap a backend payload. Only backends construct handles;
+    /// callers obtain them via `upload`/`alloc`/`run_bound`.
+    pub(crate) fn from_payload(
+        shape: Vec<usize>,
+        dtype: DType,
+        device: &'static str,
+        payload: Rc<dyn Any>,
+    ) -> DeviceTensor {
+        DeviceTensor { shape, dtype, device, payload }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+
+    /// Which backend family owns the payload.
+    pub fn device(&self) -> &'static str {
+        self.device
+    }
+
+    /// Borrow the backend payload, or `None` if this handle belongs to
+    /// a different backend.
+    pub(crate) fn payload<T: Any>(&self) -> Option<&T> {
+        self.payload.downcast_ref::<T>()
+    }
+
+    /// Consume the handle and recover the payload by value: without a
+    /// copy when this was the last owner, via `Clone` otherwise.
+    /// `None` if the payload belongs to a different backend.
+    pub(crate) fn try_unwrap_payload<T: Any + Clone>(self) -> Option<T> {
+        let rc = self.payload.downcast::<T>().ok()?;
+        Some(Rc::try_unwrap(rc).unwrap_or_else(|shared| (*shared).clone()))
+    }
+
+    /// Borrow the payload with an actionable error naming the input
+    /// position and the expected device.
+    pub(crate) fn expect_payload<T: Any>(
+        &self,
+        artifact: &str,
+        index: usize,
+        want_device: &str,
+    ) -> Result<&T> {
+        match self.payload::<T>() {
+            Some(p) => Ok(p),
+            None => bail!(
+                "{artifact}: input #{index} is a {:?} handle, not resident \
+                 on the {want_device:?} backend (upload it through the \
+                 backend that executes this artifact)",
+                self.device
+            ),
+        }
+    }
+}
+
+impl std::fmt::Debug for DeviceTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceTensor")
+            .field("shape", &self.shape)
+            .field("dtype", &self.dtype)
+            .field("device", &self.device)
+            .finish_non_exhaustive()
+    }
+}
+
+/// The native backend's device tag.
+pub(crate) const NATIVE_DEVICE: &str = "native-cpu";
+/// The PJRT backend's device tag.
+#[cfg(feature = "xla")]
+pub(crate) const XLA_DEVICE: &str = "xla";
+
+/// Wrap a host tensor as a native-backend handle. Zero-copy: the
+/// tensor (and its element buffer) is moved into the `Rc`, no
+/// element-wise copy happens.
+pub(crate) fn wrap_native(t: Tensor) -> DeviceTensor {
+    DeviceTensor::from_payload(t.shape.clone(), t.dtype(), NATIVE_DEVICE, Rc::new(t))
+}
+
+/// Host→backend staging-traffic counters.
+///
+/// Backends are single-threaded (they hold non-`Send` state and live
+/// on the thread that opened them), so the counters are thread-local:
+/// each worker / test thread observes exactly its own traffic, with no
+/// cross-test interference.
+///
+/// Two kinds of boundary crossings are counted separately:
+/// * `upload_*` — explicit [`crate::runtime::Backend::upload`] calls
+///   (the bindings path stages *only* per-call data this way);
+/// * `legacy_run_bytes` — full positional host-tensor sets presented
+///   to `Executable::run`, which re-stages every input (params,
+///   optimizer moments, data) on every call.
+pub mod staging {
+    use std::cell::Cell;
+
+    thread_local! {
+        static UPLOAD_BYTES: Cell<u64> = const { Cell::new(0) };
+        static UPLOAD_TENSORS: Cell<u64> = const { Cell::new(0) };
+        static DOWNLOAD_BYTES: Cell<u64> = const { Cell::new(0) };
+        static LEGACY_RUN_BYTES: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Point-in-time reading of this thread's staging counters.
+    #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+    pub struct StagingSnapshot {
+        /// Bytes moved host→backend through `Backend::upload`.
+        pub upload_bytes: u64,
+        /// Number of `Backend::upload` calls.
+        pub upload_tensors: u64,
+        /// Bytes moved backend→host through `Backend::download`.
+        pub download_bytes: u64,
+        /// Bytes presented at the host boundary by legacy
+        /// `Executable::run(&[&Tensor])` calls (all inputs, per call).
+        pub legacy_run_bytes: u64,
+    }
+
+    impl StagingSnapshot {
+        /// Total host→backend traffic (uploads + legacy run staging).
+        pub fn host_to_backend_bytes(&self) -> u64 {
+            self.upload_bytes + self.legacy_run_bytes
+        }
+
+        /// Counter deltas since an earlier snapshot.
+        pub fn since(&self, earlier: &StagingSnapshot) -> StagingSnapshot {
+            StagingSnapshot {
+                upload_bytes: self.upload_bytes - earlier.upload_bytes,
+                upload_tensors: self.upload_tensors - earlier.upload_tensors,
+                download_bytes: self.download_bytes - earlier.download_bytes,
+                legacy_run_bytes: self.legacy_run_bytes - earlier.legacy_run_bytes,
+            }
+        }
+    }
+
+    pub(crate) fn note_upload(bytes: usize) {
+        UPLOAD_BYTES.with(|c| c.set(c.get() + bytes as u64));
+        UPLOAD_TENSORS.with(|c| c.set(c.get() + 1));
+    }
+
+    pub(crate) fn note_download(bytes: usize) {
+        DOWNLOAD_BYTES.with(|c| c.set(c.get() + bytes as u64));
+    }
+
+    pub(crate) fn note_legacy_run(bytes: usize) {
+        LEGACY_RUN_BYTES.with(|c| c.set(c.get() + bytes as u64));
+    }
+
+    /// Read this thread's counters.
+    pub fn snapshot() -> StagingSnapshot {
+        StagingSnapshot {
+            upload_bytes: UPLOAD_BYTES.with(Cell::get),
+            upload_tensors: UPLOAD_TENSORS.with(Cell::get),
+            download_bytes: DOWNLOAD_BYTES.with(Cell::get),
+            legacy_run_bytes: LEGACY_RUN_BYTES.with(Cell::get),
+        }
+    }
+
+    /// Zero this thread's counters.
+    pub fn reset() {
+        UPLOAD_BYTES.with(|c| c.set(0));
+        UPLOAD_TENSORS.with(|c| c.set(0));
+        DOWNLOAD_BYTES.with(|c| c.set(0));
+        LEGACY_RUN_BYTES.with(|c| c.set(0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap_native_keeps_metadata_and_payload() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0; 6]).unwrap();
+        let d = wrap_native(t.clone());
+        assert_eq!(d.shape(), &[2, 3]);
+        assert_eq!(d.dtype(), DType::F32);
+        assert_eq!(d.numel(), 6);
+        assert_eq!(d.size_bytes(), 24);
+        assert_eq!(d.device(), NATIVE_DEVICE);
+        assert_eq!(d.payload::<Tensor>().unwrap(), &t);
+        assert!(d.payload::<String>().is_none());
+    }
+
+    #[test]
+    fn clone_is_shallow() {
+        let d = wrap_native(Tensor::zeros(&[128], DType::F32));
+        let d2 = d.clone();
+        // both clones see the same payload allocation
+        let p1 = d.payload::<Tensor>().unwrap() as *const Tensor;
+        let p2 = d2.payload::<Tensor>().unwrap() as *const Tensor;
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn expect_payload_names_position_and_device() {
+        let d = wrap_native(Tensor::zeros(&[1], DType::F32));
+        let err = d
+            .expect_payload::<String>("art", 3, "xla")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("#3"), "{err}");
+        assert!(err.contains("native-cpu"), "{err}");
+        assert!(err.contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn staging_counters_roundtrip() {
+        staging::reset();
+        staging::note_upload(100);
+        staging::note_upload(28);
+        staging::note_download(4);
+        staging::note_legacy_run(1000);
+        let s = staging::snapshot();
+        assert_eq!(s.upload_bytes, 128);
+        assert_eq!(s.upload_tensors, 2);
+        assert_eq!(s.download_bytes, 4);
+        assert_eq!(s.legacy_run_bytes, 1000);
+        assert_eq!(s.host_to_backend_bytes(), 1128);
+        let later = staging::snapshot();
+        assert_eq!(later.since(&s), StagingSnapshot::default());
+        staging::reset();
+        assert_eq!(staging::snapshot(), StagingSnapshot::default());
+    }
+}

@@ -6,6 +6,17 @@
 //! compiles each artifact once per engine, and stages host tensors to
 //! `xla::Literal`s at call boundaries.
 //!
+//! Residency on this backend: [`Backend::upload`] converts a host
+//! tensor to a literal **once** and the handle keeps it alive, so a
+//! resident-bindings caller (the trainer's `TrainState`, the serve
+//! worker's weights) skips the per-call tensor→literal conversion and
+//! validation that the legacy `run` path pays for every input. Note
+//! the honest limit: PJRT's `execute(&[Literal])` still stages each
+//! literal to a device buffer inside the call, so on real hardware
+//! this is cached-staging, not true device residency — holding
+//! `PjRtBuffer`s as the handle payload is the follow-up (see the
+//! ROADMAP's GPU-backend item).
+//!
 //! Pattern per `/opt/xla-example/load_hlo`: `HloModuleProto::from_text_file`
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`.
 //! Multi-output executables return a single tuple buffer which we
@@ -19,7 +30,11 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use super::artifact::{ArtifactSpec, IoSpec, Manifest};
-use super::backend::{validate_inputs, Backend, Executable};
+use super::backend::{
+    note_legacy_staging, validate_bound_inputs, validate_inputs, validate_outputs, Backend,
+    Executable,
+};
+use super::device::{staging, DeviceTensor, XLA_DEVICE};
 use crate::tensor::{DType, Tensor};
 use crate::util::timer::Timer;
 
@@ -96,17 +111,61 @@ impl Backend for Engine {
     fn platform(&self) -> String {
         Engine::platform(self)
     }
+
+    /// Stage once: the literal lives as long as the handle, so
+    /// resident inputs skip per-call tensor→literal conversion.
+    fn upload(&self, t: Tensor) -> Result<DeviceTensor> {
+        staging::note_upload(t.size_bytes());
+        let lit = literal_of(&t)?;
+        Ok(DeviceTensor::from_payload(
+            t.shape.clone(),
+            t.dtype(),
+            XLA_DEVICE,
+            Rc::new(lit),
+        ))
+    }
+
+    fn download(&self, t: &DeviceTensor) -> Result<Tensor> {
+        let lit = t.payload::<xla::Literal>().with_context(|| {
+            format!(
+                "download: handle belongs to the {:?} backend, not {XLA_DEVICE:?}",
+                t.device()
+            )
+        })?;
+        staging::note_download(t.size_bytes());
+        match t.dtype() {
+            DType::F32 => Tensor::from_f32(t.shape(), lit.to_vec::<f32>()?),
+            DType::I32 => Tensor::from_i32(t.shape(), lit.to_vec::<i32>()?),
+        }
+    }
+
+    fn alloc(&self, shape: &[usize], dtype: DType) -> Result<DeviceTensor> {
+        let lit = literal_of(&Tensor::zeros(shape, dtype))?;
+        Ok(DeviceTensor::from_payload(
+            shape.to_vec(),
+            dtype,
+            XLA_DEVICE,
+            Rc::new(lit),
+        ))
+    }
 }
 
-/// Host tensor -> XLA literal (validates against the IoSpec).
-pub fn tensor_to_literal(t: &Tensor, spec: &IoSpec) -> Result<xla::Literal> {
-    super::backend::validate_tensor(t, spec, "stage")?;
-    let ty = match spec.dtype {
+/// Host tensor -> XLA literal (shape/dtype taken from the tensor).
+fn literal_of(t: &Tensor) -> Result<xla::Literal> {
+    let ty = match t.dtype() {
         DType::F32 => xla::ElementType::F32,
         DType::I32 => xla::ElementType::S32,
     };
     xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.to_bytes())
-        .with_context(|| format!("literal for {:?}", spec.name))
+        .context("create literal")
+}
+
+/// Host tensor -> XLA literal (validates against the IoSpec).
+pub fn tensor_to_literal(t: &Tensor, spec: &IoSpec) -> Result<xla::Literal> {
+    if let Some(m) = super::backend::io_mismatch(&t.shape, t.dtype(), spec) {
+        bail!("stage: {m}");
+    }
+    literal_of(t).with_context(|| format!("literal for {:?}", spec.name))
 }
 
 /// XLA literal -> host tensor (shape taken from the output IoSpec).
@@ -131,18 +190,61 @@ impl Executable for Loaded {
         &self.spec
     }
 
-    /// Execute with host tensors; stages to literals at the boundary.
+    /// Execute with host tensors; stages every input to a literal at
+    /// the call boundary (the legacy convenience path).
     fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         validate_inputs(&self.spec, inputs)?;
+        note_legacy_staging(inputs);
         let lits: Vec<xla::Literal> = inputs
             .iter()
             .zip(&self.spec.inputs)
             .map(|(t, s)| tensor_to_literal(t, s))
             .collect::<Result<_>>()?;
         let out = self.run_literals(&lits)?;
-        out.iter()
+        let tensors: Vec<Tensor> = out
+            .iter()
             .zip(&self.spec.outputs)
             .map(|(l, s)| literal_to_tensor(l, s))
+            .collect::<Result<_>>()?;
+        if cfg!(debug_assertions) {
+            validate_outputs(&self.spec, &tensors)?;
+        }
+        Ok(tensors)
+    }
+
+    /// Execute over resident literals — no tensor→literal conversion
+    /// at the call boundary (PJRT still moves literals into device
+    /// buffers inside `execute`); the output tuple parts stay alive
+    /// as backend-owned handles.
+    fn run_bound(&self, inputs: &[&DeviceTensor]) -> Result<Vec<DeviceTensor>> {
+        validate_bound_inputs(&self.spec, inputs)?;
+        let lits: Vec<&xla::Literal> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| d.expect_payload::<xla::Literal>(&self.spec.name, i, XLA_DEVICE))
+            .collect::<Result<_>>()?;
+        let out = self.run_literals(&lits)?;
+        // handle metadata comes from the manifest, so the drift check
+        // must look at the literal itself: element counts, in debug
+        out.into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, s)| {
+                if cfg!(debug_assertions) && l.element_count() != s.numel() {
+                    bail!(
+                        "{}: output {:?}: {} elements, manifest says {:?}",
+                        self.spec.name,
+                        s.name,
+                        l.element_count(),
+                        s.shape
+                    );
+                }
+                Ok(DeviceTensor::from_payload(
+                    s.shape.clone(),
+                    s.dtype,
+                    XLA_DEVICE,
+                    Rc::new(l),
+                ))
+            })
             .collect()
     }
 }

@@ -2,25 +2,37 @@
 //!
 //! * `backend` — the [`Backend`]/[`Executable`] trait pair every
 //!   consumer (`serve`, `eval`, `coordinator`, `bench_support`, CLI)
-//!   programs against, plus [`open_backend`]/[`BackendKind`].
+//!   programs against, plus the [`Bindings`] builder (resident vs
+//!   per-call inputs) and [`open_backend`]/[`BackendKind`].
+//! * `device` — opaque backend-owned buffers ([`DeviceTensor`]) and
+//!   the host↔backend [`staging`] traffic counters.
 //! * `native` — the pure-Rust CPU backend (default): transformer
-//!   inference, MNIST training, ff-micro timing — no artifacts needed.
+//!   inference, MNIST training, ff-micro timing — no artifacts needed;
+//!   device handles wrap host tensors zero-copy.
 //! * `engine` (`xla` feature) — the PJRT backend: loads AOT artifacts
-//!   (HLO text) produced by `make artifacts` and executes them.
+//!   (HLO text) produced by `make artifacts` and executes them;
+//!   device handles keep `xla::Literal`s alive across calls.
 //! * `artifact` — the manifest types (the L2→L3 contract);
 //!   `catalog` synthesises the native backend's manifest in-process.
-//! * `state` — training state threaded between `train_step` calls.
+//! * `state` — backend-resident training state threaded between
+//!   `train_step` calls (staged once, not per call).
 
 mod artifact;
 mod backend;
 pub mod catalog;
+mod device;
 #[cfg(feature = "xla")]
 mod engine;
 mod native;
 mod state;
 
 pub use artifact::{AdamCfg, ArchCfg, ArtifactSpec, IoSpec, Manifest, Role, VariantCfg};
-pub use backend::{open_backend, Backend, BackendKind, Executable};
+pub use backend::{
+    open_backend, validate_bound_inputs, validate_bound_outputs, validate_device_tensor,
+    validate_inputs, validate_outputs, validate_tensor, Backend, BackendKind, Bindings,
+    Executable,
+};
+pub use device::{staging, DeviceTensor};
 #[cfg(feature = "xla")]
 pub use engine::{literal_to_tensor, tensor_to_literal, Engine, Loaded};
 pub use native::{LinearView, NativeBackend, Params, VariantSpec};

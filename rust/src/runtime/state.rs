@@ -1,29 +1,36 @@
-//! Training state carried between `train_step` executions.
+//! Training state carried between `train_step` executions — held as
+//! **backend-resident** [`DeviceTensor`] handles.
 //!
-//! Holds params / Adam-m / Adam-v as host [`Tensor`]s plus the float
-//! step counter, and threads them through any [`Executable`] backend.
-//! One call advances K optimizer steps (the artifact's inner
-//! microbatch scan); the coordinator recomputes the LR schedule
-//! between calls.
+//! Params / Adam-m / Adam-v live on the executing backend: the native
+//! backend wraps them zero-copy, the XLA backend keeps them alive as
+//! literals, so a training loop stages the state **once** at init (or
+//! checkpoint restore) and every subsequent `train_call` uploads only
+//! the per-call batch and the two control scalars. One call advances K
+//! optimizer steps (the artifact's inner microbatch scan); the
+//! coordinator recomputes the LR schedule between calls. Host copies
+//! exist only at the edges: `to_tensors`/`params_to_tensors` download
+//! for checkpointing, `from_tensors` uploads on restore.
 
 use anyhow::{bail, Context, Result};
 
 use super::artifact::{ArtifactSpec, Role};
-use super::backend::Executable;
+use super::backend::{Backend, Executable};
+use super::device::DeviceTensor;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 pub struct TrainState {
-    /// params ++ m ++ v, in manifest feed order.
-    tensors: Vec<Tensor>,
+    /// params ++ m ++ v, in manifest feed order, backend-resident.
+    tensors: Vec<DeviceTensor>,
     pub step: f32,
     n_params: usize,
 }
 
 impl TrainState {
     /// Initialise from the artifact's init specs (params) and zeros
-    /// (optimizer moments). Deterministic in `seed`.
-    pub fn init(spec: &ArtifactSpec, seed: u64) -> Result<TrainState> {
+    /// (optimizer moments), then upload everything once onto
+    /// `backend`. Deterministic in `seed`.
+    pub fn init(backend: &dyn Backend, spec: &ArtifactSpec, seed: u64) -> Result<TrainState> {
         let mut rng = Rng::new(seed);
         let mut tensors = Vec::new();
         let mut n_params = 0;
@@ -34,11 +41,11 @@ impl TrainState {
                         .init
                         .as_ref()
                         .with_context(|| format!("param {} has no init", io.name))?;
-                    tensors.push(Tensor::init(&io.shape, init, &mut rng));
+                    tensors.push(backend.upload(Tensor::init(&io.shape, init, &mut rng))?);
                     n_params += 1;
                 }
                 Role::OptM | Role::OptV => {
-                    tensors.push(Tensor::zeros(&io.shape, io.dtype));
+                    tensors.push(backend.alloc(&io.shape, io.dtype)?);
                 }
                 _ => {}
             }
@@ -46,8 +53,10 @@ impl TrainState {
         Ok(TrainState { tensors, step: 0.0, n_params })
     }
 
-    /// Restore from named checkpoint tensors (see [`TrainState::to_tensors`]).
+    /// Restore from named checkpoint tensors (see [`TrainState::to_tensors`]);
+    /// stages the state onto `backend` once.
     pub fn from_tensors(
+        backend: &dyn Backend,
         spec: &ArtifactSpec,
         entries: &[(String, Tensor)],
     ) -> Result<TrainState> {
@@ -69,7 +78,7 @@ impl TrainState {
                             io.shape
                         );
                     }
-                    tensors.push((*t).clone());
+                    tensors.push(backend.upload((*t).clone())?);
                     if io.role == Role::Param {
                         n_params += 1;
                     }
@@ -89,38 +98,47 @@ impl TrainState {
         self.n_params
     }
 
-    /// One coordinator-side training call: feeds
-    /// `params ++ m ++ v ++ step ++ lr ++ data...`, absorbs the updated
-    /// state from the output tuple, returns the per-microbatch losses.
+    /// One coordinator-side training call: binds the resident
+    /// `params ++ m ++ v` handles, uploads only `step`/`lr` and the
+    /// per-call data, absorbs the updated state as fresh resident
+    /// handles, returns the per-microbatch losses.
     pub fn train_call(
         &mut self,
+        backend: &dyn Backend,
         art: &dyn Executable,
         lr: f32,
-        data: &[Tensor],
+        data: Vec<Tensor>,
     ) -> Result<Vec<f32>> {
         let spec = art.spec();
         let n_state = self.tensors.len();
-        let data_specs: Vec<_> = spec
-            .inputs
-            .iter()
-            .filter(|i| i.role == Role::Data)
-            .collect();
-        if data.len() != data_specs.len() {
+        let n_data = spec.inputs.iter().filter(|i| i.role == Role::Data).count();
+        if data.len() != n_data {
             bail!(
                 "{}: {} data tensors given, manifest wants {}",
                 spec.name,
                 data.len(),
-                data_specs.len()
+                n_data
             );
         }
-        let step_t = Tensor::scalar_f32(self.step);
-        let lr_t = Tensor::scalar_f32(lr);
-        let mut inputs: Vec<&Tensor> = Vec::with_capacity(spec.inputs.len());
+        let step_t = backend.upload(Tensor::scalar_f32(self.step))?;
+        let lr_t = backend.upload(Tensor::scalar_f32(lr))?;
+        let data_dev: Vec<DeviceTensor> = data
+            .into_iter()
+            .map(|t| backend.upload(t))
+            .collect::<Result<_>>()?;
+        let mut inputs: Vec<&DeviceTensor> = Vec::with_capacity(spec.inputs.len());
         let mut state_i = 0;
         let mut data_i = 0;
         for io in &spec.inputs {
             match io.role {
                 Role::Param | Role::OptM | Role::OptV => {
+                    if state_i >= n_state {
+                        bail!(
+                            "{}: more state inputs than the {n_state} held \
+                             (mismatched arch/variant?)",
+                            spec.name
+                        );
+                    }
                     inputs.push(&self.tensors[state_i]);
                     state_i += 1;
                 }
@@ -128,7 +146,7 @@ impl TrainState {
                     inputs.push(if io.name == "step" { &step_t } else { &lr_t });
                 }
                 Role::Data => {
-                    inputs.push(&data[data_i]);
+                    inputs.push(&data_dev[data_i]);
                     data_i += 1;
                 }
             }
@@ -140,7 +158,7 @@ impl TrainState {
                 spec.name
             );
         }
-        let mut outputs = art.run(&inputs)?;
+        let mut outputs = art.run_bound(&inputs)?;
         // outputs: params ++ m ++ v ++ step ++ losses
         if outputs.len() != n_state + 2 {
             bail!(
@@ -150,21 +168,33 @@ impl TrainState {
                 outputs.len()
             );
         }
-        let losses_t = outputs.pop().unwrap();
-        let step_t = outputs.pop().unwrap();
+        let losses_t = backend.take(outputs.pop().unwrap())?;
+        let step_t = backend.take(outputs.pop().unwrap())?;
         self.step = step_t.scalar_value_f32()?;
+        // updated params/m/v stay resident; old handles drop here
         self.tensors = outputs;
         Ok(losses_t.as_f32()?.to_vec())
     }
 
-    /// Borrow the parameter tensors (feed order) for eval executables
-    /// that take only params + data.
-    pub fn param_tensors(&self) -> &[Tensor] {
+    /// Borrow the resident parameter handles (feed order) for eval
+    /// executables that take only params + data — bind them with
+    /// [`crate::runtime::Bindings::bind_role`].
+    pub fn param_handles(&self) -> &[DeviceTensor] {
         &self.tensors[..self.n_params]
     }
 
-    /// Export the full state as named host tensors for checkpointing.
-    pub fn to_tensors(&self, spec: &ArtifactSpec) -> Result<Vec<(String, Tensor)>> {
+    /// Total bytes held resident by this state (params + moments).
+    pub fn resident_bytes(&self) -> usize {
+        self.tensors.iter().map(DeviceTensor::size_bytes).sum()
+    }
+
+    /// Export the full state as named host tensors for checkpointing
+    /// (downloads from the backend).
+    pub fn to_tensors(
+        &self,
+        backend: &dyn Backend,
+        spec: &ArtifactSpec,
+    ) -> Result<Vec<(String, Tensor)>> {
         let mut out = Vec::new();
         let mut i = 0;
         for io in &spec.inputs {
@@ -172,7 +202,7 @@ impl TrainState {
                 if i >= self.tensors.len() {
                     bail!("state/spec mismatch exporting {:?}", io.name);
                 }
-                out.push((io.name.clone(), self.tensors[i].clone()));
+                out.push((io.name.clone(), backend.download(&self.tensors[i])?));
                 i += 1;
             }
         }
@@ -184,11 +214,12 @@ impl TrainState {
     /// counts weights, not optimizer moments).
     pub fn params_to_tensors(
         &self,
+        backend: &dyn Backend,
         spec: &ArtifactSpec,
     ) -> Result<Vec<(String, Tensor)>> {
         let mut out = Vec::new();
         for (i, io) in spec.param_specs().into_iter().enumerate() {
-            out.push((io.name.clone(), self.tensors[i].clone()));
+            out.push((io.name.clone(), backend.download(&self.tensors[i])?));
         }
         Ok(out)
     }

@@ -2,10 +2,13 @@
 //!
 //! Backend handles are not `Send` (the PJRT client isn't), so the
 //! worker thread *creates* its own backend from the config; clients
-//! interact through mpsc channels. Scoring requests are dynamically
-//! batched (see `Batcher`); generation requests run a greedy decode
-//! loop over the `next_logits` artifact with all active generations
-//! stepped together (a miniature continuous batcher).
+//! interact through mpsc channels. The worker uploads the model
+//! weights onto its backend **once** at startup and binds them
+//! resident (`Bindings`); the per-request hot path stages only the
+//! padded token batches, never the weights. Scoring requests are
+//! dynamically batched (see `Batcher`); generation requests run a
+//! greedy decode loop over the `next_logits` artifact with all active
+//! generations stepped together (a miniature continuous batcher).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -18,8 +21,9 @@ use super::batcher::Batcher;
 use super::stats::ServeStats;
 use crate::coordinator::checkpoint::CheckpointManager;
 use crate::data::dataset::pad_batch;
-use crate::eval::run_with_params;
-use crate::runtime::{open_backend, Backend, BackendKind, Executable, TrainState};
+use crate::runtime::{
+    open_backend, Backend, BackendKind, Bindings, Executable, Role, TrainState,
+};
 use crate::tensor::Tensor;
 use crate::util::timer::Timer;
 
@@ -148,13 +152,19 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
         Some(dir) => {
             let mgr = CheckpointManager::new(dir);
             if mgr.has_state() {
-                mgr.load_state(&train_spec)?
+                mgr.load_state(backend.as_ref(), &train_spec)?
             } else {
-                TrainState::init(&train_spec, cfg.seed)?
+                TrainState::init(backend.as_ref(), &train_spec, cfg.seed)?
             }
         }
-        None => TrainState::init(&train_spec, cfg.seed)?,
+        None => TrainState::init(backend.as_ref(), &train_spec, cfg.seed)?,
     };
+    // weights resident per worker: bound once here, reused by every
+    // request; the hot path uploads only the padded batches
+    let mut score_bind = Bindings::new(score_art.as_ref());
+    score_bind.bind_role(Role::Param, state.param_handles())?;
+    let mut logits_bind = Bindings::new(logits_art.as_ref());
+    logits_bind.bind_role(Role::Param, state.param_handles())?;
 
     let b = score_art.spec().meta_usize("batch")?;
     let s = score_art.spec().meta_usize("seq")?;
@@ -171,9 +181,10 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
         let t = Timer::start();
         let result = (|| -> Result<Vec<f64>> {
             let (tokens, mask) = pad_batch(&seqs, b, s)?;
-            let out = run_with_params(score_art.as_ref(), &state, &[tokens, mask])?;
-            let sums = out[0].as_f32()?;
-            Ok(sums[..seqs.len()].iter().map(|&x| x as f64).collect())
+            let dev = [backend.upload(tokens)?, backend.upload(mask)?];
+            let mut out = score_bind.call(&[&dev[0], &dev[1]])?;
+            let sums = backend.take(out.swap_remove(0))?;
+            Ok(sums.as_f32()?[..seqs.len()].iter().map(|&x| x as f64).collect())
         })();
         stats.exec_ms.push(t.elapsed_ms());
         stats.batch_sizes.push(queue.len());
@@ -216,7 +227,7 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
                 batcher.flush();
                 flush(&mut queue, &mut stats);
                 let t = Instant::now();
-                let out = generate(logits_art.as_ref(), &state, prompt, max_new, s);
+                let out = generate(backend.as_ref(), &logits_bind, prompt, max_new, s);
                 stats
                     .latencies_ms
                     .push(Instant::now().duration_since(t).as_secs_f64() * 1e3);
@@ -243,15 +254,16 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
 }
 
 /// Greedy decode via the next_logits artifact (full-context recompute
-/// per token; fine at these scales, documented in DESIGN.md).
+/// per token; fine at these scales, documented in DESIGN.md). Weights
+/// are already resident in `bind`; each step uploads one token window.
 fn generate(
-    art: &dyn Executable,
-    state: &TrainState,
+    backend: &dyn Backend,
+    bind: &Bindings,
     prompt: Vec<i32>,
     max_new: usize,
     s: usize,
 ) -> Result<Vec<i32>> {
-    let b = art.spec().meta_usize("batch")?;
+    let b = bind.spec().meta_usize("batch")?;
     let mut tokens = prompt;
     let mut out = Vec::new();
     for _ in 0..max_new {
@@ -264,16 +276,14 @@ fn generate(
         toks[..window.len()].copy_from_slice(&window);
         let mut lens = vec![1i32; b];
         lens[0] = window.len() as i32;
-        let res = run_with_params(
-            art,
-            state,
-            &[
-                Tensor::from_i32(&[b, s], toks)?,
-                Tensor::from_i32(&[b], lens)?,
-            ],
-        )?;
-        let logits = res[0].as_f32()?;
-        let vocab = art.spec().outputs[0].shape[1];
+        let dev = [
+            backend.upload(Tensor::from_i32(&[b, s], toks)?)?,
+            backend.upload(Tensor::from_i32(&[b], lens)?)?,
+        ];
+        let mut res = bind.call(&[&dev[0], &dev[1]])?;
+        let logits_t = backend.take(res.swap_remove(0))?;
+        let logits = logits_t.as_f32()?;
+        let vocab = bind.spec().outputs[0].shape[1];
         let row = &logits[..vocab];
         let next = row
             .iter()

@@ -1,0 +1,275 @@
+//! The device-resident buffer/binding API, end to end on the native
+//! backend: upload/download round trips, resident-bindings training
+//! parity against the legacy host-tensor path, zero-copy residency,
+//! staging-traffic accounting, and Bindings misuse errors.
+
+use dyad_repro::bench_support::legacy_train_inputs;
+use dyad_repro::data::MnistGen;
+use dyad_repro::runtime::{
+    staging, Backend, BackendKind, Bindings, Executable, NativeBackend, Role, TrainState,
+};
+use dyad_repro::tensor::{DType, Tensor};
+use dyad_repro::testing::prop::check;
+
+const TRAIN_ART: &str = "mnist/dyad_it/train_k4";
+const LR: f32 = 1e-3;
+
+/// upload → download must be the identity, for any shape/dtype,
+/// including scalars and empty dims.
+#[test]
+fn prop_upload_download_roundtrip() {
+    let backend = NativeBackend::new();
+    check("upload → download is identity", 60, |rng| {
+        let ndim = rng.below(4);
+        let shape: Vec<usize> = (0..ndim).map(|_| rng.range(1, 6)).collect();
+        let n: usize = shape.iter().product();
+        let t = if rng.below(2) == 0 {
+            Tensor::from_f32(
+                &shape,
+                (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect(),
+            )
+            .unwrap()
+        } else {
+            Tensor::from_i32(
+                &shape,
+                (0..n).map(|_| rng.range(0, 1 << 20) as i32 - (1 << 19)).collect(),
+            )
+            .unwrap()
+        };
+        let dev = backend.upload(t.clone()).map_err(|e| format!("{e:#}"))?;
+        if dev.shape() != t.shape.as_slice() || dev.dtype() != t.dtype() {
+            return Err(format!("metadata mismatch: {dev:?} vs {:?}", t.shape));
+        }
+        let back = backend.download(&dev).map_err(|e| format!("{e:#}"))?;
+        if back != t {
+            return Err(format!("roundtrip diverged for shape {shape:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Upload/download accounting: one upload counts exactly the tensor's
+/// bytes, handle clones count nothing. (The pointer-level zero-copy
+/// proof — the wrapped payload keeps the original element allocation —
+/// lives as a unit test next to `NativeBackend::upload`, where the
+/// payload is reachable.)
+#[test]
+fn native_upload_accounting() {
+    let backend = NativeBackend::new();
+    let t = Tensor::from_f32(&[64, 64], (0..4096).map(|i| i as f32).collect()).unwrap();
+    let before = staging::snapshot();
+    let dev = backend.upload(t).unwrap();
+    let d2 = dev.clone();
+    assert_eq!(d2.size_bytes(), dev.size_bytes());
+    let delta = staging::snapshot().since(&before);
+    assert_eq!(delta.upload_bytes, 64 * 64 * 4);
+    assert_eq!(delta.upload_tensors, 1);
+    assert_eq!(delta.download_bytes, 0);
+    let host = backend.download(&dev).unwrap();
+    assert_eq!(host.as_f32().unwrap()[4095], 4095.0);
+    let delta = staging::snapshot().since(&before);
+    assert_eq!(delta.download_bytes, 64 * 64 * 4);
+}
+
+/// Tentpole acceptance: a resident-bindings train loop must produce
+/// bitwise-identical losses, step and final state to the per-call
+/// host-tensor path (legacy `run`), on the MNIST trainer, ≥3 calls.
+#[test]
+fn resident_train_loop_bitwise_matches_host_path() {
+    let backend = NativeBackend::new();
+    let train = backend.load(TRAIN_ART).unwrap();
+    let spec = train.spec().clone();
+    let k = spec.meta_usize("k_micro").unwrap();
+    let b = spec.meta_usize("batch").unwrap();
+
+    // bindings-path state, staged once on the backend
+    let mut state = TrainState::init(&backend, &spec, 42).unwrap();
+    // host-path mirror of the identical initial state
+    let mut entries = state.to_tensors(&backend, &spec).unwrap();
+    let (last_name, _) = entries.pop().unwrap();
+    assert_eq!(last_name, "__step");
+    let mut host: Vec<Tensor> = entries.into_iter().map(|(_, t)| t).collect();
+    let mut step = 0.0f32;
+
+    let mut gen = MnistGen::new(99);
+    for call in 0..4 {
+        let (images, labels) = gen.train_batch(k, b);
+
+        let bound_losses = state
+            .train_call(&backend, train.as_ref(), LR, vec![images.clone(), labels.clone()])
+            .unwrap();
+
+        // legacy path: full positional host set, assembled by role
+        let step_t = Tensor::scalar_f32(step);
+        let lr_t = Tensor::scalar_f32(LR);
+        let data = [images, labels];
+        let inputs = legacy_train_inputs(&spec, &host, &step_t, &lr_t, &data).unwrap();
+        let mut out = train.run(&inputs).unwrap();
+        let host_losses = out.pop().unwrap().as_f32().unwrap().to_vec();
+        step = out.pop().unwrap().scalar_value_f32().unwrap();
+        host = out;
+
+        assert_eq!(bound_losses, host_losses, "losses diverge at call {call}");
+    }
+
+    assert_eq!(state.step, step, "step counter diverges");
+    let final_entries = state.to_tensors(&backend, &spec).unwrap();
+    let mut i = 0;
+    for (name, t) in final_entries {
+        if name == "__step" {
+            continue;
+        }
+        assert_eq!(t, host[i], "state tensor {name:?} diverges after 4 calls");
+        i += 1;
+    }
+    assert_eq!(i, host.len());
+}
+
+/// Acceptance criterion: under the bindings path the steady-state
+/// per-call host→backend traffic is exactly the activations + control
+/// scalars; params/m/v were staged once at init. The legacy path
+/// re-presents the whole state every call.
+#[test]
+fn train_call_stages_activations_only() {
+    let backend = NativeBackend::new();
+    let train = backend.load(TRAIN_ART).unwrap();
+    let spec = train.spec().clone();
+    let k = spec.meta_usize("k_micro").unwrap();
+    let b = spec.meta_usize("batch").unwrap();
+    let percall_bytes: u64 = spec
+        .inputs
+        .iter()
+        .filter(|io| matches!(io.role, Role::Data | Role::Scalar))
+        .map(|io| (io.numel() * io.dtype.size_bytes()) as u64)
+        .sum();
+    let state_bytes: u64 = spec
+        .inputs
+        .iter()
+        .filter(|io| matches!(io.role, Role::Param | Role::OptM | Role::OptV))
+        .map(|io| (io.numel() * io.dtype.size_bytes()) as u64)
+        .sum();
+    let params_bytes: u64 = spec
+        .inputs
+        .iter()
+        .filter(|io| io.role == Role::Param)
+        .map(|io| (io.numel() * io.dtype.size_bytes()) as u64)
+        .sum();
+
+    let before_init = staging::snapshot();
+    let mut state = TrainState::init(&backend, &spec, 3).unwrap();
+    let init_delta = staging::snapshot().since(&before_init);
+    // exactly the params cross at init (moments are backend-alloc'd zeros)
+    assert_eq!(init_delta.upload_bytes, params_bytes);
+
+    let mut gen = MnistGen::new(5);
+    for call in 0..3 {
+        let (images, labels) = gen.train_batch(k, b);
+        let before = staging::snapshot();
+        state
+            .train_call(&backend, train.as_ref(), LR, vec![images, labels])
+            .unwrap();
+        let delta = staging::snapshot().since(&before);
+        assert_eq!(
+            delta.upload_bytes, percall_bytes,
+            "call {call}: bindings path must stage activations+scalars only"
+        );
+        assert_eq!(delta.legacy_run_bytes, 0, "call {call}");
+    }
+
+    // the legacy wrapper pays for the whole input set per call
+    let mut entries = state.to_tensors(&backend, &spec).unwrap();
+    entries.pop(); // drop the trailing "__step"
+    let host: Vec<Tensor> = entries.into_iter().map(|(_, t)| t).collect();
+    let step_t = Tensor::scalar_f32(state.step);
+    let lr_t = Tensor::scalar_f32(LR);
+    let (images, labels) = gen.train_batch(k, b);
+    let data = [images, labels];
+    let inputs = legacy_train_inputs(&spec, &host, &step_t, &lr_t, &data).unwrap();
+    let before = staging::snapshot();
+    train.run(&inputs).unwrap();
+    let delta = staging::snapshot().since(&before);
+    assert_eq!(delta.legacy_run_bytes, percall_bytes + state_bytes);
+    // the drop is real at this geometry: state dominates a single batch
+    assert!(percall_bytes < state_bytes, "mnist geometry sanity");
+}
+
+/// Bindings misuse fails loudly: wrong-shape residents are rejected at
+/// bind time with the slot index, and per-call arity mismatches name
+/// the counts.
+#[test]
+fn bindings_validate_at_bind_and_call_time() {
+    let backend = NativeBackend::new();
+    let art = backend.load("mnist/dyad_it/accuracy").unwrap();
+    let spec = art.spec().clone();
+    let mut bind = Bindings::new(art.as_ref());
+
+    // wrong shape at bind time
+    let bad = backend.upload(Tensor::zeros(&[3, 3], DType::F32)).unwrap();
+    let err = format!("{:#}", bind.bind(0, bad).unwrap_err());
+    assert!(err.contains("#0") && err.contains("shape"), "{err}");
+
+    // out-of-range index
+    let ok = backend
+        .upload(Tensor::zeros(&spec.inputs[0].shape, spec.inputs[0].dtype))
+        .unwrap();
+    let err = format!("{:#}", bind.bind(spec.inputs.len(), ok.clone()).unwrap_err());
+    assert!(err.contains("out of range"), "{err}");
+
+    // bind params properly, then call with the wrong per-call arity
+    let state = TrainState::init(&backend, backend.manifest().artifact(TRAIN_ART).unwrap(), 8)
+        .unwrap();
+    bind.bind_role(Role::Param, state.param_handles()).unwrap();
+    assert_eq!(bind.resident_count(), state.param_handles().len());
+    assert!(bind.resident_bytes() > 0);
+    let err = format!("{:#}", bind.call(&[]).unwrap_err());
+    assert!(err.contains("unbound"), "{err}");
+
+    // named binding resolves the same slot as positional
+    let mut bind2 = Bindings::new(art.as_ref());
+    bind2.bind_named(&spec.inputs[0].name, ok).unwrap();
+    assert_eq!(bind2.resident_count(), 1);
+    assert!(bind2.unbind(0).is_some());
+    assert_eq!(bind2.resident_count(), 0);
+}
+
+/// The bound path and the legacy wrapper agree bitwise on an inference
+/// artifact when fed identical inputs.
+#[test]
+fn run_bound_matches_legacy_run() {
+    let backend = NativeBackend::new();
+    let art = backend.load("mnist/dyad_it/hidden_fwd").unwrap();
+    let mut rng = dyad_repro::util::rng::Rng::new(17);
+    let inputs: Vec<Tensor> = art
+        .spec()
+        .inputs
+        .iter()
+        .map(|io| dyad_repro::bench_support::synth_input(io, &mut rng))
+        .collect();
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let legacy = art.run(&refs).unwrap();
+
+    let dev: Vec<_> = inputs
+        .iter()
+        .map(|t| backend.upload(t.clone()).unwrap())
+        .collect();
+    let dev_refs: Vec<_> = dev.iter().collect();
+    let bound = art.run_bound(&dev_refs).unwrap();
+    assert_eq!(legacy.len(), bound.len());
+    for (l, d) in legacy.iter().zip(&bound) {
+        assert_eq!(l, &backend.download(d).unwrap());
+    }
+}
+
+/// open_backend hands out a backend whose kind round-trips through
+/// FromStr, and uploads on it are usable immediately.
+#[test]
+fn open_backend_parse_roundtrip() {
+    let kind: BackendKind = "native".parse().unwrap();
+    assert_eq!(kind.name(), "native");
+    let backend =
+        dyad_repro::runtime::open_backend(kind, std::path::Path::new("unused")).unwrap();
+    let d = backend.upload(Tensor::scalar_f32(2.5)).unwrap();
+    assert_eq!(backend.download(&d).unwrap().scalar_value_f32().unwrap(), 2.5);
+    let z = backend.alloc(&[2, 2], DType::I32).unwrap();
+    assert_eq!(backend.download(&z).unwrap().as_i32().unwrap(), &[0; 4]);
+}

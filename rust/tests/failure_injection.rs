@@ -72,9 +72,10 @@ fn xla_backend_without_feature_is_actionable() {
 #[test]
 fn unknown_backend_name_rejected() {
     use dyad_repro::runtime::BackendKind;
-    assert!(BackendKind::from_str("native").is_ok());
-    assert!(BackendKind::from_str("xla").is_ok());
-    assert!(BackendKind::from_str("tpu-v9").is_err());
+    assert!("native".parse::<BackendKind>().is_ok());
+    assert!("xla".parse::<BackendKind>().is_ok());
+    assert_eq!("cpu".parse::<BackendKind>().unwrap(), BackendKind::Native);
+    assert!("tpu-v9".parse::<BackendKind>().is_err());
 }
 
 #[test]
@@ -100,8 +101,30 @@ fn native_backend_rejects_wrong_shapes() {
     refs.extend(rest.iter());
     let err = format!("{:#}", art.run(&refs).unwrap_err());
     assert!(err.contains("shape"), "{err}");
+    // mismatch errors name the positional slot alongside the IO name
+    assert!(err.contains("#0"), "{err}");
     // arity mismatch too
     let err2 = format!("{:#}", art.run(&refs[..1]).unwrap_err());
+    assert!(err2.contains("inputs"), "{err2}");
+}
+
+/// Same loud failure on the bound (device-handle) path: shape errors
+/// carry the slot index, arity errors the counts.
+#[test]
+fn native_backend_rejects_wrong_shapes_bound() {
+    use dyad_repro::runtime::{Backend, Executable, NativeBackend};
+    let backend = NativeBackend::new();
+    let art = backend.load("mnist/dense/accuracy").unwrap();
+    let bad = backend.upload(Tensor::zeros(&[2, 2], DType::F32)).unwrap();
+    let rest: Vec<_> = art.spec().inputs[1..]
+        .iter()
+        .map(|io| backend.upload(Tensor::zeros(&io.shape, io.dtype)).unwrap())
+        .collect();
+    let mut refs = vec![&bad];
+    refs.extend(rest.iter());
+    let err = format!("{:#}", art.run_bound(&refs).unwrap_err());
+    assert!(err.contains("shape") && err.contains("#0"), "{err}");
+    let err2 = format!("{:#}", art.run_bound(&refs[..1]).unwrap_err());
     assert!(err2.contains("inputs"), "{err2}");
 }
 

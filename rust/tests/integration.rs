@@ -27,7 +27,7 @@ fn native_score_masks_and_counts() {
         .artifact("opt-mini/dyad_it/train_k1")
         .unwrap()
         .clone();
-    let state = TrainState::init(&train_spec, 5).unwrap();
+    let state = TrainState::init(&backend, &train_spec, 5).unwrap();
     let b = art.spec().meta_usize("batch").unwrap();
     let seq = art.spec().meta_usize("seq").unwrap();
     let grammar = Grammar::new();
@@ -35,7 +35,7 @@ fn native_score_masks_and_counts() {
     let mut rng = Rng::new(6);
     let sent = tok.encode_sentence(&grammar.sentence(&mut rng));
     let (tokens, mask) = pad_batch(&[sent.clone()], b, seq).unwrap();
-    let out = run_with_params(art.as_ref(), &state, &[tokens, mask]).unwrap();
+    let out = run_with_params(&backend, art.as_ref(), &state, vec![tokens, mask]).unwrap();
     let sums = out[0].as_f32().unwrap();
     let counts = out[1].as_f32().unwrap();
     assert_eq!(counts[0], (sent.len() - 1) as f32);
@@ -43,7 +43,8 @@ fn native_score_masks_and_counts() {
     // rows beyond the first are padding: zero mask contribution
     let (tokens2, _) = pad_batch(&[sent], b, seq).unwrap();
     let zero_mask = Tensor::from_f32(&[b, seq], vec![0.0; b * seq]).unwrap();
-    let out2 = run_with_params(art.as_ref(), &state, &[tokens2, zero_mask]).unwrap();
+    let out2 =
+        run_with_params(&backend, art.as_ref(), &state, vec![tokens2, zero_mask]).unwrap();
     assert_eq!(out2[0].as_f32().unwrap()[0], 0.0);
     assert_eq!(out2[1].as_f32().unwrap()[0], 0.0);
 }
@@ -58,7 +59,7 @@ fn native_score_batch_shape_independent() {
         .artifact("opt-mini/dense/train_k1")
         .unwrap()
         .clone();
-    let state = TrainState::init(&train_spec, 7).unwrap();
+    let state = TrainState::init(&backend, &train_spec, 7).unwrap();
     let b = art.spec().meta_usize("batch").unwrap();
     let seq = art.spec().meta_usize("seq").unwrap();
     let grammar = Grammar::new();
@@ -67,11 +68,11 @@ fn native_score_batch_shape_independent() {
     let sent = tok.encode_sentence(&grammar.sentence(&mut rng));
     let other = tok.encode_sentence(&grammar.sentence(&mut rng));
     let (t1, m1) = pad_batch(&[sent.clone()], b, seq).unwrap();
-    let solo = run_with_params(art.as_ref(), &state, &[t1, m1]).unwrap()[0]
+    let solo = run_with_params(&backend, art.as_ref(), &state, vec![t1, m1]).unwrap()[0]
         .as_f32()
         .unwrap()[0];
     let (t2, m2) = pad_batch(&[sent, other], b, seq).unwrap();
-    let batched = run_with_params(art.as_ref(), &state, &[t2, m2]).unwrap()[0]
+    let batched = run_with_params(&backend, art.as_ref(), &state, vec![t2, m2]).unwrap()[0]
         .as_f32()
         .unwrap()[0];
     assert!(
@@ -90,7 +91,7 @@ fn native_features_deterministic() {
         .artifact("opt-mini/dyad_it/train_k1")
         .unwrap()
         .clone();
-    let state = TrainState::init(&train_spec, 7).unwrap();
+    let state = TrainState::init(&backend, &train_spec, 7).unwrap();
     let b = art.spec().meta_usize("batch").unwrap();
     let seq = art.spec().meta_usize("seq").unwrap();
     let grammar = Grammar::new();
@@ -100,9 +101,14 @@ fn native_features_deterministic() {
         .map(|_| tok.encode_sentence(&grammar.sentence(&mut rng)))
         .collect();
     let (tokens, mask) = pad_batch(&seqs, b, seq).unwrap();
-    let f1 = run_with_params(art.as_ref(), &state, &[tokens.clone(), mask.clone()])
-        .unwrap();
-    let f2 = run_with_params(art.as_ref(), &state, &[tokens, mask]).unwrap();
+    let f1 = run_with_params(
+        &backend,
+        art.as_ref(),
+        &state,
+        vec![tokens.clone(), mask.clone()],
+    )
+    .unwrap();
+    let f2 = run_with_params(&backend, art.as_ref(), &state, vec![tokens, mask]).unwrap();
     let (f1, f2) = (f1[0].as_f32().unwrap(), f2[0].as_f32().unwrap());
     assert_eq!(f1.len(), b * art.spec().outputs[0].shape[1]);
     assert_eq!(f1, f2, "features must be deterministic");
@@ -123,13 +129,13 @@ fn native_eval_loss_near_uniform_at_init() {
             .artifact(&format!("opt-mini/{variant}/train_k1"))
             .unwrap()
             .clone();
-        let state = TrainState::init(&train_spec, 21).unwrap();
+        let state = TrainState::init(&backend, &train_spec, 21).unwrap();
         let b = ev.spec().meta_usize("batch").unwrap();
         let seq = ev.spec().meta_usize("seq").unwrap();
         let mut rng = Rng::new(22);
         let toks: Vec<i32> = (0..b * seq).map(|_| rng.range(3, 200) as i32).collect();
         let tokens = Tensor::from_i32(&[b, seq], toks).unwrap();
-        let out = run_with_params(ev.as_ref(), &state, &[tokens]).unwrap();
+        let out = run_with_params(&backend, ev.as_ref(), &state, vec![tokens]).unwrap();
         let loss = out[0].as_f32().unwrap()[0];
         let uniform = (backend.manifest().arch("opt-mini").unwrap().vocab as f32).ln();
         assert!(
@@ -149,7 +155,7 @@ fn native_next_logits_shape() {
         .artifact("opt-mini/dyad_it/train_k1")
         .unwrap()
         .clone();
-    let state = TrainState::init(&train_spec, 9).unwrap();
+    let state = TrainState::init(&backend, &train_spec, 9).unwrap();
     let b = art.spec().meta_usize("batch").unwrap();
     let seq = art.spec().meta_usize("seq").unwrap();
     let vocab = art.spec().outputs[0].shape[1];
@@ -158,9 +164,10 @@ fn native_next_logits_shape() {
     let mut lens = vec![1i32; b];
     lens[0] = 3;
     let out = run_with_params(
+        &backend,
         art.as_ref(),
         &state,
-        &[
+        vec![
             Tensor::from_i32(&[b, seq], toks).unwrap(),
             Tensor::from_i32(&[b], lens).unwrap(),
         ],
@@ -194,26 +201,34 @@ fn native_checkpoint_roundtrip() {
     let acc = backend.load("mnist/dyad_it/accuracy").unwrap();
     let k = train.spec().meta_usize("k_micro").unwrap();
     let b = train.spec().meta_usize("batch").unwrap();
-    let mut state = TrainState::init(train.spec(), 11).unwrap();
+    let mut state = TrainState::init(&backend, train.spec(), 11).unwrap();
     let mut gen = dyad_repro::data::MnistGen::new(12);
     let (images, labels) = gen.train_batch(k, b);
-    let losses = state.train_call(train.as_ref(), 1e-3, &[images, labels]).unwrap();
+    let losses = state
+        .train_call(&backend, train.as_ref(), 1e-3, vec![images, labels])
+        .unwrap();
     assert_eq!(losses.len(), k);
     assert_eq!(state.step, k as f32);
 
     let dir = std::env::temp_dir().join("dyad-native-ckpt-roundtrip");
     let _ = std::fs::remove_dir_all(&dir);
     let mgr = CheckpointManager::new(&dir);
-    mgr.save_state(train.spec(), &state).unwrap();
-    let restored = mgr.load_state(train.spec()).unwrap();
+    mgr.save_state(&backend, train.spec(), &state).unwrap();
+    let restored = mgr.load_state(&backend, train.spec()).unwrap();
     assert_eq!(restored.step, state.step);
 
     let (images, labels) = gen.batch(b);
-    let a1 = run_with_params(acc.as_ref(), &state, &[images.clone(), labels.clone()])
-        .unwrap()[0]
+    let a1 = run_with_params(
+        &backend,
+        acc.as_ref(),
+        &state,
+        vec![images.clone(), labels.clone()],
+    )
+    .unwrap()[0]
         .as_i32()
         .unwrap()[0];
-    let a2 = run_with_params(acc.as_ref(), &restored, &[images, labels]).unwrap()[0]
+    let a2 = run_with_params(&backend, acc.as_ref(), &restored, vec![images, labels])
+        .unwrap()[0]
         .as_i32()
         .unwrap()[0];
     assert_eq!(a1, a2);
@@ -324,7 +339,7 @@ mod xla_backend {
         let k = art.spec().meta_usize("k_micro").unwrap();
         let b = art.spec().meta_usize("batch").unwrap();
         let seq = art.spec().meta_usize("seq").unwrap();
-        let mut state = TrainState::init(art.spec(), 0).unwrap();
+        let mut state = TrainState::init(&engine, art.spec(), 0).unwrap();
         let mut rng = Rng::new(1);
         let row: Vec<i32> = (0..b * seq).map(|_| rng.range(3, 120) as i32).collect();
         let mut data = Vec::new();
@@ -332,12 +347,16 @@ mod xla_backend {
             data.extend_from_slice(&row);
         }
         let tokens = Tensor::from_i32(&[k, b, seq], data).unwrap();
-        let first = state.train_call(art.as_ref(), 1e-3, &[tokens.clone()]).unwrap();
+        let first = state
+            .train_call(&engine, art.as_ref(), 1e-3, vec![tokens.clone()])
+            .unwrap();
         assert_eq!(first.len(), k);
         assert_eq!(state.step, k as f32);
         let mut last = first.clone();
         for _ in 0..3 {
-            last = state.train_call(art.as_ref(), 1e-3, &[tokens.clone()]).unwrap();
+            last = state
+                .train_call(&engine, art.as_ref(), 1e-3, vec![tokens.clone()])
+                .unwrap();
         }
         assert_eq!(state.step, (4 * k) as f32);
         assert!(
