@@ -18,10 +18,10 @@ use dyad_repro::util::cli::Args;
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let steps = args.usize_or("steps", 240)?;
-    // LM pretraining needs the xla backend today (native transformer
-    // training is a ROADMAP item); --backend native will error there.
+    // LM pretraining runs artifact-free on the default native backend
+    // (layer-module autodiff); pass --backend xla for the PJRT path.
     let backend = open_backend(
-        args.str_or("backend", "xla").parse::<BackendKind>()?,
+        args.str_or("backend", "native").parse::<BackendKind>()?,
         std::path::Path::new(&args.str_or("artifacts", "artifacts")),
     )?;
     let grammar = Grammar::new();

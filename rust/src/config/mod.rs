@@ -50,10 +50,13 @@ impl Default for TrainConfig {
 
 impl TrainConfig {
     pub fn from_args(args: &Args) -> Result<TrainConfig> {
+        use crate::runtime::catalog::{canonical_arch, canonical_variant};
         let d = TrainConfig::default();
         Ok(TrainConfig {
-            arch: args.str_or("arch", &d.arch),
-            variant: args.str_or("variant", &d.variant),
+            // paper-scale names alias onto the catalog's mini configs
+            // (opt125m -> opt-mini, dyad -> dyad_it, ...)
+            arch: canonical_arch(&args.str_or("arch", &d.arch)).to_string(),
+            variant: canonical_variant(&args.str_or("variant", &d.variant)).to_string(),
             steps: args.usize_or("steps", d.steps)?,
             lr: args.f64_or("lr", d.lr)?,
             warmup_steps: args.usize_or("warmup", d.warmup_steps)?,
@@ -114,6 +117,18 @@ mod tests {
         assert_eq!(c.steps, 50);
         assert_eq!(c.lr, 0.002);
         assert_eq!(c.variant, "dyad_it"); // default kept
+    }
+
+    #[test]
+    fn paper_scale_arch_aliases() {
+        let args = Args::parse(
+            ["--arch", "opt125m", "--variant", "dyad"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::from_args(&args).unwrap();
+        assert_eq!(c.arch, "opt-mini");
+        assert_eq!(c.variant, "dyad_it");
+        assert_eq!(c.train_artifact(8), "opt-mini/dyad_it/train_k8");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The pretraining loop: nanoBabyLM corpus → packed batches →
 //! train-step calls on the configured backend → periodic validation →
-//! checkpoints.
+//! checkpoints. Runs artifact-free on the default native backend
+//! (layer-module autodiff) and unchanged on XLA.
 //!
 //! One `train_call` advances K optimizer steps (the artifact's inner
 //! `lax.scan`); the coordinator recomputes the LR schedule between

@@ -271,7 +271,20 @@ pub fn dense_linear(
     f_in: usize,
     f_out: usize,
 ) -> Vec<f32> {
-    let mut y = matmul_bt(x, w, t, f_in, f_out);
+    dense_linear_with_threads(x, w, bias, t, f_in, f_out, num_threads())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn dense_linear_with_threads(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    t: usize,
+    f_in: usize,
+    f_out: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let mut y = matmul_bt_with_threads(x, w, t, f_in, f_out, threads);
     if let Some(b) = bias {
         for row in y.chunks_mut(f_out) {
             for (o, &bv) in row.iter_mut().zip(b) {
@@ -382,8 +395,22 @@ pub fn dyad_linear(
     t: usize,
     bias: Option<&[f32]>,
 ) -> Vec<f32> {
+    dyad_linear_with_threads(wl, wu, x, dims, variant, t, bias, num_threads())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    bias: Option<&[f32]>,
+    threads: usize,
+) -> Vec<f32> {
     let xc = transpose(x, t, dims.f_in());
-    let yc = dyad_fused(wl, wu, &xc, dims, variant, t, bias);
+    let yc = dyad_fused_with_threads(wl, wu, &xc, dims, variant, t, bias, threads);
     transpose(&yc, dims.f_out(), t)
 }
 
@@ -495,8 +522,21 @@ pub fn dyad_linear_backward_dx(
     variant: Variant,
     t: usize,
 ) -> Vec<f32> {
+    dyad_linear_backward_dx_with_threads(wl, wu, dy, dims, variant, t, num_threads())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear_backward_dx_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    threads: usize,
+) -> Vec<f32> {
     let dyc = transpose(dy, t, dims.f_out());
-    let dxc = dyad_backward_dx(wl, wu, &dyc, dims, variant, t);
+    let dxc = dyad_backward_dx_with_threads(wl, wu, &dyc, dims, variant, t, threads);
     transpose(&dxc, dims.f_in(), t)
 }
 

@@ -10,9 +10,11 @@
 //!   inspect          connectivity analysis (Eq 17/18) + artifact info
 //!   list-artifacts   show the manifest inventory
 //!
-//! Every command takes `--backend native|xla` (default native — pure
-//! Rust, no artifacts needed; xla needs the `xla` cargo feature and a
-//! `make artifacts` directory).
+//! Every command — including `train` and `quality` — takes
+//! `--backend native|xla` (default native — pure Rust, no artifacts
+//! needed, training included; xla needs the `xla` cargo feature and a
+//! `make artifacts` directory). Paper-scale names alias onto the mini
+//! reproductions (`--arch opt125m --variant dyad` = opt-mini/dyad_it).
 
 use std::path::PathBuf;
 
@@ -70,8 +72,10 @@ fn print_help() {
            list-artifacts [--kind K]\n\
            quality-summary --dir runs/quality-opt   (render Table-2 style)\n\n\
          Common flags:\n\
-           --backend native|xla   execution backend (default: native)\n\
-           --artifacts DIR        artifact dir for --backend xla (default: artifacts)"
+           --backend native|xla   execution backend (default: native; trains too)\n\
+           --artifacts DIR        artifact dir for --backend xla (default: artifacts)\n\
+           --arch/--variant also accept paper-scale aliases\n\
+           (opt125m/opt350m/pythia160m -> mini configs, dyad -> dyad_it)"
     );
 }
 
@@ -225,11 +229,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use dyad_repro::serve::{Request, ServeConfig, ServerHandle};
+    use dyad_repro::runtime::catalog::{canonical_arch, canonical_variant};
     let cfg = ServeConfig {
         backend: backend_kind(args)?,
         artifacts_dir: args.str_or("artifacts", "artifacts").into(),
-        arch: args.str_or("arch", "opt-mini"),
-        variant: args.str_or("variant", "dyad_it"),
+        arch: canonical_arch(&args.str_or("arch", "opt-mini")).to_string(),
+        variant: canonical_variant(&args.str_or("variant", "dyad_it")).to_string(),
         checkpoint_dir: args.str_opt("ckpt").map(PathBuf::from),
         max_batch: args.usize_or("max-batch", 8)?,
         window_ms: args.u64_or("window-ms", 5)?,

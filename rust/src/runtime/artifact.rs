@@ -38,6 +38,16 @@ impl Role {
             _ => bail!("unknown role {s:?}"),
         })
     }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Role::Param => "param",
+            Role::OptM => "opt_m",
+            Role::OptV => "opt_v",
+            Role::Scalar => "scalar",
+            Role::Data => "data",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -262,6 +272,104 @@ impl Manifest {
     pub fn names(&self) -> Vec<&str> {
         self.artifacts.iter().map(|a| a.name.as_str()).collect()
     }
+
+    /// Serialize to the `manifest.json` wire format ([`Manifest::parse`]
+    /// is the exact inverse). This is how the in-process native catalog
+    /// and the on-disk manifest the XLA engine loads are held to the
+    /// same contract (parity-tested in `tests/device_api.rs`).
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::{arr, num, obj, s};
+        let adam = obj(vec![
+            ("b1", num(self.adam.b1)),
+            ("b2", num(self.adam.b2)),
+            ("eps", num(self.adam.eps)),
+            ("grad_clip", num(self.adam.grad_clip)),
+        ]);
+        let archs = Json::Obj(
+            self.archs
+                .iter()
+                .map(|(name, a)| {
+                    (
+                        name.clone(),
+                        obj(vec![
+                            ("vocab", num(a.vocab as f64)),
+                            ("d_model", num(a.d_model as f64)),
+                            ("d_ff", num(a.d_ff as f64)),
+                            ("n_layers", num(a.n_layers as f64)),
+                            ("n_heads", num(a.n_heads as f64)),
+                            ("seq", num(a.seq as f64)),
+                            ("parallel_residual", Json::Bool(a.parallel_residual)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let variants = Json::Obj(
+            self.variants
+                .iter()
+                .map(|(name, v)| {
+                    (
+                        name.clone(),
+                        obj(vec![
+                            ("kind", s(&v.kind)),
+                            ("dyad_variant", s(&v.dyad_variant)),
+                            ("n_dyad", num(v.n_dyad as f64)),
+                            (
+                                "layer_schedule",
+                                arr(v.layer_schedule.iter().map(|x| s(x))),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let artifacts = arr(self.artifacts.iter().map(|a| {
+            obj(vec![
+                ("name", s(&a.name)),
+                ("file", s(&a.file)),
+                ("kind", s(&a.kind)),
+                ("inputs", arr(a.inputs.iter().map(|io| io_to_json(io, true)))),
+                ("outputs", arr(a.outputs.iter().map(|io| io_to_json(io, false)))),
+                ("meta", a.meta.clone()),
+            ])
+        }));
+        obj(vec![
+            ("version", num(1.0)),
+            ("adam", adam),
+            ("archs", archs),
+            ("variants", variants),
+            ("artifacts", artifacts),
+        ])
+    }
+}
+
+fn io_to_json(io: &IoSpec, with_role: bool) -> Json {
+    use crate::util::json::{arr, num, obj, s};
+    let mut kv = vec![
+        ("name", s(&io.name)),
+        ("shape", arr(io.shape.iter().map(|&d| num(d as f64)))),
+        ("dtype", s(io.dtype.name())),
+    ];
+    if with_role {
+        kv.push(("role", s(io.role.as_str())));
+    }
+    if let Some(init) = &io.init {
+        kv.push((
+            "init",
+            match init {
+                InitSpec::Zeros => obj(vec![("kind", s("zeros"))]),
+                InitSpec::Ones => obj(vec![("kind", s("ones"))]),
+                InitSpec::Uniform { bound } => obj(vec![
+                    ("kind", s("uniform")),
+                    ("bound", num(*bound as f64)),
+                ]),
+                InitSpec::Normal { std } => {
+                    obj(vec![("kind", s("normal")), ("std", num(*std as f64))])
+                }
+            },
+        ));
+    }
+    obj(kv)
 }
 
 fn parse_init(j: &Json) -> Result<InitSpec> {

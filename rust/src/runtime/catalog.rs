@@ -43,6 +43,27 @@ fn uniform(bound: f64) -> InitSpec {
     InitSpec::Uniform { bound: bound as f32 }
 }
 
+/// Paper-scale architecture names map onto the mini reproductions the
+/// catalog actually ships (`repro train --arch opt125m` runs the
+/// `opt-mini` config); unknown names pass through untouched so
+/// manifest errors stay actionable.
+pub fn canonical_arch(name: &str) -> &str {
+    match name {
+        "opt125m" | "opt-125m" => "opt-mini",
+        "opt350m" | "opt-350m" => "opt-mid",
+        "pythia160m" | "pythia-160m" => "pythia-mini",
+        other => other,
+    }
+}
+
+/// Variant shorthand: bare `dyad` means the paper's default DYAD-IT.
+pub fn canonical_variant(name: &str) -> &str {
+    match name {
+        "dyad" => "dyad_it",
+        other => other,
+    }
+}
+
 pub fn archs() -> BTreeMap<String, ArchCfg> {
     let mut m = BTreeMap::new();
     m.insert(
@@ -487,6 +508,40 @@ mod tests {
         let ff_w = 2 * arch.n_layers * arch.d_model * arch.d_ff;
         assert_eq!(dense - dyad, ff_w - 2 * ff_w / 4);
         assert_eq!(dense - dyad8, ff_w - 2 * ff_w / 8);
+    }
+
+    #[test]
+    fn paper_scale_aliases_resolve() {
+        let m = native_manifest();
+        assert!(m.arch(canonical_arch("opt125m")).is_ok());
+        assert!(m.arch(canonical_arch("opt350m")).is_ok());
+        assert!(m.arch(canonical_arch("pythia160m")).is_ok());
+        assert!(m.variant(canonical_variant("dyad")).is_ok());
+        // unknown names pass through (and then fail actionably)
+        assert_eq!(canonical_arch("opt-mini"), "opt-mini");
+        assert_eq!(canonical_variant("dyad_ot"), "dyad_ot");
+        assert!(m.arch(canonical_arch("gpt5")).is_err());
+    }
+
+    /// The in-process manifest serializes to the manifest.json wire
+    /// format and parses back identically — the same artifact count,
+    /// and per-artifact contracts that survive the trip.
+    #[test]
+    fn manifest_json_roundtrips() {
+        let m = native_manifest();
+        let text = m.to_json().to_string();
+        let m2 = Manifest::parse(&text).expect("re-parse serialized manifest");
+        assert_eq!(m.artifacts.len(), m2.artifacts.len());
+        assert_eq!(m.adam.b1, m2.adam.b1);
+        assert_eq!(m.adam.grad_clip, m2.adam.grad_clip);
+        assert_eq!(m.archs.len(), m2.archs.len());
+        assert_eq!(m.variants.len(), m2.variants.len());
+        for (a, b) in m.artifacts.iter().zip(&m2.artifacts) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.inputs.len(), b.inputs.len(), "{}", a.name);
+            assert_eq!(a.outputs.len(), b.outputs.len(), "{}", a.name);
+        }
     }
 
     #[test]

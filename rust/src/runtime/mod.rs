@@ -7,8 +7,9 @@
 //! * `device` — opaque backend-owned buffers ([`DeviceTensor`]) and
 //!   the host↔backend [`staging`] traffic counters.
 //! * `native` — the pure-Rust CPU backend (default): transformer
-//!   inference, MNIST training, ff-micro timing — no artifacts needed;
-//!   device handles wrap host tensors zero-copy.
+//!   inference **and training** (layer-module autodiff, see
+//!   `native::layers`), MNIST training, ff-micro timing — no artifacts
+//!   needed; device handles wrap host tensors zero-copy.
 //! * `engine` (`xla` feature) — the PJRT backend: loads AOT artifacts
 //!   (HLO text) produced by `make artifacts` and executes them;
 //!   device handles keep `xla::Literal`s alive across calls.
@@ -23,7 +24,7 @@ pub mod catalog;
 mod device;
 #[cfg(feature = "xla")]
 mod engine;
-mod native;
+pub mod native;
 mod state;
 
 pub use artifact::{AdamCfg, ArchCfg, ArtifactSpec, IoSpec, Manifest, Role, VariantCfg};

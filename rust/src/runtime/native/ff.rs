@@ -1,17 +1,17 @@
 //! Native ff-micro programs (timing tables T1/T5/T10, F6/F7, -CAT):
 //! fc1 -> GELU -> fc2 at the paper's true widths, forward and
-//! forward+backward, mirroring `model.py::make_ff_fwd/_fwdbwd`.
+//! forward+backward — the [`FfBlock`] layer module over a per-step
+//! [`Workspace`], mirroring `model.py::make_ff_fwd/_fwdbwd`.
 //!
 //! Both linears run structured in *both* directions: the forward rides
 //! `dyad::kernel::dyad_fused` and the backward the per-block
 //! `dyad_backward_dw`/`dyad_backward_dx` kernels via
-//! [`LinearView::backward`] — so the timed bwd columns of the paper
-//! tables do O(dense/n_dyad) work, like the paper's.
+//! [`super::linear::LinearView`] — so the timed bwd columns of the
+//! paper tables do O(dense/n_dyad) work, like the paper's.
 
 use anyhow::Result;
 
-use super::linear::LinearView;
-use super::ops::{gelu, gelu_grad, gelu_inplace};
+use super::layers::{FfBlock, GradStore, Layer, Workspace};
 use super::params::Params;
 use super::VariantSpec;
 
@@ -23,42 +23,33 @@ pub struct Ff<'a> {
 }
 
 impl Ff<'_> {
-    fn fc1(&self) -> Result<LinearView<'_>> {
-        self.var.linear_view(&self.p, "fc1", self.d, self.ff, 0)
-    }
-
-    fn fc2(&self) -> Result<LinearView<'_>> {
-        self.var.linear_view(&self.p, "fc2", self.ff, self.d, 0)
+    fn block(&self) -> Result<FfBlock<'_>> {
+        // ff-micro is the whole stack: fc1's input gradient is unused,
+        // so the timed bwd path skips those kernels (new_input)
+        Ok(FfBlock::new_input(
+            self.var.linear_view(&self.p, "fc1", self.d, self.ff, 0)?,
+            "fc1",
+            self.var.linear_view(&self.p, "fc2", self.ff, self.d, 0)?,
+            "fc2",
+        ))
     }
 
     /// `x (t, d)` -> `y (t, d)`.
     pub fn forward(&self, x: &[f32], t: usize) -> Result<Vec<f32>> {
-        let mut h = self.fc1()?.forward(x, t);
-        gelu_inplace(&mut h);
-        Ok(self.fc2()?.forward(&h, t))
+        self.block()?.forward(x, t, &mut Workspace::inference())
     }
 
     /// Forward + backward of `loss = sum(y * ct)`: returns the loss and
     /// parameter gradients in spec order (fc1 params, then fc2 params).
     pub fn fwdbwd(&self, x: &[f32], ct: &[f32], t: usize) -> Result<(f32, Vec<Vec<f32>>)> {
-        let fc1 = self.fc1()?;
-        let fc2 = self.fc2()?;
-        // keep fc1's pre-activation for the GELU derivative; write the
-        // activation into its own buffer (no clone-then-overwrite pass)
-        let a1 = fc1.forward(x, t);
-        let h: Vec<f32> = a1.iter().map(|&v| gelu(v)).collect();
-        let y = fc2.forward(&h, t);
+        let block = self.block()?;
+        let mut ws = Workspace::training();
+        let y = block.forward(x, t, &mut ws)?;
         let loss: f64 = y.iter().zip(ct).map(|(a, b)| (a * b) as f64).sum();
         // dL/dy = ct
-        let (g_fc2, dh) = fc2.backward(&h, ct, t, true)?;
-        let mut da1 = dh.unwrap();
-        for (g, &a) in da1.iter_mut().zip(&a1) {
-            *g *= gelu_grad(a);
-        }
-        let (g_fc1, _) = fc1.backward(x, &da1, t, false)?;
-        let mut grads = g_fc1;
-        grads.extend(g_fc2);
-        Ok((loss as f32, grads))
+        let mut grads = GradStore::new();
+        block.backward(ct, t, &mut ws, &mut grads)?;
+        Ok((loss as f32, grads.into_named_order(&block.grad_names())?))
     }
 }
 

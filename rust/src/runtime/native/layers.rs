@@ -1,0 +1,1140 @@
+//! Layer modules with caching forward and backward — the native
+//! backend's autodiff stack.
+//!
+//! Every module implements [`Layer`]: `forward` maps row-major
+//! activations `(rows, in)` → `(rows, out)` and pushes whatever its
+//! backward needs onto the step's [`Workspace`] tape; `backward` pops
+//! that frame (LIFO, tag-checked so mis-ordered stacks fail loudly),
+//! accumulates parameter gradients into a [`GradStore`] keyed by the
+//! manifest parameter names, and returns the input gradient.
+//!
+//! Linear layers dispatch through [`LinearView`], so the DYAD arm
+//! rides the structured per-block kernels
+//! (`dyad::kernel::{dyad_backward_dw, dyad_backward_dx}`) — no
+//! `(f_out, f_in)` materialisation anywhere in training — and the
+//! dense arm the blocked microkernels. Attention backward applies the
+//! softmax jacobian per (batch, head) row, parallelised exactly like
+//! the forward; layer-norm backward consumes the cached `xhat`/`inv`
+//! statistics.
+//!
+//! The worker-pool size is resolved **once** per workspace
+//! ([`Workspace::threads`]) and threaded through every kernel call via
+//! the `*_with_threads` escape hatches, so nested parallel sections
+//! can't each re-derive a pool and oversubscribe the machine.
+//!
+//! Every parallel section assigns each output row to exactly one
+//! thread with a fixed sequential accumulation order, so forward *and*
+//! backward are bitwise deterministic across thread counts (tested).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dyad::kernel::{
+    axpy, dense_linear_with_threads, dot, matmul_bt_with_threads, matmul_fast_with_threads,
+    num_threads, parallel_rows, transpose,
+};
+use crate::runtime::artifact::{ArtifactSpec, Role};
+
+use super::linear::LinearView;
+use super::ops::{
+    gelu_grad, gelu_inplace, layer_norm, layer_norm_backward, layer_norm_forward, relu_inplace,
+    softmax_backward_row, softmax_row,
+};
+use super::params::Params;
+
+/// Per-step tape + execution context shared by all layer modules.
+///
+/// `forward` pushes one tagged frame per module; `backward` pops them
+/// in reverse. A non-recording workspace ([`Workspace::inference`])
+/// skips all caching, so the inference hot paths stay allocation-lean.
+pub struct Workspace {
+    threads: usize,
+    recording: bool,
+    tape: Vec<(&'static str, Vec<Vec<f32>>)>,
+}
+
+impl Workspace {
+    /// A recording workspace for training, worker count resolved once
+    /// from [`num_threads`].
+    pub fn training() -> Workspace {
+        Workspace::training_with_threads(num_threads())
+    }
+
+    pub fn training_with_threads(threads: usize) -> Workspace {
+        Workspace { threads: threads.max(1), recording: true, tape: Vec::new() }
+    }
+
+    /// A non-recording workspace: forward passes skip all caching.
+    pub fn inference() -> Workspace {
+        Workspace::inference_with_threads(num_threads())
+    }
+
+    pub fn inference_with_threads(threads: usize) -> Workspace {
+        Workspace { threads: threads.max(1), recording: false, tape: Vec::new() }
+    }
+
+    /// The cached worker-pool size every layer kernel call uses.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn recording(&self) -> bool {
+        self.recording
+    }
+
+    /// Open tape frames (0 after a complete forward+backward).
+    pub fn depth(&self) -> usize {
+        self.tape.len()
+    }
+
+    pub(crate) fn push(&mut self, tag: &'static str, frame: Vec<Vec<f32>>) {
+        if self.recording {
+            self.tape.push((tag, frame));
+        }
+    }
+
+    pub(crate) fn pop(&mut self, tag: &'static str) -> Result<Vec<Vec<f32>>> {
+        match self.tape.pop() {
+            Some((t, f)) if t == tag => Ok(f),
+            Some((t, _)) => bail!(
+                "workspace tape out of order: popped a {t:?} frame, {tag:?} expected \
+                 (backward order must mirror forward)"
+            ),
+            None => bail!(
+                "workspace tape empty: no {tag:?} frame (backward without a recorded \
+                 forward, or a second backward over the same tape)"
+            ),
+        }
+    }
+}
+
+/// Parameter gradients accumulated by name (manifest names), summed on
+/// repeated contributions — tied parameters (`tok_emb` via both the
+/// embedding and the LM head) just add twice.
+#[derive(Default)]
+pub struct GradStore {
+    map: BTreeMap<String, Vec<f32>>,
+}
+
+impl GradStore {
+    pub fn new() -> GradStore {
+        GradStore::default()
+    }
+
+    /// Accumulate `g` into the named gradient (exact length match).
+    pub fn add(&mut self, name: &str, g: Vec<f32>) -> Result<()> {
+        match self.map.get_mut(name) {
+            Some(acc) => {
+                if acc.len() != g.len() {
+                    bail!(
+                        "gradient {name:?}: accumulating {} values into {}",
+                        g.len(),
+                        acc.len()
+                    );
+                }
+                for (a, b) in acc.iter_mut().zip(&g) {
+                    *a += b;
+                }
+            }
+            None => {
+                self.map.insert(name.to_string(), g);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.map.get(name).map(Vec::as_slice)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Global L2 norm over every accumulated gradient (f64 accumulation).
+    pub fn global_norm(&self) -> f32 {
+        let sq: f64 = self
+            .map
+            .values()
+            .flat_map(|g| g.iter())
+            .map(|&v| v as f64 * v as f64)
+            .sum();
+        sq.sqrt() as f32
+    }
+
+    /// Scale every gradient in place (the grad-clip application).
+    pub fn scale(&mut self, s: f32) {
+        for g in self.map.values_mut() {
+            for v in g.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Drain into the order of `names` (the flat training-state feed
+    /// order); every name must have received a gradient.
+    pub fn into_named_order(mut self, names: &[String]) -> Result<Vec<Vec<f32>>> {
+        names
+            .iter()
+            .map(|n| {
+                self.map
+                    .remove(n)
+                    .with_context(|| format!("no gradient accumulated for parameter {n:?}"))
+            })
+            .collect()
+    }
+
+    /// Drain into the artifact's `Role::Param` feed order.
+    pub fn into_spec_order(mut self, spec: &ArtifactSpec) -> Result<Vec<Vec<f32>>> {
+        spec.inputs
+            .iter()
+            .filter(|io| io.role == Role::Param)
+            .map(|io| {
+                self.map.remove(&io.name).with_context(|| {
+                    format!("{}: no gradient accumulated for {:?}", spec.name, io.name)
+                })
+            })
+            .collect()
+    }
+}
+
+/// One differentiable module over row-major activations.
+pub trait Layer {
+    /// Tape tag / debug name.
+    fn name(&self) -> &'static str;
+
+    /// `x (rows, in)` → `(rows, out)`; records this module's frame on
+    /// a recording workspace.
+    fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>>;
+
+    /// `dy (rows, out)` → `dx (rows, in)`; pops this module's frame
+    /// and accumulates parameter gradients.
+    fn backward(
+        &self,
+        dy: &[f32],
+        rows: usize,
+        ws: &mut Workspace,
+        grads: &mut GradStore,
+    ) -> Result<Vec<f32>>;
+}
+
+/// A linear layer (DENSE or DYAD via [`LinearView`]) with gradient
+/// names derived from its parameter prefix.
+pub struct LinearLayer<'a> {
+    view: LinearView<'a>,
+    names: Vec<String>,
+    need_dx: bool,
+}
+
+impl<'a> LinearLayer<'a> {
+    pub fn new(view: LinearView<'a>, prefix: &str) -> LinearLayer<'a> {
+        let names = view.grad_names(prefix);
+        LinearLayer { view, names, need_dx: true }
+    }
+
+    /// A linear at the very start of a stack: nothing consumes its
+    /// input gradient, so backward skips the `dx` kernels entirely
+    /// (the timed ff-micro/MNIST paths stay O(param-grads only) at the
+    /// first layer) and returns an empty vec.
+    pub fn new_input(view: LinearView<'a>, prefix: &str) -> LinearLayer<'a> {
+        let names = view.grad_names(prefix);
+        LinearLayer { view, names, need_dx: false }
+    }
+
+    pub fn view(&self) -> &LinearView<'a> {
+        &self.view
+    }
+
+    /// Gradient names this layer accumulates, in backward-return order.
+    pub fn grad_names(&self) -> &[String] {
+        &self.names
+    }
+}
+
+impl Layer for LinearLayer<'_> {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
+        let y = self.view.forward_with_threads(x, rows, ws.threads());
+        if ws.recording() {
+            ws.push("linear", vec![x.to_vec()]);
+        }
+        Ok(y)
+    }
+
+    fn backward(
+        &self,
+        dy: &[f32],
+        rows: usize,
+        ws: &mut Workspace,
+        grads: &mut GradStore,
+    ) -> Result<Vec<f32>> {
+        let mut frame = ws.pop("linear")?;
+        let x = frame.pop().context("linear frame: missing cached input")?;
+        let threads = ws.threads();
+        let (gs, dx) = self.view.backward_with_threads(&x, dy, rows, self.need_dx, threads)?;
+        for (n, g) in self.names.iter().zip(gs) {
+            grads.add(n, g)?;
+        }
+        if self.need_dx {
+            dx.context("linear backward requested no dx")
+        } else {
+            Ok(Vec::new())
+        }
+    }
+}
+
+/// Elementwise activation (parameter-free).
+pub enum Activation {
+    Gelu,
+    Relu,
+}
+
+impl Layer for Activation {
+    fn name(&self) -> &'static str {
+        "activation"
+    }
+
+    fn forward(&self, x: &[f32], _rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
+        // the derivative reads the pre-activation, so cache x first
+        if ws.recording() {
+            ws.push("activation", vec![x.to_vec()]);
+        }
+        let mut y = x.to_vec();
+        match self {
+            Activation::Gelu => gelu_inplace(&mut y),
+            Activation::Relu => relu_inplace(&mut y),
+        }
+        Ok(y)
+    }
+
+    fn backward(
+        &self,
+        dy: &[f32],
+        _rows: usize,
+        ws: &mut Workspace,
+        _grads: &mut GradStore,
+    ) -> Result<Vec<f32>> {
+        let mut frame = ws.pop("activation")?;
+        let a = frame.pop().context("activation frame: missing pre-activation")?;
+        let mut dx = dy.to_vec();
+        match self {
+            Activation::Gelu => {
+                for (g, &av) in dx.iter_mut().zip(&a) {
+                    *g *= gelu_grad(av);
+                }
+            }
+            Activation::Relu => {
+                for (g, &av) in dx.iter_mut().zip(&a) {
+                    if av <= 0.0 {
+                        *g = 0.0;
+                    }
+                }
+            }
+        }
+        Ok(dx)
+    }
+}
+
+/// LayerNorm over the last axis (population variance, eps 1e-5),
+/// caching `xhat`/`inv` for the backward.
+pub struct LayerNorm<'a> {
+    scale: &'a [f32],
+    bias: &'a [f32],
+    d: usize,
+    scale_name: String,
+    bias_name: String,
+}
+
+impl<'a> LayerNorm<'a> {
+    /// Reads `{prefix}.scale` / `{prefix}.bias` from `p`.
+    pub fn new(p: &Params<'a>, prefix: &str, d: usize) -> Result<LayerNorm<'a>> {
+        Ok(LayerNorm {
+            scale: p.f32(&format!("{prefix}.scale"))?,
+            bias: p.f32(&format!("{prefix}.bias"))?,
+            d,
+            scale_name: format!("{prefix}.scale"),
+            bias_name: format!("{prefix}.bias"),
+        })
+    }
+}
+
+impl Layer for LayerNorm<'_> {
+    fn name(&self) -> &'static str {
+        "layer_norm"
+    }
+
+    fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
+        if x.len() != rows * self.d {
+            bail!("layer_norm: {} values for {rows} rows of {}", x.len(), self.d);
+        }
+        if ws.recording() {
+            let (y, xhat, inv) = layer_norm_forward(x, self.d, self.scale, self.bias);
+            ws.push("layer_norm", vec![xhat, inv]);
+            Ok(y)
+        } else {
+            let mut y = x.to_vec();
+            layer_norm(&mut y, self.d, self.scale, self.bias);
+            Ok(y)
+        }
+    }
+
+    fn backward(
+        &self,
+        dy: &[f32],
+        _rows: usize,
+        ws: &mut Workspace,
+        grads: &mut GradStore,
+    ) -> Result<Vec<f32>> {
+        let mut frame = ws.pop("layer_norm")?;
+        let inv = frame.pop().context("layer_norm frame: missing inv")?;
+        let xhat = frame.pop().context("layer_norm frame: missing xhat")?;
+        let (dx, dscale, dbias) = layer_norm_backward(dy, &xhat, &inv, self.d, self.scale);
+        grads.add(&self.scale_name, dscale)?;
+        grads.add(&self.bias_name, dbias)?;
+        Ok(dx)
+    }
+}
+
+/// Causal multi-head attention. Forward parallelises over (batch,
+/// head) pairs; the recording path also stores the softmax rows, and
+/// backward applies the softmax jacobian per row under the same
+/// (batch, head) parallel schedule — `dq`/`dk`/`dv` blocks of one
+/// pair are owned by one thread, so the backward is deterministic
+/// like the forward.
+pub struct Attention<'a> {
+    wq: &'a [f32],
+    wq_b: &'a [f32],
+    wk: &'a [f32],
+    wk_b: &'a [f32],
+    wv: &'a [f32],
+    wv_b: &'a [f32],
+    wo: &'a [f32],
+    wo_b: &'a [f32],
+    prefix: String,
+    b: usize,
+    s: usize,
+    nh: usize,
+    hd: usize,
+}
+
+impl<'a> Attention<'a> {
+    /// Reads `{prefix}.wq[.b]`/`wk`/`wv`/`wo` from `p`; `(b, s)` is
+    /// the step's batch geometry.
+    pub fn new(
+        p: &Params<'a>,
+        prefix: &str,
+        d: usize,
+        nh: usize,
+        b: usize,
+        s: usize,
+    ) -> Result<Attention<'a>> {
+        if nh == 0 || d % nh != 0 {
+            bail!("attention: d_model {d} not divisible by n_heads {nh}");
+        }
+        let w = |n: &str| p.f32(&format!("{prefix}.{n}"));
+        Ok(Attention {
+            wq: w("wq")?,
+            wq_b: w("wq_b")?,
+            wk: w("wk")?,
+            wk_b: w("wk_b")?,
+            wv: w("wv")?,
+            wv_b: w("wv_b")?,
+            wo: w("wo")?,
+            wo_b: w("wo_b")?,
+            prefix: prefix.to_string(),
+            b,
+            s,
+            nh,
+            hd: d / nh,
+        })
+    }
+
+    fn d(&self) -> usize {
+        self.nh * self.hd
+    }
+
+    /// `(b*s, d)` row-major → `(b*nh, s, hd)`: one contiguous block
+    /// per (batch, head) pair.
+    fn to_heads(&self, m: &[f32]) -> Vec<f32> {
+        let (b, s, nh, hd) = (self.b, self.s, self.nh, self.hd);
+        let d = self.d();
+        let mut out = vec![0.0f32; b * s * d];
+        for bi in 0..b {
+            for t in 0..s {
+                let src = &m[(bi * s + t) * d..(bi * s + t + 1) * d];
+                for h in 0..nh {
+                    let dst = ((bi * nh + h) * s + t) * hd;
+                    out[dst..dst + hd].copy_from_slice(&src[h * hd..(h + 1) * hd]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`Attention::to_heads`].
+    fn from_heads(&self, m: &[f32]) -> Vec<f32> {
+        let (b, s, nh, hd) = (self.b, self.s, self.nh, self.hd);
+        let d = self.d();
+        let mut out = vec![0.0f32; b * s * d];
+        for bi in 0..b {
+            for t in 0..s {
+                let dst = &mut out[(bi * s + t) * d..(bi * s + t + 1) * d];
+                for h in 0..nh {
+                    let src = ((bi * nh + h) * s + t) * hd;
+                    dst[h * hd..(h + 1) * hd].copy_from_slice(&m[src..src + hd]);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Layer for Attention<'_> {
+    fn name(&self) -> &'static str {
+        "attention"
+    }
+
+    fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
+        let (b, s, nh, hd) = (self.b, self.s, self.nh, self.hd);
+        let d = self.d();
+        let bs = b * s;
+        if rows != bs || x.len() != bs * d {
+            bail!("attention: {rows} rows / {} values for b={b} s={s} d={d}", x.len());
+        }
+        let threads = ws.threads();
+        let q = dense_linear_with_threads(x, self.wq, Some(self.wq_b), bs, d, d, threads);
+        let k = dense_linear_with_threads(x, self.wk, Some(self.wk_b), bs, d, d, threads);
+        let v = dense_linear_with_threads(x, self.wv, Some(self.wv_b), bs, d, d, threads);
+        let qh = self.to_heads(&q);
+        let kh = self.to_heads(&k);
+        let vh = self.to_heads(&v);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let blk = s * hd;
+        let merged = if ws.recording() {
+            // one combined [softmax rows | context] row per (batch,
+            // head), so the probabilities land on the tape without a
+            // second pass over the scores
+            let prow = s * s;
+            let mut buf = vec![0.0f32; b * nh * (prow + blk)];
+            parallel_rows(&mut buf, prow + blk, threads, &|bh, row| {
+                let (probs, ctx) = row.split_at_mut(prow);
+                let qb = &qh[bh * blk..(bh + 1) * blk];
+                let kb = &kh[bh * blk..(bh + 1) * blk];
+                let vb = &vh[bh * blk..(bh + 1) * blk];
+                for ti in 0..s {
+                    let qrow = &qb[ti * hd..(ti + 1) * hd];
+                    let att = &mut probs[ti * s..ti * s + ti + 1];
+                    for (tj, a) in att.iter_mut().enumerate() {
+                        *a = dot(qrow, &kb[tj * hd..(tj + 1) * hd]) * scale;
+                    }
+                    softmax_row(att);
+                    let orow = &mut ctx[ti * hd..(ti + 1) * hd];
+                    for (tj, &a) in att.iter().enumerate() {
+                        axpy(orow, a, &vb[tj * hd..(tj + 1) * hd]);
+                    }
+                }
+            });
+            let mut probs = vec![0.0f32; b * nh * prow];
+            let mut ctx = vec![0.0f32; bs * d];
+            for bh in 0..b * nh {
+                let row = &buf[bh * (prow + blk)..(bh + 1) * (prow + blk)];
+                probs[bh * prow..(bh + 1) * prow].copy_from_slice(&row[..prow]);
+                ctx[bh * blk..(bh + 1) * blk].copy_from_slice(&row[prow..]);
+            }
+            let merged = self.from_heads(&ctx);
+            ws.push(
+                "attention",
+                vec![x.to_vec(), qh, kh, vh, probs, merged.clone()],
+            );
+            merged
+        } else {
+            // inference: no probability storage, scratch row reused
+            let mut ctx = vec![0.0f32; bs * d];
+            parallel_rows(&mut ctx, blk, threads, &|bh, row| {
+                let qb = &qh[bh * blk..(bh + 1) * blk];
+                let kb = &kh[bh * blk..(bh + 1) * blk];
+                let vb = &vh[bh * blk..(bh + 1) * blk];
+                let mut att = vec![0.0f32; s];
+                for ti in 0..s {
+                    let qrow = &qb[ti * hd..(ti + 1) * hd];
+                    for (tj, a) in att.iter_mut().enumerate().take(ti + 1) {
+                        *a = dot(qrow, &kb[tj * hd..(tj + 1) * hd]) * scale;
+                    }
+                    softmax_row(&mut att[..ti + 1]);
+                    let orow = &mut row[ti * hd..(ti + 1) * hd];
+                    for tj in 0..=ti {
+                        axpy(orow, att[tj], &vb[tj * hd..(tj + 1) * hd]);
+                    }
+                }
+            });
+            self.from_heads(&ctx)
+        };
+        Ok(dense_linear_with_threads(&merged, self.wo, Some(self.wo_b), bs, d, d, threads))
+    }
+
+    fn backward(
+        &self,
+        dy: &[f32],
+        rows: usize,
+        ws: &mut Workspace,
+        grads: &mut GradStore,
+    ) -> Result<Vec<f32>> {
+        let (b, s, nh, hd) = (self.b, self.s, self.nh, self.hd);
+        let d = self.d();
+        let bs = b * s;
+        if rows != bs || dy.len() != bs * d {
+            bail!("attention backward: {rows} rows / {} values", dy.len());
+        }
+        let mut frame = ws.pop("attention")?;
+        let merged = frame.pop().context("attention frame: merged")?;
+        let probs = frame.pop().context("attention frame: probs")?;
+        let vh = frame.pop().context("attention frame: vh")?;
+        let kh = frame.pop().context("attention frame: kh")?;
+        let qh = frame.pop().context("attention frame: qh")?;
+        let x = frame.pop().context("attention frame: x")?;
+        let threads = ws.threads();
+
+        // output projection: dW_o = dy^T @ merged, d_merged = dy @ W_o
+        let wo_view = LinearView::Dense { w: self.wo, b: self.wo_b, f_in: d, f_out: d };
+        let (mut g_wo, dmerged) = wo_view.backward_with_threads(&merged, dy, bs, true, threads)?;
+        grads.add(&format!("{}.wo_b", self.prefix), g_wo.pop().context("wo db")?)?;
+        grads.add(&format!("{}.wo", self.prefix), g_wo.pop().context("wo dw")?)?;
+        let dctx = self.to_heads(&dmerged.context("wo backward: no dx")?);
+
+        // per (batch, head): softmax-jacobian backward into one
+        // combined [dq | dk | dv] row, owned by one thread
+        let scale = 1.0 / (hd as f32).sqrt();
+        let blk = s * hd;
+        let mut dbuf = vec![0.0f32; b * nh * 3 * blk];
+        parallel_rows(&mut dbuf, 3 * blk, threads, &|bh, row| {
+            let (dqb, rest) = row.split_at_mut(blk);
+            let (dkb, dvb) = rest.split_at_mut(blk);
+            let qb = &qh[bh * blk..(bh + 1) * blk];
+            let kb = &kh[bh * blk..(bh + 1) * blk];
+            let vb = &vh[bh * blk..(bh + 1) * blk];
+            let pb = &probs[bh * s * s..(bh + 1) * s * s];
+            let dcb = &dctx[bh * blk..(bh + 1) * blk];
+            let mut datt = vec![0.0f32; s];
+            let mut dscore = vec![0.0f32; s];
+            for ti in 0..s {
+                let pr = &pb[ti * s..ti * s + ti + 1];
+                let dc = &dcb[ti * hd..(ti + 1) * hd];
+                for (tj, da) in datt.iter_mut().enumerate().take(ti + 1) {
+                    // dv_j += att_ij * dctx_i ; datt_ij = dctx_i · v_j
+                    axpy(&mut dvb[tj * hd..(tj + 1) * hd], pr[tj], dc);
+                    *da = dot(&vb[tj * hd..(tj + 1) * hd], dc);
+                }
+                softmax_backward_row(pr, &datt[..ti + 1], &mut dscore[..ti + 1]);
+                let qrow = &qb[ti * hd..(ti + 1) * hd];
+                let dqrow = &mut dqb[ti * hd..(ti + 1) * hd];
+                for tj in 0..=ti {
+                    let w = dscore[tj] * scale;
+                    // dq_i += w * k_j ; dk_j += w * q_i
+                    axpy(dqrow, w, &kb[tj * hd..(tj + 1) * hd]);
+                    axpy(&mut dkb[tj * hd..(tj + 1) * hd], w, qrow);
+                }
+            }
+        });
+        let mut dqh = vec![0.0f32; bs * d];
+        let mut dkh = vec![0.0f32; bs * d];
+        let mut dvh = vec![0.0f32; bs * d];
+        for bh in 0..b * nh {
+            let row = &dbuf[bh * 3 * blk..(bh + 1) * 3 * blk];
+            dqh[bh * blk..(bh + 1) * blk].copy_from_slice(&row[..blk]);
+            dkh[bh * blk..(bh + 1) * blk].copy_from_slice(&row[blk..2 * blk]);
+            dvh[bh * blk..(bh + 1) * blk].copy_from_slice(&row[2 * blk..]);
+        }
+
+        // q/k/v projections: accumulate dW/db and sum the three dx paths
+        let mut dx = vec![0.0f32; bs * d];
+        for (w, wb, nm, dm) in [
+            (self.wq, self.wq_b, "wq", self.from_heads(&dqh)),
+            (self.wk, self.wk_b, "wk", self.from_heads(&dkh)),
+            (self.wv, self.wv_b, "wv", self.from_heads(&dvh)),
+        ] {
+            let view = LinearView::Dense { w, b: wb, f_in: d, f_out: d };
+            let (mut gs, dxp) = view.backward_with_threads(&x, &dm, bs, true, threads)?;
+            grads.add(&format!("{}.{nm}_b", self.prefix), gs.pop().context("proj db")?)?;
+            grads.add(&format!("{}.{nm}", self.prefix), gs.pop().context("proj dw")?)?;
+            for (o, v) in dx.iter_mut().zip(dxp.context("proj backward: no dx")?) {
+                *o += v;
+            }
+        }
+        Ok(dx)
+    }
+}
+
+/// The paper's swap site as a module: fc1 → GELU → fc2, both linears
+/// dispatching DENSE/DYAD through [`LinearLayer`].
+pub struct FfBlock<'a> {
+    fc1: LinearLayer<'a>,
+    act: Activation,
+    fc2: LinearLayer<'a>,
+}
+
+impl<'a> FfBlock<'a> {
+    pub fn new(
+        fc1: LinearView<'a>,
+        fc1_prefix: &str,
+        fc2: LinearView<'a>,
+        fc2_prefix: &str,
+    ) -> FfBlock<'a> {
+        FfBlock {
+            fc1: LinearLayer::new(fc1, fc1_prefix),
+            act: Activation::Gelu,
+            fc2: LinearLayer::new(fc2, fc2_prefix),
+        }
+    }
+
+    /// An ff block at the very start of a stack (the timed ff-micro
+    /// programs): fc1's input gradient is skipped.
+    pub fn new_input(
+        fc1: LinearView<'a>,
+        fc1_prefix: &str,
+        fc2: LinearView<'a>,
+        fc2_prefix: &str,
+    ) -> FfBlock<'a> {
+        FfBlock {
+            fc1: LinearLayer::new_input(fc1, fc1_prefix),
+            act: Activation::Gelu,
+            fc2: LinearLayer::new(fc2, fc2_prefix),
+        }
+    }
+
+    /// Gradient names of both linears, fc1 first (the catalog's
+    /// `ff_param_specs` feed order).
+    pub fn grad_names(&self) -> Vec<String> {
+        let mut names = self.fc1.grad_names().to_vec();
+        names.extend_from_slice(self.fc2.grad_names());
+        names
+    }
+}
+
+impl Layer for FfBlock<'_> {
+    fn name(&self) -> &'static str {
+        "ff_block"
+    }
+
+    fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
+        let h = self.fc1.forward(x, rows, ws)?;
+        let h = self.act.forward(&h, rows, ws)?;
+        self.fc2.forward(&h, rows, ws)
+    }
+
+    fn backward(
+        &self,
+        dy: &[f32],
+        rows: usize,
+        ws: &mut Workspace,
+        grads: &mut GradStore,
+    ) -> Result<Vec<f32>> {
+        let dh = self.fc2.backward(dy, rows, ws, grads)?;
+        let dh = self.act.backward(&dh, rows, ws, grads)?;
+        self.fc1.backward(&dh, rows, ws, grads)
+    }
+}
+
+/// A stack of layers run in order (MNIST MLP, ad-hoc compositions).
+pub struct Sequential<'a> {
+    layers: Vec<Box<dyn Layer + 'a>>,
+}
+
+impl<'a> Sequential<'a> {
+    pub fn new(layers: Vec<Box<dyn Layer + 'a>>) -> Sequential<'a> {
+        Sequential { layers }
+    }
+}
+
+impl Layer for Sequential<'_> {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
+        let mut cur = x.to_vec();
+        for l in &self.layers {
+            cur = l.forward(&cur, rows, ws)?;
+        }
+        Ok(cur)
+    }
+
+    fn backward(
+        &self,
+        dy: &[f32],
+        rows: usize,
+        ws: &mut Workspace,
+        grads: &mut GradStore,
+    ) -> Result<Vec<f32>> {
+        let mut cur = dy.to_vec();
+        for l in self.layers.iter().rev() {
+            cur = l.backward(&cur, rows, ws, grads)?;
+        }
+        Ok(cur)
+    }
+}
+
+/// The tied LM head: `logits = h @ tok_emb^T` (no bias). Backward
+/// adds the head's contribution to the shared `tok_emb` gradient —
+/// the embedding backward adds the other half.
+pub struct TiedLmHead<'a> {
+    emb: &'a [f32],
+    vocab: usize,
+    d: usize,
+}
+
+impl<'a> TiedLmHead<'a> {
+    pub fn new(p: &Params<'a>, vocab: usize, d: usize) -> Result<TiedLmHead<'a>> {
+        let emb = p.f32("tok_emb")?;
+        if emb.len() != vocab * d {
+            bail!("tok_emb: {} values for ({vocab}, {d})", emb.len());
+        }
+        Ok(TiedLmHead { emb, vocab, d })
+    }
+}
+
+impl Layer for TiedLmHead<'_> {
+    fn name(&self) -> &'static str {
+        "tied_lm_head"
+    }
+
+    fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
+        let logits = matmul_bt_with_threads(x, self.emb, rows, self.d, self.vocab, ws.threads());
+        if ws.recording() {
+            ws.push("tied_lm_head", vec![x.to_vec()]);
+        }
+        Ok(logits)
+    }
+
+    fn backward(
+        &self,
+        dy: &[f32],
+        rows: usize,
+        ws: &mut Workspace,
+        grads: &mut GradStore,
+    ) -> Result<Vec<f32>> {
+        let mut frame = ws.pop("tied_lm_head")?;
+        let h = frame.pop().context("tied_lm_head frame: hidden")?;
+        let threads = ws.threads();
+        // d_emb = dlogits^T @ h ; dh = dlogits @ emb
+        let dyt = transpose(dy, rows, self.vocab);
+        let demb = matmul_fast_with_threads(&dyt, &h, self.vocab, rows, self.d, threads);
+        grads.add("tok_emb", demb)?;
+        Ok(matmul_fast_with_threads(dy, self.emb, rows, self.vocab, self.d, threads))
+    }
+}
+
+/// Token + learned-position embedding. Its input is the token ids, so
+/// it sits outside the float [`Layer`] chain: `forward` starts a step,
+/// `backward` terminates it (no upstream dx).
+pub struct Embedding<'a> {
+    tok: &'a [f32],
+    pos: &'a [f32],
+    vocab: usize,
+    seq: usize,
+    d: usize,
+}
+
+impl<'a> Embedding<'a> {
+    pub fn new(p: &Params<'a>, vocab: usize, seq: usize, d: usize) -> Result<Embedding<'a>> {
+        Ok(Embedding { tok: p.f32("tok_emb")?, pos: p.f32("pos_emb")?, vocab, seq, d })
+    }
+
+    /// `(b, s)` int32 tokens → `(b*s, d)` rows:
+    /// `tok_emb[token] + pos_emb[position]`.
+    pub fn forward(&self, tokens: &[i32], b: usize, s: usize) -> Result<Vec<f32>> {
+        let d = self.d;
+        if tokens.len() != b * s {
+            bail!("tokens len {} != {b}x{s}", tokens.len());
+        }
+        if s > self.seq {
+            bail!("sequence length {s} exceeds arch seq {}", self.seq);
+        }
+        let mut x = vec![0.0f32; b * s * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= self.vocab {
+                bail!("token id {tok} out of vocab {}", self.vocab);
+            }
+            let row = &mut x[t * d..(t + 1) * d];
+            let e = &self.tok[tok * d..(tok + 1) * d];
+            let p = &self.pos[(t % s) * d..(t % s + 1) * d];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = e[j] + p[j];
+            }
+        }
+        Ok(x)
+    }
+
+    /// Scatter-add `dx` into the `tok_emb` / `pos_emb` gradients.
+    pub fn backward(
+        &self,
+        dx: &[f32],
+        tokens: &[i32],
+        s: usize,
+        grads: &mut GradStore,
+    ) -> Result<()> {
+        let d = self.d;
+        if dx.len() != tokens.len() * d {
+            bail!("embedding backward: {} values for {} tokens", dx.len(), tokens.len());
+        }
+        let mut dtok = vec![0.0f32; self.vocab * d];
+        let mut dpos = vec![0.0f32; self.seq * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            let row = &dx[t * d..(t + 1) * d];
+            axpy(&mut dtok[tok * d..(tok + 1) * d], 1.0, row);
+            axpy(&mut dpos[(t % s) * d..(t % s + 1) * d], 1.0, row);
+        }
+        grads.add("tok_emb", dtok)?;
+        grads.add("pos_emb", dpos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-0.5, 0.5)).collect()
+    }
+
+    /// A tiny attention module over named flat params.
+    fn attn_fixture() -> (Vec<String>, Vec<Vec<f32>>, usize, usize, usize, usize) {
+        let (b, s, nh, d) = (2usize, 4usize, 2usize, 6usize);
+        let mut rng = Rng::new(51);
+        let mut names = Vec::new();
+        let mut vals = Vec::new();
+        for m in ["wq", "wk", "wv", "wo"] {
+            names.push(format!("attn.{m}"));
+            vals.push(rand_vec(&mut rng, d * d));
+            names.push(format!("attn.{m}_b"));
+            vals.push(rand_vec(&mut rng, d));
+        }
+        (names, vals, b, s, nh, d)
+    }
+
+    /// Finite-difference gradcheck of the attention backward through a
+    /// sum(y * ct) loss: every projection weight/bias plus the input.
+    #[test]
+    fn attention_backward_gradcheck() {
+        let (names, vals, b, s, nh, d) = attn_fixture();
+        let bs = b * s;
+        let mut rng = Rng::new(7);
+        let x = rand_vec(&mut rng, bs * d);
+        let ct = rand_vec(&mut rng, bs * d);
+        let loss = |vals: &[Vec<f32>], x: &[f32]| -> f32 {
+            let p = Params::from_named(&names, vals);
+            let attn = Attention::new(&p, "attn", d, nh, b, s).unwrap();
+            let y = attn.forward(x, bs, &mut Workspace::inference()).unwrap();
+            y.iter().zip(&ct).map(|(a, c)| a * c).sum()
+        };
+        let p = Params::from_named(&names, &vals);
+        let attn = Attention::new(&p, "attn", d, nh, b, s).unwrap();
+        let mut ws = Workspace::training_with_threads(2);
+        let y = attn.forward(&x, bs, &mut ws).unwrap();
+        // recording and non-recording forwards agree exactly
+        let y2 = attn.forward(&x, bs, &mut Workspace::inference()).unwrap();
+        assert_eq!(y, y2, "recording forward changed values");
+        let mut grads = GradStore::new();
+        let dx = attn.backward(&ct, bs, &mut ws, &mut grads).unwrap();
+        assert_eq!(ws.depth(), 0);
+        let h = 1e-2f32;
+        let check = |an: f32, fd: f32, what: &str| {
+            assert!(
+                (an - fd).abs() < 3e-2 * (1.0 + fd.abs()),
+                "{what}: analytic {an} vs fd {fd}"
+            );
+        };
+        for (pi, name) in names.iter().enumerate() {
+            let g = grads.get(name).unwrap_or_else(|| panic!("no grad {name}"));
+            let n = vals[pi].len();
+            for idx in [0usize, n / 2, n - 1] {
+                let mut vp = vals.clone();
+                vp[pi][idx] += h;
+                let mut vm = vals.clone();
+                vm[pi][idx] -= h;
+                let fd = (loss(&vp, &x) - loss(&vm, &x)) / (2.0 * h);
+                check(g[idx], fd, &format!("{name}[{idx}]"));
+            }
+        }
+        for idx in [0usize, bs * d / 2, bs * d - 1] {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let fd = (loss(&vals, &xp) - loss(&vals, &xm)) / (2.0 * h);
+            check(dx[idx], fd, &format!("dx[{idx}]"));
+        }
+    }
+
+    /// Attention forward + backward are bitwise identical across
+    /// thread counts (PR 2's determinism contract, extended to the new
+    /// backward).
+    #[test]
+    fn attention_thread_count_bitwise_deterministic() {
+        let (names, vals, b, s, nh, d) = attn_fixture();
+        let bs = b * s;
+        let mut rng = Rng::new(9);
+        let x = rand_vec(&mut rng, bs * d);
+        let dy = rand_vec(&mut rng, bs * d);
+        let run = |threads: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let p = Params::from_named(&names, &vals);
+            let attn = Attention::new(&p, "attn", d, nh, b, s).unwrap();
+            let mut ws = Workspace::training_with_threads(threads);
+            let y = attn.forward(&x, bs, &mut ws).unwrap();
+            let mut grads = GradStore::new();
+            let dx = attn.backward(&dy, bs, &mut ws, &mut grads).unwrap();
+            let gq = grads.get("attn.wq").unwrap().to_vec();
+            (y, dx, gq)
+        };
+        let (y1, dx1, g1) = run(1);
+        for threads in [2, 3, 8] {
+            let (yn, dxn, gn) = run(threads);
+            assert_eq!(y1, yn, "fwd threads={threads} changed bits");
+            assert_eq!(dx1, dxn, "dx threads={threads} changed bits");
+            assert_eq!(g1, gn, "dwq threads={threads} changed bits");
+        }
+    }
+
+    /// The tape is tagged LIFO: popping out of order or past the end
+    /// fails with an actionable message instead of silently reading
+    /// the wrong frame.
+    #[test]
+    fn workspace_tape_misuse_fails_loudly() {
+        let mut ws = Workspace::training_with_threads(1);
+        ws.push("layer_norm", vec![vec![1.0]]);
+        let err = format!("{:#}", ws.pop("attention").unwrap_err());
+        assert!(err.contains("layer_norm") && err.contains("attention"), "{err}");
+        // the mismatched pop consumed the frame; the tape is now empty
+        let err = format!("{:#}", ws.pop("layer_norm").unwrap_err());
+        assert!(err.contains("empty"), "{err}");
+        // a non-recording workspace never records
+        let mut ws = Workspace::inference();
+        ws.push("linear", vec![vec![1.0]]);
+        assert_eq!(ws.depth(), 0);
+    }
+
+    #[test]
+    fn grad_store_accumulates_and_orders() {
+        let mut g = GradStore::new();
+        g.add("a", vec![1.0, 2.0]).unwrap();
+        g.add("a", vec![0.5, -1.0]).unwrap();
+        g.add("b", vec![3.0]).unwrap();
+        assert_eq!(g.get("a").unwrap(), &[1.5, 1.0]);
+        assert_eq!(g.len(), 2);
+        // |(1.5, 1, 3)| = sqrt(1.5^2 + 1 + 9)
+        let want = (1.5f64 * 1.5 + 1.0 + 9.0).sqrt() as f32;
+        assert!((g.global_norm() - want).abs() < 1e-6);
+        g.scale(2.0);
+        assert_eq!(g.get("b").unwrap(), &[6.0]);
+        // length mismatch fails
+        let err = format!("{:#}", g.add("a", vec![1.0]).unwrap_err());
+        assert!(err.contains('a'), "{err}");
+        // ordering by name list; missing names are an error
+        let names: Vec<String> = vec!["b".into(), "a".into()];
+        let ordered = g.into_named_order(&names).unwrap();
+        assert_eq!(ordered[0], vec![6.0]);
+        let mut g = GradStore::new();
+        g.add("a", vec![1.0]).unwrap();
+        let err = format!(
+            "{:#}",
+            g.into_named_order(&["missing".to_string()]).unwrap_err()
+        );
+        assert!(err.contains("missing"), "{err}");
+    }
+
+    /// Embedding forward/backward: scatter-add matches a dense
+    /// finite-difference through sum(x * ct).
+    #[test]
+    fn embedding_backward_gradcheck() {
+        let (vocab, seq, d, b, s) = (7usize, 5usize, 4usize, 2usize, 3usize);
+        let mut rng = Rng::new(3);
+        let names: Vec<String> = vec!["tok_emb".into(), "pos_emb".into()];
+        let vals = vec![rand_vec(&mut rng, vocab * d), rand_vec(&mut rng, seq * d)];
+        let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(vocab) as i32).collect();
+        let ct = rand_vec(&mut rng, b * s * d);
+        let loss = |vals: &[Vec<f32>]| -> f32 {
+            let p = Params::from_named(&names, vals);
+            let e = Embedding::new(&p, vocab, seq, d).unwrap();
+            let x = e.forward(&tokens, b, s).unwrap();
+            x.iter().zip(&ct).map(|(a, c)| a * c).sum()
+        };
+        let p = Params::from_named(&names, &vals);
+        let e = Embedding::new(&p, vocab, seq, d).unwrap();
+        let mut grads = GradStore::new();
+        e.backward(&ct, &tokens, s, &mut grads).unwrap();
+        let h = 1e-2f32;
+        for (pi, name) in names.iter().enumerate() {
+            let g = grads.get(name).unwrap();
+            let n = vals[pi].len();
+            for idx in [0usize, n / 2, n - 1] {
+                let mut vp = vals.clone();
+                vp[pi][idx] += h;
+                let mut vm = vals.clone();
+                vm[pi][idx] -= h;
+                let fd = (loss(&vp) - loss(&vm)) / (2.0 * h);
+                assert!(
+                    (g[idx] - fd).abs() < 1e-2 * (1.0 + fd.abs()),
+                    "{name}[{idx}]: {} vs fd {fd}",
+                    g[idx]
+                );
+            }
+        }
+        // out-of-vocab tokens fail actionably
+        let p = Params::from_named(&names, &vals);
+        let e = Embedding::new(&p, vocab, seq, d).unwrap();
+        let bad = vec![vocab as i32; b * s];
+        assert!(e.forward(&bad, b, s).is_err());
+    }
+
+    /// TiedLmHead backward: both the hidden gradient and the embedding
+    /// contribution match finite differences.
+    #[test]
+    fn tied_head_backward_gradcheck() {
+        let (vocab, d, rows) = (6usize, 5usize, 3usize);
+        let mut rng = Rng::new(21);
+        let names: Vec<String> = vec!["tok_emb".into()];
+        let vals = vec![rand_vec(&mut rng, vocab * d)];
+        let hiddens = rand_vec(&mut rng, rows * d);
+        let ct = rand_vec(&mut rng, rows * vocab);
+        let loss = |vals: &[Vec<f32>], hx: &[f32]| -> f32 {
+            let p = Params::from_named(&names, vals);
+            let head = TiedLmHead::new(&p, vocab, d).unwrap();
+            let y = head.forward(hx, rows, &mut Workspace::inference()).unwrap();
+            y.iter().zip(&ct).map(|(a, c)| a * c).sum()
+        };
+        let p = Params::from_named(&names, &vals);
+        let head = TiedLmHead::new(&p, vocab, d).unwrap();
+        let mut ws = Workspace::training_with_threads(1);
+        let _ = head.forward(&hiddens, rows, &mut ws).unwrap();
+        let mut grads = GradStore::new();
+        let dh = head.backward(&ct, rows, &mut ws, &mut grads).unwrap();
+        let h = 1e-2f32;
+        let g = grads.get("tok_emb").unwrap();
+        for idx in [0usize, vocab * d - 1] {
+            let mut vp = vals.clone();
+            vp[0][idx] += h;
+            let mut vm = vals.clone();
+            vm[0][idx] -= h;
+            let fd = (loss(&vp, &hiddens) - loss(&vm, &hiddens)) / (2.0 * h);
+            assert!((g[idx] - fd).abs() < 1e-2 * (1.0 + fd.abs()));
+        }
+        for idx in [0usize, rows * d - 1] {
+            let mut hp = hiddens.clone();
+            hp[idx] += h;
+            let mut hm = hiddens.clone();
+            hm[idx] -= h;
+            let fd = (loss(&vals, &hp) - loss(&vals, &hm)) / (2.0 * h);
+            assert!((dh[idx] - fd).abs() < 1e-2 * (1.0 + fd.abs()));
+        }
+    }
+}

@@ -17,8 +17,8 @@
 use anyhow::{bail, Result};
 
 use crate::dyad::kernel::{
-    dense_linear, dyad_backward_dw, dyad_linear, dyad_linear_backward_dx, matmul_fast,
-    transpose,
+    dense_linear_with_threads, dyad_backward_dw_with_threads, dyad_linear_backward_dx_with_threads,
+    dyad_linear_with_threads, matmul_fast_with_threads, num_threads, transpose,
 };
 use crate::dyad::layout::dyad_full;
 use crate::dyad::{DyadDims, Variant};
@@ -58,12 +58,19 @@ impl LinearView<'_> {
 
     /// `x (t, f_in)` -> `(t, f_out)`, bias applied.
     pub fn forward(&self, x: &[f32], t: usize) -> Vec<f32> {
+        self.forward_with_threads(x, t, num_threads())
+    }
+
+    /// [`LinearView::forward`] on an explicit worker count (the layer
+    /// modules thread the pool size resolved once per step through
+    /// their [`super::layers::Workspace`]).
+    pub fn forward_with_threads(&self, x: &[f32], t: usize, threads: usize) -> Vec<f32> {
         match self {
             LinearView::Dense { w, b, f_in, f_out } => {
-                dense_linear(x, w, Some(b), t, *f_in, *f_out)
+                dense_linear_with_threads(x, w, Some(b), t, *f_in, *f_out, threads)
             }
             LinearView::Dyad { wl, wu, b, dims, variant } => {
-                dyad_linear(wl, wu, x, *dims, *variant, t, Some(b))
+                dyad_linear_with_threads(wl, wu, x, *dims, *variant, t, Some(b), threads)
             }
         }
     }
@@ -90,6 +97,18 @@ impl LinearView<'_> {
         t: usize,
         need_dx: bool,
     ) -> Result<(Vec<Vec<f32>>, Option<Vec<f32>>)> {
+        self.backward_with_threads(x, dy, t, need_dx, num_threads())
+    }
+
+    /// [`LinearView::backward`] on an explicit worker count.
+    pub fn backward_with_threads(
+        &self,
+        x: &[f32],
+        dy: &[f32],
+        t: usize,
+        need_dx: bool,
+        threads: usize,
+    ) -> Result<(Vec<Vec<f32>>, Option<Vec<f32>>)> {
         let (f_in, f_out) = (self.f_in(), self.f_out());
         if x.len() != t * f_in || dy.len() != t * f_out {
             bail!(
@@ -103,18 +122,37 @@ impl LinearView<'_> {
             LinearView::Dense { w, .. } => {
                 // dW = dy^T @ x  (f_out, f_in)
                 let dyt = transpose(dy, t, f_out);
-                let dw = matmul_fast(&dyt, x, f_out, t, f_in);
+                let dw = matmul_fast_with_threads(&dyt, x, f_out, t, f_in, threads);
                 // dx = dy @ W  (t, f_in) — straight off the stored weights
-                let dx = need_dx.then(|| matmul_fast(dy, w, t, f_out, f_in));
+                let dx =
+                    need_dx.then(|| matmul_fast_with_threads(dy, w, t, f_out, f_in, threads));
                 (vec![dw, db], dx)
             }
             LinearView::Dyad { wl, wu, dims, variant, .. } => {
-                let (dwl, dwu) = dyad_backward_dw(x, dy, *dims, *variant, t);
-                let dx = need_dx
-                    .then(|| dyad_linear_backward_dx(wl, wu, dy, *dims, *variant, t));
+                let (dwl, dwu) = dyad_backward_dw_with_threads(x, dy, *dims, *variant, t, threads);
+                let dx = need_dx.then(|| {
+                    dyad_linear_backward_dx_with_threads(wl, wu, dy, *dims, *variant, t, threads)
+                });
                 (vec![dwl, dwu, db], dx)
             }
         })
+    }
+
+    /// Parameter-gradient names for this view under `prefix`, in the
+    /// same order [`LinearView::backward`] returns the gradients
+    /// (`[w, b]` dense, `[wl, wu, b]` DYAD) — the catalog's
+    /// `ff_linear_specs` order.
+    pub fn grad_names(&self, prefix: &str) -> Vec<String> {
+        match self {
+            LinearView::Dense { .. } => {
+                vec![format!("{prefix}.w"), format!("{prefix}.b")]
+            }
+            LinearView::Dyad { .. } => vec![
+                format!("{prefix}.wl"),
+                format!("{prefix}.wu"),
+                format!("{prefix}.b"),
+            ],
+        }
     }
 }
 

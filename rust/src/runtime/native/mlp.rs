@@ -1,18 +1,20 @@
 //! Native MNIST-probe MLP (paper §3.4.5): 784 -> 256 -> 256 -> 10 with
 //! ReLU, the two hidden linears being the DENSE/DYAD swap site.
 //! Mirrors `python/compile/mnist.py`, including the Adam-in-graph
-//! train step (K microbatches per call, no grad clip) — so the native
-//! backend trains the probe end to end. The swap-site backward runs
-//! the structured per-block DYAD kernels through
-//! [`LinearView::backward`]: no weight materialisation per microbatch.
+//! train step (K microbatches per call, no grad clip) — wired as a
+//! [`Sequential`] of layer modules, so forward caching and backward
+//! ride the same tape machinery as the transformer. The swap-site
+//! backward runs the structured per-block DYAD kernels through
+//! [`super::linear::LinearView`]: no weight materialisation per
+//! microbatch.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::dyad::DyadDims;
 use crate::runtime::catalog::{MNIST_CLASSES, MNIST_HIDDEN, MNIST_IN};
 
+use super::layers::{Activation, GradStore, Layer, LinearLayer, Sequential, Workspace};
 use super::linear::LinearView;
-use super::ops::{log_softmax_row, relu_inplace, softmax_row};
+use super::ops::softmax_xent_row;
 use super::params::Params;
 use super::VariantSpec;
 
@@ -21,12 +23,8 @@ pub struct Mlp<'a> {
     pub p: Params<'a>,
 }
 
-impl Mlp<'_> {
-    fn fc(&self, prefix: &str, f_in: usize, f_out: usize) -> Result<LinearView<'_>> {
-        self.var.linear_view(&self.p, prefix, f_in, f_out, 0)
-    }
-
-    fn head(&self) -> Result<LinearView<'_>> {
+impl<'a> Mlp<'a> {
+    fn head(&self) -> Result<LinearView<'a>> {
         Ok(LinearView::Dense {
             w: self.p.f32("head.w")?,
             b: self.p.f32("head.b")?,
@@ -36,19 +34,35 @@ impl Mlp<'_> {
     }
 
     /// The two swap-site linears + ReLUs (the timed "ff-only" path).
+    fn trunk(&self) -> Result<Sequential<'a>> {
+        Ok(Sequential::new(vec![
+            Box::new(LinearLayer::new_input(
+                self.var.linear_view(&self.p, "fc1", MNIST_IN, MNIST_HIDDEN, 0)?,
+                "fc1",
+            )),
+            Box::new(Activation::Relu),
+            Box::new(LinearLayer::new(
+                self.var.linear_view(&self.p, "fc2", MNIST_HIDDEN, MNIST_HIDDEN, 0)?,
+                "fc2",
+            )),
+            Box::new(Activation::Relu),
+        ]))
+    }
+
+    /// The full classifier: trunk + dense head.
+    fn net(&self) -> Result<Sequential<'a>> {
+        Ok(Sequential::new(vec![
+            Box::new(self.trunk()?),
+            Box::new(LinearLayer::new(self.head()?, "head")),
+        ]))
+    }
+
     pub fn hidden(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
-        let fc1 = self.fc("fc1", MNIST_IN, MNIST_HIDDEN)?;
-        let fc2 = self.fc("fc2", MNIST_HIDDEN, MNIST_HIDDEN)?;
-        let mut h = fc1.forward(x, b);
-        relu_inplace(&mut h);
-        let mut h = fc2.forward(&h, b);
-        relu_inplace(&mut h);
-        Ok(h)
+        self.trunk()?.forward(x, b, &mut Workspace::inference())
     }
 
     pub fn logits(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
-        let h = self.hidden(x, b)?;
-        Ok(self.head()?.forward(&h, b))
+        self.net()?.forward(x, b, &mut Workspace::inference())
     }
 
     /// How many of `labels` the MLP classifies correctly.
@@ -71,42 +85,6 @@ impl Mlp<'_> {
     }
 }
 
-/// Find one named parameter in the flat (name, values) training state.
-fn pslice<'a>(names: &[String], params: &'a [Vec<f32>], n: &str) -> Result<&'a [f32]> {
-    names
-        .iter()
-        .position(|x| x == n)
-        .map(|i| params[i].as_slice())
-        .with_context(|| format!("mnist param {n:?} missing"))
-}
-
-/// Build a linear view over the flat training-state vectors.
-fn view_from<'a>(
-    var: &VariantSpec,
-    names: &[String],
-    params: &'a [Vec<f32>],
-    prefix: &str,
-    f_in: usize,
-    f_out: usize,
-) -> Result<LinearView<'a>> {
-    if var.dense {
-        Ok(LinearView::Dense {
-            w: pslice(names, params, &format!("{prefix}.w"))?,
-            b: pslice(names, params, &format!("{prefix}.b"))?,
-            f_in,
-            f_out,
-        })
-    } else {
-        Ok(LinearView::Dyad {
-            wl: pslice(names, params, &format!("{prefix}.wl"))?,
-            wu: pslice(names, params, &format!("{prefix}.wu"))?,
-            b: pslice(names, params, &format!("{prefix}.b"))?,
-            dims: DyadDims::new(var.n_dyad, f_in, f_out)?,
-            variant: var.for_layer(0),
-        })
-    }
-}
-
 /// One microbatch: mean softmax cross-entropy loss + parameter
 /// gradients in spec order (fc1.., fc2.., head.w, head.b).
 pub fn mnist_loss_and_grads(
@@ -117,66 +95,34 @@ pub fn mnist_loss_and_grads(
     labels: &[i32],
     b: usize,
 ) -> Result<(f32, Vec<Vec<f32>>)> {
-    let fc1 = view_from(var, names, params, "fc1", MNIST_IN, MNIST_HIDDEN)?;
-    let fc2 = view_from(var, names, params, "fc2", MNIST_HIDDEN, MNIST_HIDDEN)?;
-    let head = LinearView::Dense {
-        w: pslice(names, params, "head.w")?,
-        b: pslice(names, params, "head.b")?,
-        f_in: MNIST_HIDDEN,
-        f_out: MNIST_CLASSES,
-    };
+    let p = Params::from_named(names, params);
+    let mlp = Mlp { var, p };
+    let net = mlp.net()?;
+    let mut ws = Workspace::training();
+    let logits = net.forward(x, b, &mut ws)?;
 
-    // forward with caches; ReLU masks read the post-activation values
-    // (h > 0 iff a > 0), so the pre-activations need not be kept
-    let mut h1 = fc1.forward(x, b);
-    relu_inplace(&mut h1);
-    let mut h2 = fc2.forward(&h1, b);
-    relu_inplace(&mut h2);
-    let logits = head.forward(&h2, b);
-
-    // loss + dlogits = (softmax - onehot) / b
+    // loss + dlogits = (softmax - onehot) / b, one row per sample
     let mut loss = 0.0f64;
     let mut dlogits = vec![0.0f32; b * MNIST_CLASSES];
     let mut logp = vec![0.0f32; MNIST_CLASSES];
-    for bi in 0..b {
-        let row = &logits[bi * MNIST_CLASSES..(bi + 1) * MNIST_CLASSES];
-        let label = labels[bi] as usize;
+    for (bi, &label) in labels.iter().enumerate().take(b) {
+        let label = label as usize;
         if label >= MNIST_CLASSES {
             bail!("label {label} out of range");
         }
-        log_softmax_row(row, &mut logp);
-        loss -= logp[label] as f64;
-        let drow = &mut dlogits[bi * MNIST_CLASSES..(bi + 1) * MNIST_CLASSES];
-        drow.copy_from_slice(row);
-        softmax_row(drow);
-        drow[label] -= 1.0;
-        for v in drow.iter_mut() {
-            *v /= b as f32;
-        }
+        loss += softmax_xent_row(
+            &logits[bi * MNIST_CLASSES..(bi + 1) * MNIST_CLASSES],
+            label,
+            1.0 / b as f32,
+            &mut dlogits[bi * MNIST_CLASSES..(bi + 1) * MNIST_CLASSES],
+            &mut logp,
+        ) as f64;
     }
     loss /= b as f64;
 
-    // backward through head -> relu -> fc2 -> relu -> fc1
-    let (g_head, dh2) = head.backward(&h2, &dlogits, b, true)?;
-    let mut da2 = dh2.unwrap();
-    for (g, &h) in da2.iter_mut().zip(&h2) {
-        if h <= 0.0 {
-            *g = 0.0;
-        }
-    }
-    let (g_fc2, dh1) = fc2.backward(&h1, &da2, b, true)?;
-    let mut da1 = dh1.unwrap();
-    for (g, &h) in da1.iter_mut().zip(&h1) {
-        if h <= 0.0 {
-            *g = 0.0;
-        }
-    }
-    let (g_fc1, _) = fc1.backward(x, &da1, b, false)?;
-
-    let mut grads = g_fc1;
-    grads.extend(g_fc2);
-    grads.extend(g_head);
-    Ok((loss as f32, grads))
+    let mut grads = GradStore::new();
+    net.backward(&dlogits, b, &mut ws, &mut grads)?;
+    Ok((loss as f32, grads.into_named_order(names)?))
 }
 
 #[cfg(test)]

@@ -7,19 +7,23 @@
 //! tensors via `dyad::kernel`'s parallel blocked matmuls and the fused
 //! DYAD forward.
 //!
-//! Supported natively: `score`, `features`, `next_logits`, `eval_loss`
-//! (transformer inference), the full MNIST probe (`mnist_train` with
-//! in-loop Adam, `mnist_accuracy`, `mnist_hidden_fwd`) and the
-//! ff-micro timing programs (`ff_fwd`, `ff_fwdbwd`). Transformer
-//! `train_step` requires the XLA backend — native transformer backprop
-//! is a ROADMAP item and `load` fails actionably until then.
+//! The native backend executes the **full** inventory: transformer
+//! inference (`score`, `features`, `next_logits`, `eval_loss`),
+//! transformer **training** (`train_step` — layer-module autodiff with
+//! in-loop grad-clipped Adam, see [`layers`] and
+//! [`transformer::train_microbatch`]), the complete MNIST probe
+//! (`mnist_train`, `mnist_accuracy`, `mnist_hidden_fwd`) and the
+//! ff-micro timing programs (`ff_fwd`, `ff_fwdbwd`). `repro train` /
+//! `quality` run end to end on `--backend native` with no XLA
+//! artifacts.
 
 mod ff;
+pub mod layers;
 mod linear;
 mod mlp;
-mod ops;
+pub mod ops;
 mod params;
-mod transformer;
+pub mod transformer;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -110,6 +114,7 @@ enum Prog {
     Features { arch: ArchCfg, var: VariantSpec },
     NextLogits { arch: ArchCfg, var: VariantSpec },
     EvalLoss { arch: ArchCfg, var: VariantSpec },
+    TrainStep { arch: ArchCfg, var: VariantSpec },
     MnistTrain { var: VariantSpec },
     MnistAccuracy { var: VariantSpec },
     MnistHiddenFwd { var: VariantSpec },
@@ -222,11 +227,7 @@ fn resolve(spec: &ArtifactSpec, manifest: &Manifest) -> Result<Prog> {
             ff: spec.meta_usize("d_ff")?,
             var: var_of("variant")?,
         },
-        "train_step" => bail!(
-            "transformer train_step is not implemented on the native \
-             backend yet; use the xla backend (`--backend xla`, built \
-             with `--features xla`) for LM pretraining"
-        ),
+        "train_step" => Prog::TrainStep { arch: arch_of()?, var: var_of("variant")? },
         k => bail!("native backend cannot execute artifact kind {k:?}"),
     })
 }
@@ -322,6 +323,7 @@ impl NativeExe {
                 let loss = lm.eval_loss(data[0].as_i32()?, b, s)?;
                 Ok(vec![Tensor::scalar_f32(loss)])
             }
+            Prog::TrainStep { arch, var } => self.run_lm_train(arch, var, inputs, &data),
             Prog::MnistTrain { var } => self.run_mnist_train(var, inputs, &data),
             Prog::MnistAccuracy { var } => {
                 let b = data[0].shape[0];
@@ -355,24 +357,17 @@ impl NativeExe {
     }
 }
 
+/// The flat `(names, params, m, v)` optimizer state of a train-step
+/// artifact, split out of the positional input set by role.
+type TrainStateVecs = (Vec<String>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>);
+
 impl NativeExe {
-    /// The MNIST train-step state machine: K microbatches of
-    /// loss/grads + Adam, mirroring `mnist.py::make_mnist_train_step`
-    /// (bias-corrected Adam, no grad clip, uniform lr across the K
-    /// inner steps).
-    fn run_mnist_train(
-        &self,
-        var: &VariantSpec,
-        inputs: &[&Tensor],
-        data: &[&Tensor],
-    ) -> Result<Vec<Tensor>> {
-        let spec = &self.spec;
-        // split positional inputs into state / scalars / data by role
+    fn split_train_state(&self, inputs: &[&Tensor]) -> Result<TrainStateVecs> {
         let mut names: Vec<String> = Vec::new();
         let mut params: Vec<Vec<f32>> = Vec::new();
         let mut m: Vec<Vec<f32>> = Vec::new();
         let mut v: Vec<Vec<f32>> = Vec::new();
-        for (io, t) in spec.inputs.iter().zip(inputs) {
+        for (io, t) in self.spec.inputs.iter().zip(inputs) {
             match io.role {
                 Role::Param => {
                     names.push(io.name.clone());
@@ -383,6 +378,71 @@ impl NativeExe {
                 _ => {}
             }
         }
+        Ok((names, params, m, v))
+    }
+
+    /// Pack the train-step state machine's outputs:
+    /// `params ++ m ++ v ++ step ++ losses`, at spec shapes.
+    fn pack_train_outputs(
+        &self,
+        params: Vec<Vec<f32>>,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+        step: f32,
+        losses: Vec<f32>,
+    ) -> Result<Vec<Tensor>> {
+        let spec = &self.spec;
+        let k = losses.len();
+        let mut out = Vec::with_capacity(spec.outputs.len());
+        for (i, vals) in params.into_iter().chain(m).chain(v).enumerate() {
+            out.push(Tensor::from_f32(&spec.outputs[i].shape, vals)?);
+        }
+        out.push(Tensor::scalar_f32(step));
+        out.push(Tensor::from_f32(&[k], losses)?);
+        Ok(out)
+    }
+
+    /// The transformer train-step state machine: K microbatches of
+    /// full-decoder loss/grads (layer-module autodiff) + global-norm
+    /// grad clip + Adam, mirroring `model.py::make_train_step` —
+    /// uniform lr across the K inner steps, schedule recomputed by the
+    /// coordinator between calls.
+    fn run_lm_train(
+        &self,
+        arch: &ArchCfg,
+        var: &VariantSpec,
+        inputs: &[&Tensor],
+        data: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let (names, mut params, mut m, mut v) = self.split_train_state(inputs)?;
+        let mut step = self.scalar(inputs, "step")?;
+        let lr = self.scalar(inputs, "lr")?;
+        let tokens = data[0];
+        let (k, b, s) = (tokens.shape[0], tokens.shape[1], tokens.shape[2]);
+        let tok = tokens.as_i32()?;
+        let threads = crate::dyad::kernel::num_threads();
+        let mut losses = Vec::with_capacity(k);
+        for ki in 0..k {
+            let batch = &tok[ki * b * s..(ki + 1) * b * s];
+            losses.push(transformer::train_microbatch(
+                arch, var, &names, &mut params, &mut m, &mut v, batch, b, s, &mut step, lr,
+                threads,
+            )?);
+        }
+        self.pack_train_outputs(params, m, v, step, losses)
+    }
+
+    /// The MNIST train-step state machine: K microbatches of
+    /// loss/grads + Adam, mirroring `mnist.py::make_mnist_train_step`
+    /// (bias-corrected Adam, no grad clip, uniform lr across the K
+    /// inner steps).
+    fn run_mnist_train(
+        &self,
+        var: &VariantSpec,
+        inputs: &[&Tensor],
+        data: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let (names, mut params, mut m, mut v) = self.split_train_state(inputs)?;
         let mut step = self.scalar(inputs, "step")?;
         let lr = self.scalar(inputs, "lr")?;
         let images = data[0];
@@ -399,14 +459,7 @@ impl NativeExe {
             step += 1.0;
             adam_update(&mut params, &mut m, &mut v, &grads, step, lr);
         }
-        // outputs: params ++ m ++ v ++ step ++ losses, at spec shapes
-        let mut out = Vec::with_capacity(spec.outputs.len());
-        for (i, vals) in params.into_iter().chain(m).chain(v).enumerate() {
-            out.push(Tensor::from_f32(&spec.outputs[i].shape, vals)?);
-        }
-        out.push(Tensor::scalar_f32(step));
-        out.push(Tensor::from_f32(&[k], losses)?);
-        Ok(out)
+        self.pack_train_outputs(params, m, v, step, losses)
     }
 }
 
@@ -482,8 +535,9 @@ mod tests {
     }
 }
 
-/// One bias-corrected Adam step over every parameter tensor.
-fn adam_update(
+/// One bias-corrected Adam step over every parameter tensor (shared
+/// by the MNIST and transformer train-step state machines).
+pub(crate) fn adam_update(
     params: &mut [Vec<f32>],
     m: &mut [Vec<f32>],
     v: &mut [Vec<f32>],

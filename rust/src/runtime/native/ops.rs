@@ -33,20 +33,126 @@ pub fn relu_inplace(xs: &mut [f32]) {
     }
 }
 
+const LN_EPS: f32 = 1e-5;
+
 /// LayerNorm over the last axis of row-major `(rows, d)`:
 /// `(x - mean) / sqrt(var + eps) * scale + bias`, population variance.
 pub fn layer_norm(x: &mut [f32], d: usize, scale: &[f32], bias: &[f32]) {
-    const EPS: f32 = 1e-5;
     assert_eq!(scale.len(), d);
     assert_eq!(bias.len(), d);
     for row in x.chunks_mut(d) {
         let mean = row.iter().sum::<f32>() / d as f32;
         let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
-        let inv = 1.0 / (var + EPS).sqrt();
+        let inv = 1.0 / (var + LN_EPS).sqrt();
         for (v, (&sc, &b)) in row.iter_mut().zip(scale.iter().zip(bias)) {
             *v = (*v - mean) * inv * sc + b;
         }
     }
+}
+
+/// LayerNorm forward that also returns what the backward needs:
+/// `y = xhat * scale + bias`, plus the normalised activations `xhat`
+/// (rows, d) and the per-row inverse std `inv` (rows).
+pub fn layer_norm_forward(
+    x: &[f32],
+    d: usize,
+    scale: &[f32],
+    bias: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(scale.len(), d);
+    assert_eq!(bias.len(), d);
+    let rows = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    let mut xhat = vec![0.0f32; x.len()];
+    let mut inv = vec![0.0f32; rows];
+    for (r, row) in x.chunks(d).enumerate() {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        inv[r] = iv;
+        let xh = &mut xhat[r * d..(r + 1) * d];
+        let yr = &mut y[r * d..(r + 1) * d];
+        for (j, &v) in row.iter().enumerate() {
+            xh[j] = (v - mean) * iv;
+            yr[j] = xh[j] * scale[j] + bias[j];
+        }
+    }
+    (y, xhat, inv)
+}
+
+/// LayerNorm backward from the cached `xhat`/`inv` of
+/// [`layer_norm_forward`]:
+///
+/// `dxhat = dy * scale`;
+/// `dx = inv * (dxhat - mean(dxhat) - xhat * mean(dxhat * xhat))`;
+/// `dscale = Σ_rows dy * xhat`; `dbias = Σ_rows dy`.
+///
+/// Accumulation runs in fixed row order (deterministic).
+pub fn layer_norm_backward(
+    dy: &[f32],
+    xhat: &[f32],
+    inv: &[f32],
+    d: usize,
+    scale: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(dy.len(), xhat.len());
+    assert_eq!(dy.len(), inv.len() * d);
+    let mut dx = vec![0.0f32; dy.len()];
+    let mut dscale = vec![0.0f32; d];
+    let mut dbias = vec![0.0f32; d];
+    let mut dxhat = vec![0.0f32; d];
+    for (r, (dyr, xh)) in dy.chunks(d).zip(xhat.chunks(d)).enumerate() {
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for j in 0..d {
+            dscale[j] += dyr[j] * xh[j];
+            dbias[j] += dyr[j];
+            let dh = dyr[j] * scale[j];
+            dxhat[j] = dh;
+            m1 += dh;
+            m2 += dh * xh[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            dxr[j] = inv[r] * (dxhat[j] - m1 - xh[j] * m2);
+        }
+    }
+    (dx, dscale, dbias)
+}
+
+/// Softmax-jacobian backward for one row:
+/// `dscore_j = p_j * (dp_j - Σ_k p_k * dp_k)` where `p` is the
+/// softmax output and `dp` the upstream gradient.
+pub fn softmax_backward_row(p: &[f32], dp: &[f32], dscore: &mut [f32]) {
+    debug_assert_eq!(p.len(), dp.len());
+    debug_assert_eq!(p.len(), dscore.len());
+    let dot: f32 = p.iter().zip(dp).map(|(a, b)| a * b).sum();
+    for ((o, &pv), &dv) in dscore.iter_mut().zip(p).zip(dp) {
+        *o = pv * (dv - dot);
+    }
+}
+
+/// One row of softmax cross-entropy with its gradient: returns
+/// `-log softmax(row)[target]` and writes
+/// `(softmax(row) - onehot(target)) * scale` into `drow`. `logp` is
+/// caller-owned scratch (len = row len). Shared by the MNIST and LM
+/// losses so the softmax/log-softmax math lives in one place.
+pub fn softmax_xent_row(
+    row: &[f32],
+    target: usize,
+    scale: f32,
+    drow: &mut [f32],
+    logp: &mut [f32],
+) -> f32 {
+    log_softmax_row(row, logp);
+    let loss = -logp[target];
+    for (o, &lp) in drow.iter_mut().zip(logp.iter()) {
+        *o = lp.exp() * scale;
+    }
+    drow[target] -= scale;
+    loss
 }
 
 /// In-place softmax over one row.
@@ -123,6 +229,129 @@ mod tests {
         let var: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
         assert!(mean.abs() < 1e-5);
         assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    /// layer_norm_forward must agree with the in-place layer_norm and
+    /// its backward with central finite differences of a sum(y * ct)
+    /// loss (per element: dx, dscale, dbias).
+    #[test]
+    fn layer_norm_backward_matches_finite_difference() {
+        let d = 6;
+        let rows = 3;
+        let mut rng = crate::util::rng::Rng::new(12);
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let scale: Vec<f32> = (0..d).map(|_| rng.uniform(0.5, 1.5)).collect();
+        let bias: Vec<f32> = (0..d).map(|_| rng.uniform(-0.2, 0.2)).collect();
+        let ct: Vec<f32> = (0..rows * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let loss = |x: &[f32], scale: &[f32], bias: &[f32]| -> f32 {
+            let mut y = x.to_vec();
+            layer_norm(&mut y, d, scale, bias);
+            y.iter().zip(&ct).map(|(a, c)| a * c).sum()
+        };
+        let (y, xhat, inv) = layer_norm_forward(&x, d, &scale, &bias);
+        let mut y2 = x.clone();
+        layer_norm(&mut y2, d, &scale, &bias);
+        assert_eq!(y, y2, "forward paths diverge");
+        let (dx, dscale, dbias) = layer_norm_backward(&ct, &xhat, &inv, d, &scale);
+        let h = 1e-3f32;
+        let check = |an: f32, fd: f32, what: &str| {
+            assert!(
+                (an - fd).abs() < 1e-2 * (1.0 + fd.abs()),
+                "{what}: analytic {an} vs fd {fd}"
+            );
+        };
+        for idx in [0usize, 7, rows * d - 1] {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let fd = (loss(&xp, &scale, &bias) - loss(&xm, &scale, &bias)) / (2.0 * h);
+            check(dx[idx], fd, "dx");
+        }
+        for idx in [0usize, d - 1] {
+            let mut sp = scale.clone();
+            sp[idx] += h;
+            let mut sm = scale.clone();
+            sm[idx] -= h;
+            let fd = (loss(&x, &sp, &bias) - loss(&x, &sm, &bias)) / (2.0 * h);
+            check(dscale[idx], fd, "dscale");
+            let mut bp = bias.clone();
+            bp[idx] += h;
+            let mut bm = bias.clone();
+            bm[idx] -= h;
+            let fd = (loss(&x, &scale, &bp) - loss(&x, &scale, &bm)) / (2.0 * h);
+            check(dbias[idx], fd, "dbias");
+        }
+    }
+
+    /// Softmax-jacobian backward vs finite differences of
+    /// sum(softmax(score) * ct).
+    #[test]
+    fn softmax_backward_matches_finite_difference() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let n = 5;
+        let score: Vec<f32> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let ct: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let loss = |sc: &[f32]| -> f32 {
+            let mut p = sc.to_vec();
+            softmax_row(&mut p);
+            p.iter().zip(&ct).map(|(a, c)| a * c).sum()
+        };
+        let mut p = score.clone();
+        softmax_row(&mut p);
+        let mut dscore = vec![0.0f32; n];
+        softmax_backward_row(&p, &ct, &mut dscore);
+        let h = 1e-3f32;
+        for idx in 0..n {
+            let mut sp = score.clone();
+            sp[idx] += h;
+            let mut sm = score.clone();
+            sm[idx] -= h;
+            let fd = (loss(&sp) - loss(&sm)) / (2.0 * h);
+            assert!(
+                (dscore[idx] - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                "dscore[{idx}]: {} vs fd {fd}",
+                dscore[idx]
+            );
+        }
+    }
+
+    /// softmax_xent_row: loss equals -log_softmax[target]; the gradient
+    /// equals (softmax - onehot) * scale and finite differences agree.
+    #[test]
+    fn softmax_xent_row_loss_and_grad() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let n = 7;
+        let target = 3usize;
+        let scale = 0.25f32;
+        let row: Vec<f32> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let mut drow = vec![0.0f32; n];
+        let mut logp = vec![0.0f32; n];
+        let loss = softmax_xent_row(&row, target, scale, &mut drow, &mut logp);
+        assert!((loss + logp[target]).abs() < 1e-6);
+        // gradient rows sum to zero (softmax sums to one, one-hot too)
+        let sum: f32 = drow.iter().sum();
+        assert!(sum.abs() < 1e-5, "grad sum {sum}");
+        let h = 1e-3f32;
+        for idx in [0usize, target, n - 1] {
+            let fd = {
+                let f = |r: &[f32]| -> f32 {
+                    let mut lp = vec![0.0; n];
+                    log_softmax_row(r, &mut lp);
+                    -lp[target] * scale
+                };
+                let mut rp = row.clone();
+                rp[idx] += h;
+                let mut rm = row.clone();
+                rm[idx] -= h;
+                (f(&rp) - f(&rm)) / (2.0 * h)
+            };
+            assert!(
+                (drow[idx] - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                "drow[{idx}]: {} vs fd {fd}",
+                drow[idx]
+            );
+        }
     }
 
     #[test]

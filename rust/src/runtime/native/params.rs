@@ -1,14 +1,28 @@
-//! Name-indexed view over an artifact's positional parameter inputs.
+//! Name-indexed view over model parameters.
+//!
+//! Two backings share one lookup surface, so every model module
+//! (transformer layers, ff, MNIST MLP) reads weights the same way:
+//!
+//! * [`Params::new`] — the artifact execution path: `Role::Param`
+//!   inputs picked out of a full positional input set;
+//! * [`Params::from_named`] — the training path: flat
+//!   `(names, Vec<f32>)` optimizer state, re-viewed between Adam
+//!   updates without copying.
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::runtime::artifact::{ArtifactSpec, Role};
 use crate::tensor::Tensor;
 
+enum Slot<'a> {
+    Spec(&'a Tensor),
+    Flat(&'a [f32]),
+}
+
 pub struct Params<'a> {
-    map: BTreeMap<&'a str, &'a Tensor>,
+    map: BTreeMap<&'a str, Slot<'a>>,
 }
 
 impl<'a> Params<'a> {
@@ -17,21 +31,41 @@ impl<'a> Params<'a> {
         let mut map = BTreeMap::new();
         for (io, t) in spec.inputs.iter().zip(inputs) {
             if io.role == Role::Param {
-                map.insert(io.name.as_str(), *t);
+                map.insert(io.name.as_str(), Slot::Spec(*t));
             }
         }
         Params { map }
     }
 
+    /// View flat named training state (`names[i]` owns `values[i]`);
+    /// extra `values` beyond `names` are ignored, so the caller can
+    /// pass a params-prefix of a longer state vector.
+    pub fn from_named(names: &'a [String], values: &'a [Vec<f32>]) -> Params<'a> {
+        let mut map = BTreeMap::new();
+        for (n, v) in names.iter().zip(values) {
+            map.insert(n.as_str(), Slot::Flat(v.as_slice()));
+        }
+        Params { map }
+    }
+
     pub fn get(&self, name: &str) -> Result<&'a Tensor> {
+        match *self.slot(name)? {
+            Slot::Spec(t) => Ok(t),
+            Slot::Flat(_) => bail!("parameter {name:?} is flat state, not a tensor"),
+        }
+    }
+
+    fn slot(&self, name: &str) -> Result<&Slot<'a>> {
         self.map
             .get(name)
-            .copied()
             .with_context(|| format!("no parameter named {name:?}"))
     }
 
     pub fn f32(&self, name: &str) -> Result<&'a [f32]> {
-        self.get(name)?.as_f32()
+        match *self.slot(name)? {
+            Slot::Spec(t) => t.as_f32(),
+            Slot::Flat(v) => Ok(v),
+        }
     }
 
     pub fn shape(&self, name: &str) -> Result<&'a [usize]> {

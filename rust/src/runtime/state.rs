@@ -5,7 +5,9 @@
 //! backend wraps them zero-copy, the XLA backend keeps them alive as
 //! literals, so a training loop stages the state **once** at init (or
 //! checkpoint restore) and every subsequent `train_call` uploads only
-//! the per-call batch and the two control scalars. One call advances K
+//! the per-call batch and the two control scalars. Both the
+//! transformer `train_step` (native layer-module autodiff or XLA) and
+//! the MNIST probe drive their loops through this type. One call advances K
 //! optimizer steps (the artifact's inner microbatch scan); the
 //! coordinator recomputes the LR schedule between calls. Host copies
 //! exist only at the edges: `to_tensors`/`params_to_tensors` download

@@ -260,6 +260,57 @@ fn run_bound_matches_legacy_run() {
     }
 }
 
+/// Native-vs-xla manifest parity for `train_step`: the in-process
+/// catalog serialized to the manifest.json wire format and re-parsed
+/// through `Manifest::parse` (exactly what the XLA engine loads from
+/// disk, stub or real) preserves the transformer train-step contract
+/// bit for bit — positional IO names, shapes, dtypes, roles, init
+/// specs, adam config and meta. This is what keeps the two backends
+/// executing the same artifact.
+#[test]
+fn train_step_manifest_parity_native_vs_serialized() {
+    let backend = NativeBackend::new();
+    let m = backend.manifest();
+    let text = m.to_json().to_string();
+    let reparsed = dyad_repro::runtime::Manifest::parse(&text).expect("engine-side parse");
+    assert_eq!(m.adam.b1, reparsed.adam.b1);
+    assert_eq!(m.adam.eps, reparsed.adam.eps);
+    assert_eq!(m.adam.grad_clip, reparsed.adam.grad_clip);
+    for name in [
+        "opt-mini/dyad_it/train_k8",
+        "opt-mini/dense/train_k1",
+        "pythia-mini/dyad_it/train_k8",
+        "opt-mid/dyad_it/train_k1",
+    ] {
+        let a = m.artifact(name).unwrap();
+        let b = reparsed.artifact(name).unwrap();
+        assert_eq!(a.kind, "train_step");
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.inputs.len(), b.inputs.len(), "{name}");
+        for (x, y) in a.inputs.iter().zip(&b.inputs) {
+            assert_eq!(x.name, y.name, "{name}");
+            assert_eq!(x.shape, y.shape, "{name}/{}", x.name);
+            assert_eq!(x.dtype, y.dtype, "{name}/{}", x.name);
+            assert_eq!(x.role, y.role, "{name}/{}", x.name);
+            assert_eq!(x.init, y.init, "{name}/{}", x.name);
+        }
+        assert_eq!(a.outputs.len(), b.outputs.len(), "{name}");
+        for (x, y) in a.outputs.iter().zip(&b.outputs) {
+            assert_eq!(x.name, y.name, "{name}");
+            assert_eq!(x.shape, y.shape, "{name}/{}", x.name);
+            assert_eq!(x.dtype, y.dtype, "{name}/{}", x.name);
+        }
+        for key in ["k_micro", "batch", "seq"] {
+            assert_eq!(
+                a.meta_usize(key).unwrap(),
+                b.meta_usize(key).unwrap(),
+                "{name} meta {key}"
+            );
+        }
+        assert_eq!(a.param_count(), b.param_count(), "{name}");
+    }
+}
+
 /// open_backend hands out a backend whose kind round-trips through
 /// FromStr, and uploads on it are usable immediately.
 #[test]
