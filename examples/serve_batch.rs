@@ -1,17 +1,19 @@
-//! Batched-inference serving demo: concurrent clients score nanoBabyLM
-//! sentences and request greedy continuations against a (optionally
-//! pretrained) opt-mini model; the server dynamically batches scoring
-//! requests and reports latency / throughput / occupancy.
+//! Sharded batched-inference serving demo: concurrent clients score
+//! nanoBabyLM sentences and request greedy continuations against a
+//! (optionally pretrained) opt-mini model; a router fans requests out
+//! to `--workers` backend-owning shards (round-robin or least-pending
+//! dispatch), each shard dynamically batching its scoring requests,
+//! and the fleet reports merged latency / throughput / occupancy.
 //!
 //!     cargo run --release --example serve_batch [-- --requests 96 \
-//!         --clients 6 --ckpt runs/train_tiny/dyad_it]
+//!         --clients 6 --workers 4 --dispatch least-pending \
+//!         --ckpt runs/train_tiny/dyad_it]
 
-use anyhow::Result;
-use dyad_repro::data::{Grammar, Tokenizer};
+use anyhow::{ensure, Result};
+use dyad_repro::data::{sample_sentences, Grammar, Tokenizer};
 use dyad_repro::runtime::BackendKind;
-use dyad_repro::serve::{Request, ServeConfig, ServerHandle};
+use dyad_repro::serve::{DispatchPolicy, Request, Router, ServeConfig, ServeStats};
 use dyad_repro::util::cli::Args;
-use dyad_repro::util::rng::Rng;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
@@ -26,44 +28,62 @@ fn main() -> Result<()> {
         max_batch: args.usize_or("max-batch", 8)?,
         window_ms: args.u64_or("window-ms", 4)?,
         seed: 7,
+        n_workers: args.usize_or("workers", 2)?,
+        dispatch: args.str_or("dispatch", "round-robin").parse::<DispatchPolicy>()?,
     };
     println!(
-        "serving {}/{} (max_batch={}, window={}ms), {} requests from {} clients",
-        cfg.arch, cfg.variant, cfg.max_batch, cfg.window_ms, n_requests, n_clients
+        "serving {}/{} on {} worker(s), {} dispatch (max_batch={}, window={}ms), \
+         {} requests from {} clients",
+        cfg.arch,
+        cfg.variant,
+        cfg.n_workers.max(1),
+        cfg.dispatch.name(),
+        cfg.max_batch,
+        cfg.window_ms,
+        n_requests,
+        n_clients
     );
-    let server = ServerHandle::start(cfg);
+    let router = Router::start(cfg);
 
     let grammar = Grammar::new();
     let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
-    let mut rng = Rng::new(11);
-    let sentences: Vec<Vec<i32>> = (0..n_requests)
-        .map(|_| tokenizer.encode_sentence(&grammar.sentence(&mut rng)))
-        .collect();
+    let sentences = sample_sentences(n_requests, 11);
 
     std::thread::scope(|scope| {
         for chunk in sentences.chunks(n_requests.div_ceil(n_clients).max(1)) {
-            let tx = server.sender();
+            let tx = router.sender();
             scope.spawn(move || {
                 for toks in chunk {
                     let (rtx, rrx) = std::sync::mpsc::channel();
                     tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
-                        .expect("server alive");
+                        .expect("router alive");
                     rrx.recv().expect("response").expect("score ok");
                 }
             });
         }
     });
 
-    // a couple of generation requests through the same server
+    // a couple of generation requests through the same fleet
     let prompt = tokenizer.encode(&["the".into(), "dog".into()]);
-    let gen = server.generate(prompt, 8)?;
+    let gen = router.generate(prompt, 8)?;
     println!(
         "greedy continuation of \"the dog\": {:?}",
         tokenizer.decode(&gen)
     );
 
-    let stats = server.stats()?;
-    println!("\n{}", stats.render());
-    server.shutdown()?;
+    let fleet = router.stats()?;
+    println!("\n{}", fleet.render());
+    let per_worker = router.worker_stats();
+    println!("{}", ServeStats::render_workers(&per_worker));
+    // fleet stats conserve the per-worker counts — the same contract
+    // tests/serve_test.rs pins
+    let shard_sum: usize = per_worker.iter().flatten().map(|s| s.requests()).sum();
+    ensure!(
+        shard_sum == fleet.requests(),
+        "stats not conserved: shards {} vs fleet {}",
+        shard_sum,
+        fleet.requests()
+    );
+    router.shutdown()?;
     Ok(())
 }

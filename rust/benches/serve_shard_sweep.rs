@@ -1,0 +1,164 @@
+//! Sharded serving sweep: end-to-end scoring throughput vs worker
+//! count, DYAD vs DENSE, at the catalog widths (opt-mini d=256,
+//! opt-mid d=384 — the small end of the Fig. 6 width axis). Each
+//! config spins up a `Router` fleet (one native backend + resident
+//! weights per worker), drives it with concurrent clients, and
+//! reports client-observed wall clock, throughput and latency
+//! percentiles — the serving-shaped face of the paper's §4 claim that
+//! DYAD serves the same workload faster than DENSE.
+//!
+//! Results are persisted as `BENCH_serve.json` (`BENCH_JSON_DIR`
+//! redirects); `BENCH_QUICK=1` shrinks the sweep for CI smoke runs.
+//! Every reply is asserted received — a hang or dropped request fails
+//! the bench, so CI's contract check doubles as a soak smoke.
+
+use dyad_repro::bench_support::{quick_mode, write_bench_json};
+use dyad_repro::data::sample_sentences;
+use dyad_repro::dyad::kernel::num_threads;
+use dyad_repro::runtime::catalog;
+use dyad_repro::serve::{DispatchPolicy, Request, Router, ServeConfig};
+use dyad_repro::util::json::{num, obj, s, Json};
+use dyad_repro::util::stats::Summary;
+use dyad_repro::util::timer::Timer;
+
+struct FleetRun {
+    wall_ms: f64,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    occupancy: f64,
+}
+
+/// Drive one fleet config with `clients` concurrent client threads;
+/// every request must get an Ok reply. Latency is client-observed
+/// (send → reply), measured outside the warmup.
+fn run_fleet(
+    arch: &str,
+    variant: &str,
+    workers: usize,
+    sentences: &[Vec<i32>],
+    clients: usize,
+) -> FleetRun {
+    let cfg = ServeConfig {
+        arch: arch.into(),
+        variant: variant.into(),
+        max_batch: 8,
+        window_ms: 2,
+        n_workers: workers,
+        dispatch: DispatchPolicy::RoundRobin,
+        ..ServeConfig::default()
+    };
+    let router = Router::start(cfg);
+    // warmup: one round-robin'd request per worker settles backend
+    // open + artifact load before the timed window
+    for _ in 0..workers {
+        router.score(sentences[0].clone()).expect("warmup score");
+    }
+    let latencies = std::sync::Mutex::new(Vec::with_capacity(sentences.len()));
+    let t = Timer::start();
+    std::thread::scope(|scope| {
+        for chunk in sentences.chunks(sentences.len().div_ceil(clients).max(1)) {
+            let tx = router.sender();
+            let latencies = &latencies;
+            scope.spawn(move || {
+                let mut local = Vec::with_capacity(chunk.len());
+                for toks in chunk {
+                    let t = Timer::start();
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                        .expect("router alive");
+                    rrx.recv().expect("reply received").expect("score ok");
+                    local.push(t.elapsed_ms());
+                }
+                latencies.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let wall_ms = t.elapsed_ms();
+    let lat = Summary::of(&latencies.into_inner().unwrap());
+    assert_eq!(lat.n, sentences.len(), "every request must be replied to");
+    let stats = router.stats().expect("fleet stats");
+    let occupancy = stats.mean_batch_occupancy();
+    router.shutdown().expect("fleet shutdown");
+    FleetRun {
+        wall_ms,
+        rps: sentences.len() as f64 / (wall_ms / 1e3),
+        p50_ms: lat.p50,
+        p99_ms: lat.p99,
+        occupancy,
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    let arches: &[&str] = if quick { &["opt-mini"] } else { &["opt-mini", "opt-mid"] };
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let n_requests = if quick { 24 } else { 192 };
+    let clients = if quick { 4 } else { 8 };
+    println!(
+        "== serve shard sweep: scoring throughput vs worker count, DYAD vs DENSE \
+         ({} threads/backend, {} requests, {} clients{}) ==",
+        num_threads(),
+        n_requests,
+        clients,
+        if quick { ", quick mode" } else { "" }
+    );
+    let sentences = sample_sentences(n_requests, 23);
+    let cat = catalog::archs();
+    println!(
+        "{:<10} {:>7} {:>9} {:>12} {:>12} {:>11}",
+        "arch", "workers", "variant", "rps", "p50(ms)", "dyad/dense"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &arch in arches {
+        let width = cat[arch].d_model;
+        for &workers in worker_counts {
+            let dense = run_fleet(arch, "dense", workers, &sentences, clients);
+            let dyad = run_fleet(arch, "dyad_it", workers, &sentences, clients);
+            let ratio = dyad.rps / dense.rps;
+            println!(
+                "{:<10} {:>7} {:>9} {:>12.1} {:>12.2} {:>11}",
+                arch, workers, "dense", dense.rps, dense.p50_ms, ""
+            );
+            println!(
+                "{:<10} {:>7} {:>9} {:>12.1} {:>12.2} {:>10.2}x",
+                arch, workers, "dyad_it", dyad.rps, dyad.p50_ms, ratio
+            );
+            for (variant, r) in [("dense", &dense), ("dyad_it", &dyad)] {
+                rows.push(obj(vec![
+                    ("arch", s(arch)),
+                    ("width", num(width as f64)),
+                    ("variant", s(variant)),
+                    ("workers", num(workers as f64)),
+                    ("requests", num(n_requests as f64)),
+                    ("wall_ms", num(r.wall_ms)),
+                    ("throughput_rps", num(r.rps)),
+                    ("p50_ms", num(r.p50_ms)),
+                    ("p99_ms", num(r.p99_ms)),
+                    ("mean_occupancy", num(r.occupancy)),
+                ]));
+            }
+        }
+    }
+    let doc = obj(vec![
+        ("bench", s("serve_shard_sweep")),
+        ("dispatch", s("round-robin")),
+        ("clients", num(clients as f64)),
+        ("threads", num(num_threads() as f64)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("serve", &doc) {
+        Ok(path) => println!("\nbench json: {}", path.display()),
+        Err(e) => {
+            eprintln!("error: could not write BENCH_serve.json: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!(
+        "expect throughput to scale with worker count until the host's cores are \
+         spoken for (each worker is its own backend: weights resident per shard, \
+         so memory grows linearly with the fleet), and DYAD >= DENSE rps at a \
+         given width (§4)"
+    );
+}

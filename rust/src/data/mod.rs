@@ -16,3 +16,15 @@ pub use dataset::TokenDataset;
 pub use grammar::{Grammar, McqTask, Phenomenon, ProbeTask};
 pub use mnist::MnistGen;
 pub use tokenizer::Tokenizer;
+
+/// `n` tokenized nanoBabyLM sentences from a fresh seeded grammar —
+/// the request corpus used by the serving CLI, example, bench and
+/// tests (same seed ⇒ same corpus, so scores are comparable).
+pub fn sample_sentences(n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let grammar = Grammar::new();
+    let tok = Tokenizer::from_words(&grammar.vocabulary());
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..n)
+        .map(|_| tok.encode_sentence(&grammar.sentence(&mut rng)))
+        .collect()
+}

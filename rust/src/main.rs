@@ -65,7 +65,8 @@ fn print_help() {
            train          --arch A --variant V --steps N --lr F --out DIR\n\
            quality        --arch A [--variants v1,v2] --steps N --out DIR\n\
            eval           --arch A --variant V --ckpt DIR [--pairs N]\n\
-           serve          --arch A --variant V [--ckpt DIR] [--requests N]\n\
+           serve          --arch A --variant V [--workers N] [--dispatch P]\n\
+                          [--ckpt DIR] [--requests N]   (P: round-robin|least-pending)\n\
            mnist          [--steps N] [--variant dense|dyad_it]\n\
            data-gen       [--tokens N | --pairs N] [--seed S]\n\
            inspect        [--n-dyad N] [--n-in N] | --artifact NAME\n\
@@ -228,7 +229,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use dyad_repro::serve::{Request, ServeConfig, ServerHandle};
+    use dyad_repro::serve::{DispatchPolicy, Request, Router, ServeConfig, ServeStats};
     use dyad_repro::runtime::catalog::{canonical_arch, canonical_variant};
     let cfg = ServeConfig {
         backend: backend_kind(args)?,
@@ -239,25 +240,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.usize_or("max-batch", 8)?,
         window_ms: args.u64_or("window-ms", 5)?,
         seed: args.u64_or("seed", 7)?,
+        n_workers: args.usize_or("workers", 1)?,
+        dispatch: args.str_or("dispatch", "round-robin").parse::<DispatchPolicy>()?,
     };
     let n = args.usize_or("requests", 64)?;
     println!(
-        "starting server ({}/{}) on {} backend ...",
+        "starting {} worker(s) ({}/{}) on {} backend, {} dispatch ...",
+        cfg.n_workers.max(1),
         cfg.arch,
         cfg.variant,
-        cfg.backend.name()
+        cfg.backend.name(),
+        cfg.dispatch.name()
     );
-    let server = ServerHandle::start(cfg);
-    let grammar = Grammar::new();
-    let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
-    let mut rng = dyad_repro::util::rng::Rng::new(1);
-    let mut sentences = Vec::new();
-    for _ in 0..n {
-        sentences.push(tokenizer.encode_sentence(&grammar.sentence(&mut rng)));
-    }
+    let router = Router::start(cfg);
+    let sentences = dyad_repro::data::sample_sentences(n, 1);
     std::thread::scope(|scope| {
         for chunk in sentences.chunks(n.div_ceil(4).max(1)) {
-            let srv = server.sender();
+            let srv = router.sender();
             scope.spawn(move || {
                 for toks in chunk {
                     let (rtx, rrx) = std::sync::mpsc::channel();
@@ -267,9 +266,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             });
         }
     });
-    let stats = server.stats()?;
+    let stats = router.stats()?;
     println!("{}", stats.render());
-    server.shutdown()?;
+    println!("{}", ServeStats::render_workers(&router.worker_stats()));
+    router.shutdown()?;
     Ok(())
 }
 

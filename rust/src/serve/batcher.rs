@@ -34,20 +34,27 @@ impl Batcher {
     }
 
     /// Should we flush now even though the batch isn't full?
+    ///
+    /// Saturating on both sides: a `now` before the window opened
+    /// (stale caller timestamp) reads as zero elapsed, a `now` far
+    /// past the deadline compares as expired — never panics.
     pub fn window_expired(&self, now: Instant) -> bool {
         match self.opened_at {
-            Some(t) => self.pending > 0 && now.duration_since(t) >= self.window,
+            Some(t) => self.pending > 0 && now.saturating_duration_since(t) >= self.window,
             None => false,
         }
     }
 
     /// How long the worker may block waiting for more requests.
+    /// Saturates to zero once `now` is at or past the deadline (and
+    /// treats a stale `now` before the window opened as a full
+    /// budget) — no underflow panic either way.
     pub fn wait_budget(&self, now: Instant) -> Duration {
         match self.opened_at {
             None => self.window, // idle: just poll at window granularity
             Some(t) => self
                 .window
-                .checked_sub(now.duration_since(t))
+                .checked_sub(now.saturating_duration_since(t))
                 .unwrap_or(Duration::ZERO),
         }
     }
@@ -90,6 +97,48 @@ mod tests {
         assert!(b.window_expired(later));
         b.flush();
         assert!(!b.window_expired(later + Duration::from_millis(10)));
+    }
+
+    /// `wait_budget` saturates to zero when `now` is past the
+    /// deadline, however far past — no Duration underflow.
+    #[test]
+    fn wait_budget_saturates_past_deadline() {
+        let mut b = Batcher::new(8, 5);
+        let t0 = Instant::now();
+        b.on_arrival(t0);
+        assert_eq!(b.wait_budget(t0 + Duration::from_secs(3600)), Duration::ZERO);
+        // a stale `now` from *before* the window opened must not
+        // panic either: elapsed saturates to zero -> full budget
+        let mut b2 = Batcher::new(8, 5);
+        b2.on_arrival(t0 + Duration::from_millis(50));
+        assert_eq!(b2.wait_budget(t0), Duration::from_millis(5));
+    }
+
+    /// `window_expired` is total over time: far-past deadlines read as
+    /// expired, stale pre-open timestamps as not expired — no panics.
+    #[test]
+    fn window_expired_saturates_past_deadline() {
+        let mut b = Batcher::new(8, 5);
+        let t0 = Instant::now();
+        b.on_arrival(t0 + Duration::from_millis(50));
+        assert!(!b.window_expired(t0), "stale now must read as unexpired");
+        assert!(b.window_expired(t0 + Duration::from_secs(3600)));
+    }
+
+    /// `flush` on an empty batcher is a no-op: returns 0, leaves no
+    /// window open, and the batcher keeps working afterwards.
+    #[test]
+    fn flush_empty_is_noop() {
+        let mut b = Batcher::new(3, 5);
+        assert_eq!(b.flush(), 0);
+        assert_eq!(b.pending(), 0);
+        let t = Instant::now();
+        assert!(!b.window_expired(t + Duration::from_secs(60)));
+        assert_eq!(b.wait_budget(t), Duration::from_millis(5));
+        // still accumulates normally after the no-op flush
+        assert!(!b.on_arrival(t));
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.flush(), 1);
     }
 
     #[test]

@@ -1,17 +1,31 @@
-//! Batched inference server: dynamic batcher over backend executables.
+//! Batched inference serving: dynamic batcher + sharded worker fleet.
 //!
-//! The L3 "router" component: clients submit scoring or greedy-
-//! generation requests from any thread; a dedicated backend thread
-//! (backend handles are not Send) accumulates them into padded batches
-//! (up to `max_batch`, bounded by `window_ms`), executes one backend
-//! call per batch, and reports latency/throughput/occupancy statistics
-//! — the serving-shaped face of the DYAD speedup story. Runs on the
-//! native backend by default (`ServeConfig::backend`).
+//! The L3 serving subsystem. Clients submit scoring or greedy-
+//! generation requests from any thread over a `Sender<Request>`.
+//! Behind it, each **worker** is a dedicated backend-owning thread
+//! (backend handles are not Send) that binds the model weights
+//! resident once (`Bindings`), accumulates requests into padded
+//! batches (up to `max_batch`, bounded by `window_ms`), and executes
+//! one backend call per batch — the serving-shaped face of the DYAD
+//! speedup story. Runs on the native backend by default
+//! (`ServeConfig::backend`).
+//!
+//! Two front-ends share the [`Request`] protocol:
+//!
+//! * [`ServerHandle`] — exactly one worker (the original
+//!   single-threaded path, still the simplest embedding);
+//! * [`Router`] — `n_workers` worker shards behind a dispatcher
+//!   thread with pluggable dispatch ([`DispatchPolicy`]: round-robin
+//!   or least-pending), per-worker [`ServeStats`] merged into a
+//!   fleet view, worker-death detection (error replies, never
+//!   hangs) and graceful drain on shutdown.
 
 mod batcher;
+mod router;
 mod server;
 mod stats;
 
 pub use batcher::Batcher;
+pub use router::{DispatchPolicy, Router};
 pub use server::{Request, ServeConfig, ServerHandle};
 pub use stats::ServeStats;

@@ -1,0 +1,389 @@
+//! Sharded serving: a router front-end over N backend-owning workers.
+//!
+//! [`Router::start`] spawns `cfg.n_workers` copies of the
+//! [`super::server`] worker loop — each one opens its **own** backend
+//! (they are cheap to open natively) and binds its weights resident
+//! once (`Bindings`), so per-worker weight residency is the unit of
+//! sharding — plus one dispatcher thread that owns the client-facing
+//! [`Request`] receiver and fans requests out:
+//!
+//! ```text
+//!  clients ──Sender<Request>──▶ dispatcher ──┬──▶ worker 0 (backend + resident weights)
+//!            (round-robin /                  ├──▶ worker 1 (backend + resident weights)
+//!             least-pending)                 └──▶ worker n-1 ...
+//! ```
+//!
+//! Contracts held by the test suite (`tests/serve_test.rs`,
+//! `tests/failure_injection.rs`):
+//!
+//! * **Parity** — scoring through `n` workers is bitwise identical to
+//!   one worker (same seed ⇒ same resident weights per shard; the
+//!   kernels are bitwise thread-deterministic).
+//! * **Stats conservation** — the fleet view is
+//!   [`ServeStats::merge`]d from per-worker snapshots, so fleet
+//!   `requests()` equals the sum over shards.
+//! * **Death, not hangs** — a dead shard (panic, failed startup) is
+//!   detected via its [`WorkerShared`] liveness flag and failed
+//!   channel sends; its in-flight requests resolve as error replies
+//!   (dropped reply senders disconnect), new requests re-route to
+//!   live shards, and only when no shard is left do clients get an
+//!   explicit "no live serve workers" error.
+//! * **Graceful drain** — `shutdown` forwards every already-accepted
+//!   request before the workers flush their final batches and exit,
+//!   then reports any shard that exited abnormally (startup failure
+//!   or crash) instead of returning Ok on a fleet that never served.
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::server::{
+    request_generate, request_score, request_stats, worker, Request, ServeConfig,
+};
+use super::stats::ServeStats;
+
+/// How long stats gathers wait on a single worker before skipping it
+/// (a worker only lags this far behind if it is mid-crash).
+const GATHER_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How the dispatcher picks a shard for each request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Cycle through the live workers in index order — deterministic,
+    /// perfectly balanced under uniform request cost.
+    RoundRobin,
+    /// Pick the live worker with the fewest in-flight requests
+    /// (lowest index on ties) — adapts to uneven request cost
+    /// (e.g. long generations pinning one shard).
+    LeastPending,
+}
+
+impl DispatchPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::LeastPending => "least-pending",
+        }
+    }
+}
+
+impl FromStr for DispatchPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<DispatchPolicy> {
+        match s {
+            "round-robin" | "rr" => Ok(DispatchPolicy::RoundRobin),
+            "least-pending" | "lp" => Ok(DispatchPolicy::LeastPending),
+            other => bail!(
+                "unknown dispatch policy {other:?} (expected round-robin|least-pending)"
+            ),
+        }
+    }
+}
+
+/// Per-shard state shared between the worker thread and the
+/// dispatcher: in-flight request count (for least-pending dispatch)
+/// and a liveness flag flipped when the worker exits by any path,
+/// panic included.
+#[derive(Debug)]
+pub(crate) struct WorkerShared {
+    pending: AtomicUsize,
+    alive: AtomicBool,
+}
+
+impl WorkerShared {
+    pub(crate) fn new() -> WorkerShared {
+        WorkerShared { pending: AtomicUsize::new(0), alive: AtomicBool::new(true) }
+    }
+
+    pub(crate) fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn mark_dead(&self) {
+        self.alive.store(false, Ordering::Release);
+    }
+
+    pub(crate) fn pending(&self) -> usize {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn inc_pending(&self) {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Saturating decrement: the standalone [`super::ServerHandle`]
+    /// path runs a worker with nobody incrementing, so replies there
+    /// must not wrap the counter.
+    pub(crate) fn dec_pending(&self) {
+        let _ = self
+            .pending
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1));
+    }
+}
+
+struct WorkerLink {
+    tx: Sender<Request>,
+    shared: Arc<WorkerShared>,
+    join: Option<JoinHandle<Result<()>>>,
+}
+
+/// The sharded serving front-end. Clients talk to it exactly like a
+/// [`super::ServerHandle`] (same [`Request`] enum, same helpers), so
+/// swapping one worker for a fleet is a config change.
+pub struct Router {
+    tx: Sender<Request>,
+    worker_txs: Vec<Sender<Request>>,
+    shares: Vec<Arc<WorkerShared>>,
+    dispatcher: Option<JoinHandle<Result<()>>>,
+}
+
+impl Router {
+    /// Spawn `cfg.n_workers` worker shards (at least one) and the
+    /// dispatcher that routes per `cfg.dispatch`.
+    pub fn start(cfg: ServeConfig) -> Router {
+        let n = cfg.n_workers.max(1);
+        let policy = cfg.dispatch;
+        let mut links = Vec::with_capacity(n);
+        for i in 0..n {
+            let (wtx, wrx) = mpsc::channel();
+            let shared = Arc::new(WorkerShared::new());
+            let wcfg = cfg.clone();
+            let wshared = shared.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker(wcfg, wrx, wshared))
+                .expect("spawn serve worker thread");
+            links.push(WorkerLink { tx: wtx, shared, join: Some(join) });
+        }
+        let worker_txs: Vec<_> = links.iter().map(|l| l.tx.clone()).collect();
+        let shares: Vec<_> = links.iter().map(|l| l.shared.clone()).collect();
+        let (tx, rx) = mpsc::channel();
+        let dispatcher = std::thread::Builder::new()
+            .name("serve-router".into())
+            .spawn(move || dispatch_loop(rx, links, policy))
+            .expect("spawn serve router thread");
+        Router { tx, worker_txs, shares, dispatcher: Some(dispatcher) }
+    }
+
+    /// A clonable handle for client threads.
+    pub fn sender(&self) -> Sender<Request> {
+        self.tx.clone()
+    }
+
+    pub fn score(&self, tokens: Vec<i32>) -> Result<f64> {
+        request_score(&self.tx, tokens)
+    }
+
+    pub fn generate(&self, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>> {
+        request_generate(&self.tx, prompt, max_new)
+    }
+
+    /// Fleet-level stats: per-worker snapshots merged by the
+    /// dispatcher ([`ServeStats::merge`]); `workers` counts the live
+    /// shards that answered.
+    pub fn stats(&self) -> Result<ServeStats> {
+        request_stats(&self.tx)
+    }
+
+    /// Per-shard snapshots, in worker-index order; `None` for a shard
+    /// that is dead (or died before answering). Queries all shards
+    /// first, then collects, so one slow shard delays the gather once
+    /// rather than serially.
+    pub fn worker_stats(&self) -> Vec<Option<ServeStats>> {
+        let waits: Vec<_> = self
+            .worker_txs
+            .iter()
+            .map(|tx| {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Request::Stats { resp: rtx }).ok().map(|_| rrx)
+            })
+            .collect();
+        waits
+            .into_iter()
+            .map(|w| w.and_then(|rrx| rrx.recv_timeout(GATHER_TIMEOUT).ok()))
+            .collect()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.shares.len()
+    }
+
+    /// Indices of shards whose worker thread has exited (crash or
+    /// startup failure).
+    pub fn dead_workers(&self) -> Vec<usize> {
+        self.shares
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.is_alive())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// In-flight request count per shard (dispatched, not yet
+    /// replied) — the signal least-pending dispatch routes on.
+    pub fn pending_per_worker(&self) -> Vec<usize> {
+        self.shares.iter().map(|s| s.pending()).collect()
+    }
+
+    /// Failure injection (tests, soak runs): crash one shard. Its
+    /// queued requests resolve as error replies; the fleet keeps
+    /// serving on the remaining shards.
+    #[doc(hidden)]
+    pub fn kill_worker(&self, index: usize) -> Result<()> {
+        let tx = self
+            .worker_txs
+            .get(index)
+            .ok_or_else(|| anyhow!("no worker {index} (fleet of {})", self.n_workers()))?;
+        tx.send(Request::Crash)
+            .map_err(|_| anyhow!("worker {index} is already dead"))
+    }
+
+    /// Graceful drain: every request accepted before this call is
+    /// dispatched and flushed by its worker before the fleet exits.
+    /// Errors if any worker exited abnormally — a startup failure
+    /// (bad arch, missing artifacts) or a crash — naming the shard,
+    /// so a fleet that never really served cannot shut down silently.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Request::Shutdown);
+        match self.dispatcher.take() {
+            Some(j) => j.join().map_err(|_| anyhow!("serve router thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.dispatcher.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn dispatch_loop(
+    rx: Receiver<Request>,
+    mut links: Vec<WorkerLink>,
+    policy: DispatchPolicy,
+) -> Result<()> {
+    let mut rr = 0usize;
+    loop {
+        match rx.recv() {
+            // fleet-level stats are answered here: gather + merge
+            Ok(Request::Stats { resp }) => {
+                let _ = resp.send(fleet_stats(&links));
+            }
+            Ok(Request::Shutdown) => break,
+            Ok(req) => dispatch_one(req, &links, policy, &mut rr),
+            // every client sender (Router included) dropped
+            Err(_) => break,
+        }
+    }
+    // graceful drain: workers see Shutdown only after everything the
+    // dispatcher already forwarded, flush their batches, then exit;
+    // abnormal worker exits are collected and surfaced by shutdown()
+    for l in &links {
+        let _ = l.tx.send(Request::Shutdown);
+    }
+    let mut failures = Vec::new();
+    for (i, l) in links.iter_mut().enumerate() {
+        if let Some(j) = l.join.take() {
+            match j.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => failures.push(format!("worker {i}: {e:#}")),
+                Err(_) => failures.push(format!("worker {i}: panicked")),
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        bail!("serve worker failures: {}", failures.join("; "))
+    }
+}
+
+/// Route one request. A failed send means the shard's receiver is
+/// gone: mark it dead, take the request back (mpsc returns it) and
+/// retry on the next live shard; with no shard left, reply an
+/// explicit error — the client never hangs.
+fn dispatch_one(mut req: Request, links: &[WorkerLink], policy: DispatchPolicy, rr: &mut usize) {
+    for _ in 0..links.len() {
+        let Some(i) = pick(links, policy, rr) else { break };
+        links[i].shared.inc_pending();
+        match links[i].tx.send(req) {
+            Ok(()) => return,
+            Err(mpsc::SendError(back)) => {
+                links[i].shared.dec_pending();
+                links[i].shared.mark_dead();
+                req = back;
+            }
+        }
+    }
+    reply_error(req, "no live serve workers");
+}
+
+fn pick(links: &[WorkerLink], policy: DispatchPolicy, rr: &mut usize) -> Option<usize> {
+    // allocation-free: this runs once per dispatched request
+    let live = || links.iter().enumerate().filter(|(_, l)| l.shared.is_alive());
+    match policy {
+        DispatchPolicy::RoundRobin => {
+            let n_live = live().count();
+            if n_live == 0 {
+                return None;
+            }
+            let k = *rr % n_live;
+            *rr += 1;
+            // a shard can die between the count and this scan (flags
+            // only flip live -> dead): fall back to the first live one
+            live().nth(k).or_else(|| live().next()).map(|(i, _)| i)
+        }
+        // min_by_key keeps the first minimum: lowest index wins ties
+        DispatchPolicy::LeastPending => {
+            live().min_by_key(|(_, l)| l.shared.pending()).map(|(i, _)| i)
+        }
+    }
+}
+
+fn reply_error(req: Request, msg: &str) {
+    match req {
+        Request::Score { resp, .. } => {
+            let _ = resp.send(Err(msg.to_string()));
+        }
+        Request::Generate { resp, .. } => {
+            let _ = resp.send(Err(msg.to_string()));
+        }
+        // Stats is answered by the dispatcher and never dispatched, so
+        // it cannot land here; dropping the reply sender (not sending
+        // fake zeroed stats) keeps the client erroring if that changes
+        Request::Stats { .. } | Request::Shutdown | Request::Crash => {}
+    }
+}
+
+/// Merge per-worker snapshots into the fleet view. Dead shards are
+/// skipped (their samples died with them); `workers` ends up as the
+/// number of live shards that answered.
+fn fleet_stats(links: &[WorkerLink]) -> ServeStats {
+    let mut waits = Vec::new();
+    for l in links {
+        if !l.shared.is_alive() {
+            continue;
+        }
+        let (rtx, rrx) = mpsc::channel();
+        if l.tx.send(Request::Stats { resp: rtx }).is_ok() {
+            waits.push(rrx);
+        }
+    }
+    let mut fleet = ServeStats::default();
+    for rrx in waits {
+        if let Ok(snap) = rrx.recv_timeout(GATHER_TIMEOUT) {
+            fleet.merge(&snap);
+        }
+    }
+    fleet
+}

@@ -9,15 +9,24 @@
 //! dynamically batched (see `Batcher`); generation requests run a
 //! greedy decode loop over the `next_logits` artifact with all active
 //! generations stepped together (a miniature continuous batcher).
+//!
+//! [`ServerHandle`] runs exactly one worker — the direct,
+//! single-shard path. The sharded front-end that fans requests out to
+//! several of these workers is [`super::Router`]; both speak the same
+//! [`Request`] enum, and the worker loop here is the unit of sharding
+//! (per-worker backend, per-worker resident weights, per-worker
+//! [`ServeStats`]).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::batcher::Batcher;
+use super::router::{DispatchPolicy, WorkerShared};
 use super::stats::ServeStats;
 use crate::coordinator::checkpoint::CheckpointManager;
 use crate::data::dataset::pad_batch;
@@ -29,7 +38,7 @@ use crate::util::timer::Timer;
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Which execution backend the worker opens (native by default).
+    /// Which execution backend each worker opens (native by default).
     pub backend: BackendKind,
     /// Artifact dir for the xla backend (unused by native).
     pub artifacts_dir: PathBuf,
@@ -40,6 +49,12 @@ pub struct ServeConfig {
     pub max_batch: usize,
     pub window_ms: u64,
     pub seed: u64,
+    /// Worker shards opened by [`super::Router::start`] (each one a
+    /// backend-owning thread with its weights bound resident).
+    /// [`ServerHandle::start`] ignores this and always runs one.
+    pub n_workers: usize,
+    /// How the router spreads requests over the shards.
+    pub dispatch: DispatchPolicy,
 }
 
 impl Default for ServeConfig {
@@ -53,6 +68,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             window_ms: 5,
             seed: 7,
+            n_workers: 1,
+            dispatch: DispatchPolicy::RoundRobin,
         }
     }
 }
@@ -73,6 +90,11 @@ pub enum Request {
         resp: Sender<ServeStats>,
     },
     Shutdown,
+    /// Failure-injection hook (tests, soak runs): the receiving worker
+    /// thread panics, simulating a shard crash. The router's death
+    /// detection turns the fallout into error replies, never hangs.
+    #[doc(hidden)]
+    Crash,
 }
 
 pub struct ServerHandle {
@@ -83,7 +105,8 @@ pub struct ServerHandle {
 impl ServerHandle {
     pub fn start(cfg: ServeConfig) -> ServerHandle {
         let (tx, rx) = mpsc::channel();
-        let join = std::thread::spawn(move || worker(cfg, rx));
+        let shared = Arc::new(WorkerShared::new());
+        let join = std::thread::spawn(move || worker(cfg, rx, shared));
         ServerHandle { tx, join: Some(join) }
     }
 
@@ -92,27 +115,15 @@ impl ServerHandle {
     }
 
     pub fn score(&self, tokens: Vec<i32>) -> Result<f64> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Request::Score { tokens, resp: rtx })
-            .map_err(|_| anyhow!("server down"))?;
-        rrx.recv().context("server dropped request")?.map_err(|e| anyhow!(e))
+        request_score(&self.tx, tokens)
     }
 
     pub fn generate(&self, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Request::Generate { prompt, max_new, resp: rtx })
-            .map_err(|_| anyhow!("server down"))?;
-        rrx.recv().context("server dropped request")?.map_err(|e| anyhow!(e))
+        request_generate(&self.tx, prompt, max_new)
     }
 
     pub fn stats(&self) -> Result<ServeStats> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Request::Stats { resp: rtx })
-            .map_err(|_| anyhow!("server down"))?;
-        rrx.recv().context("server dropped stats request")
+        request_stats(&self.tx)
     }
 
     pub fn shutdown(mut self) -> Result<()> {
@@ -133,13 +144,56 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Round-trip a scoring request over any `Request` channel (worker or
+/// router — both ends speak the same protocol).
+pub(crate) fn request_score(tx: &Sender<Request>, tokens: Vec<i32>) -> Result<f64> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request::Score { tokens, resp: rtx })
+        .map_err(|_| anyhow!("server down"))?;
+    rrx.recv().context("server dropped request")?.map_err(|e| anyhow!(e))
+}
+
+pub(crate) fn request_generate(
+    tx: &Sender<Request>,
+    prompt: Vec<i32>,
+    max_new: usize,
+) -> Result<Vec<i32>> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request::Generate { prompt, max_new, resp: rtx })
+        .map_err(|_| anyhow!("server down"))?;
+    rrx.recv().context("server dropped request")?.map_err(|e| anyhow!(e))
+}
+
+pub(crate) fn request_stats(tx: &Sender<Request>) -> Result<ServeStats> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request::Stats { resp: rtx })
+        .map_err(|_| anyhow!("server down"))?;
+    rrx.recv().context("server dropped stats request")
+}
+
 struct PendingScore {
     tokens: Vec<i32>,
     resp: Sender<Result<f64, String>>,
     arrived: Instant,
 }
 
-fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
+/// Flips the shard's liveness flag when the worker exits — by any
+/// path, panic included (the router reads this to stop dispatching
+/// to a dead shard).
+struct AliveGuard(Arc<WorkerShared>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.mark_dead();
+    }
+}
+
+pub(crate) fn worker(
+    cfg: ServeConfig,
+    rx: Receiver<Request>,
+    shared: Arc<WorkerShared>,
+) -> Result<()> {
+    let _alive = AliveGuard(shared.clone());
     let backend = open_backend(cfg.backend, &cfg.artifacts_dir)?;
     let score_art = backend.load(&format!("{}/{}/score", cfg.arch, cfg.variant))?;
     let logits_art =
@@ -196,12 +250,14 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
                         .latencies_ms
                         .push(now.duration_since(p.arrived).as_secs_f64() * 1e3);
                     let _ = p.resp.send(Ok(sc));
+                    shared.dec_pending();
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
                 for p in queue.drain(..) {
                     let _ = p.resp.send(Err(msg.clone()));
+                    shared.dec_pending();
                 }
             }
         }
@@ -232,16 +288,28 @@ fn worker(cfg: ServeConfig, rx: Receiver<Request>) -> Result<()> {
                     .latencies_ms
                     .push(Instant::now().duration_since(t).as_secs_f64() * 1e3);
                 let _ = resp.send(out.map_err(|e| format!("{e:#}")));
+                shared.dec_pending();
             }
             Ok(Request::Stats { resp }) => {
                 let mut snap = stats.clone();
                 snap.wall_s = started.elapsed_s();
+                snap.workers = 1;
                 let _ = resp.send(snap);
             }
             Ok(Request::Shutdown) => {
                 batcher.flush();
                 flush(&mut queue, &mut stats);
                 return Ok(());
+            }
+            Ok(Request::Crash) => {
+                // failure injection: die mid-run with requests possibly
+                // queued; dropping `queue`/`rx` drops their reply
+                // senders, so waiting clients observe an error reply
+                // (disconnect), never a hang
+                panic!(
+                    "serve worker {}/{}: injected crash (Request::Crash)",
+                    cfg.arch, cfg.variant
+                );
             }
             Err(RecvTimeoutError::Timeout) => continue,
             Err(RecvTimeoutError::Disconnected) => {

@@ -1,4 +1,9 @@
 //! Serving statistics: latency, throughput, batch occupancy.
+//!
+//! One `ServeStats` is owned by each worker thread; the router merges
+//! the per-worker snapshots into a fleet-level view with [`merge`]
+//! (`ServeStats::merge`), which conserves request counts: the fleet
+//! `requests()` is exactly the sum of the merged workers'.
 
 use crate::util::stats::Summary;
 
@@ -8,6 +13,9 @@ pub struct ServeStats {
     pub batch_sizes: Vec<usize>,
     pub exec_ms: Vec<f64>,
     pub wall_s: f64,
+    /// Worker snapshots folded into this view (1 for a single worker's
+    /// own snapshot, the live-shard count for a fleet merge).
+    pub workers: usize,
 }
 
 impl ServeStats {
@@ -30,6 +38,8 @@ impl ServeStats {
         self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
     }
 
+    /// Requests per wall-clock second; 0.0 (never NaN/inf) when no
+    /// wall time has been observed yet.
     pub fn throughput_rps(&self) -> f64 {
         if self.wall_s <= 0.0 {
             return 0.0;
@@ -37,25 +47,63 @@ impl ServeStats {
         self.requests() as f64 / self.wall_s
     }
 
+    /// Fold another worker's snapshot into this one. Latency, batch
+    /// and exec samples concatenate (so every percentile is over the
+    /// union); wall time is the max, since workers run concurrently —
+    /// fleet throughput is total requests over the longest-lived
+    /// worker's wall clock.
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.latencies_ms.extend_from_slice(&other.latencies_ms);
+        self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        self.exec_ms.extend_from_slice(&other.exec_ms);
+        self.wall_s = self.wall_s.max(other.wall_s);
+        self.workers += other.workers;
+    }
+
+    /// Render per-shard summary lines from [`Router::worker_stats`]
+    /// output (one line per worker, dead shards marked) — shared by
+    /// the CLI and the serving example.
+    ///
+    /// [`Router::worker_stats`]: super::Router::worker_stats
+    pub fn render_workers(per: &[Option<ServeStats>]) -> String {
+        per.iter()
+            .enumerate()
+            .map(|(i, ws)| match ws {
+                Some(s) => format!(
+                    "  worker {i}: requests={} batches={} mean_occupancy={:.2}",
+                    s.requests(),
+                    s.batch_sizes.len(),
+                    s.mean_batch_occupancy()
+                ),
+                None => format!("  worker {i}: dead"),
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
     pub fn render(&self) -> String {
-        let lat = self.latency();
+        let lat = match self.latency() {
+            Some(l) => format!(
+                "p50={:.1} p95={:.1} p99={:.1} mean={:.1}",
+                l.p50, l.p95, l.p99, l.mean
+            ),
+            None => "n/a (no requests)".to_string(),
+        };
+        let exec = if self.exec_ms.is_empty() {
+            "n/a".to_string()
+        } else {
+            format!("{:.1}", Summary::of(&self.exec_ms).mean)
+        };
         format!(
-            "requests={} batches={} mean_occupancy={:.2} throughput={:.1} req/s\n\
-             latency ms: p50={:.1} p90={:.1} p99={:.1} mean={:.1}\n\
-             exec ms per batch: mean={:.1}",
+            "workers={} requests={} batches={} mean_occupancy={:.2} \
+             throughput={:.1} req/s\n\
+             latency ms: {lat}\n\
+             exec ms per batch: mean={exec}",
+            self.workers,
             self.requests(),
             self.batch_sizes.len(),
             self.mean_batch_occupancy(),
             self.throughput_rps(),
-            lat.map(|l| l.p50).unwrap_or(0.0),
-            self.latency().map(|l| l.p90).unwrap_or(0.0),
-            self.latency().map(|l| l.p99).unwrap_or(0.0),
-            self.latency().map(|l| l.mean).unwrap_or(0.0),
-            if self.exec_ms.is_empty() {
-                0.0
-            } else {
-                Summary::of(&self.exec_ms).mean
-            },
         )
     }
 }
@@ -71,18 +119,67 @@ mod tests {
             batch_sizes: vec![2, 2],
             exec_ms: vec![0.5, 0.6],
             wall_s: 2.0,
+            workers: 1,
         };
         assert_eq!(s.requests(), 4);
         assert_eq!(s.mean_batch_occupancy(), 2.0);
         assert_eq!(s.throughput_rps(), 2.0);
         assert!(s.render().contains("requests=4"));
+        assert!(s.render().contains("p95="));
     }
 
+    /// The zero-request case is fully defined: no NaN, no div-by-zero,
+    /// renderable.
     #[test]
     fn empty_is_safe() {
         let s = ServeStats::default();
         assert!(s.latency().is_none());
         assert_eq!(s.throughput_rps(), 0.0);
-        let _ = s.render();
+        assert_eq!(s.mean_batch_occupancy(), 0.0);
+        let r = s.render();
+        assert!(!r.contains("NaN") && !r.contains("inf"), "{r}");
+        // requests observed but no wall time yet: still well-defined
+        let s2 = ServeStats { latencies_ms: vec![1.0], workers: 1, ..Default::default() };
+        assert_eq!(s2.throughput_rps(), 0.0);
+        assert!(!s2.render().contains("NaN"), "{}", s2.render());
+    }
+
+    /// merge conserves request counts, concatenates samples and takes
+    /// the max wall clock (workers run concurrently).
+    #[test]
+    fn merge_conserves_counts() {
+        let mut fleet = ServeStats::default();
+        let a = ServeStats {
+            latencies_ms: vec![1.0, 2.0],
+            batch_sizes: vec![2],
+            exec_ms: vec![0.5],
+            wall_s: 2.0,
+            workers: 1,
+        };
+        let b = ServeStats {
+            latencies_ms: vec![3.0, 4.0, 5.0],
+            batch_sizes: vec![1, 2],
+            exec_ms: vec![0.7, 0.9],
+            wall_s: 3.0,
+            workers: 1,
+        };
+        fleet.merge(&a);
+        fleet.merge(&b);
+        assert_eq!(fleet.requests(), a.requests() + b.requests());
+        assert_eq!(fleet.batch_sizes.len(), 3);
+        assert_eq!(fleet.exec_ms.len(), 3);
+        assert_eq!(fleet.wall_s, 3.0);
+        assert_eq!(fleet.workers, 2);
+        // fleet throughput: total requests over the longest wall
+        assert!((fleet.throughput_rps() - 5.0 / 3.0).abs() < 1e-12);
+        assert!(fleet.render().contains("workers=2"));
+    }
+
+    #[test]
+    fn render_workers_marks_dead_shards() {
+        let alive = ServeStats { latencies_ms: vec![1.0], workers: 1, ..Default::default() };
+        let out = ServeStats::render_workers(&[Some(alive), None]);
+        assert!(out.contains("worker 0: requests=1"), "{out}");
+        assert!(out.contains("worker 1: dead"), "{out}");
     }
 }

@@ -8,6 +8,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -32,6 +33,7 @@ impl Summary {
             min: sorted[0],
             p50: pct(0.50),
             p90: pct(0.90),
+            p95: pct(0.95),
             p99: pct(0.99),
             max: sorted[n - 1],
         }
@@ -72,12 +74,14 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
     }
 
     #[test]
     fn summary_single() {
         let s = Summary::of(&[7.5]);
         assert_eq!(s.mean, 7.5);
+        assert_eq!(s.p95, 7.5);
         assert_eq!(s.p99, 7.5);
         assert_eq!(s.std, 0.0);
     }

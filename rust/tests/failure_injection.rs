@@ -1,6 +1,7 @@
 //! Failure-injection tests: corrupt manifests, mismatched shapes,
-//! missing files — the coordinator must fail loudly and descriptively,
-//! never feed garbage to PJRT.
+//! missing files, crashing serve shards — the coordinator must fail
+//! loudly and descriptively, never feed garbage to PJRT, and the
+//! serving fleet must answer with errors, never hangs.
 
 use dyad_repro::runtime::Manifest;
 use dyad_repro::tensor::{load_checkpoint, save_checkpoint, DType, Tensor};
@@ -159,6 +160,137 @@ fn checkpoint_rejects_insane_counts() {
     bytes.extend((u32::MAX).to_le_bytes());
     std::fs::write(&path, &bytes).unwrap();
     assert!(load_checkpoint(&path).is_err());
+}
+
+/// Kill one shard of a two-worker fleet mid-run: every subsequent
+/// request must resolve promptly — an Ok score (re-routed to the live
+/// shard) or an error reply (caught mid-crash) — and **never hang**;
+/// the death is observed, the fleet keeps serving, and shutdown
+/// reports the dead shard by name instead of exiting silently.
+#[test]
+fn serve_worker_death_yields_error_replies_not_hangs() {
+    use dyad_repro::serve::{DispatchPolicy, Request, Router, ServeConfig};
+    use std::sync::mpsc::{self, RecvTimeoutError};
+    use std::time::Duration;
+
+    let router = Router::start(ServeConfig {
+        arch: "opt-mini".into(),
+        variant: "dyad_it".into(),
+        max_batch: 4,
+        window_ms: 2,
+        n_workers: 2,
+        dispatch: DispatchPolicy::RoundRobin,
+        ..ServeConfig::default()
+    });
+    // warm both shards
+    for _ in 0..4 {
+        router.score(vec![5, 6, 7]).unwrap();
+    }
+    assert!(router.dead_workers().is_empty());
+
+    router.kill_worker(0).unwrap();
+    let (mut oks, mut errs) = (0usize, 0usize);
+    for _ in 0..16 {
+        let (rtx, rrx) = mpsc::channel();
+        router
+            .sender()
+            .send(Request::Score { tokens: vec![5, 6, 7], resp: rtx })
+            .unwrap();
+        match rrx.recv_timeout(Duration::from_secs(60)) {
+            Ok(Ok(score)) => {
+                assert!(score.is_finite());
+                oks += 1;
+            }
+            // explicit error reply from the router/worker
+            Ok(Err(_)) => errs += 1,
+            // request died with the crashing shard: its reply sender
+            // dropped — an immediate error at the client, not a hang
+            Err(RecvTimeoutError::Disconnected) => errs += 1,
+            Err(RecvTimeoutError::Timeout) => {
+                panic!("request hung after worker death (oks={oks} errs={errs})")
+            }
+        }
+    }
+    assert!(oks > 0, "the surviving shard must keep serving (errs={errs})");
+
+    // the death is observed (the dispatcher marks the shard on its
+    // first failed send; give the unwinding thread a moment)
+    let mut dead = router.dead_workers();
+    for _ in 0..200 {
+        if dead.contains(&0) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        dead = router.dead_workers();
+    }
+    assert_eq!(dead, vec![0], "crashed shard must be marked dead");
+
+    // fleet still answers: scoring and stats gather skip the corpse
+    let score = router.score(vec![5, 6, 7]).unwrap();
+    assert!(score.is_finite());
+    let fleet = router.stats().unwrap();
+    assert_eq!(fleet.workers, 1, "only the live shard answers the gather");
+    assert!(fleet.requests() > 0);
+    let per = router.worker_stats();
+    assert!(per[0].is_none(), "dead shard yields no snapshot");
+    assert!(per[1].is_some());
+    // shutdown drains the survivor but surfaces the crashed shard
+    let err = format!("{:#}", router.shutdown().unwrap_err());
+    assert!(err.contains("worker 0") && err.contains("panicked"), "{err}");
+}
+
+/// A fleet whose workers all fail at startup (unknown arch) cannot
+/// pretend it served: scoring errors instead of hanging, and shutdown
+/// propagates the startup failure instead of exiting Ok.
+#[test]
+fn serve_worker_startup_failure_surfaces_in_shutdown() {
+    use dyad_repro::serve::{Router, ServeConfig};
+    let router = Router::start(ServeConfig {
+        arch: "no-such-arch".into(),
+        n_workers: 2,
+        ..ServeConfig::default()
+    });
+    assert!(router.score(vec![5, 6, 7]).is_err(), "dead-on-arrival fleet must error");
+    let err = format!("{:#}", router.shutdown().unwrap_err());
+    assert!(err.contains("worker"), "shutdown must name the failed shards: {err}");
+}
+
+/// With every shard dead, requests get an explicit error reply — the
+/// router never leaves a client waiting on a fleet of corpses.
+#[test]
+fn serve_all_workers_dead_is_an_error_not_a_hang() {
+    use dyad_repro::serve::{Request, Router, ServeConfig};
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    let router = Router::start(ServeConfig {
+        arch: "opt-mini".into(),
+        variant: "dyad_it".into(),
+        n_workers: 1,
+        ..ServeConfig::default()
+    });
+    router.score(vec![5, 6, 7]).unwrap();
+    router.kill_worker(0).unwrap();
+    // wait until the shard's death is observable
+    for _ in 0..200 {
+        if !router.dead_workers().is_empty() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(router.dead_workers(), vec![0]);
+    let (rtx, rrx) = mpsc::channel();
+    router
+        .sender()
+        .send(Request::Score { tokens: vec![5, 6, 7], resp: rtx })
+        .unwrap();
+    let reply = rrx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("explicit reply, not a hang");
+    let err = reply.expect_err("no live worker can score");
+    assert!(err.contains("no live serve workers"), "{err}");
+    let err = format!("{:#}", router.shutdown().unwrap_err());
+    assert!(err.contains("worker 0"), "{err}");
 }
 
 #[test]

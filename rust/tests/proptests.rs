@@ -11,6 +11,7 @@ use dyad_repro::dyad::{
     blockdiag_full, blocktrans_full, dense_matmul, dyad_backward, dyad_full, dyad_matmul,
     perm_vector, DyadDims, Variant,
 };
+use dyad_repro::serve::Batcher;
 use dyad_repro::testing::prop::check;
 use dyad_repro::util::json::Json;
 use dyad_repro::util::rng::Rng;
@@ -388,6 +389,85 @@ fn prop_json_roundtrip() {
         let v2 = Json::parse(&s1).map_err(|e| e.to_string())?;
         if v2 != v {
             return Err(format!("parse(serialize) != id for {s1}"));
+        }
+        Ok(())
+    });
+}
+
+/// Batcher invariants under random arrival/clock/flush schedules
+/// (the serving worker's accumulation discipline): pending never
+/// exceeds `max_batch` when full batches are flushed on arrival,
+/// `flush` returns exactly the number of arrivals since the last
+/// flush, window expiry is monotone in time (expired stays expired
+/// until flushed, with a zero wait budget), and expiry implies
+/// pending work. Time never goes backwards here — saturation under
+/// stale clocks is pinned by the direct unit tests in `batcher.rs`.
+#[test]
+fn prop_batcher_invariants() {
+    use std::time::{Duration, Instant};
+    check("batcher invariants", 80, |rng| {
+        let max_batch = rng.range(1, 9);
+        let window_ms = rng.range(0, 8) as u64;
+        let mut b = Batcher::new(max_batch, window_ms);
+        let mut now = Instant::now();
+        let mut since_flush = 0usize;
+        for step in 0..rng.range(1, 48) {
+            match rng.below(3) {
+                0 => {
+                    // arrival; flush immediately when full, like the worker
+                    let full = b.on_arrival(now);
+                    since_flush += 1;
+                    if b.pending() != since_flush {
+                        return Err(format!("step {step}: pending != arrivals"));
+                    }
+                    if b.pending() > max_batch {
+                        return Err(format!("step {step}: pending over max_batch"));
+                    }
+                    if full != (b.pending() >= max_batch) {
+                        return Err(format!("step {step}: full signal wrong"));
+                    }
+                    if full {
+                        if b.flush() != since_flush {
+                            return Err(format!("step {step}: flush count (full)"));
+                        }
+                        since_flush = 0;
+                    }
+                }
+                1 => {
+                    // clock advance: expiry must be monotone
+                    let expired_before = b.window_expired(now);
+                    now += Duration::from_millis(rng.range(0, 6) as u64);
+                    let expired_now = b.window_expired(now);
+                    if expired_before && !expired_now {
+                        return Err(format!("step {step}: expiry not monotone"));
+                    }
+                    if expired_now {
+                        if b.pending() == 0 {
+                            return Err(format!("step {step}: expired while empty"));
+                        }
+                        if b.wait_budget(now) != Duration::ZERO {
+                            return Err(format!("step {step}: budget after expiry"));
+                        }
+                        if b.flush() != since_flush {
+                            return Err(format!("step {step}: flush count (window)"));
+                        }
+                        since_flush = 0;
+                    }
+                }
+                _ => {
+                    // spurious flush (empty flushes are no-ops)
+                    if b.flush() != since_flush {
+                        return Err(format!("step {step}: flush count (manual)"));
+                    }
+                    since_flush = 0;
+                    if b.pending() != 0 {
+                        return Err(format!("step {step}: pending after flush"));
+                    }
+                    if b.window_expired(now + Duration::from_secs(60)) {
+                        return Err(format!("step {step}: empty batcher expired"));
+                    }
+                }
+            }
         }
         Ok(())
     });

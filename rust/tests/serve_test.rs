@@ -1,12 +1,14 @@
 //! Serving-path integration: full client→batcher→backend→response loop
 //! on the native backend (no artifacts needed), plus concurrency,
-//! shutdown semantics and batching edge cases.
+//! shutdown semantics, batching edge cases, and the sharded-router
+//! contracts (bitwise parity with a single worker, stats conservation,
+//! graceful drain).
 
 use std::time::{Duration, Instant};
 
 use dyad_repro::data::dataset::{lengths_of, pad_batch};
-use dyad_repro::data::{Grammar, Tokenizer};
-use dyad_repro::serve::{Batcher, Request, ServeConfig, ServerHandle};
+use dyad_repro::data::{sample_sentences, Grammar, Tokenizer};
+use dyad_repro::serve::{Batcher, DispatchPolicy, Request, Router, ServeConfig, ServerHandle};
 use dyad_repro::util::rng::Rng;
 
 fn cfg() -> ServeConfig {
@@ -186,4 +188,172 @@ fn batcher_flush_resets_window() {
     b.on_arrival(t1);
     assert!(!b.window_expired(t1 + Duration::from_millis(4)));
     assert!(b.window_expired(t1 + Duration::from_millis(6)));
+}
+
+// ---------------------------------------------------------------------
+// Sharded router: parity, stats conservation, drain, soak
+// ---------------------------------------------------------------------
+
+/// Scoring through 4 shards is **bitwise** identical to 1: every
+/// worker seeds the same resident weights, each sequential request is
+/// its own singleton batch, and the kernels are thread-deterministic —
+/// so sharding must not move a single bit of any score.
+#[test]
+fn router_sharded_matches_single_worker_bitwise() {
+    let sents = sample_sentences(12, 1);
+    let score_all = |workers: usize| -> Vec<u64> {
+        let router = Router::start(ServeConfig { n_workers: workers, ..cfg() });
+        let bits = sents
+            .iter()
+            .map(|t| router.score(t.clone()).unwrap().to_bits())
+            .collect();
+        router.shutdown().unwrap();
+        bits
+    };
+    assert_eq!(
+        score_all(1),
+        score_all(4),
+        "sharded scoring must be bitwise identical to single-worker"
+    );
+}
+
+/// Fleet stats are merged from per-worker snapshots and conserve the
+/// request counts exactly; strict round-robin over 3 live workers
+/// spreads 24 requests as 8/8/8.
+#[test]
+fn router_fleet_stats_conserve_worker_counts() {
+    let router = Router::start(ServeConfig {
+        n_workers: 3,
+        dispatch: DispatchPolicy::RoundRobin,
+        ..cfg()
+    });
+    let sents = sample_sentences(24, 2);
+    std::thread::scope(|scope| {
+        for chunk in sents.chunks(8) {
+            let tx = router.sender();
+            scope.spawn(move || {
+                for toks in chunk {
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                        .unwrap();
+                    rrx.recv().unwrap().unwrap();
+                }
+            });
+        }
+    });
+    let fleet = router.stats().unwrap();
+    assert_eq!(fleet.requests(), 24);
+    assert_eq!(fleet.workers, 3, "all three shards answered the gather");
+    let per = router.worker_stats();
+    assert_eq!(per.len(), 3);
+    let shard_counts: Vec<usize> =
+        per.iter().map(|w| w.as_ref().expect("worker alive").requests()).collect();
+    assert_eq!(
+        shard_counts.iter().sum::<usize>(),
+        fleet.requests(),
+        "per-worker requests must sum to the fleet view"
+    );
+    assert_eq!(shard_counts, vec![8, 8, 8], "round-robin must balance exactly");
+    assert!(router.dead_workers().is_empty());
+    router.shutdown().unwrap();
+}
+
+/// Least-pending dispatch serves every request and conserves stats
+/// (balance itself is load-dependent, so only the contracts are
+/// pinned).
+#[test]
+fn router_least_pending_serves_all() {
+    let router = Router::start(ServeConfig {
+        n_workers: 2,
+        dispatch: DispatchPolicy::LeastPending,
+        ..cfg()
+    });
+    for toks in sample_sentences(10, 3) {
+        let score = router.score(toks).unwrap();
+        assert!(score.is_finite() && score < 0.0);
+    }
+    let fleet = router.stats().unwrap();
+    assert_eq!(fleet.requests(), 10);
+    let per = router.worker_stats();
+    let shard_sum: usize = per.iter().flatten().map(|s| s.requests()).sum();
+    assert_eq!(shard_sum, 10);
+    router.shutdown().unwrap();
+}
+
+/// Graceful drain: requests accepted before `shutdown` all get real
+/// replies — the dispatcher forwards them before the workers see
+/// Shutdown, and the workers flush their final batches on exit.
+#[test]
+fn router_shutdown_drains_inflight_requests() {
+    let router = Router::start(ServeConfig { n_workers: 2, ..cfg() });
+    let tx = router.sender();
+    let mut replies = Vec::new();
+    for toks in sample_sentences(8, 4) {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(Request::Score { tokens: toks, resp: rtx }).unwrap();
+        replies.push(rrx);
+    }
+    router.shutdown().unwrap();
+    for rrx in replies {
+        let score = rrx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("reply drained before shutdown")
+            .expect("score ok");
+        assert!(score.is_finite());
+    }
+}
+
+/// A one-worker fleet behaves like the plain `ServerHandle` path:
+/// generation and scoring share the router.
+#[test]
+fn router_single_worker_generates() {
+    let router = Router::start(ServeConfig { n_workers: 1, ..cfg() });
+    let out = router.generate(vec![5, 6, 7], 4).unwrap();
+    assert!(!out.is_empty() && out.len() <= 4);
+    assert_eq!(router.n_workers(), 1);
+    router.shutdown().unwrap();
+}
+
+/// Soak (CI serve-soak job runs this under `timeout`): 4 shards, 8
+/// concurrent clients, every reply received and finite, fleet stats
+/// conserve the shard counts, no shard dies.
+#[test]
+#[ignore = "soak: run explicitly (cargo test -- --ignored soak)"]
+fn soak_sharded_serve_conserves_all_replies() {
+    let router = Router::start(ServeConfig {
+        n_workers: 4,
+        dispatch: DispatchPolicy::LeastPending,
+        max_batch: 8,
+        window_ms: 2,
+        ..cfg()
+    });
+    let sents = sample_sentences(256, 5);
+    let got = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for chunk in sents.chunks(32) {
+            let tx = router.sender();
+            let got = &got;
+            scope.spawn(move || {
+                for toks in chunk {
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                        .unwrap();
+                    let score = rrx
+                        .recv_timeout(Duration::from_secs(60))
+                        .expect("soak reply")
+                        .expect("soak score ok");
+                    assert!(score.is_finite());
+                    got.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(got.load(std::sync::atomic::Ordering::Relaxed), 256);
+    let fleet = router.stats().unwrap();
+    assert_eq!(fleet.requests(), 256, "every request must be counted");
+    let per = router.worker_stats();
+    let shard_sum: usize = per.iter().flatten().map(|s| s.requests()).sum();
+    assert_eq!(shard_sum, 256, "shard stats must conserve the fleet total");
+    assert!(router.dead_workers().is_empty(), "no shard may die under load");
+    router.shutdown().unwrap();
 }
