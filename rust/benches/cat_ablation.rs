@@ -1,27 +1,71 @@
 //! Paper §3.4.3 (*-CAT experiments): DYAD-IT vs DYAD-IT-CAT ff time.
-//! The -CAT fusion concatenates BLOCKDIAG and BLOCKTRANS into a single
-//! batched matmul, removing the sequential two-component overhead.
+//! The -CAT fusion executes BLOCKDIAG and BLOCKTRANS in one
+//! concatenated single-pass schedule (`dyad::kernel::dyad_fused_cat` +
+//! `dyad_cat_backward_{dx,dw}` on the native backend), removing the
+//! sequential two-component overhead.
 //!
 //! Paper reference: OPT-125m ff fwd 3.90 -> 3.27 ms (~16% faster);
 //! OPT-350m 7.92 -> 5.46 ms (~45%). Expect IT-CAT <= IT here, with the
 //! gap growing at the wider geometry.
+//!
+//! Results are persisted as `BENCH_cat.json` (`BENCH_JSON_DIR` to
+//! redirect); `BENCH_QUICK=1` shrinks to one geometry with fewer reps
+//! so CI can assert the run + JSON contract without caring about
+//! absolute timings.
 
-use dyad_repro::bench_support::{backend_from_env, ff_table, print_ff_table, BenchOpts};
+use dyad_repro::bench_support::{
+    backend_from_env, ff_table, print_ff_table, quick_mode, write_bench_json, BenchOpts,
+};
+use dyad_repro::util::json::{num, obj, s, Json};
 
 fn main() {
+    let quick = quick_mode();
     let backend = backend_from_env().expect("open backend");
-    let opts = BenchOpts { warmup: 2, reps: 8, seed: 4 };
-    for geo in ["opt125m-ff", "opt350m-ff"] {
-        let rows = ff_table(backend.as_ref(), geo, &["dense", "dyad_it", "dyad_it_cat"], opts)
+    let opts = if quick {
+        BenchOpts { warmup: 1, reps: 2, seed: 4 }
+    } else {
+        BenchOpts { warmup: 2, reps: 8, seed: 4 }
+    };
+    let geometries: &[&str] =
+        if quick { &["opt125m-ff"] } else { &["opt125m-ff", "opt350m-ff"] };
+    let mut rows: Vec<Json> = Vec::new();
+    for &geo in geometries {
+        let table = ff_table(backend.as_ref(), geo, &["dense", "dyad_it", "dyad_it_cat"], opts)
             .expect("bench");
-        print_ff_table(&format!("§3.4.3 -CAT ablation, {geo}"), &rows);
-        let it = rows.iter().find(|r| r.variant == "dyad_it").unwrap();
-        let cat = rows.iter().find(|r| r.variant == "dyad_it_cat").unwrap();
+        print_ff_table(&format!("§3.4.3 -CAT ablation, {geo}"), &table);
+        let dense = table.iter().find(|r| r.variant == "dense").unwrap();
+        let it = table.iter().find(|r| r.variant == "dyad_it").unwrap();
+        let cat = table.iter().find(|r| r.variant == "dyad_it_cat").unwrap();
+        let fwd_delta_pct = 100.0 * (cat.fwd_ms - it.fwd_ms) / it.fwd_ms;
+        let total_delta_pct = 100.0 * (cat.total_ms - it.total_ms) / it.total_ms;
         println!(
-            "CAT vs plain IT at {geo}: fwd {:.3} -> {:.3} ms ({:+.1}%)",
-            it.fwd_ms,
-            cat.fwd_ms,
-            100.0 * (cat.fwd_ms - it.fwd_ms) / it.fwd_ms
+            "CAT vs plain IT at {geo}: fwd {:.3} -> {:.3} ms ({fwd_delta_pct:+.1}%), \
+             total {:.3} -> {:.3} ms ({total_delta_pct:+.1}%)",
+            it.fwd_ms, cat.fwd_ms, it.total_ms, cat.total_ms
         );
+        rows.push(obj(vec![
+            ("geometry", s(geo)),
+            ("dense_fwd_ms", num(dense.fwd_ms)),
+            ("dense_total_ms", num(dense.total_ms)),
+            ("it_fwd_ms", num(it.fwd_ms)),
+            ("it_total_ms", num(it.total_ms)),
+            ("cat_fwd_ms", num(cat.fwd_ms)),
+            ("cat_total_ms", num(cat.total_ms)),
+            ("cat_vs_it_fwd_pct", num(fwd_delta_pct)),
+            ("cat_vs_it_total_pct", num(total_delta_pct)),
+        ]));
+    }
+    let doc = obj(vec![
+        ("bench", s("cat_ablation")),
+        ("backend", s(&backend.platform())),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("cat", &doc) {
+        Ok(path) => println!("\nbench json: {}", path.display()),
+        Err(e) => {
+            eprintln!("error: could not write BENCH_cat.json: {e:#}");
+            std::process::exit(1);
+        }
     }
 }

@@ -15,7 +15,10 @@ use dyad_repro::bench_support::{quick_mode, write_bench_json};
 use dyad_repro::dyad::kernel::{
     dyad_backward_dw, dyad_linear_backward_dx, matmul_fast, num_threads, transpose,
 };
-use dyad_repro::dyad::{dyad_full, project_dyad_grads, DyadDims, Variant};
+use dyad_repro::dyad::{
+    dyad_full, dyad_linear_backward_dx_prec, project_dyad_grads, DyadDims, Variant,
+};
+use dyad_repro::tensor::Precision;
 use dyad_repro::util::json::{num, obj, s, Json};
 use dyad_repro::util::rng::Rng;
 use dyad_repro::util::stats::Summary;
@@ -83,6 +86,18 @@ fn main() {
             std::hint::black_box(dyad_backward_dw(&x, &dy, dims, variant, t));
             std::hint::black_box(dyad_linear_backward_dx(&wl, &wu, &dy, dims, variant, t));
         });
+        // quantized weight-stream arms: dw is always f32 (no weight
+        // stream), dx streams the transposed blocks at bf16/i8
+        let structured_at = |precision: Precision| {
+            time_ms(reps, || {
+                std::hint::black_box(dyad_backward_dw(&x, &dy, dims, variant, t));
+                std::hint::black_box(dyad_linear_backward_dx_prec(
+                    &wl, &wu, &dy, dims, variant, t, precision,
+                ));
+            })
+        };
+        let structured_bf16 = structured_at(Precision::Bf16);
+        let structured_i8 = structured_at(Precision::I8);
         let vs_dense = dense.p50 / structured.p50;
         let vs_mat = materialised.p50 / structured.p50;
         println!(
@@ -94,6 +109,8 @@ fn main() {
             ("dense_ms", num(dense.p50)),
             ("materialised_ms", num(materialised.p50)),
             ("structured_ms", num(structured.p50)),
+            ("structured_bf16_ms", num(structured_bf16.p50)),
+            ("structured_i8_ms", num(structured_i8.p50)),
             ("structured_vs_dense", num(vs_dense)),
             ("structured_vs_materialised", num(vs_mat)),
         ]);

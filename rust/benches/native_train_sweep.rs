@@ -19,7 +19,7 @@ use dyad_repro::dyad::kernel::num_threads;
 use dyad_repro::runtime::catalog::{self, model_param_specs};
 use dyad_repro::runtime::native::transformer::train_microbatch;
 use dyad_repro::runtime::{ArchCfg, VariantSpec};
-use dyad_repro::tensor::Tensor;
+use dyad_repro::tensor::{Precision, Tensor};
 use dyad_repro::util::json::{num, obj, s, Json};
 use dyad_repro::util::rng::Rng;
 use dyad_repro::util::stats::Summary;
@@ -37,11 +37,19 @@ fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> Summary {
     Summary::of(&samples)
 }
 
-/// Median ms per full train step for one (arch, variant).
-fn step_ms(arch: &ArchCfg, vname: &str, b: usize, s: usize, reps: usize) -> f64 {
+/// Median ms per full train step for one (arch, variant, precision).
+fn step_ms(
+    arch: &ArchCfg,
+    vname: &str,
+    precision: Precision,
+    b: usize,
+    s: usize,
+    reps: usize,
+) -> f64 {
     let variants = catalog::variants();
     let vcfg = &variants[vname];
-    let var = VariantSpec::resolve(vcfg).expect("variant");
+    let mut var = VariantSpec::resolve(vcfg).expect("variant");
+    var.precision = precision;
     let specs = model_param_specs(arch, vcfg);
     let mut rng = Rng::new(17);
     let names: Vec<String> = specs.iter().map(|(n, _, _)| n.clone()).collect();
@@ -95,14 +103,19 @@ fn main() {
             seq: s,
             parallel_residual: false,
         };
-        let dense = step_ms(&arch, "dense", b, s, reps);
-        let dyad = step_ms(&arch, "dyad_it", b, s, reps);
+        let dense = step_ms(&arch, "dense", Precision::F32, b, s, reps);
+        let dyad = step_ms(&arch, "dyad_it", Precision::F32, b, s, reps);
+        // quantized weight-stream arms (fwd + dx at bf16/i8, dw f32)
+        let dyad_bf16 = step_ms(&arch, "dyad_it", Precision::Bf16, b, s, reps);
+        let dyad_i8 = step_ms(&arch, "dyad_it", Precision::I8, b, s, reps);
         let ratio = dense / dyad;
         println!("{:<8} {:>12.2} {:>12.2} {:>11.2}x", w, dense, dyad, ratio);
         let row = obj(vec![
             ("width", num(w as f64)),
             ("dense_ms", num(dense)),
             ("dyad_ms", num(dyad)),
+            ("dyad_bf16_ms", num(dyad_bf16)),
+            ("dyad_i8_ms", num(dyad_i8)),
             ("dyad_vs_dense", num(ratio)),
         ]);
         println!("{}", row.to_string());

@@ -12,6 +12,9 @@ use crate::util::json::{num, obj, s, Json};
 pub struct TrainConfig {
     pub arch: String,
     pub variant: String,
+    /// Weight-stream precision for the swap-site linears on the native
+    /// backend (`f32` | `bf16` | `i8`); validated at parse time.
+    pub precision: String,
     /// Total optimizer steps (inner microbatch steps count individually).
     pub steps: usize,
     pub lr: f64,
@@ -33,6 +36,7 @@ impl Default for TrainConfig {
         TrainConfig {
             arch: "opt-mini".into(),
             variant: "dyad_it".into(),
+            precision: "f32".into(),
             steps: 300,
             lr: 1e-3,
             warmup_steps: 30,
@@ -57,6 +61,10 @@ impl TrainConfig {
             // (opt125m -> opt-mini, dyad -> dyad_it, ...)
             arch: canonical_arch(&args.str_or("arch", &d.arch)).to_string(),
             variant: canonical_variant(&args.str_or("variant", &d.variant)).to_string(),
+            precision: {
+                let p = args.str_or("precision", &d.precision);
+                crate::tensor::Precision::from_str(&p)?.as_str().to_string()
+            },
             steps: args.usize_or("steps", d.steps)?,
             lr: args.f64_or("lr", d.lr)?,
             warmup_steps: args.usize_or("warmup", d.warmup_steps)?,
@@ -86,6 +94,7 @@ impl TrainConfig {
         obj(vec![
             ("arch", s(&self.arch)),
             ("variant", s(&self.variant)),
+            ("precision", s(&self.precision)),
             ("steps", num(self.steps as f64)),
             ("lr", num(self.lr)),
             ("warmup_steps", num(self.warmup_steps as f64)),
@@ -117,6 +126,17 @@ mod tests {
         assert_eq!(c.steps, 50);
         assert_eq!(c.lr, 0.002);
         assert_eq!(c.variant, "dyad_it"); // default kept
+        assert_eq!(c.precision, "f32"); // default kept
+    }
+
+    #[test]
+    fn precision_parses_and_rejects() {
+        let ok = Args::parse(["--precision", "int8"].iter().map(|s| s.to_string())).unwrap();
+        let c = TrainConfig::from_args(&ok).unwrap();
+        assert_eq!(c.precision, "i8"); // canonicalised alias
+        assert_eq!(c.to_json().get("precision").unwrap().as_str().unwrap(), "i8");
+        let bad = Args::parse(["--precision", "fp4"].iter().map(|s| s.to_string())).unwrap();
+        assert!(TrainConfig::from_args(&bad).is_err());
     }
 
     #[test]

@@ -21,10 +21,54 @@
 //! Every output row is produced by exactly one thread in a fixed
 //! sequential accumulation order, so results are bitwise identical for
 //! any thread count (asserted by the determinism property tests).
+//!
+//! # Microkernel length contract
+//!
+//! Every microkernel ([`axpy`], [`axpy2`], [`dot`], and the quantized
+//! `dot_bf16`/`axpy_bf16`/`dot_i8`/`axpy_i8` in [`super::quant`])
+//! requires all operand slices to have equal length. The contract is
+//! `debug_assert`ed uniformly: a mismatch is a shape bug upstream and
+//! fails loudly in debug builds; release builds clamp to the shortest
+//! slice rather than reading out of bounds.
+//!
+//! # -CAT fused schedule (paper §3.4.3)
+//!
+//! [`Variant::ItCat`] computes exactly the IT operator but through a
+//! concatenated schedule: one gather builds a block-grouped panel
+//! `[x block i | IT-permuted view of block i]`, after which *both*
+//! components of every output row (forward) or weight row (dw) stream
+//! one contiguous slice — the strided Eq-9 reads are paid once per
+//! call instead of once per row. The IT `dx` pass is already a
+//! contiguous single pass (its output permutation is the identity),
+//! so -CAT reuses it unchanged ([`dyad_cat_backward_dx`]).
+//!
+//! # Precision
+//!
+//! The `*_prec` entry points stream the *weight* operand in
+//! [`Precision::Bf16`] or [`Precision::I8`] (per-block-row symmetric
+//! scale, dequantised in registers; see [`super::quant`]) while
+//! activations, partial sums and the stored master weights stay f32.
+//! `Precision::F32` routes to the exact pre-existing kernels — it is
+//! bitwise identical to not using the `_prec` APIs at all. The weight
+//! gradient (`dw`) has no weight-stream operand and is always f32.
+//!
+//! # SIMD
+//!
+//! With `--features simd` on x86_64, [`axpy`]/[`axpy2`]/[`dot`]
+//! dispatch to explicit AVX2+FMA lanes when the host supports them
+//! (runtime-detected once). FMA contracts the multiply-add, so simd
+//! results differ from the scalar path in the last bits — the
+//! determinism guarantee (same kernel, same thread-count-independent
+//! bits) still holds; only *cross*-schedule bitwise comparisons are
+//! scalar-build-only.
 
 use std::sync::OnceLock;
 
 use super::layout::{DyadDims, Variant};
+use super::quant::{
+    axpy_bf16, axpy_i8, bf16_to_f32, dot_bf16, dot_i8, encode_bf16, quantize_rows_i8,
+};
+use crate::tensor::Precision;
 
 /// Worker count: `DYAD_NUM_THREADS` env override, else the machine's
 /// available parallelism, else 1.
@@ -47,11 +91,112 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// Explicit AVX2+FMA microkernels behind `--features simd`. Each is
+/// `#[target_feature]`-compiled and only ever called after
+/// [`simd::enabled`] has verified the host supports both ISA
+/// extensions, so the `unsafe` is the intrinsic calls alone — slices
+/// are still bounds-managed by length like the scalar paths.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    use std::arch::x86_64::*;
+    use std::sync::OnceLock;
+
+    /// Runtime gate, resolved once: AVX2 and FMA both present.
+    pub fn enabled() -> bool {
+        static CACHED: OnceLock<bool> = OnceLock::new();
+        *CACHED
+            .get_or_init(|| is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"))
+    }
+
+    /// Horizontal sum of 8 lanes (extract/add halves, then the
+    /// movehdup/movehl shuffle ladder down to one lane).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps::<1>(v);
+            let q = _mm_add_ps(lo, hi);
+            let shuf = _mm_movehdup_ps(q);
+            let sums = _mm_add_ps(q, shuf);
+            let hi2 = _mm_movehl_ps(shuf, sums);
+            _mm_cvtss_f32(_mm_add_ss(sums, hi2))
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut i = 0;
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            while i + 8 <= n {
+                let av = _mm256_loadu_ps(a.as_ptr().add(i));
+                let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+                acc = _mm256_fmadd_ps(av, bv, acc);
+                i += 8;
+            }
+            let mut s = hsum(acc);
+            while i < n {
+                s += a[i] * b[i];
+                i += 1;
+            }
+            s
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len().min(x.len());
+        let mut i = 0;
+        unsafe {
+            let av = _mm256_set1_ps(a);
+            while i + 8 <= n {
+                let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+                let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(av, xv, ov));
+                i += 8;
+            }
+        }
+        while i < n {
+            out[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy2(out: &mut [f32], a: f32, x: &[f32], b: f32, z: &[f32]) {
+        let n = out.len().min(x.len()).min(z.len());
+        let mut i = 0;
+        unsafe {
+            let av = _mm256_set1_ps(a);
+            let bv = _mm256_set1_ps(b);
+            while i + 8 <= n {
+                let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+                let zv = _mm256_loadu_ps(z.as_ptr().add(i));
+                let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+                let t = _mm256_fmadd_ps(av, xv, ov);
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(bv, zv, t));
+                i += 8;
+            }
+        }
+        while i < n {
+            out[i] += a * x[i] + b * z[i];
+            i += 1;
+        }
+    }
+}
+
 /// `out[j] += a * x[j]` over one row, 8-wide unrolled so the
 /// autovectoriser emits full-width lanes.
 #[inline]
 pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
     debug_assert_eq!(out.len(), x.len(), "axpy: length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::enabled() {
+        // SAFETY: enabled() checked AVX2+FMA at runtime
+        return unsafe { simd::axpy(out, a, x) };
+    }
     let n = out.len().min(x.len());
     let mut oc = out[..n].chunks_exact_mut(8);
     let mut xc = x[..n].chunks_exact(8);
@@ -72,6 +217,11 @@ pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
 pub fn axpy2(out: &mut [f32], a: f32, x: &[f32], b: f32, z: &[f32]) {
     debug_assert_eq!(out.len(), x.len(), "axpy2: x length mismatch");
     debug_assert_eq!(out.len(), z.len(), "axpy2: z length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::enabled() {
+        // SAFETY: enabled() checked AVX2+FMA at runtime
+        return unsafe { simd::axpy2(out, a, x, b, z) };
+    }
     let n = out.len().min(x.len()).min(z.len());
     let mut oc = out[..n].chunks_exact_mut(8);
     let mut xc = x[..n].chunks_exact(8);
@@ -104,6 +254,11 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         a.len(),
         b.len()
     );
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::enabled() {
+        // SAFETY: enabled() checked AVX2+FMA at runtime
+        return unsafe { simd::dot(a, b) };
+    }
     let n = a.len().min(b.len());
     let mut acc = [0.0f32; 8];
     let mut ac = a[..n].chunks_exact(8);
@@ -119,6 +274,116 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         s += x * y;
     }
     s
+}
+
+/// A weight matrix viewed as fixed-length rows, at some storage
+/// precision. The fused kernels are generic over this, monomorphised
+/// per precision: [`F32Rows`] delegates straight to the f32
+/// microkernels (bitwise identical to the pre-precision code), while
+/// [`Bf16Rows`]/[`I8Rows`] decode in registers ([`super::quant`]).
+trait WeightRows: Sync {
+    /// Single entry `w[r, j]`, dequantised.
+    fn at(&self, r: usize, j: usize) -> f32;
+    /// `dot(w[r, :], x)`.
+    fn dot_row(&self, r: usize, x: &[f32]) -> f32;
+    /// `out[j] += a * w[r, j]`.
+    fn axpy_row(&self, out: &mut [f32], a: f32, r: usize);
+}
+
+/// Borrowed f32 rows — the exact existing kernels.
+struct F32Rows<'a> {
+    w: &'a [f32],
+    row_len: usize,
+}
+
+impl<'a> F32Rows<'a> {
+    fn new(w: &'a [f32], row_len: usize) -> Self {
+        debug_assert!(row_len > 0 && w.len() % row_len == 0);
+        F32Rows { w, row_len }
+    }
+}
+
+impl WeightRows for F32Rows<'_> {
+    #[inline]
+    fn at(&self, r: usize, j: usize) -> f32 {
+        self.w[r * self.row_len + j]
+    }
+
+    #[inline]
+    fn dot_row(&self, r: usize, x: &[f32]) -> f32 {
+        dot(&self.w[r * self.row_len..(r + 1) * self.row_len], x)
+    }
+
+    #[inline]
+    fn axpy_row(&self, out: &mut [f32], a: f32, r: usize) {
+        axpy(out, a, &self.w[r * self.row_len..(r + 1) * self.row_len]);
+    }
+}
+
+/// bf16-truncated rows (encoded once per kernel call).
+struct Bf16Rows {
+    w: Vec<u16>,
+    row_len: usize,
+}
+
+impl Bf16Rows {
+    fn encode(w: &[f32], row_len: usize) -> Self {
+        debug_assert!(row_len > 0 && w.len() % row_len == 0);
+        Bf16Rows { w: encode_bf16(w), row_len }
+    }
+}
+
+impl WeightRows for Bf16Rows {
+    #[inline]
+    fn at(&self, r: usize, j: usize) -> f32 {
+        bf16_to_f32(self.w[r * self.row_len + j])
+    }
+
+    #[inline]
+    fn dot_row(&self, r: usize, x: &[f32]) -> f32 {
+        dot_bf16(&self.w[r * self.row_len..(r + 1) * self.row_len], x)
+    }
+
+    #[inline]
+    fn axpy_row(&self, out: &mut [f32], a: f32, r: usize) {
+        axpy_bf16(out, a, &self.w[r * self.row_len..(r + 1) * self.row_len]);
+    }
+}
+
+/// Per-row symmetric int8 rows; the row scale is applied exactly once
+/// per dot/axpy, outside the accumulation loop.
+struct I8Rows {
+    q: Vec<i8>,
+    scale: Vec<f32>,
+    row_len: usize,
+}
+
+impl I8Rows {
+    fn encode(w: &[f32], row_len: usize) -> Self {
+        let (q, scale) = quantize_rows_i8(w, row_len);
+        I8Rows { q, scale, row_len }
+    }
+}
+
+impl WeightRows for I8Rows {
+    #[inline]
+    fn at(&self, r: usize, j: usize) -> f32 {
+        self.q[r * self.row_len + j] as f32 * self.scale[r]
+    }
+
+    #[inline]
+    fn dot_row(&self, r: usize, x: &[f32]) -> f32 {
+        dot_i8(&self.q[r * self.row_len..(r + 1) * self.row_len], x) * self.scale[r]
+    }
+
+    #[inline]
+    fn axpy_row(&self, out: &mut [f32], a: f32, r: usize) {
+        axpy_i8(
+            out,
+            a * self.scale[r],
+            &self.q[r * self.row_len..(r + 1) * self.row_len],
+        );
+    }
 }
 
 /// Run `f(row_index, row_slice)` for every `row_len`-sized row of
@@ -295,6 +560,131 @@ pub fn dense_linear_with_threads(
     y
 }
 
+/// [`dense_linear`] with the weight matrix streamed at a chosen
+/// precision (quantised per output row). `F32` routes to the exact
+/// existing kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_linear_prec(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    t: usize,
+    f_in: usize,
+    f_out: usize,
+    prec: Precision,
+) -> Vec<f32> {
+    dense_linear_prec_with_threads(x, w, bias, t, f_in, f_out, prec, num_threads())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn dense_linear_prec_with_threads(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    t: usize,
+    f_in: usize,
+    f_out: usize,
+    prec: Precision,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), t * f_in);
+    assert_eq!(w.len(), f_out * f_in);
+    match prec {
+        Precision::F32 => dense_linear_with_threads(x, w, bias, t, f_in, f_out, threads),
+        Precision::Bf16 => {
+            let wm = Bf16Rows::encode(w, f_in);
+            dense_linear_generic(x, &wm, bias, t, f_in, f_out, threads)
+        }
+        Precision::I8 => {
+            let wm = I8Rows::encode(w, f_in);
+            dense_linear_generic(x, &wm, bias, t, f_in, f_out, threads)
+        }
+    }
+}
+
+/// Per-row `y[i, j] = dot(w[j, :], x[i, :]) (+ b[j])` — the
+/// [`matmul_bt`] schedule over generic weight rows.
+fn dense_linear_generic<W: WeightRows>(
+    x: &[f32],
+    wm: &W,
+    bias: Option<&[f32]>,
+    t: usize,
+    f_in: usize,
+    f_out: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; t * f_out];
+    parallel_rows(&mut y, f_out, threads, &|i, orow| {
+        let xrow = &x[i * f_in..(i + 1) * f_in];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = wm.dot_row(j, xrow);
+        }
+        if let Some(b) = bias {
+            for (o, &bv) in orow.iter_mut().zip(b) {
+                *o += bv;
+            }
+        }
+    });
+    y
+}
+
+/// [`matmul_fast`] with the `b` operand streamed at a chosen
+/// precision (quantised per row of `b`) — the dense backward's
+/// `dx = dy @ W` at reduced weight precision. `F32` routes to the
+/// exact existing kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_fast_prec_with_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    prec: Precision,
+    threads: usize,
+) -> Vec<f32> {
+    match prec {
+        Precision::F32 => matmul_fast_with_threads(a, b, m, k, n, threads),
+        Precision::Bf16 => {
+            assert_eq!(a.len(), m * k);
+            assert_eq!(b.len(), k * n);
+            let bm = Bf16Rows::encode(b, n);
+            matmul_rows_generic(a, &bm, m, k, n, threads)
+        }
+        Precision::I8 => {
+            assert_eq!(a.len(), m * k);
+            assert_eq!(b.len(), k * n);
+            let bm = I8Rows::encode(b, n);
+            matmul_rows_generic(a, &bm, m, k, n, threads)
+        }
+    }
+}
+
+/// `(m, k) x (k, n)` with generic rows of the right operand; same
+/// per-row accumulation order (`p` ascending, zero-skip) as
+/// [`matmul_fast`].
+fn matmul_rows_generic<W: WeightRows>(
+    a: &[f32],
+    bm: &W,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    parallel_rows(&mut out, n, threads, &|i, orow| {
+        let arow = &a[i * k..(i + 1) * k];
+        for (p, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                bm.axpy_row(orow, av, p);
+            }
+        }
+    });
+    out
+}
+
 /// Fused DYAD forward (paper Eqs 3-10) on column-major activations:
 /// `x (f_in, nb)` -> `y (f_out, nb)`, `y = (W1 + W2) x (+ bias)`.
 ///
@@ -327,15 +717,125 @@ pub fn dyad_fused_with_threads(
     bias: Option<&[f32]>,
     threads: usize,
 ) -> Vec<f32> {
-    let DyadDims { n_dyad, n_in, n_out } = dims;
+    assert_fused_shapes(wl, wu, x, dims, nb, bias);
+    let w1m = F32Rows::new(wl, dims.n_in);
+    let w2m = F32Rows::new(wu, dims.n_in);
+    dyad_fused_generic(&w1m, &w2m, x, dims, variant, nb, bias, threads)
+}
+
+/// Fused DYAD forward at a chosen weight-stream precision. `F32`
+/// routes to [`dyad_fused_with_threads`] unchanged (bitwise
+/// identical); `Bf16`/`I8` encode the component rows once per call
+/// and dequantise in registers.
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_fused_prec(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) -> Vec<f32> {
+    dyad_fused_prec_with_threads(wl, wu, x, dims, variant, nb, bias, prec, num_threads())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_fused_prec_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+    threads: usize,
+) -> Vec<f32> {
+    match prec {
+        Precision::F32 => dyad_fused_with_threads(wl, wu, x, dims, variant, nb, bias, threads),
+        Precision::Bf16 => {
+            assert_fused_shapes(wl, wu, x, dims, nb, bias);
+            let w1m = Bf16Rows::encode(wl, dims.n_in);
+            let w2m = Bf16Rows::encode(wu, dims.n_in);
+            dyad_fused_generic(&w1m, &w2m, x, dims, variant, nb, bias, threads)
+        }
+        Precision::I8 => {
+            assert_fused_shapes(wl, wu, x, dims, nb, bias);
+            let w1m = I8Rows::encode(wl, dims.n_in);
+            let w2m = I8Rows::encode(wu, dims.n_in);
+            dyad_fused_generic(&w1m, &w2m, x, dims, variant, nb, bias, threads)
+        }
+    }
+}
+
+/// The §3.4.3 -CAT fused forward on f32 weights: identical algebra to
+/// IT, concatenated single-pass schedule. Equivalent to calling
+/// [`dyad_fused`] with [`Variant::ItCat`].
+pub fn dyad_fused_cat(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    nb: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    dyad_fused_cat_with_threads(wl, wu, x, dims, nb, bias, num_threads())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_fused_cat_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    nb: usize,
+    bias: Option<&[f32]>,
+    threads: usize,
+) -> Vec<f32> {
+    assert_fused_shapes(wl, wu, x, dims, nb, bias);
+    let w1m = F32Rows::new(wl, dims.n_in);
+    let w2m = F32Rows::new(wu, dims.n_in);
+    dyad_fused_cat_generic(&w1m, &w2m, x, dims, nb, bias, threads)
+}
+
+fn assert_fused_shapes(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    nb: usize,
+    bias: Option<&[f32]>,
+) {
     assert_eq!(wl.len(), dims.component_params());
     assert_eq!(wu.len(), dims.component_params());
     assert_eq!(x.len(), dims.f_in() * nb);
     if let Some(b) = bias {
         assert_eq!(b.len(), dims.f_out());
     }
-    let in_perm = matches!(variant, Variant::It | Variant::Dt);
-    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+}
+
+/// The fused forward schedule, generic over weight-row storage.
+/// [`Variant::ItCat`] detours to the concatenated -CAT schedule; every
+/// other variant runs the PR 2 row-wise schedule verbatim.
+#[allow(clippy::too_many_arguments)]
+fn dyad_fused_generic<W1: WeightRows, W2: WeightRows>(
+    w1m: &W1,
+    w2m: &W2,
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    bias: Option<&[f32]>,
+    threads: usize,
+) -> Vec<f32> {
+    if variant.is_cat() {
+        return dyad_fused_cat_generic(w1m, w2m, x, dims, nb, bias, threads);
+    }
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    let in_perm = variant.in_perm();
+    let out_perm = variant.out_perm();
     let mut y = vec![0.0f32; dims.f_out() * nb];
     parallel_rows(&mut y, nb, threads, &|r, orow| {
         if let Some(b) = bias {
@@ -352,17 +852,16 @@ pub fn dyad_fused_with_threads(
         } else {
             (i1, o1)
         };
-        let w1 = &wl[(i1 * n_out + o1) * n_in..(i1 * n_out + o1 + 1) * n_in];
-        let w2 = &wu[(i2 * n_out + o2) * n_in..(i2 * n_out + o2 + 1) * n_in];
+        let (r1, r2) = (i1 * n_out + o1, i2 * n_out + o2);
         let base = i1 * n_in;
         if nb == 1 {
-            let mut s = dot(w1, &x[base..base + n_in]);
+            let mut s = w1m.dot_row(r1, &x[base..base + n_in]);
             if in_perm {
-                for (k, &wv) in w2.iter().enumerate() {
-                    s += wv * x[k * n_dyad + i2];
+                for k in 0..n_in {
+                    s += w2m.at(r2, k) * x[k * n_dyad + i2];
                 }
             } else {
-                s += dot(w2, &x[i2 * n_in..(i2 + 1) * n_in]);
+                s += w2m.dot_row(r2, &x[i2 * n_in..(i2 + 1) * n_in]);
             }
             orow[0] += s;
         } else {
@@ -371,10 +870,65 @@ pub fn dyad_fused_with_threads(
                 let src2 = if in_perm { k * n_dyad + i2 } else { i2 * n_in + k };
                 axpy2(
                     orow,
-                    w1[k],
+                    w1m.at(r1, k),
                     &x[src1 * nb..(src1 + 1) * nb],
-                    w2[k],
+                    w2m.at(r2, k),
                     &x[src2 * nb..(src2 + 1) * nb],
+                );
+            }
+        }
+    });
+    y
+}
+
+/// The -CAT forward: gather the block-grouped concatenated panel
+/// `xc[(2*f_in, nb)]` once — block i's segment is
+/// `[x rows i*n_in..(i+1)*n_in | permuted rows k*n_dyad + i]` — then
+/// every output row streams one contiguous `(2*n_in, nb)` slab. For
+/// `nb == 1` both half-rows reduce to plain contiguous dots (the
+/// serving-shaped win: no strided Eq-9 reads in the inner loop at
+/// all); for `nb > 1` the per-`k` axpy2 sources become adjacent
+/// panel rows, matching the IT schedule's values and order exactly
+/// (the parity tests pin this bitwise).
+fn dyad_fused_cat_generic<W1: WeightRows, W2: WeightRows>(
+    w1m: &W1,
+    w2m: &W2,
+    x: &[f32],
+    dims: DyadDims,
+    nb: usize,
+    bias: Option<&[f32]>,
+    threads: usize,
+) -> Vec<f32> {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    let two_n_in = 2 * n_in;
+    let mut xc = vec![0.0f32; 2 * dims.f_in() * nb];
+    parallel_rows(&mut xc, nb, threads, &|j, row| {
+        let (i, r) = (j / two_n_in, j % two_n_in);
+        let src = if r < n_in { i * n_in + r } else { (r - n_in) * n_dyad + i };
+        row.copy_from_slice(&x[src * nb..(src + 1) * nb]);
+    });
+    let mut y = vec![0.0f32; dims.f_out() * nb];
+    parallel_rows(&mut y, nb, threads, &|r, orow| {
+        if let Some(b) = bias {
+            orow.fill(b[r]);
+        }
+        // IT has no output permutation: both components read weight
+        // row r and block i1 = r / n_out of the gathered panel.
+        let i1 = r / n_out;
+        let base = i1 * two_n_in;
+        if nb == 1 {
+            let s = w1m.dot_row(r, &xc[base..base + n_in])
+                + w2m.dot_row(r, &xc[base + n_in..base + two_n_in]);
+            orow[0] += s;
+        } else {
+            for k in 0..n_in {
+                let src1 = base + k;
+                axpy2(
+                    orow,
+                    w1m.at(r, k),
+                    &xc[src1 * nb..(src1 + 1) * nb],
+                    w2m.at(r, k),
+                    &xc[(src1 + n_in) * nb..(src1 + n_in + 1) * nb],
                 );
             }
         }
@@ -411,6 +965,39 @@ pub fn dyad_linear_with_threads(
 ) -> Vec<f32> {
     let xc = transpose(x, t, dims.f_in());
     let yc = dyad_fused_with_threads(wl, wu, &xc, dims, variant, t, bias, threads);
+    transpose(&yc, dims.f_out(), t)
+}
+
+/// Row-major [`dyad_fused_prec_with_threads`].
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear_prec(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) -> Vec<f32> {
+    dyad_linear_prec_with_threads(wl, wu, x, dims, variant, t, bias, prec, num_threads())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear_prec_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+    threads: usize,
+) -> Vec<f32> {
+    let xc = transpose(x, t, dims.f_in());
+    let yc =
+        dyad_fused_prec_with_threads(wl, wu, &xc, dims, variant, t, bias, prec, threads);
     transpose(&yc, dims.f_out(), t)
 }
 
@@ -464,34 +1051,106 @@ pub fn dyad_backward_dx_with_threads(
     nb: usize,
     threads: usize,
 ) -> Vec<f32> {
-    let DyadDims { n_dyad, n_in, n_out } = dims;
+    dyad_backward_dx_prec_with_threads(wl, wu, dy, dims, variant, nb, Precision::F32, threads)
+}
+
+/// [`dyad_backward_dx`] with the transposed weight blocks streamed at
+/// a chosen precision (quantised *after* the block transpose, i.e.
+/// per transposed block row — each row is one input feature's slice).
+/// `F32` is bitwise identical to [`dyad_backward_dx`].
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_backward_dx_prec_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    prec: Precision,
+    threads: usize,
+) -> Vec<f32> {
     assert_eq!(wl.len(), dims.component_params());
     assert_eq!(wu.len(), dims.component_params());
     assert_eq!(dy.len(), dims.f_out() * nb);
-    let in_perm = matches!(variant, Variant::It | Variant::Dt);
-    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
     let wlt = transpose_blocks(wl, dims);
     let wut = transpose_blocks(wu, dims);
+    match prec {
+        Precision::F32 => {
+            let w1m = F32Rows::new(&wlt, dims.n_out);
+            let w2m = F32Rows::new(&wut, dims.n_out);
+            dyad_backward_dx_generic(&w1m, &w2m, dy, dims, variant, nb, threads)
+        }
+        Precision::Bf16 => {
+            let w1m = Bf16Rows::encode(&wlt, dims.n_out);
+            let w2m = Bf16Rows::encode(&wut, dims.n_out);
+            dyad_backward_dx_generic(&w1m, &w2m, dy, dims, variant, nb, threads)
+        }
+        Precision::I8 => {
+            let w1m = I8Rows::encode(&wlt, dims.n_out);
+            let w2m = I8Rows::encode(&wut, dims.n_out);
+            dyad_backward_dx_generic(&w1m, &w2m, dy, dims, variant, nb, threads)
+        }
+    }
+}
+
+/// The IT `dx` schedule is already a fused contiguous single pass —
+/// with no output permutation, both components' `dy` reads are
+/// sequential block rows — so -CAT's backward input-gradient is the
+/// plain IT kernel. This wrapper exists to make the fwd/dx/dw kernel
+/// triple explicit at call sites.
+pub fn dyad_cat_backward_dx(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    nb: usize,
+) -> Vec<f32> {
+    dyad_cat_backward_dx_with_threads(wl, wu, dy, dims, nb, num_threads())
+}
+
+pub fn dyad_cat_backward_dx_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    nb: usize,
+    threads: usize,
+) -> Vec<f32> {
+    dyad_backward_dx_with_threads(wl, wu, dy, dims, Variant::ItCat, nb, threads)
+}
+
+fn dyad_backward_dx_generic<W1: WeightRows, W2: WeightRows>(
+    w1m: &W1,
+    w2m: &W2,
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    let in_perm = variant.in_perm();
+    let out_perm = variant.out_perm();
     let mut dx = vec![0.0f32; dims.f_in() * nb];
     parallel_rows(&mut dx, nb, threads, &|c, orow| {
         // BLOCKDIAG^T: input row c lives in block i1 = c / n_in.
         let (i1, k1) = (c / n_in, c % n_in);
-        let w1 = &wlt[(i1 * n_in + k1) * n_out..(i1 * n_in + k1 + 1) * n_out];
+        let r1 = i1 * n_in + k1;
         // BLOCKTRANS^T: with the input permutation, c = k2*n_dyad + i2.
         let (i2, k2) = if in_perm {
             (c % n_dyad, c / n_dyad)
         } else {
             (i1, k1)
         };
-        let w2 = &wut[(i2 * n_in + k2) * n_out..(i2 * n_in + k2 + 1) * n_out];
+        let r2 = i2 * n_in + k2;
         if nb == 1 {
-            let mut s = dot(w1, &dy[i1 * n_out..(i1 + 1) * n_out]);
+            let mut s = w1m.dot_row(r1, &dy[i1 * n_out..(i1 + 1) * n_out]);
             if out_perm {
-                for (o, &wv) in w2.iter().enumerate() {
-                    s += wv * dy[o * n_dyad + i2];
+                for o in 0..n_out {
+                    s += w2m.at(r2, o) * dy[o * n_dyad + i2];
                 }
             } else {
-                s += dot(w2, &dy[i2 * n_out..(i2 + 1) * n_out]);
+                s += w2m.dot_row(r2, &dy[i2 * n_out..(i2 + 1) * n_out]);
             }
             orow[0] = s;
         } else {
@@ -500,9 +1159,9 @@ pub fn dyad_backward_dx_with_threads(
                 let src2 = if out_perm { o * n_dyad + i2 } else { i2 * n_out + o };
                 axpy2(
                     orow,
-                    w1[o],
+                    w1m.at(r1, o),
                     &dy[src1 * nb..(src1 + 1) * nb],
-                    w2[o],
+                    w2m.at(r2, o),
                     &dy[src2 * nb..(src2 + 1) * nb],
                 );
             }
@@ -540,6 +1199,37 @@ pub fn dyad_linear_backward_dx_with_threads(
     transpose(&dxc, dims.f_in(), t)
 }
 
+/// Row-major [`dyad_backward_dx_prec_with_threads`].
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear_backward_dx_prec(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    prec: Precision,
+) -> Vec<f32> {
+    dyad_linear_backward_dx_prec_with_threads(wl, wu, dy, dims, variant, t, prec, num_threads())
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear_backward_dx_prec_with_threads(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    prec: Precision,
+    threads: usize,
+) -> Vec<f32> {
+    let dyc = transpose(dy, t, dims.f_out());
+    let dxc =
+        dyad_backward_dx_prec_with_threads(wl, wu, &dyc, dims, variant, t, prec, threads);
+    transpose(&dxc, dims.f_in(), t)
+}
+
 /// Structured DYAD backward, weight-gradient half: accumulate the
 /// block component gradients directly from row-major activations
 /// `x (t, f_in)` and upstream gradients `dy (t, f_out)`:
@@ -572,12 +1262,15 @@ pub fn dyad_backward_dw_with_threads(
     t: usize,
     threads: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    if variant.is_cat() {
+        return dyad_cat_backward_dw_with_threads(x, dy, dims, t, threads);
+    }
     let DyadDims { n_dyad, n_in, n_out } = dims;
     let (f_in, f_out) = (dims.f_in(), dims.f_out());
     assert_eq!(x.len(), t * f_in);
     assert_eq!(dy.len(), t * f_out);
-    let in_perm = matches!(variant, Variant::It | Variant::Dt);
-    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+    let in_perm = variant.in_perm();
+    let out_perm = variant.out_perm();
     let mut dwl = vec![0.0f32; dims.component_params()];
     parallel_rows(&mut dwl, n_in, threads, &|r, row| {
         let (i, o) = (r / n_out, r % n_out);
@@ -608,6 +1301,70 @@ pub fn dyad_backward_dw_with_threads(
             }
         }
     });
+    (dwl, dwu)
+}
+
+/// The -CAT weight-gradient: gather the same block-grouped
+/// concatenated panel as the forward, but row-major per token —
+/// `xc[t, 2*f_in]`, block i's segment `[x block i | permuted cols
+/// k*n_dyad + i]`. Because IT's `dwl[i,o,:]` and `dwu[i,o,:]` rows
+/// share the *same* upstream coefficient `dy[t, i*n_out+o]`, both
+/// accumulate with ONE contiguous `2*n_in` axpy per token, replacing
+/// the plain path's separate axpy + strided gather loop. The fused
+/// rows are split back into the two stored components at the end.
+/// Elementwise identical to the plain IT `dw` on the scalar build.
+pub fn dyad_cat_backward_dw(
+    x: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    t: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    dyad_cat_backward_dw_with_threads(x, dy, dims, t, num_threads())
+}
+
+pub fn dyad_cat_backward_dw_with_threads(
+    x: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    t: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let DyadDims { n_dyad, n_in, n_out } = dims;
+    let (f_in, f_out) = (dims.f_in(), dims.f_out());
+    assert_eq!(x.len(), t * f_in);
+    assert_eq!(dy.len(), t * f_out);
+    let two_n_in = 2 * n_in;
+    let mut xc = vec![0.0f32; t * 2 * f_in];
+    parallel_rows(&mut xc, 2 * f_in, threads, &|ti, row| {
+        let xt = &x[ti * f_in..(ti + 1) * f_in];
+        for i in 0..n_dyad {
+            let seg = &mut row[i * two_n_in..(i + 1) * two_n_in];
+            seg[..n_in].copy_from_slice(&xt[i * n_in..(i + 1) * n_in]);
+            for k in 0..n_in {
+                seg[n_in + k] = xt[k * n_dyad + i];
+            }
+        }
+    });
+    // fused gradient rows: dwc[i*n_out+o, :] = sum_t dy[t, i*n_out+o]
+    //                                          * xc[t, block i]
+    let mut dwc = vec![0.0f32; n_dyad * n_out * two_n_in];
+    parallel_rows(&mut dwc, two_n_in, threads, &|r, row| {
+        let (i, o) = (r / n_out, r % n_out);
+        for ti in 0..t {
+            let a = dy[ti * f_out + i * n_out + o];
+            if a != 0.0 {
+                let base = ti * 2 * f_in + i * two_n_in;
+                axpy(row, a, &xc[base..base + two_n_in]);
+            }
+        }
+    });
+    let mut dwl = vec![0.0f32; dims.component_params()];
+    let mut dwu = vec![0.0f32; dims.component_params()];
+    for r in 0..n_dyad * n_out {
+        let src = &dwc[r * two_n_in..(r + 1) * two_n_in];
+        dwl[r * n_in..(r + 1) * n_in].copy_from_slice(&src[..n_in]);
+        dwu[r * n_in..(r + 1) * n_in].copy_from_slice(&src[n_in..]);
+    }
     (dwl, dwu)
 }
 
@@ -669,7 +1426,7 @@ mod tests {
             let wu = rand_vec(&mut rng, dims.component_params());
             let x = rand_vec(&mut rng, dims.f_in() * nb);
             let bias = rand_vec(&mut rng, dims.f_out());
-            for v in [Variant::It, Variant::Ot, Variant::Dt] {
+            for v in [Variant::It, Variant::ItCat, Variant::Ot, Variant::Dt] {
                 let want = dyad_matmul(&wl, &wu, &x, dims, v, nb, Some(&bias));
                 let got = dyad_fused(&wl, &wu, &x, dims, v, nb, Some(&bias));
                 for (a, b) in got.iter().zip(&want) {
@@ -732,7 +1489,7 @@ mod tests {
             let wu = rand_vec(&mut rng, dims.component_params());
             let x = rand_vec(&mut rng, t * dims.f_in());
             let dy = rand_vec(&mut rng, t * dims.f_out());
-            for v in [Variant::It, Variant::Ot, Variant::Dt] {
+            for v in [Variant::It, Variant::ItCat, Variant::Ot, Variant::Dt] {
                 let (rwl, rwu, rdx) = dyad_backward(&wl, &wu, &x, &dy, dims, v, t);
                 let (dwl, dwu) = dyad_backward_dw(&x, &dy, dims, v, t);
                 let dx = dyad_linear_backward_dx(&wl, &wu, &dy, dims, v, t);
@@ -768,6 +1525,266 @@ mod tests {
                 assert_eq!(dx1, dxn, "{v:?} dx threads={threads} changed bits");
                 let dwn = dyad_backward_dw_with_threads(&x, &dyr, dims, v, t, threads);
                 assert_eq!(dw1, dwn, "{v:?} dw threads={threads} changed bits");
+            }
+        }
+    }
+
+    /// -CAT vs plain IT across the PR 2 edge grid: for `nb > 1` the
+    /// two schedules issue the *same* axpy2 calls on the same values
+    /// in the same order, so the outputs must be bitwise equal (simd
+    /// included); `nb == 1` re-associates the BLOCKTRANS dot, so it
+    /// gets a tolerance.
+    #[test]
+    fn cat_forward_parity_with_plain_it() {
+        let mut rng = Rng::new(41);
+        for (nd, n_in, n_out, nb) in [
+            (4, 4, 4, 3),
+            (2, 3, 5, 4), // rectangular blocks
+            (1, 6, 2, 5), // n_dyad == 1
+            (4, 3, 1, 3), // n_dyad == f_out
+            (8, 2, 2, 1), // nb == 1 (serving-shaped)
+        ] {
+            let dims = DyadDims { n_dyad: nd, n_in, n_out };
+            let wl = rand_vec(&mut rng, dims.component_params());
+            let wu = rand_vec(&mut rng, dims.component_params());
+            let x = rand_vec(&mut rng, dims.f_in() * nb);
+            let bias = rand_vec(&mut rng, dims.f_out());
+            let it = dyad_fused(&wl, &wu, &x, dims, Variant::It, nb, Some(&bias));
+            let cat = dyad_fused_cat(&wl, &wu, &x, dims, nb, Some(&bias));
+            // the Variant::ItCat route and the explicit entry point
+            // must be the same kernel
+            let via_variant =
+                dyad_fused(&wl, &wu, &x, dims, Variant::ItCat, nb, Some(&bias));
+            assert_eq!(cat, via_variant, "{dims:?} nb={nb}");
+            if nb > 1 {
+                assert_eq!(cat, it, "{dims:?} nb={nb} must be bitwise");
+            } else {
+                for (a, b) in cat.iter().zip(&it) {
+                    assert!((a - b).abs() < 1e-5, "{dims:?} nb={nb}");
+                }
+            }
+        }
+    }
+
+    /// -CAT dw/dx vs plain IT across the same grid. `dx` shares IT's
+    /// code path outright (bitwise, always). `dw` is elementwise
+    /// identical on the scalar build; under simd the fused `2*n_in`
+    /// rows vectorise at different chunk boundaries, so the bitwise
+    /// assert is scalar-only and a tolerance holds everywhere.
+    #[test]
+    fn cat_backward_parity_with_plain_it() {
+        let mut rng = Rng::new(43);
+        for (nd, n_in, n_out, t) in [
+            (4, 4, 4, 3),
+            (2, 3, 5, 4),
+            (1, 6, 2, 5),
+            (4, 3, 1, 3),
+            (8, 2, 2, 1),
+        ] {
+            let dims = DyadDims { n_dyad: nd, n_in, n_out };
+            let wl = rand_vec(&mut rng, dims.component_params());
+            let wu = rand_vec(&mut rng, dims.component_params());
+            let x = rand_vec(&mut rng, t * dims.f_in());
+            let dyr = rand_vec(&mut rng, t * dims.f_out()); // row-major
+            let dyc = rand_vec(&mut rng, dims.f_out() * t); // column-major
+
+            let (iwl, iwu) = dyad_backward_dw(&x, &dyr, dims, Variant::It, t);
+            let (cwl, cwu) = dyad_cat_backward_dw(&x, &dyr, dims, t);
+            let via_variant = dyad_backward_dw(&x, &dyr, dims, Variant::ItCat, t);
+            assert_eq!((cwl.clone(), cwu.clone()), via_variant, "{dims:?} t={t}");
+            #[cfg(not(feature = "simd"))]
+            {
+                assert_eq!(cwl, iwl, "{dims:?} t={t} dwl must be bitwise (scalar)");
+                assert_eq!(cwu, iwu, "{dims:?} t={t} dwu must be bitwise (scalar)");
+            }
+            for (name, got, want) in [("dwl", &cwl, &iwl), ("dwu", &cwu, &iwu)] {
+                for (a, b) in got.iter().zip(want.iter()) {
+                    assert!((a - b).abs() < 1e-5, "{dims:?} t={t} {name}");
+                }
+            }
+
+            let idx = dyad_backward_dx(&wl, &wu, &dyc, dims, Variant::It, t);
+            let cdx = dyad_cat_backward_dx(&wl, &wu, &dyc, dims, t);
+            assert_eq!(cdx, idx, "{dims:?} t={t} dx must be bitwise");
+        }
+    }
+
+    #[test]
+    fn cat_kernels_thread_count_bitwise_deterministic() {
+        let mut rng = Rng::new(47);
+        let dims = DyadDims { n_dyad: 4, n_in: 12, n_out: 20 };
+        let (nb, t) = (17, 17);
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let x = rand_vec(&mut rng, dims.f_in() * nb);
+        let xr = rand_vec(&mut rng, t * dims.f_in());
+        let dyr = rand_vec(&mut rng, t * dims.f_out());
+        let y1 = dyad_fused_cat_with_threads(&wl, &wu, &x, dims, nb, None, 1);
+        let dw1 = dyad_cat_backward_dw_with_threads(&xr, &dyr, dims, t, 1);
+        for threads in [2, 3, 8] {
+            let yn = dyad_fused_cat_with_threads(&wl, &wu, &x, dims, nb, None, threads);
+            assert_eq!(y1, yn, "cat fwd threads={threads} changed bits");
+            let dwn = dyad_cat_backward_dw_with_threads(&xr, &dyr, dims, t, threads);
+            assert_eq!(dw1, dwn, "cat dw threads={threads} changed bits");
+        }
+    }
+
+    /// Quantized fwd/dx against the same kernel run on *dequantised*
+    /// f32 weights: the only difference is where the rounding happens
+    /// (registers vs a pre-pass), so the results agree to accumulation
+    /// tolerance. Also pins that `Precision::F32` is bitwise identical
+    /// to the plain entry points.
+    #[test]
+    fn quantized_kernels_match_dequantized_reference() {
+        use crate::dyad::quant::{dequantize_rows_i8, encode_bf16, quantize_rows_i8};
+        let mut rng = Rng::new(53);
+        for (nd, n_in, n_out, nb) in [(4, 4, 4, 3), (2, 3, 5, 4), (8, 2, 2, 1)] {
+            let dims = DyadDims { n_dyad: nd, n_in, n_out };
+            let wl = rand_vec(&mut rng, dims.component_params());
+            let wu = rand_vec(&mut rng, dims.component_params());
+            let x = rand_vec(&mut rng, dims.f_in() * nb);
+            let bias = rand_vec(&mut rng, dims.f_out());
+            for v in [Variant::It, Variant::ItCat, Variant::Ot, Variant::Dt] {
+                // F32 tag is the identity
+                assert_eq!(
+                    dyad_fused_prec(&wl, &wu, &x, dims, v, nb, Some(&bias), Precision::F32),
+                    dyad_fused(&wl, &wu, &x, dims, v, nb, Some(&bias)),
+                    "{v:?} {dims:?} F32 tag must be bitwise"
+                );
+                // bf16: dequantise = encode/decode roundtrip
+                let dwl: Vec<f32> =
+                    encode_bf16(&wl).iter().map(|&b| super::bf16_to_f32(b)).collect();
+                let dwu: Vec<f32> =
+                    encode_bf16(&wu).iter().map(|&b| super::bf16_to_f32(b)).collect();
+                let want = dyad_fused(&dwl, &dwu, &x, dims, v, nb, Some(&bias));
+                let got =
+                    dyad_fused_prec(&wl, &wu, &x, dims, v, nb, Some(&bias), Precision::Bf16);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4, "{v:?} {dims:?} bf16 fwd");
+                }
+                // i8: per-block-row scales over the stored row layout
+                let (ql, sl) = quantize_rows_i8(&wl, n_in);
+                let (qu, su) = quantize_rows_i8(&wu, n_in);
+                let dql = dequantize_rows_i8(&ql, &sl, n_in);
+                let dqu = dequantize_rows_i8(&qu, &su, n_in);
+                let want = dyad_fused(&dql, &dqu, &x, dims, v, nb, Some(&bias));
+                let got =
+                    dyad_fused_prec(&wl, &wu, &x, dims, v, nb, Some(&bias), Precision::I8);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4, "{v:?} {dims:?} i8 fwd");
+                }
+            }
+        }
+        // dx: quantisation happens after the block transpose, so the
+        // reference here is the f32 dx with a tolerance scaled to the
+        // per-weight quantisation error (bf16 2^-8, i8 1/254)
+        let dims = DyadDims { n_dyad: 4, n_in: 6, n_out: 5 };
+        let t = 7;
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let dy = rand_vec(&mut rng, t * dims.f_out());
+        for v in [Variant::It, Variant::ItCat, Variant::Ot, Variant::Dt] {
+            let want = dyad_linear_backward_dx(&wl, &wu, &dy, dims, v, t);
+            assert_eq!(
+                dyad_linear_backward_dx_prec(&wl, &wu, &dy, dims, v, t, Precision::F32),
+                want,
+                "{v:?} dx F32 tag must be bitwise"
+            );
+            for (prec, tol) in [(Precision::Bf16, 0.05f32), (Precision::I8, 0.08f32)] {
+                let got = dyad_linear_backward_dx_prec(&wl, &wu, &dy, dims, v, t, prec);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!(
+                        (a - b).abs() <= tol * (1.0 + b.abs()),
+                        "{v:?} {prec:?} dx: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_and_matmul_prec_match_dequantized_reference() {
+        use crate::dyad::quant::{dequantize_rows_i8, encode_bf16, quantize_rows_i8};
+        let mut rng = Rng::new(59);
+        let (t, f_in, f_out) = (5, 19, 9);
+        let x = rand_vec(&mut rng, t * f_in);
+        let w = rand_vec(&mut rng, f_out * f_in);
+        let bias = rand_vec(&mut rng, f_out);
+        assert_eq!(
+            dense_linear_prec(&x, &w, Some(&bias), t, f_in, f_out, Precision::F32),
+            dense_linear(&x, &w, Some(&bias), t, f_in, f_out),
+            "dense F32 tag must be bitwise"
+        );
+        let dwb: Vec<f32> = encode_bf16(&w).iter().map(|&b| super::bf16_to_f32(b)).collect();
+        let want = dense_linear(&x, &dwb, Some(&bias), t, f_in, f_out);
+        let got = dense_linear_prec(&x, &w, Some(&bias), t, f_in, f_out, Precision::Bf16);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "dense bf16");
+        }
+        let (q, sc) = quantize_rows_i8(&w, f_in);
+        let dwq = dequantize_rows_i8(&q, &sc, f_in);
+        let want = dense_linear(&x, &dwq, Some(&bias), t, f_in, f_out);
+        let got = dense_linear_prec(&x, &w, Some(&bias), t, f_in, f_out, Precision::I8);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "dense i8");
+        }
+        // matmul_fast_prec: dy (t, f_out) @ w (f_out, f_in)
+        let dy = rand_vec(&mut rng, t * f_out);
+        assert_eq!(
+            matmul_fast_prec_with_threads(&dy, &w, t, f_out, f_in, Precision::F32, 3),
+            matmul_fast_with_threads(&dy, &w, t, f_out, f_in, 3),
+            "matmul F32 tag must be bitwise"
+        );
+        let (q2, sc2) = quantize_rows_i8(&w, f_in);
+        let dwq2 = dequantize_rows_i8(&q2, &sc2, f_in);
+        let want = matmul_fast(&dy, &dwq2, t, f_out, f_in);
+        let got = matmul_fast_prec_with_threads(&dy, &w, t, f_out, f_in, Precision::I8, 2);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "matmul i8");
+        }
+    }
+
+    #[test]
+    fn quantized_kernels_thread_count_bitwise_deterministic() {
+        let mut rng = Rng::new(61);
+        let dims = DyadDims { n_dyad: 4, n_in: 12, n_out: 20 };
+        let (nb, t) = (17, 13);
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let x = rand_vec(&mut rng, dims.f_in() * nb);
+        let dy = rand_vec(&mut rng, t * dims.f_out());
+        let (f_in, f_out) = (dims.f_in(), dims.f_out());
+        let xr = rand_vec(&mut rng, t * f_in);
+        let wd = rand_vec(&mut rng, f_out * f_in);
+        for prec in [Precision::Bf16, Precision::I8] {
+            for v in [Variant::ItCat, Variant::Dt] {
+                let y1 = dyad_fused_prec_with_threads(
+                    &wl, &wu, &x, dims, v, nb, None, prec, 1,
+                );
+                let dx1 = dyad_linear_backward_dx_prec_with_threads(
+                    &wl, &wu, &dy, dims, v, t, prec, 1,
+                );
+                for threads in [2, 3, 8] {
+                    let yn = dyad_fused_prec_with_threads(
+                        &wl, &wu, &x, dims, v, nb, None, prec, threads,
+                    );
+                    assert_eq!(y1, yn, "{prec:?} {v:?} fwd threads={threads}");
+                    let dxn = dyad_linear_backward_dx_prec_with_threads(
+                        &wl, &wu, &dy, dims, v, t, prec, threads,
+                    );
+                    assert_eq!(dx1, dxn, "{prec:?} {v:?} dx threads={threads}");
+                }
+            }
+            let d1 = dense_linear_prec_with_threads(&xr, &wd, None, t, f_in, f_out, prec, 1);
+            let m1 = matmul_fast_prec_with_threads(&dy, &wd, t, f_out, f_in, prec, 1);
+            for threads in [2, 3, 8] {
+                let dn = dense_linear_prec_with_threads(
+                    &xr, &wd, None, t, f_in, f_out, prec, threads,
+                );
+                assert_eq!(d1, dn, "{prec:?} dense threads={threads}");
+                let mn =
+                    matmul_fast_prec_with_threads(&dy, &wd, t, f_out, f_in, prec, threads);
+                assert_eq!(m1, mn, "{prec:?} matmul threads={threads}");
             }
         }
     }

@@ -11,6 +11,11 @@ use anyhow::{bail, Result};
 pub enum Variant {
     /// Input Transpose: columns of BLOCKTRANS permuted.
     It,
+    /// IT with the §3.4.3 -CAT execution schedule: algebraically
+    /// identical to `It` (same weights, same output), but the kernel
+    /// gathers the permuted input once into a block-grouped
+    /// concatenated panel so both components stream contiguously.
+    ItCat,
     /// Output Transpose: rows permuted.
     Ot,
     /// Double Transpose: both.
@@ -20,11 +25,29 @@ pub enum Variant {
 impl Variant {
     pub fn from_str(s: &str) -> Result<Variant> {
         Ok(match s {
-            "it" | "it_cat" => Variant::It, // -CAT shares IT's structure
+            "it" => Variant::It,
+            "it_cat" => Variant::ItCat,
             "ot" => Variant::Ot,
             "dt" => Variant::Dt,
             _ => bail!("unknown dyad variant {s:?}"),
         })
+    }
+
+    /// BLOCKTRANS reads a permuted view of the input (columns
+    /// permuted): It / ItCat / Dt.
+    pub fn in_perm(&self) -> bool {
+        matches!(self, Variant::It | Variant::ItCat | Variant::Dt)
+    }
+
+    /// BLOCKTRANS writes a permuted view of the output (rows
+    /// permuted): Ot / Dt.
+    pub fn out_perm(&self) -> bool {
+        matches!(self, Variant::Ot | Variant::Dt)
+    }
+
+    /// Uses the -CAT concatenated single-pass kernel schedule.
+    pub fn is_cat(&self) -> bool {
+        matches!(self, Variant::ItCat)
     }
 }
 
@@ -119,7 +142,7 @@ pub fn blocktrans_full(w3: &[f32], dims: DyadDims, variant: Variant) -> Vec<f32>
     let bd = blockdiag_full(w3, dims);
     let (f_in, f_out) = (dims.f_in(), dims.f_out());
     match variant {
-        Variant::It => {
+        Variant::It | Variant::ItCat => {
             // W2[:, pi[m]] = BD[:, m]
             let pi = perm_vector(dims.n_in, dims.n_dyad);
             let mut out = vec![0.0f32; f_out * f_in];
@@ -217,6 +240,24 @@ mod tests {
             assert_eq!(a, b, "{v:?}");
             assert_ne!(bd, bt, "{v:?} must move entries");
         }
+    }
+
+    #[test]
+    fn it_cat_is_it_algebra() {
+        // -CAT is an execution schedule, not a new matrix: it must
+        // materialise to exactly the IT operator.
+        let dims = DyadDims { n_dyad: 3, n_in: 2, n_out: 4 };
+        let w3: Vec<f32> = (0..dims.component_params()).map(|x| x as f32 + 0.5).collect();
+        assert_eq!(
+            blocktrans_full(&w3, dims, Variant::ItCat),
+            blocktrans_full(&w3, dims, Variant::It)
+        );
+        assert_eq!(Variant::from_str("it_cat").unwrap(), Variant::ItCat);
+        assert_eq!(Variant::from_str("it").unwrap(), Variant::It);
+        assert!(Variant::ItCat.in_perm() && !Variant::ItCat.out_perm());
+        assert!(Variant::ItCat.is_cat() && !Variant::It.is_cat());
+        assert!(Variant::Dt.in_perm() && Variant::Dt.out_perm());
+        assert!(Variant::Ot.out_perm() && !Variant::Ot.in_perm());
     }
 
     #[test]

@@ -83,8 +83,8 @@ pub fn dyad_matmul(
     // BLOCKTRANS: gather the strided input view (IT/DT), per-block
     // matmul, scatter to strided output rows (OT/DT). One x2/z scratch
     // pair is reused across all blocks.
-    let in_perm = matches!(variant, Variant::It | Variant::Dt);
-    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+    let in_perm = variant.in_perm();
+    let out_perm = variant.out_perm();
     let pi_in = perm_vector(n_in, n_dyad); // x2 row m reads x row pi_in[m]
     let pi_out = perm_vector(n_out, n_dyad);
     let mut x2 = vec![0.0f32; n_in * nb];
@@ -127,8 +127,8 @@ pub fn project_dyad_grads(dw: &[f32], dims: DyadDims, variant: Variant) -> (Vec<
     let DyadDims { n_dyad, n_in, n_out } = dims;
     let f_in = dims.f_in();
     assert_eq!(dw.len(), dims.f_out() * f_in);
-    let in_perm = matches!(variant, Variant::It | Variant::Dt);
-    let out_perm = matches!(variant, Variant::Ot | Variant::Dt);
+    let in_perm = variant.in_perm();
+    let out_perm = variant.out_perm();
     let pi_in = perm_vector(n_in, n_dyad);
     let pi_out = perm_vector(n_out, n_dyad);
     let mut dwl = vec![0.0f32; dims.component_params()];

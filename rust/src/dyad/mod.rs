@@ -10,11 +10,15 @@ pub mod connectivity;
 pub mod kernel;
 pub mod layout;
 pub mod math;
+pub mod quant;
 
 pub use connectivity::{connection_counts, connectivity_ratio};
 pub use kernel::{
-    dense_linear, dyad_backward_dw, dyad_backward_dx, dyad_fused, dyad_linear,
-    dyad_linear_backward_dx, matmul_bt, matmul_fast, transpose,
+    dense_linear, dense_linear_prec, dyad_backward_dw, dyad_backward_dx, dyad_cat_backward_dw,
+    dyad_cat_backward_dx, dyad_fused, dyad_fused_cat, dyad_fused_prec, dyad_linear,
+    dyad_linear_backward_dx, dyad_linear_backward_dx_prec, dyad_linear_prec, matmul_bt,
+    matmul_fast, transpose,
 };
 pub use layout::{blockdiag_full, blocktrans_full, dyad_full, perm_vector, DyadDims, Variant};
 pub use math::{dense_matmul, dyad_backward, dyad_matmul, matmul, project_dyad_grads};
+pub use quant::{bf16_from_f32, bf16_to_f32, dequantize_rows_i8, quantize_rows_i8};

@@ -1,0 +1,278 @@
+//! Quantized weight codecs + micro-ops for the block kernels.
+//!
+//! Two storage formats, both lossy only on the *weight* stream —
+//! activations, partial sums and master weights stay f32:
+//!
+//! - **bf16**: f32 truncated to the top 16 bits with round-to-nearest
+//!   -even. Same exponent range as f32, 8-bit significand, so the
+//!   worst-case relative error per weight is 2^-8 ≈ 0.4% (half the
+//!   2^-7 ulp).
+//! - **int8**: per-block-row symmetric quantisation. Each weight row
+//!   (one output neuron's slice of a block) gets one f32 scale
+//!   `max_abs / 127`; entries are `round(v / scale)` clamped to
+//!   [-127, 127], and the kernels dequantise in registers — the i8
+//!   dot product is accumulated in f32 and multiplied by the row
+//!   scale once at the end, so the result is deterministic and the
+//!   roundtrip error per weight is at most `max_abs / 254` (half a
+//!   quantisation step).
+//!
+//! The micro-ops (`dot_bf16` / `axpy_bf16` / `dot_i8` / `axpy_i8`)
+//! mirror `kernel.rs`'s 8-wide unrolled scalar style and share its
+//! debug-asserted equal-length contract. They deliberately stay
+//! scalar even under `--features simd`: the decode step dominates and
+//! the f32 side of every fused kernel already vectorises, so the
+//! quantized paths trade peak FLOPs for bytes moved — the
+//! compute-per-byte argument of PAPER.md §3.4 / Compute Better Spent.
+
+/// Encode one f32 as bf16 (round-to-nearest-even, NaN-safe).
+pub fn bf16_from_f32(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        // quiet the NaN so truncation can't produce an infinity
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    (rounded >> 16) as u16
+}
+
+/// Decode bf16 back to f32 (exact: bf16 values are a subset of f32).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Encode a whole slice as bf16.
+pub fn encode_bf16(w: &[f32]) -> Vec<u16> {
+    w.iter().map(|&v| bf16_from_f32(v)).collect()
+}
+
+/// Per-row symmetric int8 quantisation of `rows = w.len() / row_len`
+/// weight rows. Returns `(q, scales)`; an all-zero row gets scale 0.
+pub fn quantize_rows_i8(w: &[f32], row_len: usize) -> (Vec<i8>, Vec<f32>) {
+    assert!(row_len > 0 && w.len() % row_len == 0, "w.len() must be a multiple of row_len");
+    let rows = w.len() / row_len;
+    let mut q = Vec::with_capacity(w.len());
+    let mut scales = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &w[r * row_len..(r + 1) * row_len];
+        let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = max_abs / 127.0;
+        scales.push(scale);
+        if scale == 0.0 {
+            q.extend(std::iter::repeat(0i8).take(row_len));
+        } else {
+            q.extend(row.iter().map(|&v| {
+                (v / scale).round().clamp(-127.0, 127.0) as i8
+            }));
+        }
+    }
+    (q, scales)
+}
+
+/// Dequantise per-row int8 back to f32 (the values the kernels see).
+pub fn dequantize_rows_i8(q: &[i8], scales: &[f32], row_len: usize) -> Vec<f32> {
+    assert_eq!(q.len(), scales.len() * row_len);
+    q.iter()
+        .enumerate()
+        .map(|(i, &qv)| qv as f32 * scales[i / row_len])
+        .collect()
+}
+
+/// dot over a bf16 weight row and f32 activations. Decodes in
+/// registers; accumulation order matches `kernel::dot`'s scalar path
+/// (8 parallel accumulators, pairwise-summed).
+pub fn dot_bf16(w: &[u16], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len(), "dot_bf16: length mismatch");
+    let n = w.len().min(x.len());
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            acc[l] += bf16_to_f32(w[i + l]) * x[i + l];
+        }
+        i += 8;
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    while i < n {
+        s += bf16_to_f32(w[i]) * x[i];
+        i += 1;
+    }
+    s
+}
+
+/// `out[j] += a * decode(w[j])` over a bf16 weight row.
+pub fn axpy_bf16(out: &mut [f32], a: f32, w: &[u16]) {
+    debug_assert_eq!(out.len(), w.len(), "axpy_bf16: length mismatch");
+    let n = out.len().min(w.len());
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            out[i + l] += a * bf16_to_f32(w[i + l]);
+        }
+        i += 8;
+    }
+    while i < n {
+        out[i] += a * bf16_to_f32(w[i]);
+        i += 1;
+    }
+}
+
+/// dot over an int8 weight row and f32 activations, *without* the row
+/// scale — the caller multiplies the scale exactly once, so the f32
+/// accumulation is identical no matter how the row was scaled.
+pub fn dot_i8(q: &[i8], x: &[f32]) -> f32 {
+    debug_assert_eq!(q.len(), x.len(), "dot_i8: length mismatch");
+    let n = q.len().min(x.len());
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            acc[l] += q[i + l] as f32 * x[i + l];
+        }
+        i += 8;
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    while i < n {
+        s += q[i] as f32 * x[i];
+        i += 1;
+    }
+    s
+}
+
+/// `out[j] += a * q[j]` over an int8 weight row; the caller folds the
+/// row scale into `a` (`a = coeff * scale[row]`).
+pub fn axpy_i8(out: &mut [f32], a: f32, q: &[i8]) {
+    debug_assert_eq!(out.len(), q.len(), "axpy_i8: length mismatch");
+    let n = out.len().min(q.len());
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            out[i + l] += a * q[i + l] as f32;
+        }
+        i += 8;
+    }
+    while i < n {
+        out[i] += a * q[i] as f32;
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bf16_roundtrip_error_bound_and_ties() {
+        // worst-case relative error of RNE truncation is 2^-8
+        let mut rng = Rng::new(7);
+        for _ in 0..4000 {
+            let v = rng.uniform(-8.0, 8.0);
+            let d = bf16_to_f32(bf16_from_f32(v));
+            assert!(
+                (d - v).abs() <= v.abs() / 256.0 + f32::MIN_POSITIVE,
+                "v={v} decoded={d}"
+            );
+        }
+        // exact values survive
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1.5] {
+            assert_eq!(bf16_to_f32(bf16_from_f32(v)), v);
+        }
+        // tie rounds to even mantissa: 0x3F80_8000 is exactly halfway
+        // between 0x3F80 and 0x3F81 -> stays at even 0x3F80
+        assert_eq!(bf16_from_f32(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // just above the tie rounds up
+        assert_eq!(bf16_from_f32(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // odd-mantissa tie rounds up to even: 0x3F81_8000 -> 0x3F82
+        assert_eq!(bf16_from_f32(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // NaN stays NaN, infinities survive
+        assert!(bf16_to_f32(bf16_from_f32(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(bf16_from_f32(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(bf16_from_f32(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn i8_roundtrip_per_row_error_bound() {
+        // property: for every row, |deq - v| <= max_abs(row) / 254
+        // (half a quantisation step), including sign-asymmetric rows
+        let mut rng = Rng::new(13);
+        for (rows, row_len) in [(4, 16), (3, 7), (1, 1), (5, 19)] {
+            let w: Vec<f32> =
+                (0..rows * row_len).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let (q, scales) = quantize_rows_i8(&w, row_len);
+            assert_eq!(scales.len(), rows);
+            let deq = dequantize_rows_i8(&q, &scales, row_len);
+            for r in 0..rows {
+                let row = &w[r * row_len..(r + 1) * row_len];
+                let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                for k in 0..row_len {
+                    let err = (deq[r * row_len + k] - row[k]).abs();
+                    assert!(
+                        err <= max_abs / 254.0 + 1e-6,
+                        "row {r} k {k}: err {err} > bound {}",
+                        max_abs / 254.0
+                    );
+                }
+                // the max-magnitude entry maps to exactly +-127
+                let kmax = (0..row_len)
+                    .max_by(|&a, &b| row[a].abs().partial_cmp(&row[b].abs()).unwrap())
+                    .unwrap();
+                assert_eq!(q[r * row_len + kmax].unsigned_abs(), 127);
+            }
+        }
+    }
+
+    #[test]
+    fn i8_zero_row_is_exact() {
+        let w = vec![0.0f32; 12];
+        let (q, scales) = quantize_rows_i8(&w, 4);
+        assert!(q.iter().all(|&v| v == 0));
+        assert!(scales.iter().all(|&s| s == 0.0));
+        assert_eq!(dequantize_rows_i8(&q, &scales, 4), w);
+    }
+
+    #[test]
+    fn quantized_microkernels_match_dequantized_reference() {
+        // dot_* / axpy_* over encoded rows must equal the plain scalar
+        // ops over the dequantised row, at every remainder length
+        let mut rng = Rng::new(31);
+        for n in [0usize, 1, 7, 8, 9, 16, 19] {
+            let w: Vec<f32> = (0..n.max(1)).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let w = &w[..n];
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+            let wb = encode_bf16(w);
+            let deq_b: Vec<f32> = wb.iter().map(|&b| bf16_to_f32(b)).collect();
+            let want: f32 = crate::dyad::kernel::dot(&deq_b, &x);
+            let got = dot_bf16(&wb, &x);
+            assert!((got - want).abs() <= 1e-5 * (1.0 + want.abs()), "n={n}");
+
+            let mut o1 = vec![0.25f32; n];
+            let mut o2 = o1.clone();
+            axpy_bf16(&mut o1, 0.7, &wb);
+            crate::dyad::kernel::axpy(&mut o2, 0.7, &deq_b);
+            // tolerance, not bitwise: under --features simd the f32
+            // axpy reference fuses the multiply-add
+            for (a, b) in o1.iter().zip(&o2) {
+                assert!((a - b).abs() <= 1e-6, "axpy_bf16 n={n}");
+            }
+
+            if n > 0 {
+                let (q, scales) = quantize_rows_i8(w, n);
+                let deq_q = dequantize_rows_i8(&q, &scales, n);
+                let want_q: f32 = deq_q.iter().zip(&x).map(|(a, b)| a * b).sum();
+                let got_q = dot_i8(&q, &x) * scales[0];
+                assert!(
+                    (got_q - want_q).abs() <= 1e-4 * (1.0 + want_q.abs()),
+                    "dot_i8 n={n}: {got_q} vs {want_q}"
+                );
+                let mut o3 = vec![0.5f32; n];
+                let mut o4 = o3.clone();
+                axpy_i8(&mut o3, 0.7 * scales[0], &q);
+                crate::dyad::kernel::axpy(&mut o4, 0.7, &deq_q);
+                for (a, b) in o3.iter().zip(&o4) {
+                    assert!((a - b).abs() <= 1e-5, "axpy_i8 n={n}");
+                }
+            }
+        }
+    }
+}

@@ -25,7 +25,8 @@ use dyad_repro::coordinator::{MetricsLogger, Trainer};
 use dyad_repro::data::{Grammar, Tokenizer};
 use dyad_repro::dyad::{connectivity_ratio, DyadDims, Variant};
 use dyad_repro::eval;
-use dyad_repro::runtime::{open_backend, Backend, BackendKind};
+use dyad_repro::runtime::{open_backend_with_precision, Backend, BackendKind};
+use dyad_repro::tensor::Precision;
 use dyad_repro::util::cli::Args;
 use dyad_repro::util::json::{num, s};
 
@@ -74,6 +75,8 @@ fn print_help() {
            quality-summary --dir runs/quality-opt   (render Table-2 style)\n\n\
          Common flags:\n\
            --backend native|xla   execution backend (default: native; trains too)\n\
+           --precision f32|bf16|i8  weight-stream precision for the swap-site\n\
+                          linears (native only; default f32; dw stays f32)\n\
            --artifacts DIR        artifact dir for --backend xla (default: artifacts)\n\
            --arch/--variant also accept paper-scale aliases\n\
            (opt125m/opt350m/pythia160m -> mini configs, dyad -> dyad_it)"
@@ -84,16 +87,22 @@ fn backend_kind(args: &Args) -> Result<BackendKind> {
     args.str_or("backend", "native").parse::<BackendKind>()
 }
 
+fn precision_of(args: &Args) -> Result<Precision> {
+    Precision::from_str(&args.str_or("precision", "f32"))
+}
+
 fn backend_of(args: &Args) -> Result<Box<dyn Backend>> {
-    open_backend(
+    open_backend_with_precision(
         backend_kind(args)?,
         std::path::Path::new(&args.str_or("artifacts", "artifacts")),
+        precision_of(args)?,
     )
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
-    let backend = open_backend(backend_kind(args)?, &cfg.artifacts_dir)?;
+    let backend =
+        open_backend_with_precision(backend_kind(args)?, &cfg.artifacts_dir, precision_of(args)?)?;
     let mut log = MetricsLogger::to_dir(&cfg.out_dir)?;
     std::fs::write(cfg.out_dir.join("config.json"), cfg.to_json().to_string())?;
     let report = Trainer::new(cfg).run(backend.as_ref(), &mut log)?;
@@ -129,7 +138,11 @@ fn cmd_quality(args: &Args) -> Result<()> {
             out_root.join(variant).to_string_lossy().into_owned(),
         );
         let cfg = TrainConfig::from_args(&sub)?;
-        let backend = open_backend(backend_kind(args)?, &cfg.artifacts_dir)?;
+        let backend = open_backend_with_precision(
+            backend_kind(args)?,
+            &cfg.artifacts_dir,
+            precision_of(args)?,
+        )?;
         let mut log = MetricsLogger::to_dir(&cfg.out_dir)?;
         std::fs::write(cfg.out_dir.join("config.json"), cfg.to_json().to_string())?;
         println!("== pretraining {arch}/{variant} ==");
@@ -190,7 +203,8 @@ fn run_suite(
 fn cmd_eval(args: &Args) -> Result<()> {
     use dyad_repro::runtime::TrainState;
     let cfg = TrainConfig::from_args(args)?;
-    let backend = open_backend(backend_kind(args)?, &cfg.artifacts_dir)?;
+    let backend =
+        open_backend_with_precision(backend_kind(args)?, &cfg.artifacts_dir, precision_of(args)?)?;
     let grammar = Grammar::new();
     let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
     let train_spec = backend

@@ -252,9 +252,31 @@ impl BackendKind {
 /// Open a backend. `artifacts_dir` is only read by the XLA backend;
 /// the native backend synthesises its manifest in-process.
 pub fn open_backend(kind: BackendKind, artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    open_backend_with_precision(kind, artifacts_dir, crate::tensor::Precision::F32)
+}
+
+/// [`open_backend`] with a weight-stream precision (`--precision`).
+/// Only the native backend executes quantized swap-site linears; the
+/// XLA backend's AOT'd artifacts are f32-only, so any other tag is
+/// rejected up front rather than silently ignored.
+pub fn open_backend_with_precision(
+    kind: BackendKind,
+    artifacts_dir: &Path,
+    precision: crate::tensor::Precision,
+) -> Result<Box<dyn Backend>> {
     match kind {
-        BackendKind::Native => Ok(Box::new(super::native::NativeBackend::new())),
-        BackendKind::Xla => open_xla(artifacts_dir),
+        BackendKind::Native => {
+            Ok(Box::new(super::native::NativeBackend::with_precision(precision)))
+        }
+        BackendKind::Xla => {
+            if precision != crate::tensor::Precision::F32 {
+                bail!(
+                    "--precision {precision} is native-only: the xla backend executes \
+                     AOT'd f32 artifacts; use `--backend native` or drop --precision"
+                );
+            }
+            open_xla(artifacts_dir)
+        }
     }
 }
 

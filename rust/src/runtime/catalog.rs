@@ -33,6 +33,9 @@ pub const FF_GEOMETRIES: [(&str, usize, usize, usize); 3] = [
 /// Figure 6 width sweep: ff geometry (w, 4w) at these widths.
 pub const WIDTH_SWEEP: [usize; 4] = [256, 512, 1024, 2048];
 pub const WIDTH_SWEEP_TOKENS: usize = 128;
+/// Weight-stream precisions the native backend can execute
+/// (`--precision`); benches sweep these arms.
+pub const PRECISIONS: [&str; 3] = ["f32", "bf16", "i8"];
 
 pub const ADAM: AdamCfg = AdamCfg { b1: 0.9, b2: 0.999, eps: 1e-8, grad_clip: 1.0 };
 
@@ -438,7 +441,7 @@ pub fn native_manifest() -> Manifest {
         &mut artifacts,
         "opt-mini",
         &archs["opt-mini"],
-        &["dense", "dyad_it", "dyad_ot", "dyad_dt", "dyad_it_8", "dyad_hetero"],
+        &["dense", "dyad_it", "dyad_it_cat", "dyad_ot", "dyad_dt", "dyad_it_8", "dyad_hetero"],
         &variants,
     );
     model_artifacts(
@@ -461,7 +464,7 @@ pub fn native_manifest() -> Manifest {
             w,
             4 * w,
             WIDTH_SWEEP_TOKENS,
-            &["dense", "dyad_it", "dyad_it_8"],
+            &["dense", "dyad_it", "dyad_it_cat", "dyad_it_8"],
             &variants,
         );
     }
@@ -476,13 +479,15 @@ mod tests {
     #[test]
     fn manifest_has_expected_inventory() {
         let m = native_manifest();
-        // 11 (arch, variant) pairs x 6 model artifacts
-        // + (3 geos x 6 + 4 widths x 3) ff variants x 2 artifacts
+        // 12 (arch, variant) pairs x 6 model artifacts
+        // + (3 geos x 6 + 4 widths x 4) ff variants x 2 artifacts
         // + 2 mnist variants x 3 artifacts
-        assert_eq!(m.artifacts.len(), 11 * 6 + (3 * 6 + 4 * 3) * 2 + 2 * 3);
+        assert_eq!(m.artifacts.len(), 12 * 6 + (3 * 6 + 4 * 4) * 2 + 2 * 3);
         for name in [
             "opt-mini/dyad_it/train_k8",
             "opt-mini/dense/score",
+            "opt-mini/dyad_it_cat/train_k8",
+            "ff/width1024/dyad_it_cat/fwd",
             "pythia-mini/dyad_it_8/eval_loss",
             "opt-mid/dyad_it/next_logits",
             "ff/opt125m-ff/dyad_it_cat/fwdbwd",

@@ -29,9 +29,9 @@ mod state;
 
 pub use artifact::{AdamCfg, ArchCfg, ArtifactSpec, IoSpec, Manifest, Role, VariantCfg};
 pub use backend::{
-    open_backend, validate_bound_inputs, validate_bound_outputs, validate_device_tensor,
-    validate_inputs, validate_outputs, validate_tensor, Backend, BackendKind, Bindings,
-    Executable,
+    open_backend, open_backend_with_precision, validate_bound_inputs, validate_bound_outputs,
+    validate_device_tensor, validate_inputs, validate_outputs, validate_tensor, Backend,
+    BackendKind, Bindings, Executable,
 };
 pub use device::{staging, DeviceTensor};
 #[cfg(feature = "xla")]

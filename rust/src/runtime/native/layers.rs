@@ -35,6 +35,7 @@ use crate::dyad::kernel::{
     num_threads, parallel_rows, transpose,
 };
 use crate::runtime::artifact::{ArtifactSpec, Role};
+use crate::tensor::Precision;
 
 use super::linear::LinearView;
 use super::ops::{
@@ -603,7 +604,14 @@ impl Layer for Attention<'_> {
         let threads = ws.threads();
 
         // output projection: dW_o = dy^T @ merged, d_merged = dy @ W_o
-        let wo_view = LinearView::Dense { w: self.wo, b: self.wo_b, f_in: d, f_out: d };
+        // attention projections are not swap sites: always f32
+        let wo_view = LinearView::Dense {
+            w: self.wo,
+            b: self.wo_b,
+            f_in: d,
+            f_out: d,
+            precision: Precision::F32,
+        };
         let (mut g_wo, dmerged) = wo_view.backward_with_threads(&merged, dy, bs, true, threads)?;
         grads.add(&format!("{}.wo_b", self.prefix), g_wo.pop().context("wo db")?)?;
         grads.add(&format!("{}.wo", self.prefix), g_wo.pop().context("wo dw")?)?;
@@ -660,7 +668,13 @@ impl Layer for Attention<'_> {
             (self.wk, self.wk_b, "wk", self.from_heads(&dkh)),
             (self.wv, self.wv_b, "wv", self.from_heads(&dvh)),
         ] {
-            let view = LinearView::Dense { w, b: wb, f_in: d, f_out: d };
+            let view = LinearView::Dense {
+                w,
+                b: wb,
+                f_in: d,
+                f_out: d,
+                precision: Precision::F32,
+            };
             let (mut gs, dxp) = view.backward_with_threads(&x, &dm, bs, true, threads)?;
             grads.add(&format!("{}.{nm}_b", self.prefix), gs.pop().context("proj db")?)?;
             grads.add(&format!("{}.{nm}", self.prefix), gs.pop().context("proj dw")?)?;

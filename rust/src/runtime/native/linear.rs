@@ -17,20 +17,28 @@
 use anyhow::{bail, Result};
 
 use crate::dyad::kernel::{
-    dense_linear_with_threads, dyad_backward_dw_with_threads, dyad_linear_backward_dx_with_threads,
-    dyad_linear_with_threads, matmul_fast_with_threads, num_threads, transpose,
+    dense_linear_prec_with_threads, dyad_backward_dw_with_threads,
+    dyad_linear_backward_dx_prec_with_threads, dyad_linear_prec_with_threads,
+    matmul_fast_prec_with_threads, matmul_fast_with_threads, num_threads, transpose,
 };
 use crate::dyad::layout::dyad_full;
 use crate::dyad::{DyadDims, Variant};
+use crate::tensor::Precision;
 
 use super::ops::col_sums;
 
+/// Both arms carry a [`Precision`] tag selecting the weight-stream
+/// storage for the forward and the `dx` backward (`dw` accumulates
+/// activations and gradients — both f32 streams — so it is always
+/// f32). `Precision::F32` is bitwise identical to the pre-precision
+/// code paths.
 pub enum LinearView<'a> {
     Dense {
         w: &'a [f32],
         b: &'a [f32],
         f_in: usize,
         f_out: usize,
+        precision: Precision,
     },
     Dyad {
         wl: &'a [f32],
@@ -38,6 +46,7 @@ pub enum LinearView<'a> {
         b: &'a [f32],
         dims: DyadDims,
         variant: Variant,
+        precision: Precision,
     },
 }
 
@@ -66,11 +75,15 @@ impl LinearView<'_> {
     /// their [`super::layers::Workspace`]).
     pub fn forward_with_threads(&self, x: &[f32], t: usize, threads: usize) -> Vec<f32> {
         match self {
-            LinearView::Dense { w, b, f_in, f_out } => {
-                dense_linear_with_threads(x, w, Some(b), t, *f_in, *f_out, threads)
+            LinearView::Dense { w, b, f_in, f_out, precision } => {
+                dense_linear_prec_with_threads(
+                    x, w, Some(b), t, *f_in, *f_out, *precision, threads,
+                )
             }
-            LinearView::Dyad { wl, wu, b, dims, variant } => {
-                dyad_linear_with_threads(wl, wu, x, *dims, *variant, t, Some(b), threads)
+            LinearView::Dyad { wl, wu, b, dims, variant, precision } => {
+                dyad_linear_prec_with_threads(
+                    wl, wu, x, *dims, *variant, t, Some(b), *precision, threads,
+                )
             }
         }
     }
@@ -119,19 +132,24 @@ impl LinearView<'_> {
         }
         let db = col_sums(dy, f_out);
         Ok(match self {
-            LinearView::Dense { w, .. } => {
-                // dW = dy^T @ x  (f_out, f_in)
+            LinearView::Dense { w, precision, .. } => {
+                // dW = dy^T @ x  (f_out, f_in) — both streams are f32,
+                // so the weight gradient is always full precision
                 let dyt = transpose(dy, t, f_out);
                 let dw = matmul_fast_with_threads(&dyt, x, f_out, t, f_in, threads);
-                // dx = dy @ W  (t, f_in) — straight off the stored weights
-                let dx =
-                    need_dx.then(|| matmul_fast_with_threads(dy, w, t, f_out, f_in, threads));
+                // dx = dy @ W  (t, f_in) — the weight stream, at the
+                // view's precision
+                let dx = need_dx.then(|| {
+                    matmul_fast_prec_with_threads(dy, w, t, f_out, f_in, *precision, threads)
+                });
                 (vec![dw, db], dx)
             }
-            LinearView::Dyad { wl, wu, dims, variant, .. } => {
+            LinearView::Dyad { wl, wu, dims, variant, precision, .. } => {
                 let (dwl, dwu) = dyad_backward_dw_with_threads(x, dy, *dims, *variant, t, threads);
                 let dx = need_dx.then(|| {
-                    dyad_linear_backward_dx_with_threads(wl, wu, dy, *dims, *variant, t, threads)
+                    dyad_linear_backward_dx_prec_with_threads(
+                        wl, wu, dy, *dims, *variant, t, *precision, threads,
+                    )
                 });
                 (vec![dwl, dwu, db], dx)
             }
@@ -181,8 +199,15 @@ mod tests {
             let b = rand_vec(&mut rng, dims.f_out());
             let x = rand_vec(&mut rng, t * dims.f_in());
             let dy = rand_vec(&mut rng, t * dims.f_out());
-            for variant in [Variant::It, Variant::Ot, Variant::Dt] {
-                let view = LinearView::Dyad { wl: &wl, wu: &wu, b: &b, dims, variant };
+            for variant in [Variant::It, Variant::ItCat, Variant::Ot, Variant::Dt] {
+                let view = LinearView::Dyad {
+                    wl: &wl,
+                    wu: &wu,
+                    b: &b,
+                    dims,
+                    variant,
+                    precision: Precision::F32,
+                };
                 let (grads, dx) = view.backward(&x, &dy, t, true).unwrap();
                 let (rwl, rwu, rdx) =
                     crate::dyad::math::dyad_backward(&wl, &wu, &x, &dy, dims, variant, t);
@@ -219,17 +244,31 @@ mod tests {
 
     fn dyad_backward_gradcheck_at(rng: &mut Rng, dims: DyadDims) {
         let t = 4;
-        for variant in [Variant::It, Variant::Ot, Variant::Dt] {
+        for variant in [Variant::It, Variant::ItCat, Variant::Ot, Variant::Dt] {
             let wl = rand_vec(rng, dims.component_params());
             let wu = rand_vec(rng, dims.component_params());
             let b = rand_vec(rng, dims.f_out());
             let x = rand_vec(rng, t * dims.f_in());
             let ct = rand_vec(rng, t * dims.f_out());
             let loss = |wl: &[f32], wu: &[f32], b: &[f32], x: &[f32]| -> f32 {
-                let v = LinearView::Dyad { wl, wu, b, dims, variant };
+                let v = LinearView::Dyad {
+                    wl,
+                    wu,
+                    b,
+                    dims,
+                    variant,
+                    precision: Precision::F32,
+                };
                 v.forward(x, t).iter().zip(ct.iter()).map(|(a, c)| a * c).sum()
             };
-            let view = LinearView::Dyad { wl: &wl, wu: &wu, b: &b, dims, variant };
+            let view = LinearView::Dyad {
+                wl: &wl,
+                wu: &wu,
+                b: &b,
+                dims,
+                variant,
+                precision: Precision::F32,
+            };
             let (grads, dx) = view.backward(&x, &ct, t, true).unwrap();
             let (dwl, dwu, db) = (&grads[0], &grads[1], &grads[2]);
             let dx = dx.unwrap();
@@ -282,10 +321,10 @@ mod tests {
         let x = rand_vec(&mut rng, t * f_in);
         let ct = rand_vec(&mut rng, t * f_out);
         let loss = |w: &[f32], x: &[f32]| -> f32 {
-            let v = LinearView::Dense { w, b: &b, f_in, f_out };
+            let v = LinearView::Dense { w, b: &b, f_in, f_out, precision: Precision::F32 };
             v.forward(x, t).iter().zip(ct.iter()).map(|(a, c)| a * c).sum()
         };
-        let view = LinearView::Dense { w: &w, b: &b, f_in, f_out };
+        let view = LinearView::Dense { w: &w, b: &b, f_in, f_out, precision: Precision::F32 };
         let (grads, dx) = view.backward(&x, &ct, t, true).unwrap();
         let h = 1e-2f32;
         for idx in [0usize, 7, f_out * f_in - 1] {
@@ -303,5 +342,93 @@ mod tests {
         xm[2] -= h;
         let fd = (loss(&w, &xp) - loss(&w, &xm)) / (2.0 * h);
         assert!((dx[2] - fd).abs() < 2e-2 * (1.0 + fd.abs()));
+    }
+
+    /// bf16 rounds weights *elementwise*, which commutes with the
+    /// block transpose the dx pass applies — so the bf16 `dx` is the
+    /// exact input-gradient of the bf16 *forward*, and finite
+    /// differences of that forward must match it. (i8 quantises per
+    /// row along different axes in fwd vs dx, so it gets the
+    /// tolerance-vs-f32 treatment in the kernel tests instead.)
+    #[test]
+    fn bf16_dx_gradchecks_against_bf16_forward() {
+        let mut rng = Rng::new(101);
+        let dims = DyadDims { n_dyad: 2, n_in: 3, n_out: 4 };
+        let t = 3;
+        for variant in [Variant::It, Variant::ItCat, Variant::Ot, Variant::Dt] {
+            let wl = rand_vec(&mut rng, dims.component_params());
+            let wu = rand_vec(&mut rng, dims.component_params());
+            let b = rand_vec(&mut rng, dims.f_out());
+            let x = rand_vec(&mut rng, t * dims.f_in());
+            let ct = rand_vec(&mut rng, t * dims.f_out());
+            let loss = |x: &[f32]| -> f32 {
+                let v = LinearView::Dyad {
+                    wl: &wl,
+                    wu: &wu,
+                    b: &b,
+                    dims,
+                    variant,
+                    precision: Precision::Bf16,
+                };
+                v.forward(x, t).iter().zip(ct.iter()).map(|(a, c)| a * c).sum()
+            };
+            let view = LinearView::Dyad {
+                wl: &wl,
+                wu: &wu,
+                b: &b,
+                dims,
+                variant,
+                precision: Precision::Bf16,
+            };
+            let (_, dx) = view.backward(&x, &ct, t, true).unwrap();
+            let dx = dx.unwrap();
+            let h = 1e-2f32;
+            for idx in [0usize, 5, t * dims.f_in() - 1] {
+                let mut xp = x.to_vec();
+                xp[idx] += h;
+                let mut xm = x.to_vec();
+                xm[idx] -= h;
+                let fd = (loss(&xp) - loss(&xm)) / (2.0 * h);
+                assert!(
+                    (dx[idx] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{variant:?} dx[{idx}]: analytic {} vs fd {fd}",
+                    dx[idx]
+                );
+            }
+        }
+    }
+
+    /// Quantized views stay close to the f32 view on the forward —
+    /// the view-level version of the kernel quantisation tests, and
+    /// the invariant the backend quality gate asserts end to end.
+    #[test]
+    fn quantized_views_track_f32_forward() {
+        let mut rng = Rng::new(103);
+        let dims = DyadDims { n_dyad: 4, n_in: 8, n_out: 6 };
+        let t = 5;
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let b = rand_vec(&mut rng, dims.f_out());
+        let x = rand_vec(&mut rng, t * dims.f_in());
+        let mk = |precision: Precision| LinearView::Dyad {
+            wl: &wl,
+            wu: &wu,
+            b: &b,
+            dims,
+            variant: Variant::ItCat,
+            precision,
+        };
+        let base = mk(Precision::F32).forward(&x, t);
+        for (precision, tol) in [(Precision::Bf16, 1e-2f32), (Precision::I8, 3e-2f32)] {
+            let got = mk(precision).forward(&x, t);
+            let mut num = 0.0f32;
+            let mut den = 0.0f32;
+            for (a, b) in got.iter().zip(&base) {
+                num += (a - b) * (a - b);
+                den += b * b;
+            }
+            let rel = (num / den.max(1e-12)).sqrt();
+            assert!(rel < tol, "{precision:?}: relative L2 {rel} >= {tol}");
+        }
     }
 }

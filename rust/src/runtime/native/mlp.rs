@@ -11,6 +11,7 @@
 use anyhow::{bail, Result};
 
 use crate::runtime::catalog::{MNIST_CLASSES, MNIST_HIDDEN, MNIST_IN};
+use crate::tensor::Precision;
 
 use super::layers::{Activation, GradStore, Layer, LinearLayer, Sequential, Workspace};
 use super::linear::LinearView;
@@ -30,6 +31,8 @@ impl<'a> Mlp<'a> {
             b: self.p.f32("head.b")?,
             f_in: MNIST_HIDDEN,
             f_out: MNIST_CLASSES,
+            // the classifier head is not a swap site: always f32
+            precision: Precision::F32,
         })
     }
 

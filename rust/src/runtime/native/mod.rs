@@ -32,7 +32,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::dyad::Variant;
-use crate::tensor::{DType, Tensor};
+use crate::tensor::{DType, Precision, Tensor};
 
 use super::artifact::{ArchCfg, ArtifactSpec, Manifest, Role, VariantCfg};
 use super::backend::{
@@ -53,6 +53,10 @@ pub struct VariantSpec {
     pub n_dyad: usize,
     pub base: Variant,
     pub schedule: Vec<Variant>,
+    /// Weight-stream precision for the ff swap-site linears (fwd +
+    /// dx; attention, embeddings and the tied head stay f32). Set by
+    /// the backend's `--precision` plumbing; defaults to f32.
+    pub precision: Precision,
 }
 
 impl VariantSpec {
@@ -68,6 +72,7 @@ impl VariantSpec {
             n_dyad: cfg.n_dyad,
             base,
             schedule,
+            precision: Precision::F32,
         })
     }
 
@@ -95,6 +100,7 @@ impl VariantSpec {
                 b: p.f32(&format!("{prefix}.b"))?,
                 f_in,
                 f_out,
+                precision: self.precision,
             })
         } else {
             Ok(LinearView::Dyad {
@@ -103,6 +109,7 @@ impl VariantSpec {
                 b: p.f32(&format!("{prefix}.b"))?,
                 dims: crate::dyad::DyadDims::new(self.n_dyad, f_in, f_out)?,
                 variant: self.for_layer(layer),
+                precision: self.precision,
             })
         }
     }
@@ -125,13 +132,25 @@ enum Prog {
 pub struct NativeBackend {
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<NativeExe>>>,
+    /// Weight-stream precision applied to every ff/swap-site linear
+    /// this backend resolves (`--precision`). F32 is bitwise-identical
+    /// to the pre-precision backend.
+    precision: Precision,
 }
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
+        NativeBackend::with_precision(Precision::F32)
+    }
+
+    /// A backend whose resolved programs run their DYAD/dense ff
+    /// linears with quantized weight streams (fwd + dx; dw and all
+    /// non-swap-site math stay f32).
+    pub fn with_precision(precision: Precision) -> NativeBackend {
         NativeBackend {
             manifest: catalog::native_manifest(),
             cache: RefCell::new(HashMap::new()),
+            precision,
         }
     }
 }
@@ -153,7 +172,7 @@ impl Backend for NativeBackend {
             return Ok(as_dyn);
         }
         let spec = self.manifest.artifact(name)?.clone();
-        let prog = resolve(&spec, &self.manifest)
+        let prog = resolve(&spec, &self.manifest, self.precision)
             .with_context(|| format!("native backend: load {name}"))?;
         let exe = Rc::new(NativeExe { spec, prog });
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());
@@ -161,7 +180,12 @@ impl Backend for NativeBackend {
     }
 
     fn platform(&self) -> String {
-        format!("native-cpu ({} threads)", crate::dyad::kernel::num_threads())
+        let threads = crate::dyad::kernel::num_threads();
+        if self.precision == Precision::F32 {
+            format!("native-cpu ({threads} threads)")
+        } else {
+            format!("native-cpu ({threads} threads, {})", self.precision)
+        }
     }
 
     /// Zero-copy: the host tensor (and its element buffer) is moved
@@ -200,10 +224,12 @@ impl Backend for NativeBackend {
     }
 }
 
-fn resolve(spec: &ArtifactSpec, manifest: &Manifest) -> Result<Prog> {
+fn resolve(spec: &ArtifactSpec, manifest: &Manifest, precision: Precision) -> Result<Prog> {
     let var_of = |key: &str| -> Result<VariantSpec> {
         let vname = spec.meta.req(key)?.as_str()?;
-        VariantSpec::resolve(manifest.variant(vname)?)
+        let mut var = VariantSpec::resolve(manifest.variant(vname)?)?;
+        var.precision = precision;
+        Ok(var)
     };
     let arch_of = || -> Result<ArchCfg> {
         let aname = spec.meta.req("arch")?.as_str()?;
@@ -532,6 +558,42 @@ mod tests {
         assert_eq!(delta.legacy_run_bytes, 0);
         assert_eq!(out.len(), art.spec().outputs.len());
         assert_eq!(out[0].shape(), art.spec().outputs[0].shape.as_slice());
+    }
+
+    /// `with_precision` flows from the backend through `resolve` into
+    /// the executed program: an i8 backend produces activations close
+    /// to (but not bitwise equal to) the f32 backend on the same
+    /// inputs, and the platform string advertises the tag.
+    #[test]
+    fn backend_precision_flows_into_programs() {
+        let f32_backend = NativeBackend::new();
+        let i8_backend = NativeBackend::with_precision(Precision::I8);
+        assert!(!f32_backend.platform().contains("i8"));
+        assert!(i8_backend.platform().contains("i8"));
+        let name = "mnist/dyad_it/hidden_fwd";
+        let art_f32 = Backend::load(&f32_backend, name).unwrap();
+        let art_i8 = Backend::load(&i8_backend, name).unwrap();
+        let mut rng = crate::util::rng::Rng::new(11);
+        let inputs: Vec<Tensor> = art_f32
+            .spec()
+            .inputs
+            .iter()
+            .map(|io| {
+                let n: usize = io.shape.iter().product();
+                let vals = (0..n).map(|_| rng.uniform(-0.2, 0.2)).collect();
+                Tensor::from_f32(&io.shape, vals).unwrap()
+            })
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let y32 = art_f32.run(&refs).unwrap();
+        let y8 = art_i8.run(&refs).unwrap();
+        let a = y32[0].as_f32().unwrap();
+        let b = y8[0].as_f32().unwrap();
+        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        let den: f32 = a.iter().map(|x| x * x).sum::<f32>().max(1e-12);
+        let rel = (num / den).sqrt();
+        assert!(rel < 0.05, "i8 backend drifted {rel} rel-L2 from f32");
+        assert!(rel > 0.0, "i8 backend was bitwise equal to f32 — precision not applied");
     }
 }
 

@@ -499,11 +499,80 @@ mod tests {
         }
     }
 
+    /// The fused -CAT schedule trains end to end: the same full-model
+    /// gradcheck as `tiny_transformer_full_step_gradcheck`, but with
+    /// every swap-site linear running `dyad_fused_cat` /
+    /// `dyad_cat_backward_{dx,dw}` through the it_cat variant.
+    #[test]
+    fn tiny_transformer_it_cat_gradcheck() {
+        let arch = tiny_arch(false);
+        let (names, params, var) = tiny_state(&arch, "dyad_it_cat", 77);
+        let (b, s) = (2usize, 5usize);
+        let mut rng = Rng::new(5);
+        let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(arch.vocab) as i32).collect();
+        let loss_of = |params: &[Vec<f32>]| -> f32 {
+            let p = Params::from_named(&names, params);
+            let lm = Lm { arch: &arch, var: &var, p };
+            lm.loss_and_grads_with_threads(&tokens, b, s, 2).unwrap().0
+        };
+        let p = Params::from_named(&names, &params);
+        let lm = Lm { arch: &arch, var: &var, p };
+        let (loss, grads) = lm.loss_and_grads_with_threads(&tokens, b, s, 2).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        let h = 1e-2f32;
+        for (pi, name) in names.iter().enumerate() {
+            let g = grads.get(name).unwrap_or_else(|| panic!("no grad for {name}"));
+            let idx = (pi * 37) % params[pi].len();
+            let mut pp = params.clone();
+            pp[pi][idx] += h;
+            let mut pm = params.clone();
+            pm[pi][idx] -= h;
+            let fd = (loss_of(&pp) - loss_of(&pm)) / (2.0 * h);
+            let an = g[idx];
+            assert!(
+                (an - fd).abs() < 3e-2 * (1.0 + fd.abs()),
+                "it_cat {name}[{idx}]: analytic {an} vs fd {fd}"
+            );
+        }
+    }
+
+    /// Quantized weight streams keep the model usable: a tiny-arch
+    /// random-init eval loss under bf16/i8 stays within tolerance of
+    /// the f32 loss (the CI quality gate for `--precision`).
+    #[test]
+    fn precision_quality_gate() {
+        let arch = tiny_arch(false);
+        let (names, params, var) = tiny_state(&arch, "dyad_it", 19);
+        let (b, s) = (2usize, 6usize);
+        let mut rng = Rng::new(12);
+        let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(arch.vocab) as i32).collect();
+        let loss_at = |precision: crate::tensor::Precision| -> f32 {
+            let mut var = var.clone();
+            var.precision = precision;
+            let p = Params::from_named(&names, &params);
+            let lm = Lm { arch: &arch, var: &var, p };
+            lm.eval_loss(&tokens, b, s).unwrap()
+        };
+        let f32_loss = loss_at(crate::tensor::Precision::F32);
+        let bf16_loss = loss_at(crate::tensor::Precision::Bf16);
+        let i8_loss = loss_at(crate::tensor::Precision::I8);
+        assert!(f32_loss.is_finite() && bf16_loss.is_finite() && i8_loss.is_finite());
+        assert!(
+            (bf16_loss - f32_loss).abs() < 0.05,
+            "bf16 eval_loss {bf16_loss} drifted from f32 {f32_loss}"
+        );
+        assert!(
+            (i8_loss - f32_loss).abs() < 0.15,
+            "i8 eval_loss {i8_loss} drifted from f32 {f32_loss}"
+        );
+    }
+
     /// A few grad-clipped Adam steps on a repeated tiny batch reduce
-    /// the loss — train_microbatch end to end, dense and DYAD.
+    /// the loss — train_microbatch end to end, dense and DYAD
+    /// (including the fused -CAT schedule).
     #[test]
     fn train_microbatch_overfits_repeated_batch() {
-        for vname in ["dense", "dyad_it"] {
+        for vname in ["dense", "dyad_it", "dyad_it_cat"] {
             let arch = tiny_arch(false);
             let (names, mut params, var) = tiny_state(&arch, vname, 3);
             let mut m: Vec<Vec<f32>> =

@@ -5,4 +5,4 @@ mod io;
 mod tensor;
 
 pub use io::{load_checkpoint, save_checkpoint};
-pub use tensor::{DType, InitSpec, Tensor};
+pub use tensor::{DType, InitSpec, Precision, Tensor};

@@ -36,6 +36,56 @@ impl DType {
     }
 }
 
+/// Compute precision for a linear layer's weight stream.
+///
+/// Master weights stay f32 everywhere (init, Adam, checkpoints); the
+/// tag only selects how the *kernel* streams a layer's weights —
+/// full f32, bf16 truncated storage, or per-block-row symmetric int8
+/// with dequantisation in registers (`dyad::quant`). `F32` is the
+/// default and is bit-identical to the pre-precision code paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Bf16,
+    I8,
+}
+
+impl Precision {
+    pub fn from_str(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            "i8" | "int8" => Ok(Precision::I8),
+            _ => bail!("unknown precision {s:?} (expected f32 | bf16 | i8)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::I8 => "i8",
+        }
+    }
+
+    /// Bits per stored weight (i8 carries one extra f32 scale per
+    /// block row, not counted here).
+    pub fn weight_bits(&self) -> usize {
+        match self {
+            Precision::F32 => 32,
+            Precision::Bf16 => 16,
+            Precision::I8 => 8,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Parameter initialisation, mirroring the manifest's `init` specs
 /// (which in turn mirror the paper's §2.3 reference implementation).
 #[derive(Debug, Clone, PartialEq)]
