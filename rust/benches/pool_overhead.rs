@@ -1,0 +1,266 @@
+//! Pool-vs-scoped dispatch overhead: every kernel family, the Fig. 6
+//! ff widths, batch sizes {1, 8, 64} — measuring what the resident
+//! worker pool buys over the legacy per-call `std::thread::scope`
+//! spawn path (same partitioning, bitwise-identical results, so any
+//! delta is pure dispatch cost). Small batches are where it matters:
+//! a scoped spawn costs tens of microseconds per kernel call, which
+//! dominates a batch-1 serve-scoring linear.
+//!
+//! The scoped arm runs under [`pool::with_scoped_spawns`] — the same
+//! hook the parity tests use — so both arms execute the identical
+//! kernel bodies. Two end-to-end rows ride along: a full transformer
+//! train step and a serve-style batch-1 score.
+//!
+//! Results are persisted as `BENCH_pool.json` (`BENCH_JSON_DIR`
+//! redirects); `BENCH_QUICK=1` shrinks the sweep for CI smoke runs.
+
+use dyad_repro::bench_support::{quick_mode, write_bench_json};
+use dyad_repro::dyad::kernel::{
+    dense_linear_with_threads, dyad_fused_cat_with_threads, dyad_fused_with_threads,
+    dyad_linear_with_threads, matmul_fast_with_threads, num_threads,
+};
+use dyad_repro::dyad::{DyadDims, Variant};
+use dyad_repro::runtime::catalog::{self, model_param_specs};
+use dyad_repro::runtime::native::transformer::{train_microbatch, Lm};
+use dyad_repro::runtime::native::Params;
+use dyad_repro::runtime::pool;
+use dyad_repro::runtime::{ArchCfg, VariantSpec};
+use dyad_repro::tensor::{Precision, Tensor};
+use dyad_repro::util::json::{num, obj, s, Json};
+use dyad_repro::util::rng::Rng;
+use dyad_repro::util::stats::Summary;
+use dyad_repro::util::timer::Timer;
+
+fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> Summary {
+    // warmup (fills the scratch recycler, so the steady state is timed)
+    f();
+    f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_ms());
+    }
+    Summary::of(&samples)
+}
+
+/// Median ms for `f` on the pool path and on the legacy scoped-spawn
+/// path — identical kernel bodies, different dispatch.
+fn both_arms<F: FnMut()>(reps: usize, mut f: F) -> (f64, f64) {
+    let pooled = time_ms(reps, &mut f).p50;
+    let scoped = pool::with_scoped_spawns(|| time_ms(reps, &mut f).p50);
+    (pooled, scoped)
+}
+
+fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 0.05)).collect()
+}
+
+struct KernelRow {
+    family: &'static str,
+    width: usize,
+    batch: usize,
+    pool_ms: f64,
+    scoped_ms: f64,
+}
+
+fn kernel_rows(widths: &[usize], batches: &[usize], reps: usize) -> Vec<KernelRow> {
+    let threads = num_threads();
+    let mut rng = Rng::new(23);
+    let mut rows = Vec::new();
+    for &w in widths {
+        let dims = DyadDims::new(4, w, w).expect("fig6 widths divide n_dyad=4");
+        let wl = fill(&mut rng, dims.component_params());
+        let wu = fill(&mut rng, dims.component_params());
+        let dense_w = fill(&mut rng, w * w);
+        let bias = fill(&mut rng, w);
+        for &nb in batches {
+            let x = fill(&mut rng, w * nb);
+            let mut push = |family: &'static str, pool_ms: f64, scoped_ms: f64| {
+                rows.push(KernelRow { family, width: w, batch: nb, pool_ms, scoped_ms });
+            };
+            let (p, sc) = both_arms(reps, || {
+                std::hint::black_box(dense_linear_with_threads(
+                    &x,
+                    &dense_w,
+                    Some(&bias),
+                    nb,
+                    w,
+                    w,
+                    threads,
+                ));
+            });
+            push("dense_linear", p, sc);
+            let (p, sc) = both_arms(reps, || {
+                std::hint::black_box(dyad_linear_with_threads(
+                    &wl,
+                    &wu,
+                    &x,
+                    dims,
+                    Variant::It,
+                    nb,
+                    Some(&bias),
+                    threads,
+                ));
+            });
+            push("dyad_linear_it", p, sc);
+            let (p, sc) = both_arms(reps, || {
+                std::hint::black_box(dyad_fused_with_threads(
+                    &wl,
+                    &wu,
+                    &x,
+                    dims,
+                    Variant::It,
+                    nb,
+                    Some(&bias),
+                    threads,
+                ));
+            });
+            push("dyad_fused_it", p, sc);
+            let (p, sc) = both_arms(reps, || {
+                std::hint::black_box(dyad_fused_cat_with_threads(
+                    &wl,
+                    &wu,
+                    &x,
+                    dims,
+                    nb,
+                    Some(&bias),
+                    threads,
+                ));
+            });
+            push("dyad_fused_cat", p, sc);
+            let (p, sc) = both_arms(reps, || {
+                std::hint::black_box(matmul_fast_with_threads(
+                    &x, &dense_w, nb, w, w, threads,
+                ));
+            });
+            push("matmul_fast", p, sc);
+        }
+    }
+    rows
+}
+
+/// End-to-end pool-vs-scoped deltas: one full transformer train step
+/// and one serve-style batch-1 score, the two hot loops the runtime
+/// serves in production.
+fn end_to_end(w: usize, seq: usize, reps: usize) -> Vec<Json> {
+    let threads = num_threads();
+    let arch = ArchCfg {
+        vocab: 512,
+        d_model: w,
+        d_ff: 4 * w,
+        n_layers: 2,
+        n_heads: 8,
+        seq,
+        parallel_residual: false,
+    };
+    let variants = catalog::variants();
+    let vcfg = &variants["dyad_it"];
+    let mut var = VariantSpec::resolve(vcfg).expect("variant");
+    var.precision = Precision::F32;
+    let specs = model_param_specs(&arch, vcfg);
+    let mut rng = Rng::new(29);
+    let names: Vec<String> = specs.iter().map(|(n, _, _)| n.clone()).collect();
+    let mut params: Vec<Vec<f32>> = specs
+        .iter()
+        .map(|(_, sh, init)| Tensor::init(sh, init, &mut rng).as_f32().unwrap().to_vec())
+        .collect();
+    let mut m: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut v: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let tokens: Vec<i32> = (0..seq).map(|_| rng.range(3, 500) as i32).collect();
+    let mut step = 0.0f32;
+    let (train_pool, train_scoped) = both_arms(reps, || {
+        let loss = train_microbatch(
+            &arch, &var, &names, &mut params, &mut m, &mut v, &tokens, 1, seq,
+            &mut step, 1e-4, threads,
+        )
+        .expect("train step");
+        std::hint::black_box(loss);
+    });
+    let p = Params::from_named(&names, &params);
+    let lm = Lm { arch: &arch, var: &var, p };
+    let mask = vec![1.0f32; seq];
+    let (score_pool, score_scoped) = both_arms(reps, || {
+        let out = lm
+            .score_with_threads(&tokens, &mask, 1, seq, threads)
+            .expect("score");
+        std::hint::black_box(out);
+    });
+    vec![
+        obj(vec![
+            ("path", s("train_step")),
+            ("width", num(w as f64)),
+            ("pool_ms", num(train_pool)),
+            ("scoped_ms", num(train_scoped)),
+            ("scoped_vs_pool", num(train_scoped / train_pool)),
+        ]),
+        obj(vec![
+            ("path", s("serve_score_b1")),
+            ("width", num(w as f64)),
+            ("pool_ms", num(score_pool)),
+            ("scoped_ms", num(score_scoped)),
+            ("scoped_vs_pool", num(score_scoped / score_pool)),
+        ]),
+    ]
+}
+
+fn main() {
+    let quick = quick_mode();
+    let widths: &[usize] = if quick { &[256] } else { &[256, 512, 1024, 2048] };
+    let batches: &[usize] = if quick { &[1, 8] } else { &[1, 8, 64] };
+    let reps = if quick { 3 } else { 9 };
+    let seq = if quick { 32 } else { 128 };
+    println!(
+        "== pool overhead: resident worker pool vs per-call scoped spawns \
+         ({} threads{}) ==",
+        num_threads(),
+        if quick { ", quick mode" } else { "" }
+    );
+    println!(
+        "{:<16} {:>6} {:>6} {:>12} {:>12} {:>12}",
+        "family", "width", "batch", "pool(ms)", "scoped(ms)", "scoped/pool"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for r in kernel_rows(widths, batches, reps) {
+        println!(
+            "{:<16} {:>6} {:>6} {:>12.4} {:>12.4} {:>11.2}x",
+            r.family,
+            r.width,
+            r.batch,
+            r.pool_ms,
+            r.scoped_ms,
+            r.scoped_ms / r.pool_ms
+        );
+        rows.push(obj(vec![
+            ("family", s(r.family)),
+            ("width", num(r.width as f64)),
+            ("batch", num(r.batch as f64)),
+            ("pool_ms", num(r.pool_ms)),
+            ("scoped_ms", num(r.scoped_ms)),
+            ("scoped_vs_pool", num(r.scoped_ms / r.pool_ms)),
+        ]));
+    }
+    let e2e = end_to_end(widths[0], seq, reps);
+    for row in &e2e {
+        println!("{}", row.to_string());
+    }
+    let doc = obj(vec![
+        ("bench", s("pool_overhead")),
+        ("threads", num(num_threads() as f64)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+        ("end_to_end", Json::Arr(e2e)),
+    ]);
+    match write_bench_json("pool", &doc) {
+        Ok(path) => println!("\nbench json: {}", path.display()),
+        Err(e) => {
+            eprintln!("error: could not write BENCH_pool.json: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!(
+        "contract: both arms run identical kernel bodies over identical \
+         panel splits (bitwise-equal outputs); scoped/pool > 1 at small \
+         batches is the per-call spawn cost the resident pool removes"
+    );
+}

@@ -3,8 +3,13 @@
 //! This is the hot path of the native CPU backend. Unlike the oracles
 //! in [`super::math`] (kept simple for property tests), these kernels:
 //!
-//! * split work across row panels with `std::thread::scope`, one panel
-//!   per thread, so no synchronisation is needed inside a call;
+//! * split work across row panels on the resident
+//!   [`crate::runtime::pool`] worker pool, one panel per lane, so no
+//!   synchronisation is needed inside a call and no OS thread is
+//!   spawned after warmup (the legacy `std::thread::scope` path stays
+//!   reachable via `pool::with_scoped_spawns` for parity tests and
+//!   `benches/pool_overhead.rs` — the pool split is bitwise identical
+//!   to it at equal thread count);
 //! * block the dense matmul over the inner dimension so the B panel
 //!   stays cache-resident while a row panel streams through it;
 //! * run the fused DYAD forward (paper Eqs 3-10) *row-wise*: each
@@ -66,17 +71,109 @@ use std::sync::OnceLock;
 
 use super::layout::{DyadDims, Variant};
 use super::quant::{
-    axpy_bf16, axpy_i8, bf16_to_f32, dot_bf16, dot_i8, encode_bf16, quantize_rows_i8,
+    axpy_bf16, axpy_i8, bf16_to_f32, dot_bf16, dot_i8, encode_bf16_into, quantize_rows_i8_into,
 };
+use crate::runtime::pool;
 use crate::tensor::Precision;
+
+/// Thread-local best-fit recyclers for kernel-internal scratch: the
+/// -CAT gather panels, transpose intermediates, and the quantized
+/// weight-encode buffers. A `take_*` that misses the free list counts
+/// as a kernel allocation ([`pool::counters`]); after warmup the same
+/// call sequence hits every time, so the steady state allocates
+/// nothing. Buffers are zero-filled on `take_f32`/`take_u16`/`take_i8`
+/// so recycled scratch is indistinguishable from a fresh `vec![0; _]`.
+pub(crate) mod scratch {
+    use crate::runtime::pool::counters;
+    use std::cell::RefCell;
+
+    /// Free-list cap per type per thread — bounds idle memory without
+    /// ever evicting in a steady-state loop. Sized for a full
+    /// transformer train step, which recycles every tape frame,
+    /// activation and gradient buffer it touched (a few per layer).
+    const MAX_FREE: usize = 256;
+
+    macro_rules! recycler {
+        ($take:ident, $put:ident, $list:ident, $t:ty, $zero:expr) => {
+            thread_local! {
+                static $list: RefCell<Vec<Vec<$t>>> = const { RefCell::new(Vec::new()) };
+            }
+
+            /// Zero-filled buffer of `len`, reusing the smallest free
+            /// buffer whose capacity fits (best fit, so a repeating
+            /// size sequence converges to all-hits).
+            pub(crate) fn $take(len: usize) -> Vec<$t> {
+                let hit = $list.with(|l| {
+                    let mut l = l.borrow_mut();
+                    let mut best: Option<usize> = None;
+                    for (i, v) in l.iter().enumerate() {
+                        if v.capacity() < len {
+                            continue;
+                        }
+                        let better = match best {
+                            None => true,
+                            Some(b) => v.capacity() < l[b].capacity(),
+                        };
+                        if better {
+                            best = Some(i);
+                        }
+                    }
+                    best.map(|i| l.swap_remove(i))
+                });
+                match hit {
+                    Some(mut v) => {
+                        counters::note_arena_hit();
+                        v.clear();
+                        v.resize(len, $zero);
+                        v
+                    }
+                    None => {
+                        counters::note_kernel_alloc();
+                        vec![$zero; len]
+                    }
+                }
+            }
+
+            /// Return a buffer to this thread's free list.
+            pub(crate) fn $put(v: Vec<$t>) {
+                if v.capacity() == 0 {
+                    return;
+                }
+                $list.with(|l| {
+                    let mut l = l.borrow_mut();
+                    if l.len() < MAX_FREE {
+                        l.push(v);
+                    }
+                });
+            }
+        };
+    }
+
+    recycler!(take_f32, put_f32, F32_FREE, f32, 0.0f32);
+    recycler!(take_u16, put_u16, U16_FREE, u16, 0u16);
+    recycler!(take_i8, put_i8, I8_FREE, i8, 0i8);
+}
+
+/// A kernel-output buffer from the thread-local recycler. The
+/// `Vec`-returning entry points draw every output from here, so a
+/// steady-state loop that recycles its buffers (the layer stack does,
+/// via `Workspace::recycle`) allocates nothing after warmup; a miss
+/// counts as a kernel allocation and the zero-alloc tests assert the
+/// steady state has none.
+fn fresh_out(len: usize) -> Vec<f32> {
+    scratch::take_f32(len)
+}
 
 /// Worker count: `DYAD_NUM_THREADS` env override, else the machine's
 /// available parallelism, else 1.
 ///
 /// Resolved once per process and cached in a [`OnceLock`] — kernels
 /// call this on every dispatch, and re-reading the environment is a
-/// syscall in the hot path. Tests that need a specific count use the
-/// `*_with_threads` escape hatches instead of mutating the env.
+/// syscall in the hot path. The cache only pins the *default*:
+/// explicit pool construction ([`pool::ThreadPool::new`],
+/// [`pool::sized`]) and the `*_with_threads` escape hatches honor the
+/// caller's count and never consult it. Tests that need a specific
+/// count use those instead of mutating the env.
 pub fn num_threads() -> usize {
     static CACHED: OnceLock<usize> = OnceLock::new();
     *CACHED.get_or_init(|| {
@@ -320,7 +417,8 @@ impl WeightRows for F32Rows<'_> {
     }
 }
 
-/// bf16-truncated rows (encoded once per kernel call).
+/// bf16-truncated rows (encoded once per kernel call, into recycled
+/// [`scratch`] so the steady state re-encodes without allocating).
 struct Bf16Rows {
     w: Vec<u16>,
     row_len: usize,
@@ -329,7 +427,15 @@ struct Bf16Rows {
 impl Bf16Rows {
     fn encode(w: &[f32], row_len: usize) -> Self {
         debug_assert!(row_len > 0 && w.len() % row_len == 0);
-        Bf16Rows { w: encode_bf16(w), row_len }
+        let mut buf = scratch::take_u16(w.len());
+        encode_bf16_into(w, &mut buf);
+        Bf16Rows { w: buf, row_len }
+    }
+}
+
+impl Drop for Bf16Rows {
+    fn drop(&mut self) {
+        scratch::put_u16(std::mem::take(&mut self.w));
     }
 }
 
@@ -360,8 +466,18 @@ struct I8Rows {
 
 impl I8Rows {
     fn encode(w: &[f32], row_len: usize) -> Self {
-        let (q, scale) = quantize_rows_i8(w, row_len);
+        debug_assert!(row_len > 0 && w.len() % row_len == 0);
+        let mut q = scratch::take_i8(w.len());
+        let mut scale = scratch::take_f32(w.len() / row_len);
+        quantize_rows_i8_into(w, row_len, &mut q, &mut scale);
         I8Rows { q, scale, row_len }
+    }
+}
+
+impl Drop for I8Rows {
+    fn drop(&mut self) {
+        scratch::put_i8(std::mem::take(&mut self.q));
+        scratch::put_f32(std::mem::take(&mut self.scale));
     }
 }
 
@@ -390,6 +506,13 @@ impl WeightRows for I8Rows {
 /// `out`, split across `threads` row panels. Rows are disjoint, so the
 /// closure runs without any locking; each row sees a fixed sequential
 /// execution, keeping results independent of the thread count.
+///
+/// Dispatches on the resident [`pool::sized`] worker pool — panel `t`
+/// of the `rows_per = n_rows.div_ceil(threads)` split is lane `t`'s
+/// task, the exact chunking the old scoped-spawn path used, so the
+/// results are bitwise identical to it at equal thread count (and no
+/// OS thread is spawned after the pool exists). The legacy spawn path
+/// stays reachable via [`pool::with_scoped_spawns`].
 pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, threads: usize, f: &F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -405,7 +528,44 @@ where
         }
         return;
     }
+    if pool::scoped_spawns_forced() {
+        return parallel_rows_scoped(out, row_len, threads, f);
+    }
+    parallel_rows_in(&pool::sized(threads), out, row_len, f);
+}
+
+/// [`parallel_rows`] on an explicit pool handle: the panel split uses
+/// `pool.threads()` lanes (clamped to the row count), task `t` owning
+/// the `t`-th `rows_per`-row panel.
+pub fn parallel_rows_in<F>(pool: &pool::ThreadPool, out: &mut [f32], row_len: usize, f: &F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if row_len == 0 || out.is_empty() {
+        return;
+    }
+    let n_rows = out.len() / row_len;
+    let threads = pool.threads().clamp(1, n_rows.max(1));
     let rows_per = n_rows.div_ceil(threads);
+    pool.run_chunks(out, rows_per * row_len, &|t, chunk| {
+        let start = t * rows_per;
+        for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+            f(start + i, row);
+        }
+    });
+}
+
+/// The pre-pool reference path: one fresh OS thread per panel via
+/// `std::thread::scope`, identical split. Kept (and spawn-counted) so
+/// parity tests and `benches/pool_overhead.rs` can measure the pool
+/// against it through the same public entry points.
+fn parallel_rows_scoped<F>(out: &mut [f32], row_len: usize, threads: usize, f: &F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let n_rows = out.len() / row_len;
+    let rows_per = n_rows.div_ceil(threads);
+    pool::counters::note_spawn(out.len().div_ceil(rows_per * row_len) as u64);
     std::thread::scope(|s| {
         for (t, chunk) in out.chunks_mut(rows_per * row_len).enumerate() {
             let start = t * rows_per;
@@ -432,40 +592,70 @@ pub fn matmul_fast_with_threads(
     n: usize,
     threads: usize,
 ) -> Vec<f32> {
+    let mut out = fresh_out(m * n);
+    matmul_fast_into(a, b, m, k, n, threads, &mut out);
+    out
+}
+
+/// [`matmul_fast`] into a caller-owned `(m, n)` buffer, zeroed here —
+/// hand it a recycled arena buffer and the call allocates nothing.
+/// Panel schedule and accumulation order are identical to the `Vec`
+/// entry point: bitwise-equal results.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_fast_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
     if m == 0 || n == 0 {
-        return out;
+        return;
     }
     let threads = threads.clamp(1, m);
     // B panel of KB rows: KB * n * 4 bytes; 64 rows of a 4096-wide B is
     // 1 MB — L2-resident on anything we target.
     const KB: usize = 64;
     let rows_per = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
-            let i0 = t * rows_per;
-            s.spawn(move || {
-                let rows = chunk.len() / n;
-                let mut p0 = 0;
-                while p0 < k {
-                    let p1 = (p0 + KB).min(k);
-                    for i in 0..rows {
-                        let arow = &a[(i0 + i) * k..(i0 + i + 1) * k];
-                        let orow = &mut chunk[i * n..(i + 1) * n];
-                        for (p, &av) in arow.iter().enumerate().take(p1).skip(p0) {
-                            if av != 0.0 {
-                                axpy(orow, av, &b[p * n..(p + 1) * n]);
-                            }
-                        }
+    let panel = |t: usize, chunk: &mut [f32]| {
+        let i0 = t * rows_per;
+        let rows = chunk.len() / n;
+        let mut p0 = 0;
+        while p0 < k {
+            let p1 = (p0 + KB).min(k);
+            for i in 0..rows {
+                let arow = &a[(i0 + i) * k..(i0 + i + 1) * k];
+                let orow = &mut chunk[i * n..(i + 1) * n];
+                for (p, &av) in arow.iter().enumerate().take(p1).skip(p0) {
+                    if av != 0.0 {
+                        axpy(orow, av, &b[p * n..(p + 1) * n]);
                     }
-                    p0 = p1;
                 }
-            });
+            }
+            p0 = p1;
         }
-    });
-    out
+    };
+    if threads <= 1 {
+        panel(0, out);
+        return;
+    }
+    if pool::scoped_spawns_forced() {
+        pool::counters::note_spawn(out.len().div_ceil(rows_per * n) as u64);
+        let panel = &panel;
+        std::thread::scope(|s| {
+            for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                s.spawn(move || panel(t, chunk));
+            }
+        });
+        return;
+    }
+    pool::sized(threads).run_chunks(out, rows_per * n, &panel);
 }
 
 /// `a (m, k) @ b^T` where `b` is `(n, k)` row-major — the natural form
@@ -482,21 +672,38 @@ pub fn matmul_bt_with_threads(
     n: usize,
     threads: usize,
 ) -> Vec<f32> {
+    let mut out = fresh_out(m * n);
+    matmul_bt_into(a, b, m, k, n, threads, &mut out);
+    out
+}
+
+/// [`matmul_bt`] into a caller-owned `(m, n)` buffer. Every element is
+/// overwritten (each output row is a fresh dot sweep), so a dirty
+/// recycled buffer is fine.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), n * k);
-    let mut out = vec![0.0f32; m * n];
-    parallel_rows(&mut out, n, threads, &|i, orow| {
+    assert_eq!(out.len(), m * n);
+    parallel_rows(out, n, threads, &|i, orow| {
         let arow = &a[i * k..(i + 1) * k];
         for (j, o) in orow.iter_mut().enumerate() {
             *o = dot(arow, &b[j * k..(j + 1) * k]);
         }
     });
-    out
 }
 
 /// Transpose a row-major `(m, n)` matrix into `(n, m)`.
 pub fn transpose(a: &[f32], m: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
+    let mut out = fresh_out(m * n);
     transpose_into(a, m, n, &mut out);
     out
 }
@@ -549,15 +756,32 @@ pub fn dense_linear_with_threads(
     f_out: usize,
     threads: usize,
 ) -> Vec<f32> {
-    let mut y = matmul_bt_with_threads(x, w, t, f_in, f_out, threads);
+    let mut y = fresh_out(t * f_out);
+    dense_linear_into(x, w, bias, t, f_in, f_out, threads, &mut y);
+    y
+}
+
+/// [`dense_linear`] into a caller-owned `(t, f_out)` buffer (fully
+/// overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_linear_into(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    t: usize,
+    f_in: usize,
+    f_out: usize,
+    threads: usize,
+    y: &mut [f32],
+) {
+    matmul_bt_into(x, w, t, f_in, f_out, threads, y);
     if let Some(b) = bias {
-        for row in y.chunks_mut(f_out) {
+        for row in y.chunks_mut(f_out.max(1)) {
             for (o, &bv) in row.iter_mut().zip(b) {
                 *o += bv;
             }
         }
     }
-    y
 }
 
 /// [`dense_linear`] with the weight matrix streamed at a chosen
@@ -587,23 +811,44 @@ pub fn dense_linear_prec_with_threads(
     prec: Precision,
     threads: usize,
 ) -> Vec<f32> {
+    let mut y = fresh_out(t * f_out);
+    dense_linear_prec_into(x, w, bias, t, f_in, f_out, prec, threads, &mut y);
+    y
+}
+
+/// [`dense_linear_prec`] into a caller-owned `(t, f_out)` buffer
+/// (fully overwritten; the weight-encode scratch is recycled).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_linear_prec_into(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    t: usize,
+    f_in: usize,
+    f_out: usize,
+    prec: Precision,
+    threads: usize,
+    y: &mut [f32],
+) {
     assert_eq!(x.len(), t * f_in);
     assert_eq!(w.len(), f_out * f_in);
+    assert_eq!(y.len(), t * f_out);
     match prec {
-        Precision::F32 => dense_linear_with_threads(x, w, bias, t, f_in, f_out, threads),
+        Precision::F32 => dense_linear_into(x, w, bias, t, f_in, f_out, threads, y),
         Precision::Bf16 => {
             let wm = Bf16Rows::encode(w, f_in);
-            dense_linear_generic(x, &wm, bias, t, f_in, f_out, threads)
+            dense_linear_generic(x, &wm, bias, t, f_in, f_out, threads, y);
         }
         Precision::I8 => {
             let wm = I8Rows::encode(w, f_in);
-            dense_linear_generic(x, &wm, bias, t, f_in, f_out, threads)
+            dense_linear_generic(x, &wm, bias, t, f_in, f_out, threads, y);
         }
     }
 }
 
 /// Per-row `y[i, j] = dot(w[j, :], x[i, :]) (+ b[j])` — the
 /// [`matmul_bt`] schedule over generic weight rows.
+#[allow(clippy::too_many_arguments)]
 fn dense_linear_generic<W: WeightRows>(
     x: &[f32],
     wm: &W,
@@ -612,9 +857,10 @@ fn dense_linear_generic<W: WeightRows>(
     f_in: usize,
     f_out: usize,
     threads: usize,
-) -> Vec<f32> {
-    let mut y = vec![0.0f32; t * f_out];
-    parallel_rows(&mut y, f_out, threads, &|i, orow| {
+    y: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), t * f_out);
+    parallel_rows(y, f_out, threads, &|i, orow| {
         let xrow = &x[i * f_in..(i + 1) * f_in];
         for (j, o) in orow.iter_mut().enumerate() {
             *o = wm.dot_row(j, xrow);
@@ -625,7 +871,6 @@ fn dense_linear_generic<W: WeightRows>(
             }
         }
     });
-    y
 }
 
 /// [`matmul_fast`] with the `b` operand streamed at a chosen
@@ -642,19 +887,37 @@ pub fn matmul_fast_prec_with_threads(
     prec: Precision,
     threads: usize,
 ) -> Vec<f32> {
+    let mut out = fresh_out(m * n);
+    matmul_fast_prec_into(a, b, m, k, n, prec, threads, &mut out);
+    out
+}
+
+/// [`matmul_fast_prec_with_threads`] into a caller-owned `(m, n)`
+/// buffer (zeroed here; the weight-encode scratch is recycled).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_fast_prec_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    prec: Precision,
+    threads: usize,
+    out: &mut [f32],
+) {
     match prec {
-        Precision::F32 => matmul_fast_with_threads(a, b, m, k, n, threads),
+        Precision::F32 => matmul_fast_into(a, b, m, k, n, threads, out),
         Precision::Bf16 => {
             assert_eq!(a.len(), m * k);
             assert_eq!(b.len(), k * n);
             let bm = Bf16Rows::encode(b, n);
-            matmul_rows_generic(a, &bm, m, k, n, threads)
+            matmul_rows_generic(a, &bm, m, k, n, threads, out);
         }
         Precision::I8 => {
             assert_eq!(a.len(), m * k);
             assert_eq!(b.len(), k * n);
             let bm = I8Rows::encode(b, n);
-            matmul_rows_generic(a, &bm, m, k, n, threads)
+            matmul_rows_generic(a, &bm, m, k, n, threads, out);
         }
     }
 }
@@ -669,12 +932,14 @@ fn matmul_rows_generic<W: WeightRows>(
     k: usize,
     n: usize,
     threads: usize,
-) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
     if m == 0 || n == 0 {
-        return out;
+        return;
     }
-    parallel_rows(&mut out, n, threads, &|i, orow| {
+    parallel_rows(out, n, threads, &|i, orow| {
         let arow = &a[i * k..(i + 1) * k];
         for (p, &av) in arow.iter().enumerate() {
             if av != 0.0 {
@@ -682,7 +947,6 @@ fn matmul_rows_generic<W: WeightRows>(
             }
         }
     });
-    out
 }
 
 /// Fused DYAD forward (paper Eqs 3-10) on column-major activations:
@@ -717,10 +981,29 @@ pub fn dyad_fused_with_threads(
     bias: Option<&[f32]>,
     threads: usize,
 ) -> Vec<f32> {
+    let mut y = fresh_out(dims.f_out() * nb);
+    dyad_fused_into(wl, wu, x, dims, variant, nb, bias, threads, &mut y);
+    y
+}
+
+/// [`dyad_fused`] into a caller-owned `(f_out, nb)` buffer (zeroed
+/// here — recycled arena buffers are fine).
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_fused_into(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    bias: Option<&[f32]>,
+    threads: usize,
+    y: &mut [f32],
+) {
     assert_fused_shapes(wl, wu, x, dims, nb, bias);
     let w1m = F32Rows::new(wl, dims.n_in);
     let w2m = F32Rows::new(wu, dims.n_in);
-    dyad_fused_generic(&w1m, &w2m, x, dims, variant, nb, bias, threads)
+    dyad_fused_generic(&w1m, &w2m, x, dims, variant, nb, bias, threads, y);
 }
 
 /// Fused DYAD forward at a chosen weight-stream precision. `F32`
@@ -753,19 +1036,39 @@ pub fn dyad_fused_prec_with_threads(
     prec: Precision,
     threads: usize,
 ) -> Vec<f32> {
+    let mut y = fresh_out(dims.f_out() * nb);
+    dyad_fused_prec_into(wl, wu, x, dims, variant, nb, bias, prec, threads, &mut y);
+    y
+}
+
+/// [`dyad_fused_prec`] into a caller-owned `(f_out, nb)` buffer
+/// (zeroed here; the weight-encode scratch is recycled).
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_fused_prec_into(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+    threads: usize,
+    y: &mut [f32],
+) {
     match prec {
-        Precision::F32 => dyad_fused_with_threads(wl, wu, x, dims, variant, nb, bias, threads),
+        Precision::F32 => dyad_fused_into(wl, wu, x, dims, variant, nb, bias, threads, y),
         Precision::Bf16 => {
             assert_fused_shapes(wl, wu, x, dims, nb, bias);
             let w1m = Bf16Rows::encode(wl, dims.n_in);
             let w2m = Bf16Rows::encode(wu, dims.n_in);
-            dyad_fused_generic(&w1m, &w2m, x, dims, variant, nb, bias, threads)
+            dyad_fused_generic(&w1m, &w2m, x, dims, variant, nb, bias, threads, y);
         }
         Precision::I8 => {
             assert_fused_shapes(wl, wu, x, dims, nb, bias);
             let w1m = I8Rows::encode(wl, dims.n_in);
             let w2m = I8Rows::encode(wu, dims.n_in);
-            dyad_fused_generic(&w1m, &w2m, x, dims, variant, nb, bias, threads)
+            dyad_fused_generic(&w1m, &w2m, x, dims, variant, nb, bias, threads, y);
         }
     }
 }
@@ -794,10 +1097,28 @@ pub fn dyad_fused_cat_with_threads(
     bias: Option<&[f32]>,
     threads: usize,
 ) -> Vec<f32> {
+    let mut y = fresh_out(dims.f_out() * nb);
+    dyad_fused_cat_into(wl, wu, x, dims, nb, bias, threads, &mut y);
+    y
+}
+
+/// [`dyad_fused_cat`] into a caller-owned `(f_out, nb)` buffer; the
+/// gathered -CAT panel comes from recycled [`scratch`].
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_fused_cat_into(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    nb: usize,
+    bias: Option<&[f32]>,
+    threads: usize,
+    y: &mut [f32],
+) {
     assert_fused_shapes(wl, wu, x, dims, nb, bias);
     let w1m = F32Rows::new(wl, dims.n_in);
     let w2m = F32Rows::new(wu, dims.n_in);
-    dyad_fused_cat_generic(&w1m, &w2m, x, dims, nb, bias, threads)
+    dyad_fused_cat_generic(&w1m, &w2m, x, dims, nb, bias, threads, y);
 }
 
 fn assert_fused_shapes(
@@ -829,15 +1150,17 @@ fn dyad_fused_generic<W1: WeightRows, W2: WeightRows>(
     nb: usize,
     bias: Option<&[f32]>,
     threads: usize,
-) -> Vec<f32> {
+    y: &mut [f32],
+) {
     if variant.is_cat() {
-        return dyad_fused_cat_generic(w1m, w2m, x, dims, nb, bias, threads);
+        return dyad_fused_cat_generic(w1m, w2m, x, dims, nb, bias, threads, y);
     }
     let DyadDims { n_dyad, n_in, n_out } = dims;
     let in_perm = variant.in_perm();
     let out_perm = variant.out_perm();
-    let mut y = vec![0.0f32; dims.f_out() * nb];
-    parallel_rows(&mut y, nb, threads, &|r, orow| {
+    assert_eq!(y.len(), dims.f_out() * nb);
+    y.fill(0.0);
+    parallel_rows(y, nb, threads, &|r, orow| {
         if let Some(b) = bias {
             orow.fill(b[r]);
         }
@@ -878,7 +1201,6 @@ fn dyad_fused_generic<W1: WeightRows, W2: WeightRows>(
             }
         }
     });
-    y
 }
 
 /// The -CAT forward: gather the block-grouped concatenated panel
@@ -890,6 +1212,7 @@ fn dyad_fused_generic<W1: WeightRows, W2: WeightRows>(
 /// all); for `nb > 1` the per-`k` axpy2 sources become adjacent
 /// panel rows, matching the IT schedule's values and order exactly
 /// (the parity tests pin this bitwise).
+#[allow(clippy::too_many_arguments)]
 fn dyad_fused_cat_generic<W1: WeightRows, W2: WeightRows>(
     w1m: &W1,
     w2m: &W2,
@@ -898,17 +1221,19 @@ fn dyad_fused_cat_generic<W1: WeightRows, W2: WeightRows>(
     nb: usize,
     bias: Option<&[f32]>,
     threads: usize,
-) -> Vec<f32> {
+    y: &mut [f32],
+) {
     let DyadDims { n_dyad, n_in, n_out } = dims;
     let two_n_in = 2 * n_in;
-    let mut xc = vec![0.0f32; 2 * dims.f_in() * nb];
+    let mut xc = scratch::take_f32(2 * dims.f_in() * nb);
     parallel_rows(&mut xc, nb, threads, &|j, row| {
         let (i, r) = (j / two_n_in, j % two_n_in);
         let src = if r < n_in { i * n_in + r } else { (r - n_in) * n_dyad + i };
         row.copy_from_slice(&x[src * nb..(src + 1) * nb]);
     });
-    let mut y = vec![0.0f32; dims.f_out() * nb];
-    parallel_rows(&mut y, nb, threads, &|r, orow| {
+    assert_eq!(y.len(), dims.f_out() * nb);
+    y.fill(0.0);
+    parallel_rows(y, nb, threads, &|r, orow| {
         if let Some(b) = bias {
             orow.fill(b[r]);
         }
@@ -933,7 +1258,7 @@ fn dyad_fused_cat_generic<W1: WeightRows, W2: WeightRows>(
             }
         }
     });
-    y
+    scratch::put_f32(xc);
 }
 
 /// DYAD linear on row-major activations (`x (t, f_in)` -> `(t, f_out)`),
@@ -963,9 +1288,26 @@ pub fn dyad_linear_with_threads(
     bias: Option<&[f32]>,
     threads: usize,
 ) -> Vec<f32> {
-    let xc = transpose(x, t, dims.f_in());
-    let yc = dyad_fused_with_threads(wl, wu, &xc, dims, variant, t, bias, threads);
-    transpose(&yc, dims.f_out(), t)
+    let mut y = fresh_out(t * dims.f_out());
+    dyad_linear_into(wl, wu, x, dims, variant, t, bias, threads, &mut y);
+    y
+}
+
+/// [`dyad_linear`] into a caller-owned `(t, f_out)` buffer; the
+/// transpose intermediates come from recycled [`scratch`].
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear_into(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    bias: Option<&[f32]>,
+    threads: usize,
+    y: &mut [f32],
+) {
+    dyad_linear_prec_into(wl, wu, x, dims, variant, t, bias, Precision::F32, threads, y);
 }
 
 /// Row-major [`dyad_fused_prec_with_threads`].
@@ -995,10 +1337,34 @@ pub fn dyad_linear_prec_with_threads(
     prec: Precision,
     threads: usize,
 ) -> Vec<f32> {
-    let xc = transpose(x, t, dims.f_in());
-    let yc =
-        dyad_fused_prec_with_threads(wl, wu, &xc, dims, variant, t, bias, prec, threads);
-    transpose(&yc, dims.f_out(), t)
+    let mut y = fresh_out(t * dims.f_out());
+    dyad_linear_prec_into(wl, wu, x, dims, variant, t, bias, prec, threads, &mut y);
+    y
+}
+
+/// [`dyad_linear_prec`] into a caller-owned `(t, f_out)` buffer; the
+/// transpose intermediates come from recycled [`scratch`].
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear_prec_into(
+    wl: &[f32],
+    wu: &[f32],
+    x: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+    threads: usize,
+    y: &mut [f32],
+) {
+    assert_eq!(y.len(), t * dims.f_out());
+    let mut xc = scratch::take_f32(t * dims.f_in());
+    transpose_into(x, t, dims.f_in(), &mut xc);
+    let mut yc = scratch::take_f32(dims.f_out() * t);
+    dyad_fused_prec_into(wl, wu, &xc, dims, variant, t, bias, prec, threads, &mut yc);
+    transpose_into(&yc, dims.f_out(), t, y);
+    scratch::put_f32(xc);
+    scratch::put_f32(yc);
 }
 
 /// Transpose each `(n_out, n_in)` block of a component tensor into
@@ -1007,16 +1373,15 @@ pub fn dyad_linear_prec_with_threads(
 /// one O(component_params) block transpose (2/n_dyad of dense, reused
 /// across every activation column and input row) turns that into a
 /// contiguous read. The *activations* are never gathered or copied.
-fn transpose_blocks(w: &[f32], dims: DyadDims) -> Vec<f32> {
+fn transpose_blocks_into(w: &[f32], dims: DyadDims, out: &mut [f32]) {
     let DyadDims { n_dyad, n_in, n_out } = dims;
     assert_eq!(w.len(), dims.component_params());
-    let mut out = vec![0.0f32; w.len()];
+    assert_eq!(out.len(), w.len());
     let blk = n_out * n_in;
     for i in 0..n_dyad {
         let src = &w[i * blk..(i + 1) * blk];
         transpose_into(src, n_out, n_in, &mut out[i * blk..(i + 1) * blk]);
     }
-    out
 }
 
 /// Structured DYAD backward, input-gradient half (paper training path):
@@ -1069,28 +1434,52 @@ pub fn dyad_backward_dx_prec_with_threads(
     prec: Precision,
     threads: usize,
 ) -> Vec<f32> {
+    let mut dx = fresh_out(dims.f_in() * nb);
+    dyad_backward_dx_prec_into(wl, wu, dy, dims, variant, nb, prec, threads, &mut dx);
+    dx
+}
+
+/// [`dyad_backward_dx_prec_with_threads`] into a caller-owned
+/// `(f_in, nb)` buffer; the block-transpose (and quantized-encode)
+/// scratch is recycled.
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_backward_dx_prec_into(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    nb: usize,
+    prec: Precision,
+    threads: usize,
+    dx: &mut [f32],
+) {
     assert_eq!(wl.len(), dims.component_params());
     assert_eq!(wu.len(), dims.component_params());
     assert_eq!(dy.len(), dims.f_out() * nb);
-    let wlt = transpose_blocks(wl, dims);
-    let wut = transpose_blocks(wu, dims);
+    let mut wlt = scratch::take_f32(wl.len());
+    let mut wut = scratch::take_f32(wu.len());
+    transpose_blocks_into(wl, dims, &mut wlt);
+    transpose_blocks_into(wu, dims, &mut wut);
     match prec {
         Precision::F32 => {
             let w1m = F32Rows::new(&wlt, dims.n_out);
             let w2m = F32Rows::new(&wut, dims.n_out);
-            dyad_backward_dx_generic(&w1m, &w2m, dy, dims, variant, nb, threads)
+            dyad_backward_dx_generic(&w1m, &w2m, dy, dims, variant, nb, threads, dx);
         }
         Precision::Bf16 => {
             let w1m = Bf16Rows::encode(&wlt, dims.n_out);
             let w2m = Bf16Rows::encode(&wut, dims.n_out);
-            dyad_backward_dx_generic(&w1m, &w2m, dy, dims, variant, nb, threads)
+            dyad_backward_dx_generic(&w1m, &w2m, dy, dims, variant, nb, threads, dx);
         }
         Precision::I8 => {
             let w1m = I8Rows::encode(&wlt, dims.n_out);
             let w2m = I8Rows::encode(&wut, dims.n_out);
-            dyad_backward_dx_generic(&w1m, &w2m, dy, dims, variant, nb, threads)
+            dyad_backward_dx_generic(&w1m, &w2m, dy, dims, variant, nb, threads, dx);
         }
     }
+    scratch::put_f32(wlt);
+    scratch::put_f32(wut);
 }
 
 /// The IT `dx` schedule is already a fused contiguous single pass —
@@ -1119,6 +1508,7 @@ pub fn dyad_cat_backward_dx_with_threads(
     dyad_backward_dx_with_threads(wl, wu, dy, dims, Variant::ItCat, nb, threads)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dyad_backward_dx_generic<W1: WeightRows, W2: WeightRows>(
     w1m: &W1,
     w2m: &W2,
@@ -1127,12 +1517,14 @@ fn dyad_backward_dx_generic<W1: WeightRows, W2: WeightRows>(
     variant: Variant,
     nb: usize,
     threads: usize,
-) -> Vec<f32> {
+    dx: &mut [f32],
+) {
     let DyadDims { n_dyad, n_in, n_out } = dims;
     let in_perm = variant.in_perm();
     let out_perm = variant.out_perm();
-    let mut dx = vec![0.0f32; dims.f_in() * nb];
-    parallel_rows(&mut dx, nb, threads, &|c, orow| {
+    assert_eq!(dx.len(), dims.f_in() * nb);
+    dx.fill(0.0);
+    parallel_rows(dx, nb, threads, &|c, orow| {
         // BLOCKDIAG^T: input row c lives in block i1 = c / n_in.
         let (i1, k1) = (c / n_in, c % n_in);
         let r1 = i1 * n_in + k1;
@@ -1167,7 +1559,6 @@ fn dyad_backward_dx_generic<W1: WeightRows, W2: WeightRows>(
             }
         }
     });
-    dx
 }
 
 /// Row-major wrapper for [`dyad_backward_dx`]: `dy (t, f_out)` ->
@@ -1224,10 +1615,33 @@ pub fn dyad_linear_backward_dx_prec_with_threads(
     prec: Precision,
     threads: usize,
 ) -> Vec<f32> {
-    let dyc = transpose(dy, t, dims.f_out());
-    let dxc =
-        dyad_backward_dx_prec_with_threads(wl, wu, &dyc, dims, variant, t, prec, threads);
-    transpose(&dxc, dims.f_in(), t)
+    let mut dx = fresh_out(t * dims.f_in());
+    dyad_linear_backward_dx_prec_into(wl, wu, dy, dims, variant, t, prec, threads, &mut dx);
+    dx
+}
+
+/// [`dyad_linear_backward_dx_prec_with_threads`] into a caller-owned
+/// `(t, f_in)` buffer; all transpose intermediates are recycled.
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_linear_backward_dx_prec_into(
+    wl: &[f32],
+    wu: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    prec: Precision,
+    threads: usize,
+    dx: &mut [f32],
+) {
+    assert_eq!(dx.len(), t * dims.f_in());
+    let mut dyc = scratch::take_f32(t * dims.f_out());
+    transpose_into(dy, t, dims.f_out(), &mut dyc);
+    let mut dxc = scratch::take_f32(dims.f_in() * t);
+    dyad_backward_dx_prec_into(wl, wu, &dyc, dims, variant, t, prec, threads, &mut dxc);
+    transpose_into(&dxc, dims.f_in(), t, dx);
+    scratch::put_f32(dyc);
+    scratch::put_f32(dxc);
 }
 
 /// Structured DYAD backward, weight-gradient half: accumulate the
@@ -1262,17 +1676,38 @@ pub fn dyad_backward_dw_with_threads(
     t: usize,
     threads: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let mut dwl = fresh_out(dims.component_params());
+    let mut dwu = fresh_out(dims.component_params());
+    dyad_backward_dw_into(x, dy, dims, variant, t, threads, &mut dwl, &mut dwu);
+    (dwl, dwu)
+}
+
+/// [`dyad_backward_dw`] into caller-owned component buffers (each
+/// `component_params` long, zeroed here).
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_backward_dw_into(
+    x: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    variant: Variant,
+    t: usize,
+    threads: usize,
+    dwl: &mut [f32],
+    dwu: &mut [f32],
+) {
     if variant.is_cat() {
-        return dyad_cat_backward_dw_with_threads(x, dy, dims, t, threads);
+        return dyad_cat_backward_dw_into(x, dy, dims, t, threads, dwl, dwu);
     }
     let DyadDims { n_dyad, n_in, n_out } = dims;
     let (f_in, f_out) = (dims.f_in(), dims.f_out());
     assert_eq!(x.len(), t * f_in);
     assert_eq!(dy.len(), t * f_out);
+    assert_eq!(dwl.len(), dims.component_params());
+    assert_eq!(dwu.len(), dims.component_params());
     let in_perm = variant.in_perm();
     let out_perm = variant.out_perm();
-    let mut dwl = vec![0.0f32; dims.component_params()];
-    parallel_rows(&mut dwl, n_in, threads, &|r, row| {
+    dwl.fill(0.0);
+    parallel_rows(dwl, n_in, threads, &|r, row| {
         let (i, o) = (r / n_out, r % n_out);
         for ti in 0..t {
             let a = dy[ti * f_out + i * n_out + o];
@@ -1281,8 +1716,8 @@ pub fn dyad_backward_dw_with_threads(
             }
         }
     });
-    let mut dwu = vec![0.0f32; dims.component_params()];
-    parallel_rows(&mut dwu, n_in, threads, &|r, row| {
+    dwu.fill(0.0);
+    parallel_rows(dwu, n_in, threads, &|r, row| {
         let (i, o) = (r / n_out, r % n_out);
         // pi_out(i, o) = o*n_dyad + i; pi_in(i, k) = k*n_dyad + i.
         let rp = if out_perm { o * n_dyad + i } else { i * n_out + o };
@@ -1301,7 +1736,6 @@ pub fn dyad_backward_dw_with_threads(
             }
         }
     });
-    (dwl, dwu)
 }
 
 /// The -CAT weight-gradient: gather the same block-grouped
@@ -1329,12 +1763,33 @@ pub fn dyad_cat_backward_dw_with_threads(
     t: usize,
     threads: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let mut dwl = fresh_out(dims.component_params());
+    let mut dwu = fresh_out(dims.component_params());
+    dyad_cat_backward_dw_into(x, dy, dims, t, threads, &mut dwl, &mut dwu);
+    (dwl, dwu)
+}
+
+/// [`dyad_cat_backward_dw`] into caller-owned component buffers; the
+/// gathered panel and the fused gradient rows come from recycled
+/// [`scratch`].
+#[allow(clippy::too_many_arguments)]
+pub fn dyad_cat_backward_dw_into(
+    x: &[f32],
+    dy: &[f32],
+    dims: DyadDims,
+    t: usize,
+    threads: usize,
+    dwl: &mut [f32],
+    dwu: &mut [f32],
+) {
     let DyadDims { n_dyad, n_in, n_out } = dims;
     let (f_in, f_out) = (dims.f_in(), dims.f_out());
     assert_eq!(x.len(), t * f_in);
     assert_eq!(dy.len(), t * f_out);
+    assert_eq!(dwl.len(), dims.component_params());
+    assert_eq!(dwu.len(), dims.component_params());
     let two_n_in = 2 * n_in;
-    let mut xc = vec![0.0f32; t * 2 * f_in];
+    let mut xc = scratch::take_f32(t * 2 * f_in);
     parallel_rows(&mut xc, 2 * f_in, threads, &|ti, row| {
         let xt = &x[ti * f_in..(ti + 1) * f_in];
         for i in 0..n_dyad {
@@ -1347,7 +1802,7 @@ pub fn dyad_cat_backward_dw_with_threads(
     });
     // fused gradient rows: dwc[i*n_out+o, :] = sum_t dy[t, i*n_out+o]
     //                                          * xc[t, block i]
-    let mut dwc = vec![0.0f32; n_dyad * n_out * two_n_in];
+    let mut dwc = scratch::take_f32(n_dyad * n_out * two_n_in);
     parallel_rows(&mut dwc, two_n_in, threads, &|r, row| {
         let (i, o) = (r / n_out, r % n_out);
         for ti in 0..t {
@@ -1358,14 +1813,13 @@ pub fn dyad_cat_backward_dw_with_threads(
             }
         }
     });
-    let mut dwl = vec![0.0f32; dims.component_params()];
-    let mut dwu = vec![0.0f32; dims.component_params()];
     for r in 0..n_dyad * n_out {
         let src = &dwc[r * two_n_in..(r + 1) * two_n_in];
         dwl[r * n_in..(r + 1) * n_in].copy_from_slice(&src[..n_in]);
         dwu[r * n_in..(r + 1) * n_in].copy_from_slice(&src[n_in..]);
     }
-    (dwl, dwu)
+    scratch::put_f32(xc);
+    scratch::put_f32(dwc);
 }
 
 #[cfg(test)]
@@ -1787,6 +2241,238 @@ mod tests {
                 assert_eq!(m1, mn, "{prec:?} matmul threads={threads}");
             }
         }
+    }
+
+    /// Tentpole determinism contract: the resident-pool dispatch must
+    /// be bitwise identical to the legacy scoped-spawn path for every
+    /// kernel family, at equal thread counts {1, 2, 8}, across
+    /// variants and weight precisions. Both sides run the *same*
+    /// public entry points — [`pool::with_scoped_spawns`] flips the
+    /// dispatch underneath.
+    #[test]
+    fn pool_matches_scoped_bitwise_for_every_kernel_family() {
+        use crate::runtime::pool::with_scoped_spawns;
+        let mut rng = Rng::new(71);
+        let dims = DyadDims { n_dyad: 4, n_in: 12, n_out: 20 };
+        let (f_in, f_out) = (dims.f_in(), dims.f_out());
+        let t = 13;
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let x = rand_vec(&mut rng, f_in * t); // column-major (f_in, t)
+        let xr = rand_vec(&mut rng, t * f_in); // row-major (t, f_in)
+        let dyr = rand_vec(&mut rng, t * f_out);
+        let wd = rand_vec(&mut rng, f_out * f_in);
+        let bias = rand_vec(&mut rng, f_out);
+        for threads in [1usize, 2, 8] {
+            for prec in [Precision::F32, Precision::Bf16, Precision::I8] {
+                for v in [Variant::It, Variant::ItCat, Variant::Dt] {
+                    let p = dyad_fused_prec_with_threads(
+                        &wl, &wu, &x, dims, v, t, Some(&bias), prec, threads,
+                    );
+                    let s = with_scoped_spawns(|| {
+                        dyad_fused_prec_with_threads(
+                            &wl, &wu, &x, dims, v, t, Some(&bias), prec, threads,
+                        )
+                    });
+                    assert_eq!(p, s, "fused {v:?} {prec:?} threads={threads}");
+                    let pdx = dyad_linear_backward_dx_prec_with_threads(
+                        &wl, &wu, &dyr, dims, v, t, prec, threads,
+                    );
+                    let sdx = with_scoped_spawns(|| {
+                        dyad_linear_backward_dx_prec_with_threads(
+                            &wl, &wu, &dyr, dims, v, t, prec, threads,
+                        )
+                    });
+                    assert_eq!(pdx, sdx, "dx {v:?} {prec:?} threads={threads}");
+                }
+                let pd = dense_linear_prec_with_threads(
+                    &xr, &wd, Some(&bias), t, f_in, f_out, prec, threads,
+                );
+                let sd = with_scoped_spawns(|| {
+                    dense_linear_prec_with_threads(
+                        &xr, &wd, Some(&bias), t, f_in, f_out, prec, threads,
+                    )
+                });
+                assert_eq!(pd, sd, "dense {prec:?} threads={threads}");
+                let pm = matmul_fast_prec_with_threads(&dyr, &wd, t, f_out, f_in, prec, threads);
+                let sm = with_scoped_spawns(|| {
+                    matmul_fast_prec_with_threads(&dyr, &wd, t, f_out, f_in, prec, threads)
+                });
+                assert_eq!(pm, sm, "matmul {prec:?} threads={threads}");
+            }
+            for v in [Variant::It, Variant::ItCat, Variant::Dt] {
+                let pw = dyad_backward_dw_with_threads(&xr, &dyr, dims, v, t, threads);
+                let sw = with_scoped_spawns(|| {
+                    dyad_backward_dw_with_threads(&xr, &dyr, dims, v, t, threads)
+                });
+                assert_eq!(pw, sw, "dw {v:?} threads={threads}");
+            }
+            let pb = matmul_bt_with_threads(&xr, &wd, t, f_in, f_out, threads);
+            let sb = with_scoped_spawns(|| {
+                matmul_bt_with_threads(&xr, &wd, t, f_in, f_out, threads)
+            });
+            assert_eq!(pb, sb, "matmul_bt threads={threads}");
+        }
+    }
+
+    /// Every `_into` variant, handed a dirty (NaN-filled) buffer, must
+    /// reproduce its `Vec`-returning entry point bitwise — recycled
+    /// arena buffers are indistinguishable from fresh allocations.
+    #[test]
+    fn into_variants_match_vec_entry_points_bitwise() {
+        let mut rng = Rng::new(73);
+        let dims = DyadDims { n_dyad: 4, n_in: 6, n_out: 5 };
+        let (f_in, f_out) = (dims.f_in(), dims.f_out());
+        let t = 9;
+        let threads = 3;
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let xc = rand_vec(&mut rng, f_in * t);
+        let xr = rand_vec(&mut rng, t * f_in);
+        let dyr = rand_vec(&mut rng, t * f_out);
+        let b = rand_vec(&mut rng, f_in * f_out); // (k, n) for matmul_fast
+        let wd = rand_vec(&mut rng, f_out * f_in); // (f_out, f_in) weights
+        let bias = rand_vec(&mut rng, f_out);
+
+        let mut out = vec![f32::NAN; t * f_out];
+        matmul_fast_into(&xr, &b, t, f_in, f_out, threads, &mut out);
+        assert_eq!(out, matmul_fast_with_threads(&xr, &b, t, f_in, f_out, threads));
+
+        let mut out = vec![f32::NAN; t * f_out];
+        matmul_bt_into(&xr, &wd, t, f_in, f_out, threads, &mut out);
+        assert_eq!(out, matmul_bt_with_threads(&xr, &wd, t, f_in, f_out, threads));
+
+        let mut out = vec![f32::NAN; t * f_out];
+        dense_linear_into(&xr, &wd, Some(&bias), t, f_in, f_out, threads, &mut out);
+        assert_eq!(
+            out,
+            dense_linear_with_threads(&xr, &wd, Some(&bias), t, f_in, f_out, threads)
+        );
+
+        for prec in [Precision::F32, Precision::Bf16, Precision::I8] {
+            let mut out = vec![f32::NAN; t * f_out];
+            dense_linear_prec_into(&xr, &wd, Some(&bias), t, f_in, f_out, prec, threads, &mut out);
+            assert_eq!(
+                out,
+                dense_linear_prec_with_threads(
+                    &xr, &wd, Some(&bias), t, f_in, f_out, prec, threads
+                ),
+                "dense {prec:?}"
+            );
+
+            let mut out = vec![f32::NAN; t * f_in];
+            matmul_fast_prec_into(&dyr, &wd, t, f_out, f_in, prec, threads, &mut out);
+            assert_eq!(
+                out,
+                matmul_fast_prec_with_threads(&dyr, &wd, t, f_out, f_in, prec, threads),
+                "matmul {prec:?}"
+            );
+
+            for v in [Variant::It, Variant::ItCat, Variant::Dt] {
+                let mut out = vec![f32::NAN; f_out * t];
+                dyad_fused_prec_into(
+                    &wl, &wu, &xc, dims, v, t, Some(&bias), prec, threads, &mut out,
+                );
+                assert_eq!(
+                    out,
+                    dyad_fused_prec_with_threads(
+                        &wl, &wu, &xc, dims, v, t, Some(&bias), prec, threads
+                    ),
+                    "fused {v:?} {prec:?}"
+                );
+
+                let mut out = vec![f32::NAN; t * f_out];
+                dyad_linear_prec_into(
+                    &wl, &wu, &xr, dims, v, t, Some(&bias), prec, threads, &mut out,
+                );
+                assert_eq!(
+                    out,
+                    dyad_linear_prec_with_threads(
+                        &wl, &wu, &xr, dims, v, t, Some(&bias), prec, threads
+                    ),
+                    "linear {v:?} {prec:?}"
+                );
+
+                let mut out = vec![f32::NAN; t * f_in];
+                dyad_linear_backward_dx_prec_into(
+                    &wl, &wu, &dyr, dims, v, t, prec, threads, &mut out,
+                );
+                assert_eq!(
+                    out,
+                    dyad_linear_backward_dx_prec_with_threads(
+                        &wl, &wu, &dyr, dims, v, t, prec, threads
+                    ),
+                    "dx {v:?} {prec:?}"
+                );
+            }
+        }
+
+        for v in [Variant::It, Variant::ItCat, Variant::Dt] {
+            let mut dwl = vec![f32::NAN; dims.component_params()];
+            let mut dwu = vec![f32::NAN; dims.component_params()];
+            dyad_backward_dw_into(&xr, &dyr, dims, v, t, threads, &mut dwl, &mut dwu);
+            assert_eq!(
+                (dwl, dwu),
+                dyad_backward_dw_with_threads(&xr, &dyr, dims, v, t, threads),
+                "dw {v:?}"
+            );
+        }
+    }
+
+    /// The tentpole acceptance contract at the kernel layer: after a
+    /// two-iteration warmup (pool built, scratch recyclers converged),
+    /// a steady-state loop through the `_into` kernels performs zero
+    /// OS thread spawns and zero heap allocations — dispatch rides the
+    /// resident pool, encode/panel scratch rides the recycler.
+    #[test]
+    fn steady_state_into_kernels_spawn_and_allocate_nothing() {
+        use crate::runtime::pool::counters;
+        let mut rng = Rng::new(79);
+        let dims = DyadDims { n_dyad: 4, n_in: 8, n_out: 8 };
+        let (f_in, f_out) = (dims.f_in(), dims.f_out());
+        let t = 16;
+        let threads = 4;
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let xc = rand_vec(&mut rng, f_in * t);
+        let xr = rand_vec(&mut rng, t * f_in);
+        let dyr = rand_vec(&mut rng, t * f_out);
+        let wd = rand_vec(&mut rng, f_out * f_in);
+        let bias = rand_vec(&mut rng, f_out);
+        let mut y = vec![0.0f32; f_out * t];
+        let mut yr = vec![0.0f32; t * f_out];
+        let mut dx = vec![0.0f32; t * f_in];
+        let mut dwl = vec![0.0f32; dims.component_params()];
+        let mut dwu = vec![0.0f32; dims.component_params()];
+        let mut dense_y = vec![0.0f32; t * f_out];
+        let mut mm = vec![0.0f32; t * f_in];
+        let mut warm = counters::snapshot();
+        for rep in 0..8 {
+            dyad_fused_prec_into(
+                &wl, &wu, &xc, dims, Variant::ItCat, t, Some(&bias), Precision::I8, threads,
+                &mut y,
+            );
+            dyad_linear_prec_into(
+                &wl, &wu, &xr, dims, Variant::Dt, t, Some(&bias), Precision::Bf16, threads,
+                &mut yr,
+            );
+            dyad_linear_backward_dx_prec_into(
+                &wl, &wu, &dyr, dims, Variant::It, t, Precision::F32, threads, &mut dx,
+            );
+            dyad_backward_dw_into(&xr, &dyr, dims, Variant::ItCat, t, threads, &mut dwl, &mut dwu);
+            dense_linear_prec_into(
+                &xr, &wd, Some(&bias), t, f_in, f_out, Precision::I8, threads, &mut dense_y,
+            );
+            matmul_fast_prec_into(&dyr, &wd, t, f_out, f_in, Precision::Bf16, threads, &mut mm);
+            if rep == 1 {
+                warm = counters::snapshot();
+            }
+        }
+        let steady = counters::snapshot().since(&warm);
+        assert_eq!(steady.spawns, 0, "steady state must not spawn threads: {steady:?}");
+        assert_eq!(steady.kernel_allocs, 0, "steady state must not allocate: {steady:?}");
+        assert!(steady.pool_runs > 0, "work must ride the resident pool: {steady:?}");
+        assert!(steady.arena_hits > 0, "scratch must come from the recycler: {steady:?}");
     }
 
     #[test]

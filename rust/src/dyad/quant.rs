@@ -42,30 +42,51 @@ pub fn bf16_to_f32(b: u16) -> f32 {
 
 /// Encode a whole slice as bf16.
 pub fn encode_bf16(w: &[f32]) -> Vec<u16> {
-    w.iter().map(|&v| bf16_from_f32(v)).collect()
+    let mut out = vec![0u16; w.len()];
+    encode_bf16_into(w, &mut out);
+    out
+}
+
+/// [`encode_bf16`] into a caller-owned buffer of the same length —
+/// the kernels' per-call encode scratch is recycled, not reallocated.
+pub fn encode_bf16_into(w: &[f32], out: &mut [u16]) {
+    assert_eq!(w.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(w) {
+        *o = bf16_from_f32(v);
+    }
 }
 
 /// Per-row symmetric int8 quantisation of `rows = w.len() / row_len`
 /// weight rows. Returns `(q, scales)`; an all-zero row gets scale 0.
 pub fn quantize_rows_i8(w: &[f32], row_len: usize) -> (Vec<i8>, Vec<f32>) {
     assert!(row_len > 0 && w.len() % row_len == 0, "w.len() must be a multiple of row_len");
+    let mut q = vec![0i8; w.len()];
+    let mut scales = vec![0.0f32; w.len() / row_len];
+    quantize_rows_i8_into(w, row_len, &mut q, &mut scales);
+    (q, scales)
+}
+
+/// [`quantize_rows_i8`] into caller-owned `q` (`w.len()`) and `scales`
+/// (`w.len() / row_len`) buffers, for recycled encode scratch.
+pub fn quantize_rows_i8_into(w: &[f32], row_len: usize, q: &mut [i8], scales: &mut [f32]) {
+    assert!(row_len > 0 && w.len() % row_len == 0, "w.len() must be a multiple of row_len");
     let rows = w.len() / row_len;
-    let mut q = Vec::with_capacity(w.len());
-    let mut scales = Vec::with_capacity(rows);
+    assert_eq!(q.len(), w.len());
+    assert_eq!(scales.len(), rows);
     for r in 0..rows {
         let row = &w[r * row_len..(r + 1) * row_len];
+        let qrow = &mut q[r * row_len..(r + 1) * row_len];
         let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let scale = max_abs / 127.0;
-        scales.push(scale);
+        scales[r] = scale;
         if scale == 0.0 {
-            q.extend(std::iter::repeat(0i8).take(row_len));
+            qrow.fill(0);
         } else {
-            q.extend(row.iter().map(|&v| {
-                (v / scale).round().clamp(-127.0, 127.0) as i8
-            }));
+            for (o, &v) in qrow.iter_mut().zip(row) {
+                *o = (v / scale).round().clamp(-127.0, 127.0) as i8;
+            }
         }
     }
-    (q, scales)
 }
 
 /// Dequantise per-row int8 back to f32 (the values the kernels see).

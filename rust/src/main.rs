@@ -68,6 +68,8 @@ fn print_help() {
            eval           --arch A --variant V --ckpt DIR [--pairs N]\n\
            serve          --arch A --variant V [--workers N] [--dispatch P]\n\
                           [--ckpt DIR] [--requests N]   (P: round-robin|least-pending)\n\
+                          [--threads-per-worker T]  pool size per shard\n\
+                          (default: machine threads / workers, min 1)\n\
            mnist          [--steps N] [--variant dense|dyad_it]\n\
            data-gen       [--tokens N | --pairs N] [--seed S]\n\
            inspect        [--n-dyad N] [--n-in N] | --artifact NAME\n\
@@ -256,6 +258,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 7)?,
         n_workers: args.usize_or("workers", 1)?,
         dispatch: args.str_or("dispatch", "round-robin").parse::<DispatchPolicy>()?,
+        // default None: each worker gets num_threads()/n_workers (min 1)
+        threads_per_worker: args
+            .str_opt("threads-per-worker")
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("--threads-per-worker={v}: {e}"))
+            })
+            .transpose()?,
     };
     let n = args.usize_or("requests", 64)?;
     println!(
@@ -268,16 +278,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let router = Router::start(cfg);
     let sentences = dyad_repro::data::sample_sentences(n, 1);
-    std::thread::scope(|scope| {
-        for chunk in sentences.chunks(n.div_ceil(4).max(1)) {
-            let srv = router.sender();
-            scope.spawn(move || {
-                for toks in chunk {
-                    let (rtx, rrx) = std::sync::mpsc::channel();
-                    let _ = srv.send(Request::Score { tokens: toks.clone(), resp: rtx });
-                    let _ = rrx.recv();
-                }
-            });
+    // client fan-out rides the resident worker pool (one lane per
+    // chunk) instead of ad-hoc std::thread::scope spawns
+    let chunks: Vec<&[Vec<i32>]> = sentences.chunks(n.div_ceil(4).max(1)).collect();
+    let pool = dyad_repro::runtime::pool::sized(chunks.len());
+    pool.run(chunks.len(), &|t| {
+        let srv = router.sender();
+        for toks in chunks[t] {
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            let _ = srv.send(Request::Score { tokens: toks.clone(), resp: rtx });
+            let _ = rrx.recv();
         }
     });
     let stats = router.stats()?;

@@ -264,10 +264,31 @@ pub fn open_backend_with_precision(
     artifacts_dir: &Path,
     precision: crate::tensor::Precision,
 ) -> Result<Box<dyn Backend>> {
+    open_backend_sized(
+        kind,
+        artifacts_dir,
+        precision,
+        crate::dyad::kernel::num_threads(),
+    )
+}
+
+/// [`open_backend_with_precision`] with an explicit worker-pool size
+/// for the native backend. Serve workers use this to open their
+/// backend on a per-worker share of the machine
+/// (`num_threads() / n_workers`) instead of each shard spinning up a
+/// full-width pool — see [`crate::serve::Router`]. The XLA backend
+/// manages its own device threading, so `threads` is native-only and
+/// ignored there.
+pub fn open_backend_sized(
+    kind: BackendKind,
+    artifacts_dir: &Path,
+    precision: crate::tensor::Precision,
+    threads: usize,
+) -> Result<Box<dyn Backend>> {
     match kind {
-        BackendKind::Native => {
-            Ok(Box::new(super::native::NativeBackend::with_precision(precision)))
-        }
+        BackendKind::Native => Ok(Box::new(
+            super::native::NativeBackend::with_precision_and_threads(precision, threads),
+        )),
         BackendKind::Xla => {
             if precision != crate::tensor::Precision::F32 {
                 bail!(

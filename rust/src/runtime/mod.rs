@@ -6,6 +6,10 @@
 //!   per-call inputs) and [`open_backend`]/[`BackendKind`].
 //! * `device` — opaque backend-owned buffers ([`DeviceTensor`]) and
 //!   the host↔backend [`staging`] traffic counters.
+//! * `pool` — the persistent worker-pool runtime every native kernel
+//!   parallelises on: resident threads, spin-then-park wakeup,
+//!   deterministic static panel partitioning (bitwise identical to
+//!   the old scoped-spawn path), plus spawn/alloc [`pool::counters`].
 //! * `native` — the pure-Rust CPU backend (default): transformer
 //!   inference **and training** (layer-module autodiff, see
 //!   `native::layers`), MNIST training, ff-micro timing — no artifacts
@@ -25,11 +29,13 @@ mod device;
 #[cfg(feature = "xla")]
 mod engine;
 pub mod native;
+pub mod pool;
 mod state;
 
 pub use artifact::{AdamCfg, ArchCfg, ArtifactSpec, IoSpec, Manifest, Role, VariantCfg};
 pub use backend::{
-    open_backend, open_backend_with_precision, validate_bound_inputs, validate_bound_outputs,
+    open_backend, open_backend_sized, open_backend_with_precision, validate_bound_inputs,
+    validate_bound_outputs,
     validate_device_tensor, validate_inputs, validate_outputs, validate_tensor, Backend,
     BackendKind, Bindings, Executable,
 };
@@ -37,4 +43,5 @@ pub use device::{staging, DeviceTensor};
 #[cfg(feature = "xla")]
 pub use engine::{literal_to_tensor, tensor_to_literal, Engine, Loaded};
 pub use native::{LinearView, NativeBackend, Params, VariantSpec};
+pub use pool::ThreadPool;
 pub use state::TrainState;

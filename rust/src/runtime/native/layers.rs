@@ -19,8 +19,19 @@
 //!
 //! The worker-pool size is resolved **once** per workspace
 //! ([`Workspace::threads`]) and threaded through every kernel call via
-//! the `*_with_threads` escape hatches, so nested parallel sections
-//! can't each re-derive a pool and oversubscribe the machine.
+//! the `*_with_threads` escape hatches, which dispatch on the resident
+//! [`crate::runtime::pool`] — so nested parallel sections can't each
+//! re-derive a pool and oversubscribe the machine, and the steady
+//! state spawns no threads at all.
+//!
+//! The workspace also fronts the **buffer arena**: every activation,
+//! tape frame and gradient buffer a layer produces comes from
+//! [`Workspace::alloc_zeroed`]/[`Workspace::alloc_copy`] (the
+//! thread-local recycler every kernel output already draws from) and
+//! is handed back via [`Workspace::recycle`] at its last use, so after
+//! one warmup step the train/serve hot paths perform zero
+//! kernel-output heap allocations ([`crate::runtime::pool::counters`]
+//! asserts this in tests and CI).
 //!
 //! Every parallel section assigns each output row to exactly one
 //! thread with a fixed sequential accumulation order, so forward *and*
@@ -32,7 +43,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::dyad::kernel::{
     axpy, dense_linear_with_threads, dot, matmul_bt_with_threads, matmul_fast_with_threads,
-    num_threads, parallel_rows, transpose,
+    num_threads, parallel_rows, scratch, transpose,
 };
 use crate::runtime::artifact::{ArtifactSpec, Role};
 use crate::tensor::Precision;
@@ -89,6 +100,30 @@ impl Workspace {
         self.tape.len()
     }
 
+    /// A zero-filled arena buffer of `len`. The arena is the
+    /// thread-local recycler every kernel output draws from, so
+    /// buffers recycled here feed the kernels' own `Vec` entry points
+    /// (and vice versa) — after warmup the whole step cycles one fixed
+    /// set of allocations.
+    pub fn alloc_zeroed(&self, len: usize) -> Vec<f32> {
+        scratch::take_f32(len)
+    }
+
+    /// An arena buffer holding a copy of `src` (tape caching without a
+    /// fresh `to_vec` allocation).
+    pub fn alloc_copy(&self, src: &[f32]) -> Vec<f32> {
+        let mut v = scratch::take_f32(src.len());
+        v.copy_from_slice(src);
+        v
+    }
+
+    /// Hand a no-longer-needed buffer back to the arena. Layers call
+    /// this at the last use of every activation, tape frame and
+    /// intermediate — the discipline the zero-alloc counters assert.
+    pub fn recycle(&self, v: Vec<f32>) {
+        scratch::put_f32(v);
+    }
+
     pub(crate) fn push(&mut self, tag: &'static str, frame: Vec<Vec<f32>>) {
         if self.recording {
             self.tape.push((tag, frame));
@@ -137,6 +172,9 @@ impl GradStore {
                 for (a, b) in acc.iter_mut().zip(&g) {
                     *a += b;
                 }
+                // the contribution was folded in — its buffer goes
+                // back to the arena
+                scratch::put_f32(g);
             }
             None => {
                 self.map.insert(name.to_string(), g);
@@ -265,7 +303,8 @@ impl Layer for LinearLayer<'_> {
     fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
         let y = self.view.forward_with_threads(x, rows, ws.threads());
         if ws.recording() {
-            ws.push("linear", vec![x.to_vec()]);
+            let cached = ws.alloc_copy(x);
+            ws.push("linear", vec![cached]);
         }
         Ok(y)
     }
@@ -281,6 +320,7 @@ impl Layer for LinearLayer<'_> {
         let x = frame.pop().context("linear frame: missing cached input")?;
         let threads = ws.threads();
         let (gs, dx) = self.view.backward_with_threads(&x, dy, rows, self.need_dx, threads)?;
+        ws.recycle(x);
         for (n, g) in self.names.iter().zip(gs) {
             grads.add(n, g)?;
         }
@@ -306,9 +346,10 @@ impl Layer for Activation {
     fn forward(&self, x: &[f32], _rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
         // the derivative reads the pre-activation, so cache x first
         if ws.recording() {
-            ws.push("activation", vec![x.to_vec()]);
+            let cached = ws.alloc_copy(x);
+            ws.push("activation", vec![cached]);
         }
-        let mut y = x.to_vec();
+        let mut y = ws.alloc_copy(x);
         match self {
             Activation::Gelu => gelu_inplace(&mut y),
             Activation::Relu => relu_inplace(&mut y),
@@ -325,7 +366,7 @@ impl Layer for Activation {
     ) -> Result<Vec<f32>> {
         let mut frame = ws.pop("activation")?;
         let a = frame.pop().context("activation frame: missing pre-activation")?;
-        let mut dx = dy.to_vec();
+        let mut dx = ws.alloc_copy(dy);
         match self {
             Activation::Gelu => {
                 for (g, &av) in dx.iter_mut().zip(&a) {
@@ -340,6 +381,7 @@ impl Layer for Activation {
                 }
             }
         }
+        ws.recycle(a);
         Ok(dx)
     }
 }
@@ -381,7 +423,7 @@ impl Layer for LayerNorm<'_> {
             ws.push("layer_norm", vec![xhat, inv]);
             Ok(y)
         } else {
-            let mut y = x.to_vec();
+            let mut y = ws.alloc_copy(x);
             layer_norm(&mut y, self.d, self.scale, self.bias);
             Ok(y)
         }
@@ -398,6 +440,8 @@ impl Layer for LayerNorm<'_> {
         let inv = frame.pop().context("layer_norm frame: missing inv")?;
         let xhat = frame.pop().context("layer_norm frame: missing xhat")?;
         let (dx, dscale, dbias) = layer_norm_backward(dy, &xhat, &inv, self.d, self.scale);
+        ws.recycle(xhat);
+        ws.recycle(inv);
         grads.add(&self.scale_name, dscale)?;
         grads.add(&self.bias_name, dbias)?;
         Ok(dx)
@@ -463,11 +507,11 @@ impl<'a> Attention<'a> {
     }
 
     /// `(b*s, d)` row-major → `(b*nh, s, hd)`: one contiguous block
-    /// per (batch, head) pair.
+    /// per (batch, head) pair. Output drawn from the arena.
     fn to_heads(&self, m: &[f32]) -> Vec<f32> {
         let (b, s, nh, hd) = (self.b, self.s, self.nh, self.hd);
         let d = self.d();
-        let mut out = vec![0.0f32; b * s * d];
+        let mut out = scratch::take_f32(b * s * d);
         for bi in 0..b {
             for t in 0..s {
                 let src = &m[(bi * s + t) * d..(bi * s + t + 1) * d];
@@ -480,11 +524,11 @@ impl<'a> Attention<'a> {
         out
     }
 
-    /// Inverse of [`Attention::to_heads`].
+    /// Inverse of [`Attention::to_heads`]. Output drawn from the arena.
     fn from_heads(&self, m: &[f32]) -> Vec<f32> {
         let (b, s, nh, hd) = (self.b, self.s, self.nh, self.hd);
         let d = self.d();
-        let mut out = vec![0.0f32; b * s * d];
+        let mut out = scratch::take_f32(b * s * d);
         for bi in 0..b {
             for t in 0..s {
                 let dst = &mut out[(bi * s + t) * d..(bi * s + t + 1) * d];
@@ -517,6 +561,9 @@ impl Layer for Attention<'_> {
         let qh = self.to_heads(&q);
         let kh = self.to_heads(&k);
         let vh = self.to_heads(&v);
+        ws.recycle(q);
+        ws.recycle(k);
+        ws.recycle(v);
         let scale = 1.0 / (hd as f32).sqrt();
         let blk = s * hd;
         let merged = if ws.recording() {
@@ -524,7 +571,7 @@ impl Layer for Attention<'_> {
             // head), so the probabilities land on the tape without a
             // second pass over the scores
             let prow = s * s;
-            let mut buf = vec![0.0f32; b * nh * (prow + blk)];
+            let mut buf = ws.alloc_zeroed(b * nh * (prow + blk));
             parallel_rows(&mut buf, prow + blk, threads, &|bh, row| {
                 let (probs, ctx) = row.split_at_mut(prow);
                 let qb = &qh[bh * blk..(bh + 1) * blk];
@@ -543,22 +590,26 @@ impl Layer for Attention<'_> {
                     }
                 }
             });
-            let mut probs = vec![0.0f32; b * nh * prow];
-            let mut ctx = vec![0.0f32; bs * d];
+            let mut probs = ws.alloc_zeroed(b * nh * prow);
+            let mut ctx = ws.alloc_zeroed(bs * d);
             for bh in 0..b * nh {
                 let row = &buf[bh * (prow + blk)..(bh + 1) * (prow + blk)];
                 probs[bh * prow..(bh + 1) * prow].copy_from_slice(&row[..prow]);
                 ctx[bh * blk..(bh + 1) * blk].copy_from_slice(&row[prow..]);
             }
+            ws.recycle(buf);
             let merged = self.from_heads(&ctx);
+            ws.recycle(ctx);
+            let cached_x = ws.alloc_copy(x);
+            let cached_merged = ws.alloc_copy(&merged);
             ws.push(
                 "attention",
-                vec![x.to_vec(), qh, kh, vh, probs, merged.clone()],
+                vec![cached_x, qh, kh, vh, probs, cached_merged],
             );
             merged
         } else {
             // inference: no probability storage, scratch row reused
-            let mut ctx = vec![0.0f32; bs * d];
+            let mut ctx = ws.alloc_zeroed(bs * d);
             parallel_rows(&mut ctx, blk, threads, &|bh, row| {
                 let qb = &qh[bh * blk..(bh + 1) * blk];
                 let kb = &kh[bh * blk..(bh + 1) * blk];
@@ -576,9 +627,16 @@ impl Layer for Attention<'_> {
                     }
                 }
             });
-            self.from_heads(&ctx)
+            let merged = self.from_heads(&ctx);
+            ws.recycle(ctx);
+            ws.recycle(qh);
+            ws.recycle(kh);
+            ws.recycle(vh);
+            merged
         };
-        Ok(dense_linear_with_threads(&merged, self.wo, Some(self.wo_b), bs, d, d, threads))
+        let y = dense_linear_with_threads(&merged, self.wo, Some(self.wo_b), bs, d, d, threads);
+        ws.recycle(merged);
+        Ok(y)
     }
 
     fn backward(
@@ -613,15 +671,18 @@ impl Layer for Attention<'_> {
             precision: Precision::F32,
         };
         let (mut g_wo, dmerged) = wo_view.backward_with_threads(&merged, dy, bs, true, threads)?;
+        ws.recycle(merged);
         grads.add(&format!("{}.wo_b", self.prefix), g_wo.pop().context("wo db")?)?;
         grads.add(&format!("{}.wo", self.prefix), g_wo.pop().context("wo dw")?)?;
-        let dctx = self.to_heads(&dmerged.context("wo backward: no dx")?);
+        let dmerged = dmerged.context("wo backward: no dx")?;
+        let dctx = self.to_heads(&dmerged);
+        ws.recycle(dmerged);
 
         // per (batch, head): softmax-jacobian backward into one
         // combined [dq | dk | dv] row, owned by one thread
         let scale = 1.0 / (hd as f32).sqrt();
         let blk = s * hd;
-        let mut dbuf = vec![0.0f32; b * nh * 3 * blk];
+        let mut dbuf = ws.alloc_zeroed(b * nh * 3 * blk);
         parallel_rows(&mut dbuf, 3 * blk, threads, &|bh, row| {
             let (dqb, rest) = row.split_at_mut(blk);
             let (dkb, dvb) = rest.split_at_mut(blk);
@@ -651,23 +712,31 @@ impl Layer for Attention<'_> {
                 }
             }
         });
-        let mut dqh = vec![0.0f32; bs * d];
-        let mut dkh = vec![0.0f32; bs * d];
-        let mut dvh = vec![0.0f32; bs * d];
+        let mut dqh = ws.alloc_zeroed(bs * d);
+        let mut dkh = ws.alloc_zeroed(bs * d);
+        let mut dvh = ws.alloc_zeroed(bs * d);
         for bh in 0..b * nh {
             let row = &dbuf[bh * 3 * blk..(bh + 1) * 3 * blk];
             dqh[bh * blk..(bh + 1) * blk].copy_from_slice(&row[..blk]);
             dkh[bh * blk..(bh + 1) * blk].copy_from_slice(&row[blk..2 * blk]);
             dvh[bh * blk..(bh + 1) * blk].copy_from_slice(&row[2 * blk..]);
         }
+        ws.recycle(dbuf);
+        ws.recycle(dctx);
+        ws.recycle(qh);
+        ws.recycle(kh);
+        ws.recycle(vh);
+        ws.recycle(probs);
 
         // q/k/v projections: accumulate dW/db and sum the three dx paths
-        let mut dx = vec![0.0f32; bs * d];
-        for (w, wb, nm, dm) in [
-            (self.wq, self.wq_b, "wq", self.from_heads(&dqh)),
-            (self.wk, self.wk_b, "wk", self.from_heads(&dkh)),
-            (self.wv, self.wv_b, "wv", self.from_heads(&dvh)),
+        let mut dx = ws.alloc_zeroed(bs * d);
+        for (w, wb, nm, dh) in [
+            (self.wq, self.wq_b, "wq", dqh),
+            (self.wk, self.wk_b, "wk", dkh),
+            (self.wv, self.wv_b, "wv", dvh),
         ] {
+            let dm = self.from_heads(&dh);
+            ws.recycle(dh);
             let view = LinearView::Dense {
                 w,
                 b: wb,
@@ -676,12 +745,16 @@ impl Layer for Attention<'_> {
                 precision: Precision::F32,
             };
             let (mut gs, dxp) = view.backward_with_threads(&x, &dm, bs, true, threads)?;
+            ws.recycle(dm);
             grads.add(&format!("{}.{nm}_b", self.prefix), gs.pop().context("proj db")?)?;
             grads.add(&format!("{}.{nm}", self.prefix), gs.pop().context("proj dw")?)?;
-            for (o, v) in dx.iter_mut().zip(dxp.context("proj backward: no dx")?) {
+            let dxp = dxp.context("proj backward: no dx")?;
+            for (o, v) in dx.iter_mut().zip(&dxp) {
                 *o += v;
             }
+            ws.recycle(dxp);
         }
+        ws.recycle(x);
         Ok(dx)
     }
 }
@@ -773,9 +846,10 @@ impl Layer for Sequential<'_> {
     }
 
     fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
-        let mut cur = x.to_vec();
+        let mut cur = ws.alloc_copy(x);
         for l in &self.layers {
-            cur = l.forward(&cur, rows, ws)?;
+            let next = l.forward(&cur, rows, ws)?;
+            ws.recycle(std::mem::replace(&mut cur, next));
         }
         Ok(cur)
     }
@@ -787,9 +861,10 @@ impl Layer for Sequential<'_> {
         ws: &mut Workspace,
         grads: &mut GradStore,
     ) -> Result<Vec<f32>> {
-        let mut cur = dy.to_vec();
+        let mut cur = ws.alloc_copy(dy);
         for l in self.layers.iter().rev() {
-            cur = l.backward(&cur, rows, ws, grads)?;
+            let next = l.backward(&cur, rows, ws, grads)?;
+            ws.recycle(std::mem::replace(&mut cur, next));
         }
         Ok(cur)
     }
@@ -822,7 +897,8 @@ impl Layer for TiedLmHead<'_> {
     fn forward(&self, x: &[f32], rows: usize, ws: &mut Workspace) -> Result<Vec<f32>> {
         let logits = matmul_bt_with_threads(x, self.emb, rows, self.d, self.vocab, ws.threads());
         if ws.recording() {
-            ws.push("tied_lm_head", vec![x.to_vec()]);
+            let cached = ws.alloc_copy(x);
+            ws.push("tied_lm_head", vec![cached]);
         }
         Ok(logits)
     }
@@ -840,6 +916,8 @@ impl Layer for TiedLmHead<'_> {
         // d_emb = dlogits^T @ h ; dh = dlogits @ emb
         let dyt = transpose(dy, rows, self.vocab);
         let demb = matmul_fast_with_threads(&dyt, &h, self.vocab, rows, self.d, threads);
+        ws.recycle(dyt);
+        ws.recycle(h);
         grads.add("tok_emb", demb)?;
         Ok(matmul_fast_with_threads(dy, self.emb, rows, self.vocab, self.d, threads))
     }
@@ -871,7 +949,7 @@ impl<'a> Embedding<'a> {
         if s > self.seq {
             bail!("sequence length {s} exceeds arch seq {}", self.seq);
         }
-        let mut x = vec![0.0f32; b * s * d];
+        let mut x = scratch::take_f32(b * s * d);
         for (t, &tok) in tokens.iter().enumerate() {
             let tok = tok as usize;
             if tok >= self.vocab {
@@ -899,8 +977,8 @@ impl<'a> Embedding<'a> {
         if dx.len() != tokens.len() * d {
             bail!("embedding backward: {} values for {} tokens", dx.len(), tokens.len());
         }
-        let mut dtok = vec![0.0f32; self.vocab * d];
-        let mut dpos = vec![0.0f32; self.seq * d];
+        let mut dtok = scratch::take_f32(self.vocab * d);
+        let mut dpos = scratch::take_f32(self.seq * d);
         for (t, &tok) in tokens.iter().enumerate() {
             let tok = tok as usize;
             let row = &dx[t * d..(t + 1) * d];
@@ -1035,6 +1113,31 @@ mod tests {
         let mut ws = Workspace::inference();
         ws.push("linear", vec![vec![1.0]]);
         assert_eq!(ws.depth(), 0);
+    }
+
+    /// The workspace arena really reuses storage: recycling a buffer
+    /// and allocating the same size again returns the *same*
+    /// allocation (pointer identity), and the recycled buffer comes
+    /// back zero-filled / copied clean.
+    #[test]
+    fn workspace_arena_reuses_buffers_by_pointer_identity() {
+        let ws = Workspace::inference_with_threads(1);
+        // drain lingering free-list entries of this size class first
+        // so the identity check below can't be satisfied by an older
+        // buffer: take until a distinctive fresh one comes back
+        let mut v = ws.alloc_zeroed(4096);
+        v[7] = 3.5;
+        let ptr = v.as_ptr();
+        ws.recycle(v);
+        let v2 = ws.alloc_zeroed(4096);
+        assert_eq!(v2.as_ptr(), ptr, "arena did not reuse the buffer");
+        assert!(v2.iter().all(|&x| x == 0.0), "recycled buffer not zeroed");
+        ws.recycle(v2);
+        let src: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        let v3 = ws.alloc_copy(&src);
+        assert_eq!(v3.as_ptr(), ptr, "alloc_copy bypassed the arena");
+        assert_eq!(v3, src);
+        ws.recycle(v3);
     }
 
     #[test]

@@ -17,9 +17,10 @@
 use anyhow::{bail, Result};
 
 use crate::dyad::kernel::{
-    dense_linear_prec_with_threads, dyad_backward_dw_with_threads,
-    dyad_linear_backward_dx_prec_with_threads, dyad_linear_prec_with_threads,
-    matmul_fast_prec_with_threads, matmul_fast_with_threads, num_threads, transpose,
+    dense_linear_prec_into, dense_linear_prec_with_threads, dyad_backward_dw_with_threads,
+    dyad_linear_backward_dx_prec_with_threads, dyad_linear_prec_into,
+    dyad_linear_prec_with_threads, matmul_fast_prec_with_threads, matmul_fast_with_threads,
+    num_threads, transpose,
 };
 use crate::dyad::layout::dyad_full;
 use crate::dyad::{DyadDims, Variant};
@@ -84,6 +85,22 @@ impl LinearView<'_> {
                 dyad_linear_prec_with_threads(
                     wl, wu, x, *dims, *variant, t, Some(b), *precision, threads,
                 )
+            }
+        }
+    }
+
+    /// [`LinearView::forward_with_threads`] into a caller-owned output
+    /// (`t * f_out` values, fully overwritten) — the allocation-free
+    /// entry point for arena-backed hot loops.
+    pub fn forward_into(&self, x: &[f32], t: usize, threads: usize, y: &mut [f32]) {
+        match self {
+            LinearView::Dense { w, b, f_in, f_out, precision } => {
+                dense_linear_prec_into(x, w, Some(b), t, *f_in, *f_out, *precision, threads, y);
+            }
+            LinearView::Dyad { wl, wu, b, dims, variant, precision } => {
+                dyad_linear_prec_into(
+                    wl, wu, x, *dims, *variant, t, Some(b), *precision, threads, y,
+                );
             }
         }
     }
@@ -395,6 +412,43 @@ mod tests {
                     dx[idx]
                 );
             }
+        }
+    }
+
+    /// `forward_into` on a dirty caller buffer is bitwise identical to
+    /// the `Vec`-returning forward, both arms.
+    #[test]
+    fn forward_into_matches_forward_bitwise() {
+        let mut rng = Rng::new(55);
+        let dims = DyadDims { n_dyad: 2, n_in: 4, n_out: 3 };
+        let t = 5;
+        let wl = rand_vec(&mut rng, dims.component_params());
+        let wu = rand_vec(&mut rng, dims.component_params());
+        let b = rand_vec(&mut rng, dims.f_out());
+        let x = rand_vec(&mut rng, t * dims.f_in());
+        let wd = rand_vec(&mut rng, dims.f_out() * dims.f_in());
+        let views = [
+            LinearView::Dyad {
+                wl: &wl,
+                wu: &wu,
+                b: &b,
+                dims,
+                variant: Variant::ItCat,
+                precision: Precision::Bf16,
+            },
+            LinearView::Dense {
+                w: &wd,
+                b: &b,
+                f_in: dims.f_in(),
+                f_out: dims.f_out(),
+                precision: Precision::F32,
+            },
+        ];
+        for view in &views {
+            let want = view.forward_with_threads(&x, t, 2);
+            let mut got = vec![f32::NAN; t * view.f_out()];
+            view.forward_into(&x, t, 2, &mut got);
+            assert_eq!(got, want);
         }
     }
 

@@ -136,6 +136,11 @@ pub struct NativeBackend {
     /// this backend resolves (`--precision`). F32 is bitwise-identical
     /// to the pre-precision backend.
     precision: Precision,
+    /// Worker-pool size every program this backend loads runs on.
+    /// Defaults to [`crate::dyad::kernel::num_threads`]; serve workers
+    /// pass their per-worker share so N workers don't oversubscribe
+    /// the machine N-fold.
+    threads: usize,
 }
 
 impl NativeBackend {
@@ -147,10 +152,23 @@ impl NativeBackend {
     /// linears with quantized weight streams (fwd + dx; dw and all
     /// non-swap-site math stay f32).
     pub fn with_precision(precision: Precision) -> NativeBackend {
+        NativeBackend::with_precision_and_threads(
+            precision,
+            crate::dyad::kernel::num_threads(),
+        )
+    }
+
+    /// A backend on an explicit worker-pool size — the [`num_threads`]
+    /// `OnceLock` cache only pins the *default*; this constructor
+    /// always honors the caller's count.
+    ///
+    /// [`num_threads`]: crate::dyad::kernel::num_threads
+    pub fn with_precision_and_threads(precision: Precision, threads: usize) -> NativeBackend {
         NativeBackend {
             manifest: catalog::native_manifest(),
             cache: RefCell::new(HashMap::new()),
             precision,
+            threads: threads.max(1),
         }
     }
 }
@@ -174,13 +192,13 @@ impl Backend for NativeBackend {
         let spec = self.manifest.artifact(name)?.clone();
         let prog = resolve(&spec, &self.manifest, self.precision)
             .with_context(|| format!("native backend: load {name}"))?;
-        let exe = Rc::new(NativeExe { spec, prog });
+        let exe = Rc::new(NativeExe { spec, prog, threads: self.threads });
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
     fn platform(&self) -> String {
-        let threads = crate::dyad::kernel::num_threads();
+        let threads = self.threads;
         if self.precision == Precision::F32 {
             format!("native-cpu ({threads} threads)")
         } else {
@@ -261,6 +279,8 @@ fn resolve(spec: &ArtifactSpec, manifest: &Manifest, precision: Precision) -> Re
 pub struct NativeExe {
     spec: ArtifactSpec,
     prog: Prog,
+    /// Worker-pool size inherited from the owning backend at load.
+    threads: usize,
 }
 
 impl NativeExe {
@@ -328,25 +348,44 @@ impl NativeExe {
             Prog::Score { arch, var } => {
                 let (b, s) = (data[0].shape[0], data[0].shape[1]);
                 let lm = transformer::Lm { arch, var, p };
-                let (sums, counts) = lm.score(data[0].as_i32()?, data[1].as_f32()?, b, s)?;
+                let (sums, counts) = lm.score_with_threads(
+                    data[0].as_i32()?,
+                    data[1].as_f32()?,
+                    b,
+                    s,
+                    self.threads,
+                )?;
                 Ok(vec![Tensor::from_f32(&[b], sums)?, Tensor::from_f32(&[b], counts)?])
             }
             Prog::Features { arch, var } => {
                 let (b, s) = (data[0].shape[0], data[0].shape[1]);
                 let lm = transformer::Lm { arch, var, p };
-                let feats = lm.features(data[0].as_i32()?, data[1].as_f32()?, b, s)?;
+                let feats = lm.features_with_threads(
+                    data[0].as_i32()?,
+                    data[1].as_f32()?,
+                    b,
+                    s,
+                    self.threads,
+                )?;
                 Ok(vec![Tensor::from_f32(&[b, arch.d_model], feats)?])
             }
             Prog::NextLogits { arch, var } => {
                 let (b, s) = (data[0].shape[0], data[0].shape[1]);
                 let lm = transformer::Lm { arch, var, p };
-                let logits = lm.next_logits(data[0].as_i32()?, data[1].as_i32()?, b, s)?;
+                let logits = lm.next_logits_with_threads(
+                    data[0].as_i32()?,
+                    data[1].as_i32()?,
+                    b,
+                    s,
+                    self.threads,
+                )?;
                 Ok(vec![Tensor::from_f32(&[b, arch.vocab], logits)?])
             }
             Prog::EvalLoss { arch, var } => {
                 let (b, s) = (data[0].shape[0], data[0].shape[1]);
                 let lm = transformer::Lm { arch, var, p };
-                let loss = lm.eval_loss(data[0].as_i32()?, b, s)?;
+                let loss =
+                    lm.eval_loss_with_threads(data[0].as_i32()?, b, s, self.threads)?;
                 Ok(vec![Tensor::scalar_f32(loss)])
             }
             Prog::TrainStep { arch, var } => self.run_lm_train(arch, var, inputs, &data),
@@ -446,7 +485,9 @@ impl NativeExe {
         let tokens = data[0];
         let (k, b, s) = (tokens.shape[0], tokens.shape[1], tokens.shape[2]);
         let tok = tokens.as_i32()?;
-        let threads = crate::dyad::kernel::num_threads();
+        // the backend's pool size, not a fresh num_threads() — a
+        // threads-aware open (serve workers) is honored here
+        let threads = self.threads;
         let mut losses = Vec::with_capacity(k);
         for ki in 0..k {
             let batch = &tok[ki * b * s..(ki + 1) * b * s];

@@ -1,6 +1,13 @@
 //! Elementwise / normalisation primitives shared by the native model
 //! implementations. All row-major, f32, matching the L2 JAX semantics
 //! (tanh-approximate GELU, population-variance LayerNorm, eps 1e-5).
+//!
+//! Every `Vec`-returning primitive draws its output from the
+//! thread-local kernel recycler (`dyad::kernel::scratch`), so a
+//! steady-state loop that recycles its buffers (the layer stack does,
+//! via `Workspace::recycle`) allocates nothing here after warmup.
+
+use crate::dyad::kernel::scratch;
 
 /// jax.nn.gelu (approximate=True): 0.5x(1 + tanh(c(x + a x^3))).
 pub fn gelu(x: f32) -> f32 {
@@ -62,9 +69,9 @@ pub fn layer_norm_forward(
     assert_eq!(scale.len(), d);
     assert_eq!(bias.len(), d);
     let rows = x.len() / d;
-    let mut y = vec![0.0f32; x.len()];
-    let mut xhat = vec![0.0f32; x.len()];
-    let mut inv = vec![0.0f32; rows];
+    let mut y = scratch::take_f32(x.len());
+    let mut xhat = scratch::take_f32(x.len());
+    let mut inv = scratch::take_f32(rows);
     for (r, row) in x.chunks(d).enumerate() {
         let mean = row.iter().sum::<f32>() / d as f32;
         let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
@@ -97,10 +104,10 @@ pub fn layer_norm_backward(
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     assert_eq!(dy.len(), xhat.len());
     assert_eq!(dy.len(), inv.len() * d);
-    let mut dx = vec![0.0f32; dy.len()];
-    let mut dscale = vec![0.0f32; d];
-    let mut dbias = vec![0.0f32; d];
-    let mut dxhat = vec![0.0f32; d];
+    let mut dx = scratch::take_f32(dy.len());
+    let mut dscale = scratch::take_f32(d);
+    let mut dbias = scratch::take_f32(d);
+    let mut dxhat = scratch::take_f32(d);
     for (r, (dyr, xh)) in dy.chunks(d).zip(xhat.chunks(d)).enumerate() {
         let mut m1 = 0.0f32;
         let mut m2 = 0.0f32;
@@ -119,6 +126,7 @@ pub fn layer_norm_backward(
             dxr[j] = inv[r] * (dxhat[j] - m1 - xh[j] * m2);
         }
     }
+    scratch::put_f32(dxhat);
     (dx, dscale, dbias)
 }
 
@@ -186,7 +194,7 @@ pub fn log_softmax_row(row: &[f32], out: &mut [f32]) {
 
 /// Column sums of a row-major `(rows, n)` matrix (bias gradients).
 pub fn col_sums(x: &[f32], n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n];
+    let mut out = scratch::take_f32(n);
     for row in x.chunks(n) {
         for (o, &v) in out.iter_mut().zip(row) {
             *o += v;

@@ -15,7 +15,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::dyad::kernel::{axpy, matmul_bt_with_threads, num_threads};
+use crate::dyad::kernel::{axpy, matmul_bt_with_threads, num_threads, scratch};
 use crate::runtime::artifact::ArchCfg;
 use crate::runtime::catalog::ADAM;
 
@@ -55,26 +55,34 @@ impl Layer for DecoderLayer<'_> {
             // y = x + attn(ln1(x)) + ff(ln2(x))
             let h1 = self.ln1.forward(x, rows, ws)?;
             let att = self.attn.forward(&h1, rows, ws)?;
+            ws.recycle(h1);
             let h2 = self.ln2.forward(x, rows, ws)?;
             let f = self.ff.forward(&h2, rows, ws)?;
-            let mut y = x.to_vec();
+            ws.recycle(h2);
+            let mut y = ws.alloc_copy(x);
             for ((o, a), fv) in y.iter_mut().zip(&att).zip(&f) {
                 *o += a + fv;
             }
+            ws.recycle(att);
+            ws.recycle(f);
             Ok(y)
         } else {
             // x1 = x + attn(ln1(x)); y = x1 + ff(ln2(x1))
             let h1 = self.ln1.forward(x, rows, ws)?;
             let att = self.attn.forward(&h1, rows, ws)?;
-            let mut x1 = x.to_vec();
+            ws.recycle(h1);
+            let mut x1 = ws.alloc_copy(x);
             for (o, a) in x1.iter_mut().zip(&att) {
                 *o += a;
             }
+            ws.recycle(att);
             let h2 = self.ln2.forward(&x1, rows, ws)?;
             let f = self.ff.forward(&h2, rows, ws)?;
+            ws.recycle(h2);
             for (o, fv) in x1.iter_mut().zip(&f) {
                 *o += fv;
             }
+            ws.recycle(f);
             Ok(x1)
         }
     }
@@ -90,26 +98,34 @@ impl Layer for DecoderLayer<'_> {
             // dx = dy + ln2ᵀ(ffᵀ(dy)) + ln1ᵀ(attnᵀ(dy))
             let dh2 = self.ff.backward(dy, rows, ws, grads)?;
             let dxf = self.ln2.backward(&dh2, rows, ws, grads)?;
+            ws.recycle(dh2);
             let dh1 = self.attn.backward(dy, rows, ws, grads)?;
             let dxa = self.ln1.backward(&dh1, rows, ws, grads)?;
-            let mut dx = dy.to_vec();
+            ws.recycle(dh1);
+            let mut dx = ws.alloc_copy(dy);
             for ((o, a), f) in dx.iter_mut().zip(&dxa).zip(&dxf) {
                 *o += a + f;
             }
+            ws.recycle(dxa);
+            ws.recycle(dxf);
             Ok(dx)
         } else {
             // dx1 = dy + ln2ᵀ(ffᵀ(dy)); dx = dx1 + ln1ᵀ(attnᵀ(dx1))
             let dh2 = self.ff.backward(dy, rows, ws, grads)?;
             let dxf = self.ln2.backward(&dh2, rows, ws, grads)?;
-            let mut dx1 = dy.to_vec();
+            ws.recycle(dh2);
+            let mut dx1 = ws.alloc_copy(dy);
             for (o, f) in dx1.iter_mut().zip(&dxf) {
                 *o += f;
             }
+            ws.recycle(dxf);
             let dh1 = self.attn.backward(&dx1, rows, ws, grads)?;
             let dxa = self.ln1.backward(&dh1, rows, ws, grads)?;
+            ws.recycle(dh1);
             for (o, a) in dx1.iter_mut().zip(&dxa) {
                 *o += a;
             }
+            ws.recycle(dxa);
             Ok(dx1)
         }
     }
@@ -151,9 +167,22 @@ impl<'a> Lm<'a> {
     }
 
     /// `(b, s)` int32 tokens -> `(b*s, d)` final hidden states
-    /// (inference: non-recording workspace).
+    /// (inference: non-recording workspace, [`num_threads`] workers).
     pub fn hidden(&self, tokens: &[i32], b: usize, s: usize) -> Result<Vec<f32>> {
-        let mut ws = Workspace::inference();
+        self.hidden_with_threads(tokens, b, s, num_threads())
+    }
+
+    /// [`Lm::hidden`] on an explicit worker count — serve workers and
+    /// threads-aware backends pass their own pool size here instead of
+    /// silently falling back to the process default.
+    pub fn hidden_with_threads(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        let mut ws = Workspace::inference_with_threads(threads);
         self.hidden_ws(tokens, b, s, &mut ws)
     }
 
@@ -167,13 +196,16 @@ impl<'a> Lm<'a> {
         let rows = b * s;
         let mut x = self.embedding()?.forward(tokens, b, s)?;
         for l in 0..self.arch.n_layers {
-            x = self.decoder_layer(l, b, s)?.forward(&x, rows, ws)?;
+            let next = self.decoder_layer(l, b, s)?.forward(&x, rows, ws)?;
+            ws.recycle(std::mem::replace(&mut x, next));
         }
-        self.final_ln()?.forward(&x, rows, ws)
+        let h = self.final_ln()?.forward(&x, rows, ws)?;
+        ws.recycle(x);
+        Ok(h)
     }
 
     /// Tied-head logits for every position: `(rows, vocab)`.
-    fn logits(&self, hidden: &[f32], rows: usize) -> Result<Vec<f32>> {
+    fn logits(&self, hidden: &[f32], rows: usize, threads: usize) -> Result<Vec<f32>> {
         let tok_emb = self.p.f32("tok_emb")?;
         Ok(matmul_bt_with_threads(
             hidden,
@@ -181,7 +213,7 @@ impl<'a> Lm<'a> {
             rows,
             self.arch.d_model,
             self.arch.vocab,
-            num_threads(),
+            threads,
         ))
     }
 
@@ -214,16 +246,19 @@ impl<'a> Lm<'a> {
         // forward
         let mut x = emb.forward(tokens, b, s)?;
         for l in &layers {
-            x = l.forward(&x, rows, &mut ws)?;
+            let next = l.forward(&x, rows, &mut ws)?;
+            ws.recycle(std::mem::replace(&mut x, next));
         }
-        let x = final_ln.forward(&x, rows, &mut ws)?;
-        let logits = head.forward(&x, rows, &mut ws)?;
+        let h = final_ln.forward(&x, rows, &mut ws)?;
+        ws.recycle(x);
+        let logits = head.forward(&h, rows, &mut ws)?;
+        ws.recycle(h);
 
         // loss = mean over b*(s-1) next-token predictions
         // (model.py::loss_fn); rows at t = s-1 predict nothing
         let n_pred = (b * (s - 1)) as f32;
-        let mut dlogits = vec![0.0f32; rows * vocab];
-        let mut logp = vec![0.0f32; vocab];
+        let mut dlogits = ws.alloc_zeroed(rows * vocab);
+        let mut logp = scratch::take_f32(vocab);
         let mut loss = 0.0f64;
         for bi in 0..b {
             for t in 0..s - 1 {
@@ -239,15 +274,21 @@ impl<'a> Lm<'a> {
             }
         }
         let loss = (loss / n_pred as f64) as f32;
+        scratch::put_f32(logp);
+        ws.recycle(logits);
 
         // backward
         let mut grads = GradStore::new();
         let dh = head.backward(&dlogits, rows, &mut ws, &mut grads)?;
+        ws.recycle(dlogits);
         let mut dx = final_ln.backward(&dh, rows, &mut ws, &mut grads)?;
+        ws.recycle(dh);
         for l in layers.iter().rev() {
-            dx = l.backward(&dx, rows, &mut ws, &mut grads)?;
+            let next = l.backward(&dx, rows, &mut ws, &mut grads)?;
+            ws.recycle(std::mem::replace(&mut dx, next));
         }
         emb.backward(&dx, tokens, s, &mut grads)?;
+        ws.recycle(dx);
         debug_assert_eq!(ws.depth(), 0, "unconsumed tape frames");
         Ok((loss, grads))
     }
@@ -260,12 +301,26 @@ impl<'a> Lm<'a> {
         b: usize,
         s: usize,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let h = self.hidden(tokens, b, s)?;
+        self.score_with_threads(tokens, mask, b, s, num_threads())
+    }
+
+    /// [`Lm::score`] on an explicit worker count (the serve workers'
+    /// per-worker pool size).
+    pub fn score_with_threads(
+        &self,
+        tokens: &[i32],
+        mask: &[f32],
+        b: usize,
+        s: usize,
+        threads: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let h = self.hidden_with_threads(tokens, b, s, threads)?;
         let vocab = self.arch.vocab;
-        let logits = self.logits(&h, b * s)?;
+        let logits = self.logits(&h, b * s, threads)?;
+        scratch::put_f32(h);
         let mut sums = vec![0.0f32; b];
         let mut counts = vec![0.0f32; b];
-        let mut logp = vec![0.0f32; vocab];
+        let mut logp = scratch::take_f32(vocab);
         for bi in 0..b {
             for t in 0..s - 1 {
                 let m = mask[bi * s + t + 1];
@@ -279,16 +334,30 @@ impl<'a> Lm<'a> {
                 counts[bi] += m;
             }
         }
+        scratch::put_f32(logp);
+        scratch::put_f32(logits);
         Ok((sums, counts))
     }
 
     /// `eval_loss` artifact: mean next-token cross-entropy.
     pub fn eval_loss(&self, tokens: &[i32], b: usize, s: usize) -> Result<f32> {
-        let h = self.hidden(tokens, b, s)?;
+        self.eval_loss_with_threads(tokens, b, s, num_threads())
+    }
+
+    /// [`Lm::eval_loss`] on an explicit worker count.
+    pub fn eval_loss_with_threads(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        threads: usize,
+    ) -> Result<f32> {
+        let h = self.hidden_with_threads(tokens, b, s, threads)?;
         let vocab = self.arch.vocab;
-        let logits = self.logits(&h, b * s)?;
+        let logits = self.logits(&h, b * s, threads)?;
+        scratch::put_f32(h);
         let mut total = 0.0f64;
-        let mut logp = vec![0.0f32; vocab];
+        let mut logp = scratch::take_f32(vocab);
         for bi in 0..b {
             for t in 0..s - 1 {
                 let row = &logits[(bi * s + t) * vocab..(bi * s + t + 1) * vocab];
@@ -296,6 +365,8 @@ impl<'a> Lm<'a> {
                 total -= logp[tokens[bi * s + t + 1] as usize] as f64;
             }
         }
+        scratch::put_f32(logp);
+        scratch::put_f32(logits);
         Ok((total / (b * (s - 1)) as f64) as f32)
     }
 
@@ -307,8 +378,20 @@ impl<'a> Lm<'a> {
         b: usize,
         s: usize,
     ) -> Result<Vec<f32>> {
+        self.features_with_threads(tokens, mask, b, s, num_threads())
+    }
+
+    /// [`Lm::features`] on an explicit worker count.
+    pub fn features_with_threads(
+        &self,
+        tokens: &[i32],
+        mask: &[f32],
+        b: usize,
+        s: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
         let d = self.arch.d_model;
-        let h = self.hidden(tokens, b, s)?;
+        let h = self.hidden_with_threads(tokens, b, s, threads)?;
         let mut out = vec![0.0f32; b * d];
         for bi in 0..b {
             let orow = &mut out[bi * d..(bi + 1) * d];
@@ -325,6 +408,7 @@ impl<'a> Lm<'a> {
                 *v /= denom;
             }
         }
+        scratch::put_f32(h);
         Ok(out)
     }
 
@@ -337,15 +421,30 @@ impl<'a> Lm<'a> {
         b: usize,
         s: usize,
     ) -> Result<Vec<f32>> {
+        self.next_logits_with_threads(tokens, lengths, b, s, num_threads())
+    }
+
+    /// [`Lm::next_logits`] on an explicit worker count.
+    pub fn next_logits_with_threads(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        b: usize,
+        s: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
         let d = self.arch.d_model;
-        let h = self.hidden(tokens, b, s)?;
-        let mut last = vec![0.0f32; b * d];
+        let h = self.hidden_with_threads(tokens, b, s, threads)?;
+        let mut last = scratch::take_f32(b * d);
         for bi in 0..b {
             let idx = (lengths[bi].max(1) - 1).min(s as i32 - 1) as usize;
             last[bi * d..(bi + 1) * d]
                 .copy_from_slice(&h[(bi * s + idx) * d..(bi * s + idx + 1) * d]);
         }
-        self.logits(&last, b)
+        scratch::put_f32(h);
+        let logits = self.logits(&last, b, threads)?;
+        scratch::put_f32(last);
+        Ok(logits)
     }
 }
 
@@ -389,6 +488,12 @@ pub fn train_microbatch(
         .context("assemble LM gradients in feed order")?;
     *step += 1.0;
     super::adam_update(params, m, v, &gvecs, *step, lr);
+    // the applied gradients go back to the arena: the next microbatch
+    // re-takes these exact buffers, keeping the steady state
+    // allocation-free
+    for g in gvecs {
+        scratch::put_f32(g);
+    }
     Ok(loss)
 }
 

@@ -1,0 +1,570 @@
+//! Persistent worker pool: resident threads for every native kernel.
+//!
+//! Before this module, every parallel kernel call in
+//! [`crate::dyad::kernel`] spawned and joined fresh OS threads via
+//! `std::thread::scope`, so one transformer train step paid hundreds
+//! of spawn/join cycles. A [`ThreadPool`] keeps its workers resident:
+//! a job is published once (an erased closure pointer + task count),
+//! workers wake by a spin-then-park epoch protocol, run their task,
+//! and check in; the caller runs task 0 itself and returns when every
+//! worker has checked in. After warmup the steady-state hot path
+//! performs **zero thread spawns** (asserted by [`counters`]).
+//!
+//! ## Determinism contract
+//!
+//! The pool schedules **statically**: task `t` of a `run(n_tasks, f)`
+//! always executes on the same logical lane (caller = lane 0, worker
+//! `i` = lane `i+1`), and [`ThreadPool::run_chunks`] hands task `t`
+//! exactly the `t`-th `chunks_mut(chunk_len)` chunk of the output
+//! slice. Kernels built on it therefore produce **bitwise identical**
+//! results to the scoped-spawn path at equal thread count — there is
+//! no work stealing and no dynamic splitting anywhere. The scoped
+//! reference path is kept behind [`with_scoped_spawns`] so tests and
+//! `benches/pool_overhead.rs` can measure/verify pool-vs-scoped on
+//! the *same* public kernel entry points.
+//!
+//! ## Lifecycle and sizing
+//!
+//! Pools are cached **per OS thread** in a size-keyed registry
+//! ([`sized`]); [`global`] resolves [`crate::dyad::kernel::num_threads`]
+//! (the `DYAD_NUM_THREADS` OnceLock default). Per-thread caching is
+//! what gives each serve worker its own pool with zero plumbing: a
+//! fleet of N workers sized `num_threads()/N` holds N independent
+//! pools and never oversubscribes the machine, while two workers
+//! never contend on one pool's job slot. Explicit
+//! [`ThreadPool::new(n)`] always bypasses the `num_threads()` cache —
+//! the env default is a default, not a ceiling. Dropping a pool joins
+//! its workers; thread-exit drops the registry.
+//!
+//! A task that calls back into the pool (nested parallel section)
+//! runs the inner job inline on its own lane — same chunk
+//! assignment, still bitwise identical, no deadlock, no
+//! oversubscription. A panic inside any task is caught, the job
+//! still completes on the other lanes, and the panic is resumed on
+//! the caller — a poisoned task surfaces as an error, never a hang.
+
+use std::cell::{Cell, RefCell, UnsafeCell};
+use std::collections::HashMap;
+use std::panic::{self, AssertUnwindSafe};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Bounded busy-wait before a worker parks on the condvar (and before
+/// the caller yields while waiting for check-ins). Kernels are
+/// micro/millisecond scale, so the common case hits the spin window.
+const SPIN_LIMIT: u32 = 1 << 14;
+
+type PanicPayload = Box<dyn std::any::Any + Send>;
+
+/// One published job: an erased `&F` plus the monomorphic trampoline
+/// that re-types it. Valid only between epoch publication and the
+/// last `done` check-in of that epoch, which `run` brackets.
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    n_tasks: usize,
+}
+
+struct Shared {
+    /// Written by the caller before the epoch bump (Release) that
+    /// publishes it; read by workers after their Acquire epoch load.
+    job: UnsafeCell<Job>,
+    epoch: AtomicU64,
+    /// Workers that finished the current epoch (idle lanes check in
+    /// too, so the caller's wait is a single counter compare).
+    done: AtomicUsize,
+    shutdown: AtomicBool,
+    /// First panic payload caught in a worker task this epoch.
+    panicked: Mutex<Option<PanicPayload>>,
+    /// Park/wake for idle workers; pairs with `epoch`/`shutdown`.
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+// SAFETY: `job` is only written by the caller while every worker is
+// waiting for the next epoch, and only read by workers between the
+// epoch bump and their `done` check-in; `run` does not return (and so
+// cannot re-write `job`) until all check-ins arrive.
+unsafe impl Sync for Shared {}
+
+thread_local! {
+    static POOLS: RefCell<HashMap<usize, Rc<ThreadPool>>> = RefCell::new(HashMap::new());
+    static IN_TASK: Cell<bool> = const { Cell::new(false) };
+    static FORCE_SCOPED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A persistent worker pool of `threads` logical lanes: `threads - 1`
+/// resident OS threads plus the calling thread (lane 0).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Build a pool with exactly `threads` lanes (min 1). This always
+    /// honours the explicit count — it does **not** consult the
+    /// `num_threads()` OnceLock cache, so callers (serve workers,
+    /// tests, benches) can size pools freely within one process.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            job: UnsafeCell::new(Job { data: std::ptr::null(), call: noop_call, n_tasks: 0 }),
+            epoch: AtomicU64::new(0),
+            done: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            panicked: Mutex::new(None),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let sh = Arc::clone(&shared);
+            counters::note_spawn(1);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dyad-pool-{i}"))
+                    .spawn(move || worker_loop(&sh, i))
+                    .expect("spawn pool worker"),
+            );
+        }
+        ThreadPool { shared, workers, threads }
+    }
+
+    /// Logical lane count (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `n_tasks` tasks (`f(0)..f(n_tasks-1)`) across the lanes:
+    /// the caller executes task 0, worker `i` executes task `i + 1`.
+    /// Blocks until every lane has checked in. `n_tasks` must not
+    /// exceed [`ThreadPool::threads`]; kernels guarantee this because
+    /// `div_ceil` panel splits produce at most `threads` chunks.
+    ///
+    /// Panics in any task are caught, the epoch still completes on
+    /// every lane, and the first payload is resumed on the caller.
+    pub fn run<F>(&self, n_tasks: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n_tasks == 0 {
+            return;
+        }
+        // Serial lanes, nested parallel sections and 1-task jobs run
+        // inline in task order — same chunk ownership, no dispatch.
+        if n_tasks == 1 || self.workers.is_empty() || IN_TASK.get() {
+            for t in 0..n_tasks {
+                f(t);
+            }
+            return;
+        }
+        debug_assert!(
+            n_tasks <= self.threads,
+            "run: {n_tasks} tasks exceed {} pool lanes",
+            self.threads
+        );
+        counters::note_pool_run();
+        let shared = &*self.shared;
+        shared.done.store(0, Ordering::Relaxed);
+        // SAFETY: all workers from the previous epoch have checked in
+        // (the previous `run` blocked on it), so no one reads `job`
+        // while we write it; the epoch bump below publishes it.
+        unsafe {
+            *shared.job.get() =
+                Job { data: f as *const F as *const (), call: call_typed::<F>, n_tasks };
+        }
+        {
+            // Bump under the park lock so a worker that just decided
+            // to wait cannot miss the notify.
+            let _g = shared.lock.lock().unwrap_or_else(|p| p.into_inner());
+            shared.epoch.fetch_add(1, Ordering::Release);
+            shared.cv.notify_all();
+        }
+        // Caller is lane 0. Mark in-task so nested pool use inlines.
+        IN_TASK.set(true);
+        let caller = panic::catch_unwind(AssertUnwindSafe(|| f(0)));
+        IN_TASK.set(false);
+        let n_workers = self.workers.len();
+        let mut spins = 0u32;
+        while shared.done.load(Ordering::Acquire) < n_workers {
+            spins = spins.wrapping_add(1);
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        let worker_panic =
+            shared.panicked.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Err(p) = caller {
+            panic::resume_unwind(p);
+        }
+        if let Some(p) = worker_panic {
+            panic::resume_unwind(p);
+        }
+    }
+
+    /// The bitwise-exact panel primitive: hand task `t` the `t`-th
+    /// `chunks_mut(chunk_len)` chunk of `out`, one task per chunk —
+    /// byte-for-byte the iteration the scoped-spawn kernels ran, with
+    /// resident lanes instead of fresh threads.
+    pub fn run_chunks<F>(&self, out: &mut [f32], chunk_len: usize, f: &F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        if out.is_empty() || chunk_len == 0 {
+            return;
+        }
+        let len = out.len();
+        let n_tasks = len.div_ceil(chunk_len);
+        let base = SendPtr(out.as_mut_ptr());
+        self.run(n_tasks, &move |t| {
+            let start = t * chunk_len;
+            let end = (start + chunk_len).min(len);
+            // SAFETY: tasks receive pairwise-disjoint [start, end)
+            // ranges of `out`, and `run` blocks until every task has
+            // finished, so the borrows never outlive the &mut.
+            let chunk =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            f(t, chunk);
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let _g = self.shared.lock.lock().unwrap_or_else(|p| p.into_inner());
+            self.shared.shutdown.store(true, Ordering::Release);
+            self.shared.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+struct SendPtr(*mut f32);
+// SAFETY: the pointer is only dereferenced through the disjoint-range
+// protocol documented in `run_chunks`.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+unsafe fn noop_call(_data: *const (), _t: usize) {}
+
+unsafe fn call_typed<F: Fn(usize) + Sync>(data: *const (), t: usize) {
+    // SAFETY: `data` was erased from an `&F` that the publishing
+    // `run` keeps alive until every lane checks in.
+    let f = unsafe { &*(data as *const F) };
+    f(t);
+}
+
+fn worker_loop(shared: &Shared, idx: usize) {
+    // Worker lanes are always "in a task" from the registry's point
+    // of view: any pool use from kernel code they run must inline.
+    IN_TASK.set(true);
+    let mut seen = 0u64;
+    let mut spins = 0u32;
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let e = shared.epoch.load(Ordering::Acquire);
+        if e == seen {
+            spins = spins.wrapping_add(1);
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                let mut g = shared.lock.lock().unwrap_or_else(|p| p.into_inner());
+                while !shared.shutdown.load(Ordering::Relaxed)
+                    && shared.epoch.load(Ordering::Relaxed) == seen
+                {
+                    g = shared.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+                }
+                spins = 0;
+            }
+            continue;
+        }
+        seen = e;
+        spins = 0;
+        // SAFETY: the Acquire epoch load synchronises with the
+        // caller's Release bump, which happens after the job write.
+        let job = unsafe { &*shared.job.get() };
+        let t = idx + 1;
+        if t < job.n_tasks {
+            let r = panic::catch_unwind(AssertUnwindSafe(|| {
+                // SAFETY: see `call_typed` — the closure outlives the
+                // epoch because `run` blocks on our check-in below.
+                unsafe { (job.call)(job.data, t) }
+            }));
+            if let Err(p) = r {
+                let mut slot =
+                    shared.panicked.lock().unwrap_or_else(|e| e.into_inner());
+                slot.get_or_insert(p);
+            }
+        }
+        shared.done.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// The per-thread pool of the given lane count (min 1), built on
+/// first use and resident until the calling thread exits. Distinct
+/// OS threads get distinct pools — that is how each serve worker owns
+/// its lanes. Inside a pool task this returns the serial pool, so
+/// nested parallel sections inline instead of spawning.
+pub fn sized(threads: usize) -> Rc<ThreadPool> {
+    let threads = if IN_TASK.get() { 1 } else { threads.max(1) };
+    POOLS.with(|p| {
+        Rc::clone(
+            p.borrow_mut()
+                .entry(threads)
+                .or_insert_with(|| Rc::new(ThreadPool::new(threads))),
+        )
+    })
+}
+
+/// The calling thread's default pool: sized by
+/// [`crate::dyad::kernel::num_threads`] (`DYAD_NUM_THREADS` env,
+/// cached per process).
+pub fn global() -> Rc<ThreadPool> {
+    sized(crate::dyad::kernel::num_threads())
+}
+
+/// True while the current thread is executing a pool task.
+pub fn in_task() -> bool {
+    IN_TASK.get()
+}
+
+/// Test/bench hook: run `f` with every pool-backed kernel entry point
+/// routed through the legacy `std::thread::scope` spawn path instead.
+/// This is how pool-vs-scoped bitwise parity is asserted (and how
+/// `benches/pool_overhead.rs` measures the dispatch overhead) on the
+/// *same* public kernels.
+pub fn with_scoped_spawns<T>(f: impl FnOnce() -> T) -> T {
+    let prev = FORCE_SCOPED.get();
+    FORCE_SCOPED.set(true);
+    let out = f();
+    FORCE_SCOPED.set(prev);
+    out
+}
+
+/// True when [`with_scoped_spawns`] is active on this thread.
+pub fn scoped_spawns_forced() -> bool {
+    FORCE_SCOPED.get()
+}
+
+/// Thread-local spawn/dispatch/allocation counters, in the mould of
+/// [`crate::runtime::staging`]: cheap enough to stay on in release
+/// builds, precise enough to *prove* the steady-state contract —
+/// after warmup a train or serve hot loop performs zero OS thread
+/// spawns and zero kernel-output heap allocations (every output
+/// comes from the workspace arena or the kernel scratch recycler).
+pub mod counters {
+    use std::cell::Cell;
+
+    thread_local! {
+        static SPAWNS: Cell<u64> = const { Cell::new(0) };
+        static POOL_RUNS: Cell<u64> = const { Cell::new(0) };
+        static KERNEL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+        static ARENA_HITS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// One or more OS threads created (pool construction or a scoped
+    /// spawn inside a kernel).
+    pub fn note_spawn(n: u64) {
+        SPAWNS.with(|c| c.set(c.get() + n));
+    }
+
+    /// One job dispatched to resident pool workers.
+    pub fn note_pool_run() {
+        POOL_RUNS.with(|c| c.set(c.get() + 1));
+    }
+
+    /// One fresh heap allocation on a kernel hot path (output vector
+    /// or internal scratch that missed its recycler).
+    pub fn note_kernel_alloc() {
+        KERNEL_ALLOCS.with(|c| c.set(c.get() + 1));
+    }
+
+    /// One hot-path buffer served from an arena/recycler free list.
+    pub fn note_arena_hit() {
+        ARENA_HITS.with(|c| c.set(c.get() + 1));
+    }
+
+    /// Point-in-time view of this thread's counters.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+    pub struct PoolSnapshot {
+        /// OS threads spawned (pool workers + scoped kernel spawns).
+        pub spawns: u64,
+        /// Jobs dispatched to resident workers.
+        pub pool_runs: u64,
+        /// Hot-path heap allocations (kernel outputs + scratch misses).
+        pub kernel_allocs: u64,
+        /// Hot-path buffers recycled instead of allocated.
+        pub arena_hits: u64,
+    }
+
+    impl PoolSnapshot {
+        /// Delta since an earlier snapshot.
+        pub fn since(&self, earlier: &PoolSnapshot) -> PoolSnapshot {
+            PoolSnapshot {
+                spawns: self.spawns - earlier.spawns,
+                pool_runs: self.pool_runs - earlier.pool_runs,
+                kernel_allocs: self.kernel_allocs - earlier.kernel_allocs,
+                arena_hits: self.arena_hits - earlier.arena_hits,
+            }
+        }
+    }
+
+    pub fn snapshot() -> PoolSnapshot {
+        PoolSnapshot {
+            spawns: SPAWNS.with(Cell::get),
+            pool_runs: POOL_RUNS.with(Cell::get),
+            kernel_allocs: KERNEL_ALLOCS.with(Cell::get),
+            arena_hits: ARENA_HITS.with(Cell::get),
+        }
+    }
+
+    pub fn reset() {
+        SPAWNS.with(|c| c.set(0));
+        POOL_RUNS.with(|c| c.set(0));
+        KERNEL_ALLOCS.with(|c| c.set(0));
+        ARENA_HITS.with(|c| c.set(0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn run_executes_every_task_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for n_tasks in [1, 2, 3, 4] {
+            let hits: Vec<AtomicU32> =
+                (0..n_tasks).map(|_| AtomicU32::new(0)).collect();
+            pool.run(n_tasks, &|t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {t} of {n_tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks_matches_chunks_mut_exactly() {
+        let pool = ThreadPool::new(3);
+        for (len, chunk_len) in [(12, 5), (12, 4), (7, 3), (1, 9), (9, 9)] {
+            let mut pooled = vec![0.0f32; len];
+            let mut scoped = vec![0.0f32; len];
+            pool.run_chunks(&mut pooled, chunk_len, &|t, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (t * 1000 + i) as f32;
+                }
+            });
+            for (t, chunk) in scoped.chunks_mut(chunk_len).enumerate() {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (t * 1000 + i) as f32;
+                }
+            }
+            assert_eq!(pooled, scoped, "len={len} chunk_len={chunk_len}");
+        }
+    }
+
+    #[test]
+    fn pool_is_resident_across_runs_and_rebuilds_after_drop() {
+        let before = counters::snapshot();
+        let pool = ThreadPool::new(3);
+        let after_build = counters::snapshot().since(&before);
+        assert_eq!(after_build.spawns, 2);
+        let mut out = vec![0.0f32; 64];
+        for rep in 0..16 {
+            pool.run_chunks(&mut out, 8, &|t, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = (rep * 100 + t) as f32;
+                }
+            });
+        }
+        let steady = counters::snapshot().since(&before);
+        assert_eq!(steady.spawns, 2, "resident workers must not respawn");
+        assert_eq!(steady.pool_runs, 16);
+        drop(pool);
+        // rebuild: a fresh pool spawns fresh workers and still works
+        let pool = ThreadPool::new(3);
+        pool.run_chunks(&mut out, 8, &|_, chunk| chunk.fill(7.0));
+        assert!(out.iter().all(|&v| v == 7.0));
+        assert_eq!(counters::snapshot().since(&before).spawns, 4);
+    }
+
+    #[test]
+    fn zero_row_and_zero_task_jobs_are_noops() {
+        let pool = ThreadPool::new(4);
+        pool.run(0, &|_| panic!("must not run"));
+        let mut empty: Vec<f32> = Vec::new();
+        pool.run_chunks(&mut empty, 8, &|_, _| panic!("must not run"));
+        let mut out = vec![1.0f32; 4];
+        pool.run_chunks(&mut out, 0, &|_, _| panic!("must not run"));
+        assert_eq!(out, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn panic_in_task_surfaces_as_error_not_hang() {
+        let pool = ThreadPool::new(4);
+        let r = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &|t| {
+                if t == 2 {
+                    panic!("task 2 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must propagate to the caller");
+        // caller-lane panics propagate too
+        let r = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &|t| {
+                if t == 0 {
+                    panic!("task 0 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "caller panic must propagate");
+        // and the pool stays usable afterwards
+        let mut out = vec![0.0f32; 8];
+        pool.run_chunks(&mut out, 2, &|t, chunk| chunk.fill(t as f32));
+        assert_eq!(out, vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn nested_runs_inline_without_deadlock() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU32::new(0);
+        pool.run(4, &|_| {
+            // nested use of the registry inside a task: serial pool
+            let inner = sized(8);
+            assert_eq!(inner.threads(), 1);
+            inner.run(1, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn registry_caches_by_size_and_scoped_flag_toggles() {
+        let a = sized(2);
+        let b = sized(2);
+        assert!(Rc::ptr_eq(&a, &b));
+        assert_eq!(sized(0).threads(), 1);
+        assert!(!scoped_spawns_forced());
+        let nested = with_scoped_spawns(|| {
+            assert!(scoped_spawns_forced());
+            with_scoped_spawns(scoped_spawns_forced)
+        });
+        assert!(nested);
+        assert!(!scoped_spawns_forced());
+    }
+}

@@ -13,6 +13,18 @@
 //!             least-pending)                 └──▶ worker n-1 ...
 //! ```
 //!
+//! **Thread budget.** Each shard's native backend owns a persistent
+//! [`crate::runtime::pool::ThreadPool`] sized to its share of the
+//! machine: `num_threads() / n_workers` (min 1) by default, or the
+//! explicit `ServeConfig::threads_per_worker` / CLI
+//! `serve --threads-per-worker N` override. Before this split, every
+//! shard's kernels spawned `num_threads()` scoped threads per call, so
+//! an `n`-worker fleet could oversubscribe the machine `n`-fold under
+//! concurrent load; now the fleet's resident worker threads total at
+//! most `num_threads()` under the default split. Pool size does not
+//! affect results — kernels are bitwise thread-count-deterministic —
+//! only contention.
+//!
 //! Contracts held by the test suite (`tests/serve_test.rs`,
 //! `tests/failure_injection.rs`):
 //!

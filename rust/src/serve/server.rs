@@ -31,7 +31,7 @@ use super::stats::ServeStats;
 use crate::coordinator::checkpoint::CheckpointManager;
 use crate::data::dataset::pad_batch;
 use crate::runtime::{
-    open_backend, Backend, BackendKind, Bindings, Executable, Role, TrainState,
+    open_backend_sized, Backend, BackendKind, Bindings, Executable, Role, TrainState,
 };
 use crate::tensor::Tensor;
 use crate::util::timer::Timer;
@@ -55,6 +55,12 @@ pub struct ServeConfig {
     pub n_workers: usize,
     /// How the router spreads requests over the shards.
     pub dispatch: DispatchPolicy,
+    /// Worker-pool size each shard's native backend runs on. `None`
+    /// (the default) splits the machine evenly:
+    /// `num_threads() / n_workers`, min 1 — so a fleet never
+    /// oversubscribes the cores the way N full-width shards would.
+    /// `serve --threads-per-worker N` overrides the split.
+    pub threads_per_worker: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -70,6 +76,7 @@ impl Default for ServeConfig {
             seed: 7,
             n_workers: 1,
             dispatch: DispatchPolicy::RoundRobin,
+            threads_per_worker: None,
         }
     }
 }
@@ -194,7 +201,18 @@ pub(crate) fn worker(
     shared: Arc<WorkerShared>,
 ) -> Result<()> {
     let _alive = AliveGuard(shared.clone());
-    let backend = open_backend(cfg.backend, &cfg.artifacts_dir)?;
+    // per-worker pool share: N shards each get 1/N of the machine
+    // (min 1) unless --threads-per-worker pins an explicit count, so
+    // a fleet's kernels never oversubscribe the cores N-fold
+    let threads = cfg.threads_per_worker.unwrap_or_else(|| {
+        (crate::dyad::kernel::num_threads() / cfg.n_workers.max(1)).max(1)
+    });
+    let backend = open_backend_sized(
+        cfg.backend,
+        &cfg.artifacts_dir,
+        crate::tensor::Precision::F32,
+        threads,
+    )?;
     let score_art = backend.load(&format!("{}/{}/score", cfg.arch, cfg.variant))?;
     let logits_art =
         backend.load(&format!("{}/{}/next_logits", cfg.arch, cfg.variant))?;

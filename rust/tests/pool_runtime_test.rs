@@ -1,0 +1,203 @@
+//! Persistent-pool runtime contracts, end to end:
+//!
+//! * **Bitwise parity** — a full transformer train run (forward +
+//!   backward + clip + Adam) on the resident worker pool produces
+//!   bit-for-bit the losses and parameters of the legacy per-call
+//!   `std::thread::scope` spawn path, for dense and both DYAD
+//!   variants; and the same run is bitwise thread-count-invariant
+//!   (pools of 1, 2 and 8 lanes agree exactly).
+//! * **Allocation-free steady state** — after a short warmup, a train
+//!   loop and a serve-style scoring loop perform zero OS thread
+//!   spawns and zero kernel-output heap allocations on the calling
+//!   thread: every hot-path buffer is served by the workspace arena /
+//!   scratch recycler ([`pool::counters`] proves it).
+
+use dyad_repro::dyad::kernel::num_threads;
+use dyad_repro::runtime::catalog::{self, model_param_specs};
+use dyad_repro::runtime::native::transformer::{train_microbatch, Lm};
+use dyad_repro::runtime::native::Params;
+use dyad_repro::runtime::pool::{self, counters};
+use dyad_repro::runtime::{ArchCfg, VariantSpec};
+use dyad_repro::tensor::Tensor;
+use dyad_repro::util::rng::Rng;
+
+fn tiny_arch() -> ArchCfg {
+    ArchCfg {
+        vocab: 48,
+        d_model: 16,
+        d_ff: 32,
+        n_layers: 2,
+        n_heads: 2,
+        seq: 8,
+        parallel_residual: false,
+    }
+}
+
+struct TrainRun {
+    losses: Vec<u32>,
+    params: Vec<Vec<f32>>,
+}
+
+/// A fixed-seed train run: `steps` microbatches of the tiny arch on
+/// `threads` lanes. Fully deterministic, so two runs are comparable
+/// bit for bit.
+fn run_train(variant: &str, steps: usize, threads: usize) -> TrainRun {
+    let arch = tiny_arch();
+    let variants = catalog::variants();
+    let vcfg = &variants[variant];
+    let var = VariantSpec::resolve(vcfg).expect("variant");
+    let specs = model_param_specs(&arch, vcfg);
+    let mut rng = Rng::new(11);
+    let names: Vec<String> = specs.iter().map(|(n, _, _)| n.clone()).collect();
+    let mut params: Vec<Vec<f32>> = specs
+        .iter()
+        .map(|(_, sh, init)| Tensor::init(sh, init, &mut rng).as_f32().unwrap().to_vec())
+        .collect();
+    let mut m: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut v: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let (b, s) = (2, arch.seq);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.range(3, arch.vocab) as i32).collect();
+    let mut step = 0.0f32;
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let loss = train_microbatch(
+            &arch, &var, &names, &mut params, &mut m, &mut v, &tokens, b, s, &mut step,
+            1e-3, threads,
+        )
+        .expect("train step");
+        losses.push(loss.to_bits());
+    }
+    TrainRun { losses, params }
+}
+
+/// Full train runs on the pool are bit-for-bit the scoped-spawn runs,
+/// for dense and both DYAD ff variants.
+#[test]
+fn train_run_pool_matches_scoped_bitwise_per_variant() {
+    for variant in ["dense", "dyad_it", "dyad_it_cat"] {
+        let threads = num_threads();
+        let pooled = run_train(variant, 3, threads);
+        let scoped = pool::with_scoped_spawns(|| run_train(variant, 3, threads));
+        assert_eq!(pooled.losses, scoped.losses, "{variant}: losses diverged");
+        for (i, (a, b)) in pooled.params.iter().zip(&scoped.params).enumerate() {
+            assert!(
+                a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{variant}: param tensor {i} diverged pool vs scoped"
+            );
+        }
+    }
+}
+
+/// The same train run on 1, 2 and 8 pool lanes agrees exactly — the
+/// static row-panel partition makes results thread-count-invariant,
+/// so `DYAD_NUM_THREADS` (and the serve per-worker split) never
+/// changes numerics.
+#[test]
+fn train_run_is_bitwise_thread_count_invariant() {
+    let base = run_train("dyad_it", 3, 1);
+    for threads in [2, 8] {
+        let other = run_train("dyad_it", 3, threads);
+        assert_eq!(
+            base.losses, other.losses,
+            "losses diverged at {threads} threads"
+        );
+        for (i, (a, b)) in base.params.iter().zip(&other.params).enumerate() {
+            assert!(
+                a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "param tensor {i} diverged at {threads} threads"
+            );
+        }
+    }
+}
+
+/// After warmup, the train loop's calling thread spawns no OS threads
+/// and performs zero kernel-output heap allocations: the resident
+/// pool absorbs all dispatch and the scratch recycler serves every
+/// hot-path buffer. (Per-row closure scratch on the worker threads is
+/// outside these caller-thread counters — see the pool docs.)
+#[test]
+fn train_loop_steady_state_is_spawn_and_alloc_free() {
+    let arch = tiny_arch();
+    let variants = catalog::variants();
+    let vcfg = &variants["dyad_it"];
+    let var = VariantSpec::resolve(vcfg).expect("variant");
+    let specs = model_param_specs(&arch, vcfg);
+    let mut rng = Rng::new(13);
+    let names: Vec<String> = specs.iter().map(|(n, _, _)| n.clone()).collect();
+    let mut params: Vec<Vec<f32>> = specs
+        .iter()
+        .map(|(_, sh, init)| Tensor::init(sh, init, &mut rng).as_f32().unwrap().to_vec())
+        .collect();
+    let mut m: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut v: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let (b, s) = (2, arch.seq);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.range(3, arch.vocab) as i32).collect();
+    let mut step = 0.0f32;
+    let threads = num_threads();
+    let mut one_step = |params: &mut Vec<Vec<f32>>,
+                        m: &mut Vec<Vec<f32>>,
+                        v: &mut Vec<Vec<f32>>,
+                        step: &mut f32| {
+        train_microbatch(
+            &arch, &var, &names, params, m, v, &tokens, b, s, step, 1e-3, threads,
+        )
+        .expect("train step")
+    };
+    // warmup: constructs the pool, fills the scratch recycler
+    for _ in 0..3 {
+        one_step(&mut params, &mut m, &mut v, &mut step);
+    }
+    let before = counters::snapshot();
+    for _ in 0..3 {
+        one_step(&mut params, &mut m, &mut v, &mut step);
+    }
+    let d = counters::snapshot().since(&before);
+    assert_eq!(d.spawns, 0, "steady-state train loop spawned OS threads");
+    assert_eq!(
+        d.kernel_allocs, 0,
+        "steady-state train loop allocated kernel buffers (arena misses)"
+    );
+    if threads > 1 {
+        assert!(d.pool_runs > 0, "multi-lane run never dispatched to the pool");
+    }
+    assert!(d.arena_hits > 0, "steady-state loop never touched the arena");
+}
+
+/// The serve-shaped hot loop (batch scoring via [`Lm::score_with_threads`],
+/// the kernel path under `serve`'s score artifact) is also
+/// spawn- and allocation-free after warmup.
+#[test]
+fn serve_score_steady_state_is_spawn_and_alloc_free() {
+    let arch = tiny_arch();
+    let variants = catalog::variants();
+    let vcfg = &variants["dyad_it"];
+    let var = VariantSpec::resolve(vcfg).expect("variant");
+    let specs = model_param_specs(&arch, vcfg);
+    let mut rng = Rng::new(17);
+    let names: Vec<String> = specs.iter().map(|(n, _, _)| n.clone()).collect();
+    let params: Vec<Vec<f32>> = specs
+        .iter()
+        .map(|(_, sh, init)| Tensor::init(sh, init, &mut rng).as_f32().unwrap().to_vec())
+        .collect();
+    let p = Params::from_named(&names, &params);
+    let lm = Lm { arch: &arch, var: &var, p };
+    let (b, s) = (2, arch.seq);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.range(3, arch.vocab) as i32).collect();
+    let mask = vec![1.0f32; b * s];
+    for _ in 0..3 {
+        lm.score_with_threads(&tokens, &mask, b, s, num_threads()).expect("score");
+    }
+    let before = counters::snapshot();
+    let first = lm.score_with_threads(&tokens, &mask, b, s, num_threads()).expect("score");
+    for _ in 0..2 {
+        let again =
+            lm.score_with_threads(&tokens, &mask, b, s, num_threads()).expect("score");
+        assert_eq!(first, again, "scoring is not deterministic across calls");
+    }
+    let d = counters::snapshot().since(&before);
+    assert_eq!(d.spawns, 0, "steady-state scoring spawned OS threads");
+    assert_eq!(
+        d.kernel_allocs, 0,
+        "steady-state scoring allocated kernel buffers (arena misses)"
+    );
+}
