@@ -49,6 +49,8 @@ fn main() -> Result<()> {
     let tokenizer = Tokenizer::from_words(&grammar.vocabulary());
     let sentences = sample_sentences(n_requests, 11);
 
+    // xtask:allow(thread_spawn): example client threads simulating
+    // concurrent callers — not kernel parallelism.
     std::thread::scope(|scope| {
         for chunk in sentences.chunks(n_requests.div_ceil(n_clients).max(1)) {
             let tx = router.sender();

@@ -91,10 +91,12 @@ pub(crate) mod scratch {
     /// ever evicting in a steady-state loop. Sized for a full
     /// transformer train step, which recycles every tape frame,
     /// activation and gradient buffer it touched (a few per layer).
-    const MAX_FREE: usize = 256;
+    /// When the list is full an incoming `put` is dropped (newest
+    /// loses); listed buffers are never evicted.
+    pub(crate) const MAX_FREE: usize = 256;
 
     macro_rules! recycler {
-        ($take:ident, $put:ident, $list:ident, $t:ty, $zero:expr) => {
+        ($take:ident, $put:ident, $contains:ident, $free_len:ident, $list:ident, $t:ty, $zero:expr) => {
             thread_local! {
                 static $list: RefCell<Vec<Vec<$t>>> = const { RefCell::new(Vec::new()) };
             }
@@ -134,11 +136,43 @@ pub(crate) mod scratch {
                 }
             }
 
-            /// Return a buffer to this thread's free list.
+            /// Poisoning probe: is a buffer with this base address
+            /// already on this thread's free list? A true hit inside
+            /// `put` means the same allocation was returned twice —
+            /// two live `Vec`s would alias one heap block, and
+            /// dropping either would free the other's storage.
+            pub(crate) fn $contains(p: *const $t) -> bool {
+                $list.with(|l| l.borrow().iter().any(|v| std::ptr::eq(v.as_ptr(), p)))
+            }
+
+            /// Number of buffers currently on this thread's free list.
+            #[cfg(test)]
+            pub(crate) fn $free_len() -> usize {
+                $list.with(|l| l.borrow().len())
+            }
+
+            /// Return a buffer to this thread's free list. Buffers
+            /// past the [`MAX_FREE`] cap (and zero-capacity buffers)
+            /// are dropped instead. Debug builds poison double puts:
+            /// a duplicate is detected by base address and the call
+            /// panics *without dropping the duplicate* — the storage
+            /// still belongs to the copy already on the list, so
+            /// unwinding must not free it.
             pub(crate) fn $put(v: Vec<$t>) {
                 if v.capacity() == 0 {
                     return;
                 }
+                // No drop rights until the buffer is proven not to
+                // alias a listed one (see the doc above).
+                let v = std::mem::ManuallyDrop::new(v);
+                if cfg!(debug_assertions) && $contains(v.as_ptr()) {
+                    panic!(concat!(
+                        "scratch::",
+                        stringify!($put),
+                        ": double put — buffer is already on the free list"
+                    ));
+                }
+                let v = std::mem::ManuallyDrop::into_inner(v);
                 $list.with(|l| {
                     let mut l = l.borrow_mut();
                     if l.len() < MAX_FREE {
@@ -149,9 +183,110 @@ pub(crate) mod scratch {
         };
     }
 
-    recycler!(take_f32, put_f32, F32_FREE, f32, 0.0f32);
-    recycler!(take_u16, put_u16, U16_FREE, u16, 0u16);
-    recycler!(take_i8, put_i8, I8_FREE, i8, 0i8);
+    recycler!(take_f32, put_f32, contains_f32, free_len_f32, F32_FREE, f32, 0.0f32);
+    recycler!(take_u16, put_u16, contains_u16, free_len_u16, U16_FREE, u16, 0u16);
+    recycler!(take_i8, put_i8, contains_i8, free_len_i8, I8_FREE, i8, 0i8);
+}
+
+/// Edge-case coverage for the scratch recycler. Each test runs on its
+/// own libtest thread, so every test starts from empty thread-local
+/// free lists.
+#[cfg(test)]
+mod scratch_tests {
+    use super::scratch;
+    use crate::runtime::pool::counters;
+
+    #[test]
+    fn take_put_roundtrip_recycles_the_same_allocation() {
+        let before = counters::snapshot();
+        let v = scratch::take_f32(64);
+        let p = v.as_ptr();
+        assert_eq!(v, vec![0.0f32; 64]);
+        scratch::put_f32(v);
+        assert!(scratch::contains_f32(p));
+        assert_eq!(scratch::free_len_f32(), 1);
+        let v2 = scratch::take_f32(64);
+        assert_eq!(v2.as_ptr(), p, "second take must reuse the block");
+        assert_eq!(v2, vec![0.0f32; 64], "recycled buffer must be re-zeroed");
+        let d = counters::snapshot().since(&before);
+        assert_eq!(d.kernel_allocs, 1, "only the first take allocates");
+        assert_eq!(d.arena_hits, 1, "the second take must hit the list");
+    }
+
+    #[test]
+    fn take_prefers_the_smallest_fitting_buffer() {
+        let small = scratch::take_u16(4);
+        let big = scratch::take_u16(1024);
+        let ps = small.as_ptr();
+        scratch::put_u16(big);
+        scratch::put_u16(small);
+        assert_eq!(scratch::free_len_u16(), 2);
+        let got = scratch::take_u16(4);
+        assert_eq!(got.as_ptr(), ps, "best fit must pick the 4-slot buffer");
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_never_listed() {
+        let v = scratch::take_u16(0);
+        assert_eq!(v.len(), 0);
+        scratch::put_u16(v);
+        assert_eq!(scratch::free_len_u16(), 0);
+        scratch::put_u16(Vec::new());
+        assert_eq!(scratch::free_len_u16(), 0);
+    }
+
+    #[test]
+    fn free_list_is_capped_and_newest_put_loses() {
+        for _ in 0..scratch::MAX_FREE {
+            scratch::put_i8(vec![0i8; 1]);
+        }
+        assert_eq!(scratch::free_len_i8(), scratch::MAX_FREE);
+        let extra = vec![7i8; 9];
+        let p = extra.as_ptr();
+        scratch::put_i8(extra);
+        assert_eq!(scratch::free_len_i8(), scratch::MAX_FREE, "cap must hold");
+        assert!(!scratch::contains_i8(p), "the over-cap put is dropped, not listed");
+    }
+
+    #[test]
+    fn free_lists_are_per_thread() {
+        scratch::put_f32(vec![1.0f32; 8]);
+        assert_eq!(scratch::free_len_f32(), 1);
+        std::thread::spawn(|| {
+            assert_eq!(scratch::free_len_f32(), 0, "fresh thread, fresh list");
+            scratch::put_f32(vec![2.0f32; 8]);
+            assert_eq!(scratch::free_len_f32(), 1);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(scratch::free_len_f32(), 1, "other thread's puts stay there");
+    }
+
+    /// The poisoning detector itself: manufacture a second `Vec` over
+    /// the same heap block and verify the debug-build `put` panics
+    /// without touching the storage. `put` holds its argument in
+    /// `ManuallyDrop` until the aliasing check passes, so no path
+    /// double-frees. Miri's aliasing model would (rightly) flag the
+    /// manufactured alias itself, so this test is host-only.
+    #[cfg(not(miri))]
+    #[test]
+    fn double_put_is_poisoned_in_debug_builds() {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        let mut v = scratch::take_f32(16);
+        let (p, len, cap) = (v.as_mut_ptr(), v.len(), v.capacity());
+        scratch::put_f32(v);
+        // SAFETY: same raw parts as the Vec just listed. `put` wraps
+        // the alias in ManuallyDrop and panics before any drop, so the
+        // heap block is only ever freed through the listed copy.
+        let alias = unsafe { Vec::from_raw_parts(p, len, cap) };
+        let r = std::panic::catch_unwind(|| scratch::put_f32(alias));
+        assert!(r.is_err(), "double put must panic in debug builds");
+        assert_eq!(scratch::free_len_f32(), 1, "original entry must survive");
+        let back = scratch::take_f32(16);
+        assert_eq!(back.as_ptr(), p as *const f32, "listed copy stays usable");
+    }
 }
 
 /// A kernel-output buffer from the thread-local recycler. The
@@ -207,9 +342,15 @@ mod simd {
 
     /// Horizontal sum of 8 lanes (extract/add halves, then the
     /// movehdup/movehl shuffle ladder down to one lane).
+    ///
+    /// # Safety
+    ///
+    /// The host must support AVX2+FMA; call only after [`enabled`].
     #[inline]
     #[target_feature(enable = "avx2,fma")]
     unsafe fn hsum(v: __m256) -> f32 {
+        // SAFETY: caller verified AVX2+FMA via `enabled()`; pure
+        // register shuffles, no memory access.
         unsafe {
             let lo = _mm256_castps256_ps128(v);
             let hi = _mm256_extractf128_ps::<1>(v);
@@ -221,10 +362,18 @@ mod simd {
         }
     }
 
+    /// AVX2+FMA dot product (8-wide FMA lanes + scalar tail).
+    ///
+    /// # Safety
+    ///
+    /// The host must support AVX2+FMA; call only after [`enabled`].
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len().min(b.len());
         let mut i = 0;
+        // SAFETY: caller verified AVX2+FMA via `enabled()`; every
+        // unaligned load stays below `n = min(len)` by the `i + 8`
+        // guard, and the tail is scalar-indexed.
         unsafe {
             let mut acc = _mm256_setzero_ps();
             while i + 8 <= n {
@@ -242,10 +391,17 @@ mod simd {
         }
     }
 
+    /// AVX2+FMA `out += a * x` (8-wide FMA lanes + scalar tail).
+    ///
+    /// # Safety
+    ///
+    /// The host must support AVX2+FMA; call only after [`enabled`].
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
         let n = out.len().min(x.len());
         let mut i = 0;
+        // SAFETY: caller verified AVX2+FMA via `enabled()`; loads and
+        // stores stay below `n = min(len)` by the `i + 8` guard.
         unsafe {
             let av = _mm256_set1_ps(a);
             while i + 8 <= n {
@@ -261,10 +417,17 @@ mod simd {
         }
     }
 
+    /// AVX2+FMA fused `out += a * x + b * z` (one store stream).
+    ///
+    /// # Safety
+    ///
+    /// The host must support AVX2+FMA; call only after [`enabled`].
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn axpy2(out: &mut [f32], a: f32, x: &[f32], b: f32, z: &[f32]) {
         let n = out.len().min(x.len()).min(z.len());
         let mut i = 0;
+        // SAFETY: caller verified AVX2+FMA via `enabled()`; loads and
+        // stores stay below `n = min(len)` by the `i + 8` guard.
         unsafe {
             let av = _mm256_set1_ps(a);
             let bv = _mm256_set1_ps(b);
@@ -286,6 +449,7 @@ mod simd {
 
 /// `out[j] += a * x[j]` over one row, 8-wide unrolled so the
 /// autovectoriser emits full-width lanes.
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 #[inline]
 pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
     debug_assert_eq!(out.len(), x.len(), "axpy: length mismatch");
@@ -310,6 +474,7 @@ pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
 /// Fused dual-source update `out[j] += a * x[j] + b * z[j]`: one pass
 /// over the output row for both DYAD components, so the store stream
 /// (and the loop overhead) is paid once instead of twice.
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 #[inline]
 pub fn axpy2(out: &mut [f32], a: f32, x: &[f32], b: f32, z: &[f32]) {
     debug_assert_eq!(out.len(), x.len(), "axpy2: x length mismatch");
@@ -342,6 +507,7 @@ pub fn axpy2(out: &mut [f32], a: f32, x: &[f32], b: f32, z: &[f32]) {
 /// rows). The operands must be the same length — a mismatch is a shape
 /// bug upstream and fails loudly in debug builds instead of silently
 /// truncating to the shorter slice.
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(
@@ -513,6 +679,7 @@ impl WeightRows for I8Rows {
 /// results are bitwise identical to it at equal thread count (and no
 /// OS thread is spawned after the pool exists). The legacy spawn path
 /// stays reachable via [`pool::with_scoped_spawns`].
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, threads: usize, f: &F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -537,6 +704,7 @@ where
 /// [`parallel_rows`] on an explicit pool handle: the panel split uses
 /// `pool.threads()` lanes (clamped to the row count), task `t` owning
 /// the `t`-th `rows_per`-row panel.
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn parallel_rows_in<F>(pool: &pool::ThreadPool, out: &mut [f32], row_len: usize, f: &F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -566,6 +734,8 @@ where
     let n_rows = out.len() / row_len;
     let rows_per = n_rows.div_ceil(threads);
     pool::counters::note_spawn(out.len().div_ceil(rows_per * row_len) as u64);
+    // xtask:allow(thread_spawn): legacy scoped-spawn reference path,
+    // kept (spawn-counted) for pool-vs-scoped parity tests/benches.
     std::thread::scope(|s| {
         for (t, chunk) in out.chunks_mut(rows_per * row_len).enumerate() {
             let start = t * rows_per;
@@ -601,7 +771,7 @@ pub fn matmul_fast_with_threads(
 /// hand it a recycled arena buffer and the call allocates nothing.
 /// Panel schedule and accumulation order are identical to the `Vec`
 /// entry point: bitwise-equal results.
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn matmul_fast_into(
     a: &[f32],
     b: &[f32],
@@ -648,6 +818,8 @@ pub fn matmul_fast_into(
     if pool::scoped_spawns_forced() {
         pool::counters::note_spawn(out.len().div_ceil(rows_per * n) as u64);
         let panel = &panel;
+        // xtask:allow(thread_spawn): legacy scoped-spawn reference
+        // path for pool-vs-scoped parity (see parallel_rows_scoped).
         std::thread::scope(|s| {
             for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
                 s.spawn(move || panel(t, chunk));
@@ -680,7 +852,7 @@ pub fn matmul_bt_with_threads(
 /// [`matmul_bt`] into a caller-owned `(m, n)` buffer. Every element is
 /// overwritten (each output row is a fresh dot sweep), so a dirty
 /// recycled buffer is fine.
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn matmul_bt_into(
     a: &[f32],
     b: &[f32],
@@ -711,6 +883,7 @@ pub fn transpose(a: &[f32], m: usize, n: usize) -> Vec<f32> {
 /// Transpose a row-major `(m, n)` matrix into a caller-owned `(n, m)`
 /// buffer (the backward pass transposes weight blocks in place into
 /// one scratch allocation instead of one `Vec` per block).
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn transpose_into(a: &[f32], m: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * n);
     assert_eq!(out.len(), m * n);
@@ -746,7 +919,6 @@ pub fn dense_linear(
     dense_linear_with_threads(x, w, bias, t, f_in, f_out, num_threads())
 }
 
-#[allow(clippy::too_many_arguments)]
 pub fn dense_linear_with_threads(
     x: &[f32],
     w: &[f32],
@@ -763,7 +935,7 @@ pub fn dense_linear_with_threads(
 
 /// [`dense_linear`] into a caller-owned `(t, f_out)` buffer (fully
 /// overwritten).
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dense_linear_into(
     x: &[f32],
     w: &[f32],
@@ -787,7 +959,6 @@ pub fn dense_linear_into(
 /// [`dense_linear`] with the weight matrix streamed at a chosen
 /// precision (quantised per output row). `F32` routes to the exact
 /// existing kernel.
-#[allow(clippy::too_many_arguments)]
 pub fn dense_linear_prec(
     x: &[f32],
     w: &[f32],
@@ -800,7 +971,6 @@ pub fn dense_linear_prec(
     dense_linear_prec_with_threads(x, w, bias, t, f_in, f_out, prec, num_threads())
 }
 
-#[allow(clippy::too_many_arguments)]
 pub fn dense_linear_prec_with_threads(
     x: &[f32],
     w: &[f32],
@@ -818,7 +988,7 @@ pub fn dense_linear_prec_with_threads(
 
 /// [`dense_linear_prec`] into a caller-owned `(t, f_out)` buffer
 /// (fully overwritten; the weight-encode scratch is recycled).
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dense_linear_prec_into(
     x: &[f32],
     w: &[f32],
@@ -848,7 +1018,7 @@ pub fn dense_linear_prec_into(
 
 /// Per-row `y[i, j] = dot(w[j, :], x[i, :]) (+ b[j])` — the
 /// [`matmul_bt`] schedule over generic weight rows.
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 fn dense_linear_generic<W: WeightRows>(
     x: &[f32],
     wm: &W,
@@ -877,7 +1047,6 @@ fn dense_linear_generic<W: WeightRows>(
 /// precision (quantised per row of `b`) — the dense backward's
 /// `dx = dy @ W` at reduced weight precision. `F32` routes to the
 /// exact existing kernel.
-#[allow(clippy::too_many_arguments)]
 pub fn matmul_fast_prec_with_threads(
     a: &[f32],
     b: &[f32],
@@ -894,7 +1063,7 @@ pub fn matmul_fast_prec_with_threads(
 
 /// [`matmul_fast_prec_with_threads`] into a caller-owned `(m, n)`
 /// buffer (zeroed here; the weight-encode scratch is recycled).
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn matmul_fast_prec_into(
     a: &[f32],
     b: &[f32],
@@ -925,6 +1094,7 @@ pub fn matmul_fast_prec_into(
 /// `(m, k) x (k, n)` with generic rows of the right operand; same
 /// per-row accumulation order (`p` ascending, zero-skip) as
 /// [`matmul_fast`].
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 fn matmul_rows_generic<W: WeightRows>(
     a: &[f32],
     bm: &W,
@@ -970,7 +1140,6 @@ pub fn dyad_fused(
     dyad_fused_with_threads(wl, wu, x, dims, variant, nb, bias, num_threads())
 }
 
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_fused_with_threads(
     wl: &[f32],
     wu: &[f32],
@@ -988,7 +1157,7 @@ pub fn dyad_fused_with_threads(
 
 /// [`dyad_fused`] into a caller-owned `(f_out, nb)` buffer (zeroed
 /// here — recycled arena buffers are fine).
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dyad_fused_into(
     wl: &[f32],
     wu: &[f32],
@@ -1010,7 +1179,6 @@ pub fn dyad_fused_into(
 /// routes to [`dyad_fused_with_threads`] unchanged (bitwise
 /// identical); `Bf16`/`I8` encode the component rows once per call
 /// and dequantise in registers.
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_fused_prec(
     wl: &[f32],
     wu: &[f32],
@@ -1024,7 +1192,6 @@ pub fn dyad_fused_prec(
     dyad_fused_prec_with_threads(wl, wu, x, dims, variant, nb, bias, prec, num_threads())
 }
 
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_fused_prec_with_threads(
     wl: &[f32],
     wu: &[f32],
@@ -1043,7 +1210,7 @@ pub fn dyad_fused_prec_with_threads(
 
 /// [`dyad_fused_prec`] into a caller-owned `(f_out, nb)` buffer
 /// (zeroed here; the weight-encode scratch is recycled).
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dyad_fused_prec_into(
     wl: &[f32],
     wu: &[f32],
@@ -1087,7 +1254,6 @@ pub fn dyad_fused_cat(
     dyad_fused_cat_with_threads(wl, wu, x, dims, nb, bias, num_threads())
 }
 
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_fused_cat_with_threads(
     wl: &[f32],
     wu: &[f32],
@@ -1104,7 +1270,7 @@ pub fn dyad_fused_cat_with_threads(
 
 /// [`dyad_fused_cat`] into a caller-owned `(f_out, nb)` buffer; the
 /// gathered -CAT panel comes from recycled [`scratch`].
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dyad_fused_cat_into(
     wl: &[f32],
     wu: &[f32],
@@ -1140,7 +1306,7 @@ fn assert_fused_shapes(
 /// The fused forward schedule, generic over weight-row storage.
 /// [`Variant::ItCat`] detours to the concatenated -CAT schedule; every
 /// other variant runs the PR 2 row-wise schedule verbatim.
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 fn dyad_fused_generic<W1: WeightRows, W2: WeightRows>(
     w1m: &W1,
     w2m: &W2,
@@ -1212,7 +1378,7 @@ fn dyad_fused_generic<W1: WeightRows, W2: WeightRows>(
 /// all); for `nb > 1` the per-`k` axpy2 sources become adjacent
 /// panel rows, matching the IT schedule's values and order exactly
 /// (the parity tests pin this bitwise).
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 fn dyad_fused_cat_generic<W1: WeightRows, W2: WeightRows>(
     w1m: &W1,
     w2m: &W2,
@@ -1264,7 +1430,6 @@ fn dyad_fused_cat_generic<W1: WeightRows, W2: WeightRows>(
 /// DYAD linear on row-major activations (`x (t, f_in)` -> `(t, f_out)`),
 /// transposing in and out around the column-major fused kernel — the
 /// same one-transpose-in / one-transpose-out scheme the L2 model uses.
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_linear(
     wl: &[f32],
     wu: &[f32],
@@ -1277,7 +1442,6 @@ pub fn dyad_linear(
     dyad_linear_with_threads(wl, wu, x, dims, variant, t, bias, num_threads())
 }
 
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_linear_with_threads(
     wl: &[f32],
     wu: &[f32],
@@ -1295,7 +1459,7 @@ pub fn dyad_linear_with_threads(
 
 /// [`dyad_linear`] into a caller-owned `(t, f_out)` buffer; the
 /// transpose intermediates come from recycled [`scratch`].
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dyad_linear_into(
     wl: &[f32],
     wu: &[f32],
@@ -1311,7 +1475,6 @@ pub fn dyad_linear_into(
 }
 
 /// Row-major [`dyad_fused_prec_with_threads`].
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_linear_prec(
     wl: &[f32],
     wu: &[f32],
@@ -1325,7 +1488,6 @@ pub fn dyad_linear_prec(
     dyad_linear_prec_with_threads(wl, wu, x, dims, variant, t, bias, prec, num_threads())
 }
 
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_linear_prec_with_threads(
     wl: &[f32],
     wu: &[f32],
@@ -1344,7 +1506,7 @@ pub fn dyad_linear_prec_with_threads(
 
 /// [`dyad_linear_prec`] into a caller-owned `(t, f_out)` buffer; the
 /// transpose intermediates come from recycled [`scratch`].
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dyad_linear_prec_into(
     wl: &[f32],
     wu: &[f32],
@@ -1373,6 +1535,7 @@ pub fn dyad_linear_prec_into(
 /// one O(component_params) block transpose (2/n_dyad of dense, reused
 /// across every activation column and input row) turns that into a
 /// contiguous read. The *activations* are never gathered or copied.
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 fn transpose_blocks_into(w: &[f32], dims: DyadDims, out: &mut [f32]) {
     let DyadDims { n_dyad, n_in, n_out } = dims;
     assert_eq!(w.len(), dims.component_params());
@@ -1423,7 +1586,6 @@ pub fn dyad_backward_dx_with_threads(
 /// a chosen precision (quantised *after* the block transpose, i.e.
 /// per transposed block row — each row is one input feature's slice).
 /// `F32` is bitwise identical to [`dyad_backward_dx`].
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_backward_dx_prec_with_threads(
     wl: &[f32],
     wu: &[f32],
@@ -1442,7 +1604,7 @@ pub fn dyad_backward_dx_prec_with_threads(
 /// [`dyad_backward_dx_prec_with_threads`] into a caller-owned
 /// `(f_in, nb)` buffer; the block-transpose (and quantized-encode)
 /// scratch is recycled.
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dyad_backward_dx_prec_into(
     wl: &[f32],
     wu: &[f32],
@@ -1508,7 +1670,7 @@ pub fn dyad_cat_backward_dx_with_threads(
     dyad_backward_dx_with_threads(wl, wu, dy, dims, Variant::ItCat, nb, threads)
 }
 
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 fn dyad_backward_dx_generic<W1: WeightRows, W2: WeightRows>(
     w1m: &W1,
     w2m: &W2,
@@ -1575,7 +1737,6 @@ pub fn dyad_linear_backward_dx(
     dyad_linear_backward_dx_with_threads(wl, wu, dy, dims, variant, t, num_threads())
 }
 
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_linear_backward_dx_with_threads(
     wl: &[f32],
     wu: &[f32],
@@ -1591,7 +1752,6 @@ pub fn dyad_linear_backward_dx_with_threads(
 }
 
 /// Row-major [`dyad_backward_dx_prec_with_threads`].
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_linear_backward_dx_prec(
     wl: &[f32],
     wu: &[f32],
@@ -1604,7 +1764,6 @@ pub fn dyad_linear_backward_dx_prec(
     dyad_linear_backward_dx_prec_with_threads(wl, wu, dy, dims, variant, t, prec, num_threads())
 }
 
-#[allow(clippy::too_many_arguments)]
 pub fn dyad_linear_backward_dx_prec_with_threads(
     wl: &[f32],
     wu: &[f32],
@@ -1622,7 +1781,7 @@ pub fn dyad_linear_backward_dx_prec_with_threads(
 
 /// [`dyad_linear_backward_dx_prec_with_threads`] into a caller-owned
 /// `(t, f_in)` buffer; all transpose intermediates are recycled.
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dyad_linear_backward_dx_prec_into(
     wl: &[f32],
     wu: &[f32],
@@ -1684,7 +1843,7 @@ pub fn dyad_backward_dw_with_threads(
 
 /// [`dyad_backward_dw`] into caller-owned component buffers (each
 /// `component_params` long, zeroed here).
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dyad_backward_dw_into(
     x: &[f32],
     dy: &[f32],
@@ -1772,7 +1931,7 @@ pub fn dyad_cat_backward_dw_with_threads(
 /// [`dyad_cat_backward_dw`] into caller-owned component buffers; the
 /// gathered panel and the fused gradient rows come from recycled
 /// [`scratch`].
-#[allow(clippy::too_many_arguments)]
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dyad_cat_backward_dw_into(
     x: &[f32],
     dy: &[f32],

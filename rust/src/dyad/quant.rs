@@ -49,6 +49,7 @@ pub fn encode_bf16(w: &[f32]) -> Vec<u16> {
 
 /// [`encode_bf16`] into a caller-owned buffer of the same length —
 /// the kernels' per-call encode scratch is recycled, not reallocated.
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn encode_bf16_into(w: &[f32], out: &mut [u16]) {
     assert_eq!(w.len(), out.len());
     for (o, &v) in out.iter_mut().zip(w) {
@@ -68,6 +69,7 @@ pub fn quantize_rows_i8(w: &[f32], row_len: usize) -> (Vec<i8>, Vec<f32>) {
 
 /// [`quantize_rows_i8`] into caller-owned `q` (`w.len()`) and `scales`
 /// (`w.len() / row_len`) buffers, for recycled encode scratch.
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn quantize_rows_i8_into(w: &[f32], row_len: usize, q: &mut [i8], scales: &mut [f32]) {
     assert!(row_len > 0 && w.len() % row_len == 0, "w.len() must be a multiple of row_len");
     let rows = w.len() / row_len;
@@ -101,6 +103,7 @@ pub fn dequantize_rows_i8(q: &[i8], scales: &[f32], row_len: usize) -> Vec<f32> 
 /// dot over a bf16 weight row and f32 activations. Decodes in
 /// registers; accumulation order matches `kernel::dot`'s scalar path
 /// (8 parallel accumulators, pairwise-summed).
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dot_bf16(w: &[u16], x: &[f32]) -> f32 {
     debug_assert_eq!(w.len(), x.len(), "dot_bf16: length mismatch");
     let n = w.len().min(x.len());
@@ -121,6 +124,7 @@ pub fn dot_bf16(w: &[u16], x: &[f32]) -> f32 {
 }
 
 /// `out[j] += a * decode(w[j])` over a bf16 weight row.
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn axpy_bf16(out: &mut [f32], a: f32, w: &[u16]) {
     debug_assert_eq!(out.len(), w.len(), "axpy_bf16: length mismatch");
     let n = out.len().min(w.len());
@@ -140,6 +144,7 @@ pub fn axpy_bf16(out: &mut [f32], a: f32, w: &[u16]) {
 /// dot over an int8 weight row and f32 activations, *without* the row
 /// scale — the caller multiplies the scale exactly once, so the f32
 /// accumulation is identical no matter how the row was scaled.
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn dot_i8(q: &[i8], x: &[f32]) -> f32 {
     debug_assert_eq!(q.len(), x.len(), "dot_i8: length mismatch");
     let n = q.len().min(x.len());
@@ -161,6 +166,7 @@ pub fn dot_i8(q: &[i8], x: &[f32]) -> f32 {
 
 /// `out[j] += a * q[j]` over an int8 weight row; the caller folds the
 /// row scale into `a` (`a = coeff * scale[row]`).
+/// xtask:hot-path — no direct heap allocation (scratch recycler only).
 pub fn axpy_i8(out: &mut [f32], a: f32, q: &[i8]) {
     debug_assert_eq!(out.len(), q.len(), "axpy_i8: length mismatch");
     let n = out.len().min(q.len());

@@ -457,7 +457,6 @@ impl<'a> Lm<'a> {
 /// Shared by the `train_step` artifact executor, the
 /// `native_train_sweep` bench and the tests, so the training-step
 /// semantics live in exactly one place.
-#[allow(clippy::too_many_arguments)]
 pub fn train_microbatch(
     arch: &ArchCfg,
     var: &VariantSpec,

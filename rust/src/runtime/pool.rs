@@ -42,25 +42,149 @@
 //! oversubscription. A panic inside any task is caught, the job
 //! still completes on the other lanes, and the panic is resumed on
 //! the caller — a poisoned task surfaces as an error, never a hang.
+//!
+//! ## Model checking (`--cfg loom`)
+//!
+//! Every synchronisation primitive in this module is drawn from the
+//! [`shim`] module: `std` types in normal builds, `loom` doubles when
+//! built with `RUSTFLAGS="--cfg loom"`. `tests/loom_pool.rs`
+//! exhaustively explores the epoch-publication protocol under loom —
+//! job-write/epoch-bump happens-before, park/unpark wakeup, panic
+//! check-in, nested inlining — and a mutation harness (CI `loom` job)
+//! rebuilds with `--cfg dyad_loom_epoch_relaxed` /
+//! `--cfg dyad_loom_done_relaxed` to prove the suite *fails* when the
+//! [`epoch_publish`] / [`done_check_in`] orderings are weakened. The
+//! [`ThreadPool::run_chunks`] disjointness contract is additionally
+//! enforced at runtime in debug builds by
+//! [`debug_validate_chunk_cover`] and under Miri by
+//! `tests/miri_subset.rs`.
 
-use std::cell::{Cell, RefCell, UnsafeCell};
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::panic::{self, AssertUnwindSafe};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+
+use shim::cell::UnsafeCell;
+use shim::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use shim::sync::{Arc, Condvar, Mutex};
+use shim::thread::JoinHandle;
+
+/// Synchronisation-primitive indirection: `std` types in normal
+/// builds, `loom`-instrumented doubles under `--cfg loom` so the
+/// model checker can exhaustively explore the epoch protocol. The
+/// `std` side mirrors loom's closure-scoped `UnsafeCell` API so both
+/// builds share one source of truth for every access to `job`.
+pub(crate) mod shim {
+    pub(crate) mod sync {
+        #[cfg(not(loom))]
+        pub(crate) use std::sync::{Arc, Condvar, Mutex};
+
+        #[cfg(loom)]
+        pub(crate) use loom::sync::{Arc, Condvar, Mutex};
+
+        pub(crate) mod atomic {
+            #[cfg(not(loom))]
+            pub(crate) use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+            #[cfg(loom)]
+            pub(crate) use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+        }
+    }
+
+    pub(crate) mod cell {
+        /// API-compatible subset of `loom::cell::UnsafeCell`: all
+        /// reads/writes go through closures, which is what lets the
+        /// loom build track every access for race detection.
+        #[cfg(not(loom))]
+        #[derive(Debug)]
+        pub(crate) struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+        #[cfg(not(loom))]
+        impl<T> UnsafeCell<T> {
+            pub(crate) fn new(data: T) -> UnsafeCell<T> {
+                UnsafeCell(std::cell::UnsafeCell::new(data))
+            }
+
+            /// Closure-scoped shared access to the wrapped value.
+            pub(crate) fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+                f(self.0.get())
+            }
+
+            /// Closure-scoped exclusive access to the wrapped value.
+            pub(crate) fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+                f(self.0.get())
+            }
+        }
+
+        #[cfg(loom)]
+        pub(crate) use loom::cell::UnsafeCell;
+    }
+
+    pub(crate) mod thread {
+        #[cfg(not(loom))]
+        pub(crate) use std::thread::{yield_now, JoinHandle};
+
+        #[cfg(loom)]
+        pub(crate) use loom::thread::{yield_now, JoinHandle};
+
+        /// Spawn a named resident worker thread. The loom double
+        /// drops the name — loom's `spawn` has no builder — which is
+        /// fine: thread names are a debugging nicety only.
+        #[cfg(not(loom))]
+        pub(crate) fn spawn_worker<F>(idx: usize, f: F) -> JoinHandle<()>
+        where
+            F: FnOnce() + Send + 'static,
+        {
+            std::thread::Builder::new()
+                .name(format!("dyad-pool-{idx}"))
+                .spawn(f)
+                .expect("spawn pool worker")
+        }
+
+        #[cfg(loom)]
+        pub(crate) fn spawn_worker<F>(_idx: usize, f: F) -> JoinHandle<()>
+        where
+            F: FnOnce() + Send + 'static,
+        {
+            loom::thread::spawn(f)
+        }
+
+        /// One bounded-spin iteration: a CPU pause hint on real
+        /// hardware, a scheduler yield under loom (pause hints are
+        /// invisible to the model checker and would livelock it).
+        #[cfg(not(loom))]
+        pub(crate) fn spin_hint() {
+            std::hint::spin_loop();
+        }
+
+        #[cfg(loom)]
+        pub(crate) fn spin_hint() {
+            loom::thread::yield_now();
+        }
+    }
+}
 
 /// Bounded busy-wait before a worker parks on the condvar (and before
 /// the caller yields while waiting for check-ins). Kernels are
 /// micro/millisecond scale, so the common case hits the spin window.
-const SPIN_LIMIT: u32 = 1 << 14;
+/// Under loom the window shrinks to keep the schedule space
+/// explorable (each spin is a yield = a preemption point); under Miri
+/// it shrinks so interpreted spins reach the park path quickly.
+const SPIN_LIMIT: u32 = if cfg!(loom) {
+    2
+} else if cfg!(miri) {
+    64
+} else {
+    1 << 14
+};
 
 type PanicPayload = Box<dyn std::any::Any + Send>;
 
 /// One published job: an erased `&F` plus the monomorphic trampoline
 /// that re-types it. Valid only between epoch publication and the
-/// last `done` check-in of that epoch, which `run` brackets.
+/// last `done` check-in of that epoch, which `run` brackets. `Copy`
+/// so workers can lift it out of the [`UnsafeCell`] access closure.
+#[derive(Clone, Copy)]
 struct Job {
     data: *const (),
     call: unsafe fn(*const (), usize),
@@ -86,13 +210,64 @@ struct Shared {
 // SAFETY: `job` is only written by the caller while every worker is
 // waiting for the next epoch, and only read by workers between the
 // epoch bump and their `done` check-in; `run` does not return (and so
-// cannot re-write `job`) until all check-ins arrive.
+// cannot re-write `job`) until all check-ins arrive. This hand-off
+// discipline is model-checked exhaustively by `tests/loom_pool.rs`.
 unsafe impl Sync for Shared {}
 
+/// Publish a new epoch, waking workers onto the freshly written job.
+/// Release ordering pairs with the workers' Acquire epoch load in
+/// [`worker_loop`]: that edge is what makes the `job` write
+/// happen-before every task read.
+///
+/// Mutation harness: under `--cfg loom --cfg dyad_loom_epoch_relaxed`
+/// this deliberately degrades to a Relaxed publish, which lets a
+/// spinning worker observe the new epoch with no happens-before edge
+/// to the job write. The loom suite MUST fail on that build — CI's
+/// `loom` job asserts it does.
+fn epoch_publish(epoch: &AtomicU64) {
+    #[cfg(all(loom, dyad_loom_epoch_relaxed))]
+    epoch.fetch_add(1, Ordering::Relaxed);
+    #[cfg(not(all(loom, dyad_loom_epoch_relaxed)))]
+    epoch.fetch_add(1, Ordering::Release);
+}
+
+/// A worker's end-of-epoch check-in. Release (within the AcqRel RMW)
+/// pairs with the caller's Acquire `done` load in [`ThreadPool::run`]:
+/// it is what makes every task-side write (including the worker's
+/// last read of `job`) happen-before `run` returning — and therefore
+/// before the *next* `run` overwrites the job slot.
+///
+/// Mutation harness: under `--cfg loom --cfg dyad_loom_done_relaxed`
+/// this degrades to a Relaxed check-in, so back-to-back `run` calls
+/// race the next job write against the previous epoch's job read. The
+/// loom suite MUST fail on that build.
+fn done_check_in(done: &AtomicUsize) {
+    #[cfg(all(loom, dyad_loom_done_relaxed))]
+    done.fetch_add(1, Ordering::Relaxed);
+    #[cfg(not(all(loom, dyad_loom_done_relaxed)))]
+    done.fetch_add(1, Ordering::AcqRel);
+}
+
+#[cfg(not(loom))]
 thread_local! {
     static POOLS: RefCell<HashMap<usize, Rc<ThreadPool>>> = RefCell::new(HashMap::new());
     static IN_TASK: Cell<bool> = const { Cell::new(false) };
     static FORCE_SCOPED: Cell<bool> = const { Cell::new(false) };
+}
+
+#[cfg(loom)]
+loom::thread_local! {
+    static POOLS: RefCell<HashMap<usize, Rc<ThreadPool>>> = RefCell::new(HashMap::new());
+    static IN_TASK: Cell<bool> = Cell::new(false);
+    static FORCE_SCOPED: Cell<bool> = Cell::new(false);
+}
+
+fn in_task_get() -> bool {
+    IN_TASK.with(Cell::get)
+}
+
+fn in_task_set(v: bool) {
+    IN_TASK.with(|c| c.set(v));
 }
 
 /// A persistent worker pool of `threads` logical lanes: `threads - 1`
@@ -123,12 +298,8 @@ impl ThreadPool {
         for i in 0..threads - 1 {
             let sh = Arc::clone(&shared);
             counters::note_spawn(1);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("dyad-pool-{i}"))
-                    .spawn(move || worker_loop(&sh, i))
-                    .expect("spawn pool worker"),
-            );
+            let worker = shim::thread::spawn_worker(i, move || worker_loop(&sh, i));
+            workers.push(worker);
         }
         ThreadPool { shared, workers, threads }
     }
@@ -146,6 +317,8 @@ impl ThreadPool {
     ///
     /// Panics in any task are caught, the epoch still completes on
     /// every lane, and the first payload is resumed on the caller.
+    ///
+    /// xtask:hot-path — dispatch itself must not allocate.
     pub fn run<F>(&self, n_tasks: usize, f: &F)
     where
         F: Fn(usize) + Sync,
@@ -155,7 +328,7 @@ impl ThreadPool {
         }
         // Serial lanes, nested parallel sections and 1-task jobs run
         // inline in task order — same chunk ownership, no dispatch.
-        if n_tasks == 1 || self.workers.is_empty() || IN_TASK.get() {
+        if n_tasks == 1 || self.workers.is_empty() || in_task_get() {
             for t in 0..n_tasks {
                 f(t);
             }
@@ -170,31 +343,32 @@ impl ThreadPool {
         let shared = &*self.shared;
         shared.done.store(0, Ordering::Relaxed);
         // SAFETY: all workers from the previous epoch have checked in
-        // (the previous `run` blocked on it), so no one reads `job`
-        // while we write it; the epoch bump below publishes it.
-        unsafe {
-            *shared.job.get() =
-                Job { data: f as *const F as *const (), call: call_typed::<F>, n_tasks };
-        }
+        // (the previous `run` blocked on it, and `done_check_in`'s
+        // Release side published their last `job` read), so no lane
+        // reads `job` while we overwrite it; `epoch_publish` below is
+        // what makes this write visible before any task runs.
+        shared.job.with_mut(|j| unsafe {
+            *j = Job { data: f as *const F as *const (), call: call_typed::<F>, n_tasks };
+        });
         {
             // Bump under the park lock so a worker that just decided
             // to wait cannot miss the notify.
             let _g = shared.lock.lock().unwrap_or_else(|p| p.into_inner());
-            shared.epoch.fetch_add(1, Ordering::Release);
+            epoch_publish(&shared.epoch);
             shared.cv.notify_all();
         }
         // Caller is lane 0. Mark in-task so nested pool use inlines.
-        IN_TASK.set(true);
+        in_task_set(true);
         let caller = panic::catch_unwind(AssertUnwindSafe(|| f(0)));
-        IN_TASK.set(false);
+        in_task_set(false);
         let n_workers = self.workers.len();
         let mut spins = 0u32;
         while shared.done.load(Ordering::Acquire) < n_workers {
             spins = spins.wrapping_add(1);
             if spins < SPIN_LIMIT {
-                std::hint::spin_loop();
+                shim::thread::spin_hint();
             } else {
-                std::thread::yield_now();
+                shim::thread::yield_now();
             }
         }
         let worker_panic =
@@ -211,6 +385,20 @@ impl ThreadPool {
     /// `chunks_mut(chunk_len)` chunk of `out`, one task per chunk —
     /// byte-for-byte the iteration the scoped-spawn kernels ran, with
     /// resident lanes instead of fresh threads.
+    ///
+    /// ## Contract (soundness of the `SendPtr` handout)
+    ///
+    /// Task `t` receives exactly the half-open range
+    /// `[t * chunk_len, min((t + 1) * chunk_len, len))` of `out`, and
+    /// the task count is `len.div_ceil(chunk_len)` — so the ranges
+    /// are non-empty, **pairwise disjoint**, and **tile `[0, len)`
+    /// exactly**, and no `&mut` chunk outlives the call (`run` blocks
+    /// until every lane checks in). Debug builds re-verify the
+    /// partition on every call via [`debug_validate_chunk_cover`];
+    /// `tests/miri_subset.rs` checks the handout under Miri's
+    /// strict-provenance aliasing rules.
+    ///
+    /// xtask:hot-path — dispatch itself must not allocate.
     pub fn run_chunks<F>(&self, out: &mut [f32], chunk_len: usize, f: &F)
     where
         F: Fn(usize, &mut [f32]) + Sync,
@@ -220,18 +408,47 @@ impl ThreadPool {
         }
         let len = out.len();
         let n_tasks = len.div_ceil(chunk_len);
+        debug_validate_chunk_cover(len, chunk_len, n_tasks);
         let base = SendPtr(out.as_mut_ptr());
         self.run(n_tasks, &move |t| {
             let start = t * chunk_len;
             let end = (start + chunk_len).min(len);
-            // SAFETY: tasks receive pairwise-disjoint [start, end)
-            // ranges of `out`, and `run` blocks until every task has
-            // finished, so the borrows never outlive the &mut.
+            // SAFETY: task `t` takes the `t`-th `chunks_mut`-style
+            // range of `out`; the ranges are pairwise disjoint and
+            // tile `[0, len)` (debug-checked above), and `run` blocks
+            // until every task finishes, so no chunk outlives the
+            // caller's `&mut [f32]`.
             let chunk =
                 unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
             f(t, chunk);
         });
     }
+}
+
+/// Debug-build dynamic checker for the [`ThreadPool::run_chunks`]
+/// contract: task ranges `[t * chunk_len, min((t + 1) * chunk_len,
+/// len))` must be non-empty, pairwise disjoint (they ascend and abut)
+/// and tile `[0, len)` exactly — the properties the `SendPtr` handout
+/// relies on for soundness. Allocation-free so it can sit on the hot
+/// path of debug builds; compiled out of release builds.
+fn debug_validate_chunk_cover(len: usize, chunk_len: usize, n_tasks: usize) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    assert_eq!(
+        n_tasks,
+        len.div_ceil(chunk_len),
+        "run_chunks: task count drifted from the chunk partition"
+    );
+    let mut prev_end = 0usize;
+    for t in 0..n_tasks {
+        let start = t * chunk_len;
+        let end = (start + chunk_len).min(len);
+        assert!(start < end, "run_chunks: empty range for task {t}");
+        assert_eq!(start, prev_end, "run_chunks: task {t} overlaps or gaps");
+        prev_end = end;
+    }
+    assert_eq!(prev_end, len, "run_chunks: ranges do not cover the output");
 }
 
 impl Drop for ThreadPool {
@@ -248,13 +465,31 @@ impl Drop for ThreadPool {
 }
 
 struct SendPtr(*mut f32);
+
 // SAFETY: the pointer is only dereferenced through the disjoint-range
-// protocol documented in `run_chunks`.
+// protocol documented (and debug-verified) in `run_chunks`, so no two
+// threads ever touch the same element.
 unsafe impl Send for SendPtr {}
+
+// SAFETY: as for `Send` — shared references to the wrapper only ever
+// yield accesses to pairwise-disjoint ranges, never the same element
+// from two threads.
 unsafe impl Sync for SendPtr {}
 
+/// Placeholder trampoline for the pre-first-epoch job slot.
+///
+/// # Safety
+///
+/// Never actually called: workers only invoke the trampoline after an
+/// epoch bump, and every bump is preceded by a real job write.
 unsafe fn noop_call(_data: *const (), _t: usize) {}
 
+/// Re-types the erased closure pointer and runs task `t`.
+///
+/// # Safety
+///
+/// `data` must be the erased `&F` published by the current epoch's
+/// `run`, which keeps the closure alive until every lane checks in.
 unsafe fn call_typed<F: Fn(usize) + Sync>(data: *const (), t: usize) {
     // SAFETY: `data` was erased from an `&F` that the publishing
     // `run` keeps alive until every lane checks in.
@@ -265,7 +500,7 @@ unsafe fn call_typed<F: Fn(usize) + Sync>(data: *const (), t: usize) {
 fn worker_loop(shared: &Shared, idx: usize) {
     // Worker lanes are always "in a task" from the registry's point
     // of view: any pool use from kernel code they run must inline.
-    IN_TASK.set(true);
+    in_task_set(true);
     let mut seen = 0u64;
     let mut spins = 0u32;
     loop {
@@ -276,7 +511,7 @@ fn worker_loop(shared: &Shared, idx: usize) {
         if e == seen {
             spins = spins.wrapping_add(1);
             if spins < SPIN_LIMIT {
-                std::hint::spin_loop();
+                shim::thread::spin_hint();
             } else {
                 let mut g = shared.lock.lock().unwrap_or_else(|p| p.into_inner());
                 while !shared.shutdown.load(Ordering::Relaxed)
@@ -290,9 +525,11 @@ fn worker_loop(shared: &Shared, idx: usize) {
         }
         seen = e;
         spins = 0;
-        // SAFETY: the Acquire epoch load synchronises with the
-        // caller's Release bump, which happens after the job write.
-        let job = unsafe { &*shared.job.get() };
+        // SAFETY: the Acquire epoch load above synchronises with the
+        // caller's Release bump in `epoch_publish`, which happens
+        // after the job write — so this read cannot race with it, and
+        // the `Copy` lifts the job out before any other access.
+        let job = shared.job.with(|j| unsafe { *j });
         let t = idx + 1;
         if t < job.n_tasks {
             let r = panic::catch_unwind(AssertUnwindSafe(|| {
@@ -306,7 +543,7 @@ fn worker_loop(shared: &Shared, idx: usize) {
                 slot.get_or_insert(p);
             }
         }
-        shared.done.fetch_add(1, Ordering::AcqRel);
+        done_check_in(&shared.done);
     }
 }
 
@@ -316,7 +553,7 @@ fn worker_loop(shared: &Shared, idx: usize) {
 /// its lanes. Inside a pool task this returns the serial pool, so
 /// nested parallel sections inline instead of spawning.
 pub fn sized(threads: usize) -> Rc<ThreadPool> {
-    let threads = if IN_TASK.get() { 1 } else { threads.max(1) };
+    let threads = if in_task_get() { 1 } else { threads.max(1) };
     POOLS.with(|p| {
         Rc::clone(
             p.borrow_mut()
@@ -335,7 +572,7 @@ pub fn global() -> Rc<ThreadPool> {
 
 /// True while the current thread is executing a pool task.
 pub fn in_task() -> bool {
-    IN_TASK.get()
+    in_task_get()
 }
 
 /// Test/bench hook: run `f` with every pool-backed kernel entry point
@@ -344,16 +581,16 @@ pub fn in_task() -> bool {
 /// `benches/pool_overhead.rs` measures the dispatch overhead) on the
 /// *same* public kernels.
 pub fn with_scoped_spawns<T>(f: impl FnOnce() -> T) -> T {
-    let prev = FORCE_SCOPED.get();
-    FORCE_SCOPED.set(true);
+    let prev = FORCE_SCOPED.with(Cell::get);
+    FORCE_SCOPED.with(|c| c.set(true));
     let out = f();
-    FORCE_SCOPED.set(prev);
+    FORCE_SCOPED.with(|c| c.set(prev));
     out
 }
 
 /// True when [`with_scoped_spawns`] is active on this thread.
 pub fn scoped_spawns_forced() -> bool {
-    FORCE_SCOPED.get()
+    FORCE_SCOPED.with(Cell::get)
 }
 
 /// Thread-local spawn/dispatch/allocation counters, in the mould of
@@ -365,11 +602,20 @@ pub fn scoped_spawns_forced() -> bool {
 pub mod counters {
     use std::cell::Cell;
 
+    #[cfg(not(loom))]
     thread_local! {
         static SPAWNS: Cell<u64> = const { Cell::new(0) };
         static POOL_RUNS: Cell<u64> = const { Cell::new(0) };
         static KERNEL_ALLOCS: Cell<u64> = const { Cell::new(0) };
         static ARENA_HITS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    #[cfg(loom)]
+    loom::thread_local! {
+        static SPAWNS: Cell<u64> = Cell::new(0);
+        static POOL_RUNS: Cell<u64> = Cell::new(0);
+        static KERNEL_ALLOCS: Cell<u64> = Cell::new(0);
+        static ARENA_HITS: Cell<u64> = Cell::new(0);
     }
 
     /// One or more OS threads created (pool construction or a scoped
@@ -436,7 +682,7 @@ pub mod counters {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU32;
@@ -445,8 +691,7 @@ mod tests {
     fn run_executes_every_task_exactly_once() {
         let pool = ThreadPool::new(4);
         for n_tasks in [1, 2, 3, 4] {
-            let hits: Vec<AtomicU32> =
-                (0..n_tasks).map(|_| AtomicU32::new(0)).collect();
+            let hits: Vec<AtomicU32> = (0..n_tasks).map(|_| AtomicU32::new(0)).collect();
             pool.run(n_tasks, &|t| {
                 hits[t].fetch_add(1, Ordering::Relaxed);
             });
@@ -566,5 +811,26 @@ mod tests {
         });
         assert!(nested);
         assert!(!scoped_spawns_forced());
+    }
+
+    #[test]
+    fn debug_validator_accepts_every_divisor_partition() {
+        // the validator is pure; sweep it directly over many shapes
+        for len in 1..40usize {
+            for chunk_len in 1..=len {
+                debug_validate_chunk_cover(len, chunk_len, len.div_ceil(chunk_len));
+            }
+        }
+    }
+
+    #[test]
+    fn debug_validator_rejects_wrong_task_count() {
+        if !cfg!(debug_assertions) {
+            return; // validator is compiled out in release test runs
+        }
+        let r = panic::catch_unwind(|| debug_validate_chunk_cover(10, 3, 3));
+        assert!(r.is_err(), "undercounted partition must be rejected");
+        let r = panic::catch_unwind(|| debug_validate_chunk_cover(10, 3, 5));
+        assert!(r.is_err(), "overcounted partition must be rejected");
     }
 }

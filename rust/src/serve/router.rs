@@ -167,6 +167,9 @@ impl Router {
             let shared = Arc::new(WorkerShared::new());
             let wcfg = cfg.clone();
             let wshared = shared.clone();
+            // xtask:allow(thread_spawn): serve workers are long-lived
+            // backend-owning threads, not kernel parallelism — the pool
+            // covers kernels inside each worker.
             let join = std::thread::Builder::new()
                 .name(format!("serve-worker-{i}"))
                 .spawn(move || worker(wcfg, wrx, wshared))
@@ -176,6 +179,8 @@ impl Router {
         let worker_txs: Vec<_> = links.iter().map(|l| l.tx.clone()).collect();
         let shares: Vec<_> = links.iter().map(|l| l.shared.clone()).collect();
         let (tx, rx) = mpsc::channel();
+        // xtask:allow(thread_spawn): the dispatcher is a long-lived
+        // routing thread, not kernel parallelism.
         let dispatcher = std::thread::Builder::new()
             .name("serve-router".into())
             .spawn(move || dispatch_loop(rx, links, policy))

@@ -113,6 +113,8 @@ impl ServerHandle {
     pub fn start(cfg: ServeConfig) -> ServerHandle {
         let (tx, rx) = mpsc::channel();
         let shared = Arc::new(WorkerShared::new());
+        // xtask:allow(thread_spawn): the single-worker server thread is
+        // a long-lived backend owner, not kernel parallelism.
         let join = std::thread::spawn(move || worker(cfg, rx, shared));
         ServerHandle { tx, join: Some(join) }
     }

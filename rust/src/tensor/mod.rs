@@ -1,7 +1,6 @@
 //! Host-side tensors and the DYT checkpoint format.
 
 mod io;
-#[allow(clippy::module_inception)]
 mod tensor;
 
 pub use io::{load_checkpoint, save_checkpoint};

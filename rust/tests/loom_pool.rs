@@ -1,0 +1,161 @@
+//! Exhaustive model checking of `runtime::pool`'s epoch-publication
+//! protocol under [loom](https://docs.rs/loom).
+//!
+//! Build and run with:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_pool
+//! ```
+//!
+//! Under `--cfg loom` every synchronisation primitive in the pool is
+//! swapped for its loom double (see `runtime::pool::shim`), and each
+//! test below explores every interleaving (bounded at 3 preemptions)
+//! of caller + workers: the job-write/epoch-bump happens-before edge,
+//! the spin-then-park wakeup, per-lane panic check-in, and nested
+//! `in_task` inlining.
+//!
+//! ## Mutation harness
+//!
+//! CI's `loom` job also rebuilds this suite with
+//! `--cfg dyad_loom_epoch_relaxed` (epoch publish degraded from
+//! Release to Relaxed) and `--cfg dyad_loom_done_relaxed` (worker
+//! check-in degraded from AcqRel to Relaxed) and asserts the suite
+//! **fails**: loom must flag the job-slot data race each weakening
+//! exposes. That is the evidence the model actually covers the
+//! orderings the pool relies on — a suite that passes the mutants
+//! would be checking nothing.
+
+#![cfg(loom)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use dyad_repro::runtime::pool::{self, ThreadPool};
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+
+/// Explore `f` under a 3-preemption bound: exhaustive for the
+/// protocol-relevant interleavings while keeping each test tractable
+/// (the pool's loom build shrinks its spin window to 2 iterations so
+/// the spin→park decision point stays within the bound).
+fn model(f: impl Fn() + Sync + Send + 'static) {
+    let mut builder = loom::model::Builder::new();
+    builder.preemption_bound = Some(3);
+    builder.check(f);
+}
+
+/// The core happens-before claim: a worker that observes the epoch
+/// bump (spin path or park path) sees the full job write and runs its
+/// task exactly once, and `run` does not return before the check-in.
+#[test]
+fn run_delivers_every_task_exactly_once() {
+    model(|| {
+        let pool = ThreadPool::new(2);
+        let hits = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+        let h = Arc::clone(&hits);
+        pool.run(2, &move |t| {
+            h[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits[0].load(Ordering::Relaxed), 1);
+        assert_eq!(hits[1].load(Ordering::Relaxed), 1);
+    });
+}
+
+/// Job-slot reuse: the second `run` overwrites `job` only after the
+/// first epoch's check-in (the `done_check_in` Release edge). This is
+/// the test that must fail under `--cfg dyad_loom_done_relaxed` — a
+/// Relaxed check-in leaves the first epoch's job read racing the
+/// second epoch's job write.
+#[test]
+fn back_to_back_runs_reuse_the_job_slot_safely() {
+    model(|| {
+        let pool = ThreadPool::new(2);
+        let sum = Arc::new(AtomicUsize::new(0));
+        let s1 = Arc::clone(&sum);
+        pool.run(2, &move |t| {
+            s1.fetch_add(t + 1, Ordering::Relaxed);
+        });
+        let s2 = Arc::clone(&sum);
+        pool.run(2, &move |t| {
+            s2.fetch_add(10 * (t + 1), Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 1 + 2 + 10 + 20);
+    });
+}
+
+/// The `SendPtr` handout: disjoint chunks written by distinct lanes
+/// are all visible to the caller when `run_chunks` returns.
+#[test]
+fn run_chunks_tiles_the_output_across_lanes() {
+    model(|| {
+        let pool = ThreadPool::new(2);
+        let mut out = vec![0.0f32; 4];
+        pool.run_chunks(&mut out, 2, &|t, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (10 * t + i) as f32;
+            }
+        });
+        assert_eq!(out, vec![0.0, 1.0, 10.0, 11.0]);
+    });
+}
+
+/// A panicking worker task still checks in (no hang in any
+/// interleaving), the payload is resumed on the caller, and the pool
+/// remains usable for the next epoch.
+#[test]
+fn worker_panic_checks_in_and_pool_survives() {
+    model(|| {
+        let pool = ThreadPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, &|t| {
+                if t == 1 {
+                    panic!("lane 1 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must surface on the caller");
+        let ok = Arc::new(AtomicUsize::new(0));
+        let o = Arc::clone(&ok);
+        pool.run(2, &move |_| {
+            o.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    });
+}
+
+/// Nested pool use inside a task resolves to the serial pool and
+/// inlines — no second dispatch, no deadlock, in every interleaving.
+#[test]
+fn nested_run_inlines_on_the_worker_lane() {
+    model(|| {
+        let pool = ThreadPool::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        pool.run(2, &move |_| {
+            assert!(pool::in_task());
+            let inner = pool::sized(4);
+            assert_eq!(inner.threads(), 1);
+            let hh = Arc::clone(&h);
+            inner.run(1, &move |_| {
+                hh.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    });
+}
+
+/// Shutdown: `Drop` wakes parked workers (shutdown store + notify
+/// under the park lock) and joins them — no lost-wakeup interleaving
+/// can leave a worker parked forever.
+#[test]
+fn drop_joins_spinning_and_parked_workers() {
+    model(|| {
+        let pool = ThreadPool::new(3);
+        let n = Arc::new(AtomicUsize::new(0));
+        let nn = Arc::clone(&n);
+        pool.run(3, &move |_| {
+            nn.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 3);
+        drop(pool);
+    });
+}

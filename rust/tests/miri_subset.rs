@@ -1,0 +1,153 @@
+//! The Miri-compatible test subset.
+//!
+//! Run with a nightly toolchain that has the `miri` component:
+//!
+//! ```text
+//! MIRIFLAGS=-Zmiri-strict-provenance cargo +nightly miri test --test miri_subset
+//! ```
+//!
+//! Everything here stays within what Miri can interpret: no AVX2
+//! intrinsics (`simd::enabled()` reports false under Miri, so kernels
+//! take their scalar paths), sizes small enough that interpreted
+//! execution finishes in seconds, and the pool's spin window shrunk by
+//! `cfg(miri)`. The point is the *unsafe* surface: the `SendPtr`
+//! disjoint-chunk handout in `run_chunks`, the `Rc`-backed
+//! `DeviceTensor::take` unwrap, and the `dyad::quant` bit-twiddling —
+//! all checked under strict provenance. (The thread-local scratch
+//! recycler is `pub(crate)`; CI's Miri job covers it through the
+//! library unit tests: `cargo miri test --lib -- scratch`.)
+
+use dyad_repro::dyad::quant;
+use dyad_repro::runtime::{pool, Backend, NativeBackend};
+use dyad_repro::tensor::Tensor;
+
+/// `run_chunks` hands each lane a raw-pointer-derived `&mut [f32]`
+/// chunk; Miri proves the chunks are genuinely disjoint borrows and
+/// that every write lands where the caller reads it back.
+#[test]
+fn run_chunks_handout_is_disjoint_under_provenance() {
+    let pool = pool::sized(3);
+    let mut out = vec![0.0f32; 10];
+    pool.run_chunks(&mut out, 4, &|t, chunk| {
+        for (i, v) in chunk.iter_mut().enumerate() {
+            *v = (100 * t + i) as f32;
+        }
+    });
+    let want: Vec<f32> = vec![0.0, 1.0, 2.0, 3.0, 100.0, 101.0, 102.0, 103.0, 200.0, 201.0];
+    assert_eq!(out, want);
+}
+
+/// Nested pool use inside a task inlines on the caller lane — the
+/// type-erased `Job` round trip (`*const ()` and back) is exercised
+/// twice, once per nesting level.
+#[test]
+fn nested_pool_runs_inline_in_task() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let pool = pool::sized(2);
+    let hits = AtomicUsize::new(0);
+    pool.run(2, &|_| {
+        assert!(pool::in_task());
+        let inner = pool::sized(4);
+        assert_eq!(inner.threads(), 1, "nested pools must be serial");
+        inner.run(1, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 2);
+}
+
+/// A panicking task unwinds through the type-erased call without
+/// leaking the job payload or poisoning the pool.
+#[test]
+fn worker_panic_is_resumed_and_pool_survives() {
+    let pool = pool::sized(2);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(2, &|t| {
+            if t == 1 {
+                panic!("lane 1 exploded");
+            }
+        });
+    }));
+    assert!(r.is_err(), "worker panic must surface on the caller");
+    let mut out = vec![0.0f32; 4];
+    pool.run_chunks(&mut out, 2, &|t, chunk| chunk.fill(t as f32 + 1.0));
+    assert_eq!(out, vec![1.0, 1.0, 2.0, 2.0]);
+}
+
+/// `take` on a sole-owner `Rc` handle must recover the exact buffer
+/// (pointer equality), and a shared handle must fall back to a clone —
+/// both paths validated by Miri's ownership tracking.
+#[test]
+fn device_tensor_take_unwraps_or_clones() {
+    let backend = NativeBackend::new();
+    let values: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let ptr = values.as_ptr();
+    let dev = backend
+        .upload(Tensor::from_f32(&[64], values).unwrap())
+        .unwrap();
+    let t = backend.take(dev).unwrap();
+    assert_eq!(t.as_f32().unwrap().as_ptr(), ptr, "sole owner must not copy");
+    let dev = backend.upload(t).unwrap();
+    let keep = dev.clone();
+    let copied = backend.take(dev).unwrap();
+    let kept = backend.download(&keep).unwrap();
+    assert_eq!(copied.as_f32().unwrap(), kept.as_f32().unwrap());
+}
+
+/// bf16 round-to-nearest-even encoding and exact decode, on the bit
+/// patterns that exercise the carry/tie logic.
+#[test]
+fn bf16_round_trip_and_ties_to_even() {
+    for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 3.1415926, 1e-30, -2.5e4] {
+        let back = quant::bf16_to_f32(quant::bf16_from_f32(v));
+        let ulp = (v.abs() / 128.0).max(f32::MIN_POSITIVE);
+        assert!((back - v).abs() <= ulp, "bf16({v}) -> {back} off by > 1 ulp");
+    }
+    // exactly representable values survive unchanged
+    for v in [1.0f32, 1.5, -0.25, 256.0] {
+        assert_eq!(quant::bf16_to_f32(quant::bf16_from_f32(v)), v);
+    }
+    // a tie (mantissa exactly 0x8000 beyond bf16) rounds to even
+    let tie = f32::from_bits(0x3F80_8000);
+    assert_eq!(quant::bf16_from_f32(tie), 0x3F80, "tie must round to even");
+    let tie_up = f32::from_bits(0x3F81_8000);
+    assert_eq!(quant::bf16_from_f32(tie_up), 0x3F82, "odd tie rounds up");
+    // NaN stays NaN (never becomes an infinity)
+    assert!(quant::bf16_to_f32(quant::bf16_from_f32(f32::NAN)).is_nan());
+}
+
+/// int8 per-row quantization round trip within the scale's quantum,
+/// plus the scalar dot/axpy entry points used by the quantized
+/// kernels.
+#[test]
+fn i8_rows_round_trip_and_scalar_kernels_agree() {
+    let row_len = 12;
+    let w: Vec<f32> = (0..2 * row_len).map(|i| (i as f32 - 11.5) / 7.0).collect();
+    let (q, scales) = quant::quantize_rows_i8(&w, row_len);
+    assert_eq!(q.len(), w.len());
+    assert_eq!(scales.len(), 2);
+    let deq = quant::dequantize_rows_i8(&q, &scales, row_len);
+    for (r, (a, b)) in w.chunks(row_len).zip(deq.chunks(row_len)).enumerate() {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= scales[r] * 0.5 + 1e-7, "row {r}: {x} vs {y}");
+        }
+    }
+    let x: Vec<f32> = (0..row_len).map(|i| 0.1 * i as f32).collect();
+    let row = &q[..row_len];
+    let got = quant::dot_i8(row, &x) * scales[0];
+    let want: f32 = deq[..row_len].iter().zip(&x).map(|(a, b)| a * b).sum();
+    assert!((got - want).abs() < 1e-4, "dot_i8 {got} vs {want}");
+    let mut out = vec![0.0f32; row_len];
+    quant::axpy_i8(&mut out, 2.0 * scales[0], row);
+    for (o, d) in out.iter().zip(&deq[..row_len]) {
+        assert!((o - 2.0 * d).abs() < 1e-5);
+    }
+    let wb = quant::encode_bf16(&w[..row_len]);
+    let got = quant::dot_bf16(&wb, &x);
+    let want: f32 = wb
+        .iter()
+        .zip(&x)
+        .map(|(a, b)| quant::bf16_to_f32(*a) * b)
+        .sum();
+    assert!((got - want).abs() < 1e-4, "dot_bf16 {got} vs {want}");
+}

@@ -1,0 +1,610 @@
+//! Repo-specific invariant lints, run as `cargo xtask lint`.
+//!
+//! These encode the PR 7/PR 8 structural invariants that rustc and
+//! clippy cannot see:
+//!
+//! 1. **thread-spawn** — `std::thread::{spawn, scope, Builder}` is
+//!    forbidden in production code outside `runtime/pool.rs`: kernel
+//!    parallelism must go through the resident pool. Long-lived
+//!    non-kernel threads (serve workers) carry an explicit waiver
+//!    comment `xtask:allow(thread_spawn)` directly above the spawning
+//!    statement. `#[cfg(test)]` modules are exempt.
+//! 2. **safety-comment** — every `unsafe` block needs a `// SAFETY:`
+//!    comment on the contiguous comment block above its enclosing
+//!    statement; every `unsafe fn` needs a `# Safety` doc section;
+//!    every `unsafe impl` needs a `// SAFETY:` comment above it.
+//! 3. **into-wrapper** — every `pub fn *_into` kernel in
+//!    `dyad/kernel.rs` / `dyad/quant.rs` must keep its allocating
+//!    wrapper (`foo` or `foo_with_threads` for `foo_into`), so the
+//!    scratch-recycler entry points never become the only API.
+//! 4. **hot-path-alloc** — functions whose docs carry the
+//!    `xtask:hot-path` marker must not allocate directly: no `vec!`,
+//!    `.to_vec()`, `.collect()`, `Vec::new`, `Vec::with_capacity`, or
+//!    `Box::new` in their bodies (scratch take/put is the sanctioned
+//!    route).
+//! 5. **workspace-lints** — the root `Cargo.toml` must deny
+//!    `unsafe_op_in_unsafe_fn` via `[workspace.lints]` and every
+//!    member crate must opt in with `[lints] workspace = true`.
+//!
+//! Adding a lint: write a check that pushes `Finding`s (file, line,
+//! lint id, message), call it from `lint()`, and add a fixture test
+//! at the bottom proving it both fires and stays quiet.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use syn::spanned::Spanned;
+use syn::visit::Visit;
+
+fn main() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    match cmd.as_str() {
+        "lint" => lint(),
+        _ => bail!("usage: cargo xtask lint"),
+    }
+}
+
+/// `rust/xtask` → workspace root is two levels up.
+fn workspace_root() -> Result<PathBuf> {
+    let here = Path::new(env!("CARGO_MANIFEST_DIR"));
+    here.join("../..")
+        .canonicalize()
+        .context("locate workspace root")
+}
+
+#[derive(Debug)]
+struct Finding {
+    file: String,
+    line: usize,
+    lint: &'static str,
+    msg: String,
+}
+
+fn lint() -> Result<()> {
+    let root = workspace_root()?;
+    let mut findings = Vec::new();
+
+    let scan_roots = ["rust/src", "examples", "rust/xla-stub/src", "rust/xtask/src"];
+    let mut files = Vec::new();
+    for dir in scan_roots {
+        collect_rs_files(&root.join(dir), &mut files)?;
+    }
+    files.sort();
+
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("read {rel}"))?;
+        let ast = syn::parse_file(&src)
+            .with_context(|| format!("parse {rel}"))?;
+        lint_source(&rel, &src, &ast, &mut findings);
+    }
+
+    check_into_wrappers(&root, &mut findings)?;
+    check_workspace_lints(&root, &mut findings)?;
+
+    if findings.is_empty() {
+        println!("xtask lint: {} files clean", files.len());
+        return Ok(());
+    }
+    findings.sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
+    let mut out = String::new();
+    for f in &findings {
+        let _ = writeln!(out, "{}:{}: [{}] {}", f.file, f.line, f.lint, f.msg);
+    }
+    bail!("xtask lint: {} finding(s)\n{out}", findings.len());
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read dir {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn lint_source(rel: &str, src: &str, ast: &syn::File, findings: &mut Vec<Finding>) {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut v = LintVisitor {
+        rel,
+        lines: &lines,
+        // the pool owns thread creation; everything else goes through it
+        spawn_lint: !rel.ends_with("runtime/pool.rs"),
+        stmt_stack: Vec::new(),
+        cfg_test_depth: 0,
+        hot_path_depth: 0,
+        findings,
+    };
+    v.visit_file(ast);
+}
+
+struct LintVisitor<'a> {
+    rel: &'a str,
+    lines: &'a [&'a str],
+    spawn_lint: bool,
+    /// 1-based start lines of the enclosing statements, innermost last.
+    stmt_stack: Vec<usize>,
+    cfg_test_depth: usize,
+    hot_path_depth: usize,
+    findings: &'a mut Vec<Finding>,
+}
+
+impl LintVisitor<'_> {
+    fn push(&mut self, line: usize, lint: &'static str, msg: String) {
+        self.findings.push(Finding { file: self.rel.to_string(), line, lint, msg });
+    }
+
+    /// The contiguous run of comment/attribute lines directly above
+    /// 1-based `line`, concatenated. This is where SAFETY comments and
+    /// `xtask:allow` waivers must live.
+    fn comment_block_above(&self, line: usize) -> String {
+        let mut block = String::new();
+        let mut i = line.saturating_sub(1); // index of the line above, 1-based
+        while i >= 1 {
+            let text = self.lines[i - 1].trim_start();
+            let is_attached = text.starts_with("//")
+                || text.starts_with("#[")
+                || text.starts_with("#![")
+                || text.starts_with("*")
+                || text.starts_with("/*");
+            if !is_attached {
+                break;
+            }
+            block.push_str(text);
+            block.push('\n');
+            i -= 1;
+        }
+        block
+    }
+
+    /// Anchor for an expression at `expr_line`: the innermost
+    /// enclosing statement's first line (falling back to the
+    /// expression's own line), so wrapped statements like
+    /// `let x =\n    unsafe { .. };` look above the `let`.
+    fn anchor(&self, expr_line: usize) -> usize {
+        self.stmt_stack.last().copied().unwrap_or(expr_line)
+    }
+
+    fn has_marker_above(&self, line: usize, marker: &str) -> bool {
+        self.comment_block_above(line).contains(marker)
+    }
+}
+
+fn attrs_doc_text(attrs: &[syn::Attribute]) -> String {
+    let mut doc = String::new();
+    for a in attrs {
+        if a.path().is_ident("doc") {
+            if let syn::Meta::NameValue(nv) = &a.meta {
+                if let syn::Expr::Lit(l) = &nv.value {
+                    if let syn::Lit::Str(s) = &l.lit {
+                        doc.push_str(&s.value());
+                        doc.push('\n');
+                    }
+                }
+            }
+        }
+    }
+    doc
+}
+
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        a.path().is_ident("cfg")
+            && a.meta
+                .require_list()
+                .map(|l| l.tokens.to_string().contains("test"))
+                .unwrap_or(false)
+    })
+}
+
+/// Do the path's segments end in one of the forbidden
+/// `thread::{spawn, scope, Builder}` suffixes?
+fn is_spawn_path(path: &syn::Path) -> bool {
+    let segs: Vec<String> = path.segments.iter().map(|s| s.ident.to_string()).collect();
+    let has = |a: &str, b: &str| {
+        segs.windows(2)
+            .any(|w| w[0] == a && w[1] == b)
+    };
+    has("thread", "spawn") || has("thread", "scope") || has("thread", "Builder")
+}
+
+impl<'ast> Visit<'ast> for LintVisitor<'_> {
+    fn visit_stmt(&mut self, node: &'ast syn::Stmt) {
+        self.stmt_stack.push(node.span().start().line);
+        syn::visit::visit_stmt(self, node);
+        self.stmt_stack.pop();
+    }
+
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        let test_mod = is_cfg_test(&node.attrs);
+        if test_mod {
+            self.cfg_test_depth += 1;
+        }
+        syn::visit::visit_item_mod(self, node);
+        if test_mod {
+            self.cfg_test_depth -= 1;
+        }
+    }
+
+    fn visit_expr_unsafe(&mut self, node: &'ast syn::ExprUnsafe) {
+        let line = node.unsafe_token.span().start().line;
+        let anchor = self.anchor(line);
+        if !self.has_marker_above(anchor, "SAFETY:") && !self.has_marker_above(line, "SAFETY:") {
+            self.push(
+                line,
+                "safety-comment",
+                "unsafe block without a `// SAFETY:` comment above its statement".into(),
+            );
+        }
+        syn::visit::visit_expr_unsafe(self, node);
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if node.sig.unsafety.is_some() {
+            let doc = attrs_doc_text(&node.attrs);
+            let line = node.sig.fn_token.span().start().line;
+            if !doc.contains("# Safety") && !self.has_marker_above(line, "SAFETY:") {
+                self.push(
+                    line,
+                    "safety-comment",
+                    format!("unsafe fn `{}` without a `# Safety` doc section", node.sig.ident),
+                );
+            }
+        }
+        let hot = attrs_doc_text(&node.attrs).contains("xtask:hot-path");
+        if hot {
+            self.hot_path_depth += 1;
+        }
+        syn::visit::visit_item_fn(self, node);
+        if hot {
+            self.hot_path_depth -= 1;
+        }
+    }
+
+    fn visit_impl_item_fn(&mut self, node: &'ast syn::ImplItemFn) {
+        if node.sig.unsafety.is_some() {
+            let doc = attrs_doc_text(&node.attrs);
+            let line = node.sig.fn_token.span().start().line;
+            if !doc.contains("# Safety") && !self.has_marker_above(line, "SAFETY:") {
+                self.push(
+                    line,
+                    "safety-comment",
+                    format!("unsafe method `{}` without a `# Safety` doc section", node.sig.ident),
+                );
+            }
+        }
+        let hot = attrs_doc_text(&node.attrs).contains("xtask:hot-path");
+        if hot {
+            self.hot_path_depth += 1;
+        }
+        syn::visit::visit_impl_item_fn(self, node);
+        if hot {
+            self.hot_path_depth -= 1;
+        }
+    }
+
+    fn visit_item_impl(&mut self, node: &'ast syn::ItemImpl) {
+        if node.unsafety.is_some() {
+            let line = node.impl_token.span().start().line;
+            if !self.has_marker_above(line, "SAFETY:") {
+                self.push(
+                    line,
+                    "safety-comment",
+                    "unsafe impl without a `// SAFETY:` comment above it".into(),
+                );
+            }
+        }
+        syn::visit::visit_item_impl(self, node);
+    }
+
+    fn visit_path(&mut self, node: &'ast syn::Path) {
+        if self.spawn_lint && self.cfg_test_depth == 0 && is_spawn_path(node) {
+            let line = node.span().start().line;
+            let anchor = self.anchor(line);
+            if !self.has_marker_above(anchor, "xtask:allow(thread_spawn)") {
+                self.push(
+                    line,
+                    "thread-spawn",
+                    "direct thread creation outside runtime::pool — use the pool, or \
+                     waive with `// xtask:allow(thread_spawn): <why>`"
+                        .into(),
+                );
+            }
+        }
+        syn::visit::visit_path(self, node);
+    }
+
+    fn visit_macro(&mut self, node: &'ast syn::Macro) {
+        if self.hot_path_depth > 0 && node.path.is_ident("vec") {
+            self.push(
+                node.span().start().line,
+                "hot-path-alloc",
+                "`vec!` in an `xtask:hot-path` fn — draw from the scratch recycler".into(),
+            );
+        }
+        syn::visit::visit_macro(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        if self.hot_path_depth > 0 {
+            let m = node.method.to_string();
+            if m == "to_vec" || m == "collect" {
+                self.push(
+                    node.method.span().start().line,
+                    "hot-path-alloc",
+                    format!("`.{m}()` in an `xtask:hot-path` fn — draw from the scratch recycler"),
+                );
+            }
+        }
+        syn::visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_expr_call(&mut self, node: &'ast syn::ExprCall) {
+        if self.hot_path_depth > 0 {
+            if let syn::Expr::Path(p) = &*node.func {
+                let segs: Vec<String> =
+                    p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+                let tail2 = |a: &str, b: &str| {
+                    segs.len() >= 2 && segs[segs.len() - 2] == a && segs[segs.len() - 1] == b
+                };
+                if tail2("Vec", "new") || tail2("Vec", "with_capacity") || tail2("Box", "new") {
+                    self.push(
+                        p.path.span().start().line,
+                        "hot-path-alloc",
+                        format!(
+                            "`{}` in an `xtask:hot-path` fn — draw from the scratch recycler",
+                            segs.join("::")
+                        ),
+                    );
+                }
+            }
+        }
+        syn::visit::visit_expr_call(self, node);
+    }
+}
+
+/// Every `pub fn foo_into` in the kernel/quant modules keeps an
+/// allocating wrapper: `foo` or `foo_with_threads` in the same file.
+fn check_into_wrappers(root: &Path, findings: &mut Vec<Finding>) -> Result<()> {
+    for rel in ["rust/src/dyad/kernel.rs", "rust/src/dyad/quant.rs"] {
+        let src = std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("read {rel}"))?;
+        let ast = syn::parse_file(&src).with_context(|| format!("parse {rel}"))?;
+        let mut pub_fns: Vec<(String, usize)> = Vec::new();
+        collect_pub_fns(&ast.items, &mut pub_fns);
+        let names: Vec<&str> = pub_fns.iter().map(|(n, _)| n.as_str()).collect();
+        for (name, line) in &pub_fns {
+            if let Some(base) = name.strip_suffix("_into") {
+                let with_threads = format!("{base}_with_threads");
+                if !names.contains(&base) && !names.iter().any(|n| *n == with_threads) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: *line,
+                        lint: "into-wrapper",
+                        msg: format!(
+                            "`{name}` has no allocating wrapper `{base}` or `{with_threads}`"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn collect_pub_fns(items: &[syn::Item], out: &mut Vec<(String, usize)>) {
+    for item in items {
+        match item {
+            syn::Item::Fn(f) => {
+                if matches!(f.vis, syn::Visibility::Public(_)) {
+                    out.push((f.sig.ident.to_string(), f.sig.fn_token.span().start().line));
+                }
+            }
+            syn::Item::Mod(m) => {
+                if let Some((_, items)) = &m.content {
+                    collect_pub_fns(items, out);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Textual check that the workspace-level lint table is wired up:
+/// `unsafe_op_in_unsafe_fn = "deny"` at the root, `[lints]
+/// workspace = true` in every member crate.
+fn check_workspace_lints(root: &Path, findings: &mut Vec<Finding>) -> Result<()> {
+    let ws = std::fs::read_to_string(root.join("Cargo.toml")).context("read root Cargo.toml")?;
+    if !ws.contains("[workspace.lints.rust]") || !ws.contains("unsafe_op_in_unsafe_fn = \"deny\"") {
+        findings.push(Finding {
+            file: "Cargo.toml".into(),
+            line: 1,
+            lint: "workspace-lints",
+            msg: "root must set `[workspace.lints.rust] unsafe_op_in_unsafe_fn = \"deny\"`".into(),
+        });
+    }
+    for rel in ["rust/Cargo.toml", "rust/xtask/Cargo.toml", "rust/xla-stub/Cargo.toml"] {
+        let toml = std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("read {rel}"))?;
+        if !toml.contains("[lints]") || !toml.contains("workspace = true") {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: 1,
+                lint: "workspace-lints",
+                msg: "member crate must opt in with `[lints] workspace = true`".into(),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_lints(src: &str) -> Vec<Finding> {
+        let ast = syn::parse_file(src).expect("fixture parses");
+        let mut findings = Vec::new();
+        lint_source("fixture.rs", src, &ast, &mut findings);
+        findings
+    }
+
+    fn lint_ids(src: &str) -> Vec<&'static str> {
+        run_lints(src).into_iter().map(|f| f.lint).collect()
+    }
+
+    #[test]
+    fn undocumented_unsafe_block_is_flagged() {
+        let src = r#"
+fn f(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"#;
+        assert_eq!(lint_ids(src), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn safety_comment_on_wrapped_statement_is_found() {
+        let src = r#"
+fn f(p: *const u8) -> u8 {
+    // SAFETY: caller promises p is valid
+    let v =
+        unsafe { *p };
+    v
+}
+"#;
+        assert!(lint_ids(src).is_empty(), "{:?}", run_lints(src));
+    }
+
+    #[test]
+    fn unsafe_fn_needs_safety_doc_section() {
+        let bad = "unsafe fn f() {}\n";
+        assert_eq!(lint_ids(bad), vec!["safety-comment"]);
+        let good = r#"
+/// Does a thing.
+///
+/// # Safety
+///
+/// Caller must hold the lock.
+unsafe fn f() {}
+"#;
+        assert!(lint_ids(good).is_empty());
+    }
+
+    #[test]
+    fn unsafe_impl_needs_safety_comment() {
+        let bad = r#"
+struct S(*mut u8);
+unsafe impl Send for S {}
+"#;
+        assert_eq!(lint_ids(bad), vec!["safety-comment"]);
+        let good = r#"
+struct S(*mut u8);
+// SAFETY: accesses are externally synchronised.
+unsafe impl Send for S {}
+"#;
+        assert!(lint_ids(good).is_empty());
+    }
+
+    #[test]
+    fn spawn_outside_pool_is_flagged_and_waivable() {
+        let bad = r#"
+fn f() {
+    let h = std::thread::spawn(|| 1);
+    h.join().unwrap();
+}
+"#;
+        assert_eq!(lint_ids(bad), vec!["thread-spawn"]);
+        let waived = r#"
+fn f() {
+    // xtask:allow(thread_spawn): long-lived owner thread
+    let h = std::thread::spawn(|| 1);
+    h.join().unwrap();
+}
+"#;
+        assert!(lint_ids(waived).is_empty());
+        let builder = r#"
+fn f() {
+    let b = std::thread::Builder::new();
+    drop(b);
+}
+"#;
+        assert_eq!(lint_ids(builder), vec!["thread-spawn"]);
+    }
+
+    #[test]
+    fn spawn_in_cfg_test_mod_is_exempt() {
+        let src = r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        std::thread::spawn(|| 1).join().unwrap();
+    }
+}
+"#;
+        assert!(lint_ids(src).is_empty());
+    }
+
+    #[test]
+    fn join_handle_type_is_not_a_spawn() {
+        let src = r#"
+use std::thread::JoinHandle;
+fn f(h: JoinHandle<()>) {
+    h.join().unwrap();
+}
+"#;
+        assert!(lint_ids(src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_allocations_are_flagged() {
+        let src = r#"
+/// xtask:hot-path
+fn f(n: usize) -> Vec<f32> {
+    let a = vec![0.0; n];
+    let b: Vec<f32> = a.iter().copied().collect();
+    let mut c = Vec::with_capacity(n);
+    c.extend_from_slice(&b);
+    c
+}
+"#;
+        let ids = lint_ids(src);
+        assert_eq!(ids, vec!["hot-path-alloc"; 3], "{:?}", run_lints(src));
+    }
+
+    #[test]
+    fn unmarked_fn_may_allocate() {
+        let src = r#"
+fn f(n: usize) -> Vec<f32> {
+    vec![0.0; n]
+}
+"#;
+        assert!(lint_ids(src).is_empty());
+    }
+
+    #[test]
+    fn assert_message_macros_do_not_misfire_hot_path() {
+        // syn does not descend into macro token streams, so an
+        // allocation spelled inside assert! text must not be flagged.
+        let src = r#"
+/// xtask:hot-path
+fn f(n: usize) {
+    assert!(n > 0, "collect() vec! Vec::new");
+}
+"#;
+        assert!(lint_ids(src).is_empty());
+    }
+}
