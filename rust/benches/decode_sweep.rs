@@ -1,0 +1,211 @@
+//! Decode-path sweep: per-token latency of KV-cache incremental
+//! decoding vs full-context recompute, across prefix lengths,
+//! variants and lane counts.
+//!
+//! The headline is the *shape* of the curve, not a single number:
+//! incremental decode cost per token is flat in the prefix length
+//! (one row of compute per active lane, attention over cached K/V),
+//! while the full-recompute baseline grows linearly with the prefix
+//! it re-scores. Both paths run the same kernels, so every config
+//! also cross-checks the final step's logits bitwise against the
+//! full-recompute oracle before its timings are reported.
+//!
+//!     cargo bench --bench decode_sweep        # full sweep
+//!     BENCH_QUICK=1 cargo bench --bench decode_sweep
+//!
+//! Emits BENCH_decode.json; the CI smoke job checks the structural
+//! contract (rows present, timings finite and positive, parity flag
+//! set on every row).
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use dyad_repro::bench_support::{quick_mode, write_bench_json};
+use dyad_repro::dyad::kernel::num_threads;
+use dyad_repro::runtime::catalog::{self, model_param_specs};
+use dyad_repro::runtime::native::transformer::{DecodeState, Lm};
+use dyad_repro::runtime::native::Params;
+use dyad_repro::runtime::{ArchCfg, VariantSpec};
+use dyad_repro::tensor::Tensor;
+use dyad_repro::util::json::{arr, num, obj, s, Json};
+use dyad_repro::util::rng::Rng;
+
+struct ConfigResult {
+    decode_ms_per_step: f64,
+    full_ms_per_step: f64,
+}
+
+/// Time `measure` generated tokens at a given prefix depth on both
+/// paths and bitwise-check the final logits against each other.
+fn run_config(
+    lm: &Lm,
+    arch: &ArchCfg,
+    lanes: usize,
+    prefix: usize,
+    measure: usize,
+    threads: usize,
+    seed: u64,
+) -> Result<ConfigResult> {
+    let vocab = arch.vocab;
+    let mut rng = Rng::new(seed);
+    let streams: Vec<Vec<i32>> = (0..lanes)
+        .map(|_| (0..prefix + measure).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+
+    // ---- incremental: prefill untimed, then `measure` timed steps ----
+    let mut st = DecodeState::new(arch, lanes);
+    let mut logits = vec![0.0f32; lanes * vocab];
+    let mut step_tokens = vec![0i32; lanes];
+    for t in 0..prefix {
+        for (lane, stream) in streams.iter().enumerate() {
+            step_tokens[lane] = stream[t];
+        }
+        lm.decode_step_with_threads(&mut st, &step_tokens, &mut logits, threads)?;
+    }
+    let t0 = Instant::now();
+    for t in prefix..prefix + measure {
+        for (lane, stream) in streams.iter().enumerate() {
+            step_tokens[lane] = stream[t];
+        }
+        lm.decode_step_with_threads(&mut st, &step_tokens, &mut logits, threads)?;
+    }
+    let decode_ms = t0.elapsed().as_secs_f64() * 1e3 / measure as f64;
+
+    // ---- baseline: re-score the whole prefix for every token ----
+    let mut full_logits = Vec::new();
+    let t0 = Instant::now();
+    for t in prefix..prefix + measure {
+        let len = t + 1;
+        let mut toks = vec![0i32; lanes * len];
+        for (lane, stream) in streams.iter().enumerate() {
+            toks[lane * len..(lane + 1) * len].copy_from_slice(&stream[..len]);
+        }
+        let lens = vec![len as i32; lanes];
+        full_logits = lm.next_logits_with_threads(&toks, &lens, lanes, len, threads)?;
+    }
+    let full_ms = t0.elapsed().as_secs_f64() * 1e3 / measure as f64;
+
+    ensure!(
+        logits == full_logits,
+        "decode/full-recompute parity broke at lanes={lanes} prefix={prefix}"
+    );
+    Ok(ConfigResult { decode_ms_per_step: decode_ms, full_ms_per_step: full_ms })
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let quick = quick_mode();
+    // seq must hold the deepest prefix plus the measured tokens so no
+    // window slide lands inside the timed region
+    let (arch, prefixes, lane_counts, measure) = if quick {
+        (
+            ArchCfg {
+                vocab: 128,
+                d_model: 64,
+                d_ff: 128,
+                n_layers: 2,
+                n_heads: 4,
+                seq: 64,
+                parallel_residual: false,
+            },
+            vec![8usize, 32],
+            vec![2usize],
+            4usize,
+        )
+    } else {
+        (
+            ArchCfg {
+                vocab: 512,
+                d_model: 256,
+                d_ff: 1024,
+                n_layers: 4,
+                n_heads: 8,
+                seq: 576,
+                parallel_residual: false,
+            },
+            vec![32usize, 128, 512],
+            vec![1usize, 8],
+            8usize,
+        )
+    };
+    let threads = num_threads();
+    let variants = catalog::variants();
+    let mut rows = Vec::new();
+    println!(
+        "decode sweep: d_model={} layers={} seq={} threads={threads} \
+         measure={measure} tokens/config",
+        arch.d_model, arch.n_layers, arch.seq
+    );
+    for vname in ["dense", "dyad_it", "dyad_it_cat"] {
+        let vcfg = &variants[vname];
+        let var = VariantSpec::resolve(vcfg)?;
+        let specs = model_param_specs(&arch, vcfg);
+        let mut rng = Rng::new(42);
+        let names: Vec<String> = specs.iter().map(|(n, _, _)| n.clone()).collect();
+        let params: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|(_, sh, init)| Tensor::init(sh, init, &mut rng).as_f32().unwrap().to_vec())
+            .collect();
+        let p = Params::from_named(&names, &params);
+        let lm = Lm { arch: &arch, var: &var, p };
+        for &lanes in &lane_counts {
+            let mut per_prefix = Vec::new();
+            for &prefix in &prefixes {
+                let r = run_config(&lm, &arch, lanes, prefix, measure, threads, 7)?;
+                println!(
+                    "{vname:<12} lanes={lanes} prefix={prefix:>4}: \
+                     decode {:.3} ms/token, full {:.3} ms/token ({:.1}x)",
+                    r.decode_ms_per_step,
+                    r.full_ms_per_step,
+                    r.full_ms_per_step / r.decode_ms_per_step.max(1e-9)
+                );
+                per_prefix.push(r.decode_ms_per_step);
+                rows.push(obj(vec![
+                    ("variant", s(vname)),
+                    ("lanes", num(lanes as f64)),
+                    ("prefix", num(prefix as f64)),
+                    ("decode_ms_per_token", num(r.decode_ms_per_step)),
+                    ("full_ms_per_token", num(r.full_ms_per_step)),
+                    (
+                        "full_over_decode",
+                        num(r.full_ms_per_step / r.decode_ms_per_step.max(1e-9)),
+                    ),
+                    ("parity", Json::Bool(true)),
+                ]));
+            }
+            // flatness: deepest-prefix cost over shallowest-prefix cost
+            // — the O(1)-per-token headline (full recompute grows
+            // linearly here; incremental should stay near 1.0)
+            let flat = per_prefix.last().unwrap() / per_prefix.first().unwrap().max(1e-9);
+            println!(
+                "{vname:<12} lanes={lanes}: decode cost ratio \
+                 prefix {}->{}: {flat:.2}x",
+                prefixes.first().unwrap(),
+                prefixes.last().unwrap()
+            );
+        }
+    }
+    let path = write_bench_json(
+        "decode",
+        &obj(vec![
+            ("bench", s("decode_sweep")),
+            ("quick", Json::Bool(quick)),
+            ("d_model", num(arch.d_model as f64)),
+            ("n_layers", num(arch.n_layers as f64)),
+            ("seq", num(arch.seq as f64)),
+            ("threads", num(threads as f64)),
+            ("measure_tokens", num(measure as f64)),
+            ("prefixes", arr(prefixes.iter().map(|&p| num(p as f64)))),
+            ("rows", arr(rows)),
+        ]),
+    )?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -97,16 +97,9 @@ pub fn evaluate(
                 rows.push((toks, mask));
             }
             let scored = score_rows(backend, score_art, state, &rows, b, s)?;
-            let pick = scored
-                .iter()
-                .enumerate()
-                .max_by(|(_, (sa, na)), (_, (sb, nb))| {
-                    (sa / na.max(1.0))
-                        .partial_cmp(&(sb / nb.max(1.0)))
-                        .unwrap()
-                })
-                .map(|(i, _)| i)
-                .unwrap();
+            let normalized: Vec<f64> =
+                scored.iter().map(|(s, n)| s / n.max(1.0)).collect();
+            let pick = crate::util::argmax::argmax_f64(&normalized).unwrap_or(0);
             if pick == item.correct {
                 correct += 1;
             }

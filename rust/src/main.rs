@@ -266,6 +266,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     .map_err(|e| anyhow::anyhow!("--threads-per-worker={v}: {e}"))
             })
             .transpose()?,
+        // parity oracle: full-context recompute instead of the
+        // KV-cache decode session
+        legacy_generate: args.switch("legacy-generate"),
     };
     let n = args.usize_or("requests", 64)?;
     println!(

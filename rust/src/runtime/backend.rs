@@ -62,6 +62,17 @@ pub trait Executable {
     /// produced by the same backend (`upload`/`alloc`/`run_bound`).
     fn run_bound(&self, inputs: &[&DeviceTensor]) -> Result<Vec<DeviceTensor>>;
 
+    /// Allocate this artifact's device-resident decode cache (the K/V
+    /// ring buffers of a `decode_step` artifact), all lanes empty. The
+    /// handle binds to the artifact's `kv_cache` input and is mutated
+    /// **in place** by every `run_bound` call — it never crosses the
+    /// host boundary, so per-step staging stays at token ids in /
+    /// logits out. Only `decode_step` programs have one; everything
+    /// else errors.
+    fn make_decode_cache(&self) -> Result<DeviceTensor> {
+        bail!("{}: this artifact has no decode cache", self.spec().name)
+    }
+
     /// Convenience: fetch one named output from a result set.
     fn output_index(&self, name: &str) -> Result<usize> {
         self.spec().output_index(name)

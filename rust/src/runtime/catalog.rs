@@ -324,6 +324,31 @@ fn model_artifacts(
             outputs: vec![f32_out("logits", &[eb, arch.vocab])],
             meta: meta_common(vec![]),
         });
+        // incremental decode: the K/V cache is a resident handle from
+        // `Executable::make_decode_cache` bound once to `kv_cache`
+        // (shape = `n_layers · 2 · lanes · seq · d` floats, the
+        // per-worker cache memory cost); per step only the token /
+        // reset ids and one logits row per lane cross the boundary.
+        // `tokens[lane] < 0` = idle lane, `resets[lane] != 0` = free
+        // the lane before feeding (continuous-batching admission).
+        let mut dec_in = params_in.clone();
+        dec_in.push(io(
+            "kv_cache",
+            &[arch.n_layers, 2, eb, st, arch.d_model],
+            DType::F32,
+            Role::Data,
+            None,
+        ));
+        dec_in.push(io("tokens", &[eb], DType::I32, Role::Data, None));
+        dec_in.push(io("resets", &[eb], DType::I32, Role::Data, None));
+        out.push(ArtifactSpec {
+            name: format!("{base}/decode_step"),
+            file: "<native>".into(),
+            kind: "decode_step".into(),
+            inputs: dec_in,
+            outputs: vec![f32_out("logits", &[eb, arch.vocab])],
+            meta: meta_common(vec![]),
+        });
         let mut el_in = params_in.clone();
         el_in.push(io("tokens", &[eb, st], DType::I32, Role::Data, None));
         out.push(ArtifactSpec {
@@ -479,10 +504,10 @@ mod tests {
     #[test]
     fn manifest_has_expected_inventory() {
         let m = native_manifest();
-        // 12 (arch, variant) pairs x 6 model artifacts
+        // 12 (arch, variant) pairs x 7 model artifacts
         // + (3 geos x 6 + 4 widths x 4) ff variants x 2 artifacts
         // + 2 mnist variants x 3 artifacts
-        assert_eq!(m.artifacts.len(), 12 * 6 + (3 * 6 + 4 * 4) * 2 + 2 * 3);
+        assert_eq!(m.artifacts.len(), 12 * 7 + (3 * 6 + 4 * 4) * 2 + 2 * 3);
         for name in [
             "opt-mini/dyad_it/train_k8",
             "opt-mini/dense/score",
@@ -490,6 +515,7 @@ mod tests {
             "ff/width1024/dyad_it_cat/fwd",
             "pythia-mini/dyad_it_8/eval_loss",
             "opt-mid/dyad_it/next_logits",
+            "opt-mini/dyad_it/decode_step",
             "ff/opt125m-ff/dyad_it_cat/fwdbwd",
             "ff/width2048/dyad_it_8/fwd",
             "mnist/dyad_it/train_k4",

@@ -50,8 +50,8 @@ use crate::tensor::Precision;
 
 use super::linear::LinearView;
 use super::ops::{
-    gelu_grad, gelu_inplace, layer_norm, layer_norm_backward, layer_norm_forward, relu_inplace,
-    softmax_backward_row, softmax_row,
+    attention_decode_step, gelu_grad, gelu_inplace, layer_norm, layer_norm_backward,
+    layer_norm_forward, relu_inplace, softmax_backward_row, softmax_row,
 };
 use super::params::Params;
 
@@ -522,6 +522,75 @@ impl<'a> Attention<'a> {
             }
         }
         out
+    }
+
+    /// One incremental decode step: project the new tokens' q/k/v,
+    /// append this layer's K/V rows into the caller's caches, and
+    /// attend against the full cached prefix.
+    ///
+    /// `x` is `(a, d)` — one row per **active** lane, compacted;
+    /// `lanes[g]` maps compact row `g` to its cache lane; `lens[lane]`
+    /// is the lane's length *including* the token being decoded (its
+    /// K/V land at position `lens[lane] - 1`). Caches are
+    /// `(b*nh, s, hd)` head-blocked, the layout [`Attention::to_heads`]
+    /// produces.
+    ///
+    /// For a single position the per-head blocks of a row are already
+    /// contiguous, so `(a, d)` row-major and `(a*nh, hd)` head-blocked
+    /// are the same bytes — `to_heads`/`from_heads` are identities here
+    /// and are skipped. Everything else replays the inference branch of
+    /// [`Attention::forward`] op for op (same projections, same
+    /// [`attention_decode_step`] score/softmax/axpy order), which is
+    /// what makes incremental decode bitwise equal to full recompute.
+    pub fn decode_step(
+        &self,
+        x: &[f32],
+        k_cache: &mut [f32],
+        v_cache: &mut [f32],
+        lanes: &[usize],
+        lens: &[usize],
+        ws: &mut Workspace,
+    ) -> Result<Vec<f32>> {
+        let (s, nh, hd) = (self.s, self.nh, self.hd);
+        let d = self.d();
+        let a = lanes.len();
+        if x.len() != a * d {
+            bail!("attention decode: {} values for {a} active rows of {d}", x.len());
+        }
+        if k_cache.len() != self.b * s * d || v_cache.len() != self.b * s * d {
+            bail!(
+                "attention decode: cache holds {} values, want {} (b={} s={s} d={d})",
+                k_cache.len(),
+                self.b * s * d,
+                self.b
+            );
+        }
+        let threads = ws.threads();
+        let q = dense_linear_with_threads(x, self.wq, Some(self.wq_b), a, d, d, threads);
+        let k = dense_linear_with_threads(x, self.wk, Some(self.wk_b), a, d, d, threads);
+        let v = dense_linear_with_threads(x, self.wv, Some(self.wv_b), a, d, d, threads);
+        for (g, &lane) in lanes.iter().enumerate() {
+            let t = lens[lane] - 1;
+            if lane >= self.b || t >= s {
+                bail!("attention decode: lane {lane} at position {t} out of ({}, {s})", self.b);
+            }
+            for h in 0..nh {
+                let dst = ((lane * nh + h) * s + t) * hd;
+                let src = g * d + h * hd;
+                k_cache[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                v_cache[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+            }
+        }
+        let mut ctx = ws.alloc_zeroed(a * d);
+        attention_decode_step(
+            &mut ctx, &q, k_cache, v_cache, lanes, lens, nh, s, hd, threads,
+        );
+        ws.recycle(q);
+        ws.recycle(k);
+        ws.recycle(v);
+        let y = dense_linear_with_threads(&ctx, self.wo, Some(self.wo_b), a, d, d, threads);
+        ws.recycle(ctx);
+        Ok(y)
     }
 
     /// Inverse of [`Attention::to_heads`]. Output drawn from the arena.

@@ -74,12 +74,8 @@ impl<'a> Mlp<'a> {
         let mut correct = 0;
         for (bi, &label) in labels.iter().enumerate().take(b) {
             let row = &logits[bi * MNIST_CLASSES..(bi + 1) * MNIST_CLASSES];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
-                .map(|(i, _)| i as i32)
-                .unwrap_or(0);
+            let pred =
+                crate::util::argmax::argmax_f32(row).map(|i| i as i32).unwrap_or(0);
             if pred == label {
                 correct += 1;
             }

@@ -120,6 +120,7 @@ enum Prog {
     Score { arch: ArchCfg, var: VariantSpec },
     Features { arch: ArchCfg, var: VariantSpec },
     NextLogits { arch: ArchCfg, var: VariantSpec },
+    DecodeStep { arch: ArchCfg, var: VariantSpec },
     EvalLoss { arch: ArchCfg, var: VariantSpec },
     TrainStep { arch: ArchCfg, var: VariantSpec },
     MnistTrain { var: VariantSpec },
@@ -128,6 +129,13 @@ enum Prog {
     FfFwd { d: usize, ff: usize, var: VariantSpec },
     FfFwdBwd { d: usize, ff: usize, var: VariantSpec },
 }
+
+/// Interior-mutable payload of a decode-cache handle
+/// ([`Executable::make_decode_cache`]): `run_bound` appends K/V rows
+/// into the wrapped [`transformer::DecodeState`] **in place**, so the
+/// cache stays backend-resident across the whole generation —
+/// `runtime::staging` counts only the per-step token ids and logits.
+struct DecodeCacheCell(RefCell<transformer::DecodeState>);
 
 pub struct NativeBackend {
     manifest: Manifest,
@@ -257,6 +265,7 @@ fn resolve(spec: &ArtifactSpec, manifest: &Manifest, precision: Precision) -> Re
         "score" => Prog::Score { arch: arch_of()?, var: var_of("variant")? },
         "features" => Prog::Features { arch: arch_of()?, var: var_of("variant")? },
         "next_logits" => Prog::NextLogits { arch: arch_of()?, var: var_of("variant")? },
+        "decode_step" => Prog::DecodeStep { arch: arch_of()?, var: var_of("variant")? },
         "eval_loss" => Prog::EvalLoss { arch: arch_of()?, var: var_of("variant")? },
         "mnist_train" => Prog::MnistTrain { var: var_of("variant")? },
         "mnist_accuracy" => Prog::MnistAccuracy { var: var_of("variant")? },
@@ -325,6 +334,11 @@ impl Executable for NativeExe {
     /// buffers, execute, wrap the fresh outputs (a move, not a copy).
     fn run_bound(&self, inputs: &[&DeviceTensor]) -> Result<Vec<DeviceTensor>> {
         validate_bound_inputs(&self.spec, inputs)?;
+        if let Prog::DecodeStep { arch, var } = &self.prog {
+            // the kv_cache slot is a stateful cell, not a host tensor —
+            // decode has its own bound path
+            return self.run_decode(arch, var, inputs);
+        }
         let host: Vec<&Tensor> = inputs
             .iter()
             .enumerate()
@@ -335,6 +349,25 @@ impl Executable for NativeExe {
             validate_outputs(&self.spec, &out)?;
         }
         Ok(out.into_iter().map(wrap_native).collect())
+    }
+
+    /// The decode-step K/V cache, all lanes empty, resident on this
+    /// backend. Bind it to the `kv_cache` input once; every call then
+    /// advances it in place.
+    fn make_decode_cache(&self) -> Result<DeviceTensor> {
+        let Prog::DecodeStep { arch, .. } = &self.prog else {
+            bail!("{}: this artifact has no decode cache", self.spec.name);
+        };
+        let idx = self.spec.input_index("kv_cache")?;
+        let io = &self.spec.inputs[idx];
+        let lanes = self.spec.meta_usize("batch")?;
+        let st = transformer::DecodeState::new(arch, lanes);
+        Ok(DeviceTensor::from_payload(
+            io.shape.clone(),
+            io.dtype,
+            NATIVE_DEVICE,
+            Rc::new(DecodeCacheCell(RefCell::new(st))),
+        ))
     }
 }
 
@@ -388,6 +421,11 @@ impl NativeExe {
                     lm.eval_loss_with_threads(data[0].as_i32()?, b, s, self.threads)?;
                 Ok(vec![Tensor::scalar_f32(loss)])
             }
+            Prog::DecodeStep { .. } => bail!(
+                "{}: decode_step is stateful — run it through run_bound with a \
+                 make_decode_cache handle bound to kv_cache",
+                self.spec.name
+            ),
             Prog::TrainStep { arch, var } => self.run_lm_train(arch, var, inputs, &data),
             Prog::MnistTrain { var } => self.run_mnist_train(var, inputs, &data),
             Prog::MnistAccuracy { var } => {
@@ -465,6 +503,62 @@ impl NativeExe {
         out.push(Tensor::scalar_f32(step));
         out.push(Tensor::from_f32(&[k], losses)?);
         Ok(out)
+    }
+
+    /// The bound decode path: one incremental token step per call.
+    /// The `kv_cache` input is the interior-mutable [`DecodeCacheCell`]
+    /// from [`Executable::make_decode_cache`] — it is advanced in
+    /// place and never copied, so per-call staging is the token/reset
+    /// ids in and one logits row per lane out. `resets[lane] != 0`
+    /// frees that lane before the step (continuous-batching admission);
+    /// `tokens[lane] < 0` leaves the lane idle (its logits row is
+    /// zeroed and no compute is spent on it).
+    fn run_decode(
+        &self,
+        arch: &ArchCfg,
+        var: &VariantSpec,
+        inputs: &[&DeviceTensor],
+    ) -> Result<Vec<DeviceTensor>> {
+        let cache_idx = self.spec.input_index("kv_cache")?;
+        let cell = inputs[cache_idx].expect_payload::<DecodeCacheCell>(
+            &self.spec.name,
+            cache_idx,
+            NATIVE_DEVICE,
+        )?;
+        // every other input is an ordinary resident host tensor; the
+        // cache slot gets a placeholder (`Params` keeps `Role::Param`
+        // entries only, and the data reads below skip it)
+        let placeholder = Tensor::scalar_f32(0.0);
+        let host: Vec<&Tensor> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                if i == cache_idx {
+                    Ok(&placeholder)
+                } else {
+                    d.expect_payload::<Tensor>(&self.spec.name, i, NATIVE_DEVICE)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let p = Params::new(&self.spec, &host);
+        let data = self.data(&host);
+        let (tokens, resets) = (data[1].as_i32()?, data[2].as_i32()?);
+        let lm = transformer::Lm { arch, var, p };
+        let mut st = cell.0.borrow_mut();
+        for (lane, &r) in resets.iter().enumerate() {
+            if r != 0 {
+                st.reset_lane(lane);
+            }
+        }
+        let vocab = arch.vocab;
+        let lanes = st.lanes();
+        let mut logits = vec![0.0f32; lanes * vocab];
+        lm.decode_step_with_threads(&mut st, tokens, &mut logits, self.threads)?;
+        let out = Tensor::from_f32(&[lanes, vocab], logits)?;
+        if cfg!(debug_assertions) {
+            validate_outputs(&self.spec, std::slice::from_ref(&out))?;
+        }
+        Ok(vec![wrap_native(out)])
     }
 
     /// The transformer train-step state machine: K microbatches of

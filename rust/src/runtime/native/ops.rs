@@ -7,7 +7,7 @@
 //! steady-state loop that recycles its buffers (the layer stack does,
 //! via `Workspace::recycle`) allocates nothing here after warmup.
 
-use crate::dyad::kernel::scratch;
+use crate::dyad::kernel::{axpy, dot, parallel_rows, scratch};
 
 /// jax.nn.gelu (approximate=True): 0.5x(1 + tanh(c(x + a x^3))).
 pub fn gelu(x: f32) -> f32 {
@@ -190,6 +190,65 @@ pub fn log_softmax_row(row: &[f32], out: &mut [f32]) {
     for (o, &v) in out.iter_mut().zip(row) {
         *o = v - lse;
     }
+}
+
+/// One causal attention step against cached K/V. xtask:hot-path
+///
+/// The new-token queries `q` are `(a*nh, hd)` head-blocked rows for
+/// the `a` **active** lanes (compacted); the caches hold the full
+/// batch, `(b*nh, s, hd)` head-blocked, with `lens[lane]` valid
+/// positions per lane — the current token's K/V row must already be
+/// appended, so `lens[lane]` **includes** it. `lanes[g]` maps compact
+/// group `g` (= row / nh) back to its cache lane. Writes the per-head
+/// context rows into `out` (`(a*nh, hd)`, must be zeroed).
+///
+/// Op order per row is byte-for-byte the `ti = len-1` iteration of the
+/// batch inference kernel (`layers::Attention::forward`): dot-scale
+/// scores over positions `0..len`, [`softmax_row`], then `axpy`
+/// accumulation in position order — which is what makes incremental
+/// decode bitwise identical to full recompute. Pool-parallel over
+/// `(lane, head)` rows; score scratch comes from the recycler, so the
+/// steady state allocates nothing.
+pub fn attention_decode_step(
+    out: &mut [f32],
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    lanes: &[usize],
+    lens: &[usize],
+    nh: usize,
+    s: usize,
+    hd: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(out.len(), q.len());
+    debug_assert_eq!(out.len(), lanes.len() * nh * hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+    parallel_rows(out, hd, threads, &|r, row| {
+        let lane = lanes[r / nh];
+        let head = r % nh;
+        let len = lens[lane];
+        debug_assert!(len >= 1 && len <= s);
+        let blk = ((lane * nh + head) * s) * hd;
+        let kb = &k_cache[blk..blk + len * hd];
+        let vb = &v_cache[blk..blk + len * hd];
+        let qrow = &q[r * hd..(r + 1) * hd];
+        // fixed-size score scratch (not `len`): a constant request size
+        // is what keeps the best-fit recycler at 100% hits while the
+        // cache grows token by token
+        let mut att = scratch::take_f32(s);
+        {
+            let att = &mut att[..len];
+            for (tj, a) in att.iter_mut().enumerate() {
+                *a = dot(qrow, &kb[tj * hd..(tj + 1) * hd]) * scale;
+            }
+            softmax_row(att);
+            for (tj, &a) in att.iter().enumerate() {
+                axpy(row, a, &vb[tj * hd..(tj + 1) * hd]);
+            }
+        }
+        scratch::put_f32(att);
+    });
 }
 
 /// Column sums of a row-major `(rows, n)` matrix (bias gradients).

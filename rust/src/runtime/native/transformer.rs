@@ -5,7 +5,11 @@
 //!
 //! Inference (`score`, `features`, `next_logits`, `eval_loss`) runs
 //! the same modules over a non-recording [`Workspace`] (no tape, no
-//! extra allocations on the hot path). Training
+//! extra allocations on the hot path). Incremental decoding
+//! ([`DecodeState`] + [`Lm::decode_step_with_threads`]) runs the same
+//! stack one token at a time against resident K/V caches — O(1) work
+//! per token in the prefix length, bitwise identical to the
+//! full-recompute `next_logits` loop. Training
 //! ([`Lm::loss_and_grads`] / [`train_microbatch`]) records each
 //! module's frame on the tape and backpropagates through the whole
 //! decoder: softmax-jacobian attention backward, layer-norm backward,
@@ -127,6 +131,144 @@ impl Layer for DecoderLayer<'_> {
             }
             ws.recycle(dxa);
             Ok(dx1)
+        }
+    }
+}
+
+/// Per-lane K/V cache for incremental decoding: one `(b*nh, s, hd)`
+/// head-blocked K and V buffer per layer (`n_layers · b · s · d · 2`
+/// floats total), drawn from the scratch recycler and returned to it
+/// on drop, plus the per-lane position counters.
+///
+/// **Cache invariant:** for every lane, rows `[0, lens[lane])` of each
+/// `(lane, head)` block hold the K/V of the lane's prefix in position
+/// order and are bitwise identical to what a full-batch forward over
+/// that prefix would produce; rows at `lens[lane]` and beyond are
+/// stale and are never read. Resetting a lane only zeroes its length —
+/// no buffer is cleared or reallocated. Positions are **absolute**
+/// (learned positional embeddings), so the buffers must not rotate:
+/// when a lane reaches capacity `s`, the caller resets it and re-feeds
+/// the slid window token by token (exactly reproducing the legacy
+/// path's recompute over the slid window) instead of wrapping around.
+pub struct DecodeState {
+    n_layers: usize,
+    b: usize,
+    s: usize,
+    d: usize,
+    /// Per-layer K / V caches, each `b * s * d` floats.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Valid positions per lane.
+    lens: Vec<usize>,
+    /// Reusable compact active-lane map (scratch for the step).
+    lane_map: Vec<usize>,
+}
+
+impl DecodeState {
+    /// Fresh caches for `b` lanes of `arch` geometry, all lanes empty.
+    pub fn new(arch: &ArchCfg, b: usize) -> DecodeState {
+        let n = b * arch.seq * arch.d_model;
+        DecodeState {
+            n_layers: arch.n_layers,
+            b,
+            s: arch.seq,
+            d: arch.d_model,
+            k: (0..arch.n_layers).map(|_| scratch::take_f32(n)).collect(),
+            v: (0..arch.n_layers).map(|_| scratch::take_f32(n)).collect(),
+            lens: vec![0; b],
+            lane_map: Vec::with_capacity(b),
+        }
+    }
+
+    /// Number of cache lanes.
+    pub fn lanes(&self) -> usize {
+        self.b
+    }
+
+    /// Cache capacity per lane (the arch's context length `s`).
+    pub fn capacity(&self) -> usize {
+        self.s
+    }
+
+    /// Cached positions in `lane`.
+    pub fn len(&self, lane: usize) -> usize {
+        self.lens[lane]
+    }
+
+    pub fn is_empty(&self, lane: usize) -> bool {
+        self.lens[lane] == 0
+    }
+
+    /// Free a lane for a new occupant: its length drops to zero and
+    /// the stale rows are simply never read again (see the cache
+    /// invariant above).
+    pub fn reset_lane(&mut self, lane: usize) {
+        self.lens[lane] = 0;
+    }
+
+    /// Resident cache memory in floats: `n_layers · b · s · d · 2`.
+    pub fn mem_floats(&self) -> usize {
+        self.n_layers * self.b * self.s * self.d * 2
+    }
+}
+
+impl Drop for DecodeState {
+    fn drop(&mut self) {
+        for buf in self.k.drain(..).chain(self.v.drain(..)) {
+            scratch::put_f32(buf);
+        }
+    }
+}
+
+impl DecoderLayer<'_> {
+    /// [`DecoderLayer`] forward for one incremental decode step: the
+    /// exact residual wiring of [`Layer::forward`] (both arrangements,
+    /// including the single-expression parallel-residual add) with the
+    /// attention replaced by [`Attention::decode_step`] against this
+    /// layer's K/V caches. `x` is `(a, d)` compact active-lane rows.
+    fn decode_step(
+        &self,
+        x: &[f32],
+        k_cache: &mut [f32],
+        v_cache: &mut [f32],
+        lanes: &[usize],
+        lens: &[usize],
+        ws: &mut Workspace,
+    ) -> Result<Vec<f32>> {
+        let rows = lanes.len();
+        if self.parallel_residual {
+            // y = x + attn(ln1(x)) + ff(ln2(x))
+            let h1 = self.ln1.forward(x, rows, ws)?;
+            let att = self.attn.decode_step(&h1, k_cache, v_cache, lanes, lens, ws)?;
+            ws.recycle(h1);
+            let h2 = self.ln2.forward(x, rows, ws)?;
+            let f = self.ff.forward(&h2, rows, ws)?;
+            ws.recycle(h2);
+            let mut y = ws.alloc_copy(x);
+            for ((o, a), fv) in y.iter_mut().zip(&att).zip(&f) {
+                *o += a + fv;
+            }
+            ws.recycle(att);
+            ws.recycle(f);
+            Ok(y)
+        } else {
+            // x1 = x + attn(ln1(x)); y = x1 + ff(ln2(x1))
+            let h1 = self.ln1.forward(x, rows, ws)?;
+            let att = self.attn.decode_step(&h1, k_cache, v_cache, lanes, lens, ws)?;
+            ws.recycle(h1);
+            let mut x1 = ws.alloc_copy(x);
+            for (o, a) in x1.iter_mut().zip(&att) {
+                *o += a;
+            }
+            ws.recycle(att);
+            let h2 = self.ln2.forward(&x1, rows, ws)?;
+            let f = self.ff.forward(&h2, rows, ws)?;
+            ws.recycle(h2);
+            for (o, fv) in x1.iter_mut().zip(&f) {
+                *o += fv;
+            }
+            ws.recycle(f);
+            Ok(x1)
         }
     }
 }
@@ -446,6 +588,122 @@ impl<'a> Lm<'a> {
         scratch::put_f32(last);
         Ok(logits)
     }
+
+    /// One incremental decode step: feed one token per **active** lane
+    /// (`tokens[lane] < 0` marks a lane inactive), append its K/V to
+    /// `st`, and write the next-token logits row for every active lane
+    /// into `logits_out` (`(st.lanes(), vocab)`; inactive rows are
+    /// zeroed).
+    ///
+    /// Active lanes are compacted before the layer stack, so a step
+    /// with `a` active lanes pays for `a` rows of compute — idle lanes
+    /// cost nothing. Bitwise identical to running
+    /// [`Lm::next_logits_with_threads`] over the lane's full prefix
+    /// (the parity tests pin this per variant and thread count): the
+    /// embeddings, projections, layer norms and ff are all per-row
+    /// kernels, and cached K/V rows reproduce the batch forward's by
+    /// causal induction.
+    ///
+    /// Errors if a lane is already at capacity (`len == s`): positions
+    /// are absolute, so the caller must [`DecodeState::reset_lane`] and
+    /// re-feed the slid window instead.
+    pub fn decode_step_with_threads(
+        &self,
+        st: &mut DecodeState,
+        tokens: &[i32],
+        logits_out: &mut [f32],
+        threads: usize,
+    ) -> Result<()> {
+        let arch = self.arch;
+        let (d, vocab) = (arch.d_model, arch.vocab);
+        if st.n_layers != arch.n_layers || st.s != arch.seq || st.d != d {
+            bail!(
+                "decode cache geometry ({}, {}, {}) does not match arch ({}, {}, {d})",
+                st.n_layers,
+                st.s,
+                st.d,
+                arch.n_layers,
+                arch.seq
+            );
+        }
+        if tokens.len() != st.b {
+            bail!("decode step: {} token ids for {} lanes", tokens.len(), st.b);
+        }
+        if logits_out.len() != st.b * vocab {
+            bail!(
+                "decode step: logits buffer holds {} values, want {} ({} lanes x {vocab})",
+                logits_out.len(),
+                st.b * vocab,
+                st.b
+            );
+        }
+        logits_out.fill(0.0);
+        let mut lanes = std::mem::take(&mut st.lane_map);
+        lanes.clear();
+        for (lane, &tok) in tokens.iter().enumerate() {
+            if tok < 0 {
+                continue;
+            }
+            if tok as usize >= vocab {
+                st.lane_map = lanes;
+                bail!("decode step: token id {tok} out of vocab {vocab}");
+            }
+            if st.lens[lane] >= st.s {
+                st.lane_map = lanes;
+                bail!(
+                    "decode step: lane {lane} is at capacity {} — reset the lane and \
+                     re-feed the slid window",
+                    st.s
+                );
+            }
+            lanes.push(lane);
+        }
+        if lanes.is_empty() {
+            st.lane_map = lanes;
+            return Ok(());
+        }
+        let a = lanes.len();
+        let mut ws = Workspace::inference_with_threads(threads);
+
+        // embedding: tok_emb[token] + pos_emb[position], elementwise —
+        // the same expression `Embedding::forward` evaluates for the
+        // batch path at this absolute position
+        let tok_emb = self.p.f32("tok_emb")?;
+        let pos_emb = self.p.f32("pos_emb")?;
+        let mut x = ws.alloc_zeroed(a * d);
+        for (g, &lane) in lanes.iter().enumerate() {
+            let tok = tokens[lane] as usize;
+            let pos = st.lens[lane];
+            let row = &mut x[g * d..(g + 1) * d];
+            let e = &tok_emb[tok * d..(tok + 1) * d];
+            let p = &pos_emb[pos * d..(pos + 1) * d];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = e[j] + p[j];
+            }
+        }
+        // from here on the new token is part of every lane's prefix
+        for &lane in &lanes {
+            st.lens[lane] += 1;
+        }
+
+        for l in 0..arch.n_layers {
+            let layer = self.decoder_layer(l, st.b, st.s)?;
+            let next =
+                layer.decode_step(&x, &mut st.k[l], &mut st.v[l], &lanes, &st.lens, &mut ws)?;
+            ws.recycle(std::mem::replace(&mut x, next));
+        }
+        let h = self.final_ln()?.forward(&x, a, &mut ws)?;
+        ws.recycle(x);
+        let logits = self.logits(&h, a, threads)?;
+        scratch::put_f32(h);
+        for (g, &lane) in lanes.iter().enumerate() {
+            logits_out[lane * vocab..(lane + 1) * vocab]
+                .copy_from_slice(&logits[g * vocab..(g + 1) * vocab]);
+        }
+        scratch::put_f32(logits);
+        st.lane_map = lanes;
+        Ok(())
+    }
 }
 
 /// One full LM optimizer step over flat named training state
@@ -669,6 +927,142 @@ mod tests {
             (i8_loss - f32_loss).abs() < 0.15,
             "i8 eval_loss {i8_loss} drifted from f32 {f32_loss}"
         );
+    }
+
+    /// Full-recompute logits for one lane's prefix — the oracle the
+    /// incremental decode path is pinned against. b=1 is bitwise
+    /// equivalent to any padded batch row: every kernel in the stack
+    /// is per-row deterministic, so a row's logits depend only on its
+    /// own tokens.
+    fn oracle_row(lm: &Lm, prefix: &[i32], s: usize, threads: usize) -> Vec<f32> {
+        let w = if prefix.len() > s { &prefix[prefix.len() - s..] } else { prefix };
+        let mut toks = vec![0i32; s];
+        toks[..w.len()].copy_from_slice(w);
+        lm.next_logits_with_threads(&toks, &[w.len() as i32], 1, s, threads).unwrap()
+    }
+
+    /// The tentpole parity proof: incremental KV-cache decoding is
+    /// **bitwise** identical to full-context recompute, for all three
+    /// serving variants, thread counts {1, 2, 8}, both residual
+    /// modes, with staggered multi-lane admission (lane `l` joins at
+    /// step `l`, exercising idle `-1` lanes and compaction).
+    #[test]
+    fn decode_step_matches_full_recompute_bitwise() {
+        for parallel in [false, true] {
+            for vname in ["dense", "dyad_it", "dyad_it_cat"] {
+                for threads in [1usize, 2, 8] {
+                    let arch = tiny_arch(parallel);
+                    let (names, params, var) = tiny_state(&arch, vname, 11);
+                    let p = Params::from_named(&names, &params);
+                    let lm = Lm { arch: &arch, var: &var, p };
+                    let prompts: [&[i32]; 3] =
+                        [&[1, 2, 3, 4, 5], &[6], &[7, 8, 9, 10]];
+                    let mut st = DecodeState::new(&arch, prompts.len());
+                    let vocab = arch.vocab;
+                    let mut logits = vec![0.0f32; prompts.len() * vocab];
+                    let steps =
+                        prompts.iter().enumerate().map(|(l, p)| l + p.len()).max().unwrap();
+                    for step in 0..steps {
+                        let tokens: Vec<i32> = prompts
+                            .iter()
+                            .enumerate()
+                            .map(|(l, p)| {
+                                // lane l admitted at step l
+                                if step >= l && step - l < p.len() {
+                                    p[step - l]
+                                } else {
+                                    -1
+                                }
+                            })
+                            .collect();
+                        lm.decode_step_with_threads(&mut st, &tokens, &mut logits, threads)
+                            .unwrap();
+                        for (l, prompt) in prompts.iter().enumerate() {
+                            if tokens[l] < 0 {
+                                continue;
+                            }
+                            let fed = &prompt[..step - l + 1];
+                            let want = oracle_row(&lm, fed, arch.seq, threads);
+                            assert_eq!(
+                                &logits[l * vocab..(l + 1) * vocab],
+                                &want[..],
+                                "parallel={parallel} {vname} threads={threads} \
+                                 lane={l} prefix_len={}",
+                                fed.len()
+                            );
+                        }
+                    }
+                    assert_eq!(st.len(0), prompts[0].len());
+                }
+            }
+        }
+    }
+
+    /// A lane at capacity refuses further tokens (positions are
+    /// absolute), and the documented recovery — reset the lane and
+    /// re-feed the slid window — lands bitwise on the full-recompute
+    /// path's own slid-window logits.
+    #[test]
+    fn decode_capacity_resets_and_window_slide_matches_oracle() {
+        let arch = tiny_arch(false);
+        let s = arch.seq;
+        let (names, params, var) = tiny_state(&arch, "dyad_it", 23);
+        let p = Params::from_named(&names, &params);
+        let lm = Lm { arch: &arch, var: &var, p };
+        let full: Vec<i32> = (0..=s as i32).collect(); // one past capacity
+        let mut st = DecodeState::new(&arch, 1);
+        let mut logits = vec![0.0f32; arch.vocab];
+        for &t in &full[..s] {
+            lm.decode_step_with_threads(&mut st, &[t], &mut logits, 2).unwrap();
+        }
+        assert_eq!(st.len(0), s);
+        let err = lm
+            .decode_step_with_threads(&mut st, &[full[s]], &mut logits, 2)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("capacity"), "{err:#}");
+        // slide: drop the oldest token, re-feed the rest plus the new one
+        st.reset_lane(0);
+        assert!(st.is_empty(0));
+        for &t in &full[1..] {
+            lm.decode_step_with_threads(&mut st, &[t], &mut logits, 2).unwrap();
+        }
+        let want = oracle_row(&lm, &full[1..], s, 2);
+        assert_eq!(&logits[..], &want[..], "slid window diverged from oracle");
+    }
+
+    /// Decode input validation: out-of-vocab tokens and geometry
+    /// mismatches fail loudly, an all-idle step is a cheap no-op, and
+    /// a failed step leaves the state usable.
+    #[test]
+    fn decode_step_rejects_bad_inputs() {
+        let arch = tiny_arch(false);
+        let (names, params, var) = tiny_state(&arch, "dense", 9);
+        let p = Params::from_named(&names, &params);
+        let lm = Lm { arch: &arch, var: &var, p };
+        let mut st = DecodeState::new(&arch, 2);
+        let vocab = arch.vocab;
+        let mut logits = vec![0.0f32; 2 * vocab];
+        assert!(lm
+            .decode_step_with_threads(&mut st, &[vocab as i32, -1], &mut logits, 1)
+            .is_err());
+        assert!(lm
+            .decode_step_with_threads(&mut st, &[1], &mut logits, 1)
+            .is_err());
+        assert!(lm
+            .decode_step_with_threads(&mut st, &[1, 2], &mut logits[..vocab], 1)
+            .is_err());
+        // all lanes idle: Ok, logits zeroed, lengths untouched
+        logits.fill(3.0);
+        lm.decode_step_with_threads(&mut st, &[-1, -1], &mut logits, 1).unwrap();
+        assert!(logits.iter().all(|&x| x == 0.0));
+        assert!(st.is_empty(0) && st.is_empty(1));
+        // the failed steps above left the state consistent: a valid
+        // step still matches the oracle
+        lm.decode_step_with_threads(&mut st, &[3, -1], &mut logits, 1).unwrap();
+        let want = oracle_row(&lm, &[3], arch.seq, 1);
+        assert_eq!(&logits[..vocab], &want[..]);
+        assert_eq!(st.len(0), 1);
+        assert_eq!(st.mem_floats(), arch.n_layers * 2 * arch.seq * arch.d_model * 2);
     }
 
     /// A few grad-clipped Adam steps on a repeated tiny batch reduce

@@ -7,7 +7,13 @@
 //! resident once (`Bindings`), accumulates requests into padded
 //! batches (up to `max_batch`, bounded by `window_ms`), and executes
 //! one backend call per batch — the serving-shaped face of the DYAD
-//! speedup story. Runs on the native backend by default
+//! speedup story. Generation is KV-cache incremental with continuous
+//! batching: each worker binds a resident decode cache
+//! (`decode_step` artifact), advances every in-flight generation by
+//! one token per engine call, admits new prompts into free cache
+//! lanes at step boundaries, and retires finished ones immediately —
+//! O(1) staged bytes and O(d) FLOPs per generated token instead of
+//! re-scoring the whole prefix. Runs on the native backend by default
 //! (`ServeConfig::backend`).
 //!
 //! Two front-ends share the [`Request`] protocol:

@@ -6,24 +6,32 @@
 //! weights onto its backend **once** at startup and binds them
 //! resident (`Bindings`); the per-request hot path stages only the
 //! padded token batches, never the weights. Scoring requests are
-//! dynamically batched (see `Batcher`); generation requests run a
-//! greedy decode loop over the `next_logits` artifact with all active
-//! generations stepped together (a miniature continuous batcher).
+//! dynamically batched (see `Batcher`); generation requests run
+//! through a per-worker `DecodeSession` — a continuous batcher over
+//! the KV-cache `decode_step` artifact where each engine call
+//! advances every active generation by one token, new requests are
+//! admitted into free cache lanes at step boundaries, and finished
+//! ones retire immediately. Per generated token the worker stages one
+//! token id and one reset flag per lane up, one logits row per lane
+//! down — O(1) traffic and O(prefix) FLOPs saved versus the legacy
+//! full-recompute loop (still available as the parity oracle via
+//! [`ServeConfig::legacy_generate`]).
 //!
 //! [`ServerHandle`] runs exactly one worker — the direct,
 //! single-shard path. The sharded front-end that fans requests out to
 //! several of these workers is [`super::Router`]; both speak the same
 //! [`Request`] enum, and the worker loop here is the unit of sharding
-//! (per-worker backend, per-worker resident weights, per-worker
-//! [`ServeStats`]).
+//! (per-worker backend, per-worker resident weights + KV cache,
+//! per-worker [`ServeStats`]).
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::batcher::Batcher;
 use super::router::{DispatchPolicy, WorkerShared};
@@ -34,6 +42,7 @@ use crate::runtime::{
     open_backend_sized, Backend, BackendKind, Bindings, Executable, Role, TrainState,
 };
 use crate::tensor::Tensor;
+use crate::util::argmax::argmax_f32;
 use crate::util::timer::Timer;
 
 #[derive(Debug, Clone)]
@@ -61,6 +70,12 @@ pub struct ServeConfig {
     /// oversubscribes the cores the way N full-width shards would.
     /// `serve --threads-per-worker N` overrides the split.
     pub threads_per_worker: Option<usize>,
+    /// Route Generate requests through the legacy full-context
+    /// recompute loop (`next_logits` once per token) instead of the
+    /// KV-cache `DecodeSession`. The legacy loop costs O(prefix) per
+    /// token and serializes generations; it stays around as the
+    /// reference the incremental path is parity-tested against.
+    pub legacy_generate: bool,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +92,7 @@ impl Default for ServeConfig {
             n_workers: 1,
             dispatch: DispatchPolicy::RoundRobin,
             threads_per_worker: None,
+            legacy_generate: false,
         }
     }
 }
@@ -186,6 +202,195 @@ struct PendingScore {
     arrived: Instant,
 }
 
+/// A Generate request waiting for a free cache lane.
+struct PendingGenerate {
+    prompt: Vec<i32>,
+    max_new: usize,
+    resp: Sender<Result<Vec<i32>, String>>,
+    arrived: Instant,
+}
+
+/// One in-flight generation occupying a KV-cache lane.
+struct GenLane {
+    /// Tokens currently materialised in this lane's cache rows.
+    window: Vec<i32>,
+    /// Tokens still to feed: the prompt on admission, the slid window
+    /// after a capacity reset, or the token generated last step.
+    /// While it holds more than the next token the lane is prefilling
+    /// and its logits rows are ignored.
+    pending: VecDeque<i32>,
+    out: Vec<i32>,
+    max_new: usize,
+    resp: Sender<Result<Vec<i32>, String>>,
+    arrived: Instant,
+    /// Free the engine lane (resets=1) on the next step — set on
+    /// admission and on window slides.
+    reset: bool,
+}
+
+/// One worker's in-flight generation lanes, mapped 1:1 onto the lanes
+/// of the `decode_step` artifact's resident KV cache.
+///
+/// The cache itself lives inside the bound `kv_cache` handle
+/// (`Executable::make_decode_cache`) and never crosses the host
+/// boundary; this struct tracks only per-lane request state. One call
+/// to [`DecodeSession::step`] advances every active lane by a single
+/// token: the worker uploads one token id and one reset flag per lane
+/// and takes back one logits row per lane — O(1) traffic per
+/// generated token regardless of prefix length.
+///
+/// Continuous batching: new requests are admitted into free lanes at
+/// step boundaries ([`DecodeSession::admit`]), join the in-flight
+/// batch on the very next engine call, and retire the moment they hit
+/// EOS or their `max_new` budget — freeing the lane mid-flight of
+/// their neighbours instead of holding the batch hostage.
+struct DecodeSession {
+    slots: Vec<Option<GenLane>>,
+    /// Cache capacity in tokens per lane — the artifact's seq length.
+    s: usize,
+}
+
+impl DecodeSession {
+    fn new(lanes: usize, s: usize) -> DecodeSession {
+        DecodeSession { slots: (0..lanes).map(|_| None).collect(), s }
+    }
+
+    fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn has_free_lane(&self) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+    }
+
+    /// Place a validated request into a free lane. The lane is marked
+    /// for reset so the engine clears whatever the previous occupant
+    /// left in the cache rows.
+    fn admit(&mut self, req: PendingGenerate) {
+        let slot = self
+            .slots
+            .iter_mut()
+            .find(|s| s.is_none())
+            .expect("admit requires a free lane");
+        let PendingGenerate { prompt, max_new, resp, arrived } = req;
+        // only the last `s` prompt tokens can influence the next token
+        // (the model's context window) — skip the rest entirely
+        let start = prompt.len().saturating_sub(self.s);
+        *slot = Some(GenLane {
+            window: Vec::with_capacity(self.s),
+            pending: prompt[start..].iter().copied().collect(),
+            out: Vec::new(),
+            max_new,
+            resp,
+            arrived,
+            reset: true,
+        });
+    }
+
+    /// Advance every active lane by one token with a single engine
+    /// call. Idle lanes ride along as `-1` sentinels the engine skips,
+    /// so a lone generation on an 8-lane artifact pays for one row of
+    /// compute, not eight.
+    fn step(
+        &mut self,
+        backend: &dyn Backend,
+        bind: &Bindings,
+        stats: &mut ServeStats,
+        shared: &WorkerShared,
+    ) {
+        let lanes = self.slots.len();
+        let mut tokens = vec![-1i32; lanes];
+        let mut resets = vec![0i32; lanes];
+        for (lane, slot) in self.slots.iter_mut().enumerate() {
+            let Some(l) = slot else { continue };
+            if l.window.len() == self.s {
+                // lane at capacity: positions are absolute, so slide
+                // the window by resetting the lane and re-feeding the
+                // last s-1 tokens ahead of whatever is already pending
+                // — bitwise the same prefix the full-recompute oracle
+                // scores after its own window slide
+                let mut refeed: VecDeque<i32> = l.window[1..].iter().copied().collect();
+                refeed.extend(l.pending.drain(..));
+                l.pending = refeed;
+                l.window.clear();
+                l.reset = true;
+            }
+            let t = l.pending.pop_front().expect("active lane always has a token queued");
+            tokens[lane] = t;
+            resets[lane] = l.reset as i32;
+            l.reset = false;
+            l.window.push(t);
+        }
+        let result = (|| -> Result<Vec<f32>> {
+            let dev = [
+                backend.upload(Tensor::from_i32(&[lanes], tokens)?)?,
+                backend.upload(Tensor::from_i32(&[lanes], resets)?)?,
+            ];
+            let mut res = bind.call(&[&dev[0], &dev[1]])?;
+            let t = backend.take(res.swap_remove(0))?;
+            Ok(t.as_f32()?.to_vec())
+        })();
+        let logits = match result {
+            Ok(l) => l,
+            Err(e) => {
+                // an engine failure poisons every lane in the batch:
+                // give them all an error reply rather than a hang
+                let msg = format!("{e:#}");
+                for slot in &mut self.slots {
+                    Self::retire(slot, Err(msg.clone()), stats, shared);
+                }
+                return;
+            }
+        };
+        let vocab = bind.spec().outputs[0].shape[1];
+        for (lane, slot) in self.slots.iter_mut().enumerate() {
+            let Some(l) = slot.as_mut() else { continue };
+            if !l.pending.is_empty() {
+                continue; // still prefilling: logits not meaningful yet
+            }
+            let row = &logits[lane * vocab..(lane + 1) * vocab];
+            let Some(next) = argmax_f32(row).map(|i| i as i32) else {
+                Self::retire(slot, Err("logits row is all NaN".into()), stats, shared);
+                continue;
+            };
+            l.out.push(next);
+            if next == crate::data::tokenizer::EOS || l.out.len() >= l.max_new {
+                let out = std::mem::take(&mut l.out);
+                Self::retire(slot, Ok(out), stats, shared);
+            } else {
+                l.pending.push_back(next);
+            }
+        }
+    }
+
+    fn retire(
+        slot: &mut Option<GenLane>,
+        result: Result<Vec<i32>, String>,
+        stats: &mut ServeStats,
+        shared: &WorkerShared,
+    ) {
+        let Some(l) = slot.take() else { return };
+        stats
+            .latencies_ms
+            .push(Instant::now().duration_since(l.arrived).as_secs_f64() * 1e3);
+        let _ = l.resp.send(result);
+        shared.dec_pending();
+    }
+}
+
+/// Session-path request validation, performed before the request can
+/// occupy a cache lane — so one malformed prompt gets its own error
+/// reply instead of poisoning the lanes it would be co-scheduled with.
+fn validate_prompt(prompt: &[i32], vocab: usize) -> Result<(), String> {
+    if prompt.is_empty() {
+        return Err("cannot generate from an empty prompt".into());
+    }
+    match prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+        Some(t) => Err(format!("prompt token {t} out of vocab range 0..{vocab}")),
+        None => Ok(()),
+    }
+}
+
 /// Flips the shard's liveness flag when the worker exits — by any
 /// path, panic included (the router reads this to stop dispatching
 /// to a dead shard).
@@ -239,9 +444,34 @@ pub(crate) fn worker(
     score_bind.bind_role(Role::Param, state.param_handles())?;
     let mut logits_bind = Bindings::new(logits_art.as_ref());
     logits_bind.bind_role(Role::Param, state.param_handles())?;
+    // the decode artifact gets weights AND its KV cache bound
+    // resident: the cache handle never crosses the host boundary, so
+    // per decode step only the token/reset lanes and the logits rows
+    // are staged
+    let decode_art = if cfg.legacy_generate {
+        None
+    } else {
+        Some(backend.load(&format!("{}/{}/decode_step", cfg.arch, cfg.variant))?)
+    };
+    let decode_bind = match &decode_art {
+        Some(art) => {
+            let mut bnd = Bindings::new(art.as_ref());
+            bnd.bind_role(Role::Param, state.param_handles())?;
+            bnd.bind_named("kv_cache", art.make_decode_cache()?)?;
+            Some(bnd)
+        }
+        None => None,
+    };
 
     let b = score_art.spec().meta_usize("batch")?;
     let s = score_art.spec().meta_usize("seq")?;
+    let vocab = logits_art.spec().outputs[0].shape[1];
+    let lanes = match &decode_art {
+        Some(art) => art.spec().meta_usize("batch")?,
+        None => b,
+    };
+    let mut session = DecodeSession::new(lanes, s);
+    let mut gen_queue: VecDeque<PendingGenerate> = VecDeque::new();
     let mut batcher = Batcher::new(cfg.max_batch.min(b), cfg.window_ms);
     let mut queue: Vec<PendingScore> = Vec::new();
     let mut stats = ServeStats::default();
@@ -289,68 +519,142 @@ pub(crate) fn worker(
             batcher.flush();
             flush(&mut queue, &mut stats);
         }
-        let budget = batcher.wait_budget(Instant::now());
-        match rx.recv_timeout(budget) {
-            Ok(Request::Score { tokens, resp }) => {
-                queue.push(PendingScore { tokens, resp, arrived: Instant::now() });
-                if batcher.on_arrival(Instant::now()) {
-                    batcher.flush();
-                    flush(&mut queue, &mut stats);
+        let mut inbox: Vec<Request> = Vec::new();
+        let mut disconnected = false;
+        if session.active() == 0 && gen_queue.is_empty() {
+            // nothing decoding: block up to the batching window
+            match rx.recv_timeout(batcher.wait_budget(Instant::now())) {
+                Ok(r) => inbox.push(r),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+        }
+        // drain whatever else is already queued without blocking, so
+        // in-flight decode steps never wait behind the channel
+        loop {
+            match rx.try_recv() {
+                Ok(r) => inbox.push(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
                 }
             }
-            Ok(Request::Generate { prompt, max_new, resp }) => {
-                // flush pending scores first to preserve ordering fairness
-                batcher.flush();
-                flush(&mut queue, &mut stats);
-                let t = Instant::now();
-                let out = generate(backend.as_ref(), &logits_bind, prompt, max_new, s);
-                stats
-                    .latencies_ms
-                    .push(Instant::now().duration_since(t).as_secs_f64() * 1e3);
-                let _ = resp.send(out.map_err(|e| format!("{e:#}")));
-                shared.dec_pending();
+        }
+        let mut shutdown = false;
+        for req in inbox {
+            match req {
+                Request::Score { tokens, resp } => {
+                    queue.push(PendingScore { tokens, resp, arrived: Instant::now() });
+                    if batcher.on_arrival(Instant::now()) {
+                        batcher.flush();
+                        flush(&mut queue, &mut stats);
+                    }
+                }
+                Request::Generate { prompt, max_new, resp } => {
+                    if decode_bind.is_none() {
+                        // legacy oracle path: flush pending scores for
+                        // ordering fairness, then decode synchronously
+                        batcher.flush();
+                        flush(&mut queue, &mut stats);
+                        let t = Instant::now();
+                        let out = generate_full_recompute(
+                            backend.as_ref(),
+                            &logits_bind,
+                            prompt,
+                            max_new,
+                            s,
+                        );
+                        stats
+                            .latencies_ms
+                            .push(Instant::now().duration_since(t).as_secs_f64() * 1e3);
+                        let _ = resp.send(out.map_err(|e| format!("{e:#}")));
+                        shared.dec_pending();
+                    } else if let Err(msg) = validate_prompt(&prompt, vocab) {
+                        let _ = resp.send(Err(msg));
+                        shared.dec_pending();
+                    } else if max_new == 0 {
+                        let _ = resp.send(Ok(Vec::new()));
+                        shared.dec_pending();
+                    } else {
+                        gen_queue.push_back(PendingGenerate {
+                            prompt,
+                            max_new,
+                            resp,
+                            arrived: Instant::now(),
+                        });
+                    }
+                }
+                Request::Stats { resp } => {
+                    let mut snap = stats.clone();
+                    snap.wall_s = started.elapsed_s();
+                    snap.workers = 1;
+                    let _ = resp.send(snap);
+                }
+                Request::Shutdown => shutdown = true,
+                Request::Crash => {
+                    // failure injection: die mid-run with requests
+                    // possibly queued; dropping `queue`/`session`/`rx`
+                    // drops their reply senders, so waiting clients
+                    // observe an error reply (disconnect), never a hang
+                    panic!(
+                        "serve worker {}/{}: injected crash (Request::Crash)",
+                        cfg.arch, cfg.variant
+                    );
+                }
             }
-            Ok(Request::Stats { resp }) => {
-                let mut snap = stats.clone();
-                snap.wall_s = started.elapsed_s();
-                snap.workers = 1;
-                let _ = resp.send(snap);
+        }
+        if shutdown || disconnected {
+            // graceful drain: every generation admitted or queued
+            // before shutdown still gets a real reply
+            if let Some(bind) = &decode_bind {
+                while session.active() > 0 || !gen_queue.is_empty() {
+                    while session.has_free_lane() {
+                        match gen_queue.pop_front() {
+                            Some(r) => session.admit(r),
+                            None => break,
+                        }
+                    }
+                    session.step(backend.as_ref(), bind, &mut stats, &shared);
+                }
             }
-            Ok(Request::Shutdown) => {
-                batcher.flush();
-                flush(&mut queue, &mut stats);
-                return Ok(());
+            batcher.flush();
+            flush(&mut queue, &mut stats);
+            return Ok(());
+        }
+        // continuous batching: admit waiting generations into free
+        // cache lanes at the step boundary, then advance every active
+        // lane by one token
+        if let Some(bind) = &decode_bind {
+            while session.has_free_lane() {
+                match gen_queue.pop_front() {
+                    Some(r) => session.admit(r),
+                    None => break,
+                }
             }
-            Ok(Request::Crash) => {
-                // failure injection: die mid-run with requests possibly
-                // queued; dropping `queue`/`rx` drops their reply
-                // senders, so waiting clients observe an error reply
-                // (disconnect), never a hang
-                panic!(
-                    "serve worker {}/{}: injected crash (Request::Crash)",
-                    cfg.arch, cfg.variant
-                );
-            }
-            Err(RecvTimeoutError::Timeout) => continue,
-            Err(RecvTimeoutError::Disconnected) => {
-                batcher.flush();
-                flush(&mut queue, &mut stats);
-                return Ok(());
+            if session.active() > 0 {
+                session.step(backend.as_ref(), bind, &mut stats, &shared);
             }
         }
     }
 }
 
-/// Greedy decode via the next_logits artifact (full-context recompute
-/// per token; fine at these scales, documented in DESIGN.md). Weights
-/// are already resident in `bind`; each step uploads one token window.
-fn generate(
+/// Greedy decode oracle: full-context recompute per token via the
+/// `next_logits` artifact — O(prefix) FLOPs per generated token. The
+/// production path is the KV-cache `DecodeSession`; this loop stays
+/// as the reference it is parity-tested against
+/// ([`ServeConfig::legacy_generate`]). Weights are already resident in
+/// `bind`; each step uploads one token window.
+fn generate_full_recompute(
     backend: &dyn Backend,
     bind: &Bindings,
     prompt: Vec<i32>,
     max_new: usize,
     s: usize,
 ) -> Result<Vec<i32>> {
+    if prompt.is_empty() {
+        bail!("cannot generate from an empty prompt");
+    }
     let b = bind.spec().meta_usize("batch")?;
     let mut tokens = prompt;
     let mut out = Vec::new();
@@ -372,13 +676,9 @@ fn generate(
         let logits_t = backend.take(res.swap_remove(0))?;
         let logits = logits_t.as_f32()?;
         let vocab = bind.spec().outputs[0].shape[1];
-        let row = &logits[..vocab];
-        let next = row
-            .iter()
-            .enumerate()
-            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
-            .map(|(i, _)| i as i32)
-            .unwrap();
+        let next = argmax_f32(&logits[..vocab])
+            .map(|i| i as i32)
+            .ok_or_else(|| anyhow!("logits row is all NaN"))?;
         tokens.push(next);
         out.push(next);
         if next == crate::data::tokenizer::EOS {

@@ -1,0 +1,77 @@
+//! Deterministic, NaN-safe argmax.
+//!
+//! `Iterator::max_by(|a, b| a.partial_cmp(b).unwrap())` panics the
+//! moment a NaN shows up in a logit row — a single poisoned weight
+//! would take down a serve worker. These helpers never panic: NaN
+//! entries are skipped entirely, ties resolve to the **lowest index**
+//! (strict `>` while scanning left to right), and an empty or all-NaN
+//! slice yields `None` instead of a crash.
+
+/// Index of the largest finite-or-infinite value in `row`.
+///
+/// NaNs are ignored; ties go to the lowest index; returns `None` when
+/// `row` is empty or every entry is NaN.
+pub fn argmax_f32(row: &[f32]) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &v) in row.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if v <= bv => {}
+            _ => best = Some((i, v)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// `f64` twin of [`argmax_f32`] (eval paths aggregate scores in f64).
+pub fn argmax_f64(row: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &v) in row.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if v <= bv => {}
+            _ => best = Some((i, v)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_the_max() {
+        assert_eq!(argmax_f32(&[0.5, 2.0, -1.0, 1.5]), Some(1));
+        assert_eq!(argmax_f64(&[-3.0, -1.0, -2.0]), Some(1));
+    }
+
+    #[test]
+    fn ties_resolve_to_lowest_index() {
+        assert_eq!(argmax_f32(&[1.0, 7.0, 7.0, 7.0]), Some(1));
+        assert_eq!(argmax_f64(&[4.0, 4.0]), Some(0));
+    }
+
+    #[test]
+    fn nan_entries_are_skipped_not_fatal() {
+        assert_eq!(argmax_f32(&[f32::NAN, 1.0, 2.0, f32::NAN]), Some(2));
+        assert_eq!(argmax_f32(&[f32::NAN, f32::NAN]), None);
+        assert_eq!(argmax_f64(&[f64::NAN, 0.0]), Some(1));
+    }
+
+    #[test]
+    fn empty_is_none() {
+        assert_eq!(argmax_f32(&[]), None);
+        assert_eq!(argmax_f64(&[]), None);
+    }
+
+    #[test]
+    fn infinities_participate_normally() {
+        assert_eq!(argmax_f32(&[0.0, f32::INFINITY, 1.0]), Some(1));
+        assert_eq!(argmax_f32(&[f32::NEG_INFINITY, -1.0]), Some(1));
+    }
+}

@@ -3,6 +3,7 @@
 //! The image's vendored crate set has no serde/clap/criterion/rand, so
 //! these are first-class modules of the reproduction (DESIGN.md §6).
 
+pub mod argmax;
 pub mod cli;
 pub mod json;
 pub mod rng;

@@ -14,7 +14,7 @@
 
 use dyad_repro::dyad::kernel::num_threads;
 use dyad_repro::runtime::catalog::{self, model_param_specs};
-use dyad_repro::runtime::native::transformer::{train_microbatch, Lm};
+use dyad_repro::runtime::native::transformer::{train_microbatch, DecodeState, Lm};
 use dyad_repro::runtime::native::Params;
 use dyad_repro::runtime::pool::{self, counters};
 use dyad_repro::runtime::{ArchCfg, VariantSpec};
@@ -200,4 +200,58 @@ fn serve_score_steady_state_is_spawn_and_alloc_free() {
         d.kernel_allocs, 0,
         "steady-state scoring allocated kernel buffers (arena misses)"
     );
+}
+
+/// Steady-state incremental decoding is spawn- and allocation-free:
+/// the KV cache is taken from the recycler once at session setup, and
+/// every per-step buffer (q/k/v rows, attention scores, logits) is a
+/// fixed-size arena request — so after warmup a decode step performs
+/// zero kernel-output heap allocations on the calling thread, no
+/// matter how long the prefix has grown. Checked inline (threads=1,
+/// where per-row scratch also lands on the calling thread's counters)
+/// and on the pool.
+#[test]
+fn decode_steady_state_is_spawn_and_alloc_free() {
+    let arch = tiny_arch();
+    let variants = catalog::variants();
+    let vcfg = &variants["dyad_it"];
+    let var = VariantSpec::resolve(vcfg).expect("variant");
+    let specs = model_param_specs(&arch, vcfg);
+    let mut rng = Rng::new(29);
+    let names: Vec<String> = specs.iter().map(|(n, _, _)| n.clone()).collect();
+    let params: Vec<Vec<f32>> = specs
+        .iter()
+        .map(|(_, sh, init)| Tensor::init(sh, init, &mut rng).as_f32().unwrap().to_vec())
+        .collect();
+    let p = Params::from_named(&names, &params);
+    let lm = Lm { arch: &arch, var: &var, p };
+    let lanes = 2usize;
+    let tokens: Vec<i32> = (0..arch.seq).map(|t| (3 + t % 5) as i32).collect();
+    for threads in [1, num_threads()] {
+        let mut st = DecodeState::new(&arch, lanes);
+        let mut logits = vec![0.0f32; lanes * arch.vocab];
+        // one decode cycle: free both lanes, then generate a full
+        // window token by token
+        let mut cycle = |st: &mut DecodeState| {
+            for lane in 0..lanes {
+                st.reset_lane(lane);
+            }
+            for &t in &tokens {
+                lm.decode_step_with_threads(st, &[t, t + 1], &mut logits, threads)
+                    .expect("decode step");
+            }
+        };
+        // warmup: fills the arena with every buffer size the step needs
+        cycle(&mut st);
+        let before = counters::snapshot();
+        cycle(&mut st);
+        let d = counters::snapshot().since(&before);
+        assert_eq!(d.spawns, 0, "threads={threads}: decode spawned OS threads");
+        assert_eq!(
+            d.kernel_allocs, 0,
+            "threads={threads}: steady-state decode allocated kernel buffers \
+             (arena misses)"
+        );
+        assert!(d.arena_hits > 0, "threads={threads}: decode never touched the arena");
+    }
 }

@@ -357,3 +357,154 @@ fn soak_sharded_serve_conserves_all_replies() {
     assert!(router.dead_workers().is_empty(), "no shard may die under load");
     router.shutdown().unwrap();
 }
+
+// ---- incremental decode (KV-cache DecodeSession) vs legacy oracle ----
+
+/// Same weights (same seed), two decode paths: the KV-cache
+/// incremental session must be **bitwise** identical to the legacy
+/// full-context recompute loop — including an over-length prompt
+/// that exercises admission truncation and the window slide.
+#[test]
+fn server_generate_incremental_matches_legacy_oracle() {
+    let prompts: Vec<(Vec<i32>, usize)> = vec![
+        (vec![5, 6, 7], 6),
+        (vec![42], 4),
+        (vec![3; 10], 5),
+        // longer than the model's context window (opt-mini seq=128)
+        ((0..130).map(|i| (i % 500) as i32).collect(), 2),
+    ];
+    let legacy = ServerHandle::start(ServeConfig { legacy_generate: true, ..cfg() });
+    let incremental = ServerHandle::start(cfg());
+    for (prompt, max_new) in prompts {
+        let want = legacy.generate(prompt.clone(), max_new).unwrap();
+        let got = incremental.generate(prompt.clone(), max_new).unwrap();
+        assert_eq!(
+            got, want,
+            "decode paths diverged on prompt len {} max_new {max_new}",
+            prompt.len()
+        );
+    }
+    legacy.shutdown().unwrap();
+    incremental.shutdown().unwrap();
+}
+
+/// Decode termination semantics, pinned for both paths: never more
+/// than `max_new` tokens; fewer only when the last one is EOS; EOS
+/// never appears mid-stream.
+#[test]
+fn server_generate_stops_on_eos_or_exact_max_new() {
+    const EOS: i32 = 1;
+    for legacy_generate in [false, true] {
+        let server =
+            ServerHandle::start(ServeConfig { legacy_generate, ..cfg() });
+        for (prompt, max_new) in
+            [(vec![5, 6, 7], 8usize), (vec![9, 2], 1), (vec![100, 200, 300], 5)]
+        {
+            let out = server.generate(prompt, max_new).unwrap();
+            assert!(
+                out.len() == max_new || *out.last().unwrap() == EOS,
+                "legacy={legacy_generate}: stopped early without EOS: \
+                 {out:?} (max_new {max_new})"
+            );
+            assert!(out.len() <= max_new);
+            assert!(
+                !out[..out.len().saturating_sub(1)].contains(&EOS),
+                "legacy={legacy_generate}: EOS mid-stream: {out:?}"
+            );
+        }
+        // max_new = 0 is a valid no-op request
+        assert!(server.generate(vec![5], 0).unwrap().is_empty());
+        server.shutdown().unwrap();
+    }
+}
+
+/// Empty prompts are rejected with an error reply on both decode
+/// paths — never a hang, never a bogus generation.
+#[test]
+fn server_generate_rejects_empty_prompt_both_paths() {
+    for legacy_generate in [false, true] {
+        let server =
+            ServerHandle::start(ServeConfig { legacy_generate, ..cfg() });
+        let err = server.generate(vec![], 4).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("empty prompt"),
+            "legacy={legacy_generate}: {err:#}"
+        );
+        // the worker survives the rejection
+        assert!(!server.generate(vec![5, 6], 2).unwrap().is_empty());
+        server.shutdown().unwrap();
+    }
+}
+
+/// A prompt with out-of-vocab tokens gets its own error reply and
+/// must not poison generations sharing the decode batch.
+#[test]
+fn server_generate_rejects_bad_tokens_without_poisoning_lanes() {
+    let server = ServerHandle::start(cfg());
+    let err = server.generate(vec![5, 100_000], 2).unwrap_err();
+    assert!(format!("{err:#}").contains("vocab"), "{err:#}");
+    assert!(!server.generate(vec![5, 6], 2).unwrap().is_empty());
+    server.shutdown().unwrap();
+}
+
+/// Continuous batching: concurrent generations share the decode
+/// batch (admitted into free lanes mid-flight, retired
+/// independently) and still produce exactly the tokens each request
+/// gets when it runs alone — lanes must not cross-talk.
+#[test]
+fn server_concurrent_generates_match_solo_runs() {
+    let server = ServerHandle::start(cfg());
+    let prompts: Vec<(Vec<i32>, usize)> = (0..6)
+        .map(|i| (vec![5 + i, 20 + 2 * i, 7], 3 + (i as usize % 3)))
+        .collect();
+    let solo: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|(p, n)| server.generate(p.clone(), *n).unwrap())
+        .collect();
+    let concurrent: Vec<Vec<i32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = prompts
+            .iter()
+            .map(|(p, n)| {
+                let tx = server.sender();
+                let (p, n) = (p.clone(), *n);
+                scope.spawn(move || {
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(Request::Generate { prompt: p, max_new: n, resp: rtx })
+                        .unwrap();
+                    rrx.recv_timeout(Duration::from_secs(60))
+                        .expect("generate reply")
+                        .expect("generate ok")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(concurrent, solo, "shared-batch decoding changed results");
+    let stats = server.stats().unwrap();
+    assert_eq!(stats.requests(), 12, "every generation must be counted once");
+    server.shutdown().unwrap();
+}
+
+/// Shutdown drains in-flight and queued generations: replies arrive
+/// even when Shutdown lands right behind the requests.
+#[test]
+fn server_shutdown_drains_pending_generates() {
+    let server = ServerHandle::start(cfg());
+    let mut replies = Vec::new();
+    for i in 0..4 {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        server
+            .sender()
+            .send(Request::Generate { prompt: vec![5 + i, 6], max_new: 3, resp: rtx })
+            .unwrap();
+        replies.push(rrx);
+    }
+    server.shutdown().unwrap();
+    for rrx in replies {
+        let out = rrx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("generate reply drained before shutdown")
+            .expect("generate ok");
+        assert!(!out.is_empty() && out.len() <= 3);
+    }
+}
