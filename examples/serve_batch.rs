@@ -57,7 +57,7 @@ fn main() -> Result<()> {
             scope.spawn(move || {
                 for toks in chunk {
                     let (rtx, rrx) = std::sync::mpsc::channel();
-                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx.into() })
                         .expect("router alive");
                     rrx.recv().expect("response").expect("score ok");
                 }

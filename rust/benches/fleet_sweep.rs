@@ -1,0 +1,210 @@
+//! Process-shard fleet sweep: scoring throughput and **resident weight
+//! memory** vs shard-process count, all shards serving from one
+//! mmap'd DYW1 weight file. The memory claim is the point: N shard
+//! processes mapping the same read-only weight file cost ~1× the
+//! weight bytes of a single shard (shared page cache), where N
+//! heap-initialising shards would cost N×. That ratio is *asserted*
+//! here, not just reported — a regression to per-process weight
+//! copies fails the bench.
+//!
+//! Results are persisted as `BENCH_fleet.json` (`BENCH_JSON_DIR`
+//! redirects); `BENCH_QUICK=1` shrinks the request count for CI smoke
+//! runs but keeps the [1, 4] shard axis — the 4-shard residency
+//! assertion is the contract. Every reply is asserted received, so a
+//! hung shard process fails the bench rather than stalling it.
+
+use std::path::Path;
+
+use dyad_repro::bench_support::{quick_mode, write_bench_json};
+use dyad_repro::data::sample_sentences;
+use dyad_repro::dyad::kernel::num_threads;
+use dyad_repro::runtime::catalog::mmap;
+use dyad_repro::runtime::{open_backend_sized, BackendKind};
+use dyad_repro::serve::{DispatchPolicy, Fleet, FleetConfig, Request, ServeConfig};
+use dyad_repro::tensor::Precision;
+use dyad_repro::util::json::{num, obj, s, Json};
+use dyad_repro::util::stats::Summary;
+use dyad_repro::util::timer::Timer;
+
+const ARCH: &str = "opt-mini";
+const VARIANT: &str = "dyad_it";
+
+struct FleetRun {
+    wall_ms: f64,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    weight_heap_bytes: u64,
+    weight_mapped_bytes: u64,
+    weight_resident_bytes: u64,
+}
+
+/// Drive one fleet of `shards` processes with concurrent clients;
+/// every request must get an Ok reply.
+fn run_fleet(
+    weights: &Path,
+    shards: usize,
+    sentences: &[Vec<i32>],
+    clients: usize,
+) -> FleetRun {
+    let cfg = ServeConfig {
+        arch: ARCH.into(),
+        variant: VARIANT.into(),
+        max_batch: 8,
+        window_ms: 2,
+        dispatch: DispatchPolicy::RoundRobin,
+        weights_file: Some(weights.to_path_buf()),
+        ..ServeConfig::default()
+    };
+    let fleet = Fleet::start(FleetConfig::new(
+        cfg,
+        shards,
+        env!("CARGO_BIN_EXE_repro").into(),
+    ))
+    .expect("fleet start");
+    // warmup: one request per shard settles process spawn + backend
+    // open + weight map before the timed window
+    for _ in 0..shards {
+        fleet.score(sentences[0].clone()).expect("warmup score");
+    }
+    let latencies = std::sync::Mutex::new(Vec::with_capacity(sentences.len()));
+    let t = Timer::start();
+    std::thread::scope(|scope| {
+        for chunk in sentences.chunks(sentences.len().div_ceil(clients).max(1)) {
+            let tx = fleet.sender();
+            let latencies = &latencies;
+            scope.spawn(move || {
+                let mut local = Vec::with_capacity(chunk.len());
+                for toks in chunk {
+                    let t = Timer::start();
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx.into() })
+                        .expect("fleet alive");
+                    rrx.recv().expect("reply received").expect("score ok");
+                    local.push(t.elapsed_ms());
+                }
+                latencies.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let wall_ms = t.elapsed_ms();
+    let lat = Summary::of(&latencies.into_inner().unwrap());
+    assert_eq!(lat.n, sentences.len(), "every request must be replied to");
+    let stats = fleet.stats().expect("fleet stats");
+    assert!(
+        stats.weight_mapped_bytes > 0,
+        "shards serve from an mmap'd weight file, so mapped bytes must be nonzero"
+    );
+    assert_eq!(
+        stats.weight_heap_bytes, 0,
+        "mmap-served shards must not hold heap weight copies"
+    );
+    fleet.shutdown().expect("fleet shutdown");
+    FleetRun {
+        wall_ms,
+        rps: sentences.len() as f64 / (wall_ms / 1e3),
+        p50_ms: lat.p50,
+        p99_ms: lat.p99,
+        weight_heap_bytes: stats.weight_heap_bytes,
+        weight_mapped_bytes: stats.weight_mapped_bytes,
+        weight_resident_bytes: stats.weight_resident_bytes(),
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    // the shard axis stays [1, 4] even in quick mode: the 4-shard
+    // residency ratio is the contract this bench exists to hold
+    let shard_counts: &[usize] = &[1, 4];
+    let n_requests = if quick { 24 } else { 128 };
+    let clients = if quick { 4 } else { 8 };
+    let backend = open_backend_sized(
+        BackendKind::Native,
+        Path::new("artifacts"),
+        Precision::F32,
+        1,
+    )
+    .expect("open backend for weight export");
+    let spec = backend
+        .manifest()
+        .artifact(&format!("{ARCH}/{VARIANT}/train_k1"))
+        .expect("train artifact")
+        .clone();
+    let weights = std::env::temp_dir()
+        .join("dyad-repro-bench")
+        .join(format!("fleet-sweep-{}.dyw", std::process::id()));
+    mmap::write_init(&weights, &spec, 7).expect("write DYW1 weight map");
+    println!(
+        "== fleet sweep: {ARCH}/{VARIANT} scoring over shard *processes*, one \
+         shared weight map ({} param bytes, {} requests, {} clients{}) ==",
+        spec.param_bytes(),
+        n_requests,
+        clients,
+        if quick { ", quick mode" } else { "" }
+    );
+    let sentences = sample_sentences(n_requests, 23);
+    println!(
+        "{:>7} {:>12} {:>10} {:>10} {:>16} {:>14}",
+        "shards", "rps", "p50(ms)", "p99(ms)", "resident(bytes)", "vs 1 shard"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut single_resident: Option<u64> = None;
+    let mut fleet4_ratio = f64::NAN;
+    for &shards in shard_counts {
+        let r = run_fleet(&weights, shards, &sentences, clients);
+        let base = *single_resident.get_or_insert(r.weight_resident_bytes);
+        let ratio = r.weight_resident_bytes as f64 / base as f64;
+        println!(
+            "{:>7} {:>12.1} {:>10.2} {:>10.2} {:>16} {:>13.2}x",
+            shards, r.rps, r.p50_ms, r.p99_ms, r.weight_resident_bytes, ratio
+        );
+        if shards > 1 {
+            // the tentpole memory claim: N shards mapping one file
+            // stay ~1x, nowhere near the Nx of per-process copies
+            assert!(
+                ratio < 2.0,
+                "{shards}-shard fleet resident weight bytes must stay < 2x a \
+                 single shard (got {ratio:.2}x) — weight sharing regressed"
+            );
+            fleet4_ratio = ratio;
+        }
+        rows.push(obj(vec![
+            ("arch", s(ARCH)),
+            ("variant", s(VARIANT)),
+            ("shards", num(shards as f64)),
+            ("requests", num(n_requests as f64)),
+            ("wall_ms", num(r.wall_ms)),
+            ("throughput_rps", num(r.rps)),
+            ("p50_ms", num(r.p50_ms)),
+            ("p99_ms", num(r.p99_ms)),
+            ("weight_heap_bytes", num(r.weight_heap_bytes as f64)),
+            ("weight_mapped_bytes", num(r.weight_mapped_bytes as f64)),
+            ("weight_resident_bytes", num(r.weight_resident_bytes as f64)),
+            ("resident_ratio_vs_single", num(ratio)),
+        ]));
+    }
+    let _ = std::fs::remove_file(&weights);
+    let doc = obj(vec![
+        ("bench", s("fleet_sweep")),
+        ("dispatch", s("round-robin")),
+        ("clients", num(clients as f64)),
+        ("threads", num(num_threads() as f64)),
+        ("param_bytes", num(spec.param_bytes() as f64)),
+        ("fleet_resident_ratio", num(fleet4_ratio)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("fleet", &doc) {
+        Ok(path) => println!("\nbench json: {}", path.display()),
+        Err(e) => {
+            eprintln!("error: could not write BENCH_fleet.json: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!(
+        "expect shard processes to add crash isolation at ~zero weight-memory \
+         cost: every shard maps the same read-only DYW1 file, so fleet resident \
+         weight bytes stay ~1x a single shard (asserted above) while throughput \
+         scales with shards until the cores are spoken for"
+    );
+}

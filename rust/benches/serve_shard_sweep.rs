@@ -65,7 +65,7 @@ fn run_fleet(
                 for toks in chunk {
                     let t = Timer::start();
                     let (rtx, rrx) = std::sync::mpsc::channel();
-                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx.into() })
                         .expect("router alive");
                     rrx.recv().expect("reply received").expect("score ok");
                     local.push(t.elapsed_ms());

@@ -70,6 +70,11 @@ fn print_help() {
                           [--ckpt DIR] [--requests N]   (P: round-robin|least-pending)\n\
                           [--threads-per-worker T]  pool size per shard\n\
                           (default: machine threads / workers, min 1)\n\
+                          [--fleet N [--listen ADDR]]  N shard *processes*\n\
+                          behind a TCP front-end (wire protocol: serve::net)\n\
+                          [--weights F | --write-weights F]  serve from a\n\
+                          shared read-only DYW1 weight map (mmap, ~1x\n\
+                          resident bytes across a fleet)\n\
            mnist          [--steps N] [--variant dense|dyad_it]\n\
            data-gen       [--tokens N | --pairs N] [--seed S]\n\
            inspect        [--n-dyad N] [--n-in N] | --artifact NAME\n\
@@ -245,9 +250,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use dyad_repro::serve::{DispatchPolicy, Request, Router, ServeConfig, ServeStats};
+    use dyad_repro::serve::{run_shard, DispatchPolicy, Request, Router, ServeConfig, ServeStats};
     use dyad_repro::runtime::catalog::{canonical_arch, canonical_variant};
-    let cfg = ServeConfig {
+    let mut cfg = ServeConfig {
         backend: backend_kind(args)?,
         artifacts_dir: args.str_or("artifacts", "artifacts").into(),
         arch: canonical_arch(&args.str_or("arch", "opt-mini")).to_string(),
@@ -269,8 +274,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // parity oracle: full-context recompute instead of the
         // KV-cache decode session
         legacy_generate: args.switch("legacy-generate"),
+        // serve from a shared read-only DYW1 weight map instead of
+        // initialising per-process heap copies
+        weights_file: args.str_opt("weights").map(PathBuf::from),
     };
+    if let Some(out) = args.str_opt("write-weights") {
+        use dyad_repro::runtime::open_backend_sized;
+        let backend = open_backend_sized(cfg.backend, &cfg.artifacts_dir, Precision::F32, 1)?;
+        let spec = backend
+            .manifest()
+            .artifact(&format!("{}/{}/train_k1", cfg.arch, cfg.variant))?
+            .clone();
+        let path = PathBuf::from(out);
+        dyad_repro::runtime::catalog::mmap::write_init(&path, &spec, cfg.seed)?;
+        println!(
+            "wrote DYW1 weight map for {}/{} (seed {}) to {}",
+            cfg.arch,
+            cfg.variant,
+            cfg.seed,
+            path.display()
+        );
+        cfg.weights_file = Some(path);
+    }
+    // hidden child mode: one shard process of a fleet (spawned by
+    // Fleet::start, or by hand for debugging). Binds the given
+    // address, prints `SHARD_READY <addr>`, serves the wire protocol.
+    if args.switch("shard") {
+        let listen = args.str_or("listen", "127.0.0.1:0");
+        return run_shard(cfg, &listen);
+    }
     let n = args.usize_or("requests", 64)?;
+    let fleet_n = args.usize_or("fleet", 0)?;
+    if fleet_n > 0 {
+        return serve_fleet(cfg, fleet_n, n, args.str_opt("listen"));
+    }
     println!(
         "starting {} worker(s) ({}/{}) on {} backend, {} dispatch ...",
         cfg.n_workers.max(1),
@@ -289,7 +326,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let srv = router.sender();
         for toks in chunks[t] {
             let (rtx, rrx) = std::sync::mpsc::channel();
-            let _ = srv.send(Request::Score { tokens: toks.clone(), resp: rtx });
+            let _ = srv.send(Request::Score { tokens: toks.clone(), resp: rtx.into() });
             let _ = rrx.recv();
         }
     });
@@ -298,6 +335,71 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("{}", ServeStats::render_workers(&router.worker_stats()));
     router.shutdown()?;
     Ok(())
+}
+
+/// `serve --fleet N`: spawn N shard *processes* (this same binary in
+/// `--shard` child mode) behind the process-level front-end. With
+/// `--listen ADDR` the front-end also serves the wire protocol over
+/// TCP — smoke traffic then runs through a real network client, so the
+/// whole path (client → TCP → dispatcher → shard process → back) is
+/// exercised; with `--requests 0` it just serves until a client sends
+/// Shutdown.
+fn serve_fleet(
+    cfg: dyad_repro::serve::ServeConfig,
+    n_shards: usize,
+    n_requests: usize,
+    listen: Option<&str>,
+) -> Result<()> {
+    use dyad_repro::serve::{Fleet, FleetConfig, NetClient, ServeStats};
+    fn render_fleet(stats: &ServeStats) -> String {
+        format!(
+            "{}\nfleet resident weight bytes: {} (heap {} + mapped/shared {})",
+            stats.render(),
+            stats.weight_resident_bytes(),
+            stats.weight_heap_bytes,
+            stats.weight_mapped_bytes
+        )
+    }
+    let bin = std::env::current_exe().context("locate repro binary to spawn shards")?;
+    println!(
+        "starting {n_shards} shard process(es) ({}/{}), {} dispatch ...",
+        cfg.arch,
+        cfg.variant,
+        cfg.dispatch.name()
+    );
+    let fleet = Fleet::start(FleetConfig::new(cfg, n_shards, bin))?;
+    let Some(listen) = listen else {
+        let sentences = dyad_repro::data::sample_sentences(n_requests, 1);
+        for toks in &sentences {
+            fleet.score(toks.clone())?;
+        }
+        println!("{}", render_fleet(&fleet.stats()?));
+        return fleet.shutdown();
+    };
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("bind fleet front-end on {listen}"))?;
+    let addr = listener.local_addr()?;
+    println!("fleet front-end listening on {addr}");
+    let demo = if n_requests > 0 {
+        // xtask:allow(thread_spawn): CLI smoke client driving the TCP
+        // front-end, not kernel parallelism.
+        Some(std::thread::spawn(move || -> Result<()> {
+            let mut client = NetClient::connect(&addr.to_string())?;
+            let sentences = dyad_repro::data::sample_sentences(n_requests, 1);
+            for toks in &sentences {
+                client.score(toks.clone())?;
+            }
+            println!("{}", render_fleet(&client.stats()?));
+            client.shutdown()
+        }))
+    } else {
+        None
+    };
+    fleet.serve_net(listener)?;
+    if let Some(j) = demo {
+        j.join().map_err(|_| anyhow::anyhow!("fleet smoke client panicked"))??;
+    }
+    fleet.shutdown()
 }
 
 fn cmd_mnist(args: &Args) -> Result<()> {

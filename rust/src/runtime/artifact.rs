@@ -107,6 +107,14 @@ impl ArtifactSpec {
     pub fn param_count(&self) -> usize {
         self.param_specs().iter().map(|p| p.numel()).sum()
     }
+
+    /// Bytes of f32 parameter storage this artifact's model needs —
+    /// what one resident weight copy costs (a serve worker's heap
+    /// copy, or the data section of a DYW1 weight map before
+    /// alignment padding).
+    pub fn param_bytes(&self) -> u64 {
+        self.param_count() as u64 * std::mem::size_of::<f32>() as u64
+    }
 }
 
 #[derive(Debug, Clone, Copy)]

@@ -13,6 +13,8 @@ use crate::util::json::{num, obj, s, Json};
 
 use super::artifact::{AdamCfg, ArchCfg, ArtifactSpec, IoSpec, Manifest, Role, VariantCfg};
 
+pub mod mmap;
+
 pub const TRAIN_BATCH: usize = 8;
 pub const TRAIN_MICROBATCHES: usize = 8;
 pub const EVAL_BATCH: usize = 8;

@@ -1,0 +1,416 @@
+//! DYW1: catalog weights serialized once, memory-mapped by every
+//! serve shard.
+//!
+//! The fleet memory model (ISSUE / Fig. 8 / Table 11 as a serving
+//! win): the front-end writes one weight file per (arch, variant,
+//! seed) — either the deterministic init stream or checkpoint params —
+//! and each shard *process* opens it through
+//! [`crate::tensor::Mapping`], a read-only `MAP_SHARED` mapping. All
+//! shards then share the same page-cache pages, so fleet resident
+//! weight bytes stay ~1× instead of N× (asserted in
+//! `benches/fleet_sweep.rs`). Tensors come out as zero-copy
+//! [`Tensor::from_mapped`] views the native backend binds resident
+//! without ever touching the elements.
+//!
+//! Layout (little-endian, data blocks 64-byte aligned):
+//! ```text
+//!   magic   b"DYW1"
+//!   u32     version (1)
+//!   u32     entry count
+//!   entry*  { u32 name_len, name bytes (utf-8),
+//!             u8 dtype (0=f32), u32 ndim, u64 dims[ndim],
+//!             u64 offset (from file start), u64 byte_len }
+//!   ...     64-aligned f32 data blocks
+//! ```
+//! Parsing is corruption-bounded like `tensor/io.rs` (DYT1): counts
+//! and lengths are validated against the file size before any
+//! allocation, offsets must land inside the mapping and be 4-byte
+//! aligned, so a truncated or bit-flipped file errors — never panics,
+//! never over-allocates.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Backend, DeviceTensor, Role};
+use crate::tensor::{MappedF32, Mapping, Tensor};
+use crate::util::rng::Rng;
+
+use super::super::artifact::ArtifactSpec;
+
+const MAGIC: &[u8; 4] = b"DYW1";
+const VERSION: u32 = 1;
+/// Data blocks align to cache lines; also guarantees the 4-byte f32
+/// alignment [`MappedF32`] checks.
+const ALIGN: usize = 64;
+
+fn align_up(x: usize) -> usize {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+/// Serialize named f32 tensors into a DYW1 weight file.
+pub fn write(path: &Path, entries: &[(String, &Tensor)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    // pass 1: header size, then 64-aligned data offsets
+    let mut header = 4 + 4 + 4;
+    for (name, t) in entries {
+        if t.as_f32().is_err() {
+            bail!("weight file entries must be f32, {name:?} is {:?}", t.dtype());
+        }
+        header += 4 + name.len() + 1 + 4 + 8 * t.shape.len() + 8 + 8;
+    }
+    let mut offsets = Vec::with_capacity(entries.len());
+    let mut cursor = align_up(header);
+    for (_, t) in entries {
+        offsets.push(cursor);
+        cursor = align_up(cursor + t.size_bytes());
+    }
+    let mut w = BufWriter::new(File::create(path).context("create weight file")?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for ((name, t), off) in entries.iter().zip(&offsets) {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&[0u8])?; // dtype f32
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for d in &t.shape {
+            w.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        w.write_all(&(*off as u64).to_le_bytes())?;
+        w.write_all(&(t.size_bytes() as u64).to_le_bytes())?;
+    }
+    let mut written = header;
+    for ((_, t), off) in entries.iter().zip(&offsets) {
+        w.write_all(&vec![0u8; off - written])?;
+        let bytes = t.to_bytes();
+        w.write_all(&bytes)?;
+        written = off + bytes.len();
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write the artifact's **initial** parameters — the exact tensors
+/// [`crate::runtime::TrainState::init`] would upload for this spec and
+/// seed. Contract: `TrainState::init` draws rng values for `Param`
+/// inputs only (moments are zero-allocated), in feed order, so
+/// replaying the same `Rng(seed)` over the param specs is bit-identical
+/// — a shard serving from this file scores bitwise the same as one
+/// initialising in-process (pinned in tests).
+pub fn write_init(path: &Path, spec: &ArtifactSpec, seed: u64) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    let mut tensors = Vec::new();
+    for io in &spec.inputs {
+        if io.role == Role::Param {
+            let init = io
+                .init
+                .as_ref()
+                .with_context(|| format!("param {} has no init", io.name))?;
+            tensors.push((io.name.clone(), Tensor::init(&io.shape, init, &mut rng)));
+        }
+    }
+    let refs: Vec<(String, &Tensor)> =
+        tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+    write(path, &refs)
+}
+
+/// Convert a params-only DYT checkpoint (`model.dyt`) into a weight
+/// file — serving a trained model from shared storage.
+pub fn write_from_checkpoint(path: &Path, params_file: &Path) -> Result<()> {
+    let entries = crate::tensor::load_checkpoint(params_file)?;
+    let refs: Vec<(String, &Tensor)> =
+        entries.iter().map(|(n, t)| (n.clone(), t)).collect();
+    write(path, &refs)
+}
+
+struct Entry {
+    shape: Vec<usize>,
+    offset: usize,
+    byte_len: usize,
+}
+
+/// An open weight file: the shared mapping plus its parsed index.
+pub struct MappedWeights {
+    map: Arc<Mapping>,
+    index: Vec<Entry>,
+    by_name: BTreeMap<String, usize>,
+}
+
+/// Bounds-checked little-endian reads over the mapped header.
+struct Cursor<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.off.checked_add(n).filter(|&e| e <= self.b.len());
+        match end {
+            Some(end) => {
+                let s = &self.b[self.off..end];
+                self.off = end;
+                Ok(s)
+            }
+            None => bail!("corrupt weight file: truncated header"),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+}
+
+impl MappedWeights {
+    /// Map `path` read-only and parse its index. Every field is
+    /// validated against the file size, so corrupt input errors here
+    /// rather than panicking later.
+    pub fn open(path: &Path) -> Result<MappedWeights> {
+        let map = Mapping::open(path)?;
+        let bytes = map.as_bytes();
+        let mut c = Cursor { b: bytes, off: 0 };
+        if c.take(4)? != MAGIC {
+            bail!("{}: not a DYW1 weight file", path.display());
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            bail!("{}: weight file version {version}, expected {VERSION}", path.display());
+        }
+        let count = c.u32()? as usize;
+        // each entry needs >= 29 header bytes: bound before allocating
+        if count > bytes.len() / 29 {
+            bail!("corrupt weight file: entry count {count} exceeds file size");
+        }
+        let mut index = Vec::with_capacity(count);
+        let mut by_name = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = c.u32()? as usize;
+            if name_len > 4096 {
+                bail!("corrupt weight file: name length {name_len}");
+            }
+            let name = String::from_utf8(c.take(name_len)?.to_vec())
+                .context("weight name utf-8")?;
+            let dtype = c.u8()?;
+            if dtype != 0 {
+                bail!("corrupt weight file: {name}: dtype tag {dtype} (only f32=0)");
+            }
+            let ndim = c.u32()? as usize;
+            if ndim > 16 {
+                bail!("corrupt weight file: {name}: ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u64()? as usize);
+            }
+            let offset = c.u64()? as usize;
+            let byte_len = c.u64()? as usize;
+            let expect = shape
+                .iter()
+                .try_fold(4usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| anyhow::anyhow!("corrupt weight file: {name}: shape overflow"))?;
+            if byte_len != expect {
+                bail!("corrupt weight file: {name}: {byte_len} bytes for shape {shape:?}");
+            }
+            if offset % 4 != 0 {
+                bail!("corrupt weight file: {name}: unaligned offset {offset}");
+            }
+            match offset.checked_add(byte_len) {
+                Some(end) if end <= bytes.len() => {}
+                _ => bail!(
+                    "corrupt weight file: {name}: data [{offset}..+{byte_len}) \
+                     exceeds file of {} bytes",
+                    bytes.len()
+                ),
+            }
+            if by_name.insert(name.clone(), index.len()).is_some() {
+                bail!("corrupt weight file: duplicate tensor {name:?}");
+            }
+            index.push(Entry { shape, offset, byte_len });
+        }
+        Ok(MappedWeights { map, index, by_name })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    /// Total tensor data bytes (the fleet's shared resident-weight
+    /// footprint when [`Self::is_shared`]).
+    pub fn data_bytes(&self) -> u64 {
+        self.index.iter().map(|e| e.byte_len as u64).sum()
+    }
+
+    /// Whether the storage is a real shared file mapping (page cache
+    /// shared across shard processes) rather than a private heap copy.
+    pub fn is_shared(&self) -> bool {
+        self.map.is_shared()
+    }
+
+    /// Zero-copy mapped view of one tensor.
+    pub fn tensor(&self, name: &str) -> Result<Tensor> {
+        let &i = self
+            .by_name
+            .get(name)
+            .with_context(|| format!("weight file has no tensor {name:?}"))?;
+        let e = &self.index[i];
+        let view = MappedF32::new(self.map.clone(), e.offset, e.byte_len / 4)?;
+        Tensor::from_mapped(&e.shape, view)
+    }
+
+    /// The artifact's parameter handles in feed order, shape-checked
+    /// against the manifest and uploaded (zero-copy on native) onto
+    /// `backend` — a drop-in for `TrainState::param_handles`, minus
+    /// the optimizer moments serving never needs.
+    pub fn param_handles(
+        &self,
+        backend: &dyn Backend,
+        spec: &ArtifactSpec,
+    ) -> Result<Vec<DeviceTensor>> {
+        let mut handles = Vec::new();
+        for io in spec.param_specs() {
+            let t = self.tensor(&io.name)?;
+            if t.shape != io.shape {
+                bail!(
+                    "weight file tensor {:?}: shape {:?} != manifest {:?}",
+                    io.name,
+                    t.shape,
+                    io.shape
+                );
+            }
+            handles.push(backend.upload(t)?);
+        }
+        Ok(handles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{open_backend_sized, BackendKind, TrainState};
+    use crate::tensor::Precision;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dyad-repro-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_and_alignment() {
+        let a = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::from_f32(&[5], vec![0.5; 5]).unwrap();
+        let path = tmpfile("weights_roundtrip.dyw");
+        write(&path, &[("w".into(), &a), ("b".into(), &b)]).unwrap();
+        let w = MappedWeights::open(&path).unwrap();
+        assert_eq!(w.names().collect::<Vec<_>>(), vec!["b", "w"]);
+        assert_eq!(w.data_bytes(), (6 + 5) * 4);
+        let wa = w.tensor("w").unwrap();
+        assert!(wa.is_mapped());
+        assert_eq!(wa, a);
+        assert_eq!(w.tensor("b").unwrap(), b);
+        assert!(w.tensor("nope").is_err());
+        // every data block is 64-aligned in the file
+        for e in &w.index {
+            assert_eq!(e.offset % 64, 0, "offset {}", e.offset);
+        }
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let t = Tensor::from_i32(&[2], vec![1, 2]).unwrap();
+        let path = tmpfile("weights_i32.dyw");
+        assert!(write(&path, &[("t".into(), &t)]).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_truncation_and_corruption() {
+        let path = tmpfile("weights_garbage.dyw");
+        std::fs::write(&path, b"definitely not a weight file").unwrap();
+        assert!(MappedWeights::open(&path).is_err());
+
+        let a = Tensor::from_f32(&[64], vec![0.25; 64]).unwrap();
+        let good = tmpfile("weights_good.dyw");
+        write(&good, &[("a".into(), &a)]).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+
+        // truncated: index points past the end
+        let trunc = tmpfile("weights_trunc.dyw");
+        std::fs::write(&trunc, &bytes[..bytes.len() - 32]).unwrap();
+        assert!(MappedWeights::open(&trunc).is_err());
+
+        // absurd entry count
+        let mut huge = bytes.clone();
+        huge[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let hpath = tmpfile("weights_huge_count.dyw");
+        std::fs::write(&hpath, &huge).unwrap();
+        assert!(MappedWeights::open(&hpath).is_err());
+
+        // bad version
+        let mut vbad = bytes.clone();
+        vbad[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let vpath = tmpfile("weights_bad_version.dyw");
+        std::fs::write(&vpath, &vbad).unwrap();
+        assert!(MappedWeights::open(&vpath).is_err());
+    }
+
+    /// The rng-stream contract behind `write_init`: a file written for
+    /// (spec, seed) holds bit-identical params to `TrainState::init`
+    /// on the same (spec, seed) — what makes a weight-file shard score
+    /// bitwise the same as an in-process worker.
+    #[test]
+    fn write_init_matches_train_state_init() {
+        let backend = open_backend_sized(
+            BackendKind::Native,
+            std::path::Path::new("artifacts"),
+            Precision::F32,
+            1,
+        )
+        .unwrap();
+        let spec = backend
+            .manifest()
+            .artifact("opt-mini/dyad_it/train_k1")
+            .unwrap()
+            .clone();
+        let path = tmpfile("weights_init.dyw");
+        write_init(&path, &spec, 7).unwrap();
+        let w = MappedWeights::open(&path).unwrap();
+        let state = TrainState::init(backend.as_ref(), &spec, 7).unwrap();
+        let handles = state.param_handles();
+        for (i, io) in spec.param_specs().into_iter().enumerate() {
+            let host = backend.download(&handles[i]).unwrap();
+            assert_eq!(w.tensor(&io.name).unwrap(), host, "param {}", io.name);
+        }
+        // and the uploaded handles really are zero-copy mapped views
+        let dev = w.param_handles(backend.as_ref(), &spec).unwrap();
+        assert_eq!(dev.len(), state.n_params());
+    }
+
+    #[test]
+    fn checkpoint_conversion_roundtrips() {
+        let a = Tensor::from_f32(&[3, 2], vec![1., -1., 2., -2., 3., -3.]).unwrap();
+        let ckpt = tmpfile("weights_src.dyt");
+        crate::tensor::save_checkpoint(&ckpt, &[("emb".into(), &a)]).unwrap();
+        let path = tmpfile("weights_from_ckpt.dyw");
+        write_from_checkpoint(&path, &ckpt).unwrap();
+        let w = MappedWeights::open(&path).unwrap();
+        assert_eq!(w.tensor("emb").unwrap(), a);
+    }
+}

@@ -1,0 +1,799 @@
+//! Process-shard serving: shard *processes* behind a TCP front-end.
+//!
+//! [`super::Router`] shards at the thread level — N backend-owning
+//! threads in one process. [`Fleet`] promotes the same topology one
+//! level up: N shard **processes** (each running the identical
+//! [`super::server::worker`] loop behind [`run_shard`]'s TCP accept
+//! loop), a dispatcher that speaks the [`super::net`] wire format to
+//! them, and the same [`DispatchPolicy`] routing via the shared
+//! [`pick_shard`] — thread- and process-level fronts cannot drift in
+//! dispatch behaviour.
+//!
+//! ```text
+//!  clients ──Sender<Request>──▶ dispatcher ──TCP──▶ shard 0 (process: worker + weights)
+//!    (or TCP via Fleet::serve_net           ──TCP──▶ shard 1 ...
+//!     + NetClient)                          ──TCP──▶ shard n-1
+//! ```
+//!
+//! What a process boundary buys over threads:
+//! * **Isolation** — a shard can segfault, abort or be OOM-killed
+//!   without taking the fleet down; the router's dead-thread handling
+//!   generalises to dead processes (heartbeat + connection EOF).
+//! * **Shared weights** — every shard maps the same read-only DYW1
+//!   weight file (`serve.weights_file`,
+//!   [`crate::runtime::catalog::mmap`]), so fleet resident weight
+//!   bytes stay ~1× rather than N× (asserted by
+//!   `benches/fleet_sweep.rs`).
+//!
+//! Failure contract (pinned in `tests/fleet_test.rs`): a killed shard
+//! process is detected by the heartbeat (`try_wait` + wire pings) and
+//! by its connection closing; its in-flight requests resolve as error
+//! replies naming the shard, new requests route around it, and
+//! [`Fleet::shutdown`] names every corpse instead of hanging on it.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::net::{
+    decode_reply, encode_request, read_frame, serve_connection, WireReply, WireRequest,
+};
+use super::router::{lane_split, pick_shard, reply_error, DispatchPolicy, WorkerShared};
+use super::server::{
+    request_generate, request_score, request_stats, worker, ReplySink, Request, ServeConfig,
+};
+use super::stats::ServeStats;
+
+/// How long a stats gather waits per shard before skipping it.
+const GATHER_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long shutdown waits for a shard process to drain and exit
+/// before killing it and naming the corpse.
+const SHUTDOWN_TIMEOUT: Duration = Duration::from_secs(60);
+/// Missed-pong budget: a shard is declared dead after this many
+/// heartbeat intervals without a pong.
+const PONG_GRACE: u32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Per-shard serve config, forwarded to every shard process
+    /// (`n_workers`/`dispatch` describe the *fleet* here: each shard
+    /// process runs exactly one worker).
+    pub serve: ServeConfig,
+    pub n_shards: usize,
+    /// The `repro` binary to spawn shards from —
+    /// `std::env::current_exe()` for the CLI,
+    /// `env!("CARGO_BIN_EXE_repro")` in tests and benches.
+    pub shard_binary: PathBuf,
+    /// Heartbeat interval (process poll + wire ping per live shard).
+    pub heartbeat_ms: u64,
+}
+
+impl FleetConfig {
+    pub fn new(serve: ServeConfig, n_shards: usize, shard_binary: PathBuf) -> FleetConfig {
+        FleetConfig { serve, n_shards, shard_binary, heartbeat_ms: 200 }
+    }
+}
+
+/// What the front-end holds per in-flight request: where the reply
+/// goes once the shard's frame comes back (or an error if it never
+/// does).
+enum PendingReply {
+    Score(ReplySink<Result<f64, String>>),
+    Generate(ReplySink<Result<Vec<i32>, String>>),
+    /// Stats gathers fan out to every live shard; each snapshot lands
+    /// on this channel and the dispatcher merges.
+    Stats(Sender<ServeStats>),
+}
+
+/// Front-end state for one shard process. `shared` reuses the
+/// router's per-shard liveness + pending counters, so
+/// [`pick_shard`] routes identically at both sharding levels.
+struct ShardLink {
+    index: usize,
+    addr: String,
+    child: Mutex<Child>,
+    /// Write half of the connection (`None` once the shard is dead).
+    /// Locked per frame, so dispatcher writes and heartbeat pings
+    /// never interleave mid-frame.
+    writer: Mutex<Option<TcpStream>>,
+    pending: Mutex<HashMap<u64, PendingReply>>,
+    shared: Arc<WorkerShared>,
+    last_pong: Mutex<Instant>,
+}
+
+impl ShardLink {
+    fn child_running(&self) -> bool {
+        matches!(self.lock_child().try_wait(), Ok(None))
+    }
+
+    fn lock_child(&self) -> std::sync::MutexGuard<'_, Child> {
+        self.child.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_writer(&self) -> std::sync::MutexGuard<'_, Option<TcpStream>> {
+        self.writer.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_pending(&self) -> std::sync::MutexGuard<'_, HashMap<u64, PendingReply>> {
+        self.pending.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Write one frame under the writer lock. False means the
+    /// connection is gone (shard dead or dying).
+    fn write_frame(&self, frame: &[u8]) -> bool {
+        let mut guard = self.lock_writer();
+        match guard.as_mut() {
+            Some(stream) => stream.write_all(frame).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Declare the shard dead: stop routing to it, close the write
+    /// half, and resolve everything in flight as an error naming the
+    /// shard — clients never hang on a corpse.
+    fn declare_dead(&self, why: &str) {
+        self.shared.mark_dead();
+        *self.lock_writer() = None;
+        self.fail_pending(why);
+    }
+
+    fn fail_pending(&self, why: &str) {
+        let drained: Vec<PendingReply> = self.lock_pending().drain().map(|(_, p)| p).collect();
+        let msg = format!("shard {} {}", self.index, why);
+        for p in drained {
+            match p {
+                PendingReply::Score(sink) => {
+                    sink.send(Err(msg.clone()));
+                    self.shared.dec_pending();
+                }
+                PendingReply::Generate(sink) => {
+                    sink.send(Err(msg.clone()));
+                    self.shared.dec_pending();
+                }
+                // dropping the sender unblocks the gather's recv
+                PendingReply::Stats(_) => {}
+            }
+        }
+    }
+
+    /// Route one decoded reply frame to its waiting client.
+    fn complete(&self, reply: WireReply) {
+        match reply {
+            WireReply::Score { id, result } => {
+                if let Some(PendingReply::Score(sink)) = self.lock_pending().remove(&id) {
+                    sink.send(result);
+                    self.shared.dec_pending();
+                }
+            }
+            WireReply::Generate { id, result } => {
+                if let Some(PendingReply::Generate(sink)) = self.lock_pending().remove(&id) {
+                    sink.send(result);
+                    self.shared.dec_pending();
+                }
+            }
+            WireReply::Stats { id, stats } => {
+                if let Some(PendingReply::Stats(tx)) = self.lock_pending().remove(&id) {
+                    let _ = tx.send(stats);
+                }
+            }
+            WireReply::Pong { .. } => {
+                *self.last_pong.lock().unwrap_or_else(|e| e.into_inner()) = Instant::now();
+            }
+        }
+    }
+}
+
+/// The process-shard serving front-end. In-process clients talk to it
+/// exactly like a [`super::ServerHandle`] or [`super::Router`] (same
+/// [`Request`] enum and helpers); remote clients connect through
+/// [`Fleet::serve_net`] + [`super::net::NetClient`].
+pub struct Fleet {
+    tx: Sender<Request>,
+    shards: Vec<Arc<ShardLink>>,
+    /// Fleet-level liveness (any shard alive) — what the TCP
+    /// front-end's connections consult for pings.
+    fleet_shared: Arc<WorkerShared>,
+    hb_stop: Arc<AtomicBool>,
+    dispatcher: Option<JoinHandle<Result<()>>>,
+    heartbeat: Option<JoinHandle<()>>,
+}
+
+impl Fleet {
+    /// Spawn `cfg.n_shards` shard processes (at least one), handshake
+    /// with each, and start the dispatcher + heartbeat. Fails fast —
+    /// and reaps what it already spawned — if any shard dies during
+    /// startup.
+    pub fn start(cfg: FleetConfig) -> Result<Fleet> {
+        let n = cfg.n_shards.max(1);
+        // same remainder-aware core split as the thread-level router,
+        // one level up: shard processes never strand `cores % n`
+        let split = lane_split(crate::dyad::kernel::num_threads(), n);
+        let mut shards: Vec<Arc<ShardLink>> = Vec::with_capacity(n);
+        for (i, &threads) in split.iter().enumerate() {
+            match spawn_shard(&cfg, i, threads) {
+                Ok(link) => shards.push(Arc::new(link)),
+                Err(e) => {
+                    for link in &shards {
+                        let mut child = link.lock_child();
+                        let _ = child.kill();
+                        let _ = child.wait();
+                    }
+                    return Err(e.context(format!("start shard {i}/{n}")));
+                }
+            }
+        }
+        for link in &shards {
+            let rlink = link.clone();
+            // xtask:allow(thread_spawn): per-shard reply reader — a
+            // long-lived connection drain, not kernel parallelism.
+            std::thread::Builder::new()
+                .name(format!("fleet-reader-{}", link.index))
+                .spawn(move || shard_reader(&rlink))
+                .context("spawn shard reader")?;
+        }
+        let fleet_shared = Arc::new(WorkerShared::new());
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        let hb_shards = shards.clone();
+        let hb_flag = hb_stop.clone();
+        let hb_fleet = fleet_shared.clone();
+        let interval = Duration::from_millis(cfg.heartbeat_ms.max(10));
+        // xtask:allow(thread_spawn): fleet heartbeat — liveness
+        // polling, not kernel parallelism.
+        let heartbeat = std::thread::Builder::new()
+            .name("fleet-heartbeat".into())
+            .spawn(move || heartbeat_loop(&hb_shards, &hb_flag, &hb_fleet, interval))
+            .context("spawn fleet heartbeat")?;
+        let (tx, rx) = mpsc::channel();
+        let d_shards = shards.clone();
+        let d_stop = hb_stop.clone();
+        let policy = cfg.serve.dispatch;
+        // xtask:allow(thread_spawn): the fleet dispatcher — a
+        // long-lived routing thread, not kernel parallelism.
+        let dispatcher = std::thread::Builder::new()
+            .name("fleet-dispatcher".into())
+            .spawn(move || dispatch_loop(rx, d_shards, policy, d_stop))
+            .context("spawn fleet dispatcher")?;
+        Ok(Fleet {
+            tx,
+            shards,
+            fleet_shared,
+            hb_stop,
+            dispatcher: Some(dispatcher),
+            heartbeat: Some(heartbeat),
+        })
+    }
+
+    /// A clonable handle for client threads — same protocol as
+    /// [`super::Router::sender`].
+    pub fn sender(&self) -> Sender<Request> {
+        self.tx.clone()
+    }
+
+    pub fn score(&self, tokens: Vec<i32>) -> Result<f64> {
+        request_score(&self.tx, tokens)
+    }
+
+    pub fn generate(&self, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>> {
+        request_generate(&self.tx, prompt, max_new)
+    }
+
+    /// Fleet-level stats: per-shard snapshots gathered over the wire
+    /// and [`ServeStats::merge`]d (union-of-spans wall clock, heap
+    /// weight bytes summed, mapped weight bytes counted once).
+    pub fn stats(&self) -> Result<ServeStats> {
+        request_stats(&self.tx)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Indices of shards declared dead (process exit, lost
+    /// connection, stale heartbeat).
+    pub fn dead_shards(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .filter(|l| !l.shared.is_alive())
+            .map(|l| l.index)
+            .collect()
+    }
+
+    /// Failure injection (tests, soak runs): SIGKILL one shard
+    /// process — the hard variant of [`super::Router::kill_worker`].
+    /// Detection happens the same way a real crash would be noticed:
+    /// connection EOF and heartbeat, not this call.
+    #[doc(hidden)]
+    pub fn kill_shard(&self, index: usize) -> Result<()> {
+        let link = self
+            .shards
+            .get(index)
+            .ok_or_else(|| anyhow!("no shard {index} (fleet of {})", self.n_shards()))?;
+        let mut child = link.lock_child();
+        child.kill().with_context(|| format!("kill shard {index}"))
+    }
+
+    /// Serve remote clients on `listener`: each connection speaks the
+    /// [`super::net`] wire format and fans into the same dispatcher as
+    /// in-process callers. Blocks until a client sends Shutdown (which
+    /// also shuts the fleet down) or every shard is dead.
+    pub fn serve_net(&self, listener: TcpListener) -> Result<()> {
+        let stop = Arc::new(AtomicBool::new(false));
+        listener.set_nonblocking(true).context("front-end listener nonblocking")?;
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        while !stop.load(Ordering::Acquire) && self.fleet_shared.is_alive() {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_nonblocking(false).ok();
+                    let tx = self.tx.clone();
+                    let shared = self.fleet_shared.clone();
+                    let cstop = stop.clone();
+                    // xtask:allow(thread_spawn): per-client connection
+                    // loop, not kernel parallelism.
+                    let h = std::thread::Builder::new()
+                        .name("fleet-client-conn".into())
+                        .spawn(move || {
+                            let _ = serve_connection(stream, &tx, &shared, &cstop);
+                        })
+                        .context("spawn client connection")?;
+                    conns.push(h);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("front-end accept"),
+            }
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    /// Graceful drain, then reap: every accepted request is answered
+    /// before the shards exit; any shard that crashed, was killed, or
+    /// would not exit is named in the error — a fleet that lost a
+    /// shard cannot shut down silently.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Request::Shutdown);
+        let result = match self.dispatcher.take() {
+            Some(j) => j.join().map_err(|_| anyhow!("fleet dispatcher panicked"))?,
+            None => Ok(()),
+        };
+        self.hb_stop.store(true, Ordering::Release);
+        if let Some(j) = self.heartbeat.take() {
+            let _ = j.join();
+        }
+        result
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.dispatcher.take() {
+            let _ = j.join();
+        }
+        self.hb_stop.store(true, Ordering::Release);
+        if let Some(j) = self.heartbeat.take() {
+            let _ = j.join();
+        }
+        // belt and braces: no shard process outlives its front-end
+        for link in &self.shards {
+            let mut child = link.lock_child();
+            if matches!(child.try_wait(), Ok(None)) {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+/// Spawn one shard process and complete the startup handshake: the
+/// child binds an ephemeral port and prints `SHARD_READY <addr>` on
+/// stdout; we connect to that address.
+fn spawn_shard(cfg: &FleetConfig, index: usize, threads: usize) -> Result<ShardLink> {
+    let sc = &cfg.serve;
+    // xtask:allow(process_spawn): shard processes are the point of the
+    // fleet — isolation the thread-level router cannot give.
+    let mut command = Command::new(&cfg.shard_binary);
+    command
+        .arg("serve")
+        .arg("--shard")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--backend")
+        .arg(sc.backend.name())
+        .arg("--artifacts")
+        .arg(&sc.artifacts_dir)
+        .arg("--arch")
+        .arg(&sc.arch)
+        .arg("--variant")
+        .arg(&sc.variant)
+        .arg("--max-batch")
+        .arg(sc.max_batch.to_string())
+        .arg("--window-ms")
+        .arg(sc.window_ms.to_string())
+        .arg("--seed")
+        .arg(sc.seed.to_string())
+        .arg("--threads-per-worker")
+        .arg(threads.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped());
+    if let Some(w) = &sc.weights_file {
+        command.arg("--weights").arg(w);
+    }
+    if let Some(d) = &sc.checkpoint_dir {
+        command.arg("--ckpt").arg(d);
+    }
+    if sc.legacy_generate {
+        command.arg("--legacy-generate");
+    }
+    let mut child = command
+        .spawn()
+        .with_context(|| format!("spawn shard binary {}", cfg.shard_binary.display()))?;
+    let stdout = child.stdout.take().context("shard stdout not piped")?;
+    let mut line = String::new();
+    let handshake = BufReader::new(stdout).read_line(&mut line);
+    let addr = match handshake {
+        Ok(0) | Err(_) => None, // EOF: the child died before binding
+        Ok(_) => line.trim().strip_prefix("SHARD_READY ").map(str::to_string),
+    };
+    let Some(addr) = addr else {
+        let _ = child.kill();
+        let _ = child.wait();
+        bail!("shard {index} did not hand over an address (got {line:?})");
+    };
+    let stream = TcpStream::connect(&addr)
+        .with_context(|| format!("connect to shard {index} at {addr}"))?;
+    stream.set_nodelay(true).ok();
+    Ok(ShardLink {
+        index,
+        addr,
+        child: Mutex::new(child),
+        writer: Mutex::new(Some(stream)),
+        pending: Mutex::new(HashMap::new()),
+        shared: Arc::new(WorkerShared::new()),
+        last_pong: Mutex::new(Instant::now()),
+    })
+}
+
+/// Per-shard reply pump: drain reply frames into [`ShardLink::complete`]
+/// until the connection drops, then either reconnect (process still
+/// running — e.g. a torn connection) or declare the shard dead. Either
+/// way the in-flight requests of the dropped connection resolve as
+/// errors: their replies are gone with it.
+fn shard_reader(link: &Arc<ShardLink>) {
+    loop {
+        let stream = link.lock_writer().as_ref().and_then(|s| s.try_clone().ok());
+        let Some(stream) = stream else {
+            break; // declared dead elsewhere
+        };
+        let mut reader = BufReader::new(stream);
+        loop {
+            match read_frame(&mut reader) {
+                Ok(Some((kind, payload))) => match decode_reply(kind, &payload) {
+                    Ok(reply) => link.complete(reply),
+                    Err(_) => break, // corrupt stream: unusable
+                },
+                Ok(None) | Err(_) => break,
+            }
+        }
+        link.fail_pending("connection lost (in-flight replies dropped)");
+        if !link.child_running() {
+            link.declare_dead("process exited");
+            break;
+        }
+        // the process is still up (torn connection, not a crash): one
+        // reconnect attempt against its accept loop
+        std::thread::sleep(Duration::from_millis(100));
+        match TcpStream::connect(&link.addr) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                *link.lock_writer() = Some(stream);
+            }
+            Err(_) => {
+                link.declare_dead("unreachable after reconnect attempt");
+                break;
+            }
+        }
+    }
+}
+
+/// Liveness poll: reap exited shard processes, flag stale heartbeats,
+/// ping the survivors, and mirror "any shard alive" onto the
+/// fleet-level flag the TCP front-end consults.
+fn heartbeat_loop(
+    shards: &[Arc<ShardLink>],
+    stop: &AtomicBool,
+    fleet_shared: &Arc<WorkerShared>,
+    interval: Duration,
+) {
+    let grace = interval * PONG_GRACE;
+    let mut ping_id = u64::MAX / 2; // disjoint from dispatcher ids
+    while !stop.load(Ordering::Acquire) {
+        for link in shards {
+            if !link.shared.is_alive() {
+                continue;
+            }
+            if !link.child_running() {
+                link.declare_dead("process exited");
+                continue;
+            }
+            let stale = link.last_pong.lock().unwrap_or_else(|e| e.into_inner()).elapsed() > grace;
+            if stale {
+                link.declare_dead("heartbeat timed out");
+                continue;
+            }
+            ping_id += 1;
+            // a failed write is the reader's signal to handle
+            let _ = link.write_frame(&encode_request(&WireRequest::Ping { id: ping_id }));
+        }
+        if shards.iter().all(|l| !l.shared.is_alive()) {
+            fleet_shared.mark_dead();
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+fn dispatch_loop(
+    rx: Receiver<Request>,
+    shards: Vec<Arc<ShardLink>>,
+    policy: DispatchPolicy,
+    hb_stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut rr = 0usize;
+    let mut next_id = 1u64;
+    loop {
+        match rx.recv() {
+            Ok(Request::Stats { resp }) => {
+                resp.send(gather_stats(&shards, &mut next_id));
+            }
+            Ok(Request::Shutdown) => break,
+            Ok(Request::Crash) => {
+                // in-process failure injection maps to the process
+                // level: hard-kill the first live shard
+                if let Some(link) = shards.iter().find(|l| l.shared.is_alive()) {
+                    let _ = link.lock_child().kill();
+                }
+            }
+            Ok(req) => dispatch_one(req, &shards, policy, &mut rr, &mut next_id),
+            Err(_) => break, // every client sender dropped
+        }
+    }
+    // graceful drain: Shutdown frames queue behind everything already
+    // written (TCP ordering), each shard's connection loop forwards
+    // them after the earlier requests, and the shard process exits
+    // only after its worker drained — replies stream back meanwhile.
+    hb_stop.store(true, Ordering::Release);
+    for link in &shards {
+        if link.shared.is_alive() {
+            let _ = link.write_frame(&encode_request(&WireRequest::Shutdown));
+        }
+    }
+    let mut corpses = Vec::new();
+    for link in &shards {
+        let mut child = link.lock_child();
+        let pid = child.id();
+        let deadline = Instant::now() + SHUTDOWN_TIMEOUT;
+        let status = loop {
+            match child.try_wait() {
+                Ok(Some(st)) => break Some(st),
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Ok(None) | Err(_) => break None,
+            }
+        };
+        match status {
+            Some(st) if st.success() => {}
+            Some(st) => {
+                corpses.push(format!("shard {} (pid {pid}): exited with {st}", link.index));
+            }
+            None => {
+                let _ = child.kill();
+                let _ = child.wait();
+                corpses.push(format!(
+                    "shard {} (pid {pid}): hung past shutdown timeout, killed",
+                    link.index
+                ));
+            }
+        }
+        drop(child);
+        link.declare_dead("fleet shut down");
+    }
+    if corpses.is_empty() {
+        Ok(())
+    } else {
+        bail!("fleet shard failures: {}", corpses.join("; "))
+    }
+}
+
+/// Route one request: pick a live shard (same policy logic as the
+/// thread-level router), register the reply sink under a fresh id,
+/// write the frame. A failed write declares that shard dead and
+/// retries the next; with nobody left the client gets an explicit
+/// error, never a hang.
+fn dispatch_one(
+    req: Request,
+    shards: &[Arc<ShardLink>],
+    policy: DispatchPolicy,
+    rr: &mut usize,
+    next_id: &mut u64,
+) {
+    let mut req = req;
+    for _ in 0..shards.len() {
+        let picked = pick_shard(
+            shards.len(),
+            |i| shards[i].shared.is_alive(),
+            |i| shards[i].shared.pending(),
+            policy,
+            rr,
+        );
+        let Some(i) = picked else { break };
+        match send_to_shard(&shards[i], req, next_id) {
+            Ok(()) => return,
+            Err(back) => {
+                shards[i].declare_dead("rejected a request (connection down)");
+                req = back;
+            }
+        }
+    }
+    reply_error(req, "no live serve shards");
+}
+
+/// Translate one [`Request`] into a wire frame on `link`, with the
+/// reply sink parked in the pending map. On a failed write the sink is
+/// recovered and the whole request handed back for a retry elsewhere.
+/// The pending entry is registered *before* the write: a reply can
+/// race back between write and bookkeeping otherwise.
+fn send_to_shard(
+    link: &Arc<ShardLink>,
+    req: Request,
+    next_id: &mut u64,
+) -> std::result::Result<(), Request> {
+    let id = *next_id;
+    *next_id += 1;
+    match req {
+        Request::Score { tokens, resp } => {
+            let frame = encode_request(&WireRequest::Score { id, tokens: tokens.clone() });
+            link.lock_pending().insert(id, PendingReply::Score(resp));
+            link.shared.inc_pending();
+            if link.write_frame(&frame) {
+                return Ok(());
+            }
+            link.shared.dec_pending();
+            match link.lock_pending().remove(&id) {
+                Some(PendingReply::Score(resp)) => Err(Request::Score { tokens, resp }),
+                // raced with the reader's drain: the client already
+                // got an error reply, nothing left to retry
+                _ => Ok(()),
+            }
+        }
+        Request::Generate { prompt, max_new, resp } => {
+            let frame = encode_request(&WireRequest::Generate {
+                id,
+                prompt: prompt.clone(),
+                max_new: max_new as u64,
+            });
+            link.lock_pending().insert(id, PendingReply::Generate(resp));
+            link.shared.inc_pending();
+            if link.write_frame(&frame) {
+                return Ok(());
+            }
+            link.shared.dec_pending();
+            match link.lock_pending().remove(&id) {
+                Some(PendingReply::Generate(resp)) => {
+                    Err(Request::Generate { prompt, max_new, resp })
+                }
+                _ => Ok(()),
+            }
+        }
+        // Stats is answered by the dispatcher, Shutdown/Crash are
+        // control flow — none of them are routed here
+        other => {
+            reply_error(other, "unroutable request");
+            Ok(())
+        }
+    }
+}
+
+/// Fan a Stats frame to every live shard, merge what comes back
+/// within the gather timeout.
+fn gather_stats(shards: &[Arc<ShardLink>], next_id: &mut u64) -> ServeStats {
+    let mut waits = Vec::new();
+    for link in shards {
+        if !link.shared.is_alive() {
+            continue;
+        }
+        let id = *next_id;
+        *next_id += 1;
+        let (stx, srx) = mpsc::channel();
+        let frame = encode_request(&WireRequest::Stats { id });
+        link.lock_pending().insert(id, PendingReply::Stats(stx));
+        if link.write_frame(&frame) {
+            waits.push(srx);
+        } else {
+            link.lock_pending().remove(&id);
+        }
+    }
+    let mut fleet = ServeStats::default();
+    for srx in waits {
+        if let Ok(snap) = srx.recv_timeout(GATHER_TIMEOUT) {
+            fleet.merge(&snap);
+        }
+    }
+    fleet
+}
+
+/// The shard-process entry point (`repro serve --shard --listen ADDR`,
+/// spawned by [`Fleet::start`]): bind, print the `SHARD_READY <addr>`
+/// handshake, then accept front-end connections and pump them into
+/// this process's single backend-owning worker until a Shutdown frame
+/// arrives or the worker dies. Worker death ends the accept loop and
+/// the process — the closed TCP connection and reaped pid are how the
+/// front-end finds out, exactly like a real crash.
+pub fn run_shard(cfg: ServeConfig, listen: &str) -> Result<()> {
+    let listener = TcpListener::bind(listen)
+        .with_context(|| format!("bind shard listener on {listen}"))?;
+    let addr = listener.local_addr()?;
+    // the handshake line the spawning front-end blocks on
+    println!("SHARD_READY {addr}");
+    std::io::stdout().flush().ok();
+    let (tx, rx) = mpsc::channel();
+    let shared = Arc::new(WorkerShared::new());
+    let wshared = shared.clone();
+    let wcfg = ServeConfig { n_workers: 1, ..cfg };
+    // xtask:allow(thread_spawn): the shard's single backend-owning
+    // worker, not kernel parallelism.
+    let join = std::thread::Builder::new()
+        .name("shard-worker".into())
+        .spawn(move || worker(wcfg, rx, wshared))
+        .context("spawn shard worker")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    listener.set_nonblocking(true).context("shard listener nonblocking")?;
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Acquire) && shared.is_alive() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nodelay(true).ok();
+                stream.set_nonblocking(false).ok();
+                let ctx = tx.clone();
+                let cshared = shared.clone();
+                let cstop = stop.clone();
+                // xtask:allow(thread_spawn): per-connection loop, not
+                // kernel parallelism.
+                let h = std::thread::Builder::new()
+                    .name("shard-conn".into())
+                    .spawn(move || {
+                        let _ = serve_connection(stream, &ctx, &cshared, &cstop);
+                    })
+                    .context("spawn shard connection")?;
+                conns.push(h);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("shard accept"),
+        }
+    }
+    // graceful drain: connection loops already forwarded everything
+    // (including Shutdown); the worker answers it all before exiting
+    for h in conns {
+        let _ = h.join();
+    }
+    drop(tx);
+    match join.join() {
+        Ok(result) => result,
+        Err(_) => bail!("shard worker panicked"),
+    }
+}

@@ -16,22 +16,42 @@
 //! re-scoring the whole prefix. Runs on the native backend by default
 //! (`ServeConfig::backend`).
 //!
-//! Two front-ends share the [`Request`] protocol:
+//! Three front-ends share the [`Request`] protocol, at two sharding
+//! levels:
 //!
 //! * [`ServerHandle`] — exactly one worker (the original
 //!   single-threaded path, still the simplest embedding);
-//! * [`Router`] — `n_workers` worker shards behind a dispatcher
-//!   thread with pluggable dispatch ([`DispatchPolicy`]: round-robin
-//!   or least-pending), per-worker [`ServeStats`] merged into a
-//!   fleet view, worker-death detection (error replies, never
-//!   hangs) and graceful drain on shutdown.
+//! * [`Router`] — **thread-level** sharding: `n_workers` worker
+//!   shards in this process behind a dispatcher thread with pluggable
+//!   dispatch ([`DispatchPolicy`]: round-robin or least-pending),
+//!   per-worker [`ServeStats`] merged into a fleet view, worker-death
+//!   detection (error replies, never hangs) and graceful drain on
+//!   shutdown. Weight residency is per worker: `n` shards hold `n`
+//!   copies.
+//! * [`Fleet`] — **process-level** sharding: `n_shards` shard
+//!   *processes* (`repro serve --shard`, each running the same worker
+//!   loop behind a TCP accept loop) behind the same dispatch policies,
+//!   speaking the [`net`] length-prefixed wire format. Processes add
+//!   crash isolation (heartbeat + reconnect route around a killed
+//!   shard) and, with a DYW1 weight file
+//!   ([`ServeConfig::weights_file`],
+//!   [`crate::runtime::catalog::mmap`]), shared read-only weight
+//!   pages — fleet resident weight bytes stay ~1×, not `n`×. Remote
+//!   clients connect through [`Fleet::serve_net`] with [`NetClient`].
+//!
+//! The dispatch logic itself is shared (`router::pick_shard`), so the
+//! two sharding levels cannot drift in routing behaviour.
 
 mod batcher;
+mod fleet;
+pub mod net;
 mod router;
 mod server;
 mod stats;
 
 pub use batcher::Batcher;
+pub use fleet::{run_shard, Fleet, FleetConfig};
+pub use net::NetClient;
 pub use router::{DispatchPolicy, Router};
-pub use server::{Request, ServeConfig, ServerHandle};
+pub use server::{ReplySink, Request, ServeConfig, ServerHandle};
 pub use stats::ServeStats;

@@ -1,0 +1,760 @@
+//! The fleet wire format: length-prefixed binary frames over TCP.
+//!
+//! The process-shard fleet (`serve::fleet`) needs [`Request`]s to
+//! cross a process boundary, so this module gives the serve protocol
+//! a network shape: every message is one *frame* —
+//!
+//! ```text
+//!   magic  b"DYF1"
+//!   u8     version (1)
+//!   u8     kind (request 0x01..; reply 0x81..)
+//!   u32    payload length (LE, <= MAX_FRAME)
+//!   ...    payload (kind-specific, little-endian)
+//! ```
+//!
+//! Encoding is hand-rolled and total: every scalar is fixed-width LE
+//! (`f64::to_le_bytes`, so scores survive the wire **bitwise** — the
+//! fleet parity tests compare `to_bits`). Decoding goes through a
+//! bounds-checked cursor: corrupt or truncated input produces an
+//! error, never a panic and never an oversized allocation (lengths
+//! are validated against the remaining bytes before any `Vec` is
+//! reserved). Pinned by the roundtrip + mutation tests below.
+//!
+//! Three consumers:
+//! * [`serve_connection`] — the shard-side loop turning frames into
+//!   [`Request`]s whose [`ReplySink::Wire`] encodes replies back onto
+//!   the connection's writer queue (one writer thread per connection
+//!   multiplexes replies from the worker).
+//! * `serve::fleet` — the front-end speaks this to its shard
+//!   processes (requests, heartbeat pings, shutdown).
+//! * [`NetClient`] — a plain blocking client for CLI demos, tests and
+//!   external callers.
+
+use std::io::{self, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::router::{reply_error, WorkerShared};
+use super::server::{ReplySink, Request};
+use super::stats::ServeStats;
+
+const MAGIC: &[u8; 4] = b"DYF1";
+const VERSION: u8 = 1;
+/// Frame header bytes: magic + version + kind + payload length.
+const HEADER: usize = 4 + 1 + 1 + 4;
+/// Upper bound on a payload — large enough for any real batch of
+/// tokens or stats snapshot, small enough that a corrupt length field
+/// cannot drive a multi-GiB allocation.
+pub const MAX_FRAME: usize = 1 << 24;
+
+const K_SCORE: u8 = 0x01;
+const K_GENERATE: u8 = 0x02;
+const K_STATS: u8 = 0x03;
+const K_PING: u8 = 0x04;
+const K_SHUTDOWN: u8 = 0x05;
+const K_SCORE_REPLY: u8 = 0x81;
+const K_GEN_REPLY: u8 = 0x82;
+const K_STATS_REPLY: u8 = 0x83;
+const K_PONG: u8 = 0x84;
+
+/// A serve request on the wire. `id` is caller-chosen and echoed on
+/// the matching reply, so one connection can carry many in-flight
+/// requests (the fleet front-end correlates on it).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireRequest {
+    Score { id: u64, tokens: Vec<i32> },
+    Generate { id: u64, prompt: Vec<i32>, max_new: u64 },
+    Stats { id: u64 },
+    /// Heartbeat: answered inline by the connection loop (not the
+    /// worker) iff the worker is still alive.
+    Ping { id: u64 },
+    Shutdown,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireReply {
+    Score { id: u64, result: Result<f64, String> },
+    Generate { id: u64, result: Result<Vec<i32>, String> },
+    Stats { id: u64, stats: ServeStats },
+    Pong { id: u64 },
+}
+
+fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    let mut out = Vec::with_capacity(HEADER + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32s(out: &mut Vec<u8>, vs: &[i32]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        put_f64(out, *v);
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    let mut p = Vec::new();
+    match req {
+        WireRequest::Score { id, tokens } => {
+            put_u64(&mut p, *id);
+            put_i32s(&mut p, tokens);
+            frame(K_SCORE, &p)
+        }
+        WireRequest::Generate { id, prompt, max_new } => {
+            put_u64(&mut p, *id);
+            put_i32s(&mut p, prompt);
+            put_u64(&mut p, *max_new);
+            frame(K_GENERATE, &p)
+        }
+        WireRequest::Stats { id } => {
+            put_u64(&mut p, *id);
+            frame(K_STATS, &p)
+        }
+        WireRequest::Ping { id } => {
+            put_u64(&mut p, *id);
+            frame(K_PING, &p)
+        }
+        WireRequest::Shutdown => frame(K_SHUTDOWN, &p),
+    }
+}
+
+/// `fn(u64, T) -> Vec<u8>` encoders with exactly the shape
+/// [`ReplySink::Wire`] stores.
+pub fn encode_score_reply(id: u64, result: Result<f64, String>) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, id);
+    match result {
+        Ok(v) => {
+            p.push(0);
+            put_f64(&mut p, v);
+        }
+        Err(e) => {
+            p.push(1);
+            put_str(&mut p, &e);
+        }
+    }
+    frame(K_SCORE_REPLY, &p)
+}
+
+pub fn encode_gen_reply(id: u64, result: Result<Vec<i32>, String>) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, id);
+    match result {
+        Ok(tokens) => {
+            p.push(0);
+            put_i32s(&mut p, &tokens);
+        }
+        Err(e) => {
+            p.push(1);
+            put_str(&mut p, &e);
+        }
+    }
+    frame(K_GEN_REPLY, &p)
+}
+
+pub fn encode_stats_reply(id: u64, stats: ServeStats) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, id);
+    put_f64s(&mut p, &stats.latencies_ms);
+    put_u32(&mut p, stats.batch_sizes.len() as u32);
+    for b in &stats.batch_sizes {
+        put_u64(&mut p, *b as u64);
+    }
+    put_f64s(&mut p, &stats.exec_ms);
+    put_f64(&mut p, stats.wall_s);
+    put_u64(&mut p, stats.workers as u64);
+    put_u32(&mut p, stats.spans.len() as u32);
+    for (a, b) in &stats.spans {
+        put_f64(&mut p, *a);
+        put_f64(&mut p, *b);
+    }
+    put_u64(&mut p, stats.weight_heap_bytes);
+    put_u64(&mut p, stats.weight_mapped_bytes);
+    frame(K_STATS_REPLY, &p)
+}
+
+pub fn encode_pong(id: u64) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, id);
+    frame(K_PONG, &p)
+}
+
+pub fn encode_reply(reply: &WireReply) -> Vec<u8> {
+    match reply {
+        WireReply::Score { id, result } => encode_score_reply(*id, result.clone()),
+        WireReply::Generate { id, result } => encode_gen_reply(*id, result.clone()),
+        WireReply::Stats { id, stats } => encode_stats_reply(*id, stats.clone()),
+        WireReply::Pong { id } => encode_pong(*id),
+    }
+}
+
+/// Bounds-checked little-endian reads over a frame payload. Every
+/// `take` validates against the remaining bytes, so malformed input
+/// errors instead of panicking; list lengths are additionally checked
+/// element-width-times-count against the remainder before reserving.
+struct Dec<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, off: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.off
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("corrupt frame: wanted {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// List length header, validated so `count * width` fits in the
+    /// remaining payload before anything is allocated.
+    fn list_len(&mut self, width: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.checked_mul(width).is_none_or(|total| total > self.remaining()) {
+            bail!("corrupt frame: list of {n} x {width}B exceeds {} remaining", self.remaining());
+        }
+        Ok(n)
+    }
+
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.list_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.take(4)?;
+            out.push(i32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        Ok(out)
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.list_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.list_len(1)?;
+        String::from_utf8(self.take(n)?.to_vec()).context("corrupt frame: string not utf-8")
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("corrupt frame: {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+pub fn decode_request(kind: u8, payload: &[u8]) -> Result<WireRequest> {
+    let mut d = Dec::new(payload);
+    let req = match kind {
+        K_SCORE => WireRequest::Score { id: d.u64()?, tokens: d.i32s()? },
+        K_GENERATE => {
+            WireRequest::Generate { id: d.u64()?, prompt: d.i32s()?, max_new: d.u64()? }
+        }
+        K_STATS => WireRequest::Stats { id: d.u64()? },
+        K_PING => WireRequest::Ping { id: d.u64()? },
+        K_SHUTDOWN => WireRequest::Shutdown,
+        other => bail!("unknown request frame kind 0x{other:02x}"),
+    };
+    d.finish()?;
+    Ok(req)
+}
+
+fn decode_result_f64(d: &mut Dec) -> Result<Result<f64, String>> {
+    match d.u8()? {
+        0 => Ok(Ok(d.f64()?)),
+        1 => Ok(Err(d.string()?)),
+        t => bail!("corrupt frame: result tag {t}"),
+    }
+}
+
+fn decode_result_tokens(d: &mut Dec) -> Result<Result<Vec<i32>, String>> {
+    match d.u8()? {
+        0 => Ok(Ok(d.i32s()?)),
+        1 => Ok(Err(d.string()?)),
+        t => bail!("corrupt frame: result tag {t}"),
+    }
+}
+
+pub fn decode_reply(kind: u8, payload: &[u8]) -> Result<WireReply> {
+    let mut d = Dec::new(payload);
+    let reply = match kind {
+        K_SCORE_REPLY => {
+            WireReply::Score { id: d.u64()?, result: decode_result_f64(&mut d)? }
+        }
+        K_GEN_REPLY => {
+            WireReply::Generate { id: d.u64()?, result: decode_result_tokens(&mut d)? }
+        }
+        K_STATS_REPLY => {
+            let id = d.u64()?;
+            let latencies_ms = d.f64s()?;
+            let n = d.list_len(8)?;
+            let mut batch_sizes = Vec::with_capacity(n);
+            for _ in 0..n {
+                batch_sizes.push(d.u64()? as usize);
+            }
+            let exec_ms = d.f64s()?;
+            let wall_s = d.f64()?;
+            let workers = d.u64()? as usize;
+            let n = d.list_len(16)?;
+            let mut spans = Vec::with_capacity(n);
+            for _ in 0..n {
+                spans.push((d.f64()?, d.f64()?));
+            }
+            let weight_heap_bytes = d.u64()?;
+            let weight_mapped_bytes = d.u64()?;
+            WireReply::Stats {
+                id,
+                stats: ServeStats {
+                    latencies_ms,
+                    batch_sizes,
+                    exec_ms,
+                    wall_s,
+                    workers,
+                    spans,
+                    weight_heap_bytes,
+                    weight_mapped_bytes,
+                },
+            }
+        }
+        K_PONG => WireReply::Pong { id: d.u64()? },
+        other => bail!("unknown reply frame kind 0x{other:02x}"),
+    };
+    d.finish()?;
+    Ok(reply)
+}
+
+/// Read one frame. `Ok(None)` on clean EOF (connection closed between
+/// frames); anything else short of a full valid header + payload is an
+/// error — a torn frame means the peer died mid-write and the
+/// connection is unusable.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut first = [0u8; 1];
+    match r.read_exact(&mut first) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("read frame header"),
+    }
+    let mut rest = [0u8; HEADER - 1];
+    r.read_exact(&mut rest).context("truncated frame header")?;
+    let mut header = [0u8; HEADER];
+    header[0] = first[0];
+    header[1..].copy_from_slice(&rest);
+    if &header[..4] != MAGIC {
+        bail!("bad frame magic {:02x?} (not a DYF1 peer?)", &header[..4]);
+    }
+    if header[4] != VERSION {
+        bail!("frame version {} (this build speaks {VERSION})", header[4]);
+    }
+    let kind = header[5];
+    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]) as usize;
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("truncated frame payload")?;
+    Ok(Some((kind, payload)))
+}
+
+/// Serve one TCP connection against a worker's request channel: the
+/// reader (this call) decodes request frames into [`Request`]s whose
+/// [`ReplySink::Wire`] pushes encoded replies onto a queue drained by
+/// a per-connection writer thread — so many requests can be in flight
+/// and replies interleave in completion order, correlated by id.
+///
+/// Pings are answered inline iff the worker is still alive: a dead
+/// worker means no pong and (on the next request) a closed connection,
+/// which is exactly the signal the fleet front-end routes around.
+/// A Shutdown frame is forwarded to the worker and raises `stop` so
+/// the enclosing accept loop exits too. Returns when the peer closes,
+/// errors on torn/corrupt frames.
+pub(crate) fn serve_connection(
+    stream: TcpStream,
+    tx: &Sender<Request>,
+    shared: &Arc<WorkerShared>,
+    stop: &Arc<AtomicBool>,
+) -> Result<()> {
+    let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
+    let mut wstream = stream.try_clone().context("clone connection for writer")?;
+    // xtask:allow(thread_spawn): per-connection reply writer — a
+    // long-lived mux drain, not kernel parallelism.
+    let writer = std::thread::Builder::new()
+        .name("serve-net-writer".into())
+        .spawn(move || {
+            for f in wrx {
+                if wstream.write_all(&f).is_err() {
+                    break; // peer gone: replies have nowhere to go
+                }
+            }
+        })
+        .context("spawn connection writer")?;
+    let mut reader = BufReader::new(stream);
+    let result = (|| -> Result<()> {
+        while let Some((kind, payload)) = read_frame(&mut reader)? {
+            let req = match decode_request(kind, &payload)? {
+                WireRequest::Score { id, tokens } => Request::Score {
+                    tokens,
+                    resp: ReplySink::Wire { id, tx: wtx.clone(), encode: encode_score_reply },
+                },
+                WireRequest::Generate { id, prompt, max_new } => Request::Generate {
+                    prompt,
+                    max_new: max_new as usize,
+                    resp: ReplySink::Wire { id, tx: wtx.clone(), encode: encode_gen_reply },
+                },
+                WireRequest::Stats { id } => Request::Stats {
+                    resp: ReplySink::Wire { id, tx: wtx.clone(), encode: encode_stats_reply },
+                },
+                WireRequest::Ping { id } => {
+                    if shared.is_alive() {
+                        let _ = wtx.send(encode_pong(id));
+                        continue;
+                    }
+                    // dead worker: stop ponging and hang up, so the
+                    // front-end's heartbeat flags this shard
+                    break;
+                }
+                WireRequest::Shutdown => {
+                    let _ = tx.send(Request::Shutdown);
+                    stop.store(true, Ordering::Release);
+                    break;
+                }
+            };
+            if let Err(mpsc::SendError(back)) = tx.send(req) {
+                // worker gone: explicit error reply, then hang up
+                reply_error(back, "serve worker is down");
+                break;
+            }
+        }
+        Ok(())
+    })();
+    drop(wtx); // writer drains queued replies, then exits
+    let _ = writer.join();
+    result
+}
+
+/// Blocking client for the fleet front-end (or a single shard): one
+/// request in flight at a time, so the next reply frame is always the
+/// matching one — id correlation is still checked, as self-diagnosis.
+pub struct NetClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect to serve front-end {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(NetClient { stream, next_id: 1 })
+    }
+
+    fn roundtrip(&mut self, req: &WireRequest) -> Result<WireReply> {
+        self.stream.write_all(&encode_request(req))?;
+        match read_frame(&mut self.stream)? {
+            Some((kind, payload)) => decode_reply(kind, &payload),
+            None => bail!("connection closed before reply (serve fleet down?)"),
+        }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    pub fn score(&mut self, tokens: Vec<i32>) -> Result<f64> {
+        let id = self.fresh_id();
+        match self.roundtrip(&WireRequest::Score { id, tokens })? {
+            WireReply::Score { id: rid, result } if rid == id => {
+                result.map_err(|e| anyhow!(e))
+            }
+            other => bail!("mismatched reply to score #{id}: {other:?}"),
+        }
+    }
+
+    pub fn generate(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>> {
+        let id = self.fresh_id();
+        let req = WireRequest::Generate { id, prompt, max_new: max_new as u64 };
+        match self.roundtrip(&req)? {
+            WireReply::Generate { id: rid, result } if rid == id => {
+                result.map_err(|e| anyhow!(e))
+            }
+            other => bail!("mismatched reply to generate #{id}: {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        let id = self.fresh_id();
+        match self.roundtrip(&WireRequest::Stats { id })? {
+            WireReply::Stats { id: rid, stats } if rid == id => Ok(stats),
+            other => bail!("mismatched reply to stats #{id}: {other:?}"),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        let id = self.fresh_id();
+        match self.roundtrip(&WireRequest::Ping { id })? {
+            WireReply::Pong { id: rid } if rid == id => Ok(()),
+            other => bail!("mismatched reply to ping #{id}: {other:?}"),
+        }
+    }
+
+    /// Fire-and-forget: the peer drains everything sent before this,
+    /// then exits (TCP ordering makes Shutdown arrive last).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stream.write_all(&encode_request(&WireRequest::Shutdown))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stats() -> ServeStats {
+        ServeStats {
+            latencies_ms: vec![1.5, 2.25, f64::MAX],
+            batch_sizes: vec![1, 8, 64],
+            exec_ms: vec![0.125],
+            wall_s: 12.5,
+            workers: 3,
+            spans: vec![(1e9, 1e9 + 3.5), (1e9 + 10.0, 1e9 + 11.0)],
+            weight_heap_bytes: 123,
+            weight_mapped_bytes: 1 << 20,
+        }
+    }
+
+    fn requests() -> Vec<WireRequest> {
+        vec![
+            WireRequest::Score { id: 0, tokens: vec![] },
+            WireRequest::Score { id: u64::MAX, tokens: vec![i32::MIN, -1, 0, 1, i32::MAX] },
+            WireRequest::Generate { id: 7, prompt: vec![3, 1, 4, 1, 5], max_new: 32 },
+            WireRequest::Generate { id: 8, prompt: vec![0], max_new: u64::MAX },
+            WireRequest::Stats { id: 42 },
+            WireRequest::Ping { id: 99 },
+            WireRequest::Shutdown,
+        ]
+    }
+
+    fn replies() -> Vec<WireReply> {
+        vec![
+            WireReply::Score { id: 1, result: Ok(-1234.5678) },
+            // bit-exactness matters: NaN payloads and negative zero
+            WireReply::Score { id: 2, result: Ok(-0.0) },
+            WireReply::Score { id: 3, result: Err("prompt token 9 out of vocab".into()) },
+            WireReply::Generate { id: 4, result: Ok(vec![5, 6, 7]) },
+            WireReply::Generate { id: 5, result: Ok(vec![]) },
+            WireReply::Generate { id: 6, result: Err("no live serve workers".into()) },
+            WireReply::Stats { id: 7, stats: sample_stats() },
+            WireReply::Stats { id: 8, stats: ServeStats::default() },
+            WireReply::Pong { id: 9 },
+        ]
+    }
+
+    fn read_one(bytes: &[u8]) -> Result<Option<(u8, Vec<u8>)>> {
+        read_frame(&mut io::Cursor::new(bytes))
+    }
+
+    /// Exhaustive roundtrip over every variant, including edge values
+    /// (empty lists, extremes, -0.0).
+    #[test]
+    fn requests_roundtrip() {
+        for req in requests() {
+            let bytes = encode_request(&req);
+            let (kind, payload) = read_one(&bytes).unwrap().expect("one frame");
+            assert_eq!(decode_request(kind, &payload).unwrap(), req);
+            // request kinds are not reply kinds
+            assert!(decode_reply(kind, &payload).is_err());
+        }
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        for reply in replies() {
+            let bytes = encode_reply(&reply);
+            let (kind, payload) = read_one(&bytes).unwrap().expect("one frame");
+            assert_eq!(decode_reply(kind, &payload).unwrap(), reply);
+            assert!(decode_request(kind, &payload).is_err());
+        }
+    }
+
+    /// f64 crosses the wire bitwise: NaN stays the same NaN, -0.0
+    /// stays negative.
+    #[test]
+    fn floats_are_bitwise() {
+        let nan = f64::from_bits(0x7ff8_0000_dead_beef);
+        let bytes = encode_score_reply(1, Ok(nan));
+        let (kind, payload) = read_one(&bytes).unwrap().unwrap();
+        let WireReply::Score { result: Ok(back), .. } =
+            decode_reply(kind, &payload).unwrap()
+        else {
+            panic!("wrong reply shape")
+        };
+        assert_eq!(back.to_bits(), nan.to_bits());
+    }
+
+    /// Two frames back to back parse as two frames; zero bytes is a
+    /// clean EOF, not an error.
+    #[test]
+    fn streams_of_frames() {
+        let mut bytes = encode_request(&WireRequest::Ping { id: 1 });
+        bytes.extend_from_slice(&encode_request(&WireRequest::Stats { id: 2 }));
+        let mut cur = io::Cursor::new(bytes.as_slice());
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap().0, K_PING);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap().0, K_STATS);
+        assert!(read_frame(&mut cur).unwrap().is_none());
+        assert!(read_one(&[]).unwrap().is_none());
+    }
+
+    /// Every strict prefix of a valid frame is a torn frame: an error,
+    /// never a hang, never a panic (prefix 0 is the clean EOF).
+    #[test]
+    fn truncated_frames_error() {
+        let bytes = encode_request(&WireRequest::Score { id: 5, tokens: vec![1, 2, 3] });
+        for cut in 1..bytes.len() {
+            let r = read_one(&bytes[..cut]);
+            assert!(r.is_err(), "prefix of {cut}/{} bytes must error", bytes.len());
+        }
+    }
+
+    /// Header corruption is caught by name: magic, version, oversized
+    /// length.
+    #[test]
+    fn corrupt_headers_error() {
+        let good = encode_request(&WireRequest::Ping { id: 1 });
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(read_one(&bad_magic).unwrap_err().to_string().contains("magic"));
+        let mut bad_version = good.clone();
+        bad_version[4] = 9;
+        assert!(read_one(&bad_version).unwrap_err().to_string().contains("version"));
+        let mut bad_len = good.clone();
+        bad_len[6..10].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_one(&bad_len).unwrap_err().to_string().contains("MAX_FRAME"));
+        // unknown kinds fail decode, both directions
+        let (_, payload) = read_one(&good).unwrap().unwrap();
+        assert!(decode_request(0x7f, &payload).is_err());
+        assert!(decode_reply(0x00, &payload).is_err());
+    }
+
+    /// A length header claiming more elements than the payload holds
+    /// must error before allocating, and trailing bytes are rejected.
+    #[test]
+    fn corrupt_payloads_error() {
+        // i32 list claiming u32::MAX entries in an 8-byte payload
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u32(&mut p, u32::MAX);
+        assert!(decode_request(K_SCORE, &p).is_err());
+        // trailing garbage after a well-formed body
+        let mut ok = Vec::new();
+        put_u64(&mut ok, 1);
+        put_i32s(&mut ok, &[4, 5]);
+        assert!(decode_request(K_SCORE, &ok).is_ok());
+        ok.push(0);
+        assert!(decode_request(K_SCORE, &ok).is_err());
+        // bad result tag
+        let mut r = Vec::new();
+        put_u64(&mut r, 1);
+        r.push(7);
+        assert!(decode_reply(K_SCORE_REPLY, &r).is_err());
+    }
+
+    /// Fuzz-ish sweep: pseudo-random byte soup and single-byte
+    /// mutations of valid frames must decode to Ok or Err — never
+    /// panic, never allocate absurdly. (Deterministic LCG, no RNG
+    /// dependency.)
+    #[test]
+    fn hostile_bytes_never_panic() {
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u8
+        };
+        for len in [0usize, 1, 9, 10, 64, 257] {
+            for _ in 0..50 {
+                let bytes: Vec<u8> = (0..len).map(|_| next()).collect();
+                let _ = read_one(&bytes); // must return, not panic
+            }
+        }
+        // every single-byte mutation of every valid frame
+        let mut corpus: Vec<Vec<u8>> = requests().iter().map(encode_request).collect();
+        corpus.extend(replies().iter().map(encode_reply));
+        for frame_bytes in corpus {
+            for i in 0..frame_bytes.len() {
+                let mut mutant = frame_bytes.clone();
+                mutant[i] ^= 0xa5;
+                if let Ok(Some((kind, payload))) = read_one(&mutant) {
+                    let _ = decode_request(kind, &payload);
+                    let _ = decode_reply(kind, &payload);
+                }
+            }
+        }
+    }
+}

@@ -15,15 +15,19 @@
 //!
 //! **Thread budget.** Each shard's native backend owns a persistent
 //! [`crate::runtime::pool::ThreadPool`] sized to its share of the
-//! machine: `num_threads() / n_workers` (min 1) by default, or the
+//! machine, computed by [`lane_split`]: `num_threads()` cores divided
+//! over the workers with the remainder handed out one core at a time
+//! (so 8 cores over 3 workers is `[3, 3, 2]`, not `[2, 2, 2]` with
+//! two cores stranded — the old truncating `num_threads() / n_workers`
+//! split lost up to `n_workers - 1` cores), min 1 each, unless the
 //! explicit `ServeConfig::threads_per_worker` / CLI
-//! `serve --threads-per-worker N` override. Before this split, every
-//! shard's kernels spawned `num_threads()` scoped threads per call, so
-//! an `n`-worker fleet could oversubscribe the machine `n`-fold under
-//! concurrent load; now the fleet's resident worker threads total at
-//! most `num_threads()` under the default split. Pool size does not
-//! affect results — kernels are bitwise thread-count-deterministic —
-//! only contention.
+//! `serve --threads-per-worker N` override pins every shard. Before
+//! any split, every shard's kernels spawned `num_threads()` scoped
+//! threads per call, so an `n`-worker fleet could oversubscribe the
+//! machine `n`-fold under concurrent load; now the fleet's resident
+//! worker threads total at most `num_threads()` under the default
+//! split. Pool size does not affect results — kernels are bitwise
+//! thread-count-deterministic — only contention.
 //!
 //! Contracts held by the test suite (`tests/serve_test.rs`,
 //! `tests/failure_injection.rs`):
@@ -155,17 +159,35 @@ pub struct Router {
     dispatcher: Option<JoinHandle<Result<()>>>,
 }
 
+/// Divide `total` units (cores) over `n` lanes: every lane gets at
+/// least `total / n` and the first `total % n` lanes get one extra, so
+/// nothing is stranded by truncating division. Each share is min 1 —
+/// lanes beyond `total` oversubscribe rather than sit threadless.
+pub(crate) fn lane_split(total: usize, n: usize) -> Vec<usize> {
+    let n = n.max(1);
+    let base = total / n;
+    let extra = total % n;
+    (0..n).map(|i| (base + usize::from(i < extra)).max(1)).collect()
+}
+
 impl Router {
     /// Spawn `cfg.n_workers` worker shards (at least one) and the
     /// dispatcher that routes per `cfg.dispatch`.
     pub fn start(cfg: ServeConfig) -> Router {
         let n = cfg.n_workers.max(1);
         let policy = cfg.dispatch;
+        // remainder-aware thread split (unless the config pins an
+        // explicit per-worker count): workers have no index, so their
+        // shares are assigned here
+        let split = lane_split(crate::dyad::kernel::num_threads(), n);
         let mut links = Vec::with_capacity(n);
         for i in 0..n {
             let (wtx, wrx) = mpsc::channel();
             let shared = Arc::new(WorkerShared::new());
-            let wcfg = cfg.clone();
+            let mut wcfg = cfg.clone();
+            if wcfg.threads_per_worker.is_none() {
+                wcfg.threads_per_worker = Some(split[i]);
+            }
             let wshared = shared.clone();
             // xtask:allow(thread_spawn): serve workers are long-lived
             // backend-owning threads, not kernel parallelism — the pool
@@ -218,7 +240,7 @@ impl Router {
             .iter()
             .map(|tx| {
                 let (rtx, rrx) = mpsc::channel();
-                tx.send(Request::Stats { resp: rtx }).ok().map(|_| rrx)
+                tx.send(Request::Stats { resp: rtx.into() }).ok().map(|_| rrx)
             })
             .collect();
         waits
@@ -294,7 +316,7 @@ fn dispatch_loop(
         match rx.recv() {
             // fleet-level stats are answered here: gather + merge
             Ok(Request::Stats { resp }) => {
-                let _ = resp.send(fleet_stats(&links));
+                resp.send(fleet_stats(&links));
             }
             Ok(Request::Shutdown) => break,
             Ok(req) => dispatch_one(req, &links, policy, &mut rr),
@@ -346,8 +368,27 @@ fn dispatch_one(mut req: Request, links: &[WorkerLink], policy: DispatchPolicy, 
 }
 
 fn pick(links: &[WorkerLink], policy: DispatchPolicy, rr: &mut usize) -> Option<usize> {
-    // allocation-free: this runs once per dispatched request
-    let live = || links.iter().enumerate().filter(|(_, l)| l.shared.is_alive());
+    pick_shard(
+        links.len(),
+        |i| links[i].shared.is_alive(),
+        |i| links[i].shared.pending(),
+        policy,
+        rr,
+    )
+}
+
+/// Policy-driven shard selection over any fleet shape — thread-level
+/// ([`Router`]) and process-level ([`super::fleet::Fleet`]) fronts
+/// both route through this, so the two sharding levels cannot drift
+/// in dispatch behaviour. Allocation-free: runs once per request.
+pub(crate) fn pick_shard(
+    n: usize,
+    alive: impl Fn(usize) -> bool,
+    pending: impl Fn(usize) -> usize,
+    policy: DispatchPolicy,
+    rr: &mut usize,
+) -> Option<usize> {
+    let live = || (0..n).filter(|&i| alive(i));
     match policy {
         DispatchPolicy::RoundRobin => {
             let n_live = live().count();
@@ -358,22 +399,20 @@ fn pick(links: &[WorkerLink], policy: DispatchPolicy, rr: &mut usize) -> Option<
             *rr += 1;
             // a shard can die between the count and this scan (flags
             // only flip live -> dead): fall back to the first live one
-            live().nth(k).or_else(|| live().next()).map(|(i, _)| i)
+            live().nth(k).or_else(|| live().next())
         }
         // min_by_key keeps the first minimum: lowest index wins ties
-        DispatchPolicy::LeastPending => {
-            live().min_by_key(|(_, l)| l.shared.pending()).map(|(i, _)| i)
-        }
+        DispatchPolicy::LeastPending => live().min_by_key(|&i| pending(i)),
     }
 }
 
-fn reply_error(req: Request, msg: &str) {
+pub(crate) fn reply_error(req: Request, msg: &str) {
     match req {
         Request::Score { resp, .. } => {
-            let _ = resp.send(Err(msg.to_string()));
+            resp.send(Err(msg.to_string()));
         }
         Request::Generate { resp, .. } => {
-            let _ = resp.send(Err(msg.to_string()));
+            resp.send(Err(msg.to_string()));
         }
         // Stats is answered by the dispatcher and never dispatched, so
         // it cannot land here; dropping the reply sender (not sending
@@ -392,7 +431,7 @@ fn fleet_stats(links: &[WorkerLink]) -> ServeStats {
             continue;
         }
         let (rtx, rrx) = mpsc::channel();
-        if l.tx.send(Request::Stats { resp: rtx }).is_ok() {
+        if l.tx.send(Request::Stats { resp: rtx.into() }).is_ok() {
             waits.push(rrx);
         }
     }
@@ -403,4 +442,59 @@ fn fleet_stats(links: &[WorkerLink]) -> ServeStats {
         }
     }
     fleet
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression for the stranded-core split: the remainder of
+    /// `total / n` is handed out one core at a time instead of lost.
+    #[test]
+    fn lane_split_distributes_remainder() {
+        assert_eq!(lane_split(8, 3), vec![3, 3, 2]);
+        assert_eq!(lane_split(7, 4), vec![2, 2, 2, 1]);
+        assert_eq!(lane_split(9, 2), vec![5, 4]);
+        assert_eq!(lane_split(6, 3), vec![2, 2, 2]);
+        // non-dividing pairs always use every core
+        for total in 1..=16 {
+            for n in 1..=total {
+                let split = lane_split(total, n);
+                assert_eq!(split.len(), n);
+                assert_eq!(split.iter().sum::<usize>(), total, "({total}, {n})");
+                let (min, max) = (split.iter().min().unwrap(), split.iter().max().unwrap());
+                assert!(max - min <= 1, "({total}, {n}): uneven split {split:?}");
+            }
+        }
+    }
+
+    /// More lanes than cores: everyone still gets a thread (min 1),
+    /// and n = 0 is clamped to one lane.
+    #[test]
+    fn lane_split_clamps_degenerate_shapes() {
+        assert_eq!(lane_split(2, 5), vec![1, 1, 1, 1, 1]);
+        assert_eq!(lane_split(4, 0), vec![4]);
+        assert_eq!(lane_split(0, 3), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn pick_shard_skips_dead_and_balances() {
+        let alive = [true, false, true];
+        let pending = [5usize, 0, 2];
+        let mut rr = 0;
+        // round-robin cycles the two live shards
+        let a = pick_shard(3, |i| alive[i], |i| pending[i], DispatchPolicy::RoundRobin, &mut rr);
+        let b = pick_shard(3, |i| alive[i], |i| pending[i], DispatchPolicy::RoundRobin, &mut rr);
+        let c = pick_shard(3, |i| alive[i], |i| pending[i], DispatchPolicy::RoundRobin, &mut rr);
+        assert_eq!((a, b, c), (Some(0), Some(2), Some(0)));
+        // least-pending picks the live shard with the smallest load
+        let mut rr = 0;
+        let lp =
+            pick_shard(3, |i| alive[i], |i| pending[i], DispatchPolicy::LeastPending, &mut rr);
+        assert_eq!(lp, Some(2));
+        // all dead: no pick, never a panic
+        let mut rr = 0;
+        assert_eq!(pick_shard(3, |_| false, |_| 0, DispatchPolicy::RoundRobin, &mut rr), None);
+        assert_eq!(pick_shard(3, |_| false, |_| 0, DispatchPolicy::LeastPending, &mut rr), None);
+    }
 }

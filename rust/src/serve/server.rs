@@ -38,8 +38,10 @@ use super::router::{DispatchPolicy, WorkerShared};
 use super::stats::ServeStats;
 use crate::coordinator::checkpoint::CheckpointManager;
 use crate::data::dataset::pad_batch;
+use crate::runtime::catalog::mmap::MappedWeights;
 use crate::runtime::{
-    open_backend_sized, Backend, BackendKind, Bindings, Executable, Role, TrainState,
+    open_backend_sized, Backend, BackendKind, Bindings, DeviceTensor, Executable, Role,
+    TrainState,
 };
 use crate::tensor::Tensor;
 use crate::util::argmax::argmax_f32;
@@ -76,6 +78,13 @@ pub struct ServeConfig {
     /// token and serializes generations; it stays around as the
     /// reference the incremental path is parity-tested against.
     pub legacy_generate: bool,
+    /// Serve parameters from a DYW1 weight file
+    /// ([`crate::runtime::catalog::mmap`]) mapped read-only instead of
+    /// initialising them on the heap. Every shard process of a fleet
+    /// maps the *same* file, so fleet resident weight bytes stay ~1×
+    /// (shared page cache), not N×. Takes precedence over
+    /// `checkpoint_dir`.
+    pub weights_file: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -93,7 +102,52 @@ impl Default for ServeConfig {
             dispatch: DispatchPolicy::RoundRobin,
             threads_per_worker: None,
             legacy_generate: false,
+            weights_file: None,
         }
+    }
+}
+
+/// Where a worker's reply goes: an in-process channel or a network
+/// connection's frame queue.
+///
+/// Every consumer of [`Request`] used to hold a bare
+/// `Sender<Result<..>>`; the TCP front-end (`serve::net`) needs to
+/// multiplex many in-flight requests onto one connection instead, so
+/// replies carry a request id and an encoder into the wire format.
+/// In-process callers are unchanged (`sender.into()`); the worker loop
+/// just calls [`ReplySink::send`] either way.
+pub enum ReplySink<T> {
+    /// In-process reply channel. Dropping it (worker crash, drained
+    /// queue) disconnects the receiver, so waiting clients observe an
+    /// error — never a hang.
+    Chan(Sender<T>),
+    /// Network reply: encode `(id, value)` into a wire frame and push
+    /// it onto the connection's shared writer queue. The remote client
+    /// correlates on `id`.
+    Wire {
+        id: u64,
+        tx: Sender<Vec<u8>>,
+        encode: fn(u64, T) -> Vec<u8>,
+    },
+}
+
+impl<T> ReplySink<T> {
+    /// Deliver the reply; a gone receiver is the receiver's problem.
+    pub fn send(&self, value: T) {
+        match self {
+            ReplySink::Chan(tx) => {
+                let _ = tx.send(value);
+            }
+            ReplySink::Wire { id, tx, encode } => {
+                let _ = tx.send(encode(*id, value));
+            }
+        }
+    }
+}
+
+impl<T> From<Sender<T>> for ReplySink<T> {
+    fn from(tx: Sender<T>) -> Self {
+        ReplySink::Chan(tx)
     }
 }
 
@@ -101,16 +155,16 @@ pub enum Request {
     /// Sum log-probability of a token sequence.
     Score {
         tokens: Vec<i32>,
-        resp: Sender<Result<f64, String>>,
+        resp: ReplySink<Result<f64, String>>,
     },
     /// Greedy continuation of a prompt.
     Generate {
         prompt: Vec<i32>,
         max_new: usize,
-        resp: Sender<Result<Vec<i32>, String>>,
+        resp: ReplySink<Result<Vec<i32>, String>>,
     },
     Stats {
-        resp: Sender<ServeStats>,
+        resp: ReplySink<ServeStats>,
     },
     Shutdown,
     /// Failure-injection hook (tests, soak runs): the receiving worker
@@ -173,7 +227,7 @@ impl Drop for ServerHandle {
 /// router — both ends speak the same protocol).
 pub(crate) fn request_score(tx: &Sender<Request>, tokens: Vec<i32>) -> Result<f64> {
     let (rtx, rrx) = mpsc::channel();
-    tx.send(Request::Score { tokens, resp: rtx })
+    tx.send(Request::Score { tokens, resp: rtx.into() })
         .map_err(|_| anyhow!("server down"))?;
     rrx.recv().context("server dropped request")?.map_err(|e| anyhow!(e))
 }
@@ -184,21 +238,21 @@ pub(crate) fn request_generate(
     max_new: usize,
 ) -> Result<Vec<i32>> {
     let (rtx, rrx) = mpsc::channel();
-    tx.send(Request::Generate { prompt, max_new, resp: rtx })
+    tx.send(Request::Generate { prompt, max_new, resp: rtx.into() })
         .map_err(|_| anyhow!("server down"))?;
     rrx.recv().context("server dropped request")?.map_err(|e| anyhow!(e))
 }
 
 pub(crate) fn request_stats(tx: &Sender<Request>) -> Result<ServeStats> {
     let (rtx, rrx) = mpsc::channel();
-    tx.send(Request::Stats { resp: rtx })
+    tx.send(Request::Stats { resp: rtx.into() })
         .map_err(|_| anyhow!("server down"))?;
     rrx.recv().context("server dropped stats request")
 }
 
 struct PendingScore {
     tokens: Vec<i32>,
-    resp: Sender<Result<f64, String>>,
+    resp: ReplySink<Result<f64, String>>,
     arrived: Instant,
 }
 
@@ -206,7 +260,7 @@ struct PendingScore {
 struct PendingGenerate {
     prompt: Vec<i32>,
     max_new: usize,
-    resp: Sender<Result<Vec<i32>, String>>,
+    resp: ReplySink<Result<Vec<i32>, String>>,
     arrived: Instant,
 }
 
@@ -221,7 +275,7 @@ struct GenLane {
     pending: VecDeque<i32>,
     out: Vec<i32>,
     max_new: usize,
-    resp: Sender<Result<Vec<i32>, String>>,
+    resp: ReplySink<Result<Vec<i32>, String>>,
     arrived: Instant,
     /// Free the engine lane (resets=1) on the next step — set on
     /// admission and on window slides.
@@ -263,19 +317,29 @@ impl DecodeSession {
         self.slots.iter().any(|s| s.is_none())
     }
 
-    /// Place a validated request into a free lane. The lane is marked
+    /// Place a validated request into a free lane, or hand it back
+    /// (`Some(req)`) when every lane is occupied — the caller re-queues
+    /// it and retries at the next step boundary instead of this
+    /// panicking on a racy `has_free_lane` check. The lane is marked
     /// for reset so the engine clears whatever the previous occupant
     /// left in the cache rows.
-    fn admit(&mut self, req: PendingGenerate) {
-        let slot = self
-            .slots
-            .iter_mut()
-            .find(|s| s.is_none())
-            .expect("admit requires a free lane");
+    fn admit(&mut self, req: PendingGenerate) -> Option<PendingGenerate> {
+        let Some(slot) = self.slots.iter_mut().find(|s| s.is_none()) else {
+            return Some(req);
+        };
         let PendingGenerate { prompt, max_new, resp, arrived } = req;
-        // only the last `s` prompt tokens can influence the next token
-        // (the model's context window) — skip the rest entirely
-        let start = prompt.len().saturating_sub(self.s);
+        // keep the last `s-1` prompt tokens, not `s`: a full-`s`
+        // admission is degenerate — the window hits capacity the
+        // moment the first token generates, so the *second* token
+        // triggers an immediate slide and re-prefills all `s` rows.
+        // With `s-1` kept, token one decodes from a window with a free
+        // row and token two costs a single step. The full-recompute
+        // oracle truncates its prompt identically
+        // (`generate_full_recompute`), keeping the two paths bitwise
+        // matched across the s-1/s/s+1 prompt boundary (pinned in
+        // serve_test.rs). `.max(1)` keeps a 1-token context if s == 1.
+        let keep = (self.s - 1).max(1);
+        let start = prompt.len().saturating_sub(keep);
         *slot = Some(GenLane {
             window: Vec::with_capacity(self.s),
             pending: prompt[start..].iter().copied().collect(),
@@ -285,6 +349,7 @@ impl DecodeSession {
             arrived,
             reset: true,
         });
+        None
     }
 
     /// Advance every active lane by one token with a single engine
@@ -373,7 +438,7 @@ impl DecodeSession {
         stats
             .latencies_ms
             .push(Instant::now().duration_since(l.arrived).as_secs_f64() * 1e3);
-        let _ = l.resp.send(result);
+        l.resp.send(result);
         shared.dec_pending();
     }
 }
@@ -408,9 +473,12 @@ pub(crate) fn worker(
     shared: Arc<WorkerShared>,
 ) -> Result<()> {
     let _alive = AliveGuard(shared.clone());
-    // per-worker pool share: N shards each get 1/N of the machine
-    // (min 1) unless --threads-per-worker pins an explicit count, so
-    // a fleet's kernels never oversubscribe the cores N-fold
+    // fallback pool share for a directly-started worker
+    // ([`ServerHandle`], n_workers == 1). Sharded fronts never rely on
+    // this truncating division — it strands `num_threads % n_workers`
+    // cores — they pin `threads_per_worker` per shard from
+    // [`super::router::lane_split`], which hands the remainder out
+    // one core at a time.
     let threads = cfg.threads_per_worker.unwrap_or_else(|| {
         (crate::dyad::kernel::num_threads() / cfg.n_workers.max(1)).max(1)
     });
@@ -427,23 +495,50 @@ pub(crate) fn worker(
         .manifest()
         .artifact(&format!("{}/{}/train_k1", cfg.arch, cfg.variant))?
         .clone();
-    let state = match &cfg.checkpoint_dir {
-        Some(dir) => {
-            let mgr = CheckpointManager::new(dir);
-            if mgr.has_state() {
-                mgr.load_state(backend.as_ref(), &train_spec)?
-            } else {
-                TrainState::init(backend.as_ref(), &train_spec, cfg.seed)?
+    // three ways to source the parameters, two memory shapes: a DYW1
+    // weight file maps read-only (fleet shards all share one set of
+    // page-cache pages — `weight_mapped_bytes`), while checkpoint /
+    // fresh-init params live on this process's heap
+    // (`weight_heap_bytes`). Serving never needs the optimizer
+    // moments, so the weight-file path skips allocating them entirely.
+    let (param_handles, weight_heap_bytes, weight_mapped_bytes): (Vec<DeviceTensor>, u64, u64) =
+        match &cfg.weights_file {
+            Some(path) => {
+                let weights = MappedWeights::open(path)
+                    .with_context(|| format!("open weight file {}", path.display()))?;
+                let handles = weights.param_handles(backend.as_ref(), &train_spec)?;
+                let bytes = weights.data_bytes();
+                if weights.is_shared() {
+                    (handles, 0, bytes)
+                } else {
+                    // mmap unavailable (non-Linux, miri): honest
+                    // accounting — the fallback is a private heap copy
+                    (handles, bytes, 0)
+                }
             }
-        }
-        None => TrainState::init(backend.as_ref(), &train_spec, cfg.seed)?,
-    };
+            None => {
+                let state = match &cfg.checkpoint_dir {
+                    Some(dir) => {
+                        let mgr = CheckpointManager::new(dir);
+                        if mgr.has_state() {
+                            mgr.load_state(backend.as_ref(), &train_spec)?
+                        } else {
+                            TrainState::init(backend.as_ref(), &train_spec, cfg.seed)?
+                        }
+                    }
+                    None => TrainState::init(backend.as_ref(), &train_spec, cfg.seed)?,
+                };
+                let handles = state.param_handles().to_vec();
+                let bytes = handles.iter().map(|h| h.size_bytes() as u64).sum();
+                (handles, bytes, 0)
+            }
+        };
     // weights resident per worker: bound once here, reused by every
     // request; the hot path uploads only the padded batches
     let mut score_bind = Bindings::new(score_art.as_ref());
-    score_bind.bind_role(Role::Param, state.param_handles())?;
+    score_bind.bind_role(Role::Param, &param_handles)?;
     let mut logits_bind = Bindings::new(logits_art.as_ref());
-    logits_bind.bind_role(Role::Param, state.param_handles())?;
+    logits_bind.bind_role(Role::Param, &param_handles)?;
     // the decode artifact gets weights AND its KV cache bound
     // resident: the cache handle never crosses the host boundary, so
     // per decode step only the token/reset lanes and the logits rows
@@ -456,7 +551,7 @@ pub(crate) fn worker(
     let decode_bind = match &decode_art {
         Some(art) => {
             let mut bnd = Bindings::new(art.as_ref());
-            bnd.bind_role(Role::Param, state.param_handles())?;
+            bnd.bind_role(Role::Param, &param_handles)?;
             bnd.bind_named("kv_cache", art.make_decode_cache()?)?;
             Some(bnd)
         }
@@ -476,6 +571,13 @@ pub(crate) fn worker(
     let mut queue: Vec<PendingScore> = Vec::new();
     let mut stats = ServeStats::default();
     let started = Timer::start();
+    // wall-clock anchor for the stats span: fleet-level merge unions
+    // [t0, t0+wall] activity spans instead of max-ing wall_s, which
+    // overstated throughput for staggered workers (see ServeStats)
+    let t0_epoch = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
 
     let flush = |queue: &mut Vec<PendingScore>, stats: &mut ServeStats| {
         if queue.is_empty() {
@@ -499,14 +601,14 @@ pub(crate) fn worker(
                     stats
                         .latencies_ms
                         .push(now.duration_since(p.arrived).as_secs_f64() * 1e3);
-                    let _ = p.resp.send(Ok(sc));
+                    p.resp.send(Ok(sc));
                     shared.dec_pending();
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
                 for p in queue.drain(..) {
-                    let _ = p.resp.send(Err(msg.clone()));
+                    p.resp.send(Err(msg.clone()));
                     shared.dec_pending();
                 }
             }
@@ -568,13 +670,13 @@ pub(crate) fn worker(
                         stats
                             .latencies_ms
                             .push(Instant::now().duration_since(t).as_secs_f64() * 1e3);
-                        let _ = resp.send(out.map_err(|e| format!("{e:#}")));
+                        resp.send(out.map_err(|e| format!("{e:#}")));
                         shared.dec_pending();
                     } else if let Err(msg) = validate_prompt(&prompt, vocab) {
-                        let _ = resp.send(Err(msg));
+                        resp.send(Err(msg));
                         shared.dec_pending();
                     } else if max_new == 0 {
-                        let _ = resp.send(Ok(Vec::new()));
+                        resp.send(Ok(Vec::new()));
                         shared.dec_pending();
                     } else {
                         gen_queue.push_back(PendingGenerate {
@@ -589,7 +691,10 @@ pub(crate) fn worker(
                     let mut snap = stats.clone();
                     snap.wall_s = started.elapsed_s();
                     snap.workers = 1;
-                    let _ = resp.send(snap);
+                    snap.spans = vec![(t0_epoch, t0_epoch + snap.wall_s)];
+                    snap.weight_heap_bytes = weight_heap_bytes;
+                    snap.weight_mapped_bytes = weight_mapped_bytes;
+                    resp.send(snap);
                 }
                 Request::Shutdown => shutdown = true,
                 Request::Crash => {
@@ -609,12 +714,7 @@ pub(crate) fn worker(
             // before shutdown still gets a real reply
             if let Some(bind) = &decode_bind {
                 while session.active() > 0 || !gen_queue.is_empty() {
-                    while session.has_free_lane() {
-                        match gen_queue.pop_front() {
-                            Some(r) => session.admit(r),
-                            None => break,
-                        }
-                    }
+                    admit_waiting(&mut session, &mut gen_queue);
                     session.step(backend.as_ref(), bind, &mut stats, &shared);
                 }
             }
@@ -626,15 +726,24 @@ pub(crate) fn worker(
         // cache lanes at the step boundary, then advance every active
         // lane by one token
         if let Some(bind) = &decode_bind {
-            while session.has_free_lane() {
-                match gen_queue.pop_front() {
-                    Some(r) => session.admit(r),
-                    None => break,
-                }
-            }
+            admit_waiting(&mut session, &mut gen_queue);
             if session.active() > 0 {
                 session.step(backend.as_ref(), bind, &mut stats, &shared);
             }
+        }
+    }
+}
+
+/// Move waiting generations into free cache lanes, preserving FIFO
+/// order. If [`DecodeSession::admit`] hands a request back (no lane
+/// free after all — the guarded path that used to be a panic), it goes
+/// back to the queue head for the next step boundary.
+fn admit_waiting(session: &mut DecodeSession, gen_queue: &mut VecDeque<PendingGenerate>) {
+    while session.has_free_lane() {
+        let Some(r) = gen_queue.pop_front() else { break };
+        if let Some(back) = session.admit(r) {
+            gen_queue.push_front(back);
+            break;
         }
     }
 }
@@ -657,6 +766,14 @@ fn generate_full_recompute(
     }
     let b = bind.spec().meta_usize("batch")?;
     let mut tokens = prompt;
+    // admission context is the last s-1 prompt tokens, matching
+    // `DecodeSession::admit` bit for bit (the incremental path is
+    // parity-tested against this loop); generated tokens then extend
+    // the window up to `s` before the slide below kicks in
+    let keep = (s - 1).max(1);
+    if tokens.len() > keep {
+        tokens.drain(..tokens.len() - keep);
+    }
     let mut out = Vec::new();
     for _ in 0..max_new {
         let window: Vec<i32> = if tokens.len() > s {
@@ -686,4 +803,74 @@ fn generate_full_recompute(
         }
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(prompt: Vec<i32>) -> (PendingGenerate, Receiver<Result<Vec<i32>, String>>) {
+        let (tx, rx) = mpsc::channel();
+        let req = PendingGenerate {
+            prompt,
+            max_new: 4,
+            resp: tx.into(),
+            arrived: Instant::now(),
+        };
+        (req, rx)
+    }
+
+    /// Regression for the panicking lane claim: at exactly-full
+    /// capacity `admit` hands the request back instead of
+    /// `expect`-crashing the worker, and the queue helper re-queues it
+    /// at the head.
+    #[test]
+    fn admit_at_full_capacity_returns_request() {
+        let mut session = DecodeSession::new(2, 8);
+        let (a, _arx) = pending(vec![1]);
+        let (b, _brx) = pending(vec![2]);
+        assert!(session.admit(a).is_none());
+        assert!(session.admit(b).is_none());
+        assert!(!session.has_free_lane());
+        let (c, _crx) = pending(vec![3, 4, 5]);
+        let back = session.admit(c).expect("full session must hand the request back");
+        assert_eq!(back.prompt, vec![3, 4, 5]);
+
+        let mut q: VecDeque<PendingGenerate> = VecDeque::new();
+        q.push_back(back);
+        admit_waiting(&mut session, &mut q);
+        assert_eq!(q.len(), 1, "request stays queued while lanes are full");
+        assert_eq!(q[0].prompt, vec![3, 4, 5], "and stays at the queue head");
+    }
+
+    /// Regression for degenerate full-window admission: the context a
+    /// long prompt keeps is the last `s-1` tokens (one free cache row
+    /// for the first generated token), never the full `s`.
+    #[test]
+    fn admit_keeps_last_s_minus_one_tokens() {
+        let s = 8;
+        for plen in [s - 1, s, s + 1, 3 * s] {
+            let mut session = DecodeSession::new(1, s);
+            let prompt: Vec<i32> = (0..plen as i32).collect();
+            let (req, _rx) = pending(prompt.clone());
+            assert!(session.admit(req).is_none());
+            let lane = session.slots[0].as_ref().unwrap();
+            let keep = plen.min(s - 1);
+            let expect: Vec<i32> = prompt[plen - keep..].to_vec();
+            let got: Vec<i32> = lane.pending.iter().copied().collect();
+            assert_eq!(got, expect, "prompt len {plen}");
+            assert!(lane.pending.len() < s, "admission must leave a free cache row");
+        }
+    }
+
+    /// s == 1 edge: `.max(1)` keeps a context token instead of
+    /// admitting an empty pending queue (which would panic in `step`).
+    #[test]
+    fn admit_with_single_token_window_keeps_one() {
+        let mut session = DecodeSession::new(1, 1);
+        let (req, _rx) = pending(vec![5, 6, 7]);
+        assert!(session.admit(req).is_none());
+        let lane = session.slots[0].as_ref().unwrap();
+        assert_eq!(lane.pending.iter().copied().collect::<Vec<_>>(), vec![7]);
+    }
 }

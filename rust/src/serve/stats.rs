@@ -7,7 +7,7 @@
 
 use crate::util::stats::Summary;
 
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct ServeStats {
     pub latencies_ms: Vec<f64>,
     pub batch_sizes: Vec<usize>,
@@ -16,6 +16,20 @@ pub struct ServeStats {
     /// Worker snapshots folded into this view (1 for a single worker's
     /// own snapshot, the live-shard count for a fleet merge).
     pub workers: usize,
+    /// `[start, end)` activity spans in epoch seconds, one per worker
+    /// snapshot folded in. [`merge`](Self::merge) derives the fleet
+    /// wall clock from the *union* of these instead of `max(wall_s)` —
+    /// max silently dropped the non-overlap when workers start
+    /// staggered, overstating fleet throughput.
+    pub spans: Vec<(f64, f64)>,
+    /// Parameter bytes resident on this worker's own heap (fresh-init
+    /// or checkpoint weights). Sums across a fleet merge: each worker
+    /// pays for its private copy.
+    pub weight_heap_bytes: u64,
+    /// Parameter bytes served from a read-only shared mapping
+    /// (`runtime::catalog::mmap`). Max-es across a fleet merge: every
+    /// shard maps the same file, so the fleet pays once.
+    pub weight_mapped_bytes: u64,
 }
 
 impl ServeStats {
@@ -49,15 +63,56 @@ impl ServeStats {
 
     /// Fold another worker's snapshot into this one. Latency, batch
     /// and exec samples concatenate (so every percentile is over the
-    /// union); wall time is the max, since workers run concurrently —
-    /// fleet throughput is total requests over the longest-lived
-    /// worker's wall clock.
+    /// union); wall time is the length of the **union of activity
+    /// spans** — workers run concurrently, but `max(wall_s)` (the old
+    /// rule) pretended they were fully overlapped, which overstated
+    /// fleet throughput whenever workers start or die staggered
+    /// (disjoint 2 s + 3 s spans are 5 s of serving, not 3 s).
+    /// Snapshots without spans (older producers, hand-built stats)
+    /// fall back to the max rule, documented and clamped: the merged
+    /// wall clock is never shorter than either input's.
     pub fn merge(&mut self, other: &ServeStats) {
         self.latencies_ms.extend_from_slice(&other.latencies_ms);
         self.batch_sizes.extend_from_slice(&other.batch_sizes);
         self.exec_ms.extend_from_slice(&other.exec_ms);
-        self.wall_s = self.wall_s.max(other.wall_s);
+        self.spans.extend_from_slice(&other.spans);
+        let unioned = Self::union_len(&self.spans);
+        self.wall_s = unioned.max(self.wall_s.max(other.wall_s));
         self.workers += other.workers;
+        self.weight_heap_bytes += other.weight_heap_bytes;
+        self.weight_mapped_bytes = self.weight_mapped_bytes.max(other.weight_mapped_bytes);
+    }
+
+    /// Total length of the union of `[start, end)` spans (overlap
+    /// counted once). Degenerate spans (end <= start) contribute 0.
+    fn union_len(spans: &[(f64, f64)]) -> f64 {
+        let mut sorted: Vec<(f64, f64)> =
+            spans.iter().copied().filter(|(a, b)| b > a).collect();
+        sorted.sort_by(|x, y| x.0.total_cmp(&y.0));
+        let mut total = 0.0;
+        let mut cur: Option<(f64, f64)> = None;
+        for (a, b) in sorted {
+            match &mut cur {
+                Some((_, ce)) if a <= *ce => *ce = ce.max(b),
+                _ => {
+                    if let Some((cs, ce)) = cur {
+                        total += ce - cs;
+                    }
+                    cur = Some((a, b));
+                }
+            }
+        }
+        if let Some((cs, ce)) = cur {
+            total += ce - cs;
+        }
+        total
+    }
+
+    /// Fleet-resident parameter bytes: every worker's private heap
+    /// copy plus the shared mapping (counted once — that is the point
+    /// of `serve --weights`).
+    pub fn weight_resident_bytes(&self) -> u64 {
+        self.weight_heap_bytes + self.weight_mapped_bytes
     }
 
     /// Render per-shard summary lines from [`Router::worker_stats`]
@@ -120,6 +175,7 @@ mod tests {
             exec_ms: vec![0.5, 0.6],
             wall_s: 2.0,
             workers: 1,
+            ..Default::default()
         };
         assert_eq!(s.requests(), 4);
         assert_eq!(s.mean_batch_occupancy(), 2.0);
@@ -155,6 +211,7 @@ mod tests {
             exec_ms: vec![0.5],
             wall_s: 2.0,
             workers: 1,
+            ..Default::default()
         };
         let b = ServeStats {
             latencies_ms: vec![3.0, 4.0, 5.0],
@@ -162,6 +219,7 @@ mod tests {
             exec_ms: vec![0.7, 0.9],
             wall_s: 3.0,
             workers: 1,
+            ..Default::default()
         };
         fleet.merge(&a);
         fleet.merge(&b);
@@ -173,6 +231,96 @@ mod tests {
         // fleet throughput: total requests over the longest wall
         assert!((fleet.throughput_rps() - 5.0 / 3.0).abs() < 1e-12);
         assert!(fleet.render().contains("workers=2"));
+    }
+
+    fn span_stats(span: (f64, f64), requests: usize) -> ServeStats {
+        ServeStats {
+            latencies_ms: vec![1.0; requests],
+            wall_s: span.1 - span.0,
+            workers: 1,
+            spans: vec![span],
+            ..Default::default()
+        }
+    }
+
+    /// Disjoint spans: staggered workers serving 2 s then 3 s are 5 s
+    /// of fleet serving. The old `max(wall_s)` rule reported 3 s —
+    /// overstating throughput by the gap.
+    #[test]
+    fn merge_disjoint_spans_sum() {
+        let mut fleet = ServeStats::default();
+        fleet.merge(&span_stats((0.0, 2.0), 2));
+        fleet.merge(&span_stats((5.0, 8.0), 3));
+        assert!((fleet.wall_s - 5.0).abs() < 1e-12, "wall_s = {}", fleet.wall_s);
+        assert!((fleet.throughput_rps() - 1.0).abs() < 1e-12);
+    }
+
+    /// Overlapping spans count the overlap once — concurrent workers
+    /// do not stretch the fleet wall clock.
+    #[test]
+    fn merge_overlapping_spans_union() {
+        let mut fleet = ServeStats::default();
+        fleet.merge(&span_stats((0.0, 3.0), 1));
+        fleet.merge(&span_stats((1.0, 4.0), 1));
+        assert!((fleet.wall_s - 4.0).abs() < 1e-12, "wall_s = {}", fleet.wall_s);
+        // nested span adds nothing
+        fleet.merge(&span_stats((1.5, 2.0), 1));
+        assert!((fleet.wall_s - 4.0).abs() < 1e-12, "wall_s = {}", fleet.wall_s);
+    }
+
+    /// Zero-wall / degenerate spans stay well-defined, and merge order
+    /// does not matter.
+    #[test]
+    fn merge_zero_wall_and_order_independent() {
+        let mut fleet = ServeStats::default();
+        fleet.merge(&span_stats((2.0, 2.0), 0));
+        assert_eq!(fleet.wall_s, 0.0);
+        assert_eq!(fleet.throughput_rps(), 0.0);
+
+        let parts = [
+            span_stats((0.0, 1.0), 1),
+            span_stats((0.5, 2.5), 1),
+            span_stats((4.0, 5.0), 1),
+        ];
+        let mut fwd = ServeStats::default();
+        let mut rev = ServeStats::default();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        for p in parts.iter().rev() {
+            rev.merge(p);
+        }
+        assert!((fwd.wall_s - rev.wall_s).abs() < 1e-12);
+        assert!((fwd.wall_s - 3.5).abs() < 1e-12, "wall_s = {}", fwd.wall_s);
+    }
+
+    /// Span-less snapshots (hand-built stats, older producers) keep
+    /// the documented max-rule fallback; mixing in spans never shrinks
+    /// the wall clock below either input.
+    #[test]
+    fn merge_spanless_falls_back_to_max() {
+        let mut fleet = ServeStats::default();
+        fleet.merge(&ServeStats { wall_s: 2.0, workers: 1, ..Default::default() });
+        fleet.merge(&span_stats((0.0, 1.0), 1));
+        assert!((fleet.wall_s - 2.0).abs() < 1e-12, "wall_s = {}", fleet.wall_s);
+    }
+
+    /// Weight accounting: private heap copies sum across shards, the
+    /// shared mapping is paid once.
+    #[test]
+    fn merge_weight_bytes_heap_sums_mapped_maxes() {
+        let mut fleet = ServeStats::default();
+        for _ in 0..3 {
+            fleet.merge(&ServeStats {
+                workers: 1,
+                weight_heap_bytes: 100,
+                weight_mapped_bytes: 4096,
+                ..Default::default()
+            });
+        }
+        assert_eq!(fleet.weight_heap_bytes, 300);
+        assert_eq!(fleet.weight_mapped_bytes, 4096);
+        assert_eq!(fleet.weight_resident_bytes(), 300 + 4096);
     }
 
     #[test]

@@ -1,0 +1,446 @@
+//! Read-only memory-mapped buffers and f32 views over them.
+//!
+//! The fleet's shared-weight story (ISSUE: Fig. 8 / Table 11 turned
+//! into a serving win) needs N shard *processes* to map one weight
+//! file instead of each holding a private heap copy. The container
+//! ships no `libc`/`memmap2`, so [`Mapping`] issues the `mmap`/
+//! `munmap` syscalls directly via inline asm on Linux x86_64/aarch64 —
+//! `PROT_READ` + `MAP_SHARED`, so every process shares the same page
+//! cache pages — and falls back to a private 4-byte-aligned heap copy
+//! everywhere else (other targets, Miri, or an mmap failure).
+//! [`Mapping::is_shared`] reports which path was taken so memory
+//! accounting ([`crate::serve::ServeStats`]) never lies about sharing.
+//!
+//! [`MappedF32`] is a bounds- and alignment-checked `&[f32]` view into
+//! a mapping; `tensor::Data::F32Mapped` wraps one so a mapped weight
+//! tensor flows through the native backend zero-copy.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+/// The targets where the raw-syscall mmap path is compiled in.
+#[cfg(all(
+    target_os = "linux",
+    not(miri),
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+macro_rules! mmap_supported {
+    () => {
+        true
+    };
+}
+#[cfg(not(all(
+    target_os = "linux",
+    not(miri),
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+macro_rules! mmap_supported {
+    () => {
+        false
+    };
+}
+
+/// An immutable byte buffer: a shared read-only file mapping where
+/// supported, a private aligned heap copy otherwise.
+pub struct Mapping(Repr);
+
+enum Repr {
+    #[cfg(all(
+        target_os = "linux",
+        not(miri),
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    Mmap { ptr: *const u8, len: usize },
+    /// Heap fallback. Backed by `u32` words so any 4-byte-aligned
+    /// offset yields a validly aligned `f32` view; `len` is the real
+    /// byte length (the last word may be padding).
+    Heap { words: Vec<u32>, len: usize },
+}
+
+// SAFETY: the mapped pages are PROT_READ and never written through
+// this type (there is no &mut accessor), so concurrent reads from any
+// thread are safe; the heap variant is an ordinary owned Vec. The
+// mapping is unmapped only in Drop, which runs once.
+unsafe impl Send for Mapping {}
+// SAFETY: all accessors take &self and only read; see Send above.
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `path` read-only (falling back to a heap copy where mmap is
+    /// unavailable or fails). The `Arc` is what views hang on to.
+    pub fn open(path: &Path) -> Result<Arc<Mapping>> {
+        #[cfg(all(
+            target_os = "linux",
+            not(miri),
+            any(target_arch = "x86_64", target_arch = "aarch64")
+        ))]
+        {
+            use std::os::fd::AsRawFd;
+            let file = std::fs::File::open(path)
+                .with_context(|| format!("open {}", path.display()))?;
+            let len = file.metadata()?.len() as usize;
+            if len > 0 {
+                // SAFETY: fd is a live O_RDONLY file descriptor for the
+                // duration of the call; a PROT_READ MAP_SHARED mapping
+                // of it cannot alias any Rust-owned memory. On failure
+                // the syscall returns an errno and nothing was mapped.
+                if let Ok(ptr) = unsafe { sys::mmap_readonly(len, file.as_raw_fd()) } {
+                    return Ok(Arc::new(Mapping(Repr::Mmap { ptr, len })));
+                }
+            }
+        }
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Ok(Arc::new(Mapping::from_heap_bytes(bytes)))
+    }
+
+    /// Wrap bytes in the aligned heap representation (tests, fallback).
+    fn from_heap_bytes(bytes: Vec<u8>) -> Mapping {
+        let len = bytes.len();
+        let mut words = vec![0u32; len.div_ceil(4)];
+        for (i, chunk) in bytes.chunks(4).enumerate() {
+            let mut b = [0u8; 4];
+            b[..chunk.len()].copy_from_slice(chunk);
+            words[i] = u32::from_ne_bytes(b);
+        }
+        Mapping(Repr::Heap { words, len })
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.0 {
+            #[cfg(all(
+                target_os = "linux",
+                not(miri),
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Repr::Mmap { len, .. } => *len,
+            Repr::Heap { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this buffer is a real shared file mapping (page cache
+    /// shared across processes) rather than a private heap copy.
+    pub fn is_shared(&self) -> bool {
+        match &self.0 {
+            #[cfg(all(
+                target_os = "linux",
+                not(miri),
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Repr::Mmap { .. } => true,
+            Repr::Heap { .. } => false,
+        }
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        match &self.0 {
+            #[cfg(all(
+                target_os = "linux",
+                not(miri),
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            // SAFETY: ptr..ptr+len is the live PROT_READ mapping
+            // established in `open`; it stays mapped until Drop, which
+            // cannot run while &self is borrowed.
+            Repr::Mmap { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Repr::Heap { words, len } => {
+                // SAFETY: `words` owns at least `len` bytes (len <=
+                // words.len()*4) and lives as long as &self; u8 has no
+                // alignment or validity requirements.
+                unsafe { std::slice::from_raw_parts(words.as_ptr().cast::<u8>(), *len) }
+            }
+        }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        match &self.0 {
+            #[cfg(all(
+                target_os = "linux",
+                not(miri),
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Repr::Mmap { ptr, len } => {
+                // SAFETY: ptr/len are exactly what mmap returned; Drop
+                // runs once and no view can outlive the owning Arc.
+                unsafe { sys::munmap(*ptr, *len) };
+            }
+            Repr::Heap { .. } => {}
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mapping")
+            .field("len", &self.len())
+            .field("shared", &self.is_shared())
+            .finish()
+    }
+}
+
+/// Raw Linux mmap/munmap via inline asm — no libc in the container.
+#[cfg(all(
+    target_os = "linux",
+    not(miri),
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+mod sys {
+    const PROT_READ: usize = 1;
+    const MAP_SHARED: usize = 1;
+
+    /// `mmap(NULL, len, PROT_READ, MAP_SHARED, fd, 0)`.
+    ///
+    /// # Safety
+    /// `fd` must be a valid readable file descriptor; the caller owns
+    /// the returned region and must `munmap` it exactly once.
+    pub(super) unsafe fn mmap_readonly(len: usize, fd: i32) -> Result<*const u8, i64> {
+        let ret: i64;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the mmap syscall (nr 9) with these operands only
+        // creates a new mapping; rcx/r11 are declared clobbered per the
+        // syscall ABI and no Rust memory is read or written.
+        unsafe {
+            core::arch::asm!(
+                "syscall",
+                inlateout("rax") 9i64 => ret,
+                in("rdi") 0usize,
+                in("rsi") len,
+                in("rdx") PROT_READ,
+                in("r10") MAP_SHARED,
+                in("r8") fd as i64,
+                in("r9") 0usize,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above via svc #0 with the aarch64 mmap nr (222).
+        unsafe {
+            core::arch::asm!(
+                "svc 0",
+                in("x8") 222i64,
+                inlateout("x0") 0usize => ret,
+                in("x1") len,
+                in("x2") PROT_READ,
+                in("x3") MAP_SHARED,
+                in("x4") fd as i64,
+                in("x5") 0usize,
+                options(nostack)
+            );
+        }
+        // kernel returns -errno in [-4095, -1] on failure
+        if (-4095..0).contains(&ret) {
+            Err(-ret)
+        } else {
+            Ok(ret as *const u8)
+        }
+    }
+
+    /// `munmap(ptr, len)`. Failure is ignored — there is no recovery
+    /// from a failed unmap at drop time.
+    ///
+    /// # Safety
+    /// `ptr`/`len` must be a region previously returned by
+    /// [`mmap_readonly`] and not yet unmapped; no live reference into
+    /// the region may exist.
+    pub(super) unsafe fn munmap(ptr: *const u8, len: usize) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: munmap (nr 11) only removes the caller-owned mapping.
+        unsafe {
+            core::arch::asm!(
+                "syscall",
+                inlateout("rax") 11i64 => _,
+                in("rdi") ptr,
+                in("rsi") len,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above via the aarch64 munmap nr (215).
+        unsafe {
+            core::arch::asm!(
+                "svc 0",
+                in("x8") 215i64,
+                inlateout("x0") ptr => _,
+                in("x1") len,
+                options(nostack)
+            );
+        }
+    }
+}
+
+/// A checked, immutable `&[f32]` view into a [`Mapping`].
+///
+/// Cloning shares the mapping (`Arc`); the constructor rejects
+/// out-of-bounds and misaligned views, so `as_slice` is always valid.
+/// Byte order is little-endian in the file — identical to the in-memory
+/// layout on every supported target.
+#[derive(Clone)]
+pub struct MappedF32 {
+    map: Arc<Mapping>,
+    byte_off: usize,
+    len: usize,
+}
+
+impl MappedF32 {
+    /// View `len` f32 values starting `byte_off` bytes into `map`.
+    pub fn new(map: Arc<Mapping>, byte_off: usize, len: usize) -> Result<MappedF32> {
+        let byte_len = len
+            .checked_mul(4)
+            .and_then(|b| b.checked_add(byte_off))
+            .ok_or_else(|| anyhow::anyhow!("mapped f32 view overflows usize"))?;
+        if byte_len > map.len() {
+            bail!(
+                "mapped f32 view [{byte_off}..{byte_len}) exceeds mapping of {} bytes",
+                map.len()
+            );
+        }
+        if (map.as_bytes().as_ptr() as usize + byte_off) % 4 != 0 {
+            bail!("mapped f32 view at byte offset {byte_off} is not 4-byte aligned");
+        }
+        Ok(MappedF32 { map, byte_off, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether the underlying storage is a shared file mapping.
+    pub fn is_shared(&self) -> bool {
+        self.map.is_shared()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: the constructor proved byte_off + len*4 fits in the
+        // mapping and that the base address is 4-byte aligned; the
+        // mapping outlives &self via the Arc, is never written, and
+        // every bit pattern is a valid f32.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.as_bytes().as_ptr().add(self.byte_off).cast::<f32>(),
+                self.len,
+            )
+        }
+    }
+}
+
+impl std::fmt::Debug for MappedF32 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedF32")
+            .field("len", &self.len)
+            .field("byte_off", &self.byte_off)
+            .field("shared", &self.is_shared())
+            .finish()
+    }
+}
+
+impl PartialEq for MappedF32 {
+    fn eq(&self, other: &MappedF32) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// True when this build can use real shared mappings (informational:
+/// the bench asserts the fleet memory claim only where this holds).
+pub fn mmap_available() -> bool {
+    mmap_supported!()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dyad-repro-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn write_f32s(name: &str, values: &[f32]) -> std::path::PathBuf {
+        let path = tmpfile(name);
+        let bytes: Vec<u8> = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn mapping_roundtrips_values() {
+        let vals = [1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 1e30];
+        let path = write_f32s("mapped_roundtrip.bin", &vals);
+        let map = Mapping::open(&path).unwrap();
+        assert_eq!(map.len(), vals.len() * 4);
+        let view = MappedF32::new(map.clone(), 0, vals.len()).unwrap();
+        assert_eq!(view.as_slice(), &vals);
+        // offset view
+        let tail = MappedF32::new(map, 8, 3).unwrap();
+        assert_eq!(tail.as_slice(), &vals[2..]);
+    }
+
+    #[test]
+    fn linux_mappings_are_shared() {
+        let path = write_f32s("mapped_shared.bin", &[1.0, 2.0]);
+        let map = Mapping::open(&path).unwrap();
+        // on the CI target the real mmap path must be taken — the
+        // fleet memory claim depends on it
+        assert_eq!(map.is_shared(), mmap_available());
+    }
+
+    #[test]
+    fn heap_fallback_matches_mmap() {
+        let vals = [3.25f32, -0.5, 42.0];
+        let path = write_f32s("mapped_fallback.bin", &vals);
+        let bytes = std::fs::read(&path).unwrap();
+        let heap = Arc::new(Mapping::from_heap_bytes(bytes));
+        assert!(!heap.is_shared());
+        assert_eq!(heap.as_bytes(), std::fs::read(&path).unwrap().as_slice());
+        let view = MappedF32::new(heap, 0, vals.len()).unwrap();
+        assert_eq!(view.as_slice(), &vals);
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_and_misaligned() {
+        let path = write_f32s("mapped_bounds.bin", &[1.0, 2.0, 3.0]);
+        let map = Mapping::open(&path).unwrap();
+        assert!(MappedF32::new(map.clone(), 0, 4).is_err());
+        assert!(MappedF32::new(map.clone(), 8, 2).is_err());
+        assert!(MappedF32::new(map.clone(), 2, 1).is_err(), "misaligned offset");
+        assert!(MappedF32::new(map, usize::MAX, 2).is_err(), "overflow");
+    }
+
+    #[test]
+    fn empty_file_is_fine() {
+        let path = tmpfile("mapped_empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let map = Mapping::open(&path).unwrap();
+        assert!(map.is_empty());
+        let view = MappedF32::new(map, 0, 0).unwrap();
+        assert!(view.as_slice().is_empty());
+    }
+
+    #[test]
+    fn many_clones_share_one_mapping() {
+        let path = write_f32s("mapped_clone.bin", &[7.0; 16]);
+        let map = Mapping::open(&path).unwrap();
+        let v1 = MappedF32::new(map.clone(), 0, 16).unwrap();
+        let v2 = v1.clone();
+        assert_eq!(v1, v2);
+        assert_eq!(v1.as_slice().as_ptr(), v2.as_slice().as_ptr());
+        drop(map);
+        assert_eq!(v2.as_slice()[0], 7.0);
+    }
+}

@@ -1,7 +1,10 @@
-//! Host-side tensors and the DYT checkpoint format.
+//! Host-side tensors, the DYT checkpoint format, and read-only
+//! memory-mapped weight storage (`mapped`).
 
 mod io;
+pub mod mapped;
 mod tensor;
 
 pub use io::{load_checkpoint, save_checkpoint};
+pub use mapped::{MappedF32, Mapping};
 pub use tensor::{DType, InitSpec, Precision, Tensor};

@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Result};
 
+use super::mapped::MappedF32;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -104,10 +105,38 @@ pub struct Tensor {
     pub data: Data,
 }
 
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub enum Data {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    /// A read-only view into a shared weight mapping
+    /// ([`super::mapped::Mapping`]) — same `f32` semantics as `F32`
+    /// everywhere except mutation, which errors.
+    F32Mapped(MappedF32),
+}
+
+/// Equality is by dtype + element values, regardless of storage: a
+/// mapped tensor equals the heap tensor holding the same f32s.
+impl PartialEq for Data {
+    fn eq(&self, other: &Data) -> bool {
+        match (self, other) {
+            (Data::I32(a), Data::I32(b)) => a == b,
+            (Data::I32(_), _) | (_, Data::I32(_)) => false,
+            (a, b) => a.f32_slice() == b.f32_slice(),
+        }
+    }
+}
+
+impl Data {
+    /// The f32 elements for either f32 storage kind (panics on I32 —
+    /// callers have already matched dtype).
+    fn f32_slice(&self) -> &[f32] {
+        match self {
+            Data::F32(v) => v,
+            Data::F32Mapped(m) => m.as_slice(),
+            Data::I32(_) => unreachable!("f32_slice on i32 data"),
+        }
+    }
 }
 
 impl Tensor {
@@ -144,6 +173,22 @@ impl Tensor {
         Tensor { shape: vec![], data: Data::I32(vec![v]) }
     }
 
+    /// Wrap a read-only mapped f32 view as a tensor (no copy; clones
+    /// share the underlying [`super::mapped::Mapping`]).
+    pub fn from_mapped(shape: &[usize], view: MappedF32) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if view.len() != n {
+            bail!("shape {shape:?} needs {n} values, mapped view has {}", view.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: Data::F32Mapped(view) })
+    }
+
+    /// Whether this tensor's storage is a shared read-only mapping
+    /// (memory accounting: mapped bytes are shared across processes).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.data, Data::F32Mapped(_))
+    }
+
     /// Initialise a parameter tensor per spec (deterministic given rng).
     pub fn init(shape: &[usize], spec: &InitSpec, rng: &mut Rng) -> Tensor {
         let n: usize = shape.iter().product();
@@ -162,7 +207,7 @@ impl Tensor {
 
     pub fn dtype(&self) -> DType {
         match &self.data {
-            Data::F32(_) => DType::F32,
+            Data::F32(_) | Data::F32Mapped(_) => DType::F32,
             Data::I32(_) => DType::I32,
         }
     }
@@ -178,6 +223,7 @@ impl Tensor {
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             Data::F32(v) => Ok(v),
+            Data::F32Mapped(m) => Ok(m.as_slice()),
             _ => bail!("tensor is not f32"),
         }
     }
@@ -185,6 +231,9 @@ impl Tensor {
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             Data::F32(v) => Ok(v),
+            Data::F32Mapped(_) => {
+                bail!("memory-mapped tensor is read-only (shared weight storage)")
+            }
             _ => bail!("tensor is not f32"),
         }
     }
@@ -201,6 +250,9 @@ impl Tensor {
         match &self.data {
             Data::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
             Data::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Data::F32Mapped(m) => {
+                m.as_slice().iter().flat_map(|x| x.to_le_bytes()).collect()
+            }
         }
     }
 
@@ -304,6 +356,34 @@ mod tests {
         let v = t.as_f32().unwrap();
         let var: f32 = v.iter().map(|x| x * x).sum::<f32>() / 5000.0;
         assert!((var.sqrt() - 0.02).abs() < 0.002);
+    }
+
+    #[test]
+    fn mapped_tensor_behaves_like_f32() {
+        let dir = std::env::temp_dir().join("dyad-repro-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tensor_mapped.bin");
+        let vals = vec![1.0f32, -2.5, 3.25, 4.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let map = super::super::mapped::Mapping::open(&path).unwrap();
+        let view = MappedF32::new(map, 0, 4).unwrap();
+        let t = Tensor::from_mapped(&[2, 2], view.clone()).unwrap();
+        assert!(t.is_mapped());
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.numel(), 4);
+        assert_eq!(t.as_f32().unwrap(), &vals[..]);
+        // equality and byte export are storage-independent
+        let heap = Tensor::from_f32(&[2, 2], vals).unwrap();
+        assert_eq!(t, heap);
+        assert_eq!(heap, t);
+        assert_eq!(t.to_bytes(), heap.to_bytes());
+        assert!(!heap.is_mapped());
+        // mapped storage is read-only
+        let err = t.clone().as_f32_mut().unwrap_err().to_string();
+        assert!(err.contains("read-only"), "{err}");
+        // shape validation still applies
+        assert!(Tensor::from_mapped(&[3], view).is_err());
     }
 
     #[test]

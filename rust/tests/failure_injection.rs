@@ -194,7 +194,7 @@ fn serve_worker_death_yields_error_replies_not_hangs() {
         let (rtx, rrx) = mpsc::channel();
         router
             .sender()
-            .send(Request::Score { tokens: vec![5, 6, 7], resp: rtx })
+            .send(Request::Score { tokens: vec![5, 6, 7], resp: rtx.into() })
             .unwrap();
         match rrx.recv_timeout(Duration::from_secs(60)) {
             Ok(Ok(score)) => {
@@ -282,7 +282,7 @@ fn serve_all_workers_dead_is_an_error_not_a_hang() {
     let (rtx, rrx) = mpsc::channel();
     router
         .sender()
-        .send(Request::Score { tokens: vec![5, 6, 7], resp: rtx })
+        .send(Request::Score { tokens: vec![5, 6, 7], resp: rtx.into() })
         .unwrap();
     let reply = rrx
         .recv_timeout(Duration::from_secs(60))

@@ -1,0 +1,308 @@
+//! Process-shard fleet integration: shard *processes* (the `repro
+//! serve --shard` child mode) behind the `Fleet` front-end, driven
+//! in-process and over TCP. The contracts mirror the thread-level
+//! router's, one level up:
+//!
+//! * **Parity** — scoring/generation through N shard processes (over
+//!   the wire) is bitwise identical to the in-process single-worker
+//!   path, with heap-initialised and mmap'd (DYW1) weights alike.
+//! * **Death, not hangs** — a SIGKILL'd shard process is detected and
+//!   routed around; its in-flight requests resolve as errors naming
+//!   the shard; shutdown names the corpse instead of hanging on it.
+//! * **Graceful drain** — a clean shutdown answers everything already
+//!   accepted before the shard processes exit.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use dyad_repro::runtime::catalog::mmap;
+use dyad_repro::runtime::{open_backend_sized, BackendKind};
+use dyad_repro::serve::{Fleet, FleetConfig, NetClient, Request, ServeConfig, ServerHandle};
+use dyad_repro::tensor::Precision;
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        arch: "opt-mini".into(),
+        variant: "dyad_it".into(),
+        max_batch: 4,
+        window_ms: 3,
+        seed: 7,
+        ..ServeConfig::default()
+    }
+}
+
+fn start_fleet(n: usize, cfg: ServeConfig) -> Fleet {
+    let mut fc = FleetConfig::new(cfg, n, env!("CARGO_BIN_EXE_repro").into());
+    fc.heartbeat_ms = 50; // fast liveness detection for tests
+    Fleet::start(fc).expect("fleet start")
+}
+
+fn wait_for(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    cond()
+}
+
+fn tmp_weights(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join("dyad-repro-tests")
+        .join(format!("fleet-{tag}-{}.dyw", std::process::id()))
+}
+
+fn write_weights(path: &std::path::Path, seed: u64) {
+    let backend = open_backend_sized(
+        BackendKind::Native,
+        std::path::Path::new("artifacts"),
+        Precision::F32,
+        1,
+    )
+    .expect("open backend");
+    let spec = backend
+        .manifest()
+        .artifact("opt-mini/dyad_it/train_k1")
+        .expect("train artifact")
+        .clone();
+    mmap::write_init(path, &spec, seed).expect("write DYW1 weights");
+}
+
+/// Scoring and generation through 2 shard processes — every request a
+/// TCP round-trip through the wire format — must be **bitwise**
+/// identical to the in-process single-worker path: same seed, same
+/// resident weights per shard, f64 scores shipped via `to_le_bytes`.
+#[test]
+fn fleet_matches_in_process_single_worker_bitwise() {
+    let sents = dyad_repro::data::sample_sentences(10, 1);
+    let server = ServerHandle::start(cfg());
+    let want_scores: Vec<u64> =
+        sents.iter().map(|t| server.score(t.clone()).unwrap().to_bits()).collect();
+    let want_gen = server.generate(vec![5, 6, 7], 5).unwrap();
+    server.shutdown().unwrap();
+
+    let fleet = start_fleet(2, cfg());
+    let got_scores: Vec<u64> =
+        sents.iter().map(|t| fleet.score(t.clone()).unwrap().to_bits()).collect();
+    assert_eq!(
+        got_scores, want_scores,
+        "fleet scoring over TCP must be bitwise identical to in-process"
+    );
+    assert_eq!(
+        fleet.generate(vec![5, 6, 7], 5).unwrap(),
+        want_gen,
+        "fleet generation over TCP must match in-process"
+    );
+    let stats = fleet.stats().unwrap();
+    assert_eq!(stats.requests(), 11, "10 scores + 1 generate");
+    assert_eq!(stats.workers, 2, "both shard processes answered the gather");
+    assert!(fleet.dead_shards().is_empty());
+    fleet.shutdown().unwrap();
+}
+
+/// Weight sourcing must not move a bit: shards serving from a shared
+/// read-only DYW1 map (written by replaying the same seeded init)
+/// score identically to heap-initialised workers, and the fleet stats
+/// prove the memory shape — mapped bytes counted once, zero heap
+/// weight bytes.
+#[test]
+fn fleet_mmap_weights_match_heap_init_bitwise() {
+    let weights = tmp_weights("parity");
+    write_weights(&weights, 7);
+    let sents = dyad_repro::data::sample_sentences(8, 2);
+    let server = ServerHandle::start(cfg());
+    let want: Vec<u64> =
+        sents.iter().map(|t| server.score(t.clone()).unwrap().to_bits()).collect();
+    server.shutdown().unwrap();
+
+    let fleet = start_fleet(3, ServeConfig {
+        weights_file: Some(weights.clone()),
+        ..cfg()
+    });
+    let got: Vec<u64> =
+        sents.iter().map(|t| fleet.score(t.clone()).unwrap().to_bits()).collect();
+    assert_eq!(got, want, "mmap'd weights must score bitwise like heap init");
+    let stats = fleet.stats().unwrap();
+    assert!(stats.weight_mapped_bytes > 0, "weights must be served from the map");
+    assert_eq!(stats.weight_heap_bytes, 0, "no per-process heap weight copies");
+    // merge counts the shared map once, not per shard: the fleet's
+    // resident weight bytes equal one shard's, not 3x
+    assert_eq!(stats.weight_resident_bytes(), stats.weight_mapped_bytes);
+    fleet.shutdown().unwrap();
+    let _ = std::fs::remove_file(&weights);
+}
+
+/// The TCP front-end end-to-end: a remote `NetClient` through
+/// `Fleet::serve_net` gets bitwise the same scores as the in-process
+/// path, stats round-trip the wire, and the client's Shutdown drains
+/// the fleet.
+#[test]
+fn fleet_serves_remote_clients_over_tcp() {
+    let sents = dyad_repro::data::sample_sentences(6, 3);
+    let server = ServerHandle::start(cfg());
+    let want: Vec<u64> =
+        sents.iter().map(|t| server.score(t.clone()).unwrap().to_bits()).collect();
+    server.shutdown().unwrap();
+
+    let fleet = start_fleet(2, cfg());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        let front = scope.spawn(|| fleet.serve_net(listener));
+        let mut client = NetClient::connect(&addr).expect("connect front-end");
+        client.ping().expect("front-end answers pings");
+        let got: Vec<u64> = sents
+            .iter()
+            .map(|t| client.score(t.clone()).unwrap().to_bits())
+            .collect();
+        assert_eq!(got, want, "remote scoring must be bitwise identical");
+        let gen = client.generate(vec![5, 6, 7], 4).expect("remote generate");
+        assert!(!gen.is_empty() && gen.len() <= 4);
+        let stats = client.stats().expect("remote stats");
+        assert_eq!(stats.requests(), 7, "6 scores + 1 generate over the wire");
+        assert_eq!(stats.workers, 2);
+        // a remote Shutdown drains the fleet and ends serve_net
+        client.shutdown().expect("remote shutdown");
+        front.join().unwrap().expect("front-end exits cleanly");
+    });
+    fleet.shutdown().unwrap();
+}
+
+/// One shard process run by hand (the hidden `serve --shard` CLI child
+/// mode): handshake line, wire round-trips, clean exit on Shutdown —
+/// the building block `Fleet::start` composes.
+#[test]
+fn shard_child_mode_serves_the_wire_protocol() {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "serve", "--shard", "--listen", "127.0.0.1:0", "--arch", "opt-mini",
+            "--variant", "dyad_it", "--max-batch", "4", "--window-ms", "3",
+            "--seed", "7",
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn shard child");
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("handshake line");
+    let addr = line
+        .trim()
+        .strip_prefix("SHARD_READY ")
+        .unwrap_or_else(|| panic!("bad handshake {line:?}"))
+        .to_string();
+    let mut client = NetClient::connect(&addr).expect("connect shard");
+    client.ping().expect("shard answers pings");
+    let score = client.score(vec![5, 6, 7]).expect("shard scores");
+    assert!(score.is_finite() && score < 0.0);
+    client.shutdown().expect("shard accepts shutdown");
+    let status = child.wait().expect("reap shard child");
+    assert!(status.success(), "shard must drain and exit cleanly: {status}");
+}
+
+/// SIGKILL one of two shard processes mid-service: clients never hang
+/// (in-flight requests on the corpse resolve as errors naming it, new
+/// requests route to the survivor), and shutdown reports the corpse —
+/// by name — instead of pretending the fleet is healthy.
+#[test]
+fn fleet_routes_around_killed_shard_and_names_the_corpse() {
+    let fleet = start_fleet(2, cfg());
+    let sents = dyad_repro::data::sample_sentences(6, 4);
+    for toks in &sents {
+        fleet.score(toks.clone()).unwrap();
+    }
+    fleet.kill_shard(0).expect("kill shard 0");
+    assert!(
+        wait_for(Duration::from_secs(20), || fleet.dead_shards().contains(&0)),
+        "killed shard process must be detected as dead"
+    );
+    // the survivor keeps serving; replies are bounded, never hangs
+    for toks in &sents {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        fleet
+            .sender()
+            .send(Request::Score { tokens: toks.clone(), resp: rtx.into() })
+            .unwrap();
+        let score = rrx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("reply after shard death — a killed shard must not hang clients")
+            .expect("survivor serves");
+        assert!(score.is_finite());
+    }
+    assert_eq!(fleet.dead_shards(), vec![0]);
+    let err = fleet.shutdown().expect_err("shutdown must report the killed shard");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 0"), "corpse must be named: {msg}");
+}
+
+/// Soak (CI fleet-soak job runs this under `timeout`): 3 shard
+/// processes, concurrent clients over TCP-backed dispatch, one shard
+/// SIGKILL'd mid-run. Every request resolves (Ok from a survivor or an
+/// error naming the corpse — never a hang), the fleet keeps serving
+/// afterwards, and shutdown names the corpse.
+#[test]
+#[ignore = "soak: run explicitly (cargo test -- --ignored fleet_soak)"]
+fn fleet_soak_survives_mid_run_shard_kill() {
+    let fleet = start_fleet(3, ServeConfig { max_batch: 8, window_ms: 2, ..cfg() });
+    let sents = dyad_repro::data::sample_sentences(96, 5);
+    let resolved = std::sync::atomic::AtomicUsize::new(0);
+    let errored = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for chunk in sents.chunks(16) {
+            let tx = fleet.sender();
+            let (resolved, errored) = (&resolved, &errored);
+            scope.spawn(move || {
+                for toks in chunk {
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx.into() })
+                        .unwrap();
+                    match rrx
+                        .recv_timeout(Duration::from_secs(60))
+                        .expect("soak reply — a killed shard must never hang a client")
+                    {
+                        Ok(score) => assert!(score.is_finite()),
+                        // in flight on the corpse: an explicit error
+                        // naming the shard, not a hang
+                        Err(e) => {
+                            assert!(e.contains("shard"), "unexpected error: {e}");
+                            errored.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                    resolved.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+        // let the fleet get properly mid-flight, then kill a shard
+        let fleet = &fleet;
+        scope.spawn(move || {
+            while resolved.load(std::sync::atomic::Ordering::Relaxed) < 24 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            fleet.kill_shard(0).expect("kill shard 0 mid-run");
+        });
+    });
+    assert_eq!(
+        resolved.load(std::sync::atomic::Ordering::Relaxed),
+        96,
+        "every request must resolve"
+    );
+    assert!(
+        wait_for(Duration::from_secs(20), || fleet.dead_shards().contains(&0)),
+        "killed shard must be detected"
+    );
+    // the survivors keep serving a full round after the kill
+    for toks in dyad_repro::data::sample_sentences(12, 6) {
+        let score = fleet.score(toks).expect("survivors serve after the kill");
+        assert!(score.is_finite());
+    }
+    let err = fleet.shutdown().expect_err("shutdown must name the corpse");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 0"), "corpse must be named: {msg}");
+    println!(
+        "soak ok: 96 resolved, {} errored on the corpse, survivors drained",
+        errored.load(std::sync::atomic::Ordering::Relaxed)
+    );
+}

@@ -39,7 +39,7 @@ fn server_scores_batches_and_reports_stats() {
             scope.spawn(move || {
                 for toks in chunk {
                     let (rtx, rrx) = std::sync::mpsc::channel();
-                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx.into() })
                         .unwrap();
                     let score = rrx.recv().unwrap().unwrap();
                     assert!(score.is_finite());
@@ -73,7 +73,7 @@ fn server_scoring_is_deterministic_across_batch_shapes() {
                 let (rtx, rrx) = std::sync::mpsc::channel();
                 let mut r2 = Rng::new(9);
                 let other = tok.encode_sentence(&grammar.sentence(&mut r2));
-                tx.send(Request::Score { tokens: other, resp: rtx }).unwrap();
+                tx.send(Request::Score { tokens: other, resp: rtx.into() }).unwrap();
                 let _ = rrx.recv();
             }
         });
@@ -234,7 +234,7 @@ fn router_fleet_stats_conserve_worker_counts() {
             scope.spawn(move || {
                 for toks in chunk {
                     let (rtx, rrx) = std::sync::mpsc::channel();
-                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx.into() })
                         .unwrap();
                     rrx.recv().unwrap().unwrap();
                 }
@@ -290,7 +290,7 @@ fn router_shutdown_drains_inflight_requests() {
     let mut replies = Vec::new();
     for toks in sample_sentences(8, 4) {
         let (rtx, rrx) = std::sync::mpsc::channel();
-        tx.send(Request::Score { tokens: toks, resp: rtx }).unwrap();
+        tx.send(Request::Score { tokens: toks, resp: rtx.into() }).unwrap();
         replies.push(rrx);
     }
     router.shutdown().unwrap();
@@ -336,7 +336,7 @@ fn soak_sharded_serve_conserves_all_replies() {
             scope.spawn(move || {
                 for toks in chunk {
                     let (rtx, rrx) = std::sync::mpsc::channel();
-                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx })
+                    tx.send(Request::Score { tokens: toks.clone(), resp: rtx.into() })
                         .unwrap();
                     let score = rrx
                         .recv_timeout(Duration::from_secs(60))
@@ -370,6 +370,13 @@ fn server_generate_incremental_matches_legacy_oracle() {
         (vec![5, 6, 7], 6),
         (vec![42], 4),
         (vec![3; 10], 5),
+        // boundary lengths around the admission window (opt-mini
+        // s=128): s-1 is the longest prompt kept whole, s is the
+        // degenerate case where keeping all s tokens would slide the
+        // window on the very first decode step (admission now keeps
+        // the last s-1 — these pin its parity with the legacy path)
+        ((0..127).collect(), 3),
+        ((0..128).collect(), 3),
         // longer than the model's context window (opt-mini seq=128)
         ((0..130).map(|i| (i % 500) as i32).collect(), 2),
     ];
@@ -469,7 +476,7 @@ fn server_concurrent_generates_match_solo_runs() {
                 let (p, n) = (p.clone(), *n);
                 scope.spawn(move || {
                     let (rtx, rrx) = std::sync::mpsc::channel();
-                    tx.send(Request::Generate { prompt: p, max_new: n, resp: rtx })
+                    tx.send(Request::Generate { prompt: p, max_new: n, resp: rtx.into() })
                         .unwrap();
                     rrx.recv_timeout(Duration::from_secs(60))
                         .expect("generate reply")
@@ -495,7 +502,7 @@ fn server_shutdown_drains_pending_generates() {
         let (rtx, rrx) = std::sync::mpsc::channel();
         server
             .sender()
-            .send(Request::Generate { prompt: vec![5 + i, 6], max_new: 3, resp: rtx })
+            .send(Request::Generate { prompt: vec![5 + i, 6], max_new: 3, resp: rtx.into() })
             .unwrap();
         replies.push(rrx);
     }

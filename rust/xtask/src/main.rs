@@ -25,6 +25,12 @@
 //! 5. **workspace-lints** — the root `Cargo.toml` must deny
 //!    `unsafe_op_in_unsafe_fn` via `[workspace.lints]` and every
 //!    member crate must opt in with `[lints] workspace = true`.
+//! 6. **process-spawn** — `std::process::Command` (child-process
+//!    creation) is forbidden in production code without an explicit
+//!    `xtask:allow(process_spawn)` waiver comment: the only sanctioned
+//!    spawner is the serve fleet (`serve/fleet.rs`), which forks shard
+//!    processes of this same binary. `#[cfg(test)]` modules are
+//!    exempt; `std::process::{exit, id}` are not spawns.
 //!
 //! Adding a lint: write a check that pushes `Finding`s (file, line,
 //! lint id, message), call it from `lint()`, and add a fixture test
@@ -220,6 +226,19 @@ fn is_spawn_path(path: &syn::Path) -> bool {
     has("thread", "spawn") || has("thread", "scope") || has("thread", "Builder")
 }
 
+/// Do the path's segments name child-process creation? Catches both
+/// `std::process::Command` (qualified use) and `Command::new` (after a
+/// `use`). `use` statements themselves are `UseTree`s, not `Path`s, so
+/// importing the type is free — constructing it is what's linted.
+fn is_process_spawn_path(path: &syn::Path) -> bool {
+    let segs: Vec<String> = path.segments.iter().map(|s| s.ident.to_string()).collect();
+    let has = |a: &str, b: &str| {
+        segs.windows(2)
+            .any(|w| w[0] == a && w[1] == b)
+    };
+    has("process", "Command") || has("Command", "new")
+}
+
 impl<'ast> Visit<'ast> for LintVisitor<'_> {
     fn visit_stmt(&mut self, node: &'ast syn::Stmt) {
         self.stmt_stack.push(node.span().start().line);
@@ -319,6 +338,19 @@ impl<'ast> Visit<'ast> for LintVisitor<'_> {
                     "thread-spawn",
                     "direct thread creation outside runtime::pool — use the pool, or \
                      waive with `// xtask:allow(thread_spawn): <why>`"
+                        .into(),
+                );
+            }
+        }
+        if self.cfg_test_depth == 0 && is_process_spawn_path(node) {
+            let line = node.span().start().line;
+            let anchor = self.anchor(line);
+            if !self.has_marker_above(anchor, "xtask:allow(process_spawn)") {
+                self.push(
+                    line,
+                    "process-spawn",
+                    "child-process creation — shard spawning belongs to serve::fleet; \
+                     waive deliberate uses with `// xtask:allow(process_spawn): <why>`"
                         .into(),
                 );
             }
@@ -556,6 +588,55 @@ mod tests {
 }
 "#;
         assert!(lint_ids(src).is_empty());
+    }
+
+    #[test]
+    fn process_spawn_is_flagged_and_waivable() {
+        let bad = r#"
+fn f() {
+    let c = std::process::Command::new("ls").spawn();
+    drop(c);
+}
+"#;
+        assert_eq!(lint_ids(bad), vec!["process-spawn"]);
+        let bad_after_use = r#"
+use std::process::Command;
+fn f() {
+    let c = Command::new("ls").spawn();
+    drop(c);
+}
+"#;
+        assert_eq!(lint_ids(bad_after_use), vec!["process-spawn"]);
+        let waived = r#"
+fn f() {
+    // xtask:allow(process_spawn): fleet shard child
+    let c = std::process::Command::new("ls").spawn();
+    drop(c);
+}
+"#;
+        assert!(lint_ids(waived).is_empty(), "{:?}", run_lints(waived));
+    }
+
+    #[test]
+    fn process_exit_and_cfg_test_command_are_not_flagged() {
+        // exit/id are process *control*, not child-process creation,
+        // and test modules may spawn freely
+        let src = r#"
+fn f() {
+    println!("{}", std::process::id());
+    std::process::exit(1);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let c = std::process::Command::new("ls").spawn();
+        drop(c);
+    }
+}
+"#;
+        assert!(lint_ids(src).is_empty(), "{:?}", run_lints(src));
     }
 
     #[test]
